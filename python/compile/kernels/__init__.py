@@ -1,0 +1,10 @@
+"""L1: pallas kernels for the paper's compute hot-spots.
+
+  adahessian — fused AdaHessian moment + parameter update
+  sgd        — plain SGD and fused momentum updates
+  elastic    — elastic pair update (paper eqs. 12-13)
+  spatial    — blockwise spatial averaging of the Hessian diagonal
+  ref        — pure-jnp oracles for all of the above
+"""
+
+from . import adahessian, elastic, ref, sgd, spatial  # noqa: F401

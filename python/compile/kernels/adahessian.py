@@ -1,0 +1,67 @@
+"""L1 pallas kernel: fused AdaHessian parameter update.
+
+One streaming pass over the flat parameter vector computes the two moment
+updates, the bias corrections, and the preconditioned step — six input
+streams, three output streams, no materialized intermediates.  The unfused
+jnp formulation (ref.adahessian_ref) materializes ~5 temporaries of size P;
+on TPU this fusion is the difference between 36 B/elt (roofline for this op)
+and ~80 B/elt of HBM traffic.
+
+Scalars (t, lr) arrive as (1,)-shaped operands replicated to every grid step
+via a constant index_map; betas/eps are compile-time constants (they never
+change within a training run and folding them lets the compiler strengthen
+the rsqrt pipeline).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, pad, unpad
+
+
+def _kernel(beta1, beta2, eps, theta_ref, g_ref, d_ref, m_ref, v_ref,
+            t_ref, lr_ref, theta_o, m_o, v_o):
+    t = t_ref[0]
+    lr = lr_ref[0]
+    g = g_ref[...]
+    d = d_ref[...]
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * d * d
+    # bias corrections: beta**t with t a runtime scalar -> exp(t*log(beta))
+    bc1 = 1.0 - jnp.exp(t * jnp.log(beta1))
+    bc2 = 1.0 - jnp.exp(t * jnp.log(beta2))
+    mh = m / bc1
+    vh = v / bc2
+    theta_o[...] = theta_ref[...] - lr * mh / (jnp.sqrt(vh) + eps)
+    m_o[...] = m
+    v_o[...] = v
+
+
+def adahessian_update(theta, g, d, m, v, t, lr,
+                      beta1=0.9, beta2=0.999, eps=1e-8):
+    """Fused update. theta/g/d/m/v: f32[P]; t, lr: f32 scalars (traced).
+
+    Returns (theta', m', v').
+    """
+    n = theta.shape[0]
+    theta_p, g_p, d_p, m_p, v_p = (pad(a) for a in (theta, g, d, m, v))
+    p = theta_p.shape[0]
+    grid = (p // TILE,)
+    tile_spec = pl.BlockSpec((TILE,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    out = pl.pallas_call(
+        functools.partial(_kernel, beta1, beta2, eps),
+        grid=grid,
+        in_specs=[tile_spec] * 5 + [scalar_spec, scalar_spec],
+        out_specs=[tile_spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((p,), jnp.float32)] * 3,
+        interpret=True,
+    )(theta_p, g_p, d_p, m_p, v_p,
+      jnp.reshape(t, (1,)).astype(jnp.float32),
+      jnp.reshape(lr, (1,)).astype(jnp.float32))
+    return tuple(unpad(o, n) for o in out)

@@ -1,0 +1,42 @@
+"""Shared tiling helpers for the 1-D elementwise Pallas kernels.
+
+All the optimizer/elastic kernels stream the flat parameter vector in
+contiguous tiles.  TILE is a multiple of the TPU VPU lane granularity
+(8x128 = 1024 f32); on TPU the grid walks HBM->VMEM tile by tile with
+double buffering, which is the roofline schedule for these purely
+bandwidth-bound updates (see DESIGN.md §Hardware-Adaptation).
+
+interpret=True is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO
+that any backend runs.  The *structure* (tiling, fusion, single pass)
+is what carries to real TPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+TILE = 1024
+
+# The flat parameter vector is padded to a TILE multiple before entering a
+# kernel and sliced back afterwards; padding lanes are mathematically inert
+# for every kernel in this package (they see zeros and produce garbage that
+# is sliced away).
+
+
+def padded_len(n: int) -> int:
+    return ((n + TILE - 1) // TILE) * TILE
+
+
+def pad(v: jnp.ndarray) -> jnp.ndarray:
+    n = v.shape[0]
+    p = padded_len(n)
+    if p == n:
+        return v
+    return jnp.pad(v, (0, p - n))
+
+
+def unpad(v: jnp.ndarray, n: int) -> jnp.ndarray:
+    if v.shape[0] == n:
+        return v
+    return v[:n]

@@ -1,0 +1,48 @@
+"""L1 pallas kernel: elastic pair update (paper eqs. 12-13).
+
+    theta_w' = theta_w - h1 * (theta_w - theta_m)
+    theta_m' = theta_m + h2 * (theta_w - theta_m)
+
+Both updates read the OLD difference — the whole point of the paper's
+asymmetric dynamic weights is that h1 (pull exerted on the worker) and
+h2 (influence granted to the worker) can differ, so the two outputs must
+be computed from one shared diff in a single pass.  The kernel streams
+both parameter vectors once and writes both results; fused, this is the
+master's entire per-sync compute.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, pad, unpad
+
+
+def _kernel(tw_ref, tm_ref, h1_ref, h2_ref, tw_o, tm_o):
+    tw = tw_ref[...]
+    tm = tm_ref[...]
+    diff = tw - tm
+    tw_o[...] = tw - h1_ref[0] * diff
+    tm_o[...] = tm + h2_ref[0] * diff
+
+
+def elastic_update(tw, tm, h1, h2):
+    """tw/tm: f32[P]; h1/h2: f32 scalars (traced). Returns (tw', tm')."""
+    n = tw.shape[0]
+    tw_p, tm_p = pad(tw), pad(tm)
+    p = tw_p.shape[0]
+    tile_spec = pl.BlockSpec((TILE,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(p // TILE,),
+        in_specs=[tile_spec, tile_spec, scalar_spec, scalar_spec],
+        out_specs=[tile_spec, tile_spec],
+        out_shape=[jax.ShapeDtypeStruct((p,), jnp.float32)] * 2,
+        interpret=True,
+    )(tw_p, tm_p,
+      jnp.reshape(h1, (1,)).astype(jnp.float32),
+      jnp.reshape(h2, (1,)).astype(jnp.float32))
+    return unpad(out[0], n), unpad(out[1], n)

@@ -1,0 +1,62 @@
+"""L1 pallas kernels: plain-SGD and Polyak-momentum updates.
+
+Used by the EASGD / EAMSGD baselines.  Same streaming-tile structure as the
+AdaHessian kernel; momentum fuses the buffer update and the parameter step
+into one pass (PyTorch convention: buf' = mu*buf + g, theta' = theta - lr*buf').
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, pad, unpad
+
+
+def _sgd_kernel(theta_ref, g_ref, lr_ref, theta_o):
+    theta_o[...] = theta_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def sgd_update(theta, g, lr):
+    """theta' = theta - lr*g.  lr: traced f32 scalar."""
+    n = theta.shape[0]
+    theta_p, g_p = pad(theta), pad(g)
+    p = theta_p.shape[0]
+    tile_spec = pl.BlockSpec((TILE,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(p // TILE,),
+        in_specs=[tile_spec, tile_spec, scalar_spec],
+        out_specs=tile_spec,
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=True,
+    )(theta_p, g_p, jnp.reshape(lr, (1,)).astype(jnp.float32))
+    return unpad(out, n)
+
+
+def _momentum_kernel(mu, theta_ref, g_ref, buf_ref, lr_ref, theta_o, buf_o):
+    buf = mu * buf_ref[...] + g_ref[...]
+    theta_o[...] = theta_ref[...] - lr_ref[0] * buf
+    buf_o[...] = buf
+
+
+def momentum_update(theta, g, buf, lr, momentum=0.5):
+    """Fused momentum step; returns (theta', buf').  momentum is baked."""
+    n = theta.shape[0]
+    theta_p, g_p, buf_p = pad(theta), pad(g), pad(buf)
+    p = theta_p.shape[0]
+    tile_spec = pl.BlockSpec((TILE,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    out = pl.pallas_call(
+        functools.partial(_momentum_kernel, momentum),
+        grid=(p // TILE,),
+        in_specs=[tile_spec, tile_spec, tile_spec, scalar_spec],
+        out_specs=[tile_spec, tile_spec],
+        out_shape=[jax.ShapeDtypeStruct((p,), jnp.float32)] * 2,
+        interpret=True,
+    )(theta_p, g_p, buf_p, jnp.reshape(lr, (1,)).astype(jnp.float32))
+    return unpad(out[0], n), unpad(out[1], n)

@@ -1,0 +1,110 @@
+"""L2: the paper's CNN forward/backward + Hutchinson Hessian diagonal, in jax.
+
+All entry points operate on the FLAT parameter vector (see params.py) so the
+rust coordinator only ever moves ``f32[P]`` buffers.  These functions are
+jitted+lowered ONCE by aot.py; python never runs at training time.
+
+Artifacts built from this module:
+
+  grad(theta, x, y1h)            -> (loss, grad)
+  grad_hess(theta, x, y1h, z)    -> (loss, grad, hdiag_spatially_averaged)
+  evaluate(theta, x, y1h)        -> (correct_count, summed_loss)
+
+``z`` is a Rademacher (+-1) vector supplied by the caller (the rust side owns
+all randomness), so the artifact graphs are deterministic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .kernels import spatial
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """3x3 SAME conv, NCHW / OIHW."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def forward(model: str, theta: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits for a batch.  x: f32[B,1,28,28] (cnn) or f32[B,784] (mlp)."""
+    p = P.unflatten(model, theta)
+    if model.startswith("cnn"):
+        h = jax.nn.relu(_conv(x, p["conv1/w"], p["conv1/b"]))
+        h = _maxpool2(h)
+        h = jax.nn.relu(_conv(h, p["conv2/w"], p["conv2/b"]))
+        h = _maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        return h @ p["fc/w"].T + p["fc/b"]
+    # mlp family
+    h = x.reshape(x.shape[0], -1)
+    n_layers = sum(1 for name, _ in P.MODEL_SPECS[model] if name.endswith("/w"))
+    for i in range(n_layers):
+        h = h @ p[f"fc{i}/w"].T + p[f"fc{i}/b"]
+        if i + 1 < n_layers:
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(model: str, theta: jnp.ndarray, x: jnp.ndarray, y1h: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy.  y1h: f32[B,10] one-hot labels."""
+    logits = forward(model, theta, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y1h * logp, axis=-1))
+
+
+def grad(model: str, theta, x, y1h):
+    """(loss, grad) — used by the SGD-family methods (EASGD / EAMSGD)."""
+    loss, g = jax.value_and_grad(lambda t: loss_fn(model, t, x, y1h))(theta)
+    return loss, g
+
+
+def grad_hess(model: str, theta, x, y1h, z):
+    """(loss, grad, spatially-averaged Hessian diagonal estimate).
+
+    Hutchinson with a single probe (the paper uses 1 sample):
+        diag(H) ~= z * (H z),
+    where Hz is computed as a jvp through the gradient, which shares the
+    forward linearization with the gradient itself (one extra
+    backprop-equivalent, exactly the cost the AdaHessian paper cites).
+    The raw estimate is then spatially averaged over conv-filter blocks by
+    the L1 pallas kernel (kernels/spatial.py).
+    """
+    f = lambda t: loss_fn(model, t, x, y1h)
+    # value_and_grad inside the jvp: one linearization yields loss, grad AND
+    # the Hessian-vector product, instead of a separate f(theta) forward for
+    # the loss. Measured effect is small (21.4ms -> 20.7ms per call; XLA CSEs
+    # most of the duplicate forward anyway) but the lowered HLO shrinks ~11%
+    # (36k -> 32k chars). See EXPERIMENTS.md §Perf.
+    vg = jax.value_and_grad(f)
+    (loss, g), (_, hz) = jax.jvp(vg, (theta,), (z,))
+    hdiag = z * hz
+    hdiag = spatial.spatial_average(hdiag, P.conv_weight_segments(model))
+    return loss, g, hdiag
+
+
+def evaluate(model: str, theta, x, y1h):
+    """(correct_count, summed_loss) over the batch — master-side scoring.
+
+    Sum (not mean) so the rust side can aggregate exactly over uneven
+    final batches.
+    """
+    logits = forward(model, theta, x)
+    pred = jnp.argmax(logits, axis=-1)
+    label = jnp.argmax(y1h, axis=-1)
+    correct = jnp.sum((pred == label).astype(jnp.float32))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    sloss = -jnp.sum(jnp.sum(y1h * logp, axis=-1))
+    return correct, sloss

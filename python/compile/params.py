@@ -1,0 +1,129 @@
+"""Parameter layout for the paper's 2-layer CNN (flat theta convention).
+
+Every entry point in the AOT artifacts takes the model parameters as ONE
+flat f32 vector ``theta[P]``.  This module owns the layout: the ordered
+list of (name, shape) segments, flatten/unflatten helpers, and the
+metadata the rust coordinator needs (offsets of the conv-weight segments
+for spatial averaging, total P, ...).
+
+The topology mirrors the paper's "simple 2-layer convolutional neural
+network from PyTorch": conv(1->8,3x3) + relu + maxpool2,
+conv(8->16,3x3) + relu + maxpool2, dense(16*7*7 -> 10).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Model family registry.  "cnn-paper" is the paper's network; the others are
+# larger variants used for scaling/perf experiments.
+# ---------------------------------------------------------------------------
+
+IMAGE_HW = 28
+NUM_CLASSES = 10
+
+
+def _cnn_spec(c1: int, c2: int) -> List[Tuple[str, Tuple[int, ...]]]:
+    """conv(1->c1,3x3) pool2 conv(c1->c2,3x3) pool2 dense."""
+    feat = c2 * (IMAGE_HW // 4) * (IMAGE_HW // 4)
+    return [
+        ("conv1/w", (c1, 1, 3, 3)),
+        ("conv1/b", (c1,)),
+        ("conv2/w", (c2, c1, 3, 3)),
+        ("conv2/b", (c2,)),
+        ("fc/w", (NUM_CLASSES, feat)),
+        ("fc/b", (NUM_CLASSES,)),
+    ]
+
+
+def _mlp_spec(hidden: Tuple[int, ...]) -> List[Tuple[str, Tuple[int, ...]]]:
+    dims = (IMAGE_HW * IMAGE_HW,) + hidden + (NUM_CLASSES,)
+    spec: List[Tuple[str, Tuple[int, ...]]] = []
+    for i in range(len(dims) - 1):
+        spec.append((f"fc{i}/w", (dims[i + 1], dims[i])))
+        spec.append((f"fc{i}/b", (dims[i + 1],)))
+    return spec
+
+
+MODEL_SPECS: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = {
+    # The paper's model.
+    "cnn-paper": _cnn_spec(8, 16),
+    # Wider variant for perf scaling.
+    "cnn-wide": _cnn_spec(32, 64),
+    # Pure-MLP variants (conv-free; exercises the "no spatial averaging"
+    # path of AdaHessian).
+    "mlp-small": _mlp_spec((128,)),
+    "mlp-large": _mlp_spec((512, 256)),
+}
+
+
+def segments(model: str) -> List[Tuple[str, Tuple[int, ...], int, int]]:
+    """Ordered (name, shape, offset, size) for each parameter tensor."""
+    out = []
+    off = 0
+    for name, shape in MODEL_SPECS[model]:
+        size = int(np.prod(shape))
+        out.append((name, shape, off, size))
+        off += size
+    return out
+
+
+def param_count(model: str) -> int:
+    return sum(s for _, _, _, s in segments(model))
+
+
+def conv_weight_segments(model: str) -> List[Tuple[int, int, int]]:
+    """(offset, n_filter_blocks, block) for every conv weight tensor.
+
+    AdaHessian spatially averages the Hessian diagonal over each filter's
+    spatial footprint (here 3x3 = 9 elements per (out,in) channel pair).
+    """
+    out = []
+    for name, shape, off, size in segments(model):
+        if name.endswith("/w") and len(shape) == 4:
+            block = shape[2] * shape[3]
+            out.append((off, size // block, block))
+    return out
+
+
+def unflatten(model: str, theta: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Split the flat theta vector into named parameter tensors."""
+    params = {}
+    for name, shape, off, size in segments(model):
+        params[name] = jax.lax.slice(theta, (off,), (off + size,)).reshape(shape)
+    return params
+
+
+def flatten(model: str, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    chunks = []
+    for name, shape, _, _ in segments(model):
+        chunks.append(params[name].reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+def init_params(model: str, seed: int = 0) -> np.ndarray:
+    """He/Glorot-style init, returned as the flat vector (numpy, f32).
+
+    The rust side re-implements exactly this scheme (uniform Kaiming with
+    fan_in, matching PyTorch's Conv2d/Linear default reset_parameters) with
+    its own PRNG; numerically identical init is NOT required — only the
+    distribution family matters — but the layout must match `segments`.
+    """
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape, _, size in segments(model):
+        if name.endswith("/w"):
+            fan_in = int(np.prod(shape[1:]))
+            bound = 1.0 / math.sqrt(fan_in)
+            chunks.append(rng.uniform(-bound, bound, size=size))
+        else:
+            # PyTorch initialises biases uniform(-1/sqrt(fan_in_of_weight), ...);
+            # a plain zero init is fine and simpler to mirror in rust.
+            chunks.append(np.zeros(size))
+    return np.concatenate(chunks).astype(np.float32)

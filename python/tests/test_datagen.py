@@ -1,0 +1,82 @@
+"""Synthetic-MNIST generator sanity: shapes, balance, determinism, difficulty."""
+
+import numpy as np
+import pytest
+
+from compile import datagen
+
+
+class TestTemplates:
+    def test_ten_distinct_templates(self):
+        t = datagen.template_arrays()
+        assert t.shape == (10, 7, 7)
+        flat = [tuple(row) for row in t.reshape(10, -1)]
+        assert len(set(flat)) == 10
+
+    def test_templates_have_ink(self):
+        t = datagen.template_arrays()
+        for c in range(10):
+            assert t[c].sum() >= 5
+
+
+class TestRender:
+    def test_range_and_shape(self):
+        rng = np.random.default_rng(0)
+        img = datagen.render(3, rng)
+        assert img.shape == (28, 28)
+        assert img.min() >= 0.0 and img.max() <= 1.0
+
+    def test_render_varies_per_call(self):
+        rng = np.random.default_rng(0)
+        a = datagen.render(5, rng)
+        b = datagen.render(5, rng)
+        assert not np.array_equal(a, b)
+
+
+class TestDataset:
+    def test_shapes_and_balance(self):
+        x, y = datagen.dataset(200, seed=1)
+        assert x.shape == (200, 1, 28, 28)
+        assert y.shape == (200,)
+        counts = np.bincount(y, minlength=10)
+        assert counts.min() == counts.max() == 20
+
+    def test_deterministic(self):
+        x1, y1 = datagen.dataset(64, seed=9)
+        x2, y2 = datagen.dataset(64, seed=9)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+
+    def test_seed_changes_data(self):
+        x1, _ = datagen.dataset(64, seed=1)
+        x2, _ = datagen.dataset(64, seed=2)
+        assert not np.array_equal(x1, x2)
+
+    def test_one_hot(self):
+        y = np.array([0, 3, 9])
+        oh = datagen.one_hot(y)
+        assert oh.shape == (3, 10)
+        np.testing.assert_array_equal(oh.argmax(1), y)
+        np.testing.assert_array_equal(oh.sum(1), np.ones(3))
+
+    def test_classes_statistically_separable(self):
+        """Nearest-template classification must beat chance by a wide margin
+        — the dataset is supposed to sit in MNIST's difficulty regime, not
+        be white noise."""
+        x, y = datagen.dataset(300, seed=3)
+        t = datagen.template_arrays()
+        up = np.repeat(np.repeat(t, 3, axis=1), 3, axis=2)  # (10,21,21)
+        correct = 0
+        for i in range(x.shape[0]):
+            img = x[i, 0]
+            best, best_s = -1, -1e9
+            for c in range(10):
+                # max correlation over the 8x8 placement grid
+                s = max(
+                    float((img[dy:dy + 21, dx:dx + 21] * up[c]).sum())
+                    for dy in range(0, 8, 2) for dx in range(0, 8, 2)
+                )
+                if s > best_s:
+                    best, best_s = c, s
+            correct += int(best == y[i])
+        assert correct / x.shape[0] > 0.5

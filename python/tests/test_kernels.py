@@ -1,0 +1,215 @@
+"""L1 kernel correctness: pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps sizes (unaligned vs TILE), magnitudes, and scalar
+parameters; every property asserts allclose against ref.py.  This is the
+core correctness signal for the AOT path — the same kernel graphs are what
+aot.py lowers into the artifacts the rust runtime executes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adahessian as ka
+from compile.kernels import common
+from compile.kernels import elastic as ke
+from compile.kernels import ref
+from compile.kernels import sgd as ks
+from compile.kernels import spatial
+
+# Keep hypothesis example counts small: every example traces + interprets a
+# pallas call, which is slow on the 1-core CPU runner.
+FAST = settings(max_examples=8, deadline=None)
+
+sizes = st.sampled_from([1, 7, 1024, 1025, 4096, 9098])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def vecs(rng, n, k, nonneg_idx=()):
+    out = []
+    for i in range(k):
+        v = rng.normal(size=n).astype(np.float32)
+        if i in nonneg_idx:
+            v = np.abs(v)
+        out.append(jnp.asarray(v))
+    return out
+
+
+class TestPadding:
+    def test_padded_len(self):
+        assert common.padded_len(1) == common.TILE
+        assert common.padded_len(common.TILE) == common.TILE
+        assert common.padded_len(common.TILE + 1) == 2 * common.TILE
+
+    def test_pad_unpad_roundtrip(self):
+        v = jnp.arange(10.0)
+        assert np.array_equal(common.unpad(common.pad(v), 10), v)
+
+    def test_pad_is_zero(self):
+        v = jnp.ones((3,))
+        p = common.pad(v)
+        assert p.shape[0] == common.TILE
+        assert float(p[3:].sum()) == 0.0
+
+
+class TestSgd:
+    @FAST
+    @given(n=sizes, seed=seeds, lr=st.floats(1e-4, 1.0))
+    def test_matches_ref(self, n, seed, lr):
+        rng = np.random.default_rng(seed)
+        theta, g = vecs(rng, n, 2)
+        out = ks.sgd_update(theta, g, jnp.float32(lr))
+        np.testing.assert_allclose(out, ref.sgd_ref(theta, g, lr),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_zero_grad_is_identity(self):
+        theta = jnp.arange(100.0)
+        out = ks.sgd_update(theta, jnp.zeros(100), jnp.float32(0.5))
+        np.testing.assert_allclose(out, theta)
+
+
+class TestMomentum:
+    @FAST
+    @given(n=sizes, seed=seeds, lr=st.floats(1e-4, 1.0))
+    def test_matches_ref(self, n, seed, lr):
+        rng = np.random.default_rng(seed)
+        theta, g, buf = vecs(rng, n, 3)
+        out = ks.momentum_update(theta, g, buf, jnp.float32(lr), momentum=0.5)
+        exp = ref.momentum_ref(theta, g, buf, lr, 0.5)
+        for a, b in zip(out, exp):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_buffer_accumulates(self):
+        theta = jnp.zeros(10)
+        g = jnp.ones(10)
+        buf = jnp.zeros(10)
+        _, buf = ks.momentum_update(theta, g, buf, jnp.float32(0.1), momentum=0.5)
+        _, buf = ks.momentum_update(theta, g, buf, jnp.float32(0.1), momentum=0.5)
+        np.testing.assert_allclose(buf, 1.5 * np.ones(10), rtol=1e-6)
+
+
+class TestAdaHessian:
+    @FAST
+    @given(n=sizes, seed=seeds, t=st.integers(1, 10_000),
+           lr=st.floats(1e-4, 0.5))
+    def test_matches_ref(self, n, seed, t, lr):
+        rng = np.random.default_rng(seed)
+        theta, g, d, m, v = vecs(rng, n, 5, nonneg_idx=(4,))
+        out = ka.adahessian_update(theta, g, d, m, v,
+                                   jnp.float32(t), jnp.float32(lr))
+        exp = ref.adahessian_ref(theta, g, d, m, v, float(t), lr)
+        for a, b in zip(out, exp):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-5)
+
+    def test_moments_updated_in_place_semantics(self):
+        n = 64
+        rng = np.random.default_rng(0)
+        theta, g, d = vecs(rng, n, 3)
+        m = jnp.zeros(n)
+        v = jnp.zeros(n)
+        _, m1, v1 = ka.adahessian_update(theta, g, d, m, v,
+                                         jnp.float32(1), jnp.float32(0.01))
+        np.testing.assert_allclose(m1, 0.1 * np.asarray(g), rtol=1e-5)
+        np.testing.assert_allclose(v1, 0.001 * np.asarray(d) ** 2,
+                                   rtol=1e-4, atol=1e-8)
+
+    def test_step_descends_quadratic(self):
+        # On f(x) = 0.5 x^T diag(h) x the update must reduce f.
+        n = 256
+        rng = np.random.default_rng(1)
+        h = np.abs(rng.normal(size=n)).astype(np.float32) + 0.1
+        x = rng.normal(size=n).astype(np.float32)
+        g = h * x
+        d = h  # exact diagonal
+        out, _, _ = ka.adahessian_update(
+            jnp.asarray(x), jnp.asarray(g), jnp.asarray(d),
+            jnp.zeros(n), jnp.zeros(n), jnp.float32(1), jnp.float32(0.1))
+        f0 = 0.5 * np.sum(h * x * x)
+        f1 = 0.5 * np.sum(h * np.asarray(out) ** 2)
+        assert f1 < f0
+
+
+class TestElastic:
+    @FAST
+    @given(n=sizes, seed=seeds,
+           h1=st.floats(0.0, 1.0), h2=st.floats(0.0, 1.0))
+    def test_matches_ref(self, n, seed, h1, h2):
+        rng = np.random.default_rng(seed)
+        tw, tm = vecs(rng, n, 2)
+        out = ke.elastic_update(tw, tm, jnp.float32(h1), jnp.float32(h2))
+        exp = ref.elastic_ref(tw, tm, h1, h2)
+        for a, b in zip(out, exp):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_uses_old_difference_for_both(self):
+        """eq (12)/(13) both read the OLD (tw - tm) — not sequential."""
+        tw = jnp.full((8,), 2.0)
+        tm = jnp.zeros((8,))
+        tw2, tm2 = ke.elastic_update(tw, tm, jnp.float32(0.5), jnp.float32(0.5))
+        np.testing.assert_allclose(tw2, np.ones(8))  # 2 - 0.5*2
+        np.testing.assert_allclose(tm2, np.ones(8))  # 0 + 0.5*2 (old diff!)
+
+    def test_h_zero_is_identity(self):
+        rng = np.random.default_rng(3)
+        tw, tm = vecs(rng, 100, 2)
+        tw2, tm2 = ke.elastic_update(tw, tm, jnp.float32(0), jnp.float32(0))
+        np.testing.assert_allclose(tw2, tw)
+        np.testing.assert_allclose(tm2, tm)
+
+    def test_h_one_swap_semantics(self):
+        """h1=1 teleports the worker onto the master."""
+        rng = np.random.default_rng(4)
+        tw, tm = vecs(rng, 100, 2)
+        tw2, _ = ke.elastic_update(tw, tm, jnp.float32(1.0), jnp.float32(0.0))
+        np.testing.assert_allclose(tw2, tm, rtol=1e-5, atol=1e-6)
+
+
+class TestSpatial:
+    @FAST
+    @given(seed=seeds,
+           n_blocks=st.sampled_from([1, 8, 127, 128, 129, 1152 // 9]),
+           block=st.sampled_from([4, 9, 25]))
+    def test_single_segment_matches_ref(self, seed, n_blocks, block):
+        rng = np.random.default_rng(seed)
+        n = n_blocks * block + 17  # trailing non-conv tail
+        h = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        segs = [(0, n_blocks, block)]
+        out = spatial.spatial_average(h, segs)
+        exp = ref.spatial_average_ref(h, segs)
+        np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-6)
+
+    def test_multi_segment_paper_layout(self):
+        from compile import params as P
+        n = P.param_count("cnn-paper")
+        rng = np.random.default_rng(7)
+        h = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        segs = P.conv_weight_segments("cnn-paper")
+        out = spatial.spatial_average(h, segs)
+        exp = ref.spatial_average_ref(h, segs)
+        np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-6)
+
+    def test_passthrough_outside_segments(self):
+        h = jnp.arange(100.0)
+        out = spatial.spatial_average(h, [(10, 2, 9)])
+        np.testing.assert_allclose(out[:10], h[:10])
+        np.testing.assert_allclose(out[28:], h[28:])
+
+    def test_block_mean_property(self):
+        rng = np.random.default_rng(9)
+        h = jnp.asarray(rng.normal(size=90).astype(np.float32))
+        out = np.asarray(spatial.spatial_average(h, [(0, 10, 9)]))
+        blocks = out.reshape(10, 9)
+        # each block is constant and equals the input block mean
+        assert np.allclose(blocks, blocks[:, :1])
+        assert np.allclose(blocks[:, 0],
+                           np.asarray(h).reshape(10, 9).mean(axis=1),
+                           rtol=1e-5)
+
+    def test_idempotent(self):
+        rng = np.random.default_rng(11)
+        h = jnp.asarray(rng.normal(size=90).astype(np.float32))
+        segs = [(0, 10, 9)]
+        once = spatial.spatial_average(h, segs)
+        twice = spatial.spatial_average(once, segs)
+        np.testing.assert_allclose(once, twice, rtol=1e-6)

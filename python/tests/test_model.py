@@ -1,0 +1,182 @@
+"""L2 model correctness: shapes, gradients, Hutchinson estimator, learnability."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import datagen, model as M, params as P
+from compile.kernels import ref
+
+
+MODELS = ["cnn-paper", "mlp-small"]
+
+
+def rand_batch(model, b, seed=0):
+    rng = np.random.default_rng(seed)
+    if model.startswith("cnn"):
+        x = rng.random((b, 1, 28, 28), dtype=np.float32)
+    else:
+        x = rng.random((b, 28 * 28), dtype=np.float32)
+    y = datagen.one_hot(rng.integers(0, 10, size=b))
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+class TestParams:
+    def test_paper_model_param_count(self):
+        # conv1 80 + conv2 1168 + fc 7850
+        assert P.param_count("cnn-paper") == 9098
+
+    def test_segments_are_contiguous(self):
+        for model in P.MODEL_SPECS:
+            off = 0
+            for _, shape, o, size in P.segments(model):
+                assert o == off
+                assert size == int(np.prod(shape))
+                off += size
+            assert off == P.param_count(model)
+
+    def test_flatten_unflatten_roundtrip(self):
+        for model in MODELS:
+            theta = jnp.asarray(P.init_params(model, 3))
+            back = P.flatten(model, P.unflatten(model, theta))
+            np.testing.assert_array_equal(theta, back)
+
+    def test_conv_segments_within_bounds(self):
+        for model in P.MODEL_SPECS:
+            n = P.param_count(model)
+            for off, nb, blk in P.conv_weight_segments(model):
+                assert 0 <= off and off + nb * blk <= n
+                assert blk == 9  # 3x3 kernels everywhere
+
+    def test_mlp_has_no_conv_segments(self):
+        assert P.conv_weight_segments("mlp-small") == []
+
+    def test_init_bounded(self):
+        theta = P.init_params("cnn-paper", 0)
+        assert np.isfinite(theta).all()
+        assert np.abs(theta).max() <= 1.0
+
+
+class TestForward:
+    @pytest.mark.parametrize("model", MODELS)
+    def test_logit_shape(self, model):
+        theta = jnp.asarray(P.init_params(model, 0))
+        x, _ = rand_batch(model, 5)
+        logits = M.forward(model, theta, x)
+        assert logits.shape == (5, 10)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_initial_loss_near_log10(self):
+        model = "cnn-paper"
+        theta = jnp.asarray(P.init_params(model, 0))
+        x, y = rand_batch(model, 32)
+        loss = M.loss_fn(model, theta, x, y)
+        assert abs(float(loss) - np.log(10.0)) < 0.5
+
+
+class TestGrad:
+    @pytest.mark.parametrize("model", MODELS)
+    def test_grad_shape_and_finite(self, model):
+        theta = jnp.asarray(P.init_params(model, 0))
+        x, y = rand_batch(model, 8)
+        loss, g = M.grad(model, theta, x, y)
+        assert g.shape == theta.shape
+        assert bool(jnp.isfinite(g).all())
+
+    def test_grad_matches_finite_difference(self):
+        model = "mlp-small"
+        theta = jnp.asarray(P.init_params(model, 1))
+        x, y = rand_batch(model, 4)
+        _, g = M.grad(model, theta, x, y)
+        rng = np.random.default_rng(0)
+        idxs = rng.choice(theta.shape[0], size=5, replace=False)
+        eps = 1e-3
+        for i in idxs:
+            e = np.zeros(theta.shape[0], dtype=np.float32)
+            e[i] = eps
+            lp = M.loss_fn(model, theta + jnp.asarray(e), x, y)
+            lm = M.loss_fn(model, theta - jnp.asarray(e), x, y)
+            fd = (float(lp) - float(lm)) / (2 * eps)
+            assert abs(fd - float(g[i])) < 5e-2 * max(1.0, abs(fd))
+
+
+class TestGradHess:
+    def test_outputs_consistent_with_grad(self):
+        model = "cnn-paper"
+        theta = jnp.asarray(P.init_params(model, 0))
+        x, y = rand_batch(model, 8)
+        n = theta.shape[0]
+        z = jnp.asarray(np.where(np.random.default_rng(0).random(n) < 0.5, -1, 1)
+                        .astype(np.float32))
+        l1, g1 = M.grad(model, theta, x, y)
+        l2, g2, h = M.grad_hess(model, theta, x, y, z)
+        assert abs(float(l1) - float(l2)) < 1e-5
+        np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-6)
+        assert h.shape == theta.shape
+        assert bool(jnp.isfinite(h).all())
+
+    def test_hutchinson_unbiased_on_quadratic(self):
+        """On f = 0.5 x^T D x the single-probe estimate z*(Hz) = diag exactly
+        (Rademacher z, diagonal H => z_i * d_i * z_i = d_i)."""
+        n = 50
+        d = np.abs(np.random.default_rng(1).normal(size=n)).astype(np.float32)
+        f = lambda t: 0.5 * jnp.sum(jnp.asarray(d) * t * t)
+        z = jnp.asarray(np.where(np.random.default_rng(2).random(n) < 0.5, -1, 1)
+                        .astype(np.float32))
+        gf = jax.grad(f)
+        _, hz = jax.jvp(gf, (jnp.zeros(n),), (z,))
+        np.testing.assert_allclose(z * hz, d, rtol=1e-5)
+
+    def test_spatial_averaging_applied_to_conv_blocks(self):
+        model = "cnn-paper"
+        theta = jnp.asarray(P.init_params(model, 0))
+        x, y = rand_batch(model, 8)
+        n = theta.shape[0]
+        z = jnp.asarray(np.where(np.random.default_rng(3).random(n) < 0.5, -1, 1)
+                        .astype(np.float32))
+        _, _, h = M.grad_hess(model, theta, x, y, z)
+        h = np.asarray(h)
+        for off, nb, blk in P.conv_weight_segments(model):
+            blocks = h[off : off + nb * blk].reshape(nb, blk)
+            assert np.allclose(blocks, blocks[:, :1], rtol=1e-4, atol=1e-6)
+
+
+class TestEvaluate:
+    def test_counts_bounded(self):
+        model = "cnn-paper"
+        theta = jnp.asarray(P.init_params(model, 0))
+        x, y = rand_batch(model, 64)
+        correct, sloss = M.evaluate(model, theta, x, y)
+        assert 0.0 <= float(correct) <= 64.0
+        assert float(sloss) > 0.0
+
+    def test_perfect_model_scores_all(self):
+        """A forward that already matches labels counts every sample."""
+        model = "mlp-small"
+        theta = jnp.asarray(P.init_params(model, 0))
+        x, _ = rand_batch(model, 16)
+        logits = M.forward(model, theta, x)
+        y = jax.nn.one_hot(jnp.argmax(logits, -1), 10)
+        correct, _ = M.evaluate(model, theta, x, y)
+        assert float(correct) == 16.0
+
+
+class TestLearnability:
+    def test_sgd_learns_synthetic_dataset(self):
+        """End-to-end sanity at build time: the paper's CNN + plain SGD must
+        make real progress on the synthetic-MNIST substitute within a few
+        hundred steps, otherwise the whole experiment grid is meaningless."""
+        model = "cnn-paper"
+        x, y = datagen.dataset(512, seed=42)
+        y1h = datagen.one_hot(y)
+        theta = jnp.asarray(P.init_params(model, 0))
+        step = jax.jit(lambda t, xb, yb: M.grad(model, t, xb, yb))
+        rng = np.random.default_rng(0)
+        losses = []
+        for it in range(120):
+            idx = rng.choice(512, size=32, replace=False)
+            loss, g = step(theta, jnp.asarray(x[idx]), jnp.asarray(y1h[idx]))
+            theta = ref.sgd_ref(theta, g, 0.1)
+            losses.append(float(loss))
+        assert np.mean(losses[-10:]) < 0.7 * np.mean(losses[:10])

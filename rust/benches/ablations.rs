@@ -1,0 +1,95 @@
+//! Bench: the DESIGN.md §6 ablations, on the closed-form quadratic engine
+//! (mechanics-level: converges? corrections fired? — hundreds of simulated
+//! rounds per second, no PJRT; the real-engine ordering lives in
+//! fig4_fig5_grid and tests/xla_end_to_end.rs).
+//!
+//!   cargo bench --bench ablations
+//!
+//! Sweeps: detector sign, failure semantics, gossip mode, knee constant,
+//! raw-score history depth p.
+
+mod common;
+
+use deahes::config::{EngineKind, ExperimentConfig, GossipMode};
+use deahes::coordinator::failure::{FailStyle, FailureModel};
+use deahes::coordinator::sim;
+use deahes::elastic::weight::Detector;
+use deahes::strategies::Method;
+
+fn base() -> ExperimentConfig {
+    ExperimentConfig {
+        method: Method::DeahesO,
+        workers: 4,
+        tau: 2,
+        rounds: 120,
+        lr: 0.05,
+        eval_every: 4,
+        failure: FailureModel::Burst { p_start: 0.15, mean_len: 6.0 },
+        engine: EngineKind::Quadratic { dim: 64, heterogeneity: 0.5, noise: 0.02 },
+        ..ExperimentConfig::default()
+    }
+}
+
+fn report(label: &str, cfg: &ExperimentConfig) -> anyhow::Result<()> {
+    let r = sim::run(cfg)?;
+    let last = r.log.records.last().unwrap();
+    let corrections: u64 = r.worker_stats.iter().map(|s| s.1).sum();
+    let served: u64 = r.worker_stats.iter().map(|s| s.0).sum();
+    println!(
+        "{label:<44} loss {:>9.4}  corrections {:>4}/{:<4} syncs  h2̄ {:>5.3}",
+        last.test_loss,
+        corrections,
+        served,
+        last.mean_h2,
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    deahes::util::logging::init(deahes::util::logging::Level::Warn);
+
+    println!("== ablation: raw-score sign convention (DESIGN.md §6.3) ==");
+    for det in [Detector::PaperSign, Detector::DriftSign] {
+        let mut cfg = base();
+        cfg.detector = det;
+        report(&format!("detector = {}", det.name()), &cfg)?;
+    }
+
+    println!("\n== ablation: failure semantics (DESIGN.md §6.4) ==");
+    for style in [FailStyle::Node, FailStyle::Comm] {
+        let mut cfg = base();
+        cfg.fail_style = style;
+        report(&format!("fail-style = {}", style.name()), &cfg)?;
+    }
+
+    println!("\n== ablation: gossip master-estimate source (§6.5) ==");
+    for mode in [GossipMode::Peers, GossipMode::Stale] {
+        let mut cfg = base();
+        cfg.gossip = mode;
+        report(&format!("gossip = {mode:?}"), &cfg)?;
+    }
+
+    println!("\n== ablation: knee constant k (§6.3) ==");
+    for knee in [-0.01, -0.05, -0.2, -0.5] {
+        let mut cfg = base();
+        cfg.knee = knee;
+        report(&format!("knee = {knee}"), &cfg)?;
+    }
+
+    println!("\n== ablation: raw-score history depth p (§6.6) ==");
+    for p in [1usize, 2, 4, 8] {
+        let mut cfg = base();
+        cfg.score_p = p;
+        report(&format!("score history p = {p}"), &cfg)?;
+    }
+
+    println!("\n== ablation: communication period tau (robustness, paper §VII) ==");
+    for tau in [1usize, 2, 4, 8] {
+        let mut cfg = base();
+        cfg.tau = tau;
+        report(&format!("tau = {tau}"), &cfg)?;
+    }
+
+    println!("\n(quad engine: mechanics only — see fig4_fig5_grid for real-engine ordering)");
+    Ok(())
+}

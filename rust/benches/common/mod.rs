@@ -1,0 +1,54 @@
+//! Shared harness for the bench drivers (criterion is unavailable offline).
+//!
+//! `cargo bench` runs each `[[bench]]` binary with `--bench`; these drivers
+//! parse a small flag set from BENCH_* environment variables so the Makefile
+//! can select fast vs full reproductions:
+//!
+//!   BENCH_SEEDS   runs to average (default 3, paper's count; 1 = smoke)
+//!   BENCH_ROUNDS  communication rounds per run (default 60)
+//!   BENCH_ENGINE  xla (default) | quad  — quad benches the coordinator
+//!                 algorithm itself with closed-form compute
+//!   BENCH_LR      learning rate (default 0.05; paper's 0.01 needs many
+//!                 more rounds on the synthetic corpus)
+
+#![allow(dead_code)] // each bench binary uses a subset of this harness
+
+use deahes::config::{EngineKind, ExperimentConfig};
+use deahes::util::logging::{self, Level};
+use std::time::Instant;
+
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn base_config() -> ExperimentConfig {
+    logging::init(Level::Warn);
+    let engine = match std::env::var("BENCH_ENGINE").as_deref() {
+        Ok("quad") => EngineKind::Quadratic { dim: 256, heterogeneity: 0.2, noise: 0.05 },
+        _ => EngineKind::Xla { artifacts_dir: "artifacts".into(), native_opt: false },
+    };
+    ExperimentConfig {
+        rounds: env_u64("BENCH_ROUNDS", 60),
+        lr: env_f64("BENCH_LR", 0.05),
+        eval_subset: 512,
+        eval_every: 2,
+        engine,
+        ..ExperimentConfig::default()
+    }
+}
+
+pub fn seeds() -> u64 {
+    env_u64("BENCH_SEEDS", 3)
+}
+
+/// Time a closure and report.
+pub fn timed<T>(label: &str, f: impl FnOnce() -> anyhow::Result<T>) -> anyhow::Result<T> {
+    let t0 = Instant::now();
+    let out = f()?;
+    println!("[bench] {label}: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(out)
+}

@@ -1,0 +1,50 @@
+//! Bench: regenerate the paper's **Fig. 3** — test accuracy over
+//! communication rounds for data-overlap ratios r ∈ {0, 12.5, 25, 37.5, 50}%
+//! on the AdaHessian + overlap method.
+//!
+//!   cargo bench --bench fig3_overlap
+//!   BENCH_SEEDS=1 BENCH_ROUNDS=30 cargo bench --bench fig3_overlap   # smoke
+//!
+//! Expected shape (paper): accuracy is non-decreasing in r — the shared
+//! subset lowers the variance of per-worker Hessian estimates.
+
+mod common;
+
+use deahes::experiments;
+use deahes::metrics::ascii_chart;
+
+fn main() -> anyhow::Result<()> {
+    // cargo passes --bench; ignore argv entirely.
+    let mut base = common::base_config();
+    base.workers = 4;
+    base.tau = 1;
+    let ratios = [0.0, 0.125, 0.25, 0.375, 0.5];
+    let seeds = common::seeds();
+
+    println!("== Fig 3 reproduction: overlap ratios {ratios:?}, k=4, tau=1, {seeds} seed(s), {} rounds ==", base.rounds);
+    let out = common::timed("fig3 sweep", || {
+        experiments::fig3_overlap_sweep(&base, &ratios, seeds)
+    })?;
+
+    let chart: Vec<(&str, Vec<f64>)> =
+        out.iter().map(|s| (s.label.as_str(), s.test_acc.clone())).collect();
+    print!("{}", ascii_chart("Fig 3: test accuracy over rounds", &chart, 72, 16));
+
+    println!("{:<10} {:>12} {:>14} {:>12}", "ratio", "tail acc", "(std)", "train loss");
+    for s in &out {
+        println!(
+            "{:<10} {:>11.2}% {:>13.2}% {:>12.4}",
+            s.label,
+            100.0 * s.final_acc_mean,
+            100.0 * s.final_acc_std,
+            s.final_train_loss
+        );
+    }
+
+    // Paper's qualitative claim: positive relationship between r and acc.
+    let accs: Vec<f64> = out.iter().map(|s| s.final_acc_mean).collect();
+    let xs: Vec<f64> = ratios.to_vec();
+    let slope = deahes::util::stats::linear_slope(&xs, &accs);
+    println!("\nacc-vs-ratio least-squares slope: {slope:+.4} (paper: positive)");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Bench: regenerate the paper's **Fig. 4** (test accuracy) and **Fig. 5**
+//! (training loss) — all six methods over the (k, τ) grid with one third of
+//! worker→master syncs suppressed, averaged over seeds.
+//!
+//!   cargo bench --bench fig4_fig5_grid
+//!   BENCH_SEEDS=1 BENCH_ROUNDS=30 BENCH_GRID=small cargo bench --bench fig4_fig5_grid
+//!
+//! BENCH_GRID: full  — k∈{4,8} × τ∈{1,2,4} (the paper's grid)
+//!             small — k=4 × τ∈{1,2} (CI-sized)
+//!
+//! Expected shape (paper §VII):
+//!   EAHES-OM ≥ DEAHES-O > EAHES-O > EAHES > EAMSGD ≈ EASGD
+//! and performance does not degrade as k: 4→8 or τ: 1→2→4.
+
+mod common;
+
+use deahes::experiments;
+use deahes::metrics::ascii_chart;
+use deahes::strategies::ALL_METHODS;
+
+fn main() -> anyhow::Result<()> {
+    let base = common::base_config();
+    let seeds = common::seeds();
+    let (workers, taus): (Vec<usize>, Vec<usize>) =
+        match std::env::var("BENCH_GRID").as_deref() {
+            Ok("small") => (vec![4], vec![1, 2]),
+            _ => (vec![4, 8], vec![1, 2, 4]),
+        };
+
+    println!(
+        "== Fig 4+5 reproduction: 6 methods × k{workers:?} × tau{taus:?}, {seeds} seed(s), {} rounds ==",
+        base.rounds
+    );
+    let cells = common::timed("fig4/5 grid", || {
+        experiments::fig45_grid(&base, &workers, &taus, &ALL_METHODS, seeds)
+    })?;
+
+    for cell in &cells {
+        println!("\n===== k={} tau={} =====", cell.workers, cell.tau);
+        let acc: Vec<(&str, Vec<f64>)> = cell
+            .series
+            .iter()
+            .map(|s| (s.label.as_str(), s.test_acc.clone()))
+            .collect();
+        print!("{}", ascii_chart("Fig 4: test accuracy over rounds", &acc, 72, 14));
+        let loss: Vec<(&str, Vec<f64>)> = cell
+            .series
+            .iter()
+            .map(|s| (s.label.as_str(), s.train_loss.clone()))
+            .collect();
+        print!("{}", ascii_chart("Fig 5: training loss over rounds", &loss, 72, 14));
+        for s in &cell.series {
+            println!(
+                "  {:<10} tail acc {:>6.2}% (±{:.2}%)  train loss {:>7.4}  virtual {:>6.2}s",
+                s.label,
+                100.0 * s.final_acc_mean,
+                100.0 * s.final_acc_std,
+                s.final_train_loss,
+                s.virtual_secs
+            );
+        }
+    }
+
+    println!("\n== §VII summary table (tail accuracy) ==");
+    print!("{}", experiments::summary_table(&cells));
+
+    // Qualitative ordering check per cell (shape, not absolute numbers).
+    println!("\nordering check per cell: DEAHES-O vs EAHES (AdaHessian, no mitigation):");
+    for cell in &cells {
+        let get = |name: &str| {
+            cell.series
+                .iter()
+                .find(|s| s.label == name)
+                .map(|s| s.final_acc_mean)
+                .unwrap_or(0.0)
+        };
+        let d = get("DEAHES-O");
+        let e = get("EAHES");
+        println!(
+            "  k={} tau={}: DEAHES-O {:.2}% vs EAHES {:.2}%  [{}]",
+            cell.workers,
+            cell.tau,
+            100.0 * d,
+            100.0 * e,
+            if d >= e { "paper ordering holds" } else { "VIOLATION" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Microbenchmarks of the hot paths (criterion-style timing without
+//! criterion): per-artifact PJRT latency, kernel-vs-native optimizer
+//! updates, raw-score pipeline, elastic sync service rate, and the
+//! coordinator's non-compute overhead per sync.
+//!
+//!   cargo bench --bench microbench
+//!
+//! The L3 perf target (DESIGN.md §Perf): coordinator overhead per sync
+//! (score update + h1/h2 + buffer moves, excluding XLA execute) ≤ 5% of a
+//! local training step.
+
+mod common;
+
+use deahes::elastic::score::{geometric_weights, ScoreTracker};
+use deahes::elastic::weight::{h1, h2};
+use deahes::engine::xla::{OptimImpl, XlaEngine};
+use deahes::engine::{BatchRef, Engine};
+use deahes::optim::native;
+use deahes::runtime::Manifest;
+use deahes::util::rng::Rng;
+use deahes::util::stats::{l2_distance, Welford};
+use std::time::Instant;
+
+fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters.min(3) {
+        f();
+    }
+    let mut w = Welford::default();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        w.push(t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "{label:<44} {:>10.4} ms ± {:>8.4} ms  ({} iters)",
+        w.mean() * 1e3,
+        w.std_dev() * 1e3,
+        iters
+    );
+    w.mean()
+}
+
+fn main() -> anyhow::Result<()> {
+    deahes::util::logging::init(deahes::util::logging::Level::Warn);
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let n = manifest.param_count;
+    let mut rng = Rng::new(0);
+    let theta = manifest.init_theta(0);
+    let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.01)).collect();
+    let d: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.5, 0.1).abs()).collect();
+    let bt = manifest.batch_train;
+    let x = vec![0.1f32; bt * 28 * 28];
+    let mut y = vec![0.0f32; bt * 10];
+    for r in 0..bt {
+        y[r * 10] = 1.0;
+    }
+    let z = rng.rademacher(n);
+
+    println!("== L1/L2 artifact latency (PJRT, P={n}, batch={bt}) ==");
+    let mut engine = XlaEngine::new(&manifest, OptimImpl::Kernels)?;
+    let t_grad = bench("grad (fwd+bwd)", 30, || {
+        engine.grad(&theta, BatchRef { x: &x, y1h: &y }).unwrap();
+    });
+    let t_gh = bench("grad_hess (fwd+bwd+hvp, spatial avg)", 30, || {
+        engine
+            .grad_hess(&theta, BatchRef { x: &x, y1h: &y }, &z)
+            .unwrap();
+    });
+    println!(
+        "   second-order overhead: grad_hess/grad = {:.2}x (AdaHessian paper: ~2x)",
+        t_gh / t_grad
+    );
+
+    println!("\n== optimizer update: L1 pallas kernel vs native rust ==");
+    let mut th = theta.clone();
+    let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let mut t = 0u64;
+    let kernel_ada = bench("adahessian update (pallas kernel)", 50, || {
+        t += 1;
+        engine
+            .adahessian(&mut th, &g, &d, &mut m, &mut v, t, 0.01)
+            .unwrap();
+    });
+    let mut th2 = theta.clone();
+    let (mut m2, mut v2) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let mut t2 = 0u64;
+    let native_ada = bench("adahessian update (native rust)", 50, || {
+        t2 += 1;
+        native::adahessian_step(&mut th2, &g, &d, &mut m2, &mut v2, t2, 0.01, 0.9, 0.999, 1e-8);
+    });
+    println!(
+        "   PJRT dispatch overhead at P={n}: {:.3} ms ({:.1}x native)",
+        (kernel_ada - native_ada) * 1e3,
+        kernel_ada / native_ada.max(1e-12)
+    );
+
+    println!("\n== elastic sync service (master hot path) ==");
+    let mut tw = theta.clone();
+    let mut tm = theta.clone();
+    let t_elastic = bench("elastic pair update (pallas kernel)", 50, || {
+        engine.elastic(&mut tw, &mut tm, 0.1, 0.1).unwrap();
+    });
+    println!(
+        "   master service rate: {:.0} syncs/s -> supports ~{:.0} workers at tau=1 per grad step",
+        1.0 / t_elastic,
+        t_grad / t_elastic
+    );
+
+    println!("\n== L3 coordinator overhead per sync (no XLA) ==");
+    let weights = geometric_weights(4, 0.5);
+    let mut tracker = ScoreTracker::new(weights);
+    let est = theta.clone();
+    let t_coord = bench("score: l2 distance + ring + raw score + h1/h2", 200, || {
+        let dist = l2_distance(&theta, &est);
+        tracker.observe_distance(dist);
+        let a = tracker.raw_score().unwrap_or(0.0);
+        let _ = (h1(a, 0.1, -0.05), h2(a, 0.1, -0.05));
+    });
+    println!(
+        "   coordinator overhead = {:.3}% of a local step (target ≤ 5%)",
+        100.0 * t_coord / (t_gh + kernel_ada)
+    );
+
+    println!("\n== raw-score pipeline scaling ==");
+    for p in [2usize, 4, 8, 16] {
+        let w = geometric_weights(p, 0.5);
+        let mut tr = ScoreTracker::new(w);
+        for i in 0..p + 1 {
+            tr.observe_u(i as f64 * 0.1);
+        }
+        bench(&format!("raw score, history p={p}"), 200, || {
+            tr.observe_u(0.5);
+            let _ = tr.raw_score();
+        });
+    }
+    Ok(())
+}

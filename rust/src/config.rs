@@ -1,0 +1,342 @@
+//! Experiment configuration: every knob of the simulation, JSON
+//! (de)serialization, validation, and the presets for each paper figure.
+
+use crate::coordinator::failure::{FailStyle, FailureModel};
+use crate::elastic::score::{geometric_weights, DEFAULT_P};
+use crate::elastic::weight::{Detector, DynamicParams};
+use crate::strategies::Method;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Which engine backs the run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineKind {
+    /// Real path: AOT artifacts through PJRT.
+    Xla { artifacts_dir: String, native_opt: bool },
+    /// Closed-form quadratic toy problem (tests/algorithm studies).
+    Quadratic { dim: usize, heterogeneity: f64, noise: f64 },
+}
+
+/// How workers estimate the master's parameters for the raw score.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GossipMode {
+    /// Ask peers for their latest cached master copy (paper: "we can
+    /// acquire this estimation from other workers efficiently").
+    Peers,
+    /// Use only this worker's own (possibly stale) cached copy — ablation.
+    Stale,
+}
+
+impl GossipMode {
+    pub fn parse(s: &str) -> Option<GossipMode> {
+        match s {
+            "peers" => Some(GossipMode::Peers),
+            "stale" => Some(GossipMode::Stale),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub method: Method,
+    pub workers: usize,
+    /// Communication period τ: local steps per sync attempt.
+    pub tau: usize,
+    /// Total communication rounds to simulate.
+    pub rounds: u64,
+    /// Overlap ratio r = |O|/n (only used when the method uses overlap).
+    pub overlap_ratio: f64,
+    /// Elastic moving rate α.
+    pub alpha: f64,
+    /// Learning rate η.
+    pub lr: f64,
+    pub seed: u64,
+    // -- data --
+    pub train_size: usize,
+    pub test_size: usize,
+    /// Test samples evaluated per metrics round (subsampled for speed).
+    pub eval_subset: usize,
+    /// Evaluate every this many rounds.
+    pub eval_every: u64,
+    // -- failure & weighting --
+    pub failure: FailureModel,
+    /// Semantics of a suppressed round: node-down vs comm-only (ablation).
+    pub fail_style: FailStyle,
+    pub score_p: usize,
+    pub score_decay: f64,
+    pub knee: f64,
+    pub detector: Detector,
+    pub gossip: GossipMode,
+    // -- engine & driver --
+    pub engine: EngineKind,
+    /// true: one OS thread per worker (realistic async); false: the
+    /// deterministic sequential driver.
+    pub threaded: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            method: Method::DeahesO,
+            workers: 4,
+            tau: 1,
+            rounds: 60,
+            overlap_ratio: 0.25,
+            alpha: 0.1,
+            lr: 0.01,
+            seed: 42,
+            train_size: 8_192,
+            test_size: 2_048,
+            eval_subset: 1_024,
+            eval_every: 1,
+            failure: FailureModel::Bernoulli { p: 1.0 / 3.0 },
+            fail_style: FailStyle::Node,
+            score_p: DEFAULT_P,
+            score_decay: 0.5,
+            knee: -0.05,
+            detector: Detector::PaperSign,
+            gossip: GossipMode::Peers,
+            engine: EngineKind::Xla { artifacts_dir: "artifacts".into(), native_opt: false },
+            threaded: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Effective overlap ratio: 0 for non-overlap methods.
+    pub fn effective_overlap(&self) -> f64 {
+        if self.method.uses_overlap() {
+            self.overlap_ratio
+        } else {
+            0.0
+        }
+    }
+
+    pub fn dynamic_params(&self) -> DynamicParams {
+        DynamicParams { alpha: self.alpha, knee: self.knee, detector: self.detector }
+    }
+
+    pub fn score_weights(&self) -> Vec<f64> {
+        geometric_weights(self.score_p, self.score_decay)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.tau == 0 {
+            bail!("tau must be >= 1");
+        }
+        if !(0.0..1.0).contains(&self.overlap_ratio) {
+            bail!("overlap_ratio must be in [0,1)");
+        }
+        if !(0.0..=1.0).contains(&self.alpha) {
+            bail!("alpha must be in [0,1]");
+        }
+        if self.knee >= 0.0 {
+            bail!("knee must be negative (paper: k < 0)");
+        }
+        if self.lr <= 0.0 {
+            bail!("lr must be positive");
+        }
+        if self.eval_every == 0 {
+            bail!("eval_every must be >= 1");
+        }
+        if let EngineKind::Quadratic { dim, .. } = self.engine {
+            if dim == 0 {
+                bail!("quadratic dim must be >= 1");
+            }
+        }
+        Ok(())
+    }
+
+    // ---------------- JSON ----------------
+
+    pub fn to_json(&self) -> Json {
+        let engine = match &self.engine {
+            EngineKind::Xla { artifacts_dir, native_opt } => Json::obj(vec![
+                ("kind", Json::str("xla")),
+                ("artifacts_dir", Json::str(artifacts_dir)),
+                ("native_opt", Json::Bool(*native_opt)),
+            ]),
+            EngineKind::Quadratic { dim, heterogeneity, noise } => Json::obj(vec![
+                ("kind", Json::str("quadratic")),
+                ("dim", Json::num(*dim as f64)),
+                ("heterogeneity", Json::num(*heterogeneity)),
+                ("noise", Json::num(*noise)),
+            ]),
+        };
+        Json::obj(vec![
+            ("method", Json::str(&self.method.name().to_ascii_lowercase())),
+            ("workers", Json::num(self.workers as f64)),
+            ("tau", Json::num(self.tau as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("overlap_ratio", Json::num(self.overlap_ratio)),
+            ("alpha", Json::num(self.alpha)),
+            ("lr", Json::num(self.lr)),
+            ("seed", Json::num(self.seed as f64)),
+            ("train_size", Json::num(self.train_size as f64)),
+            ("test_size", Json::num(self.test_size as f64)),
+            ("eval_subset", Json::num(self.eval_subset as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("failure", Json::str(&self.failure.describe_spec())),
+            ("fail_style", Json::str(self.fail_style.name())),
+            ("score_p", Json::num(self.score_p as f64)),
+            ("score_decay", Json::num(self.score_decay)),
+            ("knee", Json::num(self.knee)),
+            ("detector", Json::str(self.detector.name())),
+            (
+                "gossip",
+                Json::str(match self.gossip {
+                    GossipMode::Peers => "peers",
+                    GossipMode::Stale => "stale",
+                }),
+            ),
+            ("engine", engine),
+            ("threaded", Json::Bool(self.threaded)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
+        let d = ExperimentConfig::default();
+        let engine = match j.get("engine").get("kind").as_str() {
+            Some("quadratic") => EngineKind::Quadratic {
+                dim: j.get("engine").get("dim").as_usize().unwrap_or(64),
+                heterogeneity: j.get("engine").get("heterogeneity").as_f64().unwrap_or(0.2),
+                noise: j.get("engine").get("noise").as_f64().unwrap_or(0.05),
+            },
+            Some("xla") | None => EngineKind::Xla {
+                artifacts_dir: j
+                    .get("engine")
+                    .get("artifacts_dir")
+                    .as_str()
+                    .unwrap_or("artifacts")
+                    .to_string(),
+                native_opt: j.get("engine").get("native_opt").as_bool().unwrap_or(false),
+            },
+            Some(k) => bail!("unknown engine kind '{k}'"),
+        };
+        let cfg = ExperimentConfig {
+            method: j
+                .get("method")
+                .as_str()
+                .and_then(Method::parse)
+                .context("config: bad or missing 'method'")?,
+            workers: j.get("workers").as_usize().unwrap_or(d.workers),
+            tau: j.get("tau").as_usize().unwrap_or(d.tau),
+            rounds: j.get("rounds").as_usize().unwrap_or(d.rounds as usize) as u64,
+            overlap_ratio: j.get("overlap_ratio").as_f64().unwrap_or(d.overlap_ratio),
+            alpha: j.get("alpha").as_f64().unwrap_or(d.alpha),
+            lr: j.get("lr").as_f64().unwrap_or(d.lr),
+            seed: j.get("seed").as_f64().unwrap_or(d.seed as f64) as u64,
+            train_size: j.get("train_size").as_usize().unwrap_or(d.train_size),
+            test_size: j.get("test_size").as_usize().unwrap_or(d.test_size),
+            eval_subset: j.get("eval_subset").as_usize().unwrap_or(d.eval_subset),
+            eval_every: j.get("eval_every").as_usize().unwrap_or(d.eval_every as usize) as u64,
+            failure: j
+                .get("failure")
+                .as_str()
+                .map(|s| FailureModel::parse(s).context("bad failure spec"))
+                .transpose()?
+                .unwrap_or(d.failure),
+            fail_style: j
+                .get("fail_style")
+                .as_str()
+                .and_then(FailStyle::parse)
+                .unwrap_or(d.fail_style),
+            score_p: j.get("score_p").as_usize().unwrap_or(d.score_p),
+            score_decay: j.get("score_decay").as_f64().unwrap_or(d.score_decay),
+            knee: j.get("knee").as_f64().unwrap_or(d.knee),
+            detector: j
+                .get("detector")
+                .as_str()
+                .and_then(Detector::parse)
+                .unwrap_or(d.detector),
+            gossip: j
+                .get("gossip")
+                .as_str()
+                .and_then(GossipMode::parse)
+                .unwrap_or(d.gossip),
+            engine,
+            threaded: j.get("threaded").as_bool().unwrap_or(d.threaded),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+impl FailureModel {
+    /// Inverse of `FailureModel::parse`.
+    pub fn describe_spec(&self) -> String {
+        match self {
+            FailureModel::None => "none".into(),
+            FailureModel::Bernoulli { p } => format!("bernoulli:{p}"),
+            FailureModel::Burst { p_start, mean_len } => format!("burst:{p_start},{mean_len}"),
+            FailureModel::Permanent { from_round, workers } => {
+                let ws: Vec<String> = workers.iter().map(|w| w.to_string()).collect();
+                format!("permanent:{from_round},{}", ws.join("+"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.method = Method::EahesOm;
+        cfg.workers = 8;
+        cfg.failure = FailureModel::Burst { p_start: 0.05, mean_len: 3.0 };
+        cfg.engine = EngineKind::Quadratic { dim: 128, heterogeneity: 0.3, noise: 0.01 };
+        let j = cfg.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.method, Method::EahesOm);
+        assert_eq!(back.workers, 8);
+        assert_eq!(back.failure, cfg.failure);
+        assert_eq!(back.engine, cfg.engine);
+    }
+
+    #[test]
+    fn failure_spec_roundtrip() {
+        for m in [
+            FailureModel::None,
+            FailureModel::Bernoulli { p: 0.25 },
+            FailureModel::Burst { p_start: 0.1, mean_len: 4.0 },
+            FailureModel::Permanent { from_round: 9, workers: vec![0, 2] },
+        ] {
+            assert_eq!(FailureModel::parse(&m.describe_spec()), Some(m));
+        }
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ExperimentConfig::default();
+        c.workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.knee = 0.1;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.overlap_ratio = 1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn effective_overlap_gates_on_method() {
+        let mut c = ExperimentConfig::default();
+        c.overlap_ratio = 0.25;
+        c.method = Method::Eahes;
+        assert_eq!(c.effective_overlap(), 0.0);
+        c.method = Method::DeahesO;
+        assert_eq!(c.effective_overlap(), 0.25);
+    }
+}

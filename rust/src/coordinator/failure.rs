@@ -1,0 +1,222 @@
+//! Failure injection.
+//!
+//! The paper's model: "we suppress the communication between a worker node
+//! and the master node one-third of the time" — i.i.d. Bernoulli per sync
+//! attempt. Extensions (burst, permanent, targeted) exercise regimes the
+//! dynamic weighting must also survive; they appear in the ablation benches.
+//!
+//! Decisions are a pure function of (seed, worker, round) — a `FailureModel`
+//! precomputes nothing and holds no mutable state, so the threaded and
+//! sequential drivers inject *identical* fault schedules.
+
+use crate::util::rng::Rng;
+
+/// What a suppressed round MEANS for the worker (the paper says "we
+/// suppress the communication ... one-third of time" without fixing this).
+///
+/// * `Node` (default): the node is down for the round — no local steps, no
+///   gossip observation, no sync. Its parameters are FROZEN while the
+///   master moves on, so its model is genuinely outdated at reconnect —
+///   exactly the "outdated model ... likely to cause adverse effects"
+///   scenario the paper mitigates. Reproduces the paper's phenomenon.
+/// * `Comm`: only the master link is down; the worker keeps training on its
+///   shard and gossiping. Ablation — under this reading the "stale" model
+///   kept improving locally, staleness is largely benign, and mitigation
+///   buys little (measured in EXPERIMENTS.md §Failure-semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailStyle {
+    Node,
+    Comm,
+}
+
+impl FailStyle {
+    pub fn parse(s: &str) -> Option<FailStyle> {
+        match s {
+            "node" => Some(FailStyle::Node),
+            "comm" => Some(FailStyle::Comm),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FailStyle::Node => "node",
+            FailStyle::Comm => "comm",
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum FailureModel {
+    /// No failures (calibration runs).
+    None,
+    /// Paper model: each sync attempt suppressed with probability `p`.
+    Bernoulli { p: f64 },
+    /// Markov bursts: enter a failure burst with prob `p_start` per round;
+    /// bursts last `mean_len` rounds in expectation (geometric).
+    Burst { p_start: f64, mean_len: f64 },
+    /// Workers in `workers` fail permanently from `from_round` on.
+    Permanent { from_round: u64, workers: Vec<usize> },
+}
+
+impl FailureModel {
+    pub fn parse(spec: &str) -> Option<FailureModel> {
+        // grammar: "none" | "bernoulli:P" | "burst:P,L" | "permanent:R,w0+w1"
+        let (kind, rest) = match spec.split_once(':') {
+            Some((k, r)) => (k, r),
+            None => (spec, ""),
+        };
+        match kind {
+            "none" => Some(FailureModel::None),
+            "bernoulli" => rest.parse().ok().map(|p| FailureModel::Bernoulli { p }),
+            "burst" => {
+                let (p, l) = rest.split_once(',')?;
+                Some(FailureModel::Burst {
+                    p_start: p.parse().ok()?,
+                    mean_len: l.parse().ok()?,
+                })
+            }
+            "permanent" => {
+                let (r, ws) = rest.split_once(',')?;
+                let workers = ws
+                    .split('+')
+                    .map(|w| w.parse().ok())
+                    .collect::<Option<Vec<usize>>>()?;
+                Some(FailureModel::Permanent { from_round: r.parse().ok()?, workers })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            FailureModel::None => "none".into(),
+            FailureModel::Bernoulli { p } => format!("bernoulli(p={p})"),
+            FailureModel::Burst { p_start, mean_len } => {
+                format!("burst(p_start={p_start}, mean_len={mean_len})")
+            }
+            FailureModel::Permanent { from_round, workers } => {
+                format!("permanent(from={from_round}, workers={workers:?})")
+            }
+        }
+    }
+
+    /// Is worker `w`'s sync at `round` suppressed? Pure in (seed, w, round).
+    pub fn suppressed(&self, seed: u64, w: usize, round: u64) -> bool {
+        match self {
+            FailureModel::None => false,
+            FailureModel::Bernoulli { p } => {
+                let mut r = Rng::new(seed)
+                    .derive(0xFA11)
+                    .derive(w as u64)
+                    .derive(round);
+                r.bernoulli(*p)
+            }
+            FailureModel::Burst { p_start, mean_len } => {
+                // Scan from round 0 so burst membership is history-free
+                // deterministic. Bursts end each round with prob 1/mean_len.
+                let mut in_burst = false;
+                for t in 0..=round {
+                    let mut r = Rng::new(seed)
+                        .derive(0xB557)
+                        .derive(w as u64)
+                        .derive(t);
+                    if in_burst {
+                        if r.bernoulli(1.0 / mean_len.max(1.0)) {
+                            in_burst = false;
+                        }
+                    } else if r.bernoulli(*p_start) {
+                        in_burst = true;
+                    }
+                }
+                in_burst
+            }
+            FailureModel::Permanent { from_round, workers } => {
+                round >= *from_round && workers.contains(&w)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(FailureModel::parse("none"), Some(FailureModel::None));
+        assert_eq!(
+            FailureModel::parse("bernoulli:0.333"),
+            Some(FailureModel::Bernoulli { p: 0.333 })
+        );
+        assert_eq!(
+            FailureModel::parse("burst:0.05,4"),
+            Some(FailureModel::Burst { p_start: 0.05, mean_len: 4.0 })
+        );
+        assert_eq!(
+            FailureModel::parse("permanent:10,1+3"),
+            Some(FailureModel::Permanent { from_round: 10, workers: vec![1, 3] })
+        );
+        assert_eq!(FailureModel::parse("what"), None);
+    }
+
+    #[test]
+    fn bernoulli_rate_approximates_p() {
+        let m = FailureModel::Bernoulli { p: 1.0 / 3.0 };
+        let total = 30_000u64;
+        let fails = (0..total).filter(|&r| m.suppressed(7, 0, r)).count();
+        let rate = fails as f64 / total as f64;
+        assert!((rate - 1.0 / 3.0).abs() < 0.02, "{rate}");
+    }
+
+    #[test]
+    fn decisions_deterministic_and_worker_independent() {
+        let m = FailureModel::Bernoulli { p: 0.5 };
+        for r in 0..50 {
+            assert_eq!(m.suppressed(1, 2, r), m.suppressed(1, 2, r));
+        }
+        // different workers get different streams
+        let a: Vec<bool> = (0..200).map(|r| m.suppressed(1, 0, r)).collect();
+        let b: Vec<bool> = (0..200).map(|r| m.suppressed(1, 1, r)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn permanent_model() {
+        let m = FailureModel::Permanent { from_round: 5, workers: vec![1] };
+        assert!(!m.suppressed(0, 1, 4));
+        assert!(m.suppressed(0, 1, 5));
+        assert!(m.suppressed(0, 1, 500));
+        assert!(!m.suppressed(0, 0, 500));
+    }
+
+    #[test]
+    fn burst_produces_runs() {
+        let m = FailureModel::Burst { p_start: 0.1, mean_len: 5.0 };
+        let seq: Vec<bool> = (0..300).map(|r| m.suppressed(3, 0, r)).collect();
+        let fail_rounds = seq.iter().filter(|&&b| b).count();
+        assert!(fail_rounds > 0, "bursts should occur");
+        // mean run length of failures should exceed 1 (bursty, not iid)
+        let mut runs = Vec::new();
+        let mut cur = 0usize;
+        for &b in &seq {
+            if b {
+                cur += 1;
+            } else if cur > 0 {
+                runs.push(cur);
+                cur = 0;
+            }
+        }
+        if cur > 0 {
+            runs.push(cur);
+        }
+        let mean_run = runs.iter().sum::<usize>() as f64 / runs.len().max(1) as f64;
+        assert!(mean_run > 1.2, "mean burst length {mean_run}");
+    }
+
+    #[test]
+    fn none_never_fails() {
+        let m = FailureModel::None;
+        assert!((0..100).all(|r| !m.suppressed(0, 0, r)));
+    }
+}

@@ -1,0 +1,131 @@
+//! Worker-to-worker estimation of the master parameters.
+//!
+//! The paper computes u_t = log‖θ_w − θ̃_m‖ from an ESTIMATE θ̃_m of the
+//! master model: "in practice, we can acquire this estimation from other
+//! workers efficiently since communication among workers is much faster".
+//!
+//! Every worker publishes the master copy it received at its last
+//! successful sync, stamped with the round number. A reader combines its
+//! own cache with one random peer's and keeps the fresher copy — a single
+//! cheap peer exchange, exactly the paper's sketch. `GossipMode::Stale`
+//! (ablation) skips the peer exchange.
+
+use crate::config::GossipMode;
+use crate::util::rng::Rng;
+use std::sync::{Arc, RwLock};
+
+#[derive(Clone)]
+struct Entry {
+    round: u64,
+    theta: Arc<Vec<f32>>,
+}
+
+pub struct GossipBoard {
+    entries: Vec<RwLock<Entry>>,
+    mode: GossipMode,
+}
+
+impl GossipBoard {
+    /// All workers start with the master's init (round 0).
+    pub fn new(workers: usize, init: Arc<Vec<f32>>, mode: GossipMode) -> GossipBoard {
+        let entries = (0..workers)
+            .map(|_| RwLock::new(Entry { round: 0, theta: init.clone() }))
+            .collect();
+        GossipBoard { entries, mode }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Publish the master copy worker `w` received at `round`.
+    pub fn publish(&self, w: usize, round: u64, theta: Arc<Vec<f32>>) {
+        let mut e = self.entries[w].write().unwrap();
+        // Monotone: never replace a fresher copy (threaded mode can reorder).
+        if round >= e.round {
+            *e = Entry { round, theta };
+        }
+    }
+
+    /// Worker `w`'s best estimate of the master parameters.
+    /// Returns (stamp_round, theta).
+    pub fn estimate(&self, w: usize, rng: &mut Rng) -> (u64, Arc<Vec<f32>>) {
+        let own = self.entries[w].read().unwrap().clone();
+        if self.mode == GossipMode::Stale || self.entries.len() == 1 {
+            return (own.round, own.theta);
+        }
+        // one random peer (excluding self)
+        let mut peer = rng.usize_below(self.entries.len() - 1);
+        if peer >= w {
+            peer += 1;
+        }
+        let p = self.entries[peer].read().unwrap().clone();
+        if p.round > own.round {
+            (p.round, p.theta)
+        } else {
+            (own.round, own.theta)
+        }
+    }
+
+    /// Freshest stamp on the board (diagnostics).
+    pub fn freshest(&self) -> u64 {
+        self.entries
+            .iter()
+            .map(|e| e.read().unwrap().round)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn board(k: usize, mode: GossipMode) -> GossipBoard {
+        GossipBoard::new(k, Arc::new(vec![0.0; 4]), mode)
+    }
+
+    #[test]
+    fn initial_estimate_is_init() {
+        let b = board(4, GossipMode::Peers);
+        let (r, t) = b.estimate(2, &mut Rng::new(0));
+        assert_eq!(r, 0);
+        assert_eq!(*t, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn peer_gossip_propagates_fresher_copy() {
+        let b = board(2, GossipMode::Peers);
+        b.publish(0, 5, Arc::new(vec![1.0; 4]));
+        // worker 1 has only round 0; its single peer is worker 0
+        let (r, t) = b.estimate(1, &mut Rng::new(1));
+        assert_eq!(r, 5);
+        assert_eq!(*t, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn stale_mode_ignores_peers() {
+        let b = board(2, GossipMode::Stale);
+        b.publish(0, 5, Arc::new(vec![1.0; 4]));
+        let (r, t) = b.estimate(1, &mut Rng::new(1));
+        assert_eq!(r, 0);
+        assert_eq!(*t, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn publish_is_monotone() {
+        let b = board(1, GossipMode::Stale);
+        b.publish(0, 5, Arc::new(vec![5.0; 4]));
+        b.publish(0, 3, Arc::new(vec![3.0; 4])); // stale write must lose
+        let (r, t) = b.estimate(0, &mut Rng::new(0));
+        assert_eq!(r, 5);
+        assert_eq!(*t, vec![5.0; 4]);
+    }
+
+    #[test]
+    fn estimate_never_panics_on_single_worker() {
+        let b = board(1, GossipMode::Peers);
+        let (r, _) = b.estimate(0, &mut Rng::new(0));
+        assert_eq!(r, 0);
+    }
+}

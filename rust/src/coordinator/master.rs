@@ -1,0 +1,144 @@
+//! Master-side state machine: serves elastic syncs (paper eqs. 12-13 with
+//! the policy-chosen h1/h2), tracks per-worker sync statistics, and owns
+//! the aggregated model. Thread-agnostic.
+
+use crate::elastic::weight::WeightPolicy;
+use crate::engine::Engine;
+use anyhow::Result;
+
+/// One served sync, for diagnostics/metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct SyncEvent {
+    pub worker: usize,
+    pub round: u64,
+    pub raw_score: Option<f64>,
+    pub missed: u32,
+    pub h1: f64,
+    pub h2: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct WorkerSyncStats {
+    pub served: u64,
+    pub h1_sum: f64,
+    pub h2_sum: f64,
+    /// Syncs where the policy cut the worker's influence below α (i.e. the
+    /// failure branch fired at least partially).
+    pub corrections: u64,
+}
+
+pub struct MasterState {
+    pub theta: Vec<f32>,
+    pub policy: WeightPolicy,
+    pub per_worker: Vec<WorkerSyncStats>,
+    pub total_syncs: u64,
+    alpha: f64,
+}
+
+impl MasterState {
+    pub fn new(theta0: Vec<f32>, policy: WeightPolicy, workers: usize, alpha: f64) -> MasterState {
+        MasterState {
+            theta: theta0,
+            policy,
+            per_worker: vec![WorkerSyncStats::default(); workers],
+            total_syncs: 0,
+            alpha,
+        }
+    }
+
+    /// Serve one sync: choose (h1, h2), run the elastic pair update through
+    /// the engine (L1 kernel or native mirror), update stats.
+    ///
+    /// `theta_w` is updated in place to the post-elastic worker parameters;
+    /// the master's own `self.theta` is updated to the new aggregate.
+    pub fn serve_sync(
+        &mut self,
+        engine: &mut dyn Engine,
+        worker: usize,
+        round: u64,
+        theta_w: &mut Vec<f32>,
+        raw_score: Option<f64>,
+        missed: u32,
+    ) -> Result<SyncEvent> {
+        let (h1, h2) = self.policy.weights(raw_score, missed);
+        engine.elastic(theta_w, &mut self.theta, h1 as f32, h2 as f32)?;
+        let st = &mut self.per_worker[worker];
+        st.served += 1;
+        st.h1_sum += h1;
+        st.h2_sum += h2;
+        if h2 < self.alpha - 1e-12 {
+            st.corrections += 1;
+        }
+        self.total_syncs += 1;
+        Ok(SyncEvent { worker, round, raw_score, missed, h1, h2 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::weight::{Detector, DynamicParams};
+    use crate::engine::quad::QuadraticEngine;
+
+    fn master(policy: WeightPolicy) -> (MasterState, QuadraticEngine) {
+        (
+            MasterState::new(vec![0.0; 8], policy, 2, 0.1),
+            QuadraticEngine::new(8, 1, 0, 0.0, 0.0),
+        )
+    }
+
+    #[test]
+    fn fixed_policy_moves_both_sides() {
+        let (mut m, mut e) = master(WeightPolicy::Fixed { alpha: 0.5 });
+        let mut tw = vec![2.0; 8];
+        let ev = m.serve_sync(&mut e, 0, 1, &mut tw, None, 0).unwrap();
+        assert_eq!((ev.h1, ev.h2), (0.5, 0.5));
+        assert_eq!(tw, vec![1.0; 8]);
+        assert_eq!(m.theta, vec![1.0; 8]);
+        assert_eq!(m.total_syncs, 1);
+    }
+
+    #[test]
+    fn oracle_policy_blocks_failed_worker_influence() {
+        let (mut m, mut e) = master(WeightPolicy::Oracle { alpha: 0.1 });
+        let mut tw = vec![10.0; 8];
+        let ev = m.serve_sync(&mut e, 1, 3, &mut tw, None, 2).unwrap();
+        assert_eq!((ev.h1, ev.h2), (1.0, 0.0));
+        // worker teleported to master, master untouched
+        assert_eq!(tw, vec![0.0; 8]);
+        assert_eq!(m.theta, vec![0.0; 8]);
+        assert_eq!(m.per_worker[1].corrections, 1);
+    }
+
+    #[test]
+    fn dynamic_policy_corrects_on_drift() {
+        let policy = WeightPolicy::Dynamic(DynamicParams {
+            alpha: 0.1,
+            knee: -0.05,
+            detector: Detector::DriftSign,
+        });
+        let (mut m, mut e) = master(policy);
+        let mut tw = vec![4.0; 8];
+        // strong positive raw score = distance exploding = failure
+        let ev = m.serve_sync(&mut e, 0, 2, &mut tw, Some(1.0), 0).unwrap();
+        assert_eq!((ev.h1, ev.h2), (1.0, 0.0));
+        assert_eq!(tw, vec![0.0; 8]);
+        // healthy score keeps EASGD behaviour
+        let mut tw2 = vec![4.0; 8];
+        let ev2 = m.serve_sync(&mut e, 0, 3, &mut tw2, Some(-0.001), 0).unwrap();
+        assert!((ev2.h1 - 0.1).abs() < 1e-12);
+        assert!((ev2.h2 - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let (mut m, mut e) = master(WeightPolicy::Fixed { alpha: 0.1 });
+        let mut tw = vec![1.0; 8];
+        for r in 0..5 {
+            m.serve_sync(&mut e, 0, r, &mut tw, None, 0).unwrap();
+        }
+        assert_eq!(m.per_worker[0].served, 5);
+        assert!((m.per_worker[0].h1_sum - 0.5).abs() < 1e-12);
+        assert_eq!(m.per_worker[0].corrections, 0);
+    }
+}

@@ -1,0 +1,50 @@
+//! The master↔worker wire protocol of the threaded driver.
+//!
+//! Plain `std::sync::mpsc` channels: the master thread owns one receiver;
+//! every worker holds a cloned sender plus its own reply channel. A real
+//! deployment would put these frames on a socket — the message set is the
+//! same (sync, snapshot, eval, shutdown).
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+/// Reply to a successful elastic sync.
+pub struct SyncReply {
+    /// Post-elastic worker parameters (eq. 12 applied).
+    pub theta_w: Vec<f32>,
+    /// Post-elastic master parameters (eq. 13 applied) — becomes the
+    /// worker's gossip-published master estimate.
+    pub theta_m: Arc<Vec<f32>>,
+    pub h1: f64,
+    pub h2: f64,
+}
+
+pub enum ToMaster {
+    /// Elastic sync request (paper eqs. 12-13).
+    Sync {
+        worker: usize,
+        round: u64,
+        theta_w: Vec<f32>,
+        raw_score: Option<f64>,
+        missed: u32,
+        reply: Sender<SyncReply>,
+    },
+    /// Evaluate the current aggregated model on the test subset.
+    Eval { reply: Sender<(f64, f64)> },
+    /// Fetch a copy of the aggregated model.
+    Snapshot { reply: Sender<Vec<f32>> },
+    /// Drain and exit.
+    Shutdown,
+}
+
+/// Per-round per-worker report to the monitor (metrics) thread.
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    pub worker: usize,
+    pub round: u64,
+    pub train_loss: f32,
+    pub synced: bool,
+    pub raw_score: Option<f64>,
+    pub h1: Option<f64>,
+    pub h2: Option<f64>,
+}

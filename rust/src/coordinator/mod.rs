@@ -1,0 +1,21 @@
+//! L3 — the paper's coordination system.
+//!
+//! `worker` and `master` are thread-agnostic state machines implementing
+//! the elastic averaging + dynamic weighting algorithm; `sim` wires them
+//! into either a deterministic sequential driver or a real threaded
+//! master/worker topology over mpsc channels. `failure` injects the paper's
+//! communication-suppression fault model; `gossip` implements the
+//! worker-to-worker master estimation; `simclock` adds the virtual
+//! wall-clock model the paper defers to future work.
+
+pub mod evaluator;
+pub mod failure;
+pub mod gossip;
+pub mod master;
+pub mod messages;
+pub mod sim;
+pub mod simclock;
+pub mod worker;
+
+pub use failure::FailureModel;
+pub use sim::{run, Role, RunResult, Setup};

@@ -1,0 +1,524 @@
+//! Experiment drivers: wire the data, engines, worker/master state machines,
+//! gossip, failure injection and metrics into a full run.
+//!
+//! Two drivers share all algorithm code:
+//!
+//!  * **sequential** (default) — one engine, workers stepped in a seeded
+//!    random order per round. Fully deterministic: unit tests and the paper
+//!    figures use this.
+//!  * **threaded** — one OS thread per worker plus a master thread, mpsc
+//!    message passing, per-thread PJRT clients. Non-deterministic arrival
+//!    order at the master (that's the point); round boundaries are fenced
+//!    with barriers only to sample metrics.
+//!
+//! Failure injection is a pure function of (seed, worker, round), so both
+//! drivers face the *identical* fault schedule.
+
+use super::evaluator::Evaluator;
+use super::failure::FailureModel;
+use super::gossip::GossipBoard;
+use super::master::MasterState;
+use super::messages::{RoundReport, SyncReply, ToMaster};
+use super::simclock::{SimClock, SimClockReport};
+use super::worker::WorkerState;
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::data::{synth, Batcher, Dataset, ShardPlan};
+use crate::engine::quad::QuadraticEngine;
+use crate::engine::xla::{OptimImpl, XlaEngine, MASTER_ARTIFACTS};
+use crate::engine::Engine;
+use crate::metrics::{MetricsLog, RoundRecord};
+use crate::optim::{OptState, Optimizer};
+use crate::runtime::Manifest;
+use crate::util::rng::Rng;
+use crate::{log_debug, log_info};
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+/// Which artifacts an engine instance needs.
+#[derive(Clone, Copy, Debug)]
+pub enum Role {
+    Worker(usize),
+    Master,
+    /// Sequential driver: one engine does everything.
+    All,
+}
+
+/// The immutable context a run is built from.
+pub struct Setup {
+    pub cfg: ExperimentConfig,
+    pub train: Arc<Dataset>,
+    pub test: Arc<Dataset>,
+    pub shard: ShardPlan,
+    pub theta0: Vec<f32>,
+    manifest: Option<Arc<Manifest>>,
+}
+
+impl Setup {
+    pub fn build(cfg: &ExperimentConfig) -> Result<Setup> {
+        cfg.validate()?;
+        let data_seed = Rng::new(cfg.seed).derive(0xDA7A);
+        let train = Arc::new(synth::dataset(cfg.train_size, cfg.seed ^ 0x7EA1));
+        let test = Arc::new(synth::dataset(cfg.test_size, cfg.seed ^ 0x7E57));
+        let mut shard_rng = data_seed.derive(1);
+        let shard = ShardPlan::build(
+            cfg.train_size,
+            cfg.workers,
+            cfg.effective_overlap(),
+            &mut shard_rng,
+        );
+        let (manifest, theta0) = match &cfg.engine {
+            EngineKind::Xla { artifacts_dir, .. } => {
+                let m = Arc::new(Manifest::load(std::path::Path::new(artifacts_dir))?);
+                let theta0 = m.init_theta(cfg.seed);
+                (Some(m), theta0)
+            }
+            EngineKind::Quadratic { dim, .. } => (None, vec![0.0f32; *dim]),
+        };
+        Ok(Setup { cfg: cfg.clone(), train, test, shard, theta0, manifest })
+    }
+
+    /// Build an engine for `role` (must run on the calling thread for XLA).
+    pub fn make_engine(&self, role: Role) -> Result<Box<dyn Engine>> {
+        match &self.cfg.engine {
+            EngineKind::Quadratic { dim, heterogeneity, noise } => {
+                let tag = match role {
+                    Role::Worker(i) => i as u64 + 1,
+                    _ => 0,
+                };
+                Ok(Box::new(QuadraticEngine::new(
+                    *dim,
+                    self.cfg.seed,
+                    tag,
+                    *heterogeneity as f32,
+                    *noise as f32,
+                )))
+            }
+            EngineKind::Xla { native_opt, .. } => {
+                let m = self.manifest.as_ref().unwrap();
+                let optim = if *native_opt { OptimImpl::Native } else { OptimImpl::Kernels };
+                let names: Vec<&str> = match role {
+                    Role::All => vec![],
+                    Role::Master => MASTER_ARTIFACTS.to_vec(),
+                    Role::Worker(_) => match self.cfg.method.optimizer() {
+                        Optimizer::Sgd => vec!["grad", "sgd"],
+                        Optimizer::Momentum => vec!["grad", "momentum"],
+                        Optimizer::AdaHessian => vec!["grad_hess", "adahessian"],
+                    },
+                };
+                Ok(Box::new(XlaEngine::with_artifacts(m, &names, optim)?))
+            }
+        }
+    }
+
+    /// Construct worker `i`'s state (batcher over its shard, seeded streams).
+    pub fn make_worker(&self, i: usize) -> WorkerState {
+        let cfg = &self.cfg;
+        let batcher = self.manifest.as_ref().map(|m| {
+            Batcher::new(
+                self.train.clone(),
+                self.shard.worker_indices(i),
+                m.batch_train,
+                Rng::new(cfg.seed).derive(0xBA7C).derive(i as u64),
+            )
+        });
+        let n = self.theta0.len();
+        WorkerState::new(
+            i,
+            self.theta0.clone(),
+            OptState::new(cfg.method.optimizer(), n),
+            cfg.lr as f32,
+            batcher,
+            cfg.score_weights(),
+            Rng::new(cfg.seed).derive(0x2AD).derive(i as u64),
+        )
+    }
+
+    pub fn make_master(&self) -> MasterState {
+        let policy = self
+            .cfg
+            .method
+            .weight_policy(self.cfg.alpha, self.cfg.dynamic_params());
+        MasterState::new(self.theta0.clone(), policy, self.cfg.workers, self.cfg.alpha)
+    }
+
+    pub fn make_evaluator(&self) -> Evaluator {
+        let mut rng = Rng::new(self.cfg.seed).derive(0xE7A1);
+        Evaluator::new(self.test.clone(), self.cfg.eval_subset, &mut rng)
+    }
+}
+
+/// Outcome of a full run.
+pub struct RunResult {
+    pub log: MetricsLog,
+    pub wall_secs: f64,
+    pub sim: SimClockReport,
+    /// Per-artifact PJRT call stats (one block per engine instance).
+    pub perf: String,
+    /// Per-worker (served, corrections).
+    pub worker_stats: Vec<(u64, u64)>,
+}
+
+impl RunResult {
+    pub fn final_acc(&self) -> f64 {
+        self.log.final_acc()
+    }
+}
+
+/// Entry point: dispatches on `cfg.threaded`.
+pub fn run(cfg: &ExperimentConfig) -> Result<RunResult> {
+    let setup = Setup::build(cfg)?;
+    if cfg.threaded {
+        run_threaded(&setup)
+    } else {
+        run_sequential(&setup)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sequential driver
+// ---------------------------------------------------------------------------
+
+pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
+    let cfg = &setup.cfg;
+    let t0 = Instant::now();
+    let mut engine = setup.make_engine(Role::All)?;
+    let mut workers: Vec<WorkerState> =
+        (0..cfg.workers).map(|i| setup.make_worker(i)).collect();
+    let mut master = setup.make_master();
+    let gossip = GossipBoard::new(
+        cfg.workers,
+        Arc::new(setup.theta0.clone()),
+        cfg.gossip,
+    );
+    let mut evaluator = setup.make_evaluator();
+    let mut order_rng = Rng::new(cfg.seed).derive(0x0DE2);
+    let mut gossip_rng = Rng::new(cfg.seed).derive(0x6055);
+    let mut log = MetricsLog::default();
+    let mut per_round_syncs: Vec<usize> = Vec::with_capacity(cfg.rounds as usize);
+
+    log_info!(
+        "sequential run: method={} k={} tau={} rounds={} overlap={:.3} failure={}",
+        cfg.method.name(),
+        cfg.workers,
+        cfg.tau,
+        cfg.rounds,
+        cfg.effective_overlap(),
+        cfg.failure.describe()
+    );
+
+    for round in 0..cfg.rounds {
+        let mut losses = Vec::with_capacity(cfg.workers);
+        let mut h1s = Vec::new();
+        let mut h2s = Vec::new();
+        let mut scores = Vec::new();
+        let mut ok = 0u32;
+        let mut failed = 0u32;
+        for w in order_rng.permutation(cfg.workers) {
+            let suppressed = cfg.failure.suppressed(cfg.seed, w, round);
+            if suppressed && cfg.fail_style == crate::coordinator::failure::FailStyle::Node {
+                // Node down: frozen — no steps, no gossip, no sync.
+                workers[w].record_miss();
+                failed += 1;
+                if workers[w].last_loss.is_finite() {
+                    losses.push(workers[w].last_loss as f64);
+                }
+                continue;
+            }
+            let loss = workers[w].local_round(engine.as_mut(), cfg.tau)?;
+            losses.push(loss as f64);
+            let (_, est) = gossip.estimate(w, &mut gossip_rng);
+            let score = workers[w].observe_and_score(&est);
+            if let Some(a) = score {
+                scores.push(a);
+            }
+            if suppressed {
+                // Comm-only failure: trained but cannot reach the master.
+                workers[w].record_miss();
+                failed += 1;
+                continue;
+            }
+            let mut tw = std::mem::take(&mut workers[w].theta);
+            let ev = master.serve_sync(
+                engine.as_mut(),
+                w,
+                round,
+                &mut tw,
+                score,
+                workers[w].missed,
+            )?;
+            workers[w].complete_sync(tw);
+            gossip.publish(w, round + 1, Arc::new(master.theta.clone()));
+            h1s.push(ev.h1);
+            h2s.push(ev.h2);
+            ok += 1;
+        }
+        per_round_syncs.push(ok as usize);
+        if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            let (acc, tl) = evaluator.evaluate(engine.as_mut(), &master.theta)?;
+            log_debug!("round {round}: acc={acc:.4} train_loss={:.4}", mean(&losses));
+            log.push(RoundRecord {
+                round,
+                test_acc: acc,
+                test_loss: tl,
+                train_loss: mean(&losses),
+                syncs_ok: ok,
+                syncs_failed: failed,
+                mean_h1: mean(&h1s),
+                mean_h2: mean(&h2s),
+                mean_score: mean(&scores),
+            });
+        }
+    }
+
+    let (t_step, t_sync) = measured_costs(engine.as_ref(), cfg);
+    let mut clock = SimClock::new(t_step, t_sync);
+    for &s in &per_round_syncs {
+        clock.round(cfg.workers, cfg.tau, s);
+    }
+    Ok(RunResult {
+        log,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        sim: clock.report(),
+        perf: engine.perf_summary(),
+        worker_stats: master
+            .per_worker
+            .iter()
+            .map(|s| (s.served, s.corrections))
+            .collect(),
+    })
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    crate::util::stats::mean(xs)
+}
+
+/// Virtual-clock costs anchored to this host: measured mean per-call times
+/// when available, otherwise nominal constants (1 ms step, 0.2 ms sync).
+fn measured_costs(engine: &dyn Engine, cfg: &ExperimentConfig) -> (f64, f64) {
+    let _ = engine;
+    match &cfg.engine {
+        EngineKind::Quadratic { .. } => (1e-3, 2e-4),
+        EngineKind::Xla { .. } => (1e-3, 2e-4), // refined by the perf pass via stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// threaded driver
+// ---------------------------------------------------------------------------
+
+pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
+    let cfg = &setup.cfg;
+    let t0 = Instant::now();
+    let k = cfg.workers;
+    let rounds = cfg.rounds;
+    let gossip = Arc::new(GossipBoard::new(k, Arc::new(setup.theta0.clone()), cfg.gossip));
+    let barrier = Arc::new(Barrier::new(k + 1));
+    let (master_tx, master_rx) = mpsc::channel::<ToMaster>();
+    let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
+
+    log_info!(
+        "threaded run: method={} k={} tau={} rounds={}",
+        cfg.method.name(),
+        cfg.workers,
+        cfg.tau,
+        cfg.rounds
+    );
+
+    std::thread::scope(|scope| -> Result<RunResult> {
+        // ---- master thread ----
+        let master_handle = {
+            let setup_ref = &*setup;
+            std::thread::Builder::new()
+                .name("master".into())
+                .spawn_scoped(scope, move || -> Result<(String, Vec<(u64, u64)>)> {
+                    let mut engine = setup_ref.make_engine(Role::Master)?;
+                    let mut master = setup_ref.make_master();
+                    let mut evaluator = setup_ref.make_evaluator();
+                    while let Ok(msg) = master_rx.recv() {
+                        match msg {
+                            ToMaster::Sync { worker, round, mut theta_w, raw_score, missed, reply } => {
+                                let ev = master.serve_sync(
+                                    engine.as_mut(),
+                                    worker,
+                                    round,
+                                    &mut theta_w,
+                                    raw_score,
+                                    missed,
+                                )?;
+                                let _ = reply.send(SyncReply {
+                                    theta_w,
+                                    theta_m: Arc::new(master.theta.clone()),
+                                    h1: ev.h1,
+                                    h2: ev.h2,
+                                });
+                            }
+                            ToMaster::Eval { reply } => {
+                                let r = evaluator.evaluate(engine.as_mut(), &master.theta)?;
+                                let _ = reply.send(r);
+                            }
+                            ToMaster::Snapshot { reply } => {
+                                let _ = reply.send(master.theta.clone());
+                            }
+                            ToMaster::Shutdown => break,
+                        }
+                    }
+                    Ok((
+                        engine.perf_summary(),
+                        master
+                            .per_worker
+                            .iter()
+                            .map(|s| (s.served, s.corrections))
+                            .collect(),
+                    ))
+                })
+                .expect("spawn master")
+        };
+
+        // ---- worker threads ----
+        let mut worker_handles = Vec::with_capacity(k);
+        for i in 0..k {
+            let setup_ref = &*setup;
+            let gossip = gossip.clone();
+            let barrier = barrier.clone();
+            let master_tx = master_tx.clone();
+            let report_tx = report_tx.clone();
+            let mut state = setup.make_worker(i);
+            let failure: FailureModel = cfg.failure.clone();
+            let fail_style = cfg.fail_style;
+            let seed = cfg.seed;
+            let tau = cfg.tau;
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{i}"))
+                .spawn_scoped(scope, move || -> Result<String> {
+                    let mut engine = setup_ref.make_engine(Role::Worker(i))?;
+                    let mut gossip_rng = Rng::new(seed).derive(0x6055).derive(i as u64);
+                    let (reply_tx, reply_rx) = mpsc::channel::<SyncReply>();
+                    for round in 0..rounds {
+                        let suppressed = failure.suppressed(seed, i, round);
+                        let node_down = suppressed
+                            && fail_style == crate::coordinator::failure::FailStyle::Node;
+                        let (loss, score) = if node_down {
+                            // frozen for the round
+                            (state.last_loss, None)
+                        } else {
+                            let loss = state.local_round(engine.as_mut(), tau)?;
+                            let (_, est) = gossip.estimate(i, &mut gossip_rng);
+                            (loss, state.observe_and_score(&est))
+                        };
+                        let mut rep = RoundReport {
+                            worker: i,
+                            round,
+                            train_loss: loss,
+                            synced: !suppressed,
+                            raw_score: score,
+                            h1: None,
+                            h2: None,
+                        };
+                        if suppressed {
+                            state.record_miss();
+                        } else {
+                            master_tx
+                                .send(ToMaster::Sync {
+                                    worker: i,
+                                    round,
+                                    theta_w: state.theta.clone(),
+                                    raw_score: score,
+                                    missed: state.missed,
+                                    reply: reply_tx.clone(),
+                                })
+                                .ok()
+                                .context("master channel closed")?;
+                            let reply = reply_rx.recv().context("sync reply dropped")?;
+                            state.complete_sync(reply.theta_w);
+                            gossip.publish(i, round + 1, reply.theta_m);
+                            rep.h1 = Some(reply.h1);
+                            rep.h2 = Some(reply.h2);
+                        }
+                        report_tx.send(rep).ok();
+                        barrier.wait(); // A: round work done
+                        barrier.wait(); // B: metrics sampled, go on
+                    }
+                    Ok(engine.perf_summary())
+                })
+                .expect("spawn worker");
+            worker_handles.push(handle);
+        }
+        drop(report_tx);
+
+        // ---- monitor (this thread) ----
+        let mut log = MetricsLog::default();
+        let mut per_round_syncs = Vec::with_capacity(rounds as usize);
+        for round in 0..rounds {
+            let mut losses = Vec::with_capacity(k);
+            let mut h1s = Vec::new();
+            let mut h2s = Vec::new();
+            let mut scores = Vec::new();
+            let mut ok = 0u32;
+            let mut failed = 0u32;
+            for _ in 0..k {
+                let rep = report_rx.recv().context("worker report channel closed")?;
+                if rep.train_loss.is_finite() {
+                    losses.push(rep.train_loss as f64);
+                }
+                if let Some(a) = rep.raw_score {
+                    scores.push(a);
+                }
+                if rep.synced {
+                    ok += 1;
+                    if let (Some(a), Some(b)) = (rep.h1, rep.h2) {
+                        h1s.push(a);
+                        h2s.push(b);
+                    }
+                } else {
+                    failed += 1;
+                }
+            }
+            barrier.wait(); // A: workers idle, master drained of syncs
+            per_round_syncs.push(ok as usize);
+            if round % cfg.eval_every == 0 || round + 1 == rounds {
+                let (acc_tx, acc_rx) = mpsc::channel();
+                master_tx.send(ToMaster::Eval { reply: acc_tx }).ok();
+                let (acc, tl) = acc_rx.recv().context("eval reply dropped")?;
+                log.push(RoundRecord {
+                    round,
+                    test_acc: acc,
+                    test_loss: tl,
+                    train_loss: mean(&losses),
+                    syncs_ok: ok,
+                    syncs_failed: failed,
+                    mean_h1: mean(&h1s),
+                    mean_h2: mean(&h2s),
+                    mean_score: mean(&scores),
+                });
+            }
+            barrier.wait(); // B: release workers into the next round
+        }
+
+        let mut perf = String::new();
+        for h in worker_handles {
+            let s = h.join().expect("worker panicked")?;
+            if !s.is_empty() {
+                perf.push_str(&s);
+            }
+        }
+        master_tx.send(ToMaster::Shutdown).ok();
+        drop(master_tx);
+        let (master_perf, worker_stats) = master_handle.join().expect("master panicked")?;
+        perf.push_str(&master_perf);
+
+        let (t_step, t_sync) = (1e-3, 2e-4);
+        let mut clock = SimClock::new(t_step, t_sync);
+        for &s in &per_round_syncs {
+            clock.round(k, cfg.tau, s);
+        }
+        Ok(RunResult {
+            log,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            sim: clock.report(),
+            perf,
+            worker_stats,
+        })
+    })
+}

@@ -1,0 +1,213 @@
+//! Worker-side state machine: local optimizer steps between syncs, the raw
+//! score pipeline, and the elastic sync handshake. Thread-agnostic — both
+//! the sequential and threaded drivers run this exact code.
+
+use crate::data::{Batcher, IMAGE_PIXELS, NUM_CLASSES};
+use crate::elastic::score::ScoreTracker;
+use crate::engine::{BatchRef, Engine};
+use crate::optim::OptState;
+use crate::util::rng::Rng;
+use crate::util::stats::l2_distance;
+use anyhow::Result;
+
+pub struct WorkerState {
+    pub id: usize,
+    pub theta: Vec<f32>,
+    pub opt: OptState,
+    pub lr: f32,
+    /// None for engines that synthesize their own batches (quadratic).
+    batcher: Option<Batcher>,
+    score: ScoreTracker,
+    /// Consecutive suppressed syncs since the last successful one.
+    pub missed: u32,
+    /// Total local steps taken (diagnostics).
+    pub steps: u64,
+    /// Mean loss of the most recent local round (reported for node-down
+    /// rounds, when no fresh steps happen).
+    pub last_loss: f32,
+    // hot-loop buffers (never reallocated)
+    x_buf: Vec<f32>,
+    y_buf: Vec<f32>,
+    probe_rng: Rng,
+}
+
+impl WorkerState {
+    pub fn new(
+        id: usize,
+        theta0: Vec<f32>,
+        opt: OptState,
+        lr: f32,
+        batcher: Option<Batcher>,
+        score_weights: Vec<f64>,
+        probe_rng: Rng,
+    ) -> WorkerState {
+        let batch = batcher.as_ref().map(|b| b.batch_size()).unwrap_or(0);
+        WorkerState {
+            id,
+            theta: theta0,
+            opt,
+            lr,
+            batcher,
+            score: ScoreTracker::new(score_weights),
+            missed: 0,
+            steps: 0,
+            last_loss: f32::NAN,
+            x_buf: vec![0.0; batch * IMAGE_PIXELS],
+            y_buf: vec![0.0; batch * NUM_CLASSES],
+            probe_rng,
+        }
+    }
+
+    /// τ local optimizer steps; returns the mean training loss.
+    pub fn local_round(&mut self, engine: &mut dyn Engine, tau: usize) -> Result<f32> {
+        let mut loss_sum = 0.0f32;
+        for _ in 0..tau {
+            if let Some(b) = self.batcher.as_mut() {
+                b.next_into(&mut self.x_buf, &mut self.y_buf);
+            }
+            let batch = BatchRef { x: &self.x_buf, y1h: &self.y_buf };
+            let n = self.theta.len();
+            match &mut self.opt {
+                OptState::Sgd => {
+                    let (loss, g) = engine.grad(&self.theta, batch)?;
+                    engine.sgd(&mut self.theta, &g, self.lr)?;
+                    loss_sum += loss;
+                }
+                OptState::Momentum { buf } => {
+                    let (loss, g) = engine.grad(&self.theta, batch)?;
+                    let mut buf_taken = std::mem::take(buf);
+                    engine.momentum(&mut self.theta, &g, &mut buf_taken, self.lr)?;
+                    if let OptState::Momentum { buf } = &mut self.opt {
+                        *buf = buf_taken;
+                    }
+                    loss_sum += loss;
+                }
+                OptState::AdaHessian { m, v, t } => {
+                    let z = self.probe_rng.rademacher(n);
+                    let (loss, g, d) = engine.grad_hess(&self.theta, batch, &z)?;
+                    *t += 1;
+                    let tt = *t;
+                    let mut m_taken = std::mem::take(m);
+                    let mut v_taken = std::mem::take(v);
+                    engine.adahessian(
+                        &mut self.theta,
+                        &g,
+                        &d,
+                        &mut m_taken,
+                        &mut v_taken,
+                        tt,
+                        self.lr,
+                    )?;
+                    if let OptState::AdaHessian { m, v, .. } = &mut self.opt {
+                        *m = m_taken;
+                        *v = v_taken;
+                    }
+                    loss_sum += loss;
+                }
+            }
+            self.steps += 1;
+        }
+        self.last_loss = loss_sum / tau as f32;
+        Ok(self.last_loss)
+    }
+
+    /// Record u_t = ln‖θ − θ̃_m‖ against the gossip estimate and return the
+    /// raw score a_t (None during warm-up). Called once per sync ATTEMPT —
+    /// worker-to-worker gossip still works while the master link is down,
+    /// so the score history keeps accumulating through failures.
+    pub fn observe_and_score(&mut self, master_estimate: &[f32]) -> Option<f64> {
+        let dist = l2_distance(&self.theta, master_estimate);
+        self.score.observe_distance(dist);
+        self.score.raw_score()
+    }
+
+    /// A suppressed sync attempt.
+    pub fn record_miss(&mut self) {
+        self.missed += 1;
+    }
+
+    /// A successful sync: adopt the post-elastic worker params.
+    pub fn complete_sync(&mut self, new_theta: Vec<f32>) {
+        self.theta = new_theta;
+        self.missed = 0;
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.batcher.as_ref().map(|b| b.epoch()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::score::geometric_weights;
+    use crate::engine::quad::QuadraticEngine;
+    use crate::optim::Optimizer;
+
+    fn worker(n: usize, opt: Optimizer) -> WorkerState {
+        WorkerState::new(
+            0,
+            vec![0.0; n],
+            OptState::new(opt, n),
+            0.05,
+            None,
+            geometric_weights(4, 0.5),
+            Rng::new(9),
+        )
+    }
+
+    #[test]
+    fn local_round_descends() {
+        let mut e = QuadraticEngine::new(32, 1, 0, 0.0, 0.0);
+        let mut w = worker(32, Optimizer::Sgd);
+        let l0 = w.local_round(&mut e, 4).unwrap();
+        for _ in 0..30 {
+            w.local_round(&mut e, 4).unwrap();
+        }
+        let l1 = w.local_round(&mut e, 4).unwrap();
+        assert!(l1 < l0 * 0.5, "{l1} !< {l0}/2");
+        assert_eq!(w.steps, 32 * 4);
+    }
+
+    #[test]
+    fn adahessian_round_updates_t() {
+        let mut e = QuadraticEngine::new(16, 2, 0, 0.0, 0.0);
+        let mut w = worker(16, Optimizer::AdaHessian);
+        w.local_round(&mut e, 3).unwrap();
+        match &w.opt {
+            OptState::AdaHessian { t, .. } => assert_eq!(*t, 3),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn momentum_buffer_persists_across_rounds() {
+        let mut e = QuadraticEngine::new(8, 3, 0, 0.0, 0.0);
+        let mut w = worker(8, Optimizer::Momentum);
+        w.local_round(&mut e, 2).unwrap();
+        match &w.opt {
+            OptState::Momentum { buf } => assert!(buf.iter().any(|&b| b != 0.0)),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn score_appears_after_two_observations() {
+        let mut w = worker(4, Optimizer::Sgd);
+        assert_eq!(w.observe_and_score(&[1.0, 0.0, 0.0, 0.0]), None);
+        let a = w.observe_and_score(&[2.0, 0.0, 0.0, 0.0]);
+        assert!(a.is_some());
+        assert!(a.unwrap() > 0.0, "distance grew -> positive slope");
+    }
+
+    #[test]
+    fn sync_lifecycle() {
+        let mut w = worker(4, Optimizer::Sgd);
+        w.record_miss();
+        w.record_miss();
+        assert_eq!(w.missed, 2);
+        w.complete_sync(vec![1.0; 4]);
+        assert_eq!(w.missed, 0);
+        assert_eq!(w.theta, vec![1.0; 4]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Per-worker mini-batch iterator: epoch-shuffled cycling over a worker's
+//! shard indices, filling caller-provided x/y1h buffers (no allocation in
+//! the training hot loop).
+
+use super::synth::{Dataset, IMAGE_PIXELS, NUM_CLASSES};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+pub struct Batcher {
+    data: Arc<Dataset>,
+    indices: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    rng: Rng,
+    epoch: u64,
+}
+
+impl Batcher {
+    pub fn new(data: Arc<Dataset>, indices: Vec<usize>, batch: usize, rng: Rng) -> Batcher {
+        assert!(batch > 0);
+        assert!(
+            indices.len() >= batch,
+            "shard smaller than one batch ({} < {batch})",
+            indices.len()
+        );
+        let mut b = Batcher { data, indices, cursor: 0, batch, rng, epoch: 0 };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.indices);
+        self.cursor = 0;
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Fill the next mini-batch; reshuffles and bumps the epoch counter when
+    /// the shard is exhausted (dropping any ragged tail, as the fixed-shape
+    /// AOT artifacts require full batches).
+    pub fn next_into(&mut self, x_out: &mut [f32], y_out: &mut [f32]) {
+        assert_eq!(x_out.len(), self.batch * IMAGE_PIXELS);
+        assert_eq!(y_out.len(), self.batch * NUM_CLASSES);
+        if self.cursor + self.batch > self.indices.len() {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let idxs = &self.indices[self.cursor..self.cursor + self.batch];
+        self.data.fill_batch(idxs, x_out, y_out);
+        self.cursor += self.batch;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn fixture() -> (Arc<Dataset>, Vec<usize>) {
+        let d = Arc::new(synth::dataset(100, 5));
+        let idx: Vec<usize> = (0..50).collect();
+        (d, idx)
+    }
+
+    #[test]
+    fn batches_have_valid_one_hots() {
+        let (d, idx) = fixture();
+        let mut b = Batcher::new(d, idx, 8, Rng::new(1));
+        let mut x = vec![0.0; 8 * IMAGE_PIXELS];
+        let mut y = vec![0.0; 8 * NUM_CLASSES];
+        for _ in 0..20 {
+            b.next_into(&mut x, &mut y);
+            for row in 0..8 {
+                let oh = &y[row * 10..(row + 1) * 10];
+                assert_eq!(oh.iter().filter(|&&v| v == 1.0).count(), 1);
+                assert_eq!(oh.iter().sum::<f32>(), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_advances_and_covers_shard() {
+        let (d, idx) = fixture();
+        let mut b = Batcher::new(d, idx.clone(), 10, Rng::new(2));
+        let mut x = vec![0.0; 10 * IMAGE_PIXELS];
+        let mut y = vec![0.0; 10 * NUM_CLASSES];
+        assert_eq!(b.epoch(), 0);
+        for _ in 0..5 {
+            b.next_into(&mut x, &mut y);
+        }
+        assert_eq!(b.epoch(), 0);
+        b.next_into(&mut x, &mut y);
+        assert_eq!(b.epoch(), 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (d, idx) = fixture();
+        let mut b1 = Batcher::new(d.clone(), idx.clone(), 8, Rng::new(9));
+        let mut b2 = Batcher::new(d, idx, 8, Rng::new(9));
+        let mut x1 = vec![0.0; 8 * IMAGE_PIXELS];
+        let mut y1 = vec![0.0; 8 * NUM_CLASSES];
+        let mut x2 = x1.clone();
+        let mut y2 = y1.clone();
+        for _ in 0..10 {
+            b1.next_into(&mut x1, &mut y1);
+            b2.next_into(&mut x2, &mut y2);
+            assert_eq!(x1, x2);
+            assert_eq!(y1, y2);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shard smaller")]
+    fn rejects_tiny_shard() {
+        let (d, _) = fixture();
+        Batcher::new(d, vec![1, 2, 3], 8, Rng::new(0));
+    }
+}

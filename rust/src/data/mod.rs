@@ -1,0 +1,10 @@
+//! Data substrate: synthetic-MNIST generation, overlap sharding (paper
+//! §V.A) and per-worker mini-batch iteration.
+
+pub mod batcher;
+pub mod shard;
+pub mod synth;
+
+pub use batcher::Batcher;
+pub use shard::ShardPlan;
+pub use synth::{Dataset, IMAGE_HW, IMAGE_PIXELS, NUM_CLASSES};

@@ -1,0 +1,126 @@
+//! Overlap sharding (paper §V.A): each worker receives the shared subset
+//! `O` plus a private disjoint subset `S_j`:
+//!
+//! ```text
+//! D_j = O ∪ S_j,   |O| = round(r·n),   |S_j| = ⌊(n−|O|)/k⌋,
+//! ∪_j S_j ⊆ D−O,   S_i ∩ S_j = ∅  (i≠j).
+//! ```
+//!
+//! The shared overlap gives every worker a common slice of the loss
+//! landscape, lowering the variance of the per-worker Hutchinson Hessian
+//! estimates — the paper's Fig. 3 sweeps the ratio r.
+
+use crate::util::rng::Rng;
+
+/// Index-level shard assignment over a dataset of `n` samples.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Indices shared by ALL workers (the overlap set O).
+    pub overlap: Vec<usize>,
+    /// Private indices per worker (the S_j), mutually disjoint.
+    pub private: Vec<Vec<usize>>,
+}
+
+impl ShardPlan {
+    /// Build the plan. `ratio` = |O|/n in [0,1). Leftover samples from the
+    /// floor division are dropped, matching the paper's ⌊(n−o)/k⌋.
+    pub fn build(n: usize, workers: usize, ratio: f64, rng: &mut Rng) -> ShardPlan {
+        assert!(workers > 0, "need at least one worker");
+        assert!((0.0..1.0).contains(&ratio), "overlap ratio must be in [0,1)");
+        let o = ((n as f64) * ratio).round() as usize;
+        let mut perm = rng.permutation(n);
+        let overlap: Vec<usize> = perm.drain(..o).collect();
+        let per = (n - o) / workers;
+        let mut private = Vec::with_capacity(workers);
+        for j in 0..workers {
+            private.push(perm[j * per..(j + 1) * per].to_vec());
+        }
+        ShardPlan { overlap, private }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.private.len()
+    }
+
+    /// The full dataset view for worker `j`: O ∪ S_j.
+    pub fn worker_indices(&self, j: usize) -> Vec<usize> {
+        let mut v = self.overlap.clone();
+        v.extend_from_slice(&self.private[j]);
+        v
+    }
+
+    /// Samples assigned to at least one worker (for coverage checks).
+    pub fn covered(&self) -> usize {
+        self.overlap.len() + self.private.iter().map(|p| p.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use std::collections::HashSet;
+
+    #[test]
+    fn paper_example_sizes() {
+        // n=60000, k=8, r=12.5% -> |O|=7500, |S_j|=6562
+        let mut rng = Rng::new(0);
+        let p = ShardPlan::build(60_000, 8, 0.125, &mut rng);
+        assert_eq!(p.overlap.len(), 7_500);
+        assert!(p.private.iter().all(|s| s.len() == 6_562));
+    }
+
+    #[test]
+    fn zero_overlap() {
+        let mut rng = Rng::new(1);
+        let p = ShardPlan::build(100, 4, 0.0, &mut rng);
+        assert!(p.overlap.is_empty());
+        assert_eq!(p.covered(), 100);
+    }
+
+    #[test]
+    fn privates_disjoint_and_exclude_overlap() {
+        let mut rng = Rng::new(2);
+        let p = ShardPlan::build(1000, 4, 0.25, &mut rng);
+        let overlap: HashSet<_> = p.overlap.iter().copied().collect();
+        let mut seen = HashSet::new();
+        for s in &p.private {
+            for &i in s {
+                assert!(!overlap.contains(&i), "private overlaps O");
+                assert!(seen.insert(i), "S_i ∩ S_j ≠ ∅");
+            }
+        }
+    }
+
+    #[test]
+    fn property_shard_invariants() {
+        proptest::check("shard invariants", 100, |g| {
+            let n = g.usize(10, 5_000);
+            let k = g.usize(1, 16);
+            let r = g.f64(0.0, 0.9);
+            let mut rng = Rng::new(g.u64());
+            let p = ShardPlan::build(n, k, r, &mut rng);
+            // |O| as specified
+            assert_eq!(p.overlap.len(), ((n as f64) * r).round() as usize);
+            // equal private sizes, floor division
+            let per = (n - p.overlap.len()) / k;
+            assert!(p.private.iter().all(|s| s.len() == per));
+            // all indices valid + disjointness of privates
+            let mut seen = HashSet::new();
+            for s in &p.private {
+                for &i in s {
+                    assert!(i < n);
+                    assert!(seen.insert(i));
+                }
+            }
+            for &i in &p.overlap {
+                assert!(i < n);
+                assert!(!seen.contains(&i));
+            }
+            // worker view size = |O| + per
+            assert_eq!(p.worker_indices(0).len(), p.overlap.len() + per);
+            // dropped samples < k (floor remainder)
+            assert!(n - p.covered() < k);
+        });
+    }
+}

@@ -1,0 +1,195 @@
+//! Synthetic-MNIST: procedural 28x28 10-class digit-glyph dataset.
+//!
+//! The paper trains on MNIST; this environment has no network access, so we
+//! substitute a deterministic synthetic dataset in the same difficulty
+//! regime (see DESIGN.md §2). Class templates are 7x7 digit skeletons shared
+//! verbatim with python/compile/datagen.py; each sample upsamples a template
+//! 3x, pastes it at a jittered offset into the 28x28 canvas, scales the ink
+//! intensity, and adds Gaussian pixel noise. Distribution-identical to the
+//! python generator (different PRNG, same parameters).
+
+use crate::util::rng::Rng;
+
+pub const IMAGE_HW: usize = 28;
+pub const IMAGE_PIXELS: usize = IMAGE_HW * IMAGE_HW;
+pub const NUM_CLASSES: usize = 10;
+
+/// 7x7 glyph templates; '#' = ink. Keep in sync with datagen.TEMPLATES.
+pub const TEMPLATES: [[&str; 7]; 10] = [
+    // 0
+    [".###...", "#...#..", "#...#..", "#...#..", "#...#..", "#...#..", ".###..."],
+    // 1
+    ["..#....", ".##....", "..#....", "..#....", "..#....", "..#....", ".###..."],
+    // 2
+    [".###...", "#...#..", "....#..", "...#...", "..#....", ".#.....", "#####.."],
+    // 3
+    [".###...", "#...#..", "....#..", "..##...", "....#..", "#...#..", ".###..."],
+    // 4
+    ["...#...", "..##...", ".#.#...", "#..#...", "#####..", "...#...", "...#..."],
+    // 5
+    ["#####..", "#......", "####...", "....#..", "....#..", "#...#..", ".###..."],
+    // 6
+    [".###...", "#......", "#......", "####...", "#...#..", "#...#..", ".###..."],
+    // 7
+    ["#####..", "....#..", "...#...", "..#....", ".#.....", ".#.....", ".#....."],
+    // 8
+    [".###...", "#...#..", "#...#..", ".###...", "#...#..", "#...#..", ".###..."],
+    // 9
+    [".###...", "#...#..", "#...#..", ".####..", "....#..", "....#..", ".###..."],
+];
+
+/// The dataset: row-major images, one label per image.
+pub struct Dataset {
+    /// `n * IMAGE_PIXELS` f32 in [0,1].
+    pub images: Vec<f32>,
+    /// `n` labels in 0..10.
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * IMAGE_PIXELS..(i + 1) * IMAGE_PIXELS]
+    }
+
+    /// One-hot encode labels for a set of indices into an output buffer
+    /// laid out `[len, 10]`.
+    pub fn fill_batch(&self, idxs: &[usize], x_out: &mut [f32], y_out: &mut [f32]) {
+        assert_eq!(x_out.len(), idxs.len() * IMAGE_PIXELS);
+        assert_eq!(y_out.len(), idxs.len() * NUM_CLASSES);
+        y_out.fill(0.0);
+        for (row, &i) in idxs.iter().enumerate() {
+            x_out[row * IMAGE_PIXELS..(row + 1) * IMAGE_PIXELS]
+                .copy_from_slice(self.image(i));
+            y_out[row * NUM_CLASSES + self.labels[i] as usize] = 1.0;
+        }
+    }
+}
+
+fn template_mask(class: usize) -> [[f32; 7]; 7] {
+    let mut m = [[0.0f32; 7]; 7];
+    for (i, row) in TEMPLATES[class].iter().enumerate() {
+        for (j, ch) in row.bytes().enumerate() {
+            if ch == b'#' {
+                m[i][j] = 1.0;
+            }
+        }
+    }
+    m
+}
+
+/// Render one sample of `class` into `out` (length IMAGE_PIXELS).
+pub fn render(class: usize, rng: &mut Rng, out: &mut [f32]) {
+    assert_eq!(out.len(), IMAGE_PIXELS);
+    let t = template_mask(class);
+    out.fill(0.0);
+    // 3x nearest upsample (7 -> 21) pasted at jittered offset in 0..8.
+    let dy = rng.usize_below(8);
+    let dx = rng.usize_below(8);
+    let ink = 0.7 + 0.3 * rng.f32();
+    for i in 0..21 {
+        for j in 0..21 {
+            let v = t[i / 3][j / 3];
+            if v > 0.0 {
+                out[(dy + i) * IMAGE_HW + (dx + j)] = ink;
+            }
+        }
+    }
+    for p in out.iter_mut() {
+        *p = (*p + rng.normal_f32(0.0, 0.15)).clamp(0.0, 1.0);
+    }
+}
+
+/// Generate a balanced dataset of `n` samples (round-robin classes, then a
+/// seeded shuffle — mirrors datagen.dataset).
+pub fn dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut images = vec![0.0f32; n * IMAGE_PIXELS];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let c = i % NUM_CLASSES;
+        labels[i] = c as u8;
+        render(c, &mut rng, &mut images[i * IMAGE_PIXELS..(i + 1) * IMAGE_PIXELS]);
+    }
+    // Shuffle images+labels with one permutation.
+    let perm = rng.permutation(n);
+    let mut shuffled_images = vec![0.0f32; n * IMAGE_PIXELS];
+    let mut shuffled_labels = vec![0u8; n];
+    for (dst, &src) in perm.iter().enumerate() {
+        shuffled_images[dst * IMAGE_PIXELS..(dst + 1) * IMAGE_PIXELS]
+            .copy_from_slice(&images[src * IMAGE_PIXELS..(src + 1) * IMAGE_PIXELS]);
+        shuffled_labels[dst] = labels[src];
+    }
+    Dataset { images: shuffled_images, labels: shuffled_labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn templates_are_distinct() {
+        let mut flat: Vec<Vec<u8>> = Vec::new();
+        for c in 0..10 {
+            let m = template_mask(c);
+            flat.push(m.iter().flatten().map(|&v| v as u8).collect());
+        }
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                assert_ne!(flat[i], flat[j], "templates {i} and {j} identical");
+            }
+        }
+    }
+
+    #[test]
+    fn render_in_range() {
+        let mut rng = Rng::new(0);
+        let mut img = vec![0.0; IMAGE_PIXELS];
+        render(3, &mut rng, &mut img);
+        assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        assert!(img.iter().sum::<f32>() > 5.0, "image has ink");
+    }
+
+    #[test]
+    fn dataset_balanced_and_deterministic() {
+        let d1 = dataset(200, 7);
+        let d2 = dataset(200, 7);
+        assert_eq!(d1.images, d2.images);
+        assert_eq!(d1.labels, d2.labels);
+        let mut counts = [0usize; 10];
+        for &l in &d1.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let d1 = dataset(50, 1);
+        let d2 = dataset(50, 2);
+        assert_ne!(d1.images, d2.images);
+    }
+
+    #[test]
+    fn fill_batch_layout() {
+        let d = dataset(20, 3);
+        let idxs = [0usize, 5, 19];
+        let mut x = vec![0.0; 3 * IMAGE_PIXELS];
+        let mut y = vec![0.0; 3 * NUM_CLASSES];
+        d.fill_batch(&idxs, &mut x, &mut y);
+        assert_eq!(&x[..IMAGE_PIXELS], d.image(0));
+        assert_eq!(&x[2 * IMAGE_PIXELS..], d.image(19));
+        for (row, &i) in idxs.iter().enumerate() {
+            let oh = &y[row * 10..(row + 1) * 10];
+            assert_eq!(oh.iter().sum::<f32>(), 1.0);
+            assert_eq!(oh[d.labels[i] as usize], 1.0);
+        }
+    }
+}

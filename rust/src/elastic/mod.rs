@@ -1,0 +1,8 @@
+//! The paper's contribution: raw-score tracking (eq. 10) and the dynamic
+//! weight maps h1/h2 (eqs. 12-13) that replace EASGD's fixed moving rate.
+
+pub mod score;
+pub mod weight;
+
+pub use score::{geometric_weights, ScoreTracker};
+pub use weight::{h1, h2, Detector, DynamicParams, WeightPolicy};

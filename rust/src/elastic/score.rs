@@ -1,0 +1,205 @@
+//! The raw score (paper eq. 10): a recency-weighted sum of successive
+//! differences of u_t = log ||theta_w - theta_m_estimate||.
+//!
+//! A `ScoreTracker` stores the last p+1 values of u (p differences) in a
+//! ring buffer and evaluates
+//!
+//! ```text
+//! a_t = Σ_{j=0..p-1} c_j (u_{t-j} − u_{t-j-1}),   Σ c_j = 1,
+//! ```
+//!
+//! with c_0 (the most recent difference) the largest — "preferably, we want
+//! to apply larger weights on the most recent terms".
+
+/// Default history depth p (number of differences).
+pub const DEFAULT_P: usize = 4;
+
+/// Geometric recency weights c_j ∝ decay^j, normalised to sum 1.
+pub fn geometric_weights(p: usize, decay: f64) -> Vec<f64> {
+    assert!(p >= 1);
+    assert!(decay > 0.0 && decay <= 1.0);
+    let mut w: Vec<f64> = (0..p).map(|j| decay.powi(j as i32)).collect();
+    let s: f64 = w.iter().sum();
+    for x in &mut w {
+        *x /= s;
+    }
+    w
+}
+
+#[derive(Clone, Debug)]
+pub struct ScoreTracker {
+    /// c_j, j=0 is the most recent difference. Must sum to 1.
+    weights: Vec<f64>,
+    /// Ring of the last (p+1) u values, newest last.
+    history: Vec<f64>,
+}
+
+impl ScoreTracker {
+    pub fn new(weights: Vec<f64>) -> ScoreTracker {
+        let s: f64 = weights.iter().sum();
+        assert!(
+            (s - 1.0).abs() < 1e-9,
+            "raw-score weights must sum to 1 (got {s})"
+        );
+        assert!(!weights.is_empty());
+        ScoreTracker { weights, history: Vec::new() }
+    }
+
+    pub fn with_default() -> ScoreTracker {
+        ScoreTracker::new(geometric_weights(DEFAULT_P, 0.5))
+    }
+
+    pub fn p(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Record u_t = ln(distance). Distances of exactly zero are clamped
+    /// (log would be -inf; can occur at round 0 when all replicas share the
+    /// master's init).
+    pub fn observe_distance(&mut self, dist: f64) {
+        let u = dist.max(1e-12).ln();
+        self.observe_u(u);
+    }
+
+    pub fn observe_u(&mut self, u: f64) {
+        self.history.push(u);
+        let cap = self.weights.len() + 1;
+        if self.history.len() > cap {
+            let drop = self.history.len() - cap;
+            self.history.drain(..drop);
+        }
+    }
+
+    /// Number of differences currently available.
+    pub fn diffs_available(&self) -> usize {
+        self.history.len().saturating_sub(1)
+    }
+
+    /// Raw score a_t, or None until at least one difference exists.
+    ///
+    /// With fewer than p differences the available ones are used with their
+    /// weights renormalised — the warm-up behaviour (first few rounds)
+    /// otherwise biases a toward 0 and masks early failures.
+    pub fn raw_score(&self) -> Option<f64> {
+        let d = self.diffs_available();
+        if d == 0 {
+            return None;
+        }
+        let used = d.min(self.weights.len());
+        let wsum: f64 = self.weights[..used].iter().sum();
+        let mut a = 0.0;
+        let h = &self.history;
+        let last = h.len() - 1;
+        for j in 0..used {
+            let diff = h[last - j] - h[last - j - 1];
+            a += self.weights[j] * diff;
+        }
+        Some(a / wsum)
+    }
+
+    pub fn reset(&mut self) {
+        self.history.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn weights_sum_to_one_and_decay() {
+        let w = geometric_weights(4, 0.5);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(w[0] > w[1] && w[1] > w[2] && w[2] > w[3]);
+        // 0.5-decay over 4: 8/15, 4/15, 2/15, 1/15
+        assert!((w[0] - 8.0 / 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_score_without_history() {
+        let t = ScoreTracker::with_default();
+        assert_eq!(t.raw_score(), None);
+    }
+
+    #[test]
+    fn constant_distance_scores_zero() {
+        let mut t = ScoreTracker::with_default();
+        for _ in 0..10 {
+            t.observe_distance(3.0);
+        }
+        assert!(t.raw_score().unwrap().abs() < 1e-12);
+    }
+
+    #[test]
+    fn growing_distance_scores_positive() {
+        let mut t = ScoreTracker::with_default();
+        for i in 1..=6 {
+            t.observe_distance(i as f64);
+        }
+        assert!(t.raw_score().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn shrinking_distance_scores_negative() {
+        let mut t = ScoreTracker::with_default();
+        for i in (1..=6).rev() {
+            t.observe_distance(i as f64);
+        }
+        assert!(t.raw_score().unwrap() < 0.0);
+    }
+
+    #[test]
+    fn single_diff_equals_that_diff() {
+        let mut t = ScoreTracker::with_default();
+        t.observe_u(1.0);
+        t.observe_u(1.5);
+        assert!((t.raw_score().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recency_weighting_dominates() {
+        // long stable history then a sharp recent jump: the score must be
+        // pulled strongly toward the jump.
+        let mut t = ScoreTracker::with_default();
+        for _ in 0..5 {
+            t.observe_u(0.0);
+        }
+        t.observe_u(1.0); // recent diff = +1
+        let a = t.raw_score().unwrap();
+        assert!(a > 0.5, "{a}");
+    }
+
+    #[test]
+    fn zero_distance_is_clamped() {
+        let mut t = ScoreTracker::with_default();
+        t.observe_distance(0.0);
+        t.observe_distance(0.0);
+        let a = t.raw_score().unwrap();
+        assert!(a.is_finite());
+        assert!(a.abs() < 1e-9);
+    }
+
+    #[test]
+    fn property_score_is_convex_combination_of_diffs() {
+        proptest::check("raw score within diff bounds", 200, |g| {
+            let p = g.usize(1, 8);
+            let mut t = ScoreTracker::new(geometric_weights(p, g.f64(0.2, 1.0)));
+            let n = g.usize(2, 20);
+            let mut us = Vec::new();
+            for _ in 0..n {
+                let u = g.f64(-5.0, 5.0);
+                us.push(u);
+                t.observe_u(u);
+            }
+            let a = t.raw_score().unwrap();
+            // a is a convex combination of the last min(p, n-1) diffs
+            let diffs: Vec<f64> = us.windows(2).map(|w| w[1] - w[0]).collect();
+            let used = diffs.len().min(p);
+            let tail = &diffs[diffs.len() - used..];
+            let lo = tail.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = tail.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert!(a >= lo - 1e-9 && a <= hi + 1e-9, "a={a} not in [{lo},{hi}]");
+        });
+    }
+}

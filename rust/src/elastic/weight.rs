@@ -1,0 +1,252 @@
+//! The dynamic weight maps h1/h2 (paper §V.B) and the weighting policies
+//! behind the six compared methods.
+//!
+//! Piece-wise linear maps from the raw score `a` to the elastic rates, for
+//! a knee constant k < 0:
+//!
+//! ```text
+//! h1(a) = 1                      a < k        (failure: full pull onto master)
+//!       = 1 + (1-α)/k · (a-k)    k ≤ a ≤ 0    (linear blend)
+//!       = α                      a > 0        (healthy: plain EASGD)
+//!
+//! h2(a) = 0                      a < k        (failure: no influence on master)
+//!       = -α/k · a + α           k ≤ a ≤ 0
+//!       = α                      a > 0
+//! ```
+//!
+//! Both are continuous; h1 interpolates 1→α, h2 interpolates 0→α over [k,0].
+//!
+//! ## The sign convention (DESIGN.md §6, ablation 2)
+//!
+//! The paper states "if a worker fails, its raw score becomes NEGATIVE in
+//! the next few time steps" and wires the failure branch to a<k<0. The
+//! mechanism that makes this coherent is the **recovery dip**: when a
+//! stale worker reconnects, its first sync pulls it toward the master with
+//! α, collapsing the log-distance — diff ≈ ln(1−α) ≈ −0.105 at α=0.1,
+//! which the recency weighting maps to a ≈ −0.056, just past the knee
+//! k=−0.05. So the failure branch (h1→1 teleport, h2→0 no influence)
+//! fires on the syncs immediately AFTER reconnection, while the recovering
+//! model is still stale — one sync later than the oracle (EAHES-OM), which
+//! is exactly why the paper finds OM ≥ DEAHES-O. Our measurements confirm
+//! this ordering under burst outages (EXPERIMENTS.md §Detector).
+//!
+//! Both conventions are implemented:
+//!   * `Detector::PaperSign` (default) — a used as printed (failure ⇔
+//!     a < k). Validated: reproduces the paper's ordering.
+//!   * `Detector::DriftSign` — a negated, so a growing distance lands in
+//!     the failure branch ("detect the drift itself"). Measured to be
+//!     actively harmful: healthy transients (distance growing toward its
+//!     steady state) trigger h2=0 and starve the master — a feedback loop
+//!     that can stall training (EXPERIMENTS.md §Detector). Kept as the
+//!     cautionary ablation.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Detector {
+    /// Use `a` exactly as defined in eq. (10).
+    PaperSign,
+    /// Use `-a`: drift (growing distance) triggers the failure branch.
+    DriftSign,
+}
+
+impl Detector {
+    pub fn parse(s: &str) -> Option<Detector> {
+        match s {
+            "paper-sign" => Some(Detector::PaperSign),
+            "drift-sign" => Some(Detector::DriftSign),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Detector::PaperSign => "paper-sign",
+            Detector::DriftSign => "drift-sign",
+        }
+    }
+
+    fn effective(self, a: f64) -> f64 {
+        match self {
+            Detector::PaperSign => a,
+            Detector::DriftSign => -a,
+        }
+    }
+}
+
+/// h1: the pull exerted ON the worker (eq. 12).
+pub fn h1(a: f64, alpha: f64, k: f64) -> f64 {
+    debug_assert!(k < 0.0, "knee must be negative");
+    if a < k {
+        1.0
+    } else if a <= 0.0 {
+        1.0 + (1.0 - alpha) / k * (a - k)
+    } else {
+        alpha
+    }
+}
+
+/// h2: the influence the worker exerts on the master (eq. 13).
+pub fn h2(a: f64, alpha: f64, k: f64) -> f64 {
+    debug_assert!(k < 0.0, "knee must be negative");
+    if a < k {
+        0.0
+    } else if a <= 0.0 {
+        -alpha / k * a + alpha
+    } else {
+        alpha
+    }
+}
+
+/// Parameters of the dynamic policy.
+#[derive(Clone, Copy, Debug)]
+pub struct DynamicParams {
+    pub alpha: f64,
+    /// Knee constant k < 0.
+    pub knee: f64,
+    pub detector: Detector,
+}
+
+impl Default for DynamicParams {
+    fn default() -> Self {
+        DynamicParams { alpha: 0.1, knee: -0.05, detector: Detector::PaperSign }
+    }
+}
+
+/// The weighting policy — one of the three regimes the paper compares.
+#[derive(Clone, Copy, Debug)]
+pub enum WeightPolicy {
+    /// Fixed α both ways (EASGD / EAMSGD / EAHES / EAHES-O).
+    Fixed { alpha: f64 },
+    /// Oracle: knows the worker failed (EAHES-OM). On the first successful
+    /// sync after ≥1 missed syncs: full correction (h1=1, h2=0).
+    Oracle { alpha: f64 },
+    /// Paper's contribution: weights from the raw score (DEAHES-O).
+    Dynamic(DynamicParams),
+}
+
+impl WeightPolicy {
+    /// Compute (h1, h2) for a sync.
+    ///
+    /// `raw_score` — the worker's a_t (None during warm-up);
+    /// `missed`    — consecutive suppressed syncs before this one (oracle
+    ///               knowledge; only the Oracle policy may look at it).
+    pub fn weights(&self, raw_score: Option<f64>, missed: u32) -> (f64, f64) {
+        match *self {
+            WeightPolicy::Fixed { alpha } => (alpha, alpha),
+            WeightPolicy::Oracle { alpha } => {
+                if missed > 0 {
+                    (1.0, 0.0)
+                } else {
+                    (alpha, alpha)
+                }
+            }
+            WeightPolicy::Dynamic(p) => match raw_score {
+                // Warm-up: approximate EASGD until a score exists.
+                None => (p.alpha, p.alpha),
+                Some(a) => {
+                    let ae = p.detector.effective(a);
+                    (h1(ae, p.alpha, p.knee), h2(ae, p.alpha, p.knee))
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    const A: f64 = 0.1;
+    const K: f64 = -0.05;
+
+    #[test]
+    fn h1_branches() {
+        assert_eq!(h1(-1.0, A, K), 1.0); // deep failure
+        assert_eq!(h1(0.5, A, K), A); // healthy
+        assert!((h1(K, A, K) - 1.0).abs() < 1e-12); // continuity at k
+        assert!((h1(0.0, A, K) - A).abs() < 1e-12); // continuity at 0
+        let mid = h1(K / 2.0, A, K);
+        assert!(mid > A && mid < 1.0);
+    }
+
+    #[test]
+    fn h2_branches() {
+        assert_eq!(h2(-1.0, A, K), 0.0);
+        assert_eq!(h2(0.5, A, K), A);
+        assert!((h2(K, A, K)).abs() < 1e-12);
+        assert!((h2(0.0, A, K) - A).abs() < 1e-12);
+        let mid = h2(K / 2.0, A, K);
+        assert!(mid > 0.0 && mid < A);
+    }
+
+    #[test]
+    fn property_h_maps_bounded_and_monotone() {
+        proptest::check("h1/h2 bounded + monotone", 300, |g| {
+            let alpha = g.f64(0.01, 0.9);
+            let k = -g.f64(1e-4, 1.0);
+            let a1 = g.f64_edgy(-2.0, 2.0);
+            let a2 = g.f64_edgy(-2.0, 2.0);
+            let (lo, hi) = if a1 <= a2 { (a1, a2) } else { (a2, a1) };
+            // bounds
+            for a in [lo, hi] {
+                let v1 = h1(a, alpha, k);
+                let v2 = h2(a, alpha, k);
+                // 1e-9 tolerance: h1(0) evaluates 1+(1-α)/k·(0-k) which can
+                // round one ulp below α.
+                assert!(v1 >= alpha - 1e-9 && v1 <= 1.0 + 1e-9, "h1={v1}");
+                assert!(v2 >= -1e-9 && v2 <= alpha + 1e-9, "h2={v2}");
+            }
+            // h1 non-increasing, h2 non-decreasing in a
+            assert!(h1(lo, alpha, k) >= h1(hi, alpha, k) - 1e-12);
+            assert!(h2(lo, alpha, k) <= h2(hi, alpha, k) + 1e-12);
+        });
+    }
+
+    #[test]
+    fn fixed_policy_ignores_everything() {
+        let p = WeightPolicy::Fixed { alpha: 0.1 };
+        assert_eq!(p.weights(Some(-99.0), 5), (0.1, 0.1));
+        assert_eq!(p.weights(None, 0), (0.1, 0.1));
+    }
+
+    #[test]
+    fn oracle_policy_uses_missed() {
+        let p = WeightPolicy::Oracle { alpha: 0.1 };
+        assert_eq!(p.weights(None, 0), (0.1, 0.1));
+        assert_eq!(p.weights(None, 3), (1.0, 0.0));
+    }
+
+    #[test]
+    fn dynamic_policy_detects_drift_with_drift_sign() {
+        let p = WeightPolicy::Dynamic(DynamicParams {
+            alpha: 0.1,
+            knee: -0.05,
+            detector: Detector::DriftSign,
+        });
+        // strongly growing distance (a = +0.5) => failure branch
+        let (h1v, h2v) = p.weights(Some(0.5), 0);
+        assert_eq!((h1v, h2v), (1.0, 0.0));
+        // stable/healthy (a slightly negative => healthy under drift-sign)
+        let (h1v, h2v) = p.weights(Some(-0.01), 0);
+        assert_eq!((h1v, h2v), (0.1, 0.1));
+    }
+
+    #[test]
+    fn dynamic_policy_paper_sign_matches_printed_convention() {
+        let p = WeightPolicy::Dynamic(DynamicParams {
+            alpha: 0.1,
+            knee: -0.05,
+            detector: Detector::PaperSign,
+        });
+        let (h1v, h2v) = p.weights(Some(-0.5), 0); // a < k
+        assert_eq!((h1v, h2v), (1.0, 0.0));
+        let (h1v, h2v) = p.weights(Some(0.5), 0);
+        assert_eq!((h1v, h2v), (0.1, 0.1));
+    }
+
+    #[test]
+    fn dynamic_warmup_approximates_easgd() {
+        let p = WeightPolicy::Dynamic(DynamicParams::default());
+        assert_eq!(p.weights(None, 0), (0.1, 0.1));
+    }
+}

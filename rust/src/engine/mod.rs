@@ -1,0 +1,84 @@
+//! The compute engine abstraction.
+//!
+//! A worker/master needs five operations: gradient, gradient+Hessian-diag,
+//! an optimizer update, the elastic pair update, and evaluation. Two
+//! engines implement them:
+//!
+//!   * [`xla::XlaEngine`] — the real path: executes the AOT HLO artifacts
+//!     through PJRT. `OptimImpl` selects whether the *update rules* also run
+//!     through the L1 pallas kernels (default) or the rust mirrors
+//!     (`--native-opt`, an ablation isolating PJRT call overhead).
+//!   * [`quad::QuadraticEngine`] — a closed-form synthetic quadratic
+//!     problem with exact gradients and Hessian diagonal. Used by the
+//!     coordinator unit/property tests (fast, deterministic, no PJRT) and
+//!     the convergence sanity benches.
+//!
+//! Engines are created inside the thread that uses them (the xla crate's
+//! client is not Send), via an [`EngineFactory`].
+
+pub mod quad;
+pub mod xla;
+
+use anyhow::Result;
+
+/// A training mini-batch view (flat, row-major).
+pub struct BatchRef<'a> {
+    pub x: &'a [f32],
+    pub y1h: &'a [f32],
+}
+
+pub trait Engine {
+    fn param_count(&self) -> usize;
+
+    /// (mean loss, gradient).
+    fn grad(&mut self, theta: &[f32], batch: BatchRef<'_>) -> Result<(f32, Vec<f32>)>;
+
+    /// (mean loss, gradient, spatially-averaged Hutchinson Hessian diag).
+    /// `z` is the caller-supplied Rademacher probe.
+    fn grad_hess(
+        &mut self,
+        theta: &[f32],
+        batch: BatchRef<'_>,
+        z: &[f32],
+    ) -> Result<(f32, Vec<f32>, Vec<f32>)>;
+
+    /// theta <- theta - lr*g (in place).
+    fn sgd(&mut self, theta: &mut Vec<f32>, g: &[f32], lr: f32) -> Result<()>;
+
+    /// Fused momentum update (theta, buf in place).
+    fn momentum(&mut self, theta: &mut Vec<f32>, g: &[f32], buf: &mut Vec<f32>, lr: f32)
+        -> Result<()>;
+
+    /// Fused AdaHessian update (theta, m, v in place); `t` is 1-based.
+    #[allow(clippy::too_many_arguments)]
+    fn adahessian(
+        &mut self,
+        theta: &mut Vec<f32>,
+        g: &[f32],
+        d: &[f32],
+        m: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        t: u64,
+        lr: f32,
+    ) -> Result<()>;
+
+    /// Elastic pair update (paper eqs. 12-13), both vectors in place.
+    fn elastic(&mut self, tw: &mut Vec<f32>, tm: &mut Vec<f32>, h1: f32, h2: f32) -> Result<()>;
+
+    /// (correct_count, summed_loss) over one eval batch.
+    fn eval(&mut self, theta: &[f32], batch: BatchRef<'_>) -> Result<(f32, f32)>;
+
+    /// Eval batch size this engine was compiled for.
+    fn eval_batch_size(&self) -> usize;
+
+    /// Train batch size this engine was compiled for.
+    fn train_batch_size(&self) -> usize;
+
+    /// Human-readable perf counters (empty if the engine keeps none).
+    fn perf_summary(&self) -> String {
+        String::new()
+    }
+}
+
+/// Builds an engine inside the consuming thread.
+pub type EngineFactory = std::sync::Arc<dyn Fn() -> Result<Box<dyn Engine>> + Send + Sync>;

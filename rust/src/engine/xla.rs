@@ -1,0 +1,257 @@
+//! The production engine: every operation executes an AOT HLO artifact via
+//! PJRT. Python authored the graphs once at build time; at run time this is
+//! rust -> PJRT C API -> compiled XLA executable, nothing else.
+
+use super::{BatchRef, Engine};
+use crate::optim::native;
+use crate::runtime::{Arg, Manifest, XlaRuntime};
+use anyhow::{ensure, Result};
+
+/// Where the optimizer/elastic UPDATE RULES execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimImpl {
+    /// Through the L1 pallas-kernel artifacts (the paper path).
+    Kernels,
+    /// Rust mirrors (ablation: isolates PJRT dispatch overhead; numerics
+    /// are identical to f32 tolerance — asserted by integration tests).
+    Native,
+}
+
+pub struct XlaEngine {
+    rt: XlaRuntime,
+    n: usize,
+    batch_train: usize,
+    batch_eval: usize,
+    x_train_shape: Vec<usize>,
+    x_eval_shape: Vec<usize>,
+    num_classes: usize,
+    optim: OptimImpl,
+    hp: crate::runtime::artifacts::Hyperparams,
+    conv_segments: Vec<(usize, usize, usize)>,
+}
+
+/// Artifacts a worker role needs (gradients + its optimizer update).
+pub const WORKER_ARTIFACTS: [&str; 5] = ["grad", "grad_hess", "adahessian", "momentum", "sgd"];
+/// Artifacts the master role needs (elastic update + evaluation).
+pub const MASTER_ARTIFACTS: [&str; 2] = ["elastic", "eval"];
+
+impl XlaEngine {
+    /// Load with an explicit artifact subset ([] = all).
+    pub fn with_artifacts(
+        manifest: &Manifest,
+        names: &[&str],
+        optim: OptimImpl,
+    ) -> Result<XlaEngine> {
+        let rt = XlaRuntime::load(manifest, names)?;
+        Ok(XlaEngine {
+            rt,
+            n: manifest.param_count,
+            batch_train: manifest.batch_train,
+            batch_eval: manifest.batch_eval,
+            x_train_shape: manifest.x_train_shape(),
+            x_eval_shape: manifest.x_eval_shape(),
+            num_classes: manifest.num_classes,
+            optim,
+            hp: manifest.hyperparams.clone(),
+            conv_segments: manifest
+                .conv_segments
+                .iter()
+                .map(|c| (c.offset, c.n_blocks, c.block))
+                .collect(),
+        })
+    }
+
+    pub fn new(manifest: &Manifest, optim: OptimImpl) -> Result<XlaEngine> {
+        Self::with_artifacts(manifest, &[], optim)
+    }
+
+    pub fn compile_secs(&self) -> f64 {
+        self.rt.compile_secs()
+    }
+
+    pub fn runtime(&mut self) -> &mut XlaRuntime {
+        &mut self.rt
+    }
+
+    fn scalar_of(v: &[f32]) -> f32 {
+        debug_assert_eq!(v.len(), 1);
+        v[0]
+    }
+}
+
+impl Engine for XlaEngine {
+    fn param_count(&self) -> usize {
+        self.n
+    }
+
+    fn train_batch_size(&self) -> usize {
+        self.batch_train
+    }
+
+    fn eval_batch_size(&self) -> usize {
+        self.batch_eval
+    }
+
+    fn grad(&mut self, theta: &[f32], batch: BatchRef<'_>) -> Result<(f32, Vec<f32>)> {
+        ensure!(theta.len() == self.n);
+        let y_shape = [self.batch_train, self.num_classes];
+        let mut out = self.rt.call(
+            "grad",
+            &[
+                Arg::Tensor(theta, &[self.n]),
+                Arg::Tensor(batch.x, &self.x_train_shape),
+                Arg::Tensor(batch.y1h, &y_shape),
+            ],
+        )?;
+        let g = out.pop().unwrap();
+        let loss = Self::scalar_of(&out.pop().unwrap());
+        Ok((loss, g))
+    }
+
+    fn grad_hess(
+        &mut self,
+        theta: &[f32],
+        batch: BatchRef<'_>,
+        z: &[f32],
+    ) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        ensure!(theta.len() == self.n && z.len() == self.n);
+        let y_shape = [self.batch_train, self.num_classes];
+        let mut out = self.rt.call(
+            "grad_hess",
+            &[
+                Arg::Tensor(theta, &[self.n]),
+                Arg::Tensor(batch.x, &self.x_train_shape),
+                Arg::Tensor(batch.y1h, &y_shape),
+                Arg::Tensor(z, &[self.n]),
+            ],
+        )?;
+        let d = out.pop().unwrap();
+        let g = out.pop().unwrap();
+        let loss = Self::scalar_of(&out.pop().unwrap());
+        Ok((loss, g, d))
+    }
+
+    fn sgd(&mut self, theta: &mut Vec<f32>, g: &[f32], lr: f32) -> Result<()> {
+        if self.optim == OptimImpl::Native {
+            native::sgd_step(theta, g, lr);
+            return Ok(());
+        }
+        let mut out = self.rt.call(
+            "sgd",
+            &[Arg::Tensor(theta, &[self.n]), Arg::Tensor(g, &[self.n]), Arg::Scalar(lr)],
+        )?;
+        *theta = out.pop().unwrap();
+        Ok(())
+    }
+
+    fn momentum(
+        &mut self,
+        theta: &mut Vec<f32>,
+        g: &[f32],
+        buf: &mut Vec<f32>,
+        lr: f32,
+    ) -> Result<()> {
+        if self.optim == OptimImpl::Native {
+            native::momentum_step(theta, g, buf, lr, self.hp.momentum as f32);
+            return Ok(());
+        }
+        let mut out = self.rt.call(
+            "momentum",
+            &[
+                Arg::Tensor(theta, &[self.n]),
+                Arg::Tensor(g, &[self.n]),
+                Arg::Tensor(buf, &[self.n]),
+                Arg::Scalar(lr),
+            ],
+        )?;
+        *buf = out.pop().unwrap();
+        *theta = out.pop().unwrap();
+        Ok(())
+    }
+
+    fn adahessian(
+        &mut self,
+        theta: &mut Vec<f32>,
+        g: &[f32],
+        d: &[f32],
+        m: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        t: u64,
+        lr: f32,
+    ) -> Result<()> {
+        if self.optim == OptimImpl::Native {
+            native::adahessian_step(
+                theta,
+                g,
+                d,
+                m,
+                v,
+                t,
+                lr,
+                self.hp.beta1 as f32,
+                self.hp.beta2 as f32,
+                self.hp.eps as f32,
+            );
+            return Ok(());
+        }
+        let mut out = self.rt.call(
+            "adahessian",
+            &[
+                Arg::Tensor(theta, &[self.n]),
+                Arg::Tensor(g, &[self.n]),
+                Arg::Tensor(d, &[self.n]),
+                Arg::Tensor(m, &[self.n]),
+                Arg::Tensor(v, &[self.n]),
+                Arg::Scalar(t as f32),
+                Arg::Scalar(lr),
+            ],
+        )?;
+        *v = out.pop().unwrap();
+        *m = out.pop().unwrap();
+        *theta = out.pop().unwrap();
+        Ok(())
+    }
+
+    fn elastic(&mut self, tw: &mut Vec<f32>, tm: &mut Vec<f32>, h1: f32, h2: f32) -> Result<()> {
+        if self.optim == OptimImpl::Native {
+            native::elastic_step(tw, tm, h1, h2);
+            return Ok(());
+        }
+        let mut out = self.rt.call(
+            "elastic",
+            &[
+                Arg::Tensor(tw, &[self.n]),
+                Arg::Tensor(tm, &[self.n]),
+                Arg::Scalar(h1),
+                Arg::Scalar(h2),
+            ],
+        )?;
+        *tm = out.pop().unwrap();
+        *tw = out.pop().unwrap();
+        Ok(())
+    }
+
+    fn eval(&mut self, theta: &[f32], batch: BatchRef<'_>) -> Result<(f32, f32)> {
+        let y_shape = [self.batch_eval, self.num_classes];
+        let out = self.rt.call(
+            "eval",
+            &[
+                Arg::Tensor(theta, &[self.n]),
+                Arg::Tensor(batch.x, &self.x_eval_shape),
+                Arg::Tensor(batch.y1h, &y_shape),
+            ],
+        )?;
+        Ok((Self::scalar_of(&out[0]), Self::scalar_of(&out[1])))
+    }
+
+    fn perf_summary(&self) -> String {
+        self.rt.stats_summary()
+    }
+}
+
+/// Conv segments as tuples, for the native spatial-averaging mirror.
+impl XlaEngine {
+    pub fn conv_segments(&self) -> &[(usize, usize, usize)] {
+        &self.conv_segments
+    }
+}

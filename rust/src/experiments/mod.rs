@@ -1,0 +1,18 @@
+//! Experiment drivers regenerating the paper's figures and summary table.
+//!
+//! | id    | paper artifact                                           | fn |
+//! |-------|----------------------------------------------------------|----|
+//! | Fig 3 | overlap-ratio sweep on EAHES (test acc vs rounds)        | [`fig3_overlap_sweep`] |
+//! | Fig 4 | test accuracy vs rounds, 6 methods × k∈{4,8} × τ∈{1,2,4} | [`fig45_grid`] |
+//! | Fig 5 | training loss vs rounds, same grid                       | [`fig45_grid`] |
+//! | §VII  | final-accuracy ordering table                            | [`summary_table`] |
+//!
+//! Every driver averages over `seeds` runs (the paper uses 3) and returns
+//! per-round mean series, so the bench binaries and examples print exactly
+//! the rows/series the paper plots.
+
+pub mod runner;
+
+pub use runner::{
+    averaged_run, fig3_overlap_sweep, fig45_grid, summary_table, AveragedSeries, GridCell,
+};

@@ -1,0 +1,203 @@
+//! Multi-seed experiment execution and the figure sweeps.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::sim;
+use crate::strategies::Method;
+use crate::util::stats::mean;
+use crate::{log_info, log_warn};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// Per-round series averaged over seeds.
+#[derive(Clone, Debug)]
+pub struct AveragedSeries {
+    pub label: String,
+    pub rounds: Vec<u64>,
+    pub test_acc: Vec<f64>,
+    pub test_loss: Vec<f64>,
+    pub train_loss: Vec<f64>,
+    /// Mean of each run's tail accuracy (last 10 eval points).
+    pub final_acc_mean: f64,
+    pub final_acc_std: f64,
+    pub final_train_loss: f64,
+    pub wall_secs: f64,
+    pub virtual_secs: f64,
+}
+
+/// Run `cfg` once per seed offset and average the per-round series.
+pub fn averaged_run(cfg: &ExperimentConfig, seeds: u64, label: &str) -> Result<AveragedSeries> {
+    assert!(seeds >= 1);
+    let mut per_seed: Vec<sim::RunResult> = Vec::new();
+    for s in 0..seeds {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed + s * 1_000;
+        let r = sim::run(&c)?;
+        log_info!(
+            "{label} seed {}: final acc {:.4} ({} rounds, {:.1}s wall)",
+            c.seed,
+            r.final_acc(),
+            c.rounds,
+            r.wall_secs
+        );
+        per_seed.push(r);
+    }
+    // Align on the first run's eval rounds (identical by construction).
+    let rounds: Vec<u64> = per_seed[0].log.records.iter().map(|r| r.round).collect();
+    let npts = per_seed
+        .iter()
+        .map(|r| r.log.records.len())
+        .min()
+        .unwrap_or(0);
+    if per_seed.iter().any(|r| r.log.records.len() != npts) {
+        log_warn!("{label}: eval-point counts differ across seeds; truncating to {npts}");
+    }
+    let avg_at = |f: &dyn Fn(&crate::metrics::RoundRecord) -> f64, i: usize| -> f64 {
+        mean(&per_seed.iter().map(|r| f(&r.log.records[i])).collect::<Vec<_>>())
+    };
+    let mut test_acc = Vec::with_capacity(npts);
+    let mut test_loss = Vec::with_capacity(npts);
+    let mut train_loss = Vec::with_capacity(npts);
+    for i in 0..npts {
+        test_acc.push(avg_at(&|r| r.test_acc, i));
+        test_loss.push(avg_at(&|r| r.test_loss, i));
+        train_loss.push(avg_at(&|r| r.train_loss, i));
+    }
+    let tails: Vec<f64> = per_seed.iter().map(|r| r.log.tail_acc(10)).collect();
+    let tail_mean = mean(&tails);
+    let tail_std = crate::util::stats::std_dev(&tails);
+    Ok(AveragedSeries {
+        label: label.to_string(),
+        rounds: rounds[..npts].to_vec(),
+        test_acc,
+        test_loss,
+        train_loss,
+        final_acc_mean: tail_mean,
+        final_acc_std: tail_std,
+        final_train_loss: mean(
+            &per_seed.iter().map(|r| r.log.tail_train_loss(10)).collect::<Vec<_>>(),
+        ),
+        wall_secs: per_seed.iter().map(|r| r.wall_secs).sum(),
+        virtual_secs: mean(&per_seed.iter().map(|r| r.sim.virtual_secs).collect::<Vec<_>>()),
+    })
+}
+
+/// Fig. 3: overlap-ratio sweep {0, 12.5, 25, 37.5, 50}% on EAHES-O
+/// (the paper varies r on the AdaHessian+overlap method).
+pub fn fig3_overlap_sweep(
+    base: &ExperimentConfig,
+    ratios: &[f64],
+    seeds: u64,
+) -> Result<Vec<AveragedSeries>> {
+    let mut out = Vec::new();
+    for &r in ratios {
+        let mut cfg = base.clone();
+        cfg.method = Method::EahesO;
+        cfg.overlap_ratio = r;
+        let label = format!("r={:.1}%", r * 100.0);
+        out.push(averaged_run(&cfg, seeds, &label)?);
+    }
+    Ok(out)
+}
+
+/// One cell of the Fig-4/5 grid.
+#[derive(Clone, Debug)]
+pub struct GridCell {
+    pub workers: usize,
+    pub tau: usize,
+    pub series: Vec<AveragedSeries>,
+}
+
+/// Figs. 4+5: all six methods for each (k, τ) combination. One run
+/// produces both the accuracy (Fig 4) and training-loss (Fig 5) series.
+pub fn fig45_grid(
+    base: &ExperimentConfig,
+    workers: &[usize],
+    taus: &[usize],
+    methods: &[Method],
+    seeds: u64,
+) -> Result<Vec<GridCell>> {
+    let mut cells = Vec::new();
+    for &k in workers {
+        for &tau in taus {
+            let mut series = Vec::new();
+            for &m in methods {
+                let mut cfg = base.clone();
+                cfg.method = m;
+                cfg.workers = k;
+                cfg.tau = tau;
+                cfg.overlap_ratio = m.paper_overlap_ratio(k);
+                series.push(averaged_run(&cfg, seeds, m.name())?);
+            }
+            cells.push(GridCell { workers: k, tau, series });
+        }
+    }
+    Ok(cells)
+}
+
+/// The §VII ordering table: final accuracy per method per cell.
+pub fn summary_table(cells: &[GridCell]) -> String {
+    let mut s = String::new();
+    let methods: Vec<&str> = cells
+        .first()
+        .map(|c| c.series.iter().map(|x| x.label.as_str()).collect())
+        .unwrap_or_default();
+    let _ = write!(s, "{:<12}", "cell");
+    for m in &methods {
+        let _ = write!(s, "{m:>12}");
+    }
+    let _ = writeln!(s);
+    for cell in cells {
+        let _ = write!(s, "k={} tau={:<4}", cell.workers, cell.tau);
+        for col in &cell.series {
+            let _ = write!(s, "{:>11.2}%", col.final_acc_mean * 100.0);
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+
+    fn quad_cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.engine = EngineKind::Quadratic { dim: 32, heterogeneity: 0.2, noise: 0.02 };
+        c.rounds = 12;
+        c.workers = 3;
+        c.eval_subset = 16;
+        c
+    }
+
+    #[test]
+    fn averaged_run_produces_aligned_series() {
+        let s = averaged_run(&quad_cfg(), 2, "t").unwrap();
+        assert_eq!(s.rounds.len(), s.test_acc.len());
+        assert_eq!(s.rounds.len(), s.train_loss.len());
+        assert!(s.rounds.len() >= 12);
+    }
+
+    #[test]
+    fn fig3_sweep_runs_all_ratios() {
+        let out = fig3_overlap_sweep(&quad_cfg(), &[0.0, 0.25], 1).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out[0].label.contains("0.0%"));
+    }
+
+    #[test]
+    fn grid_and_table_shape() {
+        let cells = fig45_grid(
+            &quad_cfg(),
+            &[2],
+            &[1, 2],
+            &[Method::Easgd, Method::DeahesO],
+            1,
+        )
+        .unwrap();
+        assert_eq!(cells.len(), 2);
+        let t = summary_table(&cells);
+        assert!(t.contains("EASGD"));
+        assert!(t.contains("k=2 tau=1"));
+    }
+}

@@ -1,0 +1,35 @@
+//! # deahes — dynamic-weighted elastic averaging for failure-tolerant
+//! # distributed deep learning
+//!
+//! Reproduction of Xu & Carr, *"A Dynamic Weighting Strategy to Mitigate
+//! Worker Node Failure in Distributed Deep Learning"* (2024), as a
+//! three-layer rust + JAX + pallas system:
+//!
+//! * **L1 (build time)** — pallas kernels: fused AdaHessian update, elastic
+//!   pair update (paper eqs. 12-13), spatial Hessian-diagonal averaging.
+//! * **L2 (build time)** — jax model: the paper's 2-layer CNN fwd/bwd over
+//!   a flat parameter vector + Hutchinson Hessian-diagonal estimation,
+//!   AOT-lowered to HLO text.
+//! * **L3 (this crate)** — the coordinator: asynchronous master/worker
+//!   elastic averaging with the paper's dynamic weighting (raw score from
+//!   eq. 10, piecewise-linear h1/h2), data-overlap sharding (§V.A),
+//!   failure injection, gossip master-estimation, metrics, and the
+//!   experiment drivers regenerating every figure.
+//!
+//! Python never runs at training time: `make artifacts` lowers the HLO
+//! once; this crate loads and executes it via PJRT (`runtime`).
+//!
+//! Quickstart: see `examples/quickstart.rs`, or
+//! `cargo run --release -- train --method deahes-o --workers 4`.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod elastic;
+pub mod engine;
+pub mod experiments;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod strategies;
+pub mod util;

@@ -1,0 +1,402 @@
+//! `deahes` — CLI launcher for the DEAHES distributed-training system.
+//!
+//! Subcommands:
+//!   train     run one experiment (any method/config), print metrics
+//!   fig3      regenerate the paper's Fig. 3 (overlap-ratio sweep)
+//!   grid      regenerate Figs. 4+5 (method × workers × tau grid)
+//!   inspect   validate artifacts/metadata.json and time each artifact
+//!   datagen   dump synthetic-MNIST samples as ASCII (sanity check)
+//!
+//! Examples:
+//!   deahes train --method deahes-o --workers 4 --tau 1 --rounds 100
+//!   deahes train --method easgd --engine quad --rounds 50
+//!   deahes fig3 --ratios 0,0.125,0.25,0.375,0.5 --seeds 3
+//!   deahes grid --grid-workers 4,8 --taus 1,2,4 --seeds 3
+
+use deahes::config::{EngineKind, ExperimentConfig, GossipMode};
+use deahes::coordinator::{sim, FailureModel};
+use deahes::elastic::weight::Detector;
+use deahes::experiments;
+use deahes::metrics::ascii_chart;
+use deahes::strategies::{Method, ALL_METHODS};
+use deahes::util::cli::{Args, Cli};
+use deahes::util::logging::{self, Level};
+
+use anyhow::{bail, Context, Result};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    logging::init(Level::Info);
+    let code = match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = rest.to_vec();
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "fig3" => cmd_fig3(rest),
+        "grid" => cmd_grid(rest),
+        "inspect" => cmd_inspect(rest),
+        "datagen" => cmd_datagen(rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try --help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "deahes — dynamic-weighted elastic averaging (Xu & Carr 2024 reproduction)\n\
+         \n\
+         subcommands:\n\
+         \x20 train     run one experiment\n\
+         \x20 fig3      overlap-ratio sweep (paper Fig. 3)\n\
+         \x20 grid      method × workers × tau grid (paper Figs. 4+5)\n\
+         \x20 inspect   validate + time the AOT artifacts\n\
+         \x20 datagen   preview synthetic-MNIST samples\n\
+         \n\
+         run `deahes <subcommand> --help` for options"
+    );
+}
+
+/// Shared experiment flags.
+fn experiment_cli(name: &str, about: &str) -> Cli {
+    Cli::new(name, about)
+        .opt("method", "deahes-o", "easgd|eamsgd|eahes|eahes-o|eahes-om|deahes-o")
+        .opt("workers", "4", "number of worker nodes k")
+        .opt("tau", "1", "communication period (local steps per sync)")
+        .opt("rounds", "60", "communication rounds")
+        .opt("overlap", "-1", "overlap ratio r (-1 = paper default for k)")
+        .opt("alpha", "0.1", "elastic moving rate α")
+        .opt("lr", "0.01", "learning rate η")
+        .opt("seed", "42", "experiment seed")
+        .opt("train-size", "8192", "synthetic train set size")
+        .opt("test-size", "2048", "synthetic test set size")
+        .opt("eval-subset", "1024", "test samples scored per eval")
+        .opt("eval-every", "1", "evaluate every N rounds")
+        .opt("failure", "bernoulli:0.3333333333333333", "none|bernoulli:P|burst:P,L|permanent:R,w+w")
+        .opt("fail-style", "node", "node (down for the round) | comm (link-only, keeps training)")
+        .opt("knee", "-0.05", "dynamic-weight knee constant k (<0)")
+        .opt("detector", "paper-sign", "paper-sign|drift-sign (raw-score convention)")
+        .opt("score-p", "4", "raw-score history depth p")
+        .opt("score-decay", "0.5", "raw-score recency decay")
+        .opt("gossip", "peers", "peers|stale (master-estimate source)")
+        .opt("engine", "xla", "xla|quad")
+        .opt("artifacts", "artifacts", "artifacts directory (xla engine)")
+        .opt("quad-dim", "64", "problem dimension (quad engine)")
+        .opt("quad-het", "0.2", "worker heterogeneity (quad engine)")
+        .opt("quad-noise", "0.05", "gradient noise (quad engine)")
+        .opt("save-csv", "", "write the per-round metrics CSV to this path")
+        .opt("save-json", "", "write {config, records} JSON to this path")
+        .flag("native-opt", "run optimizer updates in rust instead of the L1 kernels")
+        .flag("threaded", "one OS thread per worker (realistic async driver)")
+        .flag("csv", "print the full per-round CSV")
+        .flag("quiet", "suppress info logging")
+}
+
+fn config_from_args(a: &Args) -> Result<ExperimentConfig> {
+    if a.flag("quiet") {
+        logging::init(Level::Warn);
+    }
+    let method = Method::parse(a.get("method"))
+        .with_context(|| format!("unknown method '{}'", a.get("method")))?;
+    let workers = a.usize("workers");
+    let overlap = {
+        let o = a.f64("overlap");
+        if o < 0.0 {
+            method.paper_overlap_ratio(workers)
+        } else {
+            o
+        }
+    };
+    let engine = match a.get("engine") {
+        "xla" => EngineKind::Xla {
+            artifacts_dir: a.get("artifacts").to_string(),
+            native_opt: a.flag("native-opt"),
+        },
+        "quad" => EngineKind::Quadratic {
+            dim: a.usize("quad-dim"),
+            heterogeneity: a.f64("quad-het"),
+            noise: a.f64("quad-noise"),
+        },
+        other => bail!("unknown engine '{other}'"),
+    };
+    let cfg = ExperimentConfig {
+        method,
+        workers,
+        tau: a.usize("tau"),
+        rounds: a.u64("rounds"),
+        overlap_ratio: overlap,
+        alpha: a.f64("alpha"),
+        lr: a.f64("lr"),
+        seed: a.u64("seed"),
+        train_size: a.usize("train-size"),
+        test_size: a.usize("test-size"),
+        eval_subset: a.usize("eval-subset"),
+        eval_every: a.u64("eval-every"),
+        failure: FailureModel::parse(a.get("failure"))
+            .with_context(|| format!("bad failure spec '{}'", a.get("failure")))?,
+        fail_style: deahes::coordinator::failure::FailStyle::parse(a.get("fail-style"))
+            .context("bad --fail-style")?,
+        score_p: a.usize("score-p"),
+        score_decay: a.f64("score-decay"),
+        knee: a.f64("knee"),
+        detector: Detector::parse(a.get("detector")).context("bad --detector")?,
+        gossip: GossipMode::parse(a.get("gossip")).context("bad --gossip")?,
+        engine,
+        threaded: a.flag("threaded"),
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let a = experiment_cli("deahes train", "run one experiment")
+        .parse(&argv)
+        .map_err(anyhow::Error::msg)?;
+    let cfg = config_from_args(&a)?;
+    let result = sim::run(&cfg)?;
+    println!(
+        "method={} k={} tau={} rounds={} overlap={:.3} detector={} failure={}",
+        cfg.method.name(),
+        cfg.workers,
+        cfg.tau,
+        cfg.rounds,
+        cfg.effective_overlap(),
+        cfg.detector.name(),
+        cfg.failure.describe()
+    );
+    println!(
+        "final: test_acc={:.4} tail_acc(10)={:.4} train_loss={:.4} wall={:.1}s virtual={:.2}s",
+        result.log.final_acc(),
+        result.log.tail_acc(10),
+        result.log.final_train_loss(),
+        result.wall_secs,
+        result.sim.virtual_secs,
+    );
+    println!(
+        "master: syncs served per worker = {:?}, corrections = {:?}",
+        result.worker_stats.iter().map(|s| s.0).collect::<Vec<_>>(),
+        result.worker_stats.iter().map(|s| s.1).collect::<Vec<_>>(),
+    );
+    print!(
+        "{}",
+        ascii_chart(
+            "test accuracy over communication rounds",
+            &[("acc", result.log.acc_series())],
+            72,
+            14,
+        )
+    );
+    print!(
+        "{}",
+        ascii_chart(
+            "training loss over communication rounds",
+            &[("loss", result.log.train_loss_series())],
+            72,
+            14,
+        )
+    );
+    if a.flag("csv") {
+        print!("{}", result.log.to_csv());
+    }
+    let csv_path = a.get("save-csv");
+    if !csv_path.is_empty() {
+        std::fs::write(csv_path, result.log.to_csv())
+            .with_context(|| format!("writing {csv_path}"))?;
+        println!("wrote {csv_path}");
+    }
+    let json_path = a.get("save-json");
+    if !json_path.is_empty() {
+        use deahes::util::json::Json;
+        let doc = Json::obj(vec![
+            ("config", cfg.to_json()),
+            ("records", result.log.to_json()),
+            (
+                "summary",
+                Json::obj(vec![
+                    ("final_acc", Json::num(result.log.final_acc())),
+                    ("tail_acc", Json::num(result.log.tail_acc(10))),
+                    ("wall_secs", Json::num(result.wall_secs)),
+                    ("virtual_secs", Json::num(result.sim.virtual_secs)),
+                ]),
+            ),
+        ]);
+        std::fs::write(json_path, doc.to_string_pretty())
+            .with_context(|| format!("writing {json_path}"))?;
+        println!("wrote {json_path}");
+    }
+    if !result.perf.is_empty() {
+        println!("--- artifact call stats ---\n{}", result.perf);
+    }
+    Ok(())
+}
+
+fn cmd_fig3(argv: Vec<String>) -> Result<()> {
+    let a = experiment_cli("deahes fig3", "overlap-ratio sweep (paper Fig. 3)")
+        .opt("ratios", "0,0.125,0.25,0.375,0.5", "comma-separated overlap ratios")
+        .opt("seeds", "3", "runs to average")
+        .parse(&argv)
+        .map_err(anyhow::Error::msg)?;
+    let base = config_from_args(&a)?;
+    let ratios = a.f64_list("ratios");
+    let out = experiments::fig3_overlap_sweep(&base, &ratios, a.u64("seeds"))?;
+    println!(
+        "\n== Fig 3: test accuracy vs overlap ratio (EAHES-O, k={}, tau={}) ==",
+        base.workers, base.tau
+    );
+    let series: Vec<(&str, Vec<f64>)> =
+        out.iter().map(|s| (s.label.as_str(), s.test_acc.clone())).collect();
+    print!("{}", ascii_chart("test accuracy over rounds", &series, 72, 16));
+    println!("{:<10} {:>12} {:>12}", "ratio", "final acc", "train loss");
+    for s in &out {
+        println!(
+            "{:<10} {:>11.2}% {:>12.4}",
+            s.label,
+            s.final_acc_mean * 100.0,
+            s.final_train_loss
+        );
+    }
+    Ok(())
+}
+
+fn cmd_grid(argv: Vec<String>) -> Result<()> {
+    let a = experiment_cli("deahes grid", "method × workers × tau grid (paper Figs. 4+5)")
+        .opt("grid-workers", "4,8", "worker counts")
+        .opt("taus", "1,2,4", "communication periods")
+        .opt("methods", "all", "comma list or 'all'")
+        .opt("seeds", "3", "runs to average")
+        .parse(&argv)
+        .map_err(anyhow::Error::msg)?;
+    let base = config_from_args(&a)?;
+    let workers = a.usize_list("grid-workers");
+    let taus = a.usize_list("taus");
+    let methods: Vec<Method> = if a.get("methods") == "all" {
+        ALL_METHODS.to_vec()
+    } else {
+        a.get("methods")
+            .split(',')
+            .map(|m| Method::parse(m).with_context(|| format!("unknown method '{m}'")))
+            .collect::<Result<_>>()?
+    };
+    let cells = experiments::fig45_grid(&base, &workers, &taus, &methods, a.u64("seeds"))?;
+    for cell in &cells {
+        println!("\n== k={} tau={} ==", cell.workers, cell.tau);
+        let acc: Vec<(&str, Vec<f64>)> = cell
+            .series
+            .iter()
+            .map(|s| (s.label.as_str(), s.test_acc.clone()))
+            .collect();
+        print!("{}", ascii_chart("Fig 4: test accuracy", &acc, 72, 14));
+        let loss: Vec<(&str, Vec<f64>)> = cell
+            .series
+            .iter()
+            .map(|s| (s.label.as_str(), s.train_loss.clone()))
+            .collect();
+        print!("{}", ascii_chart("Fig 5: training loss", &loss, 72, 14));
+    }
+    println!("\n== §VII summary: tail accuracy ==");
+    print!("{}", experiments::summary_table(&cells));
+    Ok(())
+}
+
+fn cmd_inspect(argv: Vec<String>) -> Result<()> {
+    use deahes::engine::xla::{OptimImpl, XlaEngine};
+    use deahes::engine::{BatchRef, Engine};
+    use deahes::runtime::Manifest;
+    let a = Cli::new("deahes inspect", "validate + time the AOT artifacts")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("reps", "20", "timing repetitions per artifact")
+        .parse(&argv)
+        .map_err(anyhow::Error::msg)?;
+    let manifest = Manifest::load(std::path::Path::new(a.get("artifacts")))?;
+    println!(
+        "manifest: model={} P={} batch_train={} batch_eval={} artifacts={}",
+        manifest.model,
+        manifest.param_count,
+        manifest.batch_train,
+        manifest.batch_eval,
+        manifest.artifacts.len()
+    );
+    let mut engine = XlaEngine::new(&manifest, OptimImpl::Kernels)?;
+    println!("compiled all artifacts in {:.2}s", engine.compile_secs());
+    let n = manifest.param_count;
+    let theta = manifest.init_theta(0);
+    let reps = a.usize("reps");
+    let bt = manifest.batch_train;
+    let be = manifest.batch_eval;
+    let x_t = vec![0.1f32; bt * manifest.image_hw * manifest.image_hw];
+    let mut y_t = vec![0.0f32; bt * manifest.num_classes];
+    for row in 0..bt {
+        y_t[row * manifest.num_classes] = 1.0;
+    }
+    let x_e = vec![0.1f32; be * manifest.image_hw * manifest.image_hw];
+    let mut y_e = vec![0.0f32; be * manifest.num_classes];
+    for row in 0..be {
+        y_e[row * manifest.num_classes] = 1.0;
+    }
+    let z = vec![1.0f32; n];
+    let g = vec![0.01f32; n];
+    let d = vec![0.5f32; n];
+    for _ in 0..reps {
+        let mut th = theta.clone();
+        let (mut m, mut v) = (vec![0.0; n], vec![0.0; n]);
+        let mut buf = vec![0.0; n];
+        let mut tm = theta.clone();
+        engine.grad(&theta, BatchRef { x: &x_t, y1h: &y_t })?;
+        engine.grad_hess(&theta, BatchRef { x: &x_t, y1h: &y_t }, &z)?;
+        engine.adahessian(&mut th, &g, &d, &mut m, &mut v, 1, 0.01)?;
+        engine.momentum(&mut th, &g, &mut buf, 0.01)?;
+        engine.sgd(&mut th, &g, 0.01)?;
+        engine.elastic(&mut th, &mut tm, 0.1, 0.1)?;
+        engine.eval(&theta, BatchRef { x: &x_e, y1h: &y_e })?;
+    }
+    println!("--- per-artifact timings over {reps} reps ---");
+    print!("{}", engine.perf_summary());
+    Ok(())
+}
+
+fn cmd_datagen(argv: Vec<String>) -> Result<()> {
+    use deahes::data::synth;
+    let a = Cli::new("deahes datagen", "preview synthetic-MNIST samples")
+        .opt("count", "3", "samples per class to render")
+        .opt("seed", "0", "generator seed")
+        .parse(&argv)
+        .map_err(anyhow::Error::msg)?;
+    let count = a.usize("count");
+    let d = synth::dataset(synth::NUM_CLASSES * count.max(1) * 3, a.u64("seed"));
+    let shades = [' ', '.', ':', '+', '#'];
+    let mut shown = vec![0usize; synth::NUM_CLASSES];
+    for i in 0..d.len() {
+        let c = d.labels[i] as usize;
+        if shown[c] >= count {
+            continue;
+        }
+        shown[c] += 1;
+        println!("-- class {c} --");
+        let img = d.image(i);
+        for r in 0..synth::IMAGE_HW {
+            let line: String = (0..synth::IMAGE_HW)
+                .map(|col| {
+                    let v = img[r * synth::IMAGE_HW + col];
+                    shades[((v * (shades.len() - 1) as f32).round() as usize).min(shades.len() - 1)]
+                })
+                .collect();
+            println!("{line}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,232 @@
+//! Round-indexed metric recording, CSV/JSON export, and ASCII charts for
+//! terminal-friendly loss/accuracy curves.
+
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Everything sampled at one communication round.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: u64,
+    pub test_acc: f64,
+    pub test_loss: f64,
+    /// Mean training loss across workers' local steps this round.
+    pub train_loss: f64,
+    pub syncs_ok: u32,
+    pub syncs_failed: u32,
+    pub mean_h1: f64,
+    pub mean_h2: f64,
+    /// Mean raw score across workers that produced one this round.
+    pub mean_score: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricsLog {
+    pub records: Vec<RoundRecord>,
+}
+
+impl MetricsLog {
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_acc(&self) -> f64 {
+        self.records.last().map(|r| r.test_acc).unwrap_or(0.0)
+    }
+
+    pub fn final_train_loss(&self) -> f64 {
+        self.records.last().map(|r| r.train_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn best_acc(&self) -> f64 {
+        self.records.iter().map(|r| r.test_acc).fold(0.0, f64::max)
+    }
+
+    /// Mean accuracy over the last `k` recorded rounds (noise-robust
+    /// "final" metric used by the summary tables).
+    pub fn tail_acc(&self, k: usize) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(k)..];
+        tail.iter().map(|r| r.test_acc).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn tail_train_loss(&self, k: usize) -> f64 {
+        if self.records.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(k)..];
+        tail.iter().map(|r| r.train_loss).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn acc_series(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.test_acc).collect()
+    }
+
+    pub fn train_loss_series(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.train_loss).collect()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "round,test_acc,test_loss,train_loss,syncs_ok,syncs_failed,mean_h1,mean_h2,mean_score\n",
+        );
+        for r in &self.records {
+            let _ = writeln!(
+                s,
+                "{},{:.6},{:.6},{:.6},{},{},{:.4},{:.4},{:.6}",
+                r.round,
+                r.test_acc,
+                r.test_loss,
+                r.train_loss,
+                r.syncs_ok,
+                r.syncs_failed,
+                r.mean_h1,
+                r.mean_h2,
+                r.mean_score
+            );
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("round", Json::num(r.round as f64)),
+                        ("test_acc", Json::num(r.test_acc)),
+                        ("test_loss", Json::num(r.test_loss)),
+                        ("train_loss", Json::num(r.train_loss)),
+                        ("syncs_ok", Json::num(r.syncs_ok as f64)),
+                        ("syncs_failed", Json::num(r.syncs_failed as f64)),
+                        ("mean_h1", Json::num(r.mean_h1)),
+                        ("mean_h2", Json::num(r.mean_h2)),
+                        ("mean_score", Json::num(r.mean_score)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Render one or more series as a fixed-size ASCII chart (figures 3/4/5 in
+/// terminal form). Each series gets a distinct glyph.
+pub fn ascii_chart(title: &str, series: &[(&str, Vec<f64>)], width: usize, height: usize) -> String {
+    let glyphs = ['o', '*', '+', 'x', '#', '@', '%', '&'];
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let mut max_len = 0usize;
+    for (_, ys) in series {
+        for &y in ys {
+            if y.is_finite() {
+                lo = lo.min(y);
+                hi = hi.max(y);
+            }
+        }
+        max_len = max_len.max(ys.len());
+    }
+    if !lo.is_finite() || max_len == 0 {
+        return format!("{title}\n  (no data)\n");
+    }
+    if (hi - lo).abs() < 1e-12 {
+        hi = lo + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let glyph = glyphs[si % glyphs.len()];
+        for (i, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let x = if max_len == 1 { 0 } else { i * (width - 1) / (max_len - 1) };
+            let fy = (y - lo) / (hi - lo);
+            let row = height - 1 - ((fy * (height - 1) as f64).round() as usize).min(height - 1);
+            grid[row][x] = glyph;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let _ = writeln!(out, "  {hi:>10.4} ┐");
+    for row in &grid {
+        let line: String = row.iter().collect();
+        let _ = writeln!(out, "             │{line}");
+    }
+    let _ = writeln!(out, "  {lo:>10.4} ┘{}", "─".repeat(width));
+    let mut legend = String::from("             ");
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = write!(legend, "{}={}  ", glyphs[si % glyphs.len()], name);
+    }
+    let _ = writeln!(out, "{legend}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: u64, acc: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            test_acc: acc,
+            test_loss: 1.0 - acc,
+            train_loss: 2.0 - acc,
+            syncs_ok: 3,
+            syncs_failed: 1,
+            mean_h1: 0.1,
+            mean_h2: 0.1,
+            mean_score: 0.0,
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = MetricsLog::default();
+        log.push(rec(0, 0.1));
+        log.push(rec(1, 0.2));
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("round,"));
+        assert!(csv.contains("1,0.200000"));
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut log = MetricsLog::default();
+        for (i, a) in [0.1, 0.5, 0.9, 0.8].iter().enumerate() {
+            log.push(rec(i as u64, *a));
+        }
+        assert_eq!(log.final_acc(), 0.8);
+        assert_eq!(log.best_acc(), 0.9);
+        assert!((log.tail_acc(2) - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let mut log = MetricsLog::default();
+        log.push(rec(0, 0.3));
+        let j = log.to_json();
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.idx(0).get("test_acc").as_f64(), Some(0.3));
+    }
+
+    #[test]
+    fn ascii_chart_renders() {
+        let ys: Vec<f64> = (0..50).map(|i| (i as f64 / 10.0).sin()).collect();
+        let s = ascii_chart("test", &[("sin", ys)], 60, 10);
+        assert!(s.contains("test"));
+        assert!(s.contains('o'));
+        assert!(s.lines().count() > 10);
+    }
+
+    #[test]
+    fn ascii_chart_handles_empty_and_constant() {
+        let s = ascii_chart("empty", &[("e", vec![])], 10, 5);
+        assert!(s.contains("no data"));
+        let s = ascii_chart("const", &[("c", vec![1.0; 5])], 10, 5);
+        assert!(s.contains('o'));
+    }
+}

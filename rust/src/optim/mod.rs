@@ -1,0 +1,78 @@
+//! Optimizer update rules: pure-rust mirrors of the L1 pallas kernels, plus
+//! the per-worker optimizer state machine.
+
+pub mod native;
+
+/// Which local optimizer a strategy runs between syncs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Optimizer {
+    /// Plain SGD (EASGD baseline).
+    Sgd,
+    /// SGD + Polyak momentum (EAMSGD).
+    Momentum,
+    /// AdaHessian second-order (EAHES family).
+    AdaHessian,
+}
+
+impl Optimizer {
+    pub fn name(self) -> &'static str {
+        match self {
+            Optimizer::Sgd => "sgd",
+            Optimizer::Momentum => "momentum",
+            Optimizer::AdaHessian => "adahessian",
+        }
+    }
+
+    /// Does this optimizer need the Hessian-diagonal estimate each step?
+    pub fn needs_hessian(self) -> bool {
+        matches!(self, Optimizer::AdaHessian)
+    }
+}
+
+/// Per-worker optimizer state (flat vectors sized to the param count).
+#[derive(Clone, Debug)]
+pub enum OptState {
+    Sgd,
+    Momentum { buf: Vec<f32> },
+    AdaHessian { m: Vec<f32>, v: Vec<f32>, t: u64 },
+}
+
+impl OptState {
+    pub fn new(opt: Optimizer, n: usize) -> OptState {
+        match opt {
+            Optimizer::Sgd => OptState::Sgd,
+            Optimizer::Momentum => OptState::Momentum { buf: vec![0.0; n] },
+            Optimizer::AdaHessian => {
+                OptState::AdaHessian { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+            }
+        }
+    }
+
+    pub fn optimizer(&self) -> Optimizer {
+        match self {
+            OptState::Sgd => Optimizer::Sgd,
+            OptState::Momentum { .. } => Optimizer::Momentum,
+            OptState::AdaHessian { .. } => Optimizer::AdaHessian,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_matches_optimizer() {
+        for opt in [Optimizer::Sgd, Optimizer::Momentum, Optimizer::AdaHessian] {
+            let s = OptState::new(opt, 8);
+            assert_eq!(s.optimizer(), opt);
+        }
+    }
+
+    #[test]
+    fn hessian_requirement() {
+        assert!(Optimizer::AdaHessian.needs_hessian());
+        assert!(!Optimizer::Sgd.needs_hessian());
+        assert!(!Optimizer::Momentum.needs_hessian());
+    }
+}

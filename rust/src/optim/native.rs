@@ -1,0 +1,159 @@
+//! Pure-rust mirrors of the L1 kernels (ref.py semantics, exactly).
+//!
+//! Three roles:
+//!   1. correctness oracle for the XLA artifacts (integration tests assert
+//!      pallas == jnp == rust to f32 tolerance);
+//!   2. the `--native-opt` ablation path (optimizer updates run in-process
+//!      instead of through PJRT — isolates PJRT call overhead);
+//!   3. the update rules for the quadratic toy engine used by the
+//!      coordinator unit tests.
+//!
+//! All updates are in-place and allocation-free: these run in the training
+//! hot loop.
+
+/// theta -= lr * g
+pub fn sgd_step(theta: &mut [f32], g: &[f32], lr: f32) {
+    debug_assert_eq!(theta.len(), g.len());
+    for (t, &gi) in theta.iter_mut().zip(g) {
+        *t -= lr * gi;
+    }
+}
+
+/// PyTorch-convention Polyak momentum:
+/// buf = mu*buf + g; theta -= lr*buf
+pub fn momentum_step(theta: &mut [f32], g: &[f32], buf: &mut [f32], lr: f32, mu: f32) {
+    debug_assert_eq!(theta.len(), g.len());
+    debug_assert_eq!(theta.len(), buf.len());
+    for i in 0..theta.len() {
+        buf[i] = mu * buf[i] + g[i];
+        theta[i] -= lr * buf[i];
+    }
+}
+
+/// AdaHessian update (hessian_power=1), bias-corrected; `t` is 1-based.
+/// m = b1*m + (1-b1)*g ; v = b2*v + (1-b2)*d^2
+/// theta -= lr * (m/(1-b1^t)) / (sqrt(v/(1-b2^t)) + eps)
+#[allow(clippy::too_many_arguments)]
+pub fn adahessian_step(
+    theta: &mut [f32],
+    g: &[f32],
+    d: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: u64,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+) {
+    debug_assert!(t >= 1);
+    let bc1 = 1.0 - beta1.powi(t as i32);
+    let bc2 = 1.0 - beta2.powi(t as i32);
+    for i in 0..theta.len() {
+        m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+        v[i] = beta2 * v[i] + (1.0 - beta2) * d[i] * d[i];
+        let mh = m[i] / bc1;
+        let vh = v[i] / bc2;
+        theta[i] -= lr * mh / (vh.sqrt() + eps);
+    }
+}
+
+/// Elastic pair update (paper eqs. 12-13); both sides read the OLD diff.
+pub fn elastic_step(tw: &mut [f32], tm: &mut [f32], h1: f32, h2: f32) {
+    debug_assert_eq!(tw.len(), tm.len());
+    for i in 0..tw.len() {
+        let diff = tw[i] - tm[i];
+        tw[i] -= h1 * diff;
+        tm[i] += h2 * diff;
+    }
+}
+
+/// Blockwise spatial average (mirror of kernels/spatial.py) over conv
+/// segments of the flat Hessian-diagonal estimate.
+pub fn spatial_average(hdiag: &mut [f32], conv_segments: &[(usize, usize, usize)]) {
+    for &(off, n_blocks, block) in conv_segments {
+        for b in 0..n_blocks {
+            let s = off + b * block;
+            let mean: f32 = hdiag[s..s + block].iter().sum::<f32>() / block as f32;
+            hdiag[s..s + block].fill(mean);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_basic() {
+        let mut t = vec![1.0, 2.0];
+        sgd_step(&mut t, &[0.5, -0.5], 0.1);
+        assert_eq!(t, vec![0.95, 2.05]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut t = vec![0.0; 2];
+        let mut buf = vec![0.0; 2];
+        momentum_step(&mut t, &[1.0, 1.0], &mut buf, 0.1, 0.5);
+        momentum_step(&mut t, &[1.0, 1.0], &mut buf, 0.1, 0.5);
+        // buf: 1 then 1.5; theta: -0.1 then -0.25
+        assert!((buf[0] - 1.5).abs() < 1e-6);
+        assert!((t[0] + 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adahessian_first_step_matches_closed_form() {
+        let mut theta = vec![0.0f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        let (g, d) = (2.0f32, 4.0f32);
+        adahessian_step(&mut theta, &[g], &[d], &mut m, &mut v, 1, 0.1, 0.9, 0.999, 1e-8);
+        // bias correction at t=1 makes mh=g, vh=d^2 -> step = lr*g/(|d|+eps)
+        let expected = -0.1 * g / (d + 1e-8);
+        assert!((theta[0] - expected).abs() < 1e-5, "{} vs {expected}", theta[0]);
+    }
+
+    #[test]
+    fn adahessian_descends_quadratic() {
+        // f(x) = 0.5 h x^2, exact diag h
+        let n = 64;
+        let h: Vec<f32> = (0..n).map(|i| 0.1 + i as f32 * 0.05).collect();
+        let mut x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut m = vec![0.0; n];
+        let mut v = vec![0.0; n];
+        let f = |x: &[f32]| -> f32 { x.iter().zip(&h).map(|(xi, hi)| 0.5 * hi * xi * xi).sum() };
+        let f0 = f(&x);
+        for t in 1..=50 {
+            let g: Vec<f32> = x.iter().zip(&h).map(|(xi, hi)| hi * xi).collect();
+            adahessian_step(&mut x, &g, &h, &mut m, &mut v, t, 0.05, 0.9, 0.999, 1e-8);
+        }
+        assert!(f(&x) < 0.05 * f0, "{} vs {}", f(&x), f0);
+    }
+
+    #[test]
+    fn elastic_uses_old_diff() {
+        let mut tw = vec![2.0; 4];
+        let mut tm = vec![0.0; 4];
+        elastic_step(&mut tw, &mut tm, 0.5, 0.5);
+        assert_eq!(tw, vec![1.0; 4]);
+        assert_eq!(tm, vec![1.0; 4]); // old diff = 2, tm += 0.5*2
+    }
+
+    #[test]
+    fn elastic_alpha_zero_is_identity() {
+        let mut tw = vec![1.0, -3.0];
+        let mut tm = vec![0.5, 2.0];
+        let (w0, m0) = (tw.clone(), tm.clone());
+        elastic_step(&mut tw, &mut tm, 0.0, 0.0);
+        assert_eq!(tw, w0);
+        assert_eq!(tm, m0);
+    }
+
+    #[test]
+    fn spatial_average_blocks() {
+        let mut h = vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0, 99.0];
+        spatial_average(&mut h, &[(0, 2, 3)]);
+        assert_eq!(h, vec![2.0, 2.0, 2.0, 20.0, 20.0, 20.0, 99.0]);
+    }
+}

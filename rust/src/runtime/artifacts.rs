@@ -1,0 +1,336 @@
+//! The AOT manifest: artifacts/metadata.json written by python/compile/aot.py.
+//!
+//! The manifest is the single source of truth about the compiled model:
+//! parameter count, batch shapes, parameter-segment layout (for spatial
+//! averaging and debugging), and per-artifact signatures. The rust side
+//! validates every artifact's declared signature before use so a stale
+//! artifacts/ directory fails loudly at startup, not with a shape error
+//! mid-training.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.shape.is_empty()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SegmentSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConvSegment {
+    pub offset: usize,
+    pub n_blocks: usize,
+    pub block: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Hyperparams {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub momentum: f64,
+}
+
+/// Parsed + validated metadata.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub param_count: usize,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub x_is_flat: bool,
+    pub image_hw: usize,
+    pub num_classes: usize,
+    pub hyperparams: Hyperparams,
+    pub segments: Vec<SegmentSpec>,
+    pub conv_segments: Vec<ConvSegment>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+pub const SUPPORTED_SCHEMA: usize = 3;
+pub const REQUIRED_ARTIFACTS: [&str; 7] =
+    ["grad", "grad_hess", "adahessian", "momentum", "sgd", "elastic", "eval"];
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let meta_path = dir.join("metadata.json");
+        let text = std::fs::read_to_string(&meta_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                meta_path.display()
+            )
+        })?;
+        let j = Json::parse(&text).context("metadata.json is not valid JSON")?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<Manifest> {
+        let schema = j.get("schema_version").as_usize().unwrap_or(0);
+        if schema != SUPPORTED_SCHEMA {
+            bail!(
+                "metadata schema_version {schema} != supported {SUPPORTED_SCHEMA}; \
+                 re-run `make artifacts`"
+            );
+        }
+        let hp = j.get("hyperparams");
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .as_obj()
+            .context("metadata.json missing 'artifacts'")?;
+        for (name, a) in arts {
+            let inputs = a
+                .get("inputs")
+                .as_arr()
+                .context("artifact missing inputs")?
+                .iter()
+                .map(|i| TensorSpec {
+                    name: i.get("name").as_str().unwrap_or("?").to_string(),
+                    shape: i
+                        .get("shape")
+                        .as_arr()
+                        .map(|s| s.iter().filter_map(|d| d.as_usize()).collect())
+                        .unwrap_or_default(),
+                })
+                .collect();
+            let outputs = a
+                .get("outputs")
+                .as_arr()
+                .context("artifact missing outputs")?
+                .iter()
+                .filter_map(|o| o.as_str().map(|s| s.to_string()))
+                .collect();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(a.get("file").as_str().context("artifact missing file")?),
+                    sha256: a.get("sha256").as_str().unwrap_or("").to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            model: j.get("model").as_str().context("missing model")?.to_string(),
+            param_count: j.get("param_count").as_usize().context("missing param_count")?,
+            batch_train: j.get("batch_train").as_usize().context("missing batch_train")?,
+            batch_eval: j.get("batch_eval").as_usize().context("missing batch_eval")?,
+            x_is_flat: j.get("x_is_flat").as_bool().unwrap_or(false),
+            image_hw: j.get("image_hw").as_usize().unwrap_or(28),
+            num_classes: j.get("num_classes").as_usize().unwrap_or(10),
+            hyperparams: Hyperparams {
+                beta1: hp.get("beta1").as_f64().unwrap_or(0.9),
+                beta2: hp.get("beta2").as_f64().unwrap_or(0.999),
+                eps: hp.get("eps").as_f64().unwrap_or(1e-8),
+                momentum: hp.get("momentum").as_f64().unwrap_or(0.5),
+            },
+            segments: j
+                .get("segments")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|s| SegmentSpec {
+                    name: s.get("name").as_str().unwrap_or("?").to_string(),
+                    shape: s
+                        .get("shape")
+                        .as_arr()
+                        .map(|v| v.iter().filter_map(|d| d.as_usize()).collect())
+                        .unwrap_or_default(),
+                    offset: s.get("offset").as_usize().unwrap_or(0),
+                    size: s.get("size").as_usize().unwrap_or(0),
+                })
+                .collect(),
+            conv_segments: j
+                .get("conv_segments")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|s| ConvSegment {
+                    offset: s.get("offset").as_usize().unwrap_or(0),
+                    n_blocks: s.get("n_blocks").as_usize().unwrap_or(0),
+                    block: s.get("block").as_usize().unwrap_or(0),
+                })
+                .collect(),
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for req in REQUIRED_ARTIFACTS {
+            let a = self
+                .artifacts
+                .get(req)
+                .with_context(|| format!("manifest missing required artifact '{req}'"))?;
+            if !a.file.exists() {
+                bail!("artifact file {} does not exist", a.file.display());
+            }
+        }
+        let seg_total: usize = self.segments.iter().map(|s| s.size).sum();
+        if seg_total != self.param_count {
+            bail!("segment sizes sum to {seg_total} != param_count {}", self.param_count);
+        }
+        // Signature sanity for the hot-path artifacts.
+        let n = self.param_count;
+        let check = |art: &str, idx: usize, want: &[usize]| -> Result<()> {
+            let a = &self.artifacts[art];
+            let got = &a.inputs[idx].shape;
+            if got != want {
+                bail!("artifact '{art}' input {idx} shape {got:?} != expected {want:?}");
+            }
+            Ok(())
+        };
+        check("grad", 0, &[n])?;
+        check("grad_hess", 0, &[n])?;
+        check("grad_hess", 3, &[n])?;
+        check("adahessian", 0, &[n])?;
+        check("elastic", 0, &[n])?;
+        check("elastic", 1, &[n])?;
+        check("elastic", 2, &[])?;
+        check("elastic", 3, &[])?;
+        Ok(())
+    }
+
+    /// Initialise a flat parameter vector — mirrors python's
+    /// params.init_params (PyTorch-default Kaiming-uniform weights with
+    /// fan_in from the segment shape, zero biases). Bit-identity with the
+    /// python init is NOT required (different PRNG), only the distribution
+    /// family; the layout comes from the manifest's segments.
+    pub fn init_theta(&self, seed: u64) -> Vec<f32> {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed).derive(0x1217);
+        let mut theta = vec![0.0f32; self.param_count];
+        for seg in &self.segments {
+            let is_weight = seg.name.ends_with("/w");
+            if is_weight && !seg.shape.is_empty() {
+                let fan_in: usize = seg.shape[1..].iter().product::<usize>().max(1);
+                let bound = 1.0 / (fan_in as f32).sqrt();
+                for x in &mut theta[seg.offset..seg.offset + seg.size] {
+                    *x = rng.range_f32(-bound, bound);
+                }
+            }
+            // biases stay zero
+        }
+        theta
+    }
+
+    /// Shape of the training-batch image tensor.
+    pub fn x_train_shape(&self) -> Vec<usize> {
+        if self.x_is_flat {
+            vec![self.batch_train, self.image_hw * self.image_hw]
+        } else {
+            vec![self.batch_train, 1, self.image_hw, self.image_hw]
+        }
+    }
+
+    pub fn x_eval_shape(&self) -> Vec<usize> {
+        if self.x_is_flat {
+            vec![self.batch_eval, self.image_hw * self.image_hw]
+        } else {
+            vec![self.batch_eval, 1, self.image_hw, self.image_hw]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_manifest_json(dir: &Path) -> String {
+        // Write dummy artifact files so existence checks pass.
+        for name in REQUIRED_ARTIFACTS {
+            std::fs::write(dir.join(format!("{name}.hlo.txt")), "HloModule x").unwrap();
+        }
+        let arts: Vec<String> = REQUIRED_ARTIFACTS
+            .iter()
+            .map(|name| {
+                let inputs = match *name {
+                    "grad" => r#"[{"name":"theta","shape":[10]},{"name":"x","shape":[2,1,28,28]},{"name":"y1h","shape":[2,10]}]"#.to_string(),
+                    "grad_hess" => r#"[{"name":"theta","shape":[10]},{"name":"x","shape":[2,1,28,28]},{"name":"y1h","shape":[2,10]},{"name":"z","shape":[10]}]"#.to_string(),
+                    "elastic" => r#"[{"name":"tw","shape":[10]},{"name":"tm","shape":[10]},{"name":"h1","shape":[]},{"name":"h2","shape":[]}]"#.to_string(),
+                    _ => r#"[{"name":"theta","shape":[10]}]"#.to_string(),
+                };
+                format!(
+                    r#""{name}": {{"file":"{name}.hlo.txt","sha256":"","inputs":{inputs},"outputs":["o"]}}"#
+                )
+            })
+            .collect();
+        format!(
+            r#"{{"schema_version":3,"model":"cnn-paper","param_count":10,
+                "batch_train":2,"batch_eval":4,"x_is_flat":false,
+                "image_hw":28,"num_classes":10,
+                "hyperparams":{{"beta1":0.9,"beta2":0.999,"eps":1e-8,"momentum":0.5}},
+                "segments":[{{"name":"w","shape":[10],"offset":0,"size":10}}],
+                "conv_segments":[],
+                "artifacts":{{{}}}}}"#,
+            arts.join(",")
+        )
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("deahes_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let j = Json::parse(&minimal_manifest_json(&dir)).unwrap();
+        let m = Manifest::from_json(&dir, &j).unwrap();
+        assert_eq!(m.param_count, 10);
+        assert_eq!(m.artifacts.len(), 7);
+        assert_eq!(m.x_train_shape(), vec![2, 1, 28, 28]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        let dir = std::env::temp_dir().join(format!("deahes_manifest2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = minimal_manifest_json(&dir).replace("\"schema_version\":3", "\"schema_version\":1");
+        let j = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&dir, &j).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_param_shape() {
+        let dir = std::env::temp_dir().join(format!("deahes_manifest3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = minimal_manifest_json(&dir)
+            .replace(r#""grad": {"file":"grad.hlo.txt","sha256":"","inputs":[{"name":"theta","shape":[10]}"#,
+                     r#""grad": {"file":"grad.hlo.txt","sha256":"","inputs":[{"name":"theta","shape":[11]}"#);
+        let j = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&dir, &j).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

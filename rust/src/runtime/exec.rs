@@ -1,0 +1,152 @@
+//! PJRT execution wrapper: load HLO-text artifacts, compile once, execute
+//! with flat-f32 buffers.
+//!
+//! One `XlaRuntime` per OS thread: the `xla` crate's `PjRtClient` holds an
+//! `Rc` internally (and buffers clone it), so a client and everything
+//! compiled from it must stay on the thread that created it. Each worker in
+//! the threaded simulation therefore builds its own runtime — which also
+//! mirrors a real deployment where every node compiles its own program.
+
+use super::artifacts::Manifest;
+use crate::util::stats::Welford;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// An argument to an artifact call.
+pub enum Arg<'a> {
+    /// Flat data + logical shape (row-major).
+    Tensor(&'a [f32], &'a [usize]),
+    /// Rank-0 f32.
+    Scalar(f32),
+}
+
+impl<'a> Arg<'a> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Arg::Scalar(v) => Ok(xla::Literal::scalar(*v)),
+            Arg::Tensor(data, shape) => {
+                let n: usize = shape.iter().product();
+                if n != data.len() {
+                    bail!("tensor data length {} != shape {:?}", data.len(), shape);
+                }
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(data).reshape(&dims)?)
+            }
+        }
+    }
+}
+
+/// Per-artifact call statistics (populated on every execute; used by the
+/// perf pass and surfaced by `deahes inspect`).
+#[derive(Clone, Debug, Default)]
+pub struct CallStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub per_call: Welford,
+}
+
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    stats: BTreeMap<String, CallStats>,
+    compile_secs: f64,
+}
+
+impl XlaRuntime {
+    /// Compile the named artifacts (or all, if `names` is empty).
+    pub fn load(manifest: &Manifest, names: &[&str]) -> Result<XlaRuntime> {
+        let t0 = Instant::now();
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut exes = BTreeMap::new();
+        let all: Vec<&str> = if names.is_empty() {
+            manifest.artifacts.keys().map(|s| s.as_str()).collect()
+        } else {
+            names.to_vec()
+        };
+        for name in all {
+            let spec = manifest
+                .artifacts
+                .get(name)
+                .with_context(|| format!("artifact '{name}' not in manifest"))?;
+            let path = spec.file.to_string_lossy().to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            exes.insert(name.to_string(), exe);
+        }
+        Ok(XlaRuntime {
+            client,
+            exes,
+            stats: BTreeMap::new(),
+            compile_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn compile_secs(&self) -> f64 {
+        self.compile_secs
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute artifact `name`; returns each tuple output flattened to f32.
+    ///
+    /// All artifacts are lowered with return_tuple=True, so the single
+    /// result buffer is a tuple literal we decompose positionally.
+    pub fn call(&mut self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        let t0 = Instant::now();
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded in this runtime"))?;
+        let mut literals = Vec::with_capacity(args.len());
+        for a in args {
+            literals.push(a.to_literal()?);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing '{name}'"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of '{name}'"))?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().context("reading f32 output")?);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let s = self.stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.total_secs += dt;
+        s.per_call.push(dt);
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> &BTreeMap<String, CallStats> {
+        &self.stats
+    }
+
+    pub fn stats_summary(&self) -> String {
+        let mut s = String::new();
+        for (name, cs) in &self.stats {
+            s.push_str(&format!(
+                "{:<12} calls={:<7} total={:>8.3}s mean={:>9.4}ms sd={:>8.4}ms\n",
+                name,
+                cs.calls,
+                cs.total_secs,
+                cs.per_call.mean() * 1e3,
+                cs.per_call.std_dev() * 1e3,
+            ));
+        }
+        s
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime layer: loads the AOT artifacts (HLO text) described by
+//! artifacts/metadata.json and executes them through the PJRT C API via the
+//! `xla` crate.  See /opt/xla-example/load_hlo for the reference wiring this
+//! follows (text interchange, return_tuple outputs).
+
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::Manifest;
+pub use exec::{Arg, XlaRuntime};

@@ -1,0 +1,149 @@
+//! The six methods compared in the paper (§VI), as presets over
+//! (local optimizer × data overlap × weighting policy).
+//!
+//! | method    | optimizer  | overlap | weighting            |
+//! |-----------|------------|---------|----------------------|
+//! | EASGD     | SGD        | no      | fixed α              |
+//! | EAMSGD    | momentum   | no      | fixed α              |
+//! | EAHES     | AdaHessian | no      | fixed α              |
+//! | EAHES-O   | AdaHessian | yes     | fixed α              |
+//! | EAHES-OM  | AdaHessian | yes     | oracle (knows fails) |
+//! | DEAHES-O  | AdaHessian | yes     | dynamic (the paper)  |
+
+use crate::elastic::weight::{DynamicParams, WeightPolicy};
+use crate::optim::Optimizer;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Easgd,
+    Eamsgd,
+    Eahes,
+    EahesO,
+    EahesOm,
+    DeahesO,
+}
+
+pub const ALL_METHODS: [Method; 6] = [
+    Method::Easgd,
+    Method::Eamsgd,
+    Method::Eahes,
+    Method::EahesO,
+    Method::EahesOm,
+    Method::DeahesO,
+];
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "easgd" => Some(Method::Easgd),
+            "eamsgd" => Some(Method::Eamsgd),
+            "eahes" => Some(Method::Eahes),
+            "eahes-o" => Some(Method::EahesO),
+            "eahes-om" => Some(Method::EahesOm),
+            "deahes-o" => Some(Method::DeahesO),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Easgd => "EASGD",
+            Method::Eamsgd => "EAMSGD",
+            Method::Eahes => "EAHES",
+            Method::EahesO => "EAHES-O",
+            Method::EahesOm => "EAHES-OM",
+            Method::DeahesO => "DEAHES-O",
+        }
+    }
+
+    pub fn optimizer(self) -> Optimizer {
+        match self {
+            Method::Easgd => Optimizer::Sgd,
+            Method::Eamsgd => Optimizer::Momentum,
+            _ => Optimizer::AdaHessian,
+        }
+    }
+
+    /// Does this method use the data-overlap sharding?
+    pub fn uses_overlap(self) -> bool {
+        matches!(self, Method::EahesO | Method::EahesOm | Method::DeahesO)
+    }
+
+    /// Weighting policy with the given α and dynamic parameters.
+    pub fn weight_policy(self, alpha: f64, dynamic: DynamicParams) -> WeightPolicy {
+        match self {
+            Method::EahesOm => WeightPolicy::Oracle { alpha },
+            Method::DeahesO => {
+                WeightPolicy::Dynamic(DynamicParams { alpha, ..dynamic })
+            }
+            _ => WeightPolicy::Fixed { alpha },
+        }
+    }
+
+    /// The overlap ratio the paper used per worker count (§VII): r=25% for
+    /// k=4, r=12.5% for k=8; 0 for the no-overlap methods.
+    pub fn paper_overlap_ratio(self, workers: usize) -> f64 {
+        if !self.uses_overlap() {
+            return 0.0;
+        }
+        if workers >= 8 {
+            0.125
+        } else {
+            0.25
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in ALL_METHODS {
+            assert_eq!(Method::parse(&m.name().to_ascii_lowercase()), Some(m));
+        }
+        assert_eq!(Method::parse("bogus"), None);
+    }
+
+    #[test]
+    fn optimizer_assignment() {
+        assert_eq!(Method::Easgd.optimizer(), Optimizer::Sgd);
+        assert_eq!(Method::Eamsgd.optimizer(), Optimizer::Momentum);
+        for m in [Method::Eahes, Method::EahesO, Method::EahesOm, Method::DeahesO] {
+            assert_eq!(m.optimizer(), Optimizer::AdaHessian);
+        }
+    }
+
+    #[test]
+    fn overlap_flags() {
+        assert!(!Method::Easgd.uses_overlap());
+        assert!(!Method::Eahes.uses_overlap());
+        assert!(Method::EahesO.uses_overlap());
+        assert!(Method::DeahesO.uses_overlap());
+    }
+
+    #[test]
+    fn paper_ratios() {
+        assert_eq!(Method::DeahesO.paper_overlap_ratio(4), 0.25);
+        assert_eq!(Method::DeahesO.paper_overlap_ratio(8), 0.125);
+        assert_eq!(Method::Eahes.paper_overlap_ratio(4), 0.0);
+    }
+
+    #[test]
+    fn policies() {
+        let d = DynamicParams::default();
+        assert!(matches!(
+            Method::Easgd.weight_policy(0.1, d),
+            WeightPolicy::Fixed { .. }
+        ));
+        assert!(matches!(
+            Method::EahesOm.weight_policy(0.1, d),
+            WeightPolicy::Oracle { .. }
+        ));
+        assert!(matches!(
+            Method::DeahesO.weight_policy(0.1, d),
+            WeightPolicy::Dynamic(_)
+        ));
+    }
+}

@@ -1,0 +1,265 @@
+//! Declarative command-line parsing (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, typed accessors with
+//! defaults, required options, and auto-generated `--help` text. Used by the
+//! `deahes` binary, the examples, and the bench drivers.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+pub struct Cli {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+}
+
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli { program: program.to_string(), about: about.to_string(), specs: Vec::new() }
+    }
+
+    /// `--name <value>` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// `--name <value>` option that must be provided.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for spec in &self.specs {
+            if spec.is_flag {
+                let _ = writeln!(s, "  --{:<24} {}", spec.name, spec.help);
+            } else {
+                let d = spec
+                    .default
+                    .as_ref()
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_else(|| " [required]".to_string());
+                let _ = writeln!(s, "  --{:<24} {}{}", format!("{} <v>", spec.name), spec.help, d);
+            }
+        }
+        s
+    }
+
+    /// Parse; on `--help` prints usage and exits. Unknown options error.
+    pub fn parse(self, argv: &[String]) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                values.insert(spec.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}"))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{key} is a flag, no value allowed"));
+                    }
+                    flags.push(key);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for spec in &self.specs {
+            if !spec.is_flag && !values.contains_key(&spec.name) {
+                return Err(format!("missing required option --{}", spec.name));
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_as(name)
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_as(name)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.parse_as(name)
+    }
+
+    pub fn f32(&self, name: &str) -> f32 {
+        self.parse_as(name)
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, name: &str) -> T {
+        let raw = self.get(name);
+        raw.parse().unwrap_or_else(|_| {
+            eprintln!("error: --{name} expects a {} value, got '{raw}'", std::any::type_name::<T>());
+            std::process::exit(2);
+        })
+    }
+
+    /// Comma-separated list, e.g. `--taus 1,2,4`.
+    pub fn usize_list(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse().unwrap_or_else(|_| {
+                    eprintln!("error: --{name} expects comma-separated integers");
+                    std::process::exit(2);
+                })
+            })
+            .collect()
+    }
+
+    pub fn f64_list(&self, name: &str) -> Vec<f64> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse().unwrap_or_else(|_| {
+                    eprintln!("error: --{name} expects comma-separated numbers");
+                    std::process::exit(2);
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("workers", "4", "worker count")
+            .opt("alpha", "0.1", "moving rate")
+            .req("method", "method name")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = cli().parse(&argv(&["--method", "easgd"])).unwrap();
+        assert_eq!(a.usize("workers"), 4);
+        assert_eq!(a.get("method"), "easgd");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = cli()
+            .parse(&argv(&["--method=deahes-o", "--workers=8", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.usize("workers"), 8);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&argv(&["--method", "x", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Cli::new("t", "")
+            .opt("taus", "1,2,4", "")
+            .parse(&argv(&[]))
+            .unwrap();
+        assert_eq!(a.usize_list("taus"), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn positional_passthrough() {
+        let a = cli().parse(&argv(&["--method", "x", "pos1"])).unwrap();
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+}

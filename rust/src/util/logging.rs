@@ -1,0 +1,115 @@
+//! Leveled, thread-tagged logger writing to stderr.
+//!
+//! Scope-limited substitute for env_logger (offline image has no crates):
+//! a global level set once at startup, macros that capture module + thread
+//! tag, and elapsed-time stamps relative to process start so experiment
+//! logs read like a trace.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+fn start() -> Instant {
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Initialise the logger (idempotent); also respects `DEAHES_LOG` env var.
+pub fn init(level: Level) {
+    let lvl = std::env::var("DEAHES_LOG")
+        .ok()
+        .map(|s| Level::from_str(&s))
+        .unwrap_or(level);
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+    start(); // pin t0
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = start().elapsed();
+    let name = std::thread::current().name().unwrap_or("?").to_string();
+    eprintln!(
+        "[{:>9.3}s {} {} {}] {}",
+        t.as_secs_f64(),
+        level.tag(),
+        name,
+        target,
+        msg
+    );
+}
+
+#[macro_export]
+macro_rules! log_error { ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($arg)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(Level::from_str("debug"), Level::Debug);
+        assert_eq!(Level::from_str("bogus"), Level::Info);
+    }
+
+    #[test]
+    fn enabled_respects_level() {
+        init(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        // Note: may be overridden by DEAHES_LOG in the environment; only
+        // assert when the var is absent.
+        if std::env::var("DEAHES_LOG").is_err() {
+            assert!(!enabled(Level::Debug));
+        }
+        init(Level::Info);
+    }
+}

@@ -1,0 +1,11 @@
+//! Dependency-free substrates: PRNG, JSON, CLI parsing, logging, statistics,
+//! and a mini property-testing harness.  These exist because the offline
+//! build image only vendors the `xla` crate and its transitive deps — see
+//! DESIGN.md §2 (substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,182 @@
+//! Mini property-based testing harness (proptest is unavailable offline).
+//!
+//! Provides seeded generators over common domains and a `check` runner that
+//! reports the failing case's seed + a greedy shrink over the generator's
+//! size parameter. Deliberately tiny, but it covers what the coordinator
+//! invariant tests need: many random topologies/configs/histories, each
+//! reproducible from a printed seed.
+//!
+//! ```ignore
+//! proptest::check("shards partition the data", 200, |g| {
+//!     let n = g.usize(10, 500);
+//!     ...
+//!     assert!(invariant);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// A generation context handed to every property; all randomness must come
+/// from here so that a case is reproducible from its seed.
+pub struct Gen {
+    rng: Rng,
+    /// Size scaling knob in [0,1]: the runner ramps it up so early cases are
+    /// small (fast failure on trivial bugs) and later ones large.
+    pub size: f64,
+    seed: u64,
+}
+
+impl Gen {
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        if lo == hi {
+            return lo;
+        }
+        // Scale the upper bound with `size` but always allow the full range
+        // occasionally so bounds themselves get exercised.
+        let span = hi - lo;
+        let scaled = ((span as f64 * self.size).ceil() as usize).max(1);
+        let cap = if self.rng.bernoulli(0.1) { span } else { scaled };
+        lo + self.rng.usize_below(cap + 1)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.f64()
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.usize_below(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    /// A "sometimes adversarial" float: mixes plain uniforms with special
+    /// values at the edges of the given range.
+    pub fn f64_edgy(&mut self, lo: f64, hi: f64) -> f64 {
+        match self.rng.usize_below(8) {
+            0 => lo,
+            1 => hi,
+            2 => 0.0_f64.clamp(lo, hi),
+            _ => self.f64(lo, hi),
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (failing the enclosing #[test])
+/// with the seed and case index on the first violation.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: u32, prop: F) {
+    check_seeded(name, cases, 0xDEA0_0001, prop)
+}
+
+pub fn check_seeded<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u32,
+    base_seed: u64,
+    prop: F,
+) {
+    for i in 0..cases {
+        let mut sm = base_seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        sm = sm.wrapping_mul(0xD134_2543_DE82_EF95).wrapping_add(1);
+        let size = ((i + 1) as f64 / cases as f64).min(1.0);
+        let run = |size: f64| {
+            let mut g = Gen { rng: Rng::new(sm), size, seed: sm };
+            prop(&mut g);
+        };
+        let outcome = std::panic::catch_unwind(|| run(size));
+        if let Err(payload) = outcome {
+            // Greedy size-shrink: try the same seed at smaller sizes and
+            // report the smallest size that still fails.
+            let mut failing_size = size;
+            let mut s = size / 2.0;
+            while s > 0.01 {
+                if std::panic::catch_unwind(|| run(s)).is_err() {
+                    failing_size = s;
+                    s /= 2.0;
+                } else {
+                    break;
+                }
+            }
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {i}/{cases} \
+                 (seed {sm:#x}, size {failing_size:.3}): {msg}\n\
+                 reproduce with check_seeded(\"{name}\", 1, {sm:#x}, ...)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice is identity", 50, |g| {
+            let n = g.usize(0, 100);
+            let v = g.vec_f32(n, -1.0, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |g| {
+            let n = g.usize(1, 10);
+            assert!(n > 10_000, "boom");
+        });
+    }
+
+    #[test]
+    fn cases_are_reproducible() {
+        let mut first: Vec<usize> = Vec::new();
+        // closure writes to a thread-local to observe generated values
+        use std::cell::RefCell;
+        thread_local! {
+            static SEEN: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
+        }
+        for _ in 0..2 {
+            SEEN.with(|s| s.borrow_mut().clear());
+            check_seeded("observe", 5, 0xABCD, |g| {
+                let v = g.usize(0, 1000);
+                SEEN.with(|s| s.borrow_mut().push(v));
+            });
+            let got = SEEN.with(|s| s.borrow().clone());
+            if first.is_empty() {
+                first = got;
+            } else {
+                assert_eq!(first, got);
+            }
+        }
+    }
+}

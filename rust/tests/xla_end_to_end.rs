@@ -1,0 +1,137 @@
+//! Integration: short REAL runs through the full stack (artifacts + PJRT +
+//! coordinator), both drivers. Small round counts keep this in CI budget;
+//! the long-horizon run lives in examples/e2e_train.rs.
+
+use deahes::config::{EngineKind, ExperimentConfig};
+use deahes::coordinator::{sim, FailureModel};
+use deahes::strategies::Method;
+
+fn xla_cfg() -> Option<ExperimentConfig> {
+    if !std::path::Path::new("artifacts/metadata.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    Some(ExperimentConfig {
+        engine: EngineKind::Xla { artifacts_dir: "artifacts".into(), native_opt: false },
+        workers: 2,
+        tau: 1,
+        rounds: 6,
+        lr: 0.05,
+        train_size: 512,
+        test_size: 256,
+        eval_subset: 512, // one eval batch
+        eval_every: 2,
+        ..ExperimentConfig::default()
+    })
+}
+
+#[test]
+fn sequential_real_run_produces_finite_metrics() {
+    let Some(mut cfg) = xla_cfg() else { return };
+    cfg.method = Method::DeahesO;
+    let r = sim::run(&cfg).unwrap();
+    assert!(!r.log.records.is_empty());
+    for rec in &r.log.records {
+        assert!(rec.test_acc.is_finite() && (0.0..=1.0).contains(&rec.test_acc));
+        assert!(rec.train_loss.is_finite() && rec.train_loss > 0.0);
+    }
+    // paper's failure model: some syncs should have been suppressed
+    let failed: u32 = r.log.records.iter().map(|x| x.syncs_failed).sum();
+    let ok: u32 = r.log.records.iter().map(|x| x.syncs_ok).sum();
+    assert!(ok > 0, "no successful syncs at all");
+    let _ = failed; // 6 rounds x 2 workers: suppression is possible but not guaranteed
+}
+
+#[test]
+fn sequential_real_run_is_deterministic() {
+    let Some(mut cfg) = xla_cfg() else { return };
+    cfg.method = Method::Eahes;
+    cfg.rounds = 4;
+    let a = sim::run(&cfg).unwrap();
+    let b = sim::run(&cfg).unwrap();
+    for (x, y) in a.log.records.iter().zip(&b.log.records) {
+        assert!(
+            (x.train_loss - y.train_loss).abs() < 1e-6,
+            "round {}: {} vs {}",
+            x.round,
+            x.train_loss,
+            y.train_loss
+        );
+        assert_eq!(x.test_acc, y.test_acc);
+    }
+}
+
+#[test]
+fn threaded_real_run_completes_with_per_thread_clients() {
+    let Some(mut cfg) = xla_cfg() else { return };
+    cfg.method = Method::DeahesO;
+    cfg.threaded = true;
+    cfg.rounds = 3;
+    let r = sim::run(&cfg).unwrap();
+    assert_eq!(r.log.records.last().unwrap().round, 2);
+    // both worker engines + master engine reported call stats
+    assert!(r.perf.contains("grad_hess"), "worker engine stats missing");
+    assert!(r.perf.contains("elastic"), "master engine stats missing");
+}
+
+#[test]
+fn sgd_family_methods_run_on_artifacts() {
+    let Some(mut cfg) = xla_cfg() else { return };
+    cfg.rounds = 3;
+    for m in [Method::Easgd, Method::Eamsgd] {
+        cfg.method = m;
+        let r = sim::run(&cfg).unwrap();
+        assert!(r.log.records.last().unwrap().train_loss.is_finite(), "{}", m.name());
+    }
+}
+
+#[test]
+fn paper_ordering_under_burst_failures() {
+    // The §VII headline on the REAL engine: under node-down burst outages,
+    // the oracle and the dynamic policy must beat fixed α. (Under the
+    // paper's milder iid-1/3 model the gaps are within seed noise at CI
+    // horizons — see EXPERIMENTS.md; bursts make the staleness effect
+    // unambiguous at 60 rounds.)
+    let Some(mut cfg) = xla_cfg() else { return };
+    cfg.workers = 4;
+    cfg.tau = 2;
+    cfg.rounds = 80;
+    cfg.lr = 0.1;
+    cfg.train_size = 8192;
+    cfg.test_size = 2048;
+    cfg.overlap_ratio = 0.25;
+    cfg.eval_every = 5;
+    cfg.failure = FailureModel::Burst { p_start: 0.12, mean_len: 8.0 };
+    let run_m = |method: Method, cfg: &ExperimentConfig| {
+        let mut c = cfg.clone();
+        c.method = method;
+        sim::run(&c).unwrap().log.tail_train_loss(4)
+    };
+    let fixed = run_m(Method::EahesO, &cfg);
+    let dynamic = run_m(Method::DeahesO, &cfg);
+    let oracle = run_m(Method::EahesOm, &cfg);
+    // Shape claim with slack for single-seed noise: mitigation must not be
+    // worse than fixed α (at this calibrated config it is measurably
+    // better: ~0.28/0.30 vs ~0.49 train loss — EXPERIMENTS.md §Ordering).
+    assert!(
+        dynamic <= fixed * 1.10,
+        "DEAHES-O train loss {dynamic} worse than EAHES-O {fixed}"
+    );
+    assert!(
+        oracle <= fixed * 1.10,
+        "EAHES-OM train loss {oracle} worse than EAHES-O {fixed}"
+    );
+}
+
+#[test]
+fn failure_free_run_has_no_suppressed_syncs() {
+    let Some(mut cfg) = xla_cfg() else { return };
+    cfg.method = Method::EahesO;
+    cfg.failure = FailureModel::None;
+    cfg.rounds = 3;
+    let r = sim::run(&cfg).unwrap();
+    for rec in &r.log.records {
+        assert_eq!(rec.syncs_failed, 0);
+        assert_eq!(rec.syncs_ok, cfg.workers as u32);
+    }
+}
