@@ -76,7 +76,10 @@ fn main() -> anyhow::Result<()> {
         "dynamic weighting never corrected despite failures"
     );
 
-    println!("\n== phase 2: threaded driver (true async master/worker), {} rounds ==", rounds.min(60));
+    println!(
+        "\n== phase 2: threaded driver (true async master/worker), {} rounds ==",
+        rounds.min(60)
+    );
     let mut tcfg = cfg.clone();
     tcfg.threaded = true;
     tcfg.rounds = rounds.min(60);

@@ -4,16 +4,22 @@
 //! fig4_fig5_grid and tests/xla_end_to_end.rs).
 //!
 //!   cargo bench --bench ablations
+//!   BENCH_JOBS=4 cargo bench --bench ablations          # trials in parallel
+//!   BENCH_RUN_DIR=runs/abl BENCH_RESUME=1 ...           # resumable
+//!
+//! The whole battery compiles into ONE trial plan and executes through the
+//! schedule engine, so every sweep axis shares the backend, committer and
+//! run-sink machinery of the figure sweeps.
 //!
 //! Sweeps: detector sign, failure semantics, gossip mode, knee constant,
-//! raw-score history depth p.
+//! raw-score history depth p, communication period tau.
 
 mod common;
 
 use deahes::config::{EngineKind, ExperimentConfig, GossipMode};
 use deahes::coordinator::failure::{FailStyle, FailureModel};
-use deahes::coordinator::sim;
 use deahes::elastic::weight::Detector;
+use deahes::schedule::{self, TrialOutcome, TrialPlan};
 use deahes::strategies::Method;
 
 fn base() -> ExperimentConfig {
@@ -30,66 +36,97 @@ fn base() -> ExperimentConfig {
     }
 }
 
-fn report(label: &str, cfg: &ExperimentConfig) -> anyhow::Result<()> {
-    let r = sim::run(cfg)?;
-    let last = r.log.records.last().unwrap();
-    let corrections: u64 = r.worker_stats.iter().map(|s| s.1).sum();
-    let served: u64 = r.worker_stats.iter().map(|s| s.0).sum();
+/// (section, label, config) — one trial per ablation point.
+fn cases() -> Vec<(&'static str, String, ExperimentConfig)> {
+    let mut out = Vec::new();
+
+    for det in [Detector::PaperSign, Detector::DriftSign] {
+        let mut cfg = base();
+        cfg.detector = det;
+        out.push((
+            "raw-score sign convention (DESIGN.md §6.3)",
+            format!("detector = {}", det.name()),
+            cfg,
+        ));
+    }
+    for style in [FailStyle::Node, FailStyle::Comm] {
+        let mut cfg = base();
+        cfg.fail_style = style;
+        out.push((
+            "failure semantics (DESIGN.md §6.4)",
+            format!("fail-style = {}", style.name()),
+            cfg,
+        ));
+    }
+    for mode in [GossipMode::Peers, GossipMode::Stale] {
+        let mut cfg = base();
+        cfg.gossip = mode;
+        out.push(("gossip master-estimate source (§6.5)", format!("gossip = {mode:?}"), cfg));
+    }
+    for knee in [-0.01, -0.05, -0.2, -0.5] {
+        let mut cfg = base();
+        cfg.knee = knee;
+        out.push(("knee constant k (§6.3)", format!("knee = {knee}"), cfg));
+    }
+    for p in [1usize, 2, 4, 8] {
+        let mut cfg = base();
+        cfg.score_p = p;
+        out.push(("raw-score history depth p (§6.6)", format!("score history p = {p}"), cfg));
+    }
+    for tau in [1usize, 2, 4, 8] {
+        let mut cfg = base();
+        cfg.tau = tau;
+        out.push((
+            "communication period tau (robustness, paper §VII)",
+            format!("tau = {tau}"),
+            cfg,
+        ));
+    }
+    out
+}
+
+fn report(label: &str, o: &TrialOutcome) {
+    let last = o.record.log.records.last().expect("trial produced records");
+    let corrections: u64 = o.record.worker_stats.iter().map(|s| s.1).sum();
+    let served: u64 = o.record.worker_stats.iter().map(|s| s.0).sum();
     println!(
-        "{label:<44} loss {:>9.4}  corrections {:>4}/{:<4} syncs  h2̄ {:>5.3}",
+        "{label:<44} loss {:>9.4}  corrections {:>4}/{:<4} syncs  h2̄ {:>5.3}{}",
         last.test_loss,
         corrections,
         served,
         last.mean_h2,
+        if o.cached { "  [resumed]" } else { "" },
     );
-    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
     deahes::util::logging::init(deahes::util::logging::Level::Warn);
 
-    println!("== ablation: raw-score sign convention (DESIGN.md §6.3) ==");
-    for det in [Detector::PaperSign, Detector::DriftSign] {
-        let mut cfg = base();
-        cfg.detector = det;
-        report(&format!("detector = {}", det.name()), &cfg)?;
+    let cases = cases();
+    let mut plan = TrialPlan::new();
+    for (section, label, cfg) in &cases {
+        plan.push_cell(&format!("ablation/{section}/{label}"), label, cfg, 1);
+    }
+    let result = common::timed("ablation battery", || {
+        schedule::execute_plan(&plan, &common::schedule_options())
+    })?;
+
+    let mut current_section = "";
+    for ((section, label, _), outcome) in cases.iter().zip(&result.outcomes) {
+        if *section != current_section {
+            if !current_section.is_empty() {
+                println!();
+            }
+            println!("== ablation: {section} ==");
+            current_section = *section;
+        }
+        report(label, outcome);
     }
 
-    println!("\n== ablation: failure semantics (DESIGN.md §6.4) ==");
-    for style in [FailStyle::Node, FailStyle::Comm] {
-        let mut cfg = base();
-        cfg.fail_style = style;
-        report(&format!("fail-style = {}", style.name()), &cfg)?;
-    }
-
-    println!("\n== ablation: gossip master-estimate source (§6.5) ==");
-    for mode in [GossipMode::Peers, GossipMode::Stale] {
-        let mut cfg = base();
-        cfg.gossip = mode;
-        report(&format!("gossip = {mode:?}"), &cfg)?;
-    }
-
-    println!("\n== ablation: knee constant k (§6.3) ==");
-    for knee in [-0.01, -0.05, -0.2, -0.5] {
-        let mut cfg = base();
-        cfg.knee = knee;
-        report(&format!("knee = {knee}"), &cfg)?;
-    }
-
-    println!("\n== ablation: raw-score history depth p (§6.6) ==");
-    for p in [1usize, 2, 4, 8] {
-        let mut cfg = base();
-        cfg.score_p = p;
-        report(&format!("score history p = {p}"), &cfg)?;
-    }
-
-    println!("\n== ablation: communication period tau (robustness, paper §VII) ==");
-    for tau in [1usize, 2, 4, 8] {
-        let mut cfg = base();
-        cfg.tau = tau;
-        report(&format!("tau = {tau}"), &cfg)?;
-    }
-
-    println!("\n(quad engine: mechanics only — see fig4_fig5_grid for real-engine ordering)");
+    println!(
+        "\n[schedule] backend={} executed={} resumed={}",
+        result.backend, result.executed, result.skipped
+    );
+    println!("(quad engine: mechanics only — see fig4_fig5_grid for real-engine ordering)");
     Ok(())
 }

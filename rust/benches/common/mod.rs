@@ -10,11 +10,16 @@
 //!                 algorithm itself with closed-form compute
 //!   BENCH_LR      learning rate (default 0.05; paper's 0.01 needs many
 //!                 more rounds on the synthetic corpus)
+//!   BENCH_JOBS    trials in flight (default 1 = sequential backend)
+//!   BENCH_RUN_DIR persist finished trials to <dir>/runs.jsonl
+//!   BENCH_RESUME  1 = skip trials already committed in BENCH_RUN_DIR
 
 #![allow(dead_code)] // each bench binary uses a subset of this harness
 
 use deahes::config::{EngineKind, ExperimentConfig};
+use deahes::schedule::ScheduleOptions;
 use deahes::util::logging::{self, Level};
+use std::path::PathBuf;
 use std::time::Instant;
 
 pub fn env_u64(name: &str, default: u64) -> u64 {
@@ -43,6 +48,23 @@ pub fn base_config() -> ExperimentConfig {
 
 pub fn seeds() -> u64 {
     env_u64("BENCH_SEEDS", 3)
+}
+
+/// Schedule options from BENCH_JOBS / BENCH_RUN_DIR / BENCH_RESUME.
+pub fn schedule_options() -> ScheduleOptions {
+    let run_dir = std::env::var("BENCH_RUN_DIR")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .map(PathBuf::from);
+    let resume_requested = std::env::var("BENCH_RESUME").as_deref() == Ok("1");
+    if resume_requested && run_dir.is_none() {
+        eprintln!("[bench] BENCH_RESUME=1 ignored: set BENCH_RUN_DIR to resume from a run sink");
+    }
+    ScheduleOptions {
+        jobs: env_u64("BENCH_JOBS", 1).max(1) as usize,
+        resume: resume_requested && run_dir.is_some(),
+        run_dir,
+    }
 }
 
 /// Time a closure and report.

@@ -4,6 +4,7 @@
 //!
 //!   cargo bench --bench fig3_overlap
 //!   BENCH_SEEDS=1 BENCH_ROUNDS=30 cargo bench --bench fig3_overlap   # smoke
+//!   BENCH_JOBS=4 BENCH_RUN_DIR=runs/fig3 ...                         # parallel + resumable
 //!
 //! Expected shape (paper): accuracy is non-decreasing in r — the shared
 //! subset lowers the variance of per-worker Hessian estimates.
@@ -21,9 +22,13 @@ fn main() -> anyhow::Result<()> {
     let ratios = [0.0, 0.125, 0.25, 0.375, 0.5];
     let seeds = common::seeds();
 
-    println!("== Fig 3 reproduction: overlap ratios {ratios:?}, k=4, tau=1, {seeds} seed(s), {} rounds ==", base.rounds);
+    let opts = common::schedule_options();
+    println!(
+        "== Fig 3 reproduction: overlap ratios {ratios:?}, k=4, tau=1, {seeds} seed(s), {} rounds ==",
+        base.rounds
+    );
     let out = common::timed("fig3 sweep", || {
-        experiments::fig3_overlap_sweep(&base, &ratios, seeds)
+        experiments::fig3_overlap_sweep_with(&base, &ratios, seeds, &opts)
     })?;
 
     let chart: Vec<(&str, Vec<f64>)> =

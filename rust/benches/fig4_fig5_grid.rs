@@ -4,6 +4,7 @@
 //!
 //!   cargo bench --bench fig4_fig5_grid
 //!   BENCH_SEEDS=1 BENCH_ROUNDS=30 BENCH_GRID=small cargo bench --bench fig4_fig5_grid
+//!   BENCH_JOBS=4 BENCH_RUN_DIR=runs/grid BENCH_RESUME=1 ...   # parallel + resumable
 //!
 //! BENCH_GRID: full  — k∈{4,8} × τ∈{1,2,4} (the paper's grid)
 //!             small — k=4 × τ∈{1,2} (CI-sized)
@@ -31,8 +32,9 @@ fn main() -> anyhow::Result<()> {
         "== Fig 4+5 reproduction: 6 methods × k{workers:?} × tau{taus:?}, {seeds} seed(s), {} rounds ==",
         base.rounds
     );
+    let opts = common::schedule_options();
     let cells = common::timed("fig4/5 grid", || {
-        experiments::fig45_grid(&base, &workers, &taus, &ALL_METHODS, seeds)
+        experiments::fig45_grid_with(&base, &workers, &taus, &ALL_METHODS, seeds, &opts)
     })?;
 
     for cell in &cells {

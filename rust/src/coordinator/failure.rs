@@ -62,19 +62,19 @@ pub enum FailureModel {
 impl FailureModel {
     pub fn parse(spec: &str) -> Option<FailureModel> {
         // grammar: "none" | "bernoulli:P" | "burst:P,L" | "permanent:R,w0+w1"
+        // P is a probability in [0,1]; L is a mean burst length >= 1.
         let (kind, rest) = match spec.split_once(':') {
             Some((k, r)) => (k, r),
             None => (spec, ""),
         };
+        let prob = |s: &str| s.parse::<f64>().ok().filter(|p| (0.0..=1.0).contains(p));
         match kind {
-            "none" => Some(FailureModel::None),
-            "bernoulli" => rest.parse().ok().map(|p| FailureModel::Bernoulli { p }),
+            "none" if rest.is_empty() => Some(FailureModel::None),
+            "bernoulli" => prob(rest).map(|p| FailureModel::Bernoulli { p }),
             "burst" => {
                 let (p, l) = rest.split_once(',')?;
-                Some(FailureModel::Burst {
-                    p_start: p.parse().ok()?,
-                    mean_len: l.parse().ok()?,
-                })
+                let mean_len = l.parse::<f64>().ok().filter(|&x| x >= 1.0)?;
+                Some(FailureModel::Burst { p_start: prob(p)?, mean_len })
             }
             "permanent" => {
                 let (r, ws) = rest.split_once(',')?;
@@ -158,6 +158,64 @@ mod tests {
             Some(FailureModel::Permanent { from_round: 10, workers: vec![1, 3] })
         );
         assert_eq!(FailureModel::parse("what"), None);
+    }
+
+    /// `describe_spec` is the inverse of `parse` over the whole grammar.
+    #[test]
+    fn whole_grammar_roundtrips() {
+        let models = [
+            FailureModel::None,
+            FailureModel::Bernoulli { p: 0.0 },
+            FailureModel::Bernoulli { p: 1.0 / 3.0 },
+            FailureModel::Bernoulli { p: 1.0 },
+            FailureModel::Burst { p_start: 0.15, mean_len: 1.0 },
+            FailureModel::Burst { p_start: 0.05, mean_len: 6.5 },
+            FailureModel::Permanent { from_round: 0, workers: vec![0] },
+            FailureModel::Permanent { from_round: 10, workers: vec![0, 2, 7] },
+        ];
+        for m in models {
+            let spec = m.describe_spec();
+            assert_eq!(FailureModel::parse(&spec), Some(m), "spec '{spec}'");
+        }
+    }
+
+    #[test]
+    fn malformed_specs_rejected() {
+        let bad = [
+            "",
+            "none:extra",
+            "bernoulli",
+            "bernoulli:",
+            "bernoulli:abc",
+            "bernoulli:-0.1",
+            "bernoulli:1.5",
+            "burst:0.1",
+            "burst:0.1,",
+            "burst:,4",
+            "burst:0.1,0.5",
+            "burst:1.5,4",
+            "burst:a,b",
+            "permanent:5",
+            "permanent:5,",
+            "permanent:x,1",
+            "permanent:5,a+b",
+            "permanent:5,1+",
+            "bogus",
+            "bogus:1",
+        ];
+        for spec in bad {
+            assert_eq!(FailureModel::parse(spec), None, "'{spec}' should not parse");
+        }
+    }
+
+    #[test]
+    fn fail_style_roundtrips_and_rejects() {
+        for style in [FailStyle::Node, FailStyle::Comm] {
+            assert_eq!(FailStyle::parse(style.name()), Some(style));
+        }
+        for bad in ["", "Node", "COMM", "link", "node "] {
+            assert_eq!(FailStyle::parse(bad), None, "'{bad}' should not parse");
+        }
     }
 
     #[test]

@@ -164,6 +164,34 @@ impl RunResult {
     pub fn final_acc(&self) -> f64 {
         self.log.final_acc()
     }
+
+    /// Serialize everything except the perf text (host-specific diagnostics).
+    /// The schedule sink's `TrialRecord` persists the same fields minus
+    /// `wall_secs` via the same `MetricsLog`/`SimClockReport`/pair-array
+    /// encoders, so the two stay in sync by construction.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("records", self.log.to_json()),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("sim", self.sim.to_json()),
+            ("worker_stats", Json::arr_u64_pairs(&self.worker_stats)),
+        ])
+    }
+
+    /// Inverse of [`RunResult::to_json`]; `perf` comes back empty and
+    /// `wall_secs` is whatever the export recorded. Consumed by tooling
+    /// that re-reads `--save-json` exports (and the planned `deahes
+    /// resume` figure re-materialization — see ROADMAP).
+    pub fn from_json(j: &crate::util::json::Json) -> Result<RunResult> {
+        Ok(RunResult {
+            log: MetricsLog::from_json(j.get("records"))?,
+            wall_secs: j.get("wall_secs").as_f64().unwrap_or(0.0),
+            sim: SimClockReport::from_json(j.get("sim")),
+            perf: String::new(),
+            worker_stats: j.get("worker_stats").as_u64_pairs(),
+        })
+    }
 }
 
 /// Entry point: dispatches on `cfg.threaded`.
@@ -338,7 +366,14 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
                     let mut evaluator = setup_ref.make_evaluator();
                     while let Ok(msg) = master_rx.recv() {
                         match msg {
-                            ToMaster::Sync { worker, round, mut theta_w, raw_score, missed, reply } => {
+                            ToMaster::Sync {
+                                worker,
+                                round,
+                                mut theta_w,
+                                raw_score,
+                                missed,
+                                reply,
+                            } => {
                                 let ev = master.serve_sync(
                                     engine.as_mut(),
                                     worker,

@@ -38,6 +38,30 @@ pub struct SimClockReport {
     pub rounds: u64,
 }
 
+impl SimClockReport {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("virtual_secs", Json::num(self.virtual_secs)),
+            ("master_utilization", Json::num(self.master_utilization)),
+            ("mean_sync_wait", Json::num(self.mean_sync_wait)),
+            ("p95_style_max_wait", Json::num(self.p95_style_max_wait)),
+            ("rounds", Json::num(self.rounds as f64)),
+        ])
+    }
+
+    /// Missing fields read as zero (reports are diagnostics, not config).
+    pub fn from_json(j: &crate::util::json::Json) -> SimClockReport {
+        SimClockReport {
+            virtual_secs: j.get("virtual_secs").as_f64().unwrap_or(0.0),
+            master_utilization: j.get("master_utilization").as_f64().unwrap_or(0.0),
+            mean_sync_wait: j.get("mean_sync_wait").as_f64().unwrap_or(0.0),
+            p95_style_max_wait: j.get("p95_style_max_wait").as_f64().unwrap_or(0.0),
+            rounds: j.get("rounds").as_f64().unwrap_or(0.0) as u64,
+        }
+    }
+}
+
 impl SimClock {
     pub fn new(t_step: f64, t_sync: f64) -> SimClock {
         SimClock {
@@ -118,6 +142,17 @@ mod tests {
         let dt = c.round(8, 1, 0);
         assert!((dt - 0.01).abs() < 1e-12);
         assert_eq!(c.report().master_utilization, 0.0);
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let mut c = SimClock::new(0.01, 0.002);
+        c.round(4, 2, 3);
+        let r = c.report();
+        let back = SimClockReport::from_json(&r.to_json());
+        assert_eq!(back.virtual_secs.to_bits(), r.virtual_secs.to_bits());
+        assert_eq!(back.rounds, r.rounds);
+        assert_eq!(back.master_utilization.to_bits(), r.master_utilization.to_bits());
     }
 
     #[test]

@@ -10,9 +10,17 @@
 //! Every driver averages over `seeds` runs (the paper uses 3) and returns
 //! per-round mean series, so the bench binaries and examples print exactly
 //! the rows/series the paper plots.
+//!
+//! Execution is delegated to [`crate::schedule`]: each sweep flattens into a
+//! `TrialPlan` and runs through a pluggable backend with deterministic
+//! commit and an optional resumable JSONL run sink. The `_with` variants
+//! accept [`crate::schedule::ScheduleOptions`] (`--jobs`, `--run-dir`,
+//! `--resume`); the plain variants keep the classic in-memory sequential
+//! behaviour.
 
 pub mod runner;
 
 pub use runner::{
-    averaged_run, fig3_overlap_sweep, fig45_grid, summary_table, AveragedSeries, GridCell,
+    averaged_run, averaged_run_with, fig3_overlap_sweep, fig3_overlap_sweep_with, fig45_grid,
+    fig45_grid_with, series_by_cell, summary_table, AveragedSeries, GridCell,
 };

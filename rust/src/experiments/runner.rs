@@ -1,10 +1,18 @@
 //! Multi-seed experiment execution and the figure sweeps.
+//!
+//! Every sweep compiles to a flat [`TrialPlan`] and executes through the
+//! [`crate::schedule`] subsystem: a pluggable backend (sequential or
+//! `--jobs N` thread pool) runs the trials, the committer re-orders
+//! completions back into plan order, and an optional JSONL run sink makes
+//! each finished trial durable so a crashed or tweaked sweep resumes instead
+//! of re-running. Aggregation below only ever sees plan-ordered outcomes,
+//! so the averaged series are identical for every backend.
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::sim;
+use crate::log_warn;
+use crate::schedule::{self, ScheduleOptions, TrialOutcome, TrialPlan};
 use crate::strategies::Method;
 use crate::util::stats::mean;
-use crate::{log_info, log_warn};
 use anyhow::Result;
 use std::fmt::Write as _;
 
@@ -24,35 +32,44 @@ pub struct AveragedSeries {
     pub virtual_secs: f64,
 }
 
-/// Run `cfg` once per seed offset and average the per-round series.
-pub fn averaged_run(cfg: &ExperimentConfig, seeds: u64, label: &str) -> Result<AveragedSeries> {
-    assert!(seeds >= 1);
-    let mut per_seed: Vec<sim::RunResult> = Vec::new();
-    for s in 0..seeds {
-        let mut c = cfg.clone();
-        c.seed = cfg.seed + s * 1_000;
-        let r = sim::run(&c)?;
-        log_info!(
-            "{label} seed {}: final acc {:.4} ({} rounds, {:.1}s wall)",
-            c.seed,
-            r.final_acc(),
-            c.rounds,
-            r.wall_secs
-        );
-        per_seed.push(r);
+impl AveragedSeries {
+    /// The deterministic content: everything except wall-clock. Two runs of
+    /// the same plan through any backend must agree on this string exactly.
+    pub fn deterministic_digest(&self) -> String {
+        format!(
+            "{}|{:?}|{:?}|{:?}|{:?}|{}|{}|{}|{}",
+            self.label,
+            self.rounds,
+            self.test_acc.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            self.test_loss.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            self.train_loss.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            self.final_acc_mean.to_bits(),
+            self.final_acc_std.to_bits(),
+            self.final_train_loss.to_bits(),
+            self.virtual_secs.to_bits(),
+        )
     }
-    // Align on the first run's eval rounds (identical by construction).
-    let rounds: Vec<u64> = per_seed[0].log.records.iter().map(|r| r.round).collect();
-    let npts = per_seed
+}
+
+/// Average one cell's outcomes (plan-ordered) into a series.
+fn average_cell(label: &str, outcomes: &[&TrialOutcome]) -> AveragedSeries {
+    assert!(!outcomes.is_empty());
+    let npts = outcomes
         .iter()
-        .map(|r| r.log.records.len())
+        .map(|o| o.record.log.records.len())
         .min()
         .unwrap_or(0);
-    if per_seed.iter().any(|r| r.log.records.len() != npts) {
+    if outcomes.iter().any(|o| o.record.log.records.len() != npts) {
         log_warn!("{label}: eval-point counts differ across seeds; truncating to {npts}");
     }
+    // Align on the first run's eval rounds, truncated like the series so the
+    // vectors always agree in length.
+    let rounds: Vec<u64> = outcomes[0].record.log.records[..npts]
+        .iter()
+        .map(|r| r.round)
+        .collect();
     let avg_at = |f: &dyn Fn(&crate::metrics::RoundRecord) -> f64, i: usize| -> f64 {
-        mean(&per_seed.iter().map(|r| f(&r.log.records[i])).collect::<Vec<_>>())
+        mean(&outcomes.iter().map(|o| f(&o.record.log.records[i])).collect::<Vec<_>>())
     };
     let mut test_acc = Vec::with_capacity(npts);
     let mut test_loss = Vec::with_capacity(npts);
@@ -62,23 +79,69 @@ pub fn averaged_run(cfg: &ExperimentConfig, seeds: u64, label: &str) -> Result<A
         test_loss.push(avg_at(&|r| r.test_loss, i));
         train_loss.push(avg_at(&|r| r.train_loss, i));
     }
-    let tails: Vec<f64> = per_seed.iter().map(|r| r.log.tail_acc(10)).collect();
-    let tail_mean = mean(&tails);
-    let tail_std = crate::util::stats::std_dev(&tails);
-    Ok(AveragedSeries {
+    let tails: Vec<f64> = outcomes.iter().map(|o| o.record.log.tail_acc(10)).collect();
+    AveragedSeries {
         label: label.to_string(),
-        rounds: rounds[..npts].to_vec(),
+        rounds,
         test_acc,
         test_loss,
         train_loss,
-        final_acc_mean: tail_mean,
-        final_acc_std: tail_std,
+        final_acc_mean: mean(&tails),
+        final_acc_std: crate::util::stats::std_dev(&tails),
         final_train_loss: mean(
-            &per_seed.iter().map(|r| r.log.tail_train_loss(10)).collect::<Vec<_>>(),
+            &outcomes.iter().map(|o| o.record.log.tail_train_loss(10)).collect::<Vec<_>>(),
         ),
-        wall_secs: per_seed.iter().map(|r| r.wall_secs).sum(),
-        virtual_secs: mean(&per_seed.iter().map(|r| r.sim.virtual_secs).collect::<Vec<_>>()),
-    })
+        wall_secs: outcomes.iter().map(|o| o.wall_secs).sum(),
+        virtual_secs: mean(
+            &outcomes.iter().map(|o| o.record.sim.virtual_secs).collect::<Vec<_>>(),
+        ),
+    }
+}
+
+/// Group plan-ordered outcomes by cell and average each group.
+pub fn series_by_cell(plan: &TrialPlan, outcomes: &[TrialOutcome]) -> Vec<AveragedSeries> {
+    assert_eq!(plan.slots.len(), outcomes.len(), "one outcome per plan slot");
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < plan.slots.len() {
+        let cell = &plan.slots[i].cell;
+        let label = &plan.slots[i].label;
+        let mut group: Vec<&TrialOutcome> = Vec::new();
+        let mut j = i;
+        while j < plan.slots.len() && plan.slots[j].cell == *cell {
+            group.push(&outcomes[j]);
+            j += 1;
+        }
+        out.push(average_cell(label, &group));
+        i = j;
+    }
+    out
+}
+
+/// Run `cfg` once per derived seed and average the per-round series.
+///
+/// `label` doubles as the plan's cell key: it names the series AND
+/// namespaces the per-seed RNG derivation (see `schedule::trial_seed`), so
+/// the same (config, label) pair always reproduces the same numbers while
+/// two differently-labelled runs of one config draw independent seeds.
+pub fn averaged_run(cfg: &ExperimentConfig, seeds: u64, label: &str) -> Result<AveragedSeries> {
+    averaged_run_with(cfg, seeds, label, &ScheduleOptions::default())
+}
+
+pub fn averaged_run_with(
+    cfg: &ExperimentConfig,
+    seeds: u64,
+    label: &str,
+    opts: &ScheduleOptions,
+) -> Result<AveragedSeries> {
+    assert!(seeds >= 1);
+    let mut plan = TrialPlan::new();
+    plan.push_cell(label, label, cfg, seeds);
+    let report = schedule::execute_plan(&plan, opts)?;
+    Ok(series_by_cell(&plan, &report.outcomes)
+        .into_iter()
+        .next()
+        .expect("plan has exactly one cell"))
 }
 
 /// Fig. 3: overlap-ratio sweep {0, 12.5, 25, 37.5, 50}% on EAHES-O
@@ -88,15 +151,27 @@ pub fn fig3_overlap_sweep(
     ratios: &[f64],
     seeds: u64,
 ) -> Result<Vec<AveragedSeries>> {
-    let mut out = Vec::new();
+    fig3_overlap_sweep_with(base, ratios, seeds, &ScheduleOptions::default())
+}
+
+pub fn fig3_overlap_sweep_with(
+    base: &ExperimentConfig,
+    ratios: &[f64],
+    seeds: u64,
+    opts: &ScheduleOptions,
+) -> Result<Vec<AveragedSeries>> {
+    let mut plan = TrialPlan::new();
     for &r in ratios {
         let mut cfg = base.clone();
         cfg.method = Method::EahesO;
         cfg.overlap_ratio = r;
         let label = format!("r={:.1}%", r * 100.0);
-        out.push(averaged_run(&cfg, seeds, &label)?);
+        // Key on the full-precision ratio, not the rounded display label:
+        // two ratios that print alike must stay separate cells.
+        plan.push_cell(&format!("fig3/r={r}"), &label, &cfg, seeds);
     }
-    Ok(out)
+    let report = schedule::execute_plan(&plan, opts)?;
+    Ok(series_by_cell(&plan, &report.outcomes))
 }
 
 /// One cell of the Fig-4/5 grid.
@@ -116,19 +191,45 @@ pub fn fig45_grid(
     methods: &[Method],
     seeds: u64,
 ) -> Result<Vec<GridCell>> {
-    let mut cells = Vec::new();
+    fig45_grid_with(base, workers, taus, methods, seeds, &ScheduleOptions::default())
+}
+
+pub fn fig45_grid_with(
+    base: &ExperimentConfig,
+    workers: &[usize],
+    taus: &[usize],
+    methods: &[Method],
+    seeds: u64,
+    opts: &ScheduleOptions,
+) -> Result<Vec<GridCell>> {
+    // Duplicate axis values (repeated methods, `--taus 1,1`, ...) are safe:
+    // TrialPlan::push_cell suffixes repeated cell keys, so every requested
+    // grid column stays its own cell for the reassembly below.
+    let mut plan = TrialPlan::new();
     for &k in workers {
         for &tau in taus {
-            let mut series = Vec::new();
             for &m in methods {
                 let mut cfg = base.clone();
                 cfg.method = m;
                 cfg.workers = k;
                 cfg.tau = tau;
                 cfg.overlap_ratio = m.paper_overlap_ratio(k);
-                series.push(averaged_run(&cfg, seeds, m.name())?);
+                plan.push_cell(
+                    &format!("fig45/k={k}/tau={tau}/{}", m.name()),
+                    m.name(),
+                    &cfg,
+                    seeds,
+                );
             }
-            cells.push(GridCell { workers: k, tau, series });
+        }
+    }
+    let report = schedule::execute_plan(&plan, opts)?;
+    let mut series = series_by_cell(&plan, &report.outcomes).into_iter();
+    let mut cells = Vec::new();
+    for &k in workers {
+        for &tau in taus {
+            let s: Vec<AveragedSeries> = series.by_ref().take(methods.len()).collect();
+            cells.push(GridCell { workers: k, tau, series: s });
         }
     }
     Ok(cells)
@@ -160,14 +261,18 @@ pub fn summary_table(cells: &[GridCell]) -> String {
 mod tests {
     use super::*;
     use crate::config::EngineKind;
+    use crate::coordinator::simclock::SimClockReport;
+    use crate::metrics::{MetricsLog, RoundRecord};
+    use crate::schedule::TrialRecord;
 
     fn quad_cfg() -> ExperimentConfig {
-        let mut c = ExperimentConfig::default();
-        c.engine = EngineKind::Quadratic { dim: 32, heterogeneity: 0.2, noise: 0.02 };
-        c.rounds = 12;
-        c.workers = 3;
-        c.eval_subset = 16;
-        c
+        ExperimentConfig {
+            engine: EngineKind::Quadratic { dim: 32, heterogeneity: 0.2, noise: 0.02 },
+            rounds: 12,
+            workers: 3,
+            eval_subset: 16,
+            ..ExperimentConfig::default()
+        }
     }
 
     #[test]
@@ -199,5 +304,83 @@ mod tests {
         let t = summary_table(&cells);
         assert!(t.contains("EASGD"));
         assert!(t.contains("k=2 tau=1"));
+    }
+
+    fn outcome_with_rounds(n: u64) -> TrialOutcome {
+        let mut log = MetricsLog::default();
+        for round in 0..n {
+            log.push(RoundRecord {
+                round,
+                test_acc: 0.5,
+                test_loss: 1.0,
+                train_loss: 2.0,
+                syncs_ok: 1,
+                syncs_failed: 0,
+                mean_h1: 0.1,
+                mean_h2: 0.1,
+                mean_score: 0.0,
+            });
+        }
+        TrialOutcome {
+            record: TrialRecord {
+                fingerprint: format!("fp-{n}"),
+                cell: "c".into(),
+                label: "c".into(),
+                seed_index: 0,
+                config: quad_cfg(),
+                log,
+                sim: SimClockReport {
+                    virtual_secs: 1.0,
+                    master_utilization: 0.0,
+                    mean_sync_wait: 0.0,
+                    p95_style_max_wait: 0.0,
+                    rounds: n,
+                },
+                worker_stats: vec![],
+            },
+            wall_secs: 0.0,
+            cached: false,
+        }
+    }
+
+    /// Alignment invariant: when seeds disagree on eval-point counts, ALL
+    /// four vectors (rounds included) truncate to the shortest seed. Pinned
+    /// by test because nothing else exercises the unequal-length path.
+    #[test]
+    fn unequal_seed_lengths_truncate_rounds_too() {
+        let long = outcome_with_rounds(10);
+        let short = outcome_with_rounds(6);
+        let s = average_cell("t", &[&long, &short]);
+        assert_eq!(s.rounds.len(), 6);
+        assert_eq!(s.test_acc.len(), 6);
+        assert_eq!(s.test_loss.len(), 6);
+        assert_eq!(s.train_loss.len(), 6);
+    }
+
+    /// Regression: duplicate methods used to merge into one cell and shift
+    /// every later grid cell's series.
+    #[test]
+    fn grid_survives_duplicate_methods() {
+        let cells = fig45_grid(
+            &quad_cfg(),
+            &[2],
+            &[1, 2],
+            &[Method::Easgd, Method::Easgd],
+            1,
+        )
+        .unwrap();
+        assert_eq!(cells.len(), 2);
+        for cell in &cells {
+            assert_eq!(cell.series.len(), 2, "k={} tau={}", cell.workers, cell.tau);
+            assert_eq!(cell.series[0].label, "EASGD");
+            assert_eq!(cell.series[1].label, "EASGD");
+        }
+    }
+
+    #[test]
+    fn averaged_run_is_deterministic() {
+        let a = averaged_run(&quad_cfg(), 2, "det").unwrap();
+        let b = averaged_run(&quad_cfg(), 2, "det").unwrap();
+        assert_eq!(a.deterministic_digest(), b.deterministic_digest());
     }
 }

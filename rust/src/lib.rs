@@ -31,5 +31,6 @@ pub mod experiments;
 pub mod metrics;
 pub mod optim;
 pub mod runtime;
+pub mod schedule;
 pub mod strategies;
 pub mod util;

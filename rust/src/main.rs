@@ -12,17 +12,25 @@
 //!   deahes train --method easgd --engine quad --rounds 50
 //!   deahes fig3 --ratios 0,0.125,0.25,0.375,0.5 --seeds 3
 //!   deahes grid --grid-workers 4,8 --taus 1,2,4 --seeds 3
+//!
+//! Sweeps (fig3, grid) run through the trial-schedule engine: `--jobs N`
+//! keeps N trials in flight on a thread pool, `--run-dir d` appends each
+//! finished trial to d/runs.jsonl, and `--resume` skips trials already
+//! committed there — a killed grid picks up where it stopped:
+//!   deahes grid --engine quad --jobs 4 --run-dir runs/grid --resume
 
 use deahes::config::{EngineKind, ExperimentConfig, GossipMode};
 use deahes::coordinator::{sim, FailureModel};
 use deahes::elastic::weight::Detector;
 use deahes::experiments;
 use deahes::metrics::ascii_chart;
+use deahes::schedule::ScheduleOptions;
 use deahes::strategies::{Method, ALL_METHODS};
 use deahes::util::cli::{Args, Cli};
 use deahes::util::logging::{self, Level};
 
 use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -87,7 +95,11 @@ fn experiment_cli(name: &str, about: &str) -> Cli {
         .opt("test-size", "2048", "synthetic test set size")
         .opt("eval-subset", "1024", "test samples scored per eval")
         .opt("eval-every", "1", "evaluate every N rounds")
-        .opt("failure", "bernoulli:0.3333333333333333", "none|bernoulli:P|burst:P,L|permanent:R,w+w")
+        .opt(
+            "failure",
+            "bernoulli:0.3333333333333333",
+            "none|bernoulli:P|burst:P,L|permanent:R,w+w",
+        )
         .opt("fail-style", "node", "node (down for the round) | comm (link-only, keeps training)")
         .opt("knee", "-0.05", "dynamic-weight knee constant k (<0)")
         .opt("detector", "paper-sign", "paper-sign|drift-sign (raw-score convention)")
@@ -100,11 +112,34 @@ fn experiment_cli(name: &str, about: &str) -> Cli {
         .opt("quad-het", "0.2", "worker heterogeneity (quad engine)")
         .opt("quad-noise", "0.05", "gradient noise (quad engine)")
         .opt("save-csv", "", "write the per-round metrics CSV to this path")
-        .opt("save-json", "", "write {config, records} JSON to this path")
+        .opt("save-json", "", "write {config, result, summary} JSON to this path")
         .flag("native-opt", "run optimizer updates in rust instead of the L1 kernels")
         .flag("threaded", "one OS thread per worker (realistic async driver)")
         .flag("csv", "print the full per-round CSV")
         .flag("quiet", "suppress info logging")
+}
+
+/// Experiment flags plus the trial-schedule execution flags shared by every
+/// sweep subcommand (fig3, grid).
+fn sweep_cli(name: &str, about: &str) -> Cli {
+    experiment_cli(name, about)
+        .opt("seeds", "3", "runs to average per sweep cell")
+        .opt("jobs", "1", "trials in flight (>1 selects the thread-pool backend)")
+        .opt("run-dir", "", "persist each finished trial to <dir>/runs.jsonl")
+        .flag("resume", "skip trials already committed in --run-dir")
+}
+
+fn schedule_options(a: &Args) -> Result<ScheduleOptions> {
+    let jobs = a.usize("jobs");
+    if jobs == 0 {
+        bail!("--jobs must be >= 1");
+    }
+    let run_dir = a.opt_nonempty("run-dir").map(PathBuf::from);
+    let resume = a.flag("resume");
+    if resume && run_dir.is_none() {
+        bail!("--resume needs --run-dir to resume from");
+    }
+    Ok(ScheduleOptions { jobs, run_dir, resume })
 }
 
 fn config_from_args(a: &Args) -> Result<ExperimentConfig> {
@@ -224,7 +259,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         use deahes::util::json::Json;
         let doc = Json::obj(vec![
             ("config", cfg.to_json()),
-            ("records", result.log.to_json()),
+            ("result", result.to_json()),
             (
                 "summary",
                 Json::obj(vec![
@@ -246,14 +281,14 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_fig3(argv: Vec<String>) -> Result<()> {
-    let a = experiment_cli("deahes fig3", "overlap-ratio sweep (paper Fig. 3)")
+    let a = sweep_cli("deahes fig3", "overlap-ratio sweep (paper Fig. 3)")
         .opt("ratios", "0,0.125,0.25,0.375,0.5", "comma-separated overlap ratios")
-        .opt("seeds", "3", "runs to average")
         .parse(&argv)
         .map_err(anyhow::Error::msg)?;
     let base = config_from_args(&a)?;
+    let opts = schedule_options(&a)?;
     let ratios = a.f64_list("ratios");
-    let out = experiments::fig3_overlap_sweep(&base, &ratios, a.u64("seeds"))?;
+    let out = experiments::fig3_overlap_sweep_with(&base, &ratios, a.u64("seeds"), &opts)?;
     println!(
         "\n== Fig 3: test accuracy vs overlap ratio (EAHES-O, k={}, tau={}) ==",
         base.workers, base.tau
@@ -274,14 +309,14 @@ fn cmd_fig3(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_grid(argv: Vec<String>) -> Result<()> {
-    let a = experiment_cli("deahes grid", "method × workers × tau grid (paper Figs. 4+5)")
+    let a = sweep_cli("deahes grid", "method × workers × tau grid (paper Figs. 4+5)")
         .opt("grid-workers", "4,8", "worker counts")
         .opt("taus", "1,2,4", "communication periods")
         .opt("methods", "all", "comma list or 'all'")
-        .opt("seeds", "3", "runs to average")
         .parse(&argv)
         .map_err(anyhow::Error::msg)?;
     let base = config_from_args(&a)?;
+    let opts = schedule_options(&a)?;
     let workers = a.usize_list("grid-workers");
     let taus = a.usize_list("taus");
     let methods: Vec<Method> = if a.get("methods") == "all" {
@@ -292,7 +327,8 @@ fn cmd_grid(argv: Vec<String>) -> Result<()> {
             .map(|m| Method::parse(m).with_context(|| format!("unknown method '{m}'")))
             .collect::<Result<_>>()?
     };
-    let cells = experiments::fig45_grid(&base, &workers, &taus, &methods, a.u64("seeds"))?;
+    let cells =
+        experiments::fig45_grid_with(&base, &workers, &taus, &methods, a.u64("seeds"), &opts)?;
     for cell in &cells {
         println!("\n== k={} tau={} ==", cell.workers, cell.tau);
         let acc: Vec<(&str, Vec<f64>)> = cell

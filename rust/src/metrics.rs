@@ -2,6 +2,7 @@
 //! terminal-friendly loss/accuracy curves.
 
 use crate::util::json::Json;
+use anyhow::{Context, Result};
 use std::fmt::Write as _;
 
 /// Everything sampled at one communication round.
@@ -18,6 +19,64 @@ pub struct RoundRecord {
     pub mean_h2: f64,
     /// Mean raw score across workers that produced one this round.
     pub mean_score: f64,
+}
+
+impl RoundRecord {
+    /// Collapse every non-finite metric to NaN — the value it would come
+    /// back as after a JSON round-trip (non-finite serializes as null).
+    /// Records are canonicalized before committing so a resumed sweep
+    /// aggregates exactly what a fresh one does, even for diverging runs.
+    pub fn canonicalize_non_finite(&mut self) {
+        for x in [
+            &mut self.test_acc,
+            &mut self.test_loss,
+            &mut self.train_loss,
+            &mut self.mean_h1,
+            &mut self.mean_h2,
+            &mut self.mean_score,
+        ] {
+            if !x.is_finite() {
+                *x = f64::NAN;
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        // NaN/Inf are representable here (losses can diverge) but are not
+        // valid JSON; non-finite values serialize as null, read back as NaN.
+        fn num_or_null(x: f64) -> Json {
+            if x.is_finite() {
+                Json::num(x)
+            } else {
+                Json::Null
+            }
+        }
+        Json::obj(vec![
+            ("round", Json::num(self.round as f64)),
+            ("test_acc", num_or_null(self.test_acc)),
+            ("test_loss", num_or_null(self.test_loss)),
+            ("train_loss", num_or_null(self.train_loss)),
+            ("syncs_ok", Json::num(self.syncs_ok as f64)),
+            ("syncs_failed", Json::num(self.syncs_failed as f64)),
+            ("mean_h1", num_or_null(self.mean_h1)),
+            ("mean_h2", num_or_null(self.mean_h2)),
+            ("mean_score", num_or_null(self.mean_score)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RoundRecord> {
+        Ok(RoundRecord {
+            round: j.get("round").as_f64().context("record: missing 'round'")? as u64,
+            test_acc: j.get("test_acc").as_f64().unwrap_or(f64::NAN),
+            test_loss: j.get("test_loss").as_f64().unwrap_or(f64::NAN),
+            train_loss: j.get("train_loss").as_f64().unwrap_or(f64::NAN),
+            syncs_ok: j.get("syncs_ok").as_f64().unwrap_or(0.0) as u32,
+            syncs_failed: j.get("syncs_failed").as_f64().unwrap_or(0.0) as u32,
+            mean_h1: j.get("mean_h1").as_f64().unwrap_or(f64::NAN),
+            mean_h2: j.get("mean_h2").as_f64().unwrap_or(f64::NAN),
+            mean_score: j.get("mean_score").as_f64().unwrap_or(f64::NAN),
+        })
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -91,30 +150,36 @@ impl MetricsLog {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::Arr(
-            self.records
-                .iter()
-                .map(|r| {
-                    Json::obj(vec![
-                        ("round", Json::num(r.round as f64)),
-                        ("test_acc", Json::num(r.test_acc)),
-                        ("test_loss", Json::num(r.test_loss)),
-                        ("train_loss", Json::num(r.train_loss)),
-                        ("syncs_ok", Json::num(r.syncs_ok as f64)),
-                        ("syncs_failed", Json::num(r.syncs_failed as f64)),
-                        ("mean_h1", Json::num(r.mean_h1)),
-                        ("mean_h2", Json::num(r.mean_h2)),
-                        ("mean_score", Json::num(r.mean_score)),
-                    ])
-                })
-                .collect(),
-        )
+        Json::Arr(self.records.iter().map(|r| r.to_json()).collect())
+    }
+
+    /// See [`RoundRecord::canonicalize_non_finite`].
+    pub fn canonicalize_non_finite(&mut self) {
+        for r in &mut self.records {
+            r.canonicalize_non_finite();
+        }
+    }
+
+    /// Inverse of [`MetricsLog::to_json`].
+    pub fn from_json(j: &Json) -> Result<MetricsLog> {
+        let records = j
+            .as_arr()
+            .context("metrics log: expected an array of round records")?
+            .iter()
+            .map(RoundRecord::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MetricsLog { records })
     }
 }
 
 /// Render one or more series as a fixed-size ASCII chart (figures 3/4/5 in
 /// terminal form). Each series gets a distinct glyph.
-pub fn ascii_chart(title: &str, series: &[(&str, Vec<f64>)], width: usize, height: usize) -> String {
+pub fn ascii_chart(
+    title: &str,
+    series: &[(&str, Vec<f64>)],
+    width: usize,
+    height: usize,
+) -> String {
     let glyphs = ['o', '*', '+', 'x', '#', '@', '%', '&'];
     let mut lo = f64::INFINITY;
     let mut hi = f64::NEG_INFINITY;
@@ -211,6 +276,50 @@ mod tests {
         let text = j.to_string_pretty();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.idx(0).get("test_acc").as_f64(), Some(0.3));
+    }
+
+    #[test]
+    fn json_roundtrip_restores_records() {
+        let mut log = MetricsLog::default();
+        log.push(rec(0, 0.25));
+        log.push(rec(4, 0.75));
+        let back = MetricsLog::from_json(&Json::parse(&log.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back.records.len(), 2);
+        assert_eq!(back.records[1].round, 4);
+        assert_eq!(back.records[1].test_acc.to_bits(), 0.75f64.to_bits());
+        assert_eq!(back.records[0].syncs_ok, 3);
+        assert!(MetricsLog::from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn non_finite_metrics_survive_as_nan() {
+        let mut r = rec(0, 0.5);
+        r.mean_score = f64::NAN;
+        r.mean_h1 = f64::INFINITY;
+        let text = r.to_json().to_string_compact();
+        let back = RoundRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.mean_score.is_nan());
+        assert!(back.mean_h1.is_nan());
+        assert_eq!(back.test_acc, 0.5);
+    }
+
+    #[test]
+    fn canonicalize_matches_json_roundtrip() {
+        let mut log = MetricsLog::default();
+        let mut r = rec(0, 0.5);
+        r.train_loss = f64::INFINITY;
+        r.mean_h2 = f64::NEG_INFINITY;
+        log.push(r);
+        log.canonicalize_non_finite();
+        assert!(log.records[0].train_loss.is_nan());
+        assert!(log.records[0].mean_h2.is_nan());
+        // already canonical: a sink round-trip changes nothing
+        let back =
+            MetricsLog::from_json(&Json::parse(&log.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert!(back.records[0].train_loss.is_nan());
+        assert_eq!(back.records[0].test_acc, 0.5);
     }
 
     #[test]

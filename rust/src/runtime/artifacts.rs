@@ -316,7 +316,8 @@ mod tests {
     fn rejects_wrong_schema() {
         let dir = std::env::temp_dir().join(format!("deahes_manifest2_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let text = minimal_manifest_json(&dir).replace("\"schema_version\":3", "\"schema_version\":1");
+        let text = minimal_manifest_json(&dir)
+            .replace("\"schema_version\":3", "\"schema_version\":1");
         let j = Json::parse(&text).unwrap();
         assert!(Manifest::from_json(&dir, &j).is_err());
         std::fs::remove_dir_all(&dir).ok();
@@ -326,9 +327,10 @@ mod tests {
     fn rejects_bad_param_shape() {
         let dir = std::env::temp_dir().join(format!("deahes_manifest3_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let text = minimal_manifest_json(&dir)
-            .replace(r#""grad": {"file":"grad.hlo.txt","sha256":"","inputs":[{"name":"theta","shape":[10]}"#,
-                     r#""grad": {"file":"grad.hlo.txt","sha256":"","inputs":[{"name":"theta","shape":[11]}"#);
+        let text = minimal_manifest_json(&dir).replace(
+            r#""grad": {"file":"grad.hlo.txt","sha256":"","inputs":[{"name":"theta","shape":[10]}"#,
+            r#""grad": {"file":"grad.hlo.txt","sha256":"","inputs":[{"name":"theta","shape":[11]}"#,
+        );
         let j = Json::parse(&text).unwrap();
         assert!(Manifest::from_json(&dir, &j).is_err());
         std::fs::remove_dir_all(&dir).ok();

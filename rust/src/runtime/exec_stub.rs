@@ -1,0 +1,82 @@
+//! Stub PJRT runtime, compiled when the `pjrt` feature is off.
+//!
+//! Mirrors the public surface of `exec.rs` exactly so every call site
+//! (engine::xla, microbench, `deahes inspect`) compiles without the vendored
+//! `xla` crate; loading an artifact fails with a clear error instead. The
+//! quadratic engine — everything the unit and integration tests exercise —
+//! never touches this module.
+
+use super::artifacts::Manifest;
+use crate::util::stats::Welford;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// An argument to an artifact call.
+pub enum Arg<'a> {
+    /// Flat data + logical shape (row-major).
+    Tensor(&'a [f32], &'a [usize]),
+    /// Rank-0 f32.
+    Scalar(f32),
+}
+
+/// Per-artifact call statistics (always empty in the stub).
+#[derive(Clone, Debug, Default)]
+pub struct CallStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub per_call: Welford,
+}
+
+pub struct XlaRuntime {
+    stats: BTreeMap<String, CallStats>,
+}
+
+const NO_PJRT: &str = "this build has no PJRT support: declare the offline image's vendored \
+     `xla` crate in rust/Cargo.toml and rebuild with `--features pjrt`, or use `--engine quad`";
+
+impl XlaRuntime {
+    pub fn load(_manifest: &Manifest, _names: &[&str]) -> Result<XlaRuntime> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile_secs(&self) -> f64 {
+        0.0
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn call(&mut self, name: &str, _args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        bail!("cannot execute artifact '{name}': {NO_PJRT}")
+    }
+
+    pub fn stats(&self) -> &BTreeMap<String, CallStats> {
+        &self.stats
+    }
+
+    pub fn stats_summary(&self) -> String {
+        String::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loading_fails_loudly() {
+        // Manifest::load needs a real directory, so exercise only the
+        // constructor path that does not touch the filesystem.
+        let rt = XlaRuntime { stats: BTreeMap::new() };
+        assert_eq!(rt.platform(), "stub");
+        assert!(!rt.has("grad"));
+        let mut rt = rt;
+        let err = rt.call("grad", &[]).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

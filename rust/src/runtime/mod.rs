@@ -2,8 +2,19 @@
 //! artifacts/metadata.json and executes them through the PJRT C API via the
 //! `xla` crate.  See /opt/xla-example/load_hlo for the reference wiring this
 //! follows (text interchange, return_tuple outputs).
+//!
+//! The PJRT path needs the vendored `xla` crate, which only the offline
+//! build image carries; without the `pjrt` cargo feature a stub with the
+//! same API compiles instead, and artifact loading fails at run time with
+//! instructions. The quadratic engine never reaches this layer.
 
 pub mod artifacts;
+
+#[cfg(feature = "pjrt")]
+pub mod exec;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "exec_stub.rs"]
 pub mod exec;
 
 pub use artifacts::Manifest;

@@ -1,0 +1,206 @@
+//! Trial execution backends.
+//!
+//! A backend takes the not-yet-committed slice of the plan and drives each
+//! trial through `sim::run`, delivering `(plan index, outcome)` pairs to the
+//! committer. Because the committer re-orders, a backend is free to finish
+//! trials in any order — the two implementations differ only in scheduling:
+//!
+//!  * [`SequentialBackend`] — one trial at a time, in plan order; the
+//!    reference behaviour the unit tests pin. (Numbers differ from the
+//!    pre-schedule sweep loops only through the intentional switch to
+//!    derive-based trial seeds — see `plan::trial_seed`.)
+//!  * [`ThreadPoolBackend`] — up to `jobs` trials in flight on OS threads
+//!    pulling from a shared cursor. Each trial is itself the deterministic
+//!    sequential simulation, so results are identical to the sequential
+//!    backend; only wall-clock changes.
+
+use crate::coordinator::sim;
+use crate::log_info;
+use crate::schedule::commit::Committer;
+use crate::schedule::plan::TrialSlot;
+use crate::schedule::record::{TrialOutcome, TrialRecord};
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Run one slot to completion on the calling thread.
+pub fn run_trial(slot: &TrialSlot) -> Result<TrialOutcome> {
+    let t0 = Instant::now();
+    let r = sim::run(&slot.config).with_context(|| {
+        format!("trial {} [{} seed {}]", slot.fingerprint, slot.cell, slot.seed_index)
+    })?;
+    log_info!(
+        "{} seed[{}]={}: final acc {:.4} ({} rounds, {:.1}s wall)",
+        slot.cell,
+        slot.seed_index,
+        slot.config.seed,
+        r.final_acc(),
+        slot.config.rounds,
+        r.wall_secs
+    );
+    Ok(TrialOutcome {
+        record: TrialRecord::from_run(slot, &r),
+        wall_secs: t0.elapsed().as_secs_f64(),
+        cached: false,
+    })
+}
+
+pub trait TrialBackend {
+    fn name(&self) -> &'static str;
+
+    /// Execute every `(plan index, slot)` pair, delivering outcomes to the
+    /// committer (in any order).
+    fn execute(&self, trials: &[(usize, TrialSlot)], committer: &mut Committer<'_>)
+        -> Result<()>;
+}
+
+/// Current behaviour: strictly one trial at a time, in plan order.
+pub struct SequentialBackend;
+
+impl TrialBackend for SequentialBackend {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn execute(
+        &self,
+        trials: &[(usize, TrialSlot)],
+        committer: &mut Committer<'_>,
+    ) -> Result<()> {
+        for (index, slot) in trials {
+            committer.offer(*index, run_trial(slot)?)?;
+        }
+        Ok(())
+    }
+}
+
+/// `jobs` worker threads pull trials from a shared cursor; completions flow
+/// back over a channel and are committed (re-ordered) on the calling thread.
+pub struct ThreadPoolBackend {
+    pub jobs: usize,
+}
+
+impl TrialBackend for ThreadPoolBackend {
+    fn name(&self) -> &'static str {
+        "thread-pool"
+    }
+
+    fn execute(
+        &self,
+        trials: &[(usize, TrialSlot)],
+        committer: &mut Committer<'_>,
+    ) -> Result<()> {
+        let n = trials.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let jobs = self.jobs.clamp(1, n);
+        let cursor = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, Result<TrialOutcome>)>();
+        std::thread::scope(|scope| -> Result<()> {
+            for t in 0..jobs {
+                let tx = tx.clone();
+                let cursor = &cursor;
+                std::thread::Builder::new()
+                    .name(format!("trial-{t}"))
+                    .spawn_scoped(scope, move || loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let (index, slot) = &trials[i];
+                        let out = run_trial(slot);
+                        if tx.send((*index, out)).is_err() {
+                            break; // receiver gone: shut down quietly
+                        }
+                    })
+                    .expect("spawn trial thread");
+            }
+            drop(tx);
+            let mut first_err: Option<anyhow::Error> = None;
+            // On the first error, park the cursor past the end so idle
+            // workers stop picking up new trials (in-flight ones finish);
+            // the channel then drains and closes on its own.
+            let cancel = |err: anyhow::Error, first_err: &mut Option<anyhow::Error>| {
+                cursor.store(n, Ordering::Relaxed);
+                first_err.get_or_insert(err);
+            };
+            loop {
+                match rx.recv() {
+                    Ok((index, Ok(outcome))) => {
+                        if let Err(e) = committer.offer(index, outcome) {
+                            cancel(e, &mut first_err);
+                        }
+                    }
+                    Ok((_, Err(e))) => {
+                        cancel(e, &mut first_err);
+                    }
+                    // All senders gone: every worker finished (or panicked).
+                    Err(_) => break,
+                }
+            }
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, ExperimentConfig};
+    use crate::schedule::plan::TrialPlan;
+    use crate::schedule::sink::NullSink;
+
+    fn quad_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            engine: EngineKind::Quadratic { dim: 16, heterogeneity: 0.2, noise: 0.02 },
+            workers: 2,
+            rounds: 6,
+            eval_subset: 8,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    fn plan() -> TrialPlan {
+        let mut p = TrialPlan::new();
+        p.push_cell("a", "a", &quad_cfg(), 2);
+        p.push_cell("b", "b", &quad_cfg(), 2);
+        p
+    }
+
+    fn run_with(backend: &dyn TrialBackend) -> Vec<TrialOutcome> {
+        let p = plan();
+        let trials: Vec<(usize, TrialSlot)> =
+            p.slots.iter().cloned().enumerate().collect();
+        let mut sink = NullSink;
+        let mut committer = Committer::new(trials.len(), &mut sink);
+        backend.execute(&trials, &mut committer).unwrap();
+        committer.finish().unwrap()
+    }
+
+    #[test]
+    fn backends_agree_on_results() {
+        let seq = run_with(&SequentialBackend);
+        let pool = run_with(&ThreadPoolBackend { jobs: 4 });
+        assert_eq!(seq.len(), pool.len());
+        for (a, b) in seq.iter().zip(&pool) {
+            assert_eq!(a.record.fingerprint, b.record.fingerprint, "plan order must match");
+            assert_eq!(
+                a.record.to_json().to_string_compact(),
+                b.record.to_json().to_string_compact(),
+                "trial {} must be backend-invariant",
+                a.record.fingerprint
+            );
+        }
+    }
+
+    #[test]
+    fn pool_with_more_jobs_than_trials() {
+        let out = run_with(&ThreadPoolBackend { jobs: 64 });
+        assert_eq!(out.len(), 4);
+    }
+}

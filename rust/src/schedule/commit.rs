@@ -1,0 +1,160 @@
+//! Deterministic commit of out-of-order trial completions.
+//!
+//! Backends deliver `(plan index, outcome)` pairs in whatever order the
+//! hardware produced them. The committer holds early arrivals in a reorder
+//! buffer and commits strictly in plan order: each commit appends the record
+//! to the run sink (unless it was a resume cache hit) and to the in-memory
+//! ordered result list. Aggregation downstream therefore never observes
+//! scheduling order — sequential and thread-pool backends produce identical
+//! output.
+
+use crate::schedule::record::TrialOutcome;
+use crate::schedule::sink::RunSink;
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+
+pub struct Committer<'a> {
+    expected: usize,
+    next: usize,
+    pending: BTreeMap<usize, TrialOutcome>,
+    committed: Vec<TrialOutcome>,
+    sink: &'a mut dyn RunSink,
+}
+
+impl<'a> Committer<'a> {
+    pub fn new(expected: usize, sink: &'a mut dyn RunSink) -> Committer<'a> {
+        Committer {
+            expected,
+            next: 0,
+            pending: BTreeMap::new(),
+            committed: Vec::with_capacity(expected),
+            sink,
+        }
+    }
+
+    /// How many trials have been durably committed so far.
+    pub fn committed_len(&self) -> usize {
+        self.committed.len()
+    }
+
+    /// Deliver the outcome for plan slot `index`; commits it and any
+    /// now-unblocked successors in plan order.
+    pub fn offer(&mut self, index: usize, outcome: TrialOutcome) -> Result<()> {
+        if index >= self.expected {
+            bail!("trial index {index} out of range (plan has {} slots)", self.expected);
+        }
+        if index < self.next || self.pending.contains_key(&index) {
+            bail!("trial index {index} delivered twice");
+        }
+        self.pending.insert(index, outcome);
+        while let Some(o) = self.pending.remove(&self.next) {
+            if !o.cached {
+                self.sink.append(&o.record)?;
+            }
+            self.committed.push(o);
+            self.next += 1;
+        }
+        Ok(())
+    }
+
+    /// Finish: every plan slot must have been committed.
+    pub fn finish(self) -> Result<Vec<TrialOutcome>> {
+        ensure!(
+            self.pending.is_empty() && self.next == self.expected,
+            "plan incomplete: {} of {} trials committed ({} stuck in the reorder buffer)",
+            self.next,
+            self.expected,
+            self.pending.len()
+        );
+        Ok(self.committed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::simclock::SimClockReport;
+    use crate::metrics::MetricsLog;
+    use crate::schedule::record::TrialRecord;
+    use crate::schedule::sink::NullSink;
+
+    fn outcome(fp: &str, cached: bool) -> TrialOutcome {
+        TrialOutcome {
+            record: TrialRecord {
+                fingerprint: fp.to_string(),
+                cell: "c".into(),
+                label: "c".into(),
+                seed_index: 0,
+                config: ExperimentConfig::default(),
+                log: MetricsLog::default(),
+                sim: SimClockReport {
+                    virtual_secs: 0.0,
+                    master_utilization: 0.0,
+                    mean_sync_wait: 0.0,
+                    p95_style_max_wait: 0.0,
+                    rounds: 0,
+                },
+                worker_stats: vec![],
+            },
+            wall_secs: 0.0,
+            cached,
+        }
+    }
+
+    /// Sink that records append order.
+    #[derive(Default)]
+    struct SpySink {
+        appended: Vec<String>,
+    }
+
+    impl RunSink for SpySink {
+        fn append(&mut self, record: &TrialRecord) -> Result<()> {
+            self.appended.push(record.fingerprint.clone());
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn reorders_out_of_order_completions() {
+        let mut sink = SpySink::default();
+        let mut c = Committer::new(4, &mut sink);
+        c.offer(2, outcome("f2", false)).unwrap();
+        c.offer(0, outcome("f0", false)).unwrap();
+        assert_eq!(c.committed_len(), 1); // only 0 commits; 2 waits for 1
+        c.offer(3, outcome("f3", false)).unwrap();
+        c.offer(1, outcome("f1", false)).unwrap();
+        let done = c.finish().unwrap();
+        let fps: Vec<&str> = done.iter().map(|o| o.record.fingerprint.as_str()).collect();
+        assert_eq!(fps, vec!["f0", "f1", "f2", "f3"]);
+        assert_eq!(sink.appended, vec!["f0", "f1", "f2", "f3"]);
+    }
+
+    #[test]
+    fn cached_outcomes_skip_the_sink() {
+        let mut sink = SpySink::default();
+        let mut c = Committer::new(2, &mut sink);
+        c.offer(0, outcome("hit", true)).unwrap();
+        c.offer(1, outcome("fresh", false)).unwrap();
+        let done = c.finish().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(sink.appended, vec!["fresh"]);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_out_of_range() {
+        let mut sink = NullSink;
+        let mut c = Committer::new(2, &mut sink);
+        c.offer(0, outcome("a", false)).unwrap();
+        assert!(c.offer(0, outcome("a", false)).is_err());
+        assert!(c.offer(5, outcome("b", false)).is_err());
+    }
+
+    #[test]
+    fn finish_demands_completeness() {
+        let mut sink = NullSink;
+        let mut c = Committer::new(2, &mut sink);
+        c.offer(1, outcome("only-late", false)).unwrap();
+        assert!(c.finish().is_err());
+    }
+}

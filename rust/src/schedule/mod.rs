@@ -1,0 +1,202 @@
+//! Trial-schedule execution engine.
+//!
+//! Every sweep (figure grid, overlap sweep, ablation battery) compiles to a
+//! flat [`TrialPlan`] and executes through one pipeline:
+//!
+//! ```text
+//!   sweep ──▶ TrialPlan ──▶ TrialBackend ──▶ Committer ──▶ RunSink
+//!             (flat slots,   (sequential |    (re-orders     (JSONL, one
+//!              derived seeds, thread-pool     completions     record per
+//!              fingerprints)  --jobs N)       to plan order)  trial)
+//!                                                 │
+//!                                                 ▼
+//!                                        ordered TrialOutcomes
+//!                                        (averaging, figures)
+//! ```
+//!
+//! Invariants:
+//!  * **Backend-invariance** — the committed record stream and everything
+//!    aggregated from it are byte-identical across backends; only wall-clock
+//!    differs. Guarded by `tests/schedule_determinism.rs`.
+//!  * **Resume** — with a run directory, finished trials are keyed by a
+//!    config+seed fingerprint; re-invoking the sweep with `--resume` commits
+//!    the cached records without re-running them.
+
+pub mod backend;
+pub mod commit;
+pub mod plan;
+pub mod record;
+pub mod sink;
+
+pub use backend::{SequentialBackend, ThreadPoolBackend, TrialBackend};
+pub use commit::Committer;
+pub use plan::{fingerprint, trial_seed, TrialPlan, TrialSlot};
+pub use record::{TrialOutcome, TrialRecord};
+pub use sink::{JsonlRunSink, NullSink, RunSink};
+
+use crate::{log_info, log_warn};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// File name of the run sink inside a run directory.
+pub const RUNS_FILE: &str = "runs.jsonl";
+
+/// How a plan should be executed.
+#[derive(Clone, Debug)]
+pub struct ScheduleOptions {
+    /// Trials in flight: 1 = sequential backend, >1 = thread pool.
+    pub jobs: usize,
+    /// Directory holding `runs.jsonl`; `None` disables persistence.
+    pub run_dir: Option<PathBuf>,
+    /// Skip trials whose fingerprint is already committed in the run dir.
+    pub resume: bool,
+}
+
+impl Default for ScheduleOptions {
+    fn default() -> Self {
+        ScheduleOptions { jobs: 1, run_dir: None, resume: false }
+    }
+}
+
+/// What `execute_plan` hands back.
+pub struct ScheduleReport {
+    /// One outcome per plan slot, in plan order.
+    pub outcomes: Vec<TrialOutcome>,
+    /// Trials actually run this invocation.
+    pub executed: usize,
+    /// Trials satisfied from the run sink (resume hits).
+    pub skipped: usize,
+    /// Name of the backend that ran the plan.
+    pub backend: &'static str,
+}
+
+/// Pick the backend for a jobs count.
+pub fn make_backend(jobs: usize) -> Box<dyn TrialBackend> {
+    if jobs <= 1 {
+        Box::new(SequentialBackend)
+    } else {
+        Box::new(ThreadPoolBackend { jobs })
+    }
+}
+
+/// Execute a plan end to end: resolve resume hits, run the rest through the
+/// chosen backend, commit deterministically, and return ordered outcomes.
+pub fn execute_plan(plan: &TrialPlan, opts: &ScheduleOptions) -> Result<ScheduleReport> {
+    let mut cache = std::collections::BTreeMap::new();
+    let mut sink: Box<dyn RunSink> = match &opts.run_dir {
+        Some(dir) => {
+            let path = dir.join(RUNS_FILE);
+            if opts.resume {
+                cache = JsonlRunSink::load(&path)?;
+            } else if path.metadata().map(|m| m.len() > 0).unwrap_or(false) {
+                log_warn!(
+                    "{} already holds committed trials; appending duplicates — \
+                     pass --resume to skip them instead",
+                    path.display()
+                );
+            }
+            Box::new(JsonlRunSink::open(&path)?)
+        }
+        None => {
+            if opts.resume {
+                bail!("--resume needs a run directory (--run-dir) to resume from");
+            }
+            Box::new(NullSink)
+        }
+    };
+
+    let mut committer = Committer::new(plan.len(), sink.as_mut());
+    let mut to_run: Vec<(usize, TrialSlot)> = Vec::new();
+    let mut skipped = 0usize;
+    for (index, slot) in plan.slots.iter().enumerate() {
+        match cache.remove(&slot.fingerprint) {
+            Some(record) => {
+                skipped += 1;
+                committer.offer(index, TrialOutcome { record, wall_secs: 0.0, cached: true })?;
+            }
+            None => to_run.push((index, slot.clone())),
+        }
+    }
+
+    let backend = make_backend(opts.jobs);
+    log_info!(
+        "schedule: {} trial(s) over {} cell(s), backend={} jobs={}{}",
+        plan.len(),
+        plan.cells().len(),
+        backend.name(),
+        opts.jobs.max(1),
+        if skipped > 0 { format!(", {skipped} resumed from sink") } else { String::new() }
+    );
+    backend.execute(&to_run, &mut committer)?;
+    let outcomes = committer.finish()?;
+    Ok(ScheduleReport { outcomes, executed: to_run.len(), skipped, backend: backend.name() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, ExperimentConfig};
+
+    fn quad_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            engine: EngineKind::Quadratic { dim: 16, heterogeneity: 0.2, noise: 0.02 },
+            workers: 2,
+            rounds: 5,
+            eval_subset: 8,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    fn small_plan() -> TrialPlan {
+        let mut p = TrialPlan::new();
+        p.push_cell("cell", "cell", &quad_cfg(), 2);
+        p
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("deahes-sched-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn in_memory_execution() {
+        let plan = small_plan();
+        let r = execute_plan(&plan, &ScheduleOptions::default()).unwrap();
+        assert_eq!(r.outcomes.len(), 2);
+        assert_eq!(r.executed, 2);
+        assert_eq!(r.skipped, 0);
+        assert_eq!(r.backend, "sequential");
+    }
+
+    #[test]
+    fn resume_without_run_dir_is_an_error() {
+        let plan = small_plan();
+        let opts = ScheduleOptions { resume: true, ..ScheduleOptions::default() };
+        assert!(execute_plan(&plan, &opts).is_err());
+    }
+
+    #[test]
+    fn resume_skips_committed_trials() {
+        let dir = tmp_dir("resume");
+        let _ = std::fs::remove_dir_all(&dir);
+        let plan = small_plan();
+        let opts = ScheduleOptions {
+            run_dir: Some(dir.clone()),
+            ..ScheduleOptions::default()
+        };
+        let first = execute_plan(&plan, &opts).unwrap();
+        assert_eq!(first.executed, 2);
+        let opts = ScheduleOptions { resume: true, ..opts };
+        let second = execute_plan(&plan, &opts).unwrap();
+        assert_eq!(second.executed, 0);
+        assert_eq!(second.skipped, 2);
+        // records must survive the round-trip through the sink intact
+        for (a, b) in first.outcomes.iter().zip(&second.outcomes) {
+            assert_eq!(
+                a.record.to_json().to_string_compact(),
+                b.record.to_json().to_string_compact()
+            );
+            assert!(b.cached);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

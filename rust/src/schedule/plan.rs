@@ -1,0 +1,190 @@
+//! Flattening sweeps into trial plans.
+//!
+//! A sweep (figure grid, overlap sweep, ablation battery) is compiled into a
+//! flat, ordered list of [`TrialSlot`]s before anything executes. The plan
+//! order is the *canonical* order: backends may finish trials in any order,
+//! but the committer re-orders completions back into plan order, so every
+//! downstream consumer (sink, aggregation, figures) sees a deterministic
+//! sequence regardless of how the work was scheduled.
+//!
+//! Each slot carries a precomputed **fingerprint** — a stable hash of the
+//! fully-resolved config plus its (cell, seed-index) coordinates — which keys
+//! the JSONL run sink. Re-invoking a sweep against the same run directory
+//! skips fingerprints that are already committed (crash resume, incremental
+//! grids).
+
+use crate::config::ExperimentConfig;
+use crate::util::rng::Rng;
+
+/// One unit of schedulable work: a fully-resolved config for a single run.
+#[derive(Clone, Debug)]
+pub struct TrialSlot {
+    /// Unique key of the sweep cell this trial belongs to
+    /// (e.g. `fig45/k=4/tau=1/EASGD`). Trials of one cell are averaged
+    /// together; the key also namespaces seed derivation.
+    pub cell: String,
+    /// Display label for the averaged series (e.g. `EASGD`, `r=12.5%`).
+    pub label: String,
+    /// Which of the cell's seed repetitions this is (0-based).
+    pub seed_index: u64,
+    /// The config to run, with `seed` already derived for this trial.
+    pub config: ExperimentConfig,
+    /// Stable identity of this trial for the run sink (hex).
+    pub fingerprint: String,
+}
+
+/// An ordered, flat execution plan over sweep cells.
+#[derive(Clone, Debug, Default)]
+pub struct TrialPlan {
+    pub slots: Vec<TrialSlot>,
+    /// How often each requested cell key was pushed (duplicate keys get a
+    /// `#n` suffix so no two cells ever merge downstream).
+    cell_counts: std::collections::BTreeMap<String, usize>,
+}
+
+impl TrialPlan {
+    pub fn new() -> TrialPlan {
+        TrialPlan::default()
+    }
+
+    /// Append one sweep cell: `seeds` repetitions of `cfg`, each with a seed
+    /// derived from (base seed, cell key, seed index).
+    ///
+    /// A repeated `cell` key (duplicate sweep axis values: `--taus 1,1`,
+    /// repeated ratios or methods) is disambiguated with a `#n` suffix —
+    /// otherwise adjacent same-key slots would merge into one averaged
+    /// group and shift every later cell's series.
+    pub fn push_cell(&mut self, cell: &str, label: &str, cfg: &ExperimentConfig, seeds: u64) {
+        assert!(seeds >= 1, "a cell needs at least one seed");
+        let n = self.cell_counts.entry(cell.to_string()).or_insert(0);
+        *n += 1;
+        let key = if *n == 1 { cell.to_string() } else { format!("{cell}#{n}") };
+        for s in 0..seeds {
+            let mut c = cfg.clone();
+            c.seed = trial_seed(cfg.seed, &key, s);
+            let fingerprint = fingerprint(&c, &key, s);
+            self.slots.push(TrialSlot {
+                cell: key.clone(),
+                label: label.to_string(),
+                seed_index: s,
+                config: c,
+                fingerprint,
+            });
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Distinct cell keys in plan order.
+    pub fn cells(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for s in &self.slots {
+            if out.last() != Some(&s.cell.as_str()) {
+                out.push(&s.cell);
+            }
+        }
+        out
+    }
+}
+
+/// FNV-1a 64-bit: tiny, stable across platforms, good enough to key trials
+/// (fingerprint collisions would need ~2^32 trials in one run directory).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Derive the seed for repetition `index` of cell `cell` from the sweep's
+/// base seed. Unlike the old `base + index * 1000` stride this cannot
+/// collide across grid cells, and a cell's seeds do not depend on where the
+/// cell sits in the plan — adding cells to a sweep never reshuffles the
+/// randomness of existing cells.
+///
+/// The result is truncated to 53 bits so it survives a round-trip through
+/// the JSON number representation exactly.
+pub fn trial_seed(base: u64, cell: &str, index: u64) -> u64 {
+    let mut r = Rng::new(base).derive(fnv1a64(cell.as_bytes())).derive(index);
+    r.next_u64() >> 11
+}
+
+/// Stable identity of one trial: hash of the fully-resolved config (which
+/// already includes the derived seed) plus its plan coordinates.
+pub fn fingerprint(cfg: &ExperimentConfig, cell: &str, seed_index: u64) -> String {
+    let text = format!("{}|{}|{}", cfg.to_json().to_string_compact(), cell, seed_index);
+    format!("{:016x}", fnv1a64(text.as_bytes()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_cell_derives_distinct_seeds() {
+        let cfg = ExperimentConfig::default();
+        let mut plan = TrialPlan::new();
+        plan.push_cell("a", "a", &cfg, 3);
+        plan.push_cell("b", "b", &cfg, 3);
+        assert_eq!(plan.len(), 6);
+        let mut seeds: Vec<u64> = plan.slots.iter().map(|s| s.config.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 6, "seeds must be unique across cells and indices");
+    }
+
+    #[test]
+    fn trial_seed_is_stable_and_cell_scoped() {
+        assert_eq!(trial_seed(42, "cell", 0), trial_seed(42, "cell", 0));
+        assert_ne!(trial_seed(42, "cell", 0), trial_seed(42, "cell", 1));
+        assert_ne!(trial_seed(42, "cell-a", 0), trial_seed(42, "cell-b", 0));
+        assert_ne!(trial_seed(42, "cell", 0), trial_seed(43, "cell", 0));
+        // JSON-exact: fits in an f64 mantissa
+        assert!(trial_seed(42, "cell", 0) < (1u64 << 53));
+    }
+
+    #[test]
+    fn fingerprint_tracks_config_and_coordinates() {
+        let cfg = ExperimentConfig::default();
+        let a = fingerprint(&cfg, "c", 0);
+        assert_eq!(a, fingerprint(&cfg, "c", 0));
+        assert_ne!(a, fingerprint(&cfg, "c", 1));
+        assert_ne!(a, fingerprint(&cfg, "d", 0));
+        let mut other = cfg.clone();
+        other.tau = 7;
+        assert_ne!(a, fingerprint(&other, "c", 0));
+    }
+
+    #[test]
+    fn cells_in_plan_order() {
+        let cfg = ExperimentConfig::default();
+        let mut plan = TrialPlan::new();
+        plan.push_cell("x", "x", &cfg, 2);
+        plan.push_cell("y", "y", &cfg, 1);
+        assert_eq!(plan.cells(), vec!["x", "y"]);
+    }
+
+    /// Duplicate sweep axis values must stay separate cells (merging them
+    /// would shift every later cell's series downstream).
+    #[test]
+    fn duplicate_cell_keys_are_disambiguated() {
+        let cfg = ExperimentConfig::default();
+        let mut plan = TrialPlan::new();
+        plan.push_cell("tau=1", "tau=1", &cfg, 1);
+        plan.push_cell("tau=1", "tau=1", &cfg, 1);
+        plan.push_cell("tau=1", "tau=1", &cfg, 1);
+        assert_eq!(plan.cells(), vec!["tau=1", "tau=1#2", "tau=1#3"]);
+        assert_eq!(plan.slots[0].label, plan.slots[1].label);
+        // distinct cells ⇒ distinct seed streams and fingerprints
+        assert_ne!(plan.slots[0].config.seed, plan.slots[1].config.seed);
+        assert_ne!(plan.slots[0].fingerprint, plan.slots[1].fingerprint);
+    }
+}

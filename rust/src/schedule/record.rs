@@ -1,0 +1,156 @@
+//! The committed form of one finished trial.
+//!
+//! A [`TrialRecord`] is everything the sweeps need downstream of a run —
+//! the per-round metric log, the virtual-clock report and the per-worker
+//! sync stats — plus the identity fields that key it in a run directory.
+//! It round-trips through JSON so the [`crate::schedule::sink`] can persist
+//! one record per line and a resumed sweep can reload them.
+//!
+//! Wall-clock time is deliberately **not** part of the record: it varies
+//! between hosts, backends and runs, and keeping it out is what makes the
+//! committed JSONL byte-identical across backends (the determinism
+//! regression test relies on this). Wall time lives on [`TrialOutcome`],
+//! the in-memory wrapper.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::sim::RunResult;
+use crate::coordinator::simclock::SimClockReport;
+use crate::metrics::MetricsLog;
+use crate::schedule::plan::TrialSlot;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// One committed trial: identity + deterministic results.
+#[derive(Clone, Debug)]
+pub struct TrialRecord {
+    pub fingerprint: String,
+    pub cell: String,
+    pub label: String,
+    pub seed_index: u64,
+    pub config: ExperimentConfig,
+    pub log: MetricsLog,
+    pub sim: SimClockReport,
+    /// Per-worker (syncs served, corrections fired).
+    pub worker_stats: Vec<(u64, u64)>,
+}
+
+impl TrialRecord {
+    pub fn from_run(slot: &TrialSlot, r: &RunResult) -> TrialRecord {
+        // Canonicalize non-finite metrics to NaN up front: that is what a
+        // JSON round-trip through the sink yields, so fresh and resumed
+        // outcomes aggregate identically even when a run diverged.
+        let mut log = r.log.clone();
+        log.canonicalize_non_finite();
+        TrialRecord {
+            fingerprint: slot.fingerprint.clone(),
+            cell: slot.cell.clone(),
+            label: slot.label.clone(),
+            seed_index: slot.seed_index,
+            config: slot.config.clone(),
+            log,
+            sim: r.sim.clone(),
+            worker_stats: r.worker_stats.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fingerprint", Json::str(&self.fingerprint)),
+            ("cell", Json::str(&self.cell)),
+            ("label", Json::str(&self.label)),
+            ("seed_index", Json::num(self.seed_index as f64)),
+            ("config", self.config.to_json()),
+            ("records", self.log.to_json()),
+            ("sim", self.sim.to_json()),
+            ("worker_stats", Json::arr_u64_pairs(&self.worker_stats)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrialRecord> {
+        Ok(TrialRecord {
+            fingerprint: j
+                .get("fingerprint")
+                .as_str()
+                .context("record: missing 'fingerprint'")?
+                .to_string(),
+            cell: j.get("cell").as_str().context("record: missing 'cell'")?.to_string(),
+            label: j.get("label").as_str().unwrap_or("").to_string(),
+            seed_index: j.get("seed_index").as_f64().unwrap_or(0.0) as u64,
+            config: ExperimentConfig::from_json(j.get("config"))
+                .context("record: bad 'config'")?,
+            log: MetricsLog::from_json(j.get("records")).context("record: bad 'records'")?,
+            sim: SimClockReport::from_json(j.get("sim")),
+            worker_stats: j.get("worker_stats").as_u64_pairs(),
+        })
+    }
+}
+
+/// A trial result as the committer hands it to aggregation: the durable
+/// record plus this process's wall-clock spend (0 for cache hits).
+#[derive(Clone, Debug)]
+pub struct TrialOutcome {
+    pub record: TrialRecord,
+    /// Seconds this process spent producing the record (0 if resumed).
+    pub wall_secs: f64,
+    /// True when the record was loaded from the run sink, not executed.
+    pub cached: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundRecord;
+
+    fn sample() -> TrialRecord {
+        let mut log = MetricsLog::default();
+        log.push(RoundRecord {
+            round: 3,
+            test_acc: 0.5,
+            test_loss: 1.25,
+            train_loss: 2.5,
+            syncs_ok: 3,
+            syncs_failed: 1,
+            mean_h1: 0.1,
+            mean_h2: 0.2,
+            mean_score: -0.5,
+        });
+        TrialRecord {
+            fingerprint: "deadbeefdeadbeef".into(),
+            cell: "fig3/r=25.0%".into(),
+            label: "r=25.0%".into(),
+            seed_index: 2,
+            config: ExperimentConfig::default(),
+            log,
+            sim: SimClockReport {
+                virtual_secs: 1.5,
+                master_utilization: 0.25,
+                mean_sync_wait: 0.001,
+                p95_style_max_wait: 0.002,
+                rounds: 3,
+            },
+            worker_stats: vec![(10, 1), (9, 0)],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let rec = sample();
+        let j = rec.to_json();
+        let back = TrialRecord::from_json(&j).unwrap();
+        assert_eq!(back.fingerprint, rec.fingerprint);
+        assert_eq!(back.cell, rec.cell);
+        assert_eq!(back.seed_index, rec.seed_index);
+        assert_eq!(back.log.records.len(), 1);
+        assert_eq!(back.log.records[0].test_acc, 0.5);
+        assert_eq!(back.sim.virtual_secs, 1.5);
+        assert_eq!(back.worker_stats, vec![(10, 1), (9, 0)]);
+    }
+
+    #[test]
+    fn serialization_is_stable() {
+        let rec = sample();
+        let a = rec.to_json().to_string_compact();
+        let b = TrialRecord::from_json(&rec.to_json()).unwrap().to_json().to_string_compact();
+        assert_eq!(a, b, "records must serialize byte-identically after a round-trip");
+    }
+}

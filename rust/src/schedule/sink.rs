@@ -1,0 +1,185 @@
+//! Run sinks: where committed trials go.
+//!
+//! The committer pushes records in plan order; a sink makes them durable.
+//! [`JsonlRunSink`] appends one compact JSON object per line and flushes
+//! after every record, so a killed sweep loses at most the trial that was
+//! in flight. [`JsonlRunSink::load`] reads a run file back as a
+//! fingerprint-keyed map for `--resume`, tolerating a truncated final line
+//! (the crash case it exists for).
+
+use crate::schedule::record::TrialRecord;
+use crate::{log_info, log_warn};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+pub trait RunSink {
+    /// Called once per trial, in plan order.
+    fn append(&mut self, record: &TrialRecord) -> Result<()>;
+}
+
+/// Discards everything (in-memory sweeps).
+#[derive(Default)]
+pub struct NullSink;
+
+impl RunSink for NullSink {
+    fn append(&mut self, _record: &TrialRecord) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Append-only JSONL file, one committed trial per line.
+pub struct JsonlRunSink {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+impl JsonlRunSink {
+    /// Open (creating parents and the file as needed) for appending.
+    pub fn open(path: &Path) -> Result<JsonlRunSink> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening run sink {}", path.display()))?;
+        Ok(JsonlRunSink { path: path.to_path_buf(), file })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read a run file back as fingerprint -> record. Missing file means an
+    /// empty map; a malformed line (crash mid-append) is skipped with a
+    /// warning rather than poisoning the resume.
+    pub fn load(path: &Path) -> Result<BTreeMap<String, TrialRecord>> {
+        let mut out = BTreeMap::new();
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading run sink {}", path.display()))
+            }
+        };
+        let mut dropped = 0usize;
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = crate::util::json::Json::parse(line)
+                .ok()
+                .and_then(|j| TrialRecord::from_json(&j).ok());
+            match parsed {
+                Some(rec) => {
+                    out.insert(rec.fingerprint.clone(), rec);
+                }
+                None => {
+                    dropped += 1;
+                    log_warn!(
+                        "run sink {}: skipping malformed line {} (interrupted append?)",
+                        path.display(),
+                        lineno + 1
+                    );
+                }
+            }
+        }
+        if !out.is_empty() {
+            log_info!(
+                "run sink {}: loaded {} committed trial(s){}",
+                path.display(),
+                out.len(),
+                if dropped > 0 { format!(", dropped {dropped}") } else { String::new() }
+            );
+        }
+        Ok(out)
+    }
+}
+
+impl RunSink for JsonlRunSink {
+    fn append(&mut self, record: &TrialRecord) -> Result<()> {
+        let line = record.to_json().to_string_compact();
+        writeln!(self.file, "{line}")
+            .with_context(|| format!("appending to {}", self.path.display()))?;
+        self.file
+            .flush()
+            .with_context(|| format!("flushing {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::simclock::SimClockReport;
+    use crate::metrics::MetricsLog;
+
+    fn rec(fp: &str) -> TrialRecord {
+        TrialRecord {
+            fingerprint: fp.to_string(),
+            cell: "c".into(),
+            label: "c".into(),
+            seed_index: 0,
+            config: ExperimentConfig::default(),
+            log: MetricsLog::default(),
+            sim: SimClockReport {
+                virtual_secs: 0.0,
+                master_utilization: 0.0,
+                mean_sync_wait: 0.0,
+                p95_style_max_wait: 0.0,
+                rounds: 0,
+            },
+            worker_stats: vec![],
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("deahes-sink-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn append_then_load_roundtrips() {
+        let path = tmp("roundtrip.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut sink = JsonlRunSink::open(&path).unwrap();
+            sink.append(&rec("aa")).unwrap();
+            sink.append(&rec("bb")).unwrap();
+        }
+        let map = JsonlRunSink::load(&path).unwrap();
+        assert_eq!(map.len(), 2);
+        assert!(map.contains_key("aa") && map.contains_key("bb"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_skips_truncated_tail() {
+        let path = tmp("truncated.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut sink = JsonlRunSink::open(&path).unwrap();
+            sink.append(&rec("aa")).unwrap();
+        }
+        // simulate a crash mid-append
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"fingerprint\":\"bb\",\"cell\"");
+        std::fs::write(&path, text).unwrap();
+        let map = JsonlRunSink::load(&path).unwrap();
+        assert_eq!(map.len(), 1);
+        assert!(map.contains_key("aa"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_missing_file_is_empty() {
+        let map = JsonlRunSink::load(Path::new("/nonexistent/deahes-runs.jsonl")).unwrap();
+        assert!(map.is_empty());
+    }
+}

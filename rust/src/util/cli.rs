@@ -153,6 +153,17 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The option's value, or `None` when it is empty — for options whose
+    /// empty-string default means "off" (e.g. `--run-dir`, `--save-csv`).
+    pub fn opt_nonempty(&self, name: &str) -> Option<&str> {
+        let v = self.get(name);
+        if v.is_empty() {
+            None
+        } else {
+            Some(v)
+        }
+    }
+
     pub fn usize(&self, name: &str) -> usize {
         self.parse_as(name)
     }
@@ -172,7 +183,10 @@ impl Args {
     fn parse_as<T: std::str::FromStr>(&self, name: &str) -> T {
         let raw = self.get(name);
         raw.parse().unwrap_or_else(|_| {
-            eprintln!("error: --{name} expects a {} value, got '{raw}'", std::any::type_name::<T>());
+            eprintln!(
+                "error: --{name} expects a {} value, got '{raw}'",
+                std::any::type_name::<T>()
+            );
             std::process::exit(2);
         })
     }
@@ -261,5 +275,16 @@ mod tests {
     fn positional_passthrough() {
         let a = cli().parse(&argv(&["--method", "x", "pos1"])).unwrap();
         assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn opt_nonempty_treats_empty_as_off() {
+        let a = Cli::new("t", "")
+            .opt("run-dir", "", "")
+            .opt("out", "x", "")
+            .parse(&argv(&[]))
+            .unwrap();
+        assert_eq!(a.opt_nonempty("run-dir"), None);
+        assert_eq!(a.opt_nonempty("out"), Some("x"));
     }
 }

@@ -106,6 +106,29 @@ impl Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// `[[a,b], ...]` from integer pairs (per-worker sync stats).
+    pub fn arr_u64_pairs(v: &[(u64, u64)]) -> Json {
+        Json::Arr(
+            v.iter()
+                .map(|&(a, b)| Json::Arr(vec![Json::num(a as f64), Json::num(b as f64)]))
+                .collect(),
+        )
+    }
+
+    /// Inverse of [`Json::arr_u64_pairs`]; tolerant of missing/short rows.
+    pub fn as_u64_pairs(&self) -> Vec<(u64, u64)> {
+        self.as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|pair| {
+                (
+                    pair.idx(0).as_f64().unwrap_or(0.0) as u64,
+                    pair.idx(1).as_f64().unwrap_or(0.0) as u64,
+                )
+            })
+            .collect()
+    }
+
     // ---------------- parse ----------------
 
     pub fn parse(text: &str) -> Result<Json, JsonError> {
@@ -124,6 +147,15 @@ impl Json {
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, true);
+        s
+    }
+
+    /// Single-line form (JSONL records, fingerprint hashing). Object keys
+    /// are BTreeMap-ordered and numbers use the shortest round-trip form,
+    /// so equal values always serialize to equal bytes.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
         s
     }
 
@@ -434,6 +466,25 @@ mod tests {
     fn integers_serialized_without_fraction() {
         let s = Json::Num(42.0).to_string_pretty();
         assert_eq!(s, "42");
+    }
+
+    #[test]
+    fn u64_pairs_roundtrip() {
+        let pairs = vec![(10u64, 1u64), (9, 0)];
+        let j = Json::arr_u64_pairs(&pairs);
+        assert_eq!(j.as_u64_pairs(), pairs);
+        assert_eq!(Json::parse(&j.to_string_compact()).unwrap().as_u64_pairs(), pairs);
+        assert!(Json::Null.as_u64_pairs().is_empty());
+    }
+
+    #[test]
+    fn compact_is_single_line_and_roundtrips() {
+        let src = r#"{"a":[1,2.5,{"b":"x"}],"c":null}"#;
+        let j = Json::parse(src).unwrap();
+        let compact = j.to_string_compact();
+        assert!(!compact.contains('\n'));
+        assert_eq!(Json::parse(&compact).unwrap(), j);
+        assert_eq!(compact, src);
     }
 
     #[test]

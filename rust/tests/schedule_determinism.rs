@@ -1,0 +1,139 @@
+//! Integration: backend-invariance and resume of the trial-schedule engine.
+//!
+//! The contract under test (docs/ARCHITECTURE.md):
+//!  * a plan executed through the sequential backend and through the
+//!    thread-pool backend commits byte-identical JSONL records and produces
+//!    identical averaged series (wall-clock aside);
+//!  * a sweep killed after committing some trials resumes without
+//!    re-running them.
+
+use deahes::config::{EngineKind, ExperimentConfig};
+use deahes::experiments;
+use deahes::schedule::{self, ScheduleOptions, TrialPlan};
+use deahes::strategies::Method;
+use std::path::{Path, PathBuf};
+
+fn quad_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        engine: EngineKind::Quadratic { dim: 32, heterogeneity: 0.2, noise: 0.02 },
+        workers: 3,
+        tau: 2,
+        rounds: 10,
+        eval_subset: 16,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// 2 methods × 2 seeds, the sweep shape from the issue's acceptance check.
+fn small_grid_plan() -> TrialPlan {
+    let mut plan = TrialPlan::new();
+    for m in [Method::Easgd, Method::DeahesO] {
+        let mut cfg = quad_cfg();
+        cfg.method = m;
+        cfg.overlap_ratio = m.paper_overlap_ratio(cfg.workers);
+        plan.push_cell(&format!("det/{}", m.name()), m.name(), &cfg, 2);
+    }
+    plan
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("deahes-determinism-{}-{name}", std::process::id()))
+}
+
+fn runs_file(dir: &Path) -> PathBuf {
+    dir.join(schedule::RUNS_FILE)
+}
+
+#[test]
+fn backends_commit_byte_identical_jsonl_and_series() {
+    let seq_dir = tmp_dir("seq");
+    let pool_dir = tmp_dir("pool");
+    let _ = std::fs::remove_dir_all(&seq_dir);
+    let _ = std::fs::remove_dir_all(&pool_dir);
+
+    let plan = small_grid_plan();
+    let seq = schedule::execute_plan(
+        &plan,
+        &ScheduleOptions { jobs: 1, run_dir: Some(seq_dir.clone()), resume: false },
+    )
+    .unwrap();
+    let pool = schedule::execute_plan(
+        &plan,
+        &ScheduleOptions { jobs: 4, run_dir: Some(pool_dir.clone()), resume: false },
+    )
+    .unwrap();
+    assert_eq!(seq.backend, "sequential");
+    assert_eq!(pool.backend, "thread-pool");
+
+    // the committed JSONL must be byte-identical
+    let seq_bytes = std::fs::read(runs_file(&seq_dir)).unwrap();
+    let pool_bytes = std::fs::read(runs_file(&pool_dir)).unwrap();
+    assert!(!seq_bytes.is_empty());
+    assert_eq!(seq_bytes, pool_bytes, "run sinks differ between backends");
+
+    // and so must the averaged series built from the outcomes
+    let a = experiments::series_by_cell(&plan, &seq.outcomes);
+    let b = experiments::series_by_cell(&plan, &pool.outcomes);
+    assert_eq!(a.len(), 2);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.deterministic_digest(), y.deterministic_digest(), "{}", x.label);
+    }
+
+    let _ = std::fs::remove_dir_all(&seq_dir);
+    let _ = std::fs::remove_dir_all(&pool_dir);
+}
+
+#[test]
+fn killed_sweep_resumes_without_rerunning_committed_trials() {
+    let dir = tmp_dir("resume");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // "kill" a sweep after its first cell: run a prefix of the plan
+    let mut prefix = TrialPlan::new();
+    {
+        let mut cfg = quad_cfg();
+        cfg.method = Method::Easgd;
+        cfg.overlap_ratio = Method::Easgd.paper_overlap_ratio(cfg.workers);
+        prefix.push_cell(&format!("det/{}", Method::Easgd.name()), Method::Easgd.name(), &cfg, 2);
+    }
+    let opts = ScheduleOptions { jobs: 1, run_dir: Some(dir.clone()), resume: false };
+    let first = schedule::execute_plan(&prefix, &opts).unwrap();
+    assert_eq!(first.executed, 2);
+
+    // resume the FULL plan: the prefix cell must come from the sink
+    let plan = small_grid_plan();
+    let opts = ScheduleOptions { resume: true, ..opts };
+    let resumed = schedule::execute_plan(&plan, &opts).unwrap();
+    assert_eq!(resumed.skipped, 2, "committed trials must not re-run");
+    assert_eq!(resumed.executed, 2);
+    assert!(resumed.outcomes[0].cached && resumed.outcomes[1].cached);
+    assert!(!resumed.outcomes[2].cached && !resumed.outcomes[3].cached);
+
+    // a fresh uninterrupted run agrees with the resumed one exactly
+    let fresh_dir = tmp_dir("fresh");
+    let _ = std::fs::remove_dir_all(&fresh_dir);
+    let fresh = schedule::execute_plan(
+        &plan,
+        &ScheduleOptions { jobs: 1, run_dir: Some(fresh_dir.clone()), resume: false },
+    )
+    .unwrap();
+    assert_eq!(
+        std::fs::read(runs_file(&dir)).unwrap(),
+        std::fs::read(runs_file(&fresh_dir)).unwrap(),
+        "resumed sink must match an uninterrupted run byte-for-byte"
+    );
+    for (x, y) in experiments::series_by_cell(&plan, &resumed.outcomes)
+        .iter()
+        .zip(&experiments::series_by_cell(&plan, &fresh.outcomes))
+    {
+        assert_eq!(x.deterministic_digest(), y.deterministic_digest());
+    }
+
+    // a second resume of a complete sweep runs nothing at all
+    let again = schedule::execute_plan(&plan, &opts).unwrap();
+    assert_eq!(again.executed, 0);
+    assert_eq!(again.skipped, 4);
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&fresh_dir);
+}
