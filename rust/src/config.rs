@@ -68,6 +68,12 @@ pub struct ExperimentConfig {
     pub knee: f64,
     pub detector: Detector,
     pub gossip: GossipMode,
+    /// Explicit sync-policy spec (see `elastic::policy`), overriding the
+    /// method preset. `None` = derive the spec from `method`/`alpha`/
+    /// `knee`/`detector`, which reproduces the paper presets exactly and
+    /// keeps legacy config JSON (and hence schedule fingerprints)
+    /// byte-identical: the key is omitted from JSON when `None`.
+    pub policy: Option<String>,
     // -- engine & driver --
     pub engine: EngineKind,
     /// true: one OS thread per worker (realistic async); false: the
@@ -97,6 +103,7 @@ impl Default for ExperimentConfig {
             knee: -0.05,
             detector: Detector::PaperSign,
             gossip: GossipMode::Peers,
+            policy: None,
             engine: EngineKind::Xla { artifacts_dir: "artifacts".into(), native_opt: false },
             threaded: false,
         }
@@ -115,6 +122,20 @@ impl ExperimentConfig {
 
     pub fn dynamic_params(&self) -> DynamicParams {
         DynamicParams { alpha: self.alpha, knee: self.knee, detector: self.detector }
+    }
+
+    /// The sync-policy spec this run uses: the explicit `policy` override,
+    /// or the method preset's alias into the registry.
+    pub fn effective_policy_spec(&self) -> String {
+        match &self.policy {
+            Some(s) => s.clone(),
+            None => self.method.policy_spec(self.alpha, self.dynamic_params()),
+        }
+    }
+
+    /// Build the sync policy for this run from its effective spec.
+    pub fn build_policy(&self) -> Result<Box<dyn crate::elastic::policy::SyncPolicy>> {
+        crate::elastic::policy::parse(&self.effective_policy_spec())
     }
 
     pub fn score_weights(&self) -> Vec<f64> {
@@ -136,6 +157,10 @@ impl ExperimentConfig {
         }
         if self.knee >= 0.0 {
             bail!("knee must be negative (paper: k < 0)");
+        }
+        if let Some(spec) = &self.policy {
+            crate::elastic::policy::validate(spec)
+                .with_context(|| format!("config: bad policy spec '{spec}'"))?;
         }
         if self.lr <= 0.0 {
             bail!("lr must be positive");
@@ -167,7 +192,7 @@ impl ExperimentConfig {
                 ("noise", Json::num(*noise)),
             ]),
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("method", Json::str(&self.method.name().to_ascii_lowercase())),
             ("workers", Json::num(self.workers as f64)),
             ("tau", Json::num(self.tau as f64)),
@@ -195,7 +220,34 @@ impl ExperimentConfig {
             ),
             ("engine", engine),
             ("threaded", Json::Bool(self.threaded)),
-        ])
+        ];
+        // Omitted when None so preset-driven configs keep the exact JSON
+        // (and schedule fingerprints) they had before the policy layer.
+        if let Some(spec) = &self.policy {
+            fields.push(("policy", Json::str(spec)));
+        }
+        Json::obj(fields)
+    }
+
+    /// A string-encoded enum field: absent → the default; present → must be
+    /// a string AND must parse. Present-but-unrecognized values are hard
+    /// errors (a config naming a detector/gossip/fail-style we do not know
+    /// must never silently run with the default instead).
+    fn enum_field<T>(
+        j: &Json,
+        key: &str,
+        default: T,
+        parse: impl Fn(&str) -> Option<T>,
+    ) -> Result<T> {
+        match j.get(key) {
+            Json::Null => Ok(default),
+            v => {
+                let s = v
+                    .as_str()
+                    .with_context(|| format!("config: '{key}' must be a string"))?;
+                parse(s).with_context(|| format!("config: unrecognized {key} '{s}'"))
+            }
+        }
     }
 
     pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
@@ -240,24 +292,26 @@ impl ExperimentConfig {
                 .map(|s| FailureModel::parse(s).context("bad failure spec"))
                 .transpose()?
                 .unwrap_or(d.failure),
-            fail_style: j
-                .get("fail_style")
-                .as_str()
-                .and_then(FailStyle::parse)
-                .unwrap_or(d.fail_style),
+            fail_style: Self::enum_field(j, "fail_style", d.fail_style, FailStyle::parse)?,
             score_p: j.get("score_p").as_usize().unwrap_or(d.score_p),
             score_decay: j.get("score_decay").as_f64().unwrap_or(d.score_decay),
             knee: j.get("knee").as_f64().unwrap_or(d.knee),
-            detector: j
-                .get("detector")
-                .as_str()
-                .and_then(Detector::parse)
-                .unwrap_or(d.detector),
-            gossip: j
-                .get("gossip")
-                .as_str()
-                .and_then(GossipMode::parse)
-                .unwrap_or(d.gossip),
+            detector: Self::enum_field(j, "detector", d.detector, Detector::parse)?,
+            gossip: Self::enum_field(j, "gossip", d.gossip, GossipMode::parse)?,
+            policy: match j.get("policy") {
+                Json::Null => None,
+                v => {
+                    let s = v
+                        .as_str()
+                        .context("config: 'policy' must be a string spec")?;
+                    // Canonicalize so the stored spec (and any fingerprint
+                    // derived from re-serializing it) is spelling-invariant.
+                    Some(
+                        crate::elastic::policy::canonical(s)
+                            .with_context(|| format!("config: bad policy spec '{s}'"))?,
+                    )
+                }
+            },
             engine,
             threaded: j.get("threaded").as_bool().unwrap_or(d.threaded),
         };
@@ -328,6 +382,103 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.overlap_ratio = 1.0;
         assert!(c.validate().is_err());
+    }
+
+    /// Legacy fingerprint stability: a preset-driven config (policy=None)
+    /// must serialize WITHOUT a `policy` key, so its JSON — and every
+    /// schedule fingerprint hashed from it — is byte-identical to the
+    /// pre-policy-layer encoding.
+    #[test]
+    fn policy_none_is_omitted_from_json() {
+        let cfg = ExperimentConfig::default();
+        assert!(cfg.policy.is_none());
+        let j = cfg.to_json();
+        assert_eq!(*j.get("policy"), Json::Null);
+        assert!(!j.to_string_compact().contains("policy"));
+    }
+
+    #[test]
+    fn policy_spec_roundtrips_canonicalized() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = Some("staleness(alpha=0.2,halflife=3)".into());
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.policy.as_deref(), Some("staleness(alpha=0.2,halflife=3)"));
+        // spelling variants canonicalize on the way in
+        let mut j = cfg.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("policy".into(), Json::str(" staleness ( halflife = 3, alpha=0.2 ) "));
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.policy.as_deref(), Some("staleness(alpha=0.2,halflife=3)"));
+    }
+
+    #[test]
+    fn effective_policy_spec_prefers_override() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(
+            cfg.effective_policy_spec(),
+            cfg.method.policy_spec(cfg.alpha, cfg.dynamic_params())
+        );
+        cfg.policy = Some("fixed(alpha=0.5)".into());
+        assert_eq!(cfg.effective_policy_spec(), "fixed(alpha=0.5)");
+        assert_eq!(cfg.build_policy().unwrap().spec(), "fixed(alpha=0.5)");
+    }
+
+    /// Present-but-unrecognized enum strings must be hard errors, not
+    /// silent fallbacks to the default (regression: `.and_then(parse)
+    /// .unwrap_or(default)` used to swallow them).
+    #[test]
+    fn unrecognized_enum_strings_rejected() {
+        for (key, bad) in [
+            ("detector", "psychic"),
+            ("gossip", "telepathy"),
+            ("fail_style", "meteor"),
+            ("policy", "bogus(x=1)"),
+            ("policy", "fixed(beta=9)"),
+        ] {
+            let mut j = ExperimentConfig::default().to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert(key.into(), Json::str(bad));
+            }
+            let err = ExperimentConfig::from_json(&j).unwrap_err().to_string();
+            assert!(
+                err.contains(key),
+                "{key}='{bad}' must fail naming the key, got: {err}"
+            );
+        }
+        // non-string values for enum keys are also errors
+        let mut j = ExperimentConfig::default().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("detector".into(), Json::num(3.0));
+        }
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    /// Absent enum keys still take the defaults (old config files keep
+    /// loading).
+    #[test]
+    fn absent_enum_keys_default() {
+        let mut j = ExperimentConfig::default().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("detector");
+            m.remove("gossip");
+            m.remove("fail_style");
+        }
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        let d = ExperimentConfig::default();
+        assert_eq!(cfg.detector, d.detector);
+        assert_eq!(cfg.gossip, d.gossip);
+        assert_eq!(cfg.fail_style, d.fail_style);
+        assert_eq!(cfg.policy, None);
+    }
+
+    #[test]
+    fn validate_rejects_bad_policy_spec() {
+        let mut c = ExperimentConfig::default();
+        c.policy = Some("dynamic(knee=0.5)".into());
+        assert!(c.validate().is_err());
+        c.policy = Some("hysteresis(hold=3)".into());
+        c.validate().unwrap();
     }
 
     #[test]

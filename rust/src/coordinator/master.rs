@@ -1,8 +1,16 @@
 //! Master-side state machine: serves elastic syncs (paper eqs. 12-13 with
 //! the policy-chosen h1/h2), tracks per-worker sync statistics, and owns
 //! the aggregated model. Thread-agnostic.
+//!
+//! The weighting strategy is a [`SyncPolicy`] trait object built from a
+//! policy spec (see `elastic::policy`): each sync hands the policy a
+//! structured [`SyncContext`] and applies the
+//! [`SyncWeights`](crate::elastic::policy::SyncWeights) it returns.
+//! Policies may keep per-worker state across syncs — the master owns the
+//! policy for the lifetime of a run and calls `init` with the worker count
+//! up front.
 
-use crate::elastic::weight::WeightPolicy;
+use crate::elastic::policy::{SyncContext, SyncPolicy};
 use crate::engine::Engine;
 use anyhow::Result;
 
@@ -29,69 +37,88 @@ pub struct WorkerSyncStats {
 
 pub struct MasterState {
     pub theta: Vec<f32>,
-    pub policy: WeightPolicy,
+    pub policy: Box<dyn SyncPolicy>,
     pub per_worker: Vec<WorkerSyncStats>,
     pub total_syncs: u64,
-    alpha: f64,
+    /// The policy's healthy-regime h2; serving below it counts as a
+    /// correction. Taken from the policy (not the run config) so the stat
+    /// stays correct when `--policy` pins a different α than the run's.
+    correction_floor: f64,
 }
 
 impl MasterState {
-    pub fn new(theta0: Vec<f32>, policy: WeightPolicy, workers: usize, alpha: f64) -> MasterState {
+    pub fn new(theta0: Vec<f32>, mut policy: Box<dyn SyncPolicy>, workers: usize) -> MasterState {
+        policy.init(workers);
+        let correction_floor = policy.healthy_h2();
         MasterState {
             theta: theta0,
             policy,
             per_worker: vec![WorkerSyncStats::default(); workers],
             total_syncs: 0,
-            alpha,
+            correction_floor,
         }
     }
 
-    /// Serve one sync: choose (h1, h2), run the elastic pair update through
-    /// the engine (L1 kernel or native mirror), update stats.
+    /// Canonical spec of the policy serving this master.
+    pub fn policy_spec(&self) -> String {
+        self.policy.spec()
+    }
+
+    /// Serve one sync: ask the policy for (h1, h2), run the elastic pair
+    /// update through the engine (L1 kernel or native mirror), update stats.
     ///
     /// `theta_w` is updated in place to the post-elastic worker parameters;
     /// the master's own `self.theta` is updated to the new aggregate.
     pub fn serve_sync(
         &mut self,
         engine: &mut dyn Engine,
-        worker: usize,
-        round: u64,
+        ctx: &SyncContext,
         theta_w: &mut Vec<f32>,
-        raw_score: Option<f64>,
-        missed: u32,
     ) -> Result<SyncEvent> {
-        let (h1, h2) = self.policy.weights(raw_score, missed);
+        let w = self.policy.weights(ctx);
+        let (h1, h2) = (w.h1, w.h2);
         engine.elastic(theta_w, &mut self.theta, h1 as f32, h2 as f32)?;
-        let st = &mut self.per_worker[worker];
+        let st = &mut self.per_worker[ctx.worker];
         st.served += 1;
         st.h1_sum += h1;
         st.h2_sum += h2;
-        if h2 < self.alpha - 1e-12 {
+        if h2 < self.correction_floor - 1e-12 {
             st.corrections += 1;
         }
         self.total_syncs += 1;
-        Ok(SyncEvent { worker, round, raw_score, missed, h1, h2 })
+        Ok(SyncEvent {
+            worker: ctx.worker,
+            round: ctx.round,
+            raw_score: ctx.raw_score,
+            missed: ctx.missed,
+            h1,
+            h2,
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::elastic::weight::{Detector, DynamicParams};
+    use crate::elastic::policy;
     use crate::engine::quad::QuadraticEngine;
 
-    fn master(policy: WeightPolicy) -> (MasterState, QuadraticEngine) {
+    fn master(spec: &str) -> (MasterState, QuadraticEngine) {
         (
-            MasterState::new(vec![0.0; 8], policy, 2, 0.1),
+            MasterState::new(vec![0.0; 8], policy::parse(spec).unwrap(), 2),
             QuadraticEngine::new(8, 1, 0, 0.0, 0.0),
         )
     }
 
+    fn ctx(worker: usize, round: u64, raw_score: Option<f64>, missed: u32) -> SyncContext {
+        SyncContext { worker, round, raw_score, missed, alpha: 0.1 }
+    }
+
     #[test]
     fn fixed_policy_moves_both_sides() {
-        let (mut m, mut e) = master(WeightPolicy::Fixed { alpha: 0.5 });
+        let (mut m, mut e) = master("fixed(alpha=0.5)");
         let mut tw = vec![2.0; 8];
-        let ev = m.serve_sync(&mut e, 0, 1, &mut tw, None, 0).unwrap();
+        let ev = m.serve_sync(&mut e, &ctx(0, 1, None, 0), &mut tw).unwrap();
         assert_eq!((ev.h1, ev.h2), (0.5, 0.5));
         assert_eq!(tw, vec![1.0; 8]);
         assert_eq!(m.theta, vec![1.0; 8]);
@@ -100,9 +127,9 @@ mod tests {
 
     #[test]
     fn oracle_policy_blocks_failed_worker_influence() {
-        let (mut m, mut e) = master(WeightPolicy::Oracle { alpha: 0.1 });
+        let (mut m, mut e) = master("oracle(alpha=0.1)");
         let mut tw = vec![10.0; 8];
-        let ev = m.serve_sync(&mut e, 1, 3, &mut tw, None, 2).unwrap();
+        let ev = m.serve_sync(&mut e, &ctx(1, 3, None, 2), &mut tw).unwrap();
         assert_eq!((ev.h1, ev.h2), (1.0, 0.0));
         // worker teleported to master, master untouched
         assert_eq!(tw, vec![0.0; 8]);
@@ -112,33 +139,66 @@ mod tests {
 
     #[test]
     fn dynamic_policy_corrects_on_drift() {
-        let policy = WeightPolicy::Dynamic(DynamicParams {
-            alpha: 0.1,
-            knee: -0.05,
-            detector: Detector::DriftSign,
-        });
-        let (mut m, mut e) = master(policy);
+        let (mut m, mut e) =
+            master("dynamic(alpha=0.1,knee=-0.05,detector=drift-sign)");
         let mut tw = vec![4.0; 8];
         // strong positive raw score = distance exploding = failure
-        let ev = m.serve_sync(&mut e, 0, 2, &mut tw, Some(1.0), 0).unwrap();
+        let ev = m.serve_sync(&mut e, &ctx(0, 2, Some(1.0), 0), &mut tw).unwrap();
         assert_eq!((ev.h1, ev.h2), (1.0, 0.0));
         assert_eq!(tw, vec![0.0; 8]);
         // healthy score keeps EASGD behaviour
         let mut tw2 = vec![4.0; 8];
-        let ev2 = m.serve_sync(&mut e, 0, 3, &mut tw2, Some(-0.001), 0).unwrap();
+        let ev2 = m.serve_sync(&mut e, &ctx(0, 3, Some(-0.001), 0), &mut tw2).unwrap();
         assert!((ev2.h1 - 0.1).abs() < 1e-12);
         assert!((ev2.h2 - 0.1).abs() < 1e-12);
     }
 
     #[test]
+    fn hysteresis_latch_survives_across_syncs() {
+        let (mut m, mut e) = master("hysteresis(hold=2)");
+        let mut tw = vec![1.0; 8];
+        let ev = m.serve_sync(&mut e, &ctx(0, 0, Some(-0.5), 1), &mut tw).unwrap();
+        assert_eq!((ev.h1, ev.h2), (1.0, 0.0));
+        // healthy scores, but the latch holds for two more syncs
+        for r in 1..=2 {
+            let mut tw = vec![1.0; 8];
+            let ev = m.serve_sync(&mut e, &ctx(0, r, Some(0.5), 0), &mut tw).unwrap();
+            assert_eq!((ev.h1, ev.h2), (1.0, 0.0), "round {r}");
+        }
+        let mut tw = vec![1.0; 8];
+        let ev = m.serve_sync(&mut e, &ctx(0, 3, Some(0.5), 0), &mut tw).unwrap();
+        assert_eq!((ev.h1, ev.h2), (0.1, 0.1));
+        assert_eq!(m.per_worker[0].corrections, 3);
+    }
+
+    #[test]
     fn stats_accumulate() {
-        let (mut m, mut e) = master(WeightPolicy::Fixed { alpha: 0.1 });
+        let (mut m, mut e) = master("fixed(alpha=0.1)");
         let mut tw = vec![1.0; 8];
         for r in 0..5 {
-            m.serve_sync(&mut e, 0, r, &mut tw, None, 0).unwrap();
+            m.serve_sync(&mut e, &ctx(0, r, None, 0), &mut tw).unwrap();
         }
         assert_eq!(m.per_worker[0].served, 5);
         assert!((m.per_worker[0].h1_sum - 0.5).abs() < 1e-12);
+        assert_eq!(m.per_worker[0].corrections, 0);
+    }
+
+    #[test]
+    fn policy_spec_surfaces_canonical_form() {
+        let (m, _) = master("staleness");
+        assert_eq!(m.policy_spec(), "staleness(alpha=0.1,halflife=2)");
+    }
+
+    /// The correction baseline is the POLICY's α: a policy pinning a lower
+    /// α than the run default must not report every healthy sync as a
+    /// correction (regression for the run-α-vs-policy-α skew).
+    #[test]
+    fn corrections_baseline_follows_the_policy_alpha() {
+        let (mut m, mut e) = master("fixed(alpha=0.05)");
+        let mut tw = vec![1.0; 8];
+        for r in 0..4 {
+            m.serve_sync(&mut e, &ctx(0, r, None, 0), &mut tw).unwrap();
+        }
         assert_eq!(m.per_worker[0].corrections, 0);
     }
 }

@@ -135,12 +135,9 @@ impl Setup {
         )
     }
 
-    pub fn make_master(&self) -> MasterState {
-        let policy = self
-            .cfg
-            .method
-            .weight_policy(self.cfg.alpha, self.cfg.dynamic_params());
-        MasterState::new(self.theta0.clone(), policy, self.cfg.workers, self.cfg.alpha)
+    pub fn make_master(&self) -> Result<MasterState> {
+        let policy = self.cfg.build_policy()?;
+        Ok(MasterState::new(self.theta0.clone(), policy, self.cfg.workers))
     }
 
     pub fn make_evaluator(&self) -> Evaluator {
@@ -214,7 +211,7 @@ pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
     let mut engine = setup.make_engine(Role::All)?;
     let mut workers: Vec<WorkerState> =
         (0..cfg.workers).map(|i| setup.make_worker(i)).collect();
-    let mut master = setup.make_master();
+    let mut master = setup.make_master()?;
     let gossip = GossipBoard::new(
         cfg.workers,
         Arc::new(setup.theta0.clone()),
@@ -227,8 +224,9 @@ pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
     let mut per_round_syncs: Vec<usize> = Vec::with_capacity(cfg.rounds as usize);
 
     log_info!(
-        "sequential run: method={} k={} tau={} rounds={} overlap={:.3} failure={}",
+        "sequential run: method={} policy={} k={} tau={} rounds={} overlap={:.3} failure={}",
         cfg.method.name(),
+        master.policy_spec(),
         cfg.workers,
         cfg.tau,
         cfg.rounds,
@@ -268,14 +266,14 @@ pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
                 continue;
             }
             let mut tw = std::mem::take(&mut workers[w].theta);
-            let ev = master.serve_sync(
-                engine.as_mut(),
-                w,
+            let ctx = crate::elastic::policy::SyncContext {
+                worker: w,
                 round,
-                &mut tw,
-                score,
-                workers[w].missed,
-            )?;
+                raw_score: score,
+                missed: workers[w].missed,
+                alpha: cfg.alpha,
+            };
+            let ev = master.serve_sync(engine.as_mut(), &ctx, &mut tw)?;
             workers[w].complete_sync(tw);
             gossip.publish(w, round + 1, Arc::new(master.theta.clone()));
             h1s.push(ev.h1);
@@ -300,7 +298,7 @@ pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
         }
     }
 
-    let (t_step, t_sync) = measured_costs(engine.as_ref(), cfg);
+    let (t_step, t_sync) = measured_costs([engine.mean_costs()]);
     let mut clock = SimClock::new(t_step, t_sync);
     for &s in &per_round_syncs {
         clock.round(cfg.workers, cfg.tau, s);
@@ -322,14 +320,35 @@ fn mean(xs: &[f64]) -> f64 {
     crate::util::stats::mean(xs)
 }
 
-/// Virtual-clock costs anchored to this host: measured mean per-call times
-/// when available, otherwise nominal constants (1 ms step, 0.2 ms sync).
-fn measured_costs(engine: &dyn Engine, cfg: &ExperimentConfig) -> (f64, f64) {
-    let _ = engine;
-    match &cfg.engine {
-        EngineKind::Quadratic { .. } => (1e-3, 2e-4),
-        EngineKind::Xla { .. } => (1e-3, 2e-4), // refined by the perf pass via stats
+/// Nominal virtual-clock constants when no engine kept timing stats.
+const NOMINAL_STEP_SECS: f64 = 1e-3;
+const NOMINAL_SYNC_SECS: f64 = 2e-4;
+
+/// Virtual-clock costs anchored to this host — the ONE helper both drivers
+/// route through. Each engine instance reports its measured per-call means
+/// via [`Engine::mean_costs`] (the XLA engine derives them from the PJRT
+/// call stats; the quadratic engine keeps none); available measurements are
+/// averaged per side, and the nominal constants (1 ms step, 0.2 ms sync)
+/// fill whichever side has no measurement.
+///
+/// Determinism scope: stats-less engines (quadratic — everything the
+/// schedule-determinism tests pin) always get the nominal constants, so
+/// their records stay byte-identical across backends and re-runs. A
+/// stats-keeping engine's `virtual_secs` is host-anchored by design (see
+/// docs/ARCHITECTURE.md §Invariants).
+fn measured_costs(costs: impl IntoIterator<Item = (Option<f64>, Option<f64>)>) -> (f64, f64) {
+    let (mut steps, mut syncs) = (Vec::new(), Vec::new());
+    for (step, sync) in costs {
+        if let Some(s) = step {
+            steps.push(s);
+        }
+        if let Some(s) = sync {
+            syncs.push(s);
+        }
     }
+    let step = if steps.is_empty() { NOMINAL_STEP_SECS } else { mean(&steps) };
+    let sync = if syncs.is_empty() { NOMINAL_SYNC_SECS } else { mean(&syncs) };
+    (step, sync)
 }
 
 // ---------------------------------------------------------------------------
@@ -347,8 +366,9 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
     let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
 
     log_info!(
-        "threaded run: method={} k={} tau={} rounds={}",
+        "threaded run: method={} policy={} k={} tau={} rounds={}",
         cfg.method.name(),
+        cfg.effective_policy_spec(),
         cfg.workers,
         cfg.tau,
         cfg.rounds
@@ -356,14 +376,18 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
 
     std::thread::scope(|scope| -> Result<RunResult> {
         // ---- master thread ----
+        // (perf text, per-worker stats, engine mean costs) / (perf, costs)
+        type MasterReturn = (String, Vec<(u64, u64)>, (Option<f64>, Option<f64>));
+        type WorkerReturn = (String, (Option<f64>, Option<f64>));
         let master_handle = {
             let setup_ref = &*setup;
             std::thread::Builder::new()
                 .name("master".into())
-                .spawn_scoped(scope, move || -> Result<(String, Vec<(u64, u64)>)> {
+                .spawn_scoped(scope, move || -> Result<MasterReturn> {
                     let mut engine = setup_ref.make_engine(Role::Master)?;
-                    let mut master = setup_ref.make_master();
+                    let mut master = setup_ref.make_master()?;
                     let mut evaluator = setup_ref.make_evaluator();
+                    let alpha = setup_ref.cfg.alpha;
                     while let Ok(msg) = master_rx.recv() {
                         match msg {
                             ToMaster::Sync {
@@ -374,14 +398,15 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
                                 missed,
                                 reply,
                             } => {
-                                let ev = master.serve_sync(
-                                    engine.as_mut(),
+                                let ctx = crate::elastic::policy::SyncContext {
                                     worker,
                                     round,
-                                    &mut theta_w,
                                     raw_score,
                                     missed,
-                                )?;
+                                    alpha,
+                                };
+                                let ev =
+                                    master.serve_sync(engine.as_mut(), &ctx, &mut theta_w)?;
                                 let _ = reply.send(SyncReply {
                                     theta_w,
                                     theta_m: Arc::new(master.theta.clone()),
@@ -406,6 +431,7 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
                             .iter()
                             .map(|s| (s.served, s.corrections))
                             .collect(),
+                        engine.mean_costs(),
                     ))
                 })
                 .expect("spawn master")
@@ -426,7 +452,7 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
             let tau = cfg.tau;
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{i}"))
-                .spawn_scoped(scope, move || -> Result<String> {
+                .spawn_scoped(scope, move || -> Result<WorkerReturn> {
                     let mut engine = setup_ref.make_engine(Role::Worker(i))?;
                     let mut gossip_rng = Rng::new(seed).derive(0x6055).derive(i as u64);
                     let (reply_tx, reply_rx) = mpsc::channel::<SyncReply>();
@@ -475,7 +501,7 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
                         barrier.wait(); // A: round work done
                         barrier.wait(); // B: metrics sampled, go on
                     }
-                    Ok(engine.perf_summary())
+                    Ok((engine.perf_summary(), engine.mean_costs()))
                 })
                 .expect("spawn worker");
             worker_handles.push(handle);
@@ -532,18 +558,22 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
         }
 
         let mut perf = String::new();
+        let mut engine_costs: Vec<(Option<f64>, Option<f64>)> = Vec::with_capacity(k + 1);
         for h in worker_handles {
-            let s = h.join().expect("worker panicked")?;
+            let (s, costs) = h.join().expect("worker panicked")?;
             if !s.is_empty() {
                 perf.push_str(&s);
             }
+            engine_costs.push(costs);
         }
         master_tx.send(ToMaster::Shutdown).ok();
         drop(master_tx);
-        let (master_perf, worker_stats) = master_handle.join().expect("master panicked")?;
+        let (master_perf, worker_stats, master_costs) =
+            master_handle.join().expect("master panicked")?;
         perf.push_str(&master_perf);
+        engine_costs.push(master_costs);
 
-        let (t_step, t_sync) = (1e-3, 2e-4);
+        let (t_step, t_sync) = measured_costs(engine_costs);
         let mut clock = SimClock::new(t_step, t_sync);
         for &s in &per_round_syncs {
             clock.round(k, cfg.tau, s);
@@ -556,4 +586,25 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
             worker_stats,
         })
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_costs_falls_back_to_nominal() {
+        assert_eq!(measured_costs([(None, None)]), (NOMINAL_STEP_SECS, NOMINAL_SYNC_SECS));
+        let none: Vec<(Option<f64>, Option<f64>)> = Vec::new();
+        assert_eq!(measured_costs(none), (NOMINAL_STEP_SECS, NOMINAL_SYNC_SECS));
+    }
+
+    #[test]
+    fn measured_costs_averages_available_sides_independently() {
+        // two engines measured their step cost, only one measured sync
+        let (step, sync) =
+            measured_costs([(Some(2e-3), None), (Some(4e-3), Some(1e-4)), (None, None)]);
+        assert!((step - 3e-3).abs() < 1e-12);
+        assert!((sync - 1e-4).abs() < 1e-12);
+    }
 }

@@ -1,8 +1,12 @@
-//! The paper's contribution: raw-score tracking (eq. 10) and the dynamic
-//! weight maps h1/h2 (eqs. 12-13) that replace EASGD's fixed moving rate.
+//! The paper's contribution: raw-score tracking (eq. 10), the dynamic
+//! weight maps h1/h2 (eqs. 12-13) that replace EASGD's fixed moving rate,
+//! and the pluggable sync-policy layer (`policy`) that makes the weighting
+//! strategy an open, spec-addressable API.
 
+pub mod policy;
 pub mod score;
 pub mod weight;
 
+pub use policy::{SyncContext, SyncPolicy, SyncWeights};
 pub use score::{geometric_weights, ScoreTracker};
 pub use weight::{h1, h2, Detector, DynamicParams, WeightPolicy};

@@ -1,0 +1,99 @@
+//! `dynamic(alpha=A,knee=K,detector=D)` — the paper's contribution
+//! (DEAHES-O): piecewise-linear h1/h2 driven by the gossip raw score.
+//!
+//! Delegates the maps to [`crate::elastic::weight`] (eqs. 12-13) so the
+//! trait path computes bit-identical weights to the pre-refactor
+//! `WeightPolicy::Dynamic` enum arm — the equivalence regression test in
+//! `tests/policy_equivalence.rs` pins this.
+
+use super::spec::Params;
+use super::{check_alpha, check_knee, SyncContext, SyncPolicy, SyncWeights};
+use crate::elastic::weight::{h1, h2, Detector, DynamicParams};
+use anyhow::{Context, Result};
+
+#[derive(Clone, Copy, Debug)]
+pub struct DynamicPolicy {
+    pub params: DynamicParams,
+}
+
+impl DynamicPolicy {
+    pub fn new(params: DynamicParams) -> DynamicPolicy {
+        DynamicPolicy { params }
+    }
+
+    pub fn from_params(p: &mut Params) -> Result<DynamicPolicy> {
+        let d = DynamicParams::default();
+        let alpha = check_alpha(p.f64("alpha", d.alpha)?)?;
+        let knee = check_knee(p.f64("knee", d.knee)?)?;
+        let det = p.string("detector", d.detector.name())?;
+        let detector = Detector::parse(&det)
+            .with_context(|| format!("unknown detector '{det}' (paper-sign|drift-sign)"))?;
+        Ok(DynamicPolicy { params: DynamicParams { alpha, knee, detector } })
+    }
+}
+
+impl SyncPolicy for DynamicPolicy {
+    fn spec(&self) -> String {
+        format!(
+            "dynamic(alpha={},knee={},detector={})",
+            self.params.alpha,
+            self.params.knee,
+            self.params.detector.name()
+        )
+    }
+
+    fn weights(&mut self, ctx: &SyncContext) -> SyncWeights {
+        let p = &self.params;
+        match ctx.raw_score {
+            // Warm-up: approximate EASGD until a score exists.
+            None => SyncWeights { h1: p.alpha, h2: p.alpha },
+            Some(a) => {
+                let ae = p.detector.effective(a);
+                SyncWeights { h1: h1(ae, p.alpha, p.knee), h2: h2(ae, p.alpha, p.knee) }
+            }
+        }
+    }
+
+    fn healthy_h2(&self) -> f64 {
+        self.params.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::policy::test_ctx;
+
+    fn policy(detector: Detector) -> DynamicPolicy {
+        DynamicPolicy::new(DynamicParams { alpha: 0.1, knee: -0.05, detector })
+    }
+
+    #[test]
+    fn paper_sign_matches_printed_convention() {
+        let mut p = policy(Detector::PaperSign);
+        let w = p.weights(&test_ctx(0, Some(-0.5), 0)); // a < k: failure
+        assert_eq!((w.h1, w.h2), (1.0, 0.0));
+        let w = p.weights(&test_ctx(0, Some(0.5), 0)); // healthy
+        assert_eq!((w.h1, w.h2), (0.1, 0.1));
+    }
+
+    #[test]
+    fn drift_sign_negates() {
+        let mut p = policy(Detector::DriftSign);
+        let w = p.weights(&test_ctx(0, Some(0.5), 0)); // growing distance
+        assert_eq!((w.h1, w.h2), (1.0, 0.0));
+    }
+
+    #[test]
+    fn warmup_approximates_easgd() {
+        let mut p = policy(Detector::PaperSign);
+        let w = p.weights(&test_ctx(0, None, 2));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1));
+    }
+
+    #[test]
+    fn spec_is_canonical() {
+        let p = policy(Detector::PaperSign);
+        assert_eq!(p.spec(), "dynamic(alpha=0.1,knee=-0.05,detector=paper-sign)");
+    }
+}

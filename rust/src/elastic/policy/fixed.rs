@@ -1,0 +1,56 @@
+//! `fixed(alpha=A)` — EASGD's constant moving rate, both directions.
+//!
+//! The baseline every other policy degenerates to when healthy: h1 = h2 = α
+//! regardless of score or miss history. Backs the EASGD / EAMSGD / EAHES /
+//! EAHES-O presets.
+
+use super::spec::Params;
+use super::{check_alpha, SyncContext, SyncPolicy, SyncWeights};
+use anyhow::Result;
+
+#[derive(Clone, Copy, Debug)]
+pub struct FixedPolicy {
+    pub alpha: f64,
+}
+
+impl FixedPolicy {
+    pub fn from_params(p: &mut Params) -> Result<FixedPolicy> {
+        let alpha = check_alpha(p.f64("alpha", 0.1)?)?;
+        Ok(FixedPolicy { alpha })
+    }
+}
+
+impl SyncPolicy for FixedPolicy {
+    fn spec(&self) -> String {
+        format!("fixed(alpha={})", self.alpha)
+    }
+
+    fn weights(&mut self, _ctx: &SyncContext) -> SyncWeights {
+        SyncWeights { h1: self.alpha, h2: self.alpha }
+    }
+
+    fn healthy_h2(&self) -> f64 {
+        self.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::policy::test_ctx;
+
+    #[test]
+    fn ignores_everything() {
+        let mut p = FixedPolicy { alpha: 0.1 };
+        let w = p.weights(&test_ctx(0, Some(-99.0), 5));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1));
+        let w = p.weights(&test_ctx(3, None, 0));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1));
+    }
+
+    #[test]
+    fn spec_roundtrips() {
+        let p = FixedPolicy { alpha: 0.25 };
+        assert_eq!(p.spec(), "fixed(alpha=0.25)");
+    }
+}

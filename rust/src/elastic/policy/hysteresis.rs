@@ -1,0 +1,173 @@
+//! `hysteresis(alpha=A,knee=K,detector=D,hold=M)` — the dynamic policy with
+//! a latched failure branch.
+//!
+//! The paper's detector fires one sync LATE: the recovery dip that pushes
+//! the raw score past the knee only appears on the sync *after*
+//! reconnection (see the sign-convention discussion in
+//! `elastic/weight.rs`), and a single noisy healthy score can end the
+//! correction just as abruptly. This policy adds per-worker hysteresis: once
+//! the failure branch triggers, the full correction (h1=1, h2=0) latches
+//! for the worker's next `hold` syncs, smoothing the one-sync-late flicker
+//! into a contiguous correction window. `hold=0` degenerates to `dynamic` —
+//! guaranteed structurally: the untriggered/unlatched path delegates to an
+//! embedded [`DynamicPolicy`], so the eqs. 12-13 dispatch lives in exactly
+//! one place.
+//!
+//! The first genuinely stateful policy — it is why [`SyncPolicy::weights`]
+//! takes `&mut self` and carries the worker id in the context.
+
+use super::dynamic::DynamicPolicy;
+use super::spec::Params;
+use super::{SyncContext, SyncPolicy, SyncWeights};
+use crate::elastic::weight::DynamicParams;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct HysteresisPolicy {
+    /// The underlying paper policy; serves every non-latched sync.
+    dynamic: DynamicPolicy,
+    /// Syncs the failure branch stays latched after triggering.
+    pub hold: u32,
+    /// Per-worker remaining latched syncs.
+    latch: Vec<u32>,
+}
+
+impl HysteresisPolicy {
+    pub fn new(params: DynamicParams, hold: u32) -> HysteresisPolicy {
+        HysteresisPolicy { dynamic: DynamicPolicy::new(params), hold, latch: Vec::new() }
+    }
+
+    pub fn from_params(p: &mut Params) -> Result<HysteresisPolicy> {
+        let dynamic = DynamicPolicy::from_params(p)?;
+        let hold = p.u32("hold", 2)?;
+        Ok(HysteresisPolicy { dynamic, hold, latch: Vec::new() })
+    }
+
+    fn slot(&mut self, worker: usize) -> &mut u32 {
+        if self.latch.len() <= worker {
+            self.latch.resize(worker + 1, 0);
+        }
+        &mut self.latch[worker]
+    }
+}
+
+impl SyncPolicy for HysteresisPolicy {
+    fn spec(&self) -> String {
+        let p = &self.dynamic.params;
+        format!(
+            "hysteresis(alpha={},knee={},detector={},hold={})",
+            p.alpha,
+            p.knee,
+            p.detector.name(),
+            self.hold
+        )
+    }
+
+    fn init(&mut self, workers: usize) {
+        self.latch = vec![0; workers];
+    }
+
+    fn weights(&mut self, ctx: &SyncContext) -> SyncWeights {
+        let p = self.dynamic.params;
+        let triggered = match ctx.raw_score {
+            None => false,
+            Some(a) => p.detector.effective(a) < p.knee,
+        };
+        let hold = self.hold;
+        let latch = self.slot(ctx.worker);
+        if triggered {
+            // (Re-)arm the latch: this sync plus the next `hold` stay corrected.
+            *latch = hold;
+            return SyncWeights { h1: 1.0, h2: 0.0 };
+        }
+        if *latch > 0 {
+            *latch -= 1;
+            return SyncWeights { h1: 1.0, h2: 0.0 };
+        }
+        self.dynamic.weights(ctx)
+    }
+
+    fn healthy_h2(&self) -> f64 {
+        self.dynamic.healthy_h2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::policy::test_ctx;
+
+    fn policy(hold: u32) -> HysteresisPolicy {
+        let mut p = HysteresisPolicy::new(DynamicParams::default(), hold);
+        p.init(4);
+        p
+    }
+
+    #[test]
+    fn latch_extends_the_correction_window() {
+        let mut p = policy(2);
+        // trigger: deep failure score
+        let w = p.weights(&test_ctx(1, Some(-0.5), 0));
+        assert_eq!((w.h1, w.h2), (1.0, 0.0));
+        // two healthy-scored syncs stay latched
+        for _ in 0..2 {
+            let w = p.weights(&test_ctx(1, Some(0.5), 0));
+            assert_eq!((w.h1, w.h2), (1.0, 0.0));
+        }
+        // then the dynamic map resumes
+        let w = p.weights(&test_ctx(1, Some(0.5), 0));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1));
+    }
+
+    #[test]
+    fn latch_is_per_worker() {
+        let mut p = policy(3);
+        let w = p.weights(&test_ctx(0, Some(-0.5), 0));
+        assert_eq!((w.h1, w.h2), (1.0, 0.0));
+        // worker 2 is unaffected by worker 0's latch
+        let w = p.weights(&test_ctx(2, Some(0.5), 0));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1));
+    }
+
+    #[test]
+    fn retrigger_rearms() {
+        let mut p = policy(2);
+        p.weights(&test_ctx(0, Some(-0.5), 0));
+        p.weights(&test_ctx(0, Some(0.5), 0)); // latch 2 -> 1
+        p.weights(&test_ctx(0, Some(-0.5), 0)); // re-trigger: latch back to 2
+        for _ in 0..2 {
+            let w = p.weights(&test_ctx(0, Some(0.5), 0));
+            assert_eq!((w.h1, w.h2), (1.0, 0.0));
+        }
+        let w = p.weights(&test_ctx(0, Some(0.5), 0));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1));
+    }
+
+    #[test]
+    fn hold_zero_degenerates_to_dynamic() {
+        let mut hys = policy(0);
+        let mut dy = DynamicPolicy::new(DynamicParams::default());
+        for (score, missed) in
+            [(Some(-0.5), 0), (Some(0.5), 0), (Some(-0.01), 2), (None, 1)]
+        {
+            let a = hys.weights(&test_ctx(0, score, missed));
+            let b = dy.weights(&test_ctx(0, score, missed));
+            assert_eq!(a, b, "score={score:?} missed={missed}");
+        }
+    }
+
+    #[test]
+    fn warmup_without_latch_is_easgd() {
+        let mut p = policy(2);
+        let w = p.weights(&test_ctx(0, None, 0));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1));
+    }
+
+    #[test]
+    fn grows_for_unseen_workers() {
+        let mut p = HysteresisPolicy::new(DynamicParams::default(), 1);
+        // no init() call: slot() must grow on demand
+        let w = p.weights(&test_ctx(7, Some(-0.5), 0));
+        assert_eq!((w.h1, w.h2), (1.0, 0.0));
+    }
+}

@@ -1,0 +1,286 @@
+//! The pluggable sync-policy layer: an open, spec-addressable family of
+//! weighting strategies replacing the closed three-variant `WeightPolicy`
+//! enum.
+//!
+//! Every elastic sync asks the master's policy for the pair (h1, h2) of
+//! paper eqs. 12-13: h1 is the pull exerted ON the worker, h2 the influence
+//! the worker exerts on the master. A policy is a [`SyncPolicy`] trait
+//! object — it receives a structured [`SyncContext`] per sync and may keep
+//! per-worker state across syncs (see `hysteresis`), which the enum never
+//! could.
+//!
+//! Policies are addressed by a round-trippable **spec string** (grammar in
+//! [`spec`]): `fixed(alpha=0.1)`, `oracle(alpha=0.1)`,
+//! `dynamic(alpha=0.1,knee=-0.05,detector=paper-sign)`,
+//! `hysteresis(alpha=0.1,knee=-0.05,detector=paper-sign,hold=2)`,
+//! `staleness(alpha=0.1,halflife=2)`. [`parse`] builds the policy,
+//! [`SyncPolicy::spec`] prints the canonical spec back, and every canonical
+//! spec survives `parse → spec() → parse` bit-exactly — that invariant is
+//! what lets specs ride inside `ExperimentConfig` JSON and hence inside
+//! schedule fingerprints (resume/dedup key on them).
+//!
+//! The paper's six method presets are thin aliases into this registry
+//! (`Method::policy_spec` in `strategies.rs`); `--policy` on the CLI
+//! overrides the preset, and `experiments::policy_sweep` sweeps specs as a
+//! first-class axis.
+
+pub mod dynamic;
+pub mod fixed;
+pub mod hysteresis;
+pub mod oracle;
+pub mod spec;
+pub mod staleness;
+
+pub use dynamic::DynamicPolicy;
+pub use fixed::FixedPolicy;
+pub use hysteresis::HysteresisPolicy;
+pub use oracle::OraclePolicy;
+pub use spec::{Params, ParsedSpec};
+pub use staleness::StalenessPolicy;
+
+use anyhow::{bail, Context, Result};
+
+/// Everything the master knows about one sync when it picks the weights.
+#[derive(Clone, Copy, Debug)]
+pub struct SyncContext {
+    /// Worker id serving this sync (keys per-worker policy state).
+    pub worker: usize,
+    /// Communication round of the sync.
+    pub round: u64,
+    /// The worker's raw score a_t (eq. 10); `None` during warm-up.
+    pub raw_score: Option<f64>,
+    /// Consecutive suppressed syncs before this one.
+    pub missed: u32,
+    /// The run's elastic moving rate α. Every registered policy pins its
+    /// own α in its spec; this carries the run-level default so future
+    /// policies can inherit it instead (part of the stable context API).
+    pub alpha: f64,
+}
+
+/// The weight pair a policy hands back (paper eqs. 12-13).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SyncWeights {
+    /// Pull exerted ON the worker (1 = teleport onto the master).
+    pub h1: f64,
+    /// Influence the worker exerts on the master (0 = none).
+    pub h2: f64,
+}
+
+/// A sync-weighting strategy. Implementations may keep state (per-worker or
+/// global); the master owns the policy for the lifetime of a run.
+pub trait SyncPolicy: Send {
+    /// Canonical spec string; `parse(self.spec())` reconstructs the policy.
+    fn spec(&self) -> String;
+
+    /// Called once before the run with the worker count, so stateful
+    /// policies can size their tables. Default: nothing to size.
+    fn init(&mut self, _workers: usize) {}
+
+    /// Choose (h1, h2) for one sync. `&mut self` because policies may
+    /// update their state with every decision.
+    fn weights(&mut self, ctx: &SyncContext) -> SyncWeights;
+
+    /// The h2 this policy serves in its healthy regime (its α). The master
+    /// counts a sync as a *correction* when the served h2 falls below this
+    /// — the baseline must come from the policy, not the run config, so
+    /// the stat stays correct when `--policy` pins a different α than the
+    /// run default.
+    fn healthy_h2(&self) -> f64;
+}
+
+/// One registry row: a policy name plus its spec-driven constructor.
+pub struct PolicyDef {
+    pub name: &'static str,
+    pub summary: &'static str,
+    build: fn(&mut Params) -> Result<Box<dyn SyncPolicy>>,
+}
+
+/// The policy registry. Adding a strategy = one module + one row here; the
+/// CLI help, the round-trip property test and `experiments::policy_sweep`
+/// all enumerate this table.
+pub const REGISTRY: &[PolicyDef] = &[
+    PolicyDef {
+        name: "fixed",
+        summary: "fixed(alpha=0.1) — constant EASGD rate both ways",
+        build: |p| Ok(Box::new(FixedPolicy::from_params(p)?)),
+    },
+    PolicyDef {
+        name: "oracle",
+        summary: "oracle(alpha=0.1) — full correction on the first sync after misses",
+        build: |p| Ok(Box::new(OraclePolicy::from_params(p)?)),
+    },
+    PolicyDef {
+        name: "dynamic",
+        summary: "dynamic(alpha=0.1,knee=-0.05,detector=paper-sign) — the paper's score-driven maps",
+        build: |p| Ok(Box::new(DynamicPolicy::from_params(p)?)),
+    },
+    PolicyDef {
+        name: "hysteresis",
+        summary: "hysteresis(alpha=0.1,knee=-0.05,detector=paper-sign,hold=2) — dynamic with a latched failure branch",
+        build: |p| Ok(Box::new(HysteresisPolicy::from_params(p)?)),
+    },
+    PolicyDef {
+        name: "staleness",
+        summary: "staleness(alpha=0.1,halflife=2) — score-free geometric decay in missed syncs",
+        build: |p| Ok(Box::new(StalenessPolicy::from_params(p)?)),
+    },
+];
+
+/// Registered policy names, registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|d| d.name).collect()
+}
+
+/// One canonical all-defaults spec per registered policy (bare names parse
+/// with every parameter defaulted).
+pub fn default_specs() -> Vec<String> {
+    REGISTRY
+        .iter()
+        .map(|d| parse(d.name).expect("registry default must parse").spec())
+        .collect()
+}
+
+/// Build a policy from a spec string.
+pub fn parse(spec_text: &str) -> Result<Box<dyn SyncPolicy>> {
+    let parsed = ParsedSpec::parse(spec_text)?;
+    let Some(def) = REGISTRY.iter().find(|d| d.name == parsed.name) else {
+        bail!(
+            "unknown policy '{}' (registered: {})",
+            parsed.name,
+            names().join(", ")
+        );
+    };
+    let mut params = parsed.into_params();
+    let policy = (def.build)(&mut params)
+        .with_context(|| format!("bad policy spec '{spec_text}'"))?;
+    params
+        .finish()
+        .with_context(|| format!("bad policy spec '{spec_text}'"))?;
+    Ok(policy)
+}
+
+/// Normalize a spec to its canonical form (parse, then print back). Two
+/// spellings of one policy — `fixed`, `fixed()`, `fixed( alpha = 0.1 )` —
+/// all canonicalize to `fixed(alpha=0.1)`, so configs (and therefore
+/// schedule fingerprints) never depend on user spelling.
+pub fn canonical(spec_text: &str) -> Result<String> {
+    Ok(parse(spec_text)?.spec())
+}
+
+/// Cheap validity check used by `ExperimentConfig::validate`.
+pub fn validate(spec_text: &str) -> Result<()> {
+    parse(spec_text).map(|_| ())
+}
+
+// ---------------- shared parameter validation ----------------
+
+pub(crate) fn check_alpha(alpha: f64) -> Result<f64> {
+    if !(0.0..=1.0).contains(&alpha) {
+        bail!("alpha must be in [0,1], got {alpha}");
+    }
+    Ok(alpha)
+}
+
+pub(crate) fn check_knee(knee: f64) -> Result<f64> {
+    if !knee.is_finite() || knee >= 0.0 {
+        bail!("knee must be negative and finite (paper: k < 0), got {knee}");
+    }
+    Ok(knee)
+}
+
+/// Context builder shared by the per-policy unit tests.
+#[cfg(test)]
+pub(crate) fn test_ctx(worker: usize, raw_score: Option<f64>, missed: u32) -> SyncContext {
+    SyncContext { worker, round: 0, raw_score, missed, alpha: 0.1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn every_registered_spec_roundtrips() {
+        // parse → spec() → parse: the canonical form must be a fixed point.
+        for spec in default_specs() {
+            let again = canonical(&spec).unwrap();
+            assert_eq!(spec, again, "canonical spec must be a parse fixed point");
+        }
+    }
+
+    #[test]
+    fn spelling_variants_canonicalize_identically() {
+        for (a, b) in [
+            ("fixed", "fixed(alpha=0.1)"),
+            ("fixed()", " fixed ( alpha = 0.1 ) "),
+            ("dynamic", "dynamic(detector=paper-sign)"),
+            ("staleness(halflife=2)", "staleness(alpha=0.1)"),
+            ("hysteresis(hold=2)", "hysteresis"),
+        ] {
+            assert_eq!(canonical(a).unwrap(), canonical(b).unwrap(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn unknown_policies_and_params_rejected() {
+        assert!(parse("easgd").is_err(), "method names are presets, not policies");
+        assert!(parse("fixed(beta=1)").is_err());
+        assert!(parse("oracle(alpha=2)").is_err());
+        assert!(parse("dynamic(knee=0.1)").is_err());
+        assert!(parse("dynamic(detector=psychic)").is_err());
+        assert!(parse("staleness(halflife=0)").is_err());
+        assert!(parse("staleness(halflife=-3)").is_err());
+        assert!(parse("hysteresis(hold=1.5)").is_err());
+        assert!(parse("hysteresis(hold=-1)").is_err());
+    }
+
+    #[test]
+    fn unknown_policy_error_lists_registry() {
+        let err = parse("bogus").unwrap_err().to_string();
+        for name in names() {
+            assert!(err.contains(name), "error should list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn property_random_params_roundtrip() {
+        // Any spec we can build from random in-range parameters must
+        // canonicalize to a fixed point and rebuild an identical policy.
+        proptest::check("policy spec roundtrip", 150, |g| {
+            let alpha = g.f64(0.0, 1.0);
+            let knee = -g.f64(1e-6, 2.0);
+            let hold = g.usize(0, 9);
+            let halflife = g.f64(0.1, 20.0);
+            let det = if g.bool() { "paper-sign" } else { "drift-sign" };
+            let specs = [
+                format!("fixed(alpha={alpha})"),
+                format!("oracle(alpha={alpha})"),
+                format!("dynamic(alpha={alpha},knee={knee},detector={det})"),
+                format!("hysteresis(alpha={alpha},knee={knee},detector={det},hold={hold})"),
+                format!("staleness(alpha={alpha},halflife={halflife})"),
+            ];
+            for s in specs {
+                let c1 = canonical(&s).unwrap_or_else(|e| panic!("'{s}': {e}"));
+                let c2 = canonical(&c1).unwrap();
+                assert_eq!(c1, c2, "canonicalization must be idempotent for '{s}'");
+            }
+        });
+    }
+
+    #[test]
+    fn policies_are_boxable_and_stateful() {
+        let mut p = parse("hysteresis(hold=1)").unwrap();
+        p.init(2);
+        let w = p.weights(&test_ctx(0, Some(-0.5), 0));
+        assert_eq!((w.h1, w.h2), (1.0, 0.0));
+        let w = p.weights(&test_ctx(0, Some(0.5), 0));
+        assert_eq!((w.h1, w.h2), (1.0, 0.0), "latch must persist across calls");
+    }
+
+    #[test]
+    fn summaries_name_their_policy() {
+        for d in REGISTRY {
+            assert!(d.summary.starts_with(d.name), "{}", d.name);
+        }
+    }
+}

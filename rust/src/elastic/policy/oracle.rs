@@ -1,0 +1,58 @@
+//! `oracle(alpha=A)` — knows exactly which syncs were missed (EAHES-OM).
+//!
+//! On the first successful sync after ≥1 suppressed ones it applies the full
+//! correction (h1=1: teleport the worker onto the master; h2=0: the stale
+//! model gets no influence). Otherwise plain EASGD. This is the upper bound
+//! the paper's score-based detector is measured against.
+
+use super::spec::Params;
+use super::{check_alpha, SyncContext, SyncPolicy, SyncWeights};
+use anyhow::Result;
+
+#[derive(Clone, Copy, Debug)]
+pub struct OraclePolicy {
+    pub alpha: f64,
+}
+
+impl OraclePolicy {
+    pub fn from_params(p: &mut Params) -> Result<OraclePolicy> {
+        let alpha = check_alpha(p.f64("alpha", 0.1)?)?;
+        Ok(OraclePolicy { alpha })
+    }
+}
+
+impl SyncPolicy for OraclePolicy {
+    fn spec(&self) -> String {
+        format!("oracle(alpha={})", self.alpha)
+    }
+
+    fn weights(&mut self, ctx: &SyncContext) -> SyncWeights {
+        if ctx.missed > 0 {
+            SyncWeights { h1: 1.0, h2: 0.0 }
+        } else {
+            SyncWeights { h1: self.alpha, h2: self.alpha }
+        }
+    }
+
+    fn healthy_h2(&self) -> f64 {
+        self.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::policy::test_ctx;
+
+    #[test]
+    fn corrects_exactly_after_misses() {
+        let mut p = OraclePolicy { alpha: 0.1 };
+        let w = p.weights(&test_ctx(0, None, 0));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1));
+        let w = p.weights(&test_ctx(0, None, 3));
+        assert_eq!((w.h1, w.h2), (1.0, 0.0));
+        // score is oracle-irrelevant
+        let w = p.weights(&test_ctx(0, Some(-99.0), 0));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1));
+    }
+}

@@ -1,0 +1,188 @@
+//! The policy spec grammar: `name` or `name(key=value,key=value,...)`.
+//!
+//! Modeled on `FailureModel::parse`/`describe_spec`, but with named
+//! parameters so every policy can grow knobs without positional ambiguity.
+//! The grammar is deliberately tiny:
+//!
+//! ```text
+//! spec   := name | name "(" params? ")"
+//! name   := [a-z0-9-]+
+//! params := param ("," param)*
+//! param  := key "=" value          key := [a-z0-9_-]+, value := no ',' ')'
+//! ```
+//!
+//! Whitespace around tokens is tolerated on input; the canonical form
+//! (`SyncPolicy::spec`) contains none. Every registered policy's canonical
+//! spec survives `parse → describe → parse` bit-exactly — floats are printed
+//! with Rust's shortest round-trip `Display` (same convention as the failure
+//! grammar) — which is what lets policy specs key schedule fingerprints.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A syntactically parsed spec: the policy name plus its raw parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParsedSpec {
+    pub name: String,
+    params: BTreeMap<String, String>,
+}
+
+impl ParsedSpec {
+    pub fn parse(spec: &str) -> Result<ParsedSpec> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            bail!("empty policy spec");
+        }
+        let (name, body) = match spec.split_once('(') {
+            None => (spec, None),
+            Some((n, rest)) => {
+                let inner = rest
+                    .strip_suffix(')')
+                    .with_context(|| format!("policy spec '{spec}': missing closing ')'"))?;
+                (n.trim(), Some(inner))
+            }
+        };
+        if name.is_empty() {
+            bail!("policy spec '{spec}': empty policy name");
+        }
+        if !name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-') {
+            bail!("policy spec '{spec}': name '{name}' must be lowercase [a-z0-9-]");
+        }
+        let mut params = BTreeMap::new();
+        if let Some(body) = body {
+            for part in body.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    // allow `name()` but reject dangling commas like `a(x=1,)`
+                    if body.trim().is_empty() && params.is_empty() {
+                        break;
+                    }
+                    bail!("policy spec '{spec}': empty parameter");
+                }
+                let (k, v) = part
+                    .split_once('=')
+                    .with_context(|| format!("policy spec '{spec}': parameter '{part}' is not key=value"))?;
+                let (k, v) = (k.trim(), v.trim());
+                if k.is_empty() || v.is_empty() {
+                    bail!("policy spec '{spec}': parameter '{part}' has an empty key or value");
+                }
+                if params.insert(k.to_string(), v.to_string()).is_some() {
+                    bail!("policy spec '{spec}': duplicate parameter '{k}'");
+                }
+            }
+        }
+        Ok(ParsedSpec { name: name.to_string(), params })
+    }
+
+    pub fn into_params(self) -> Params {
+        Params { policy: self.name, map: self.params }
+    }
+}
+
+/// Typed, consume-checked access to a spec's parameters. Every accessor
+/// removes its key; [`Params::finish`] rejects whatever is left, so a typo'd
+/// parameter name is a hard error rather than a silently applied default.
+#[derive(Debug)]
+pub struct Params {
+    policy: String,
+    map: BTreeMap<String, String>,
+}
+
+impl Params {
+    pub fn f64(&mut self, key: &str, default: f64) -> Result<f64> {
+        match self.map.remove(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("policy '{}': {key}='{v}' is not a number", self.policy)),
+        }
+    }
+
+    pub fn u32(&mut self, key: &str, default: u32) -> Result<u32> {
+        match self.map.remove(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| {
+                format!("policy '{}': {key}='{v}' is not a non-negative integer", self.policy)
+            }),
+        }
+    }
+
+    pub fn string(&mut self, key: &str, default: &str) -> Result<String> {
+        Ok(self.map.remove(key).unwrap_or_else(|| default.to_string()))
+    }
+
+    /// Error on parameters no accessor consumed (unknown knobs).
+    pub fn finish(self) -> Result<()> {
+        if self.map.is_empty() {
+            return Ok(());
+        }
+        let leftover: Vec<&str> = self.map.keys().map(|s| s.as_str()).collect();
+        bail!("policy '{}': unknown parameter(s) {}", self.policy, leftover.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_name_parses() {
+        let p = ParsedSpec::parse("fixed").unwrap();
+        assert_eq!(p.name, "fixed");
+        assert!(p.params.is_empty());
+    }
+
+    #[test]
+    fn empty_parens_parse() {
+        let p = ParsedSpec::parse("fixed()").unwrap();
+        assert_eq!(p.name, "fixed");
+        assert!(p.params.is_empty());
+    }
+
+    #[test]
+    fn params_parse_with_whitespace() {
+        let p = ParsedSpec::parse(" dynamic ( alpha = 0.1 , knee = -0.05 ) ").unwrap();
+        assert_eq!(p.name, "dynamic");
+        assert_eq!(p.params.get("alpha").map(String::as_str), Some("0.1"));
+        assert_eq!(p.params.get("knee").map(String::as_str), Some("-0.05"));
+    }
+
+    #[test]
+    fn malformed_specs_rejected() {
+        for bad in [
+            "",
+            "   ",
+            "fixed(",
+            "fixed)x",
+            "fixed(alpha)",
+            "fixed(alpha=)",
+            "fixed(=0.1)",
+            "fixed(alpha=0.1,)",
+            "fixed(alpha=0.1,alpha=0.2)",
+            "Fixed",
+            "fi xed",
+            "(alpha=1)",
+        ] {
+            assert!(ParsedSpec::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn typed_accessors_and_leftover_detection() {
+        let mut p = ParsedSpec::parse("x(a=0.5,n=3,s=paper-sign,zzz=1)").unwrap().into_params();
+        assert_eq!(p.f64("a", 0.0).unwrap(), 0.5);
+        assert_eq!(p.u32("n", 0).unwrap(), 3);
+        assert_eq!(p.string("s", "").unwrap(), "paper-sign");
+        assert_eq!(p.f64("missing", 7.5).unwrap(), 7.5);
+        let err = p.finish().unwrap_err().to_string();
+        assert!(err.contains("zzz"), "{err}");
+    }
+
+    #[test]
+    fn bad_typed_values_error() {
+        let mut p = ParsedSpec::parse("x(a=abc)").unwrap().into_params();
+        assert!(p.f64("a", 0.0).is_err());
+        let mut p = ParsedSpec::parse("x(n=-1)").unwrap().into_params();
+        assert!(p.u32("n", 0).is_err());
+    }
+}

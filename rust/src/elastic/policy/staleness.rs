@@ -1,0 +1,106 @@
+//! `staleness(alpha=A,halflife=H)` — score-free staleness decay in the
+//! spirit of the delayed-averaging SGD family (DaSGD, Zhou et al. 2020).
+//!
+//! No raw score, no gossip: the policy looks only at `missed`, the number of
+//! consecutive suppressed syncs before this one (the master observes this
+//! directly — unlike the oracle it needs no knowledge of WHY syncs were
+//! missed, only that they were). The worker's influence decays geometrically
+//! with staleness while the pull back onto the master strengthens in
+//! mirror:
+//!
+//! ```text
+//! d(missed) = 0.5^(missed / halflife)
+//! h2 = α · d            (stale influence fades toward 0)
+//! h1 = 1 − (1−α) · d    (pull strengthens toward a full teleport)
+//! ```
+//!
+//! `missed=0` gives exactly (α, α) — plain EASGD when healthy; as missed
+//! grows both limits approach the oracle correction (1, 0).
+
+use super::spec::Params;
+use super::{check_alpha, SyncContext, SyncPolicy, SyncWeights};
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug)]
+pub struct StalenessPolicy {
+    pub alpha: f64,
+    /// Missed syncs after which the decay factor halves.
+    pub halflife: f64,
+}
+
+impl StalenessPolicy {
+    pub fn from_params(p: &mut Params) -> Result<StalenessPolicy> {
+        let alpha = check_alpha(p.f64("alpha", 0.1)?)?;
+        let halflife = p.f64("halflife", 2.0)?;
+        if !halflife.is_finite() || halflife <= 0.0 {
+            bail!("policy 'staleness': halflife must be a positive finite number, got {halflife}");
+        }
+        Ok(StalenessPolicy { alpha, halflife })
+    }
+}
+
+impl SyncPolicy for StalenessPolicy {
+    fn spec(&self) -> String {
+        format!("staleness(alpha={},halflife={})", self.alpha, self.halflife)
+    }
+
+    fn weights(&mut self, ctx: &SyncContext) -> SyncWeights {
+        let d = 0.5f64.powf(ctx.missed as f64 / self.halflife);
+        SyncWeights { h1: 1.0 - (1.0 - self.alpha) * d, h2: self.alpha * d }
+    }
+
+    fn healthy_h2(&self) -> f64 {
+        self.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::policy::test_ctx;
+    use crate::util::proptest;
+
+    #[test]
+    fn healthy_is_exactly_easgd() {
+        let mut p = StalenessPolicy { alpha: 0.1, halflife: 2.0 };
+        let w = p.weights(&test_ctx(0, None, 0));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1));
+    }
+
+    #[test]
+    fn one_halflife_halves_influence() {
+        let mut p = StalenessPolicy { alpha: 0.1, halflife: 2.0 };
+        let w = p.weights(&test_ctx(0, None, 2));
+        assert!((w.h2 - 0.05).abs() < 1e-12);
+        assert!((w.h1 - (1.0 - 0.9 * 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deep_staleness_approaches_oracle_correction() {
+        let mut p = StalenessPolicy { alpha: 0.1, halflife: 1.0 };
+        let w = p.weights(&test_ctx(0, None, 40));
+        assert!(w.h1 > 1.0 - 1e-9);
+        assert!(w.h2 < 1e-9);
+    }
+
+    #[test]
+    fn property_bounded_and_monotone_in_missed() {
+        proptest::check("staleness bounded + monotone", 200, |g| {
+            let alpha = g.f64(0.01, 0.9);
+            let halflife = g.f64(0.1, 10.0);
+            let mut p = StalenessPolicy { alpha, halflife };
+            let m1 = g.usize(0, 50) as u32;
+            let m2 = g.usize(0, 50) as u32;
+            let (lo, hi) = if m1 <= m2 { (m1, m2) } else { (m2, m1) };
+            let a = p.weights(&test_ctx(0, None, lo));
+            let b = p.weights(&test_ctx(0, None, hi));
+            for w in [a, b] {
+                assert!(w.h1 >= alpha - 1e-12 && w.h1 <= 1.0 + 1e-12);
+                assert!(w.h2 >= -1e-12 && w.h2 <= alpha + 1e-12);
+            }
+            // more staleness: stronger pull, weaker influence
+            assert!(a.h1 <= b.h1 + 1e-12);
+            assert!(a.h2 >= b.h2 - 1e-12);
+        });
+    }
+}

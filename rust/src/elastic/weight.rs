@@ -64,7 +64,8 @@ impl Detector {
         }
     }
 
-    fn effective(self, a: f64) -> f64 {
+    /// The score actually fed to the maps under this convention.
+    pub fn effective(self, a: f64) -> f64 {
         match self {
             Detector::PaperSign => a,
             Detector::DriftSign => -a,
@@ -112,6 +113,13 @@ impl Default for DynamicParams {
 }
 
 /// The weighting policy — one of the three regimes the paper compares.
+///
+/// **Frozen pre-refactor reference.** The live path is the open
+/// [`crate::elastic::policy::SyncPolicy`] trait (the master owns a
+/// `Box<dyn SyncPolicy>` built from a spec string); this closed enum is
+/// retained, unchanged, as the reference implementation the equivalence
+/// regression test (`tests/policy_equivalence.rs`) checks the trait
+/// policies against pointwise. Do not wire it back into the coordinator.
 #[derive(Clone, Copy, Debug)]
 pub enum WeightPolicy {
     /// Fixed α both ways (EASGD / EAMSGD / EAHES / EAHES-O).

@@ -78,6 +78,14 @@ pub trait Engine {
     fn perf_summary(&self) -> String {
         String::new()
     }
+
+    /// Measured mean seconds per (local optimizer step, elastic sync) when
+    /// this engine keeps timing stats; either side may be absent. The
+    /// virtual clock (`sim::measured_costs`) averages these across engine
+    /// instances and falls back to nominal constants for missing sides.
+    fn mean_costs(&self) -> (Option<f64>, Option<f64>) {
+        (None, None)
+    }
 }
 
 /// Builds an engine inside the consuming thread.

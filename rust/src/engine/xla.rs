@@ -247,6 +247,24 @@ impl Engine for XlaEngine {
     fn perf_summary(&self) -> String {
         self.rt.stats_summary()
     }
+
+    /// Virtual-clock inputs from the PJRT call stats: one optimizer step is
+    /// a gradient artifact plus (when the update rules run through the L1
+    /// kernels) the optimizer artifact; one sync is the elastic artifact.
+    fn mean_costs(&self) -> (Option<f64>, Option<f64>) {
+        let stats = self.rt.stats();
+        let mean_of = |name: &str| {
+            stats.get(name).filter(|s| s.calls > 0).map(|s| s.per_call.mean())
+        };
+        let grad = mean_of("grad").or_else(|| mean_of("grad_hess"));
+        let opt = mean_of("sgd")
+            .or_else(|| mean_of("momentum"))
+            .or_else(|| mean_of("adahessian"))
+            .unwrap_or(0.0);
+        let step = grad.map(|g| g + opt);
+        let sync = mean_of("elastic");
+        (step, sync)
+    }
 }
 
 /// Conv segments as tuples, for the native spatial-averaging mirror.

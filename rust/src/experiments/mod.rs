@@ -6,6 +6,7 @@
 //! | Fig 4 | test accuracy vs rounds, 6 methods × k∈{4,8} × τ∈{1,2,4} | [`fig45_grid`] |
 //! | Fig 5 | training loss vs rounds, same grid                       | [`fig45_grid`] |
 //! | §VII  | final-accuracy ordering table                            | [`summary_table`] |
+//! | —     | sync-policy spec sweep (beyond the paper)                | [`policy_sweep`] |
 //!
 //! Every driver averages over `seeds` runs (the paper uses 3) and returns
 //! per-round mean series, so the bench binaries and examples print exactly
@@ -22,5 +23,6 @@ pub mod runner;
 
 pub use runner::{
     averaged_run, averaged_run_with, fig3_overlap_sweep, fig3_overlap_sweep_with, fig45_grid,
-    fig45_grid_with, series_by_cell, summary_table, AveragedSeries, GridCell,
+    fig45_grid_with, policy_sweep, policy_sweep_with, series_by_cell, summary_table,
+    AveragedSeries, GridCell,
 };

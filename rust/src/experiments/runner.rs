@@ -235,6 +235,47 @@ pub fn fig45_grid_with(
     Ok(cells)
 }
 
+/// Policy-spec sweep: the base method/config run once per sync-policy spec
+/// (see `elastic::policy`), each spec its own cell.
+///
+/// Specs are canonicalized before they enter the plan, so two spellings of
+/// one policy land on the same cell key and the same schedule fingerprint —
+/// the spec rides inside `ExperimentConfig::policy`, which the fingerprint
+/// hashes, so `--run-dir`/`--resume` dedup distinguishes policies exactly
+/// as they do any other config axis.
+pub fn policy_sweep(
+    base: &ExperimentConfig,
+    specs: &[String],
+    seeds: u64,
+) -> Result<Vec<AveragedSeries>> {
+    policy_sweep_with(base, specs, seeds, &ScheduleOptions::default())
+}
+
+pub fn policy_sweep_with(
+    base: &ExperimentConfig,
+    specs: &[String],
+    seeds: u64,
+    opts: &ScheduleOptions,
+) -> Result<Vec<AveragedSeries>> {
+    let mut plan = TrialPlan::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for spec in specs {
+        let canon = crate::elastic::policy::canonical(spec)?;
+        // Dedup on the canonical form: two spellings of one policy are the
+        // same cell, and repeating it would re-run identical fingerprints
+        // (or, adjacent, silently average each trial twice).
+        if !seen.insert(canon.clone()) {
+            log_warn!("policy sweep: duplicate spec '{spec}' ≡ '{canon}' skipped");
+            continue;
+        }
+        let mut cfg = base.clone();
+        cfg.policy = Some(canon.clone());
+        plan.push_cell(&format!("policy/{canon}"), &canon, &cfg, seeds);
+    }
+    let report = schedule::execute_plan(&plan, opts)?;
+    Ok(series_by_cell(&plan, &report.outcomes))
+}
+
 /// The §VII ordering table: final accuracy per method per cell.
 pub fn summary_table(cells: &[GridCell]) -> String {
     let mut s = String::new();
@@ -375,6 +416,57 @@ mod tests {
             assert_eq!(cell.series[0].label, "EASGD");
             assert_eq!(cell.series[1].label, "EASGD");
         }
+    }
+
+    /// Policies are a first-class sweep axis: one cell per canonicalized
+    /// spec, and distinct specs must land on distinct fingerprints (that is
+    /// what keeps `--resume` dedup correct across policy sweeps).
+    #[test]
+    fn policy_sweep_is_a_cellwise_axis_with_distinct_fingerprints() {
+        let specs: Vec<String> = [
+            "fixed",
+            "hysteresis(hold=1)",
+            "staleness(alpha=0.1,halflife=2)",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let base = quad_cfg();
+        let out = policy_sweep(&base, &specs, 1).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].label, "fixed(alpha=0.1)", "labels are canonical specs");
+        // rebuild the plan to inspect fingerprints
+        let mut plan = TrialPlan::new();
+        for spec in &specs {
+            let canon = crate::elastic::policy::canonical(spec).unwrap();
+            let mut cfg = base.clone();
+            cfg.policy = Some(canon.clone());
+            plan.push_cell(&format!("policy/{canon}"), &canon, &cfg, 1);
+        }
+        let mut fps: Vec<&str> = plan.slots.iter().map(|s| s.fingerprint.as_str()).collect();
+        fps.sort_unstable();
+        fps.dedup();
+        assert_eq!(fps.len(), 3, "each policy spec must fingerprint distinctly");
+    }
+
+    #[test]
+    fn policy_sweep_rejects_bad_specs() {
+        let bad = vec!["bogus(x=1)".to_string()];
+        assert!(policy_sweep(&quad_cfg(), &bad, 1).is_err());
+    }
+
+    /// Two spellings of one policy collapse to a single cell instead of
+    /// re-running (or double-averaging) the same fingerprint.
+    #[test]
+    fn policy_sweep_dedups_canonical_duplicates() {
+        let specs: Vec<String> = ["fixed", "oracle", "fixed(alpha=0.1)"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let out = policy_sweep(&quad_cfg(), &specs, 1).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].label, "fixed(alpha=0.1)");
+        assert_eq!(out[1].label, "oracle(alpha=0.1)");
     }
 
     #[test]

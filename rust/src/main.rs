@@ -1,17 +1,20 @@
 //! `deahes` — CLI launcher for the DEAHES distributed-training system.
 //!
 //! Subcommands:
-//!   train     run one experiment (any method/config), print metrics
-//!   fig3      regenerate the paper's Fig. 3 (overlap-ratio sweep)
-//!   grid      regenerate Figs. 4+5 (method × workers × tau grid)
-//!   inspect   validate artifacts/metadata.json and time each artifact
-//!   datagen   dump synthetic-MNIST samples as ASCII (sanity check)
+//!   train         run one experiment (any method/config), print metrics
+//!   fig3          regenerate the paper's Fig. 3 (overlap-ratio sweep)
+//!   grid          regenerate Figs. 4+5 (method × workers × tau grid)
+//!   policy-sweep  compare sync-policy specs on one config (policy axis)
+//!   inspect       validate artifacts/metadata.json and time each artifact
+//!   datagen       dump synthetic-MNIST samples as ASCII (sanity check)
 //!
 //! Examples:
 //!   deahes train --method deahes-o --workers 4 --tau 1 --rounds 100
 //!   deahes train --method easgd --engine quad --rounds 50
+//!   deahes train --policy "hysteresis(hold=3)" --engine quad
 //!   deahes fig3 --ratios 0,0.125,0.25,0.375,0.5 --seeds 3
 //!   deahes grid --grid-workers 4,8 --taus 1,2,4 --seeds 3
+//!   deahes policy-sweep --engine quad --policies "dynamic,hysteresis,staleness"
 //!
 //! Sweeps (fig3, grid) run through the trial-schedule engine: `--jobs N`
 //! keeps N trials in flight on a thread pool, `--run-dir d` appends each
@@ -55,6 +58,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(rest),
         "fig3" => cmd_fig3(rest),
         "grid" => cmd_grid(rest),
+        "policy-sweep" => cmd_policy_sweep(rest),
         "inspect" => cmd_inspect(rest),
         "datagen" => cmd_datagen(rest),
         "--help" | "-h" | "help" => {
@@ -70,11 +74,12 @@ fn print_usage() {
         "deahes — dynamic-weighted elastic averaging (Xu & Carr 2024 reproduction)\n\
          \n\
          subcommands:\n\
-         \x20 train     run one experiment\n\
-         \x20 fig3      overlap-ratio sweep (paper Fig. 3)\n\
-         \x20 grid      method × workers × tau grid (paper Figs. 4+5)\n\
-         \x20 inspect   validate + time the AOT artifacts\n\
-         \x20 datagen   preview synthetic-MNIST samples\n\
+         \x20 train         run one experiment\n\
+         \x20 fig3          overlap-ratio sweep (paper Fig. 3)\n\
+         \x20 grid          method × workers × tau grid (paper Figs. 4+5)\n\
+         \x20 policy-sweep  sync-policy specs compared on one config\n\
+         \x20 inspect       validate + time the AOT artifacts\n\
+         \x20 datagen       preview synthetic-MNIST samples\n\
          \n\
          run `deahes <subcommand> --help` for options"
     );
@@ -103,6 +108,13 @@ fn experiment_cli(name: &str, about: &str) -> Cli {
         .opt("fail-style", "node", "node (down for the round) | comm (link-only, keeps training)")
         .opt("knee", "-0.05", "dynamic-weight knee constant k (<0)")
         .opt("detector", "paper-sign", "paper-sign|drift-sign (raw-score convention)")
+        .opt(
+            "policy",
+            "",
+            "sync-policy spec overriding the method preset, e.g. \
+             hysteresis(alpha=0.1,knee=-0.05,detector=paper-sign,hold=2); \
+             registered: fixed|oracle|dynamic|hysteresis|staleness",
+        )
         .opt("score-p", "4", "raw-score history depth p")
         .opt("score-decay", "0.5", "raw-score recency decay")
         .opt("gossip", "peers", "peers|stale (master-estimate source)")
@@ -140,6 +152,21 @@ fn schedule_options(a: &Args) -> Result<ScheduleOptions> {
         bail!("--resume needs --run-dir to resume from");
     }
     Ok(ScheduleOptions { jobs, run_dir, resume })
+}
+
+/// Policy specs are self-contained: when one is given, the classic
+/// weighting flags would be silently ignored — reject the combination
+/// instead (`context` names the spec source for the error message).
+fn reject_shadowed_weighting_flags(a: &Args, context: &str) -> Result<()> {
+    for (flag, default) in [("alpha", "0.1"), ("knee", "-0.05"), ("detector", "paper-sign")] {
+        if a.get(flag) != default {
+            bail!(
+                "--{flag} has no effect when {context} (specs are self-contained); \
+                 put it inside the spec instead, e.g. dynamic(alpha=0.2,knee=-0.1)"
+            );
+        }
+    }
+    Ok(())
 }
 
 fn config_from_args(a: &Args) -> Result<ExperimentConfig> {
@@ -191,6 +218,13 @@ fn config_from_args(a: &Args) -> Result<ExperimentConfig> {
         knee: a.f64("knee"),
         detector: Detector::parse(a.get("detector")).context("bad --detector")?,
         gossip: GossipMode::parse(a.get("gossip")).context("bad --gossip")?,
+        policy: match a.opt_nonempty("policy") {
+            Some(s) => {
+                reject_shadowed_weighting_flags(a, "--policy is given")?;
+                Some(deahes::elastic::policy::canonical(s).context("bad --policy spec")?)
+            }
+            None => None,
+        },
         engine,
         threaded: a.flag("threaded"),
     };
@@ -205,8 +239,9 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     let cfg = config_from_args(&a)?;
     let result = sim::run(&cfg)?;
     println!(
-        "method={} k={} tau={} rounds={} overlap={:.3} detector={} failure={}",
+        "method={} policy={} k={} tau={} rounds={} overlap={:.3} detector={} failure={}",
         cfg.method.name(),
+        cfg.effective_policy_spec(),
         cfg.workers,
         cfg.tau,
         cfg.rounds,
@@ -346,6 +381,51 @@ fn cmd_grid(argv: Vec<String>) -> Result<()> {
     }
     println!("\n== §VII summary: tail accuracy ==");
     print!("{}", experiments::summary_table(&cells));
+    Ok(())
+}
+
+fn cmd_policy_sweep(argv: Vec<String>) -> Result<()> {
+    let a = sweep_cli(
+        "deahes policy-sweep",
+        "compare sync-policy specs on one config (the policy axis)",
+    )
+    .opt(
+        "policies",
+        "fixed,oracle,dynamic,hysteresis,staleness",
+        "comma list of policy specs (commas inside parentheses don't split)",
+    )
+    .parse(&argv)
+    .map_err(anyhow::Error::msg)?;
+    if a.opt_nonempty("policy").is_some() {
+        bail!("policy-sweep takes its specs from --policies; --policy would be ignored");
+    }
+    reject_shadowed_weighting_flags(&a, "the specs come from --policies")?;
+    let base = config_from_args(&a)?;
+    let opts = schedule_options(&a)?;
+    let specs = a.spec_list("policies");
+    if specs.is_empty() {
+        bail!("--policies needs at least one spec");
+    }
+    let out = experiments::policy_sweep_with(&base, &specs, a.u64("seeds"), &opts)?;
+    println!(
+        "\n== policy sweep: {} on k={}, tau={}, failure={} ==",
+        base.method.name(),
+        base.workers,
+        base.tau,
+        base.failure.describe()
+    );
+    let series: Vec<(&str, Vec<f64>)> =
+        out.iter().map(|s| (s.label.as_str(), s.test_acc.clone())).collect();
+    print!("{}", ascii_chart("test accuracy over rounds", &series, 72, 16));
+    println!("{:<55} {:>11} {:>11}", "policy", "final acc", "train loss");
+    for s in &out {
+        println!(
+            "{:<55} {:>10.2}% {:>11.4}",
+            s.label,
+            s.final_acc_mean * 100.0,
+            s.final_train_loss
+        );
+    }
     Ok(())
 }
 

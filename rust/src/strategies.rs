@@ -10,7 +10,7 @@
 //! | EAHES-OM  | AdaHessian | yes     | oracle (knows fails) |
 //! | DEAHES-O  | AdaHessian | yes     | dynamic (the paper)  |
 
-use crate::elastic::weight::{DynamicParams, WeightPolicy};
+use crate::elastic::weight::DynamicParams;
 use crate::optim::Optimizer;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -69,14 +69,20 @@ impl Method {
         matches!(self, Method::EahesO | Method::EahesOm | Method::DeahesO)
     }
 
-    /// Weighting policy with the given α and dynamic parameters.
-    pub fn weight_policy(self, alpha: f64, dynamic: DynamicParams) -> WeightPolicy {
+    /// The sync-policy spec this preset aliases to in the policy registry
+    /// (`elastic::policy`). The paper names are thin aliases: EASGD /
+    /// EAMSGD / EAHES / EAHES-O → `fixed`, EAHES-OM → `oracle`, DEAHES-O →
+    /// `dynamic` with the run's knee/detector. `--policy` on the CLI (or
+    /// `ExperimentConfig::policy`) overrides this alias.
+    pub fn policy_spec(self, alpha: f64, dynamic: DynamicParams) -> String {
         match self {
-            Method::EahesOm => WeightPolicy::Oracle { alpha },
-            Method::DeahesO => {
-                WeightPolicy::Dynamic(DynamicParams { alpha, ..dynamic })
-            }
-            _ => WeightPolicy::Fixed { alpha },
+            Method::EahesOm => format!("oracle(alpha={alpha})"),
+            Method::DeahesO => format!(
+                "dynamic(alpha={alpha},knee={},detector={})",
+                dynamic.knee,
+                dynamic.detector.name()
+            ),
+            _ => format!("fixed(alpha={alpha})"),
         }
     }
 
@@ -131,19 +137,19 @@ mod tests {
     }
 
     #[test]
-    fn policies() {
+    fn preset_specs_resolve_in_the_registry() {
         let d = DynamicParams::default();
-        assert!(matches!(
-            Method::Easgd.weight_policy(0.1, d),
-            WeightPolicy::Fixed { .. }
-        ));
-        assert!(matches!(
-            Method::EahesOm.weight_policy(0.1, d),
-            WeightPolicy::Oracle { .. }
-        ));
-        assert!(matches!(
-            Method::DeahesO.weight_policy(0.1, d),
-            WeightPolicy::Dynamic(_)
-        ));
+        assert_eq!(Method::Easgd.policy_spec(0.1, d), "fixed(alpha=0.1)");
+        assert_eq!(Method::EahesOm.policy_spec(0.1, d), "oracle(alpha=0.1)");
+        assert_eq!(
+            Method::DeahesO.policy_spec(0.1, d),
+            "dynamic(alpha=0.1,knee=-0.05,detector=paper-sign)"
+        );
+        // every preset spec is canonical AND parseable
+        for m in ALL_METHODS {
+            let spec = m.policy_spec(0.25, d);
+            let p = crate::elastic::policy::parse(&spec).unwrap();
+            assert_eq!(p.spec(), spec, "{}: preset alias must be canonical", m.name());
+        }
     }
 }

@@ -205,6 +205,41 @@ impl Args {
             .collect()
     }
 
+    /// Comma-separated list of spec strings where commas nested inside
+    /// parentheses do NOT split — policy specs carry their own
+    /// comma-separated parameters, e.g.
+    /// `--policies "fixed(alpha=0.1),staleness(alpha=0.1,halflife=2)"`
+    /// is two specs, not four fragments.
+    pub fn spec_list(&self, name: &str) -> Vec<String> {
+        let raw = self.get(name);
+        let mut out = Vec::new();
+        let mut depth = 0usize;
+        let mut cur = String::new();
+        for c in raw.chars() {
+            match c {
+                '(' => {
+                    depth += 1;
+                    cur.push(c);
+                }
+                ')' => {
+                    depth = depth.saturating_sub(1);
+                    cur.push(c);
+                }
+                ',' if depth == 0 => {
+                    if !cur.trim().is_empty() {
+                        out.push(cur.trim().to_string());
+                    }
+                    cur.clear();
+                }
+                _ => cur.push(c),
+            }
+        }
+        if !cur.trim().is_empty() {
+            out.push(cur.trim().to_string());
+        }
+        out
+    }
+
     pub fn f64_list(&self, name: &str) -> Vec<f64> {
         self.get(name)
             .split(',')
@@ -269,6 +304,23 @@ mod tests {
             .parse(&argv(&[]))
             .unwrap();
         assert_eq!(a.usize_list("taus"), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn spec_list_respects_parens() {
+        let a = Cli::new("t", "")
+            .opt("policies", "", "")
+            .parse(&argv(&[
+                "--policies",
+                "fixed(alpha=0.1), staleness(alpha=0.1,halflife=2) ,oracle",
+            ]))
+            .unwrap();
+        assert_eq!(
+            a.spec_list("policies"),
+            vec!["fixed(alpha=0.1)", "staleness(alpha=0.1,halflife=2)", "oracle"]
+        );
+        let a = Cli::new("t", "").opt("policies", "", "").parse(&argv(&[])).unwrap();
+        assert!(a.spec_list("policies").is_empty());
     }
 
     #[test]

@@ -1,0 +1,80 @@
+//! Sequential-vs-threaded driver parity on the quadratic engine.
+//!
+//! Failure injection is a pure function of (seed, worker, round), so both
+//! drivers must face the *identical* fault schedule: per-round sync counts
+//! have to agree exactly. The numerics differ only through arrival order at
+//! the master (that is the threaded driver's point), so the final accuracy
+//! must agree statistically, not bitwise.
+
+use deahes::config::{EngineKind, ExperimentConfig};
+use deahes::coordinator::{sim, FailureModel};
+use deahes::strategies::Method;
+
+fn parity_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        engine: EngineKind::Quadratic { dim: 48, heterogeneity: 0.3, noise: 0.02 },
+        workers: 3,
+        tau: 2,
+        rounds: 50,
+        lr: 0.05,
+        eval_subset: 8,
+        eval_every: 1, // record every round so sync counts align 1:1
+        failure: FailureModel::Burst { p_start: 0.2, mean_len: 5.0 },
+        ..ExperimentConfig::default()
+    }
+}
+
+fn run_both(cfg: &ExperimentConfig) -> (sim::RunResult, sim::RunResult) {
+    let seq = sim::run(cfg).unwrap();
+    let mut threaded = cfg.clone();
+    threaded.threaded = true;
+    let thr = sim::run(&threaded).unwrap();
+    (seq, thr)
+}
+
+#[test]
+fn per_round_sync_counts_are_identical_across_drivers() {
+    let (seq, thr) = run_both(&parity_cfg());
+    assert_eq!(seq.log.records.len(), thr.log.records.len());
+    for (s, t) in seq.log.records.iter().zip(&thr.log.records) {
+        assert_eq!(s.round, t.round);
+        assert_eq!(
+            (s.syncs_ok, s.syncs_failed),
+            (t.syncs_ok, t.syncs_failed),
+            "fault schedule diverged at round {}",
+            s.round
+        );
+    }
+    // the masters therefore served the same number of syncs per worker
+    let served_seq: Vec<u64> = seq.worker_stats.iter().map(|s| s.0).collect();
+    let served_thr: Vec<u64> = thr.worker_stats.iter().map(|s| s.0).collect();
+    assert_eq!(served_seq, served_thr);
+}
+
+#[test]
+fn final_accuracy_agrees_within_tolerance() {
+    for method in [Method::DeahesO, Method::Easgd] {
+        let mut cfg = parity_cfg();
+        cfg.method = method;
+        let (seq, thr) = run_both(&cfg);
+        let a_seq = seq.log.tail_acc(10);
+        let a_thr = thr.log.tail_acc(10);
+        // Same config, same fault schedule, different arrival order: both
+        // must land in the same converged neighbourhood.
+        assert!(
+            (a_seq - a_thr).abs() < 0.25,
+            "{}: sequential tail acc {a_seq} vs threaded {a_thr}",
+            method.name()
+        );
+        // and both actually converged (loss halved)
+        for (name, r) in [("sequential", &seq), ("threaded", &thr)] {
+            let first = r.log.records.first().unwrap().test_loss;
+            let last = r.log.records.last().unwrap().test_loss;
+            assert!(
+                last < 0.5 * first,
+                "{} {name}: loss {first} -> {last} did not halve",
+                method.name()
+            );
+        }
+    }
+}

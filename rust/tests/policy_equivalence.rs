@@ -1,0 +1,181 @@
+//! Equivalence regression for the sync-policy refactor.
+//!
+//! The closed `WeightPolicy` enum was replaced by the `SyncPolicy` trait +
+//! spec registry. These tests pin that the refactor changed NOTHING for the
+//! paper presets:
+//!
+//!  1. pointwise — for every (raw_score, missed) input, the trait policies
+//!     compute bit-identical weights to the frozen pre-refactor enum
+//!     (`elastic::weight::WeightPolicy`, kept as the reference);
+//!  2. end-to-end — a seeded sequential run via the method preset (policy
+//!     derived) is byte-identical to the same run via the explicit spec,
+//!     for every method;
+//!  3. fingerprint — preset-driven configs serialize without a `policy`
+//!     key, so their schedule fingerprints equal the pre-refactor hashes;
+//!  4. the two new policies (`hysteresis`, `staleness`) run end-to-end via
+//!     the `policy` override and through the `policy_sweep` axis.
+
+use deahes::config::{EngineKind, ExperimentConfig};
+use deahes::coordinator::{sim, FailureModel};
+use deahes::elastic::policy::{self, SyncContext};
+use deahes::elastic::weight::{Detector, DynamicParams, WeightPolicy};
+use deahes::experiments;
+use deahes::schedule::fingerprint;
+use deahes::strategies::ALL_METHODS;
+use deahes::util::proptest;
+
+fn quad_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        engine: EngineKind::Quadratic { dim: 48, heterogeneity: 0.3, noise: 0.02 },
+        workers: 4,
+        tau: 2,
+        rounds: 40,
+        lr: 0.05,
+        eval_subset: 8,
+        failure: FailureModel::Burst { p_start: 0.15, mean_len: 4.0 },
+        ..ExperimentConfig::default()
+    }
+}
+
+fn ctx(raw_score: Option<f64>, missed: u32, alpha: f64) -> SyncContext {
+    SyncContext { worker: 0, round: 0, raw_score, missed, alpha }
+}
+
+/// (1) The trait policies are pointwise bit-identical to the enum arms over
+/// randomized inputs — given identical decisions, the rest of the sync path
+/// is shared code, so run-level equality follows.
+#[test]
+fn trait_policies_match_the_enum_pointwise() {
+    proptest::check("trait == enum pointwise", 400, |g| {
+        let alpha = g.f64(0.01, 0.9);
+        let knee = -g.f64(1e-4, 1.0);
+        let detector = if g.bool() { Detector::PaperSign } else { Detector::DriftSign };
+        let raw_score = if g.bool() { Some(g.f64_edgy(-2.0, 2.0)) } else { None };
+        let missed = g.usize(0, 5) as u32;
+        let c = ctx(raw_score, missed, alpha);
+
+        let mut fixed = policy::parse(&format!("fixed(alpha={alpha})")).unwrap();
+        let w = fixed.weights(&c);
+        assert_eq!(
+            (w.h1, w.h2),
+            WeightPolicy::Fixed { alpha }.weights(raw_score, missed)
+        );
+
+        let mut oracle = policy::parse(&format!("oracle(alpha={alpha})")).unwrap();
+        let w = oracle.weights(&c);
+        assert_eq!(
+            (w.h1, w.h2),
+            WeightPolicy::Oracle { alpha }.weights(raw_score, missed)
+        );
+
+        let spec = format!(
+            "dynamic(alpha={alpha},knee={knee},detector={})",
+            detector.name()
+        );
+        let mut dynamic = policy::parse(&spec).unwrap();
+        let w = dynamic.weights(&c);
+        let params = DynamicParams { alpha, knee, detector };
+        assert_eq!(
+            (w.h1, w.h2),
+            WeightPolicy::Dynamic(params).weights(raw_score, missed),
+            "{spec} raw_score={raw_score:?}"
+        );
+    });
+}
+
+/// (2) Preset-derived and explicit-spec runs are byte-identical for every
+/// method on a seeded sequential run.
+#[test]
+fn preset_and_explicit_spec_runs_are_byte_identical() {
+    for m in ALL_METHODS {
+        let mut preset = quad_cfg();
+        preset.method = m;
+        assert!(preset.policy.is_none());
+        let mut explicit = preset.clone();
+        explicit.policy = Some(preset.effective_policy_spec());
+
+        let a = sim::run(&preset).unwrap();
+        let b = sim::run(&explicit).unwrap();
+        assert_eq!(a.log.records.len(), b.log.records.len(), "{}", m.name());
+        for (x, y) in a.log.records.iter().zip(&b.log.records) {
+            assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "{} r{}", m.name(), x.round);
+            assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits());
+            assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+            assert_eq!(x.mean_h1.to_bits(), y.mean_h1.to_bits());
+            assert_eq!(x.mean_h2.to_bits(), y.mean_h2.to_bits());
+            assert_eq!((x.syncs_ok, x.syncs_failed), (y.syncs_ok, y.syncs_failed));
+        }
+        assert_eq!(a.worker_stats, b.worker_stats, "{}", m.name());
+    }
+}
+
+/// (3) A preset-driven config serializes with NO `policy` key, so its
+/// schedule fingerprint is computed over exactly the pre-refactor JSON.
+#[test]
+fn preset_configs_keep_pre_refactor_fingerprints() {
+    let cfg = quad_cfg();
+    let json = cfg.to_json().to_string_compact();
+    assert!(!json.contains("\"policy\""), "preset config JSON grew a policy key: {json}");
+    // and the fingerprint only moves when the policy actually differs
+    let fp_preset = fingerprint(&cfg, "cell", 0);
+    let mut explicit = cfg.clone();
+    explicit.policy = Some(cfg.effective_policy_spec());
+    assert_ne!(
+        fp_preset,
+        fingerprint(&explicit, "cell", 0),
+        "explicit specs are a distinct (new) axis value"
+    );
+}
+
+/// (4a) The new policies run end-to-end through the `--policy` path under
+/// node failures, converge, and actually exercise their mechanisms.
+#[test]
+fn hysteresis_and_staleness_run_end_to_end() {
+    for spec in ["hysteresis(hold=3)", "staleness(alpha=0.1,halflife=2)"] {
+        let mut cfg = quad_cfg();
+        cfg.rounds = 80;
+        cfg.policy = Some(spec.to_string());
+        let r = sim::run(&cfg).unwrap();
+        let first = r.log.records.first().unwrap().test_loss;
+        let last = r.log.records.last().unwrap().test_loss;
+        assert!(last.is_finite() && last < first, "{spec}: {first} -> {last}");
+        let corrections: u64 = r.worker_stats.iter().map(|s| s.1).sum();
+        assert!(corrections > 0, "{spec}: failure handling never fired under bursts");
+    }
+}
+
+/// (4b) Policies sweep as a first-class axis through the schedule engine,
+/// and the threaded driver accepts a policy override too.
+#[test]
+fn new_policies_are_sweepable_and_threaded_safe() {
+    let mut base = quad_cfg();
+    base.rounds = 12;
+    let specs: Vec<String> = ["dynamic", "hysteresis(hold=2)", "staleness"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let out = experiments::policy_sweep(&base, &specs, 1).unwrap();
+    assert_eq!(out.len(), 3);
+    let labels: Vec<&str> = out.iter().map(|s| s.label.as_str()).collect();
+    assert!(labels.contains(&"hysteresis(alpha=0.1,knee=-0.05,detector=paper-sign,hold=2)"));
+    assert!(labels.contains(&"staleness(alpha=0.1,halflife=2)"));
+
+    let mut threaded = base.clone();
+    threaded.threaded = true;
+    threaded.policy = Some("hysteresis(hold=2)".into());
+    let r = sim::run(&threaded).unwrap();
+    assert!(r.log.records.last().unwrap().test_loss.is_finite());
+}
+
+/// Registry invariant, pinned at the integration level for CI: every
+/// registered policy's canonical spec survives parse → describe → parse.
+#[test]
+fn every_registered_policy_spec_roundtrips() {
+    let specs = policy::default_specs();
+    assert_eq!(specs.len(), policy::names().len());
+    for spec in specs {
+        let rebuilt = policy::parse(&spec).unwrap();
+        assert_eq!(rebuilt.spec(), spec, "'{spec}' must be a parse fixed point");
+        assert_eq!(policy::canonical(&spec).unwrap(), spec);
+    }
+}
