@@ -1,0 +1,19 @@
+//! Hot-path bench driver: `cargo bench --bench hotpath`.
+//!
+//! Thin wrapper over `deahes::bench` (the same engine behind the
+//! `deahes bench` subcommand) so the benchmark code is compiled by
+//! `cargo bench --no-run` in CI and cannot rot. Env flags:
+//!
+//!   BENCH_SMOKE=1     tiny sizes (CI)
+//!   BENCH_OUT=path    output JSON (default BENCH_hotpath.json)
+
+fn main() -> anyhow::Result<()> {
+    deahes::util::logging::init(deahes::util::logging::Level::Warn);
+    let smoke = std::env::var("BENCH_SMOKE").as_deref() == Ok("1");
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    let out = std::path::PathBuf::from(out);
+    let doc = deahes::bench::run(&deahes::bench::BenchConfig { smoke }, &out)?;
+    println!("{}", deahes::bench::summary(&doc));
+    println!("[bench] wrote {}", out.display());
+    Ok(())
+}

@@ -59,12 +59,14 @@ fn main() -> anyhow::Result<()> {
 
     println!("== L1/L2 artifact latency (PJRT, P={n}, batch={bt}) ==");
     let mut engine = XlaEngine::new(&manifest, OptimImpl::Kernels)?;
+    let mut gbuf = vec![0.0f32; n];
+    let mut dbuf = vec![0.0f32; n];
     let t_grad = bench("grad (fwd+bwd)", 30, || {
-        engine.grad(&theta, BatchRef { x: &x, y1h: &y }).unwrap();
+        engine.grad(&theta, BatchRef { x: &x, y1h: &y }, &mut gbuf).unwrap();
     });
     let t_gh = bench("grad_hess (fwd+bwd+hvp, spatial avg)", 30, || {
         engine
-            .grad_hess(&theta, BatchRef { x: &x, y1h: &y }, &z)
+            .grad_hess(&theta, BatchRef { x: &x, y1h: &y }, &z, &mut gbuf, &mut dbuf)
             .unwrap();
     });
     println!(

@@ -1,0 +1,470 @@
+//! Hot-path benchmark subsystem (`deahes bench`).
+//!
+//! Two tiers, one JSON artifact:
+//!
+//!  * **micro** — per-kernel latency of the fused hot-path kernels
+//!    (`sgd_step` fused vs the legacy three-pass compose, `momentum_step`,
+//!    `adahessian_step`, `adamw_step`, the elastic pair update,
+//!    `elastic_pull`, and snapshot publishing pool-vs-clone), reported as
+//!    median/p95 nanoseconds per call;
+//!  * **macro** — a fig3-shaped overlap-ratio sweep over the quadratic
+//!    engine driven through the real `TrialPlan` machinery, timed twice:
+//!    once through the current allocation-free hot path
+//!    (`schedule::execute_plan`) and once through an in-module emulation of
+//!    the pre-change hot path (fresh gradient `Vec` per step, three passes
+//!    per update, full `theta` clone per snapshot publish). Both runs use
+//!    identical configs, seeds and eval cadence, so the recorded
+//!    rounds/sec ratio is the speedup of this PR's redesign over its own
+//!    baseline — the `BENCH_hotpath.json` trajectory future PRs regress
+//!    against.
+//!
+//! The emitted JSON also records peak RSS (`VmHWM`, Linux; 0 elsewhere)
+//! and is re-parsed before the run reports success, so a CI smoke step
+//! (`deahes bench --smoke`) doubles as a validity check.
+
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::coordinator::gossip::GossipBoard;
+use crate::coordinator::master::SnapshotPool;
+use crate::coordinator::{FailureModel, Role, Setup};
+use crate::engine::quad::QuadraticEngine;
+use crate::engine::{BatchRef, Engine, WorkerScratch};
+use crate::optim::{native, Optimizer};
+use crate::schedule::{self, ScheduleOptions, TrialPlan};
+use crate::strategies::Method;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::quantile;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Bench sizing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Tiny sizes for CI smoke: proves the harness runs and emits valid
+    /// JSON; the numbers themselves are not meaningful at this scale.
+    pub smoke: bool,
+}
+
+impl BenchConfig {
+    fn micro_dim(&self) -> usize {
+        if self.smoke {
+            1 << 10
+        } else {
+            1 << 14
+        }
+    }
+
+    fn micro_iters(&self) -> usize {
+        if self.smoke {
+            30
+        } else {
+            200
+        }
+    }
+
+    fn macro_dim(&self) -> usize {
+        if self.smoke {
+            512
+        } else {
+            1 << 15
+        }
+    }
+
+    fn macro_rounds(&self) -> u64 {
+        if self.smoke {
+            12
+        } else {
+            120
+        }
+    }
+
+    fn macro_seeds(&self) -> u64 {
+        if self.smoke {
+            1
+        } else {
+            2
+        }
+    }
+}
+
+/// median/p95 of one timed kernel.
+struct MicroResult {
+    name: &'static str,
+    median_ns: f64,
+    p95_ns: f64,
+    iters: usize,
+}
+
+/// Time `f` for `iters` iterations (after a short warmup), returning the
+/// per-call sample set in seconds.
+fn sample<F: FnMut()>(iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..iters.min(5) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples
+}
+
+fn micro(name: &'static str, iters: usize, f: impl FnMut()) -> MicroResult {
+    let s = sample(iters, f);
+    MicroResult {
+        name,
+        median_ns: quantile(&s, 0.5) * 1e9,
+        p95_ns: quantile(&s, 0.95) * 1e9,
+        iters,
+    }
+}
+
+/// Peak resident set size of this process in bytes (Linux `VmHWM`; 0 when
+/// the information is unavailable).
+pub fn peak_rss_bytes() -> u64 {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: u64 = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0);
+                return kb * 1024;
+            }
+        }
+    }
+    0
+}
+
+// ---------------------------------------------------------------------------
+// micro tier
+// ---------------------------------------------------------------------------
+
+fn run_micro(bc: &BenchConfig) -> Result<Vec<MicroResult>> {
+    let n = bc.micro_dim();
+    let iters = bc.micro_iters();
+    let mut out = Vec::new();
+    let empty = || BatchRef { x: &[], y1h: &[] };
+
+    // Noise-free quadratic engine: the pure-arithmetic kernels.
+    let mut e = QuadraticEngine::new(n, 7, 0, 0.0, 0.0);
+    let mut scratch = WorkerScratch::new(n);
+    let mut theta = vec![0.5f32; n];
+    out.push(micro("sgd_step_fused", iters, || {
+        e.sgd_step(&mut theta, empty(), 1e-4, &mut scratch).unwrap();
+    }));
+
+    // The legacy compose: fresh gradient Vec + two separate passes.
+    let mut theta2 = vec![0.5f32; n];
+    out.push(micro("sgd_step_legacy_3pass", iters, || {
+        let mut g = vec![0.0f32; n];
+        e.grad(&theta2, empty(), &mut g).unwrap();
+        e.sgd(&mut theta2, &g, 1e-4).unwrap();
+    }));
+
+    let mut theta3 = vec![0.5f32; n];
+    let mut buf = vec![0.0f32; n];
+    out.push(micro("momentum_step_fused", iters, || {
+        e.momentum_step(&mut theta3, empty(), &mut buf, 1e-4, &mut scratch).unwrap();
+    }));
+
+    let mut theta4 = vec![0.5f32; n];
+    let (mut m, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let z: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let mut t = 0u64;
+    out.push(micro("adahessian_step", iters, || {
+        t += 1;
+        e.adahessian_step(&mut theta4, empty(), &z, &mut m, &mut v, t, 1e-4, &mut scratch)
+            .unwrap();
+    }));
+
+    let mut theta5 = vec![0.5f32; n];
+    let g5 = vec![0.01f32; n];
+    let (mut m5, mut v5) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let mut t5 = 0u64;
+    out.push(micro("adamw_step_fused", iters, || {
+        t5 += 1;
+        native::adamw_step(&mut theta5, &g5, &mut m5, &mut v5, t5, 1e-4, 0.9, 0.999, 1e-8, 0.01);
+    }));
+
+    let mut tw = vec![1.0f32; n];
+    let mut tm = vec![0.0f32; n];
+    out.push(micro("elastic_pair", iters, || {
+        native::elastic_step(&mut tw, &mut tm, 0.1, 0.1);
+    }));
+
+    let snapshot = vec![0.25f32; n];
+    let mut tw2 = vec![1.0f32; n];
+    out.push(micro("elastic_pull", iters, || {
+        native::elastic_pull(&mut tw2, &snapshot, 0.1);
+    }));
+
+    let src = vec![0.125f32; n];
+    let mut pool = SnapshotPool::new();
+    out.push(micro("snapshot_publish_pool", iters, || {
+        let _s = pool.publish(&src);
+    }));
+    out.push(micro("snapshot_publish_legacy_clone", iters, || {
+        let _s = Arc::new(src.clone());
+    }));
+
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// macro tier
+// ---------------------------------------------------------------------------
+
+/// The fig3-shaped sweep config: overlap-ratio axis on the quadratic
+/// engine, SGD locals (EASGD), noise-free so both measured paths run the
+/// closed-form arithmetic.
+fn macro_config(bc: &BenchConfig) -> ExperimentConfig {
+    ExperimentConfig {
+        method: Method::Easgd,
+        workers: 4,
+        tau: 2,
+        rounds: bc.macro_rounds(),
+        lr: 0.05,
+        failure: FailureModel::None,
+        train_size: 256,
+        test_size: 64,
+        eval_subset: 16,
+        eval_every: bc.macro_rounds().max(1),
+        engine: EngineKind::Quadratic {
+            dim: bc.macro_dim(),
+            heterogeneity: 0.2,
+            noise: 0.0,
+        },
+        ..ExperimentConfig::default()
+    }
+}
+
+fn macro_plan(bc: &BenchConfig) -> TrialPlan {
+    let base = macro_config(bc);
+    let mut plan = TrialPlan::new();
+    for r in [0.0, 0.25, 0.5] {
+        let mut cfg = base.clone();
+        cfg.overlap_ratio = r;
+        plan.push_cell(&format!("bench-fig3/r={r}"), &format!("r={r}"), &cfg, bc.macro_seeds());
+    }
+    plan
+}
+
+/// Emulation of the pre-change hot path for one trial: per-step gradient
+/// allocation + separate loss/gradient/apply passes, and a full
+/// `theta.clone()` behind a fresh `Arc` per snapshot publish. Scoring,
+/// policy decisions, sync order, evaluation cadence and all RNG streams
+/// match the real sequential driver, so the wall-clock difference against
+/// `schedule::execute_plan` isolates exactly the allocation/fusion work.
+fn legacy_trial(cfg: &ExperimentConfig) -> Result<()> {
+    ensure!(
+        matches!(cfg.engine, EngineKind::Quadratic { .. }),
+        "legacy bench emulation supports the quadratic engine only"
+    );
+    ensure!(
+        cfg.method.optimizer() == Optimizer::Sgd,
+        "legacy bench emulation covers SGD locals only"
+    );
+    let setup = Setup::build(cfg)?;
+    let mut engine = setup.make_engine(Role::All)?;
+    let n = setup.theta0.len();
+    let mut workers: Vec<_> = (0..cfg.workers).map(|i| setup.make_worker(i)).collect();
+    let mut master = setup.make_master()?;
+    let gossip = GossipBoard::new(cfg.workers, Arc::new(setup.theta0.clone()), cfg.gossip);
+    let mut evaluator = setup.make_evaluator();
+    let mut order_rng = Rng::new(cfg.seed).derive(0x0DE2);
+    let mut gossip_rng = Rng::new(cfg.seed).derive(0x6055);
+    for round in 0..cfg.rounds {
+        for w in order_rng.permutation(cfg.workers) {
+            // legacy local round: fresh Vec per gradient, three passes
+            let ws = &mut workers[w];
+            for _ in 0..cfg.tau {
+                let mut g = vec![0.0f32; n];
+                engine.grad(&ws.theta, BatchRef { x: &[], y1h: &[] }, &mut g)?;
+                engine.sgd(&mut ws.theta, &g, cfg.lr as f32)?;
+            }
+            let (_, est) = gossip.estimate(w, &mut gossip_rng);
+            let score = workers[w].observe_and_score(&est);
+            let mut tw = std::mem::take(&mut workers[w].theta);
+            let ctx = crate::elastic::policy::SyncContext {
+                worker: w,
+                round,
+                raw_score: score,
+                missed: workers[w].missed,
+                alpha: cfg.alpha,
+            };
+            master.serve_sync(engine.as_mut(), &ctx, &mut tw)?;
+            workers[w].complete_sync(tw);
+            // legacy publish: allocate + clone the full aggregate
+            gossip.publish(w, round + 1, Arc::new(master.theta.clone()));
+        }
+        if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            evaluator.evaluate(engine.as_mut(), &master.theta)?;
+        }
+    }
+    Ok(())
+}
+
+struct MacroResult {
+    cells: usize,
+    trials: usize,
+    rounds_total: u64,
+    baseline_wall: f64,
+    baseline_rps: f64,
+    hotpath_wall: f64,
+    hotpath_rps: f64,
+    syncs_per_sec: f64,
+    speedup: f64,
+}
+
+fn run_macro(bc: &BenchConfig) -> Result<MacroResult> {
+    let plan = macro_plan(bc);
+    let trials = plan.len();
+    let rounds_total: u64 = plan.slots.iter().map(|s| s.config.rounds).sum();
+
+    // Baseline first (emulated pre-change hot path).
+    let t0 = Instant::now();
+    for slot in &plan.slots {
+        legacy_trial(&slot.config)?;
+    }
+    let baseline_wall = t0.elapsed().as_secs_f64();
+
+    // The real engine: identical plan through the schedule machinery.
+    let t1 = Instant::now();
+    let report = schedule::execute_plan(&plan, &ScheduleOptions::default())?;
+    let hotpath_wall = t1.elapsed().as_secs_f64();
+
+    let syncs: u64 = report
+        .outcomes
+        .iter()
+        .flat_map(|o| o.record.worker_stats.iter().map(|s| s.0))
+        .sum();
+    Ok(MacroResult {
+        cells: plan.cells().len(),
+        trials,
+        rounds_total,
+        baseline_wall,
+        baseline_rps: rounds_total as f64 / baseline_wall.max(1e-12),
+        hotpath_wall,
+        hotpath_rps: rounds_total as f64 / hotpath_wall.max(1e-12),
+        syncs_per_sec: syncs as f64 / hotpath_wall.max(1e-12),
+        speedup: baseline_wall / hotpath_wall.max(1e-12),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// entry point
+// ---------------------------------------------------------------------------
+
+/// Run both tiers and write the JSON artifact to `out`. Returns the
+/// rendered document (already validated by a re-parse of the written file).
+pub fn run(bc: &BenchConfig, out: &Path) -> Result<Json> {
+    let micro_results = run_micro(bc)?;
+    let mac = run_macro(bc)?;
+
+    let micro_json = Json::Obj(
+        micro_results
+            .iter()
+            .map(|r| {
+                (
+                    r.name.to_string(),
+                    Json::obj(vec![
+                        ("median_ns", Json::num(r.median_ns)),
+                        ("p95_ns", Json::num(r.p95_ns)),
+                        ("iters", Json::num(r.iters as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::str("hotpath")),
+        ("smoke", Json::Bool(bc.smoke)),
+        ("micro_dim", Json::num(bc.micro_dim() as f64)),
+        ("micro", micro_json),
+        (
+            "macro",
+            Json::obj(vec![
+                ("shape", Json::str("fig3-overlap/quad/easgd")),
+                ("dim", Json::num(bc.macro_dim() as f64)),
+                ("cells", Json::num(mac.cells as f64)),
+                ("trials", Json::num(mac.trials as f64)),
+                ("rounds_total", Json::num(mac.rounds_total as f64)),
+                (
+                    "baseline_legacy_alloc",
+                    Json::obj(vec![
+                        ("wall_secs", Json::num(mac.baseline_wall)),
+                        ("rounds_per_sec", Json::num(mac.baseline_rps)),
+                    ]),
+                ),
+                (
+                    "hotpath",
+                    Json::obj(vec![
+                        ("wall_secs", Json::num(mac.hotpath_wall)),
+                        ("rounds_per_sec", Json::num(mac.hotpath_rps)),
+                        ("syncs_per_sec", Json::num(mac.syncs_per_sec)),
+                    ]),
+                ),
+                ("speedup", Json::num(mac.speedup)),
+            ]),
+        ),
+        ("peak_rss_bytes", Json::num(peak_rss_bytes() as f64)),
+    ]);
+
+    std::fs::write(out, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", out.display()))?;
+    // Validity gate: the artifact must read back as well-formed JSON with
+    // the fields the trajectory tooling keys on.
+    let text = std::fs::read_to_string(out)?;
+    let back = Json::parse(&text).context("BENCH_hotpath.json failed to re-parse")?;
+    ensure!(back.get("bench").as_str() == Some("hotpath"), "bench artifact missing 'bench' tag");
+    ensure!(
+        back.get("macro").get("speedup").as_f64().is_some(),
+        "bench artifact missing macro.speedup"
+    );
+    Ok(doc)
+}
+
+/// One-line human summary of a bench document.
+pub fn summary(doc: &Json) -> String {
+    let mac = doc.get("macro");
+    format!(
+        "macro: {:.0} rounds/s hot path vs {:.0} rounds/s legacy baseline ({:.2}x), \
+         {:.0} syncs/s, peak RSS {:.1} MiB",
+        mac.get("hotpath").get("rounds_per_sec").as_f64().unwrap_or(0.0),
+        mac.get("baseline_legacy_alloc").get("rounds_per_sec").as_f64().unwrap_or(0.0),
+        mac.get("speedup").as_f64().unwrap_or(0.0),
+        mac.get("hotpath").get("syncs_per_sec").as_f64().unwrap_or(0.0),
+        doc.get("peak_rss_bytes").as_f64().unwrap_or(0.0) / (1024.0 * 1024.0),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_bench_emits_valid_json() {
+        let out = std::env::temp_dir()
+            .join(format!("deahes-bench-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&out);
+        let doc = run(&BenchConfig { smoke: true }, &out).unwrap();
+        assert_eq!(doc.get("bench").as_str(), Some("hotpath"));
+        assert!(doc.get("macro").get("speedup").as_f64().unwrap() > 0.0);
+        assert!(!summary(&doc).is_empty());
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn legacy_emulation_runs_the_macro_config() {
+        let bc = BenchConfig { smoke: true };
+        let mut cfg = macro_config(&bc);
+        cfg.rounds = 3;
+        legacy_trial(&cfg).unwrap();
+    }
+}

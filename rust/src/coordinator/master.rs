@@ -9,10 +9,24 @@
 //! Policies may keep per-worker state across syncs — the master owns the
 //! policy for the lifetime of a run and calls `init` with the worker count
 //! up front.
+//!
+//! ## Snapshot publishing (double-buffered, allocation-free)
+//!
+//! After each sync the serving worker publishes the master's new aggregate
+//! to the gossip board. The old path `Arc::new(master.theta.clone())`
+//! allocated a fresh parameter-sized buffer per sync; the master now owns a
+//! [`SnapshotPool`] of reusable `Arc<Vec<f32>>` buffers.
+//! [`MasterState::publish_snapshot`] copies the working aggregate into a
+//! pool buffer whose readers have all moved on (strong count back to 1)
+//! and hands out another reference to it — readers (gossip entries,
+//! in-flight sync replies) share the snapshot without copying, and once
+//! every board slot holds a snapshot the pool stops growing: steady state
+//! performs zero heap allocations (pinned by `tests/alloc_regression.rs`).
 
 use crate::elastic::policy::{SyncContext, SyncPolicy};
 use crate::engine::Engine;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// One served sync, for diagnostics/metrics.
 #[derive(Clone, Copy, Debug)]
@@ -35,6 +49,50 @@ pub struct WorkerSyncStats {
     pub corrections: u64,
 }
 
+/// Recycling pool of shared snapshot buffers (see the module docs). A
+/// buffer is reusable once every outstanding reader dropped its reference;
+/// the pool scans for one, overwrites it in place, and only allocates when
+/// all buffers are still being read — so the pool size settles at
+/// (number of concurrent readers + 1) and publishing becomes a pure copy.
+pub struct SnapshotPool {
+    buffers: Vec<Arc<Vec<f32>>>,
+}
+
+impl SnapshotPool {
+    pub fn new() -> SnapshotPool {
+        SnapshotPool { buffers: Vec::new() }
+    }
+
+    /// Number of buffers currently owned by the pool (diagnostics/tests).
+    pub fn len(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty()
+    }
+
+    /// Publish `src` as a shared snapshot: reuse a quiescent buffer when
+    /// one exists, allocate (and remember) a new one otherwise.
+    pub fn publish(&mut self, src: &[f32]) -> Arc<Vec<f32>> {
+        for buf in &mut self.buffers {
+            if let Some(slot) = Arc::get_mut(buf) {
+                slot.copy_from_slice(src);
+                return buf.clone();
+            }
+        }
+        let fresh = Arc::new(src.to_vec());
+        self.buffers.push(fresh.clone());
+        fresh
+    }
+}
+
+impl Default for SnapshotPool {
+    fn default() -> Self {
+        SnapshotPool::new()
+    }
+}
+
 pub struct MasterState {
     pub theta: Vec<f32>,
     pub policy: Box<dyn SyncPolicy>,
@@ -44,6 +102,7 @@ pub struct MasterState {
     /// correction. Taken from the policy (not the run config) so the stat
     /// stays correct when `--policy` pins a different α than the run's.
     correction_floor: f64,
+    snapshots: SnapshotPool,
 }
 
 impl MasterState {
@@ -56,12 +115,24 @@ impl MasterState {
             per_worker: vec![WorkerSyncStats::default(); workers],
             total_syncs: 0,
             correction_floor,
+            snapshots: SnapshotPool::new(),
         }
     }
 
     /// Canonical spec of the policy serving this master.
     pub fn policy_spec(&self) -> String {
         self.policy.spec()
+    }
+
+    /// Share the current aggregate as a read-only snapshot (for the gossip
+    /// board / sync replies) without allocating at steady state.
+    pub fn publish_snapshot(&mut self) -> Arc<Vec<f32>> {
+        self.snapshots.publish(&self.theta)
+    }
+
+    /// Snapshot-pool size (diagnostics/tests).
+    pub fn snapshot_buffers(&self) -> usize {
+        self.snapshots.len()
     }
 
     /// Serve one sync: ask the policy for (h1, h2), run the elastic pair
@@ -73,7 +144,7 @@ impl MasterState {
         &mut self,
         engine: &mut dyn Engine,
         ctx: &SyncContext,
-        theta_w: &mut Vec<f32>,
+        theta_w: &mut [f32],
     ) -> Result<SyncEvent> {
         let w = self.policy.weights(ctx);
         let (h1, h2) = (w.h1, w.h2);
@@ -200,5 +271,39 @@ mod tests {
             m.serve_sync(&mut e, &ctx(0, r, None, 0), &mut tw).unwrap();
         }
         assert_eq!(m.per_worker[0].corrections, 0);
+    }
+
+    #[test]
+    fn snapshot_pool_reuses_quiescent_buffers() {
+        let mut pool = SnapshotPool::new();
+        let a = pool.publish(&[1.0, 2.0]);
+        assert_eq!(*a, vec![1.0, 2.0]);
+        assert_eq!(pool.len(), 1);
+        // reader still holds `a` -> a second publish needs a second buffer
+        let b = pool.publish(&[3.0, 4.0]);
+        assert_eq!(pool.len(), 2);
+        assert_eq!(*a, vec![1.0, 2.0], "live readers never see overwrites");
+        drop(a);
+        drop(b);
+        // both quiescent: the next publishes recycle, pool stops growing
+        for i in 0..10 {
+            let s = pool.publish(&[i as f32, i as f32]);
+            assert_eq!(*s, vec![i as f32, i as f32]);
+        }
+        assert_eq!(pool.len(), 2);
+    }
+
+    #[test]
+    fn master_snapshot_tracks_theta() {
+        let (mut m, mut e) = master("fixed(alpha=0.5)");
+        let s0 = m.publish_snapshot();
+        assert_eq!(*s0, vec![0.0; 8]);
+        let mut tw = vec![2.0; 8];
+        m.serve_sync(&mut e, &ctx(0, 1, None, 0), &mut tw).unwrap();
+        let s1 = m.publish_snapshot();
+        assert_eq!(*s1, vec![1.0; 8]);
+        // the earlier snapshot is immutable history
+        assert_eq!(*s0, vec![0.0; 8]);
+        assert_eq!(m.snapshot_buffers(), 2);
     }
 }

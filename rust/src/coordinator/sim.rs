@@ -222,6 +222,13 @@ pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
     let mut gossip_rng = Rng::new(cfg.seed).derive(0x6055);
     let mut log = MetricsLog::default();
     let mut per_round_syncs: Vec<usize> = Vec::with_capacity(cfg.rounds as usize);
+    // Round-scoped buffers, hoisted out of the loop: a warmed-up round
+    // performs no heap allocation (pinned by tests/alloc_regression.rs).
+    let mut losses: Vec<f64> = Vec::with_capacity(cfg.workers);
+    let mut h1s: Vec<f64> = Vec::with_capacity(cfg.workers);
+    let mut h2s: Vec<f64> = Vec::with_capacity(cfg.workers);
+    let mut scores: Vec<f64> = Vec::with_capacity(cfg.workers);
+    let mut order: Vec<usize> = Vec::with_capacity(cfg.workers);
 
     log_info!(
         "sequential run: method={} policy={} k={} tau={} rounds={} overlap={:.3} failure={}",
@@ -235,13 +242,14 @@ pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
     );
 
     for round in 0..cfg.rounds {
-        let mut losses = Vec::with_capacity(cfg.workers);
-        let mut h1s = Vec::new();
-        let mut h2s = Vec::new();
-        let mut scores = Vec::new();
+        losses.clear();
+        h1s.clear();
+        h2s.clear();
+        scores.clear();
         let mut ok = 0u32;
         let mut failed = 0u32;
-        for w in order_rng.permutation(cfg.workers) {
+        order_rng.permutation_into(&mut order, cfg.workers);
+        for &w in &order {
             let suppressed = cfg.failure.suppressed(cfg.seed, w, round);
             if suppressed && cfg.fail_style == crate::coordinator::failure::FailStyle::Node {
                 // Node down: frozen — no steps, no gossip, no sync.
@@ -275,7 +283,8 @@ pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
             };
             let ev = master.serve_sync(engine.as_mut(), &ctx, &mut tw)?;
             workers[w].complete_sync(tw);
-            gossip.publish(w, round + 1, Arc::new(master.theta.clone()));
+            // Pool-recycled snapshot: no per-sync clone or allocation.
+            gossip.publish(w, round + 1, master.publish_snapshot());
             h1s.push(ev.h1);
             h2s.push(ev.h2);
             ok += 1;
@@ -409,7 +418,8 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
                                     master.serve_sync(engine.as_mut(), &ctx, &mut theta_w)?;
                                 let _ = reply.send(SyncReply {
                                     theta_w,
-                                    theta_m: Arc::new(master.theta.clone()),
+                                    // pool-recycled snapshot (no clone)
+                                    theta_m: master.publish_snapshot(),
                                     h1: ev.h1,
                                     h2: ev.h2,
                                 });
@@ -480,11 +490,14 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
                         if suppressed {
                             state.record_miss();
                         } else {
+                            // Move θ_w into the sync message instead of
+                            // cloning it: the worker blocks on the reply,
+                            // which hands the (post-elastic) buffer back.
                             master_tx
                                 .send(ToMaster::Sync {
                                     worker: i,
                                     round,
-                                    theta_w: state.theta.clone(),
+                                    theta_w: std::mem::take(&mut state.theta),
                                     raw_score: score,
                                     missed: state.missed,
                                     reply: reply_tx.clone(),

@@ -1,10 +1,16 @@
 //! Worker-side state machine: local optimizer steps between syncs, the raw
 //! score pipeline, and the elastic sync handshake. Thread-agnostic — both
 //! the sequential and threaded drivers run this exact code.
+//!
+//! The hot loop is allocation-free at steady state: every buffer a local
+//! round touches — the batch staging buffers, the [`WorkerScratch`] arena
+//! the engine writes gradients/diagonals into, the Rademacher probe, the
+//! optimizer state — is allocated once in [`WorkerState::new`] and reused
+//! for every step of every round (pinned by `tests/alloc_regression.rs`).
 
 use crate::data::{Batcher, IMAGE_PIXELS, NUM_CLASSES};
 use crate::elastic::score::ScoreTracker;
-use crate::engine::{BatchRef, Engine};
+use crate::engine::{BatchRef, Engine, WorkerScratch};
 use crate::optim::OptState;
 use crate::util::rng::Rng;
 use crate::util::stats::l2_distance;
@@ -28,6 +34,10 @@ pub struct WorkerState {
     // hot-loop buffers (never reallocated)
     x_buf: Vec<f32>,
     y_buf: Vec<f32>,
+    /// Engine scratch arena (gradient/diagonal), reused across rounds.
+    scratch: WorkerScratch,
+    /// Rademacher probe buffer (AdaHessian), refilled in place each step.
+    probe: Vec<f32>,
     probe_rng: Rng,
 }
 
@@ -42,6 +52,8 @@ impl WorkerState {
         probe_rng: Rng,
     ) -> WorkerState {
         let batch = batcher.as_ref().map(|b| b.batch_size()).unwrap_or(0);
+        let n = theta0.len();
+        let needs_probe = opt.optimizer().needs_hessian();
         WorkerState {
             id,
             theta: theta0,
@@ -54,11 +66,17 @@ impl WorkerState {
             last_loss: f32::NAN,
             x_buf: vec![0.0; batch * IMAGE_PIXELS],
             y_buf: vec![0.0; batch * NUM_CLASSES],
+            scratch: WorkerScratch::new(n),
+            probe: vec![0.0; if needs_probe { n } else { 0 }],
             probe_rng,
         }
     }
 
     /// τ local optimizer steps; returns the mean training loss.
+    ///
+    /// Each step is one fused engine call (gradient + update in a single
+    /// operation; the quadratic engine makes one pass per buffer) writing
+    /// through the pre-allocated scratch arena — no per-step `Vec`s.
     pub fn local_round(&mut self, engine: &mut dyn Engine, tau: usize) -> Result<f32> {
         let mut loss_sum = 0.0f32;
         for _ in 0..tau {
@@ -66,45 +84,28 @@ impl WorkerState {
                 b.next_into(&mut self.x_buf, &mut self.y_buf);
             }
             let batch = BatchRef { x: &self.x_buf, y1h: &self.y_buf };
-            let n = self.theta.len();
-            match &mut self.opt {
+            loss_sum += match &mut self.opt {
                 OptState::Sgd => {
-                    let (loss, g) = engine.grad(&self.theta, batch)?;
-                    engine.sgd(&mut self.theta, &g, self.lr)?;
-                    loss_sum += loss;
+                    engine.sgd_step(&mut self.theta, batch, self.lr, &mut self.scratch)?
                 }
                 OptState::Momentum { buf } => {
-                    let (loss, g) = engine.grad(&self.theta, batch)?;
-                    let mut buf_taken = std::mem::take(buf);
-                    engine.momentum(&mut self.theta, &g, &mut buf_taken, self.lr)?;
-                    if let OptState::Momentum { buf } = &mut self.opt {
-                        *buf = buf_taken;
-                    }
-                    loss_sum += loss;
+                    engine.momentum_step(&mut self.theta, batch, buf, self.lr, &mut self.scratch)?
                 }
                 OptState::AdaHessian { m, v, t } => {
-                    let z = self.probe_rng.rademacher(n);
-                    let (loss, g, d) = engine.grad_hess(&self.theta, batch, &z)?;
+                    self.probe_rng.rademacher_into(&mut self.probe);
                     *t += 1;
-                    let tt = *t;
-                    let mut m_taken = std::mem::take(m);
-                    let mut v_taken = std::mem::take(v);
-                    engine.adahessian(
+                    engine.adahessian_step(
                         &mut self.theta,
-                        &g,
-                        &d,
-                        &mut m_taken,
-                        &mut v_taken,
-                        tt,
+                        batch,
+                        &self.probe,
+                        m,
+                        v,
+                        *t,
                         self.lr,
-                    )?;
-                    if let OptState::AdaHessian { m, v, .. } = &mut self.opt {
-                        *m = m_taken;
-                        *v = v_taken;
-                    }
-                    loss_sum += loss;
+                        &mut self.scratch,
+                    )?
                 }
-            }
+            };
             self.steps += 1;
         }
         self.last_loss = loss_sum / tau as f32;

@@ -15,6 +15,20 @@
 //!
 //! Engines are created inside the thread that uses them (the xla crate's
 //! client is not Send), via an [`EngineFactory`].
+//!
+//! ## Hot-path contract (zero allocation at steady state)
+//!
+//! `grad`/`grad_hess` write into caller-provided buffers instead of
+//! returning fresh `Vec`s, and each local optimizer step goes through a
+//! **fused** `*_step` method that owns the whole
+//! gradient→(momentum/curvature)→apply sequence. The caller supplies a
+//! per-worker [`WorkerScratch`] arena, allocated once and reused every
+//! round, so a warmed-up training round performs no heap allocation (pinned
+//! by `tests/alloc_regression.rs`). The update-only kernels (`sgd`,
+//! `momentum`, `adahessian`) remain on the trait for the equivalence tests,
+//! `deahes inspect` and the micro-benches; the fused steps are required to
+//! be pointwise bit-identical to composing them with `grad`/`grad_hess`
+//! (pinned by `tests/kernel_equivalence.rs`).
 
 pub mod quad;
 pub mod xla;
@@ -27,43 +41,121 @@ pub struct BatchRef<'a> {
     pub y1h: &'a [f32],
 }
 
+/// Per-worker scratch arena: the buffers an engine writes into on the hot
+/// path. Allocated once per worker (sized to the parameter count) and
+/// reused for every step of every round — the steady-state training loop
+/// never allocates. Persistent optimizer state (momentum buffer, AdaHessian
+/// moments) lives in [`crate::optim::OptState`]; this arena holds only the
+/// per-step transients.
+pub struct WorkerScratch {
+    /// Gradient buffer (`grad`, and the gradient half of `grad_hess`).
+    pub grad: Vec<f32>,
+    /// Hutchinson Hessian-diagonal buffer (`grad_hess`).
+    pub diag: Vec<f32>,
+}
+
+impl WorkerScratch {
+    pub fn new(n: usize) -> WorkerScratch {
+        WorkerScratch { grad: vec![0.0; n], diag: vec![0.0; n] }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.grad.len()
+    }
+}
+
 pub trait Engine {
     fn param_count(&self) -> usize;
 
-    /// (mean loss, gradient).
-    fn grad(&mut self, theta: &[f32], batch: BatchRef<'_>) -> Result<(f32, Vec<f32>)>;
+    /// Mean loss; the gradient is written into `out`
+    /// (`out.len() == param_count()`).
+    fn grad(&mut self, theta: &[f32], batch: BatchRef<'_>, out: &mut [f32]) -> Result<f32>;
 
-    /// (mean loss, gradient, spatially-averaged Hutchinson Hessian diag).
-    /// `z` is the caller-supplied Rademacher probe.
+    /// Mean loss; gradient written into `out_g`, spatially-averaged
+    /// Hutchinson Hessian diag into `out_d`. `z` is the caller-supplied
+    /// Rademacher probe.
     fn grad_hess(
         &mut self,
         theta: &[f32],
         batch: BatchRef<'_>,
         z: &[f32],
-    ) -> Result<(f32, Vec<f32>, Vec<f32>)>;
+        out_g: &mut [f32],
+        out_d: &mut [f32],
+    ) -> Result<f32>;
 
-    /// theta <- theta - lr*g (in place).
-    fn sgd(&mut self, theta: &mut Vec<f32>, g: &[f32], lr: f32) -> Result<()>;
+    /// Fused local SGD step: gradient + `theta -= lr*g` in one operation.
+    /// Returns the mean loss. The default composes `grad` + `sgd` through
+    /// the scratch arena; engines with a closed-form gradient override it
+    /// with a single pass (bit-identical by contract).
+    fn sgd_step(
+        &mut self,
+        theta: &mut [f32],
+        batch: BatchRef<'_>,
+        lr: f32,
+        scratch: &mut WorkerScratch,
+    ) -> Result<f32> {
+        let loss = self.grad(theta, batch, &mut scratch.grad)?;
+        self.sgd(theta, &scratch.grad, lr)?;
+        Ok(loss)
+    }
 
-    /// Fused momentum update (theta, buf in place).
-    fn momentum(&mut self, theta: &mut Vec<f32>, g: &[f32], buf: &mut Vec<f32>, lr: f32)
-        -> Result<()>;
+    /// Fused local momentum step (gradient + buf/theta update). Returns the
+    /// mean loss.
+    fn momentum_step(
+        &mut self,
+        theta: &mut [f32],
+        batch: BatchRef<'_>,
+        buf: &mut [f32],
+        lr: f32,
+        scratch: &mut WorkerScratch,
+    ) -> Result<f32> {
+        let loss = self.grad(theta, batch, &mut scratch.grad)?;
+        self.momentum(theta, &scratch.grad, buf, lr)?;
+        Ok(loss)
+    }
+
+    /// Fused local AdaHessian step (gradient + Hessian diag + m/v/theta
+    /// update); `t` is 1-based. Returns the mean loss.
+    #[allow(clippy::too_many_arguments)]
+    fn adahessian_step(
+        &mut self,
+        theta: &mut [f32],
+        batch: BatchRef<'_>,
+        z: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        t: u64,
+        lr: f32,
+        scratch: &mut WorkerScratch,
+    ) -> Result<f32> {
+        let loss = self.grad_hess(theta, batch, z, &mut scratch.grad, &mut scratch.diag)?;
+        self.adahessian(theta, &scratch.grad, &scratch.diag, m, v, t, lr)?;
+        Ok(loss)
+    }
+
+    /// theta <- theta - lr*g (in place). Update-only kernel: the hot path
+    /// uses [`Engine::sgd_step`]; this remains for equivalence tests,
+    /// `deahes inspect` and micro-benches.
+    fn sgd(&mut self, theta: &mut [f32], g: &[f32], lr: f32) -> Result<()>;
+
+    /// Fused momentum update (theta, buf in place), precomputed gradient.
+    fn momentum(&mut self, theta: &mut [f32], g: &[f32], buf: &mut [f32], lr: f32) -> Result<()>;
 
     /// Fused AdaHessian update (theta, m, v in place); `t` is 1-based.
     #[allow(clippy::too_many_arguments)]
     fn adahessian(
         &mut self,
-        theta: &mut Vec<f32>,
+        theta: &mut [f32],
         g: &[f32],
         d: &[f32],
-        m: &mut Vec<f32>,
-        v: &mut Vec<f32>,
+        m: &mut [f32],
+        v: &mut [f32],
         t: u64,
         lr: f32,
     ) -> Result<()>;
 
-    /// Elastic pair update (paper eqs. 12-13), both vectors in place.
-    fn elastic(&mut self, tw: &mut Vec<f32>, tm: &mut Vec<f32>, h1: f32, h2: f32) -> Result<()>;
+    /// Elastic pair update (paper eqs. 12-13), both slices in place.
+    fn elastic(&mut self, tw: &mut [f32], tm: &mut [f32], h1: f32, h2: f32) -> Result<()>;
 
     /// (correct_count, summed_loss) over one eval batch.
     fn eval(&mut self, theta: &[f32], batch: BatchRef<'_>) -> Result<(f32, f32)>;
@@ -90,3 +182,16 @@ pub trait Engine {
 
 /// Builds an engine inside the consuming thread.
 pub type EngineFactory = std::sync::Arc<dyn Fn() -> Result<Box<dyn Engine>> + Send + Sync>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_is_sized_to_param_count() {
+        let s = WorkerScratch::new(17);
+        assert_eq!(s.param_count(), 17);
+        assert_eq!(s.grad.len(), 17);
+        assert_eq!(s.diag.len(), 17);
+    }
+}

@@ -17,8 +17,27 @@
 //! plumbing has both series. The engine runs entirely in-process: the
 //! coordinator unit/property tests exercise hundreds of simulated rounds in
 //! milliseconds with zero PJRT involvement.
+//!
+//! ## Hot path
+//!
+//! The fused `sgd_step`/`momentum_step` overrides compute the loss term,
+//! the gradient element and the parameter update in a single pass per
+//! index — one sweep over `theta` instead of the three (loss pass, gradient
+//! pass + allocation, apply pass) the composed path makes. When the engine
+//! is noise-free the loop body is pure closed-form arithmetic over parallel
+//! slices, which LLVM auto-vectorizes. Fusion is **bit-identical** to the
+//! composed `grad` + update path: per-index expressions are evaluated in
+//! the same order with the same operand grouping, the loss accumulates in
+//! index order exactly like `exact_loss`, and the noise RNG is drawn once
+//! per index in the same sequence. The `noise == 0` fast path (no RNG in
+//! the loop body) is taken by the composed `grad`/`grad_hess` AND the
+//! fused steps alike, so the two stay bit-identical in both regimes.
+//! Pinned by `tests/kernel_equivalence.rs`.
+//! `adahessian_step` keeps the default composed path: its gradient noise
+//! stream must be fully drawn before the diagonal noise stream starts, so
+//! a single interleaved pass would reorder RNG draws and change bits.
 
-use super::{BatchRef, Engine};
+use super::{BatchRef, Engine, WorkerScratch};
 use crate::optim::native;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -98,6 +117,28 @@ impl QuadraticEngine {
     pub fn optimum(&self) -> &[f32] {
         &self.target
     }
+
+    /// One noiseless gradient element (the `noise == 0` fast path; shared
+    /// operand grouping with [`QuadraticEngine::grad_at`]).
+    #[inline]
+    fn grad_exact_at(&self, theta_i: f32, i: usize) -> f32 {
+        self.h[i] * (theta_i - self.target[i] - self.offset[i])
+    }
+
+    /// One gradient element with minibatch noise, exactly as the non-fused
+    /// `grad` computes it (the noise draw advances the shared stream).
+    #[inline]
+    fn grad_at(&mut self, theta_i: f32, i: usize) -> f32 {
+        self.h[i] * (theta_i - self.target[i] - self.offset[i])
+            + self.noise * self.rng.normal_f32(0.0, 1.0)
+    }
+
+    /// The loss term of index `i`, exactly as `exact_loss` computes it.
+    #[inline]
+    fn loss_at(&self, theta_i: f32, i: usize) -> f32 {
+        let d = theta_i - (self.target[i] + self.offset[i]);
+        0.5 * self.h[i] * d * d
+    }
 }
 
 impl Engine for QuadraticEngine {
@@ -113,15 +154,19 @@ impl Engine for QuadraticEngine {
         1
     }
 
-    fn grad(&mut self, theta: &[f32], _batch: BatchRef<'_>) -> Result<(f32, Vec<f32>)> {
+    fn grad(&mut self, theta: &[f32], _batch: BatchRef<'_>, out: &mut [f32]) -> Result<f32> {
+        debug_assert_eq!(out.len(), self.n);
         let loss = self.exact_loss(theta);
-        let g: Vec<f32> = (0..self.n)
-            .map(|i| {
-                self.h[i] * (theta[i] - self.target[i] - self.offset[i])
-                    + self.noise * self.rng.normal_f32(0.0, 1.0)
-            })
-            .collect();
-        Ok((loss, g))
+        if self.noise == 0.0 {
+            for i in 0..self.n {
+                out[i] = self.grad_exact_at(theta[i], i);
+            }
+        } else {
+            for i in 0..self.n {
+                out[i] = self.grad_at(theta[i], i);
+            }
+        }
+        Ok(loss)
     }
 
     fn grad_hess(
@@ -129,41 +174,103 @@ impl Engine for QuadraticEngine {
         theta: &[f32],
         batch: BatchRef<'_>,
         z: &[f32],
-    ) -> Result<(f32, Vec<f32>, Vec<f32>)> {
-        let (loss, g) = self.grad(theta, batch)?;
+        out_g: &mut [f32],
+        out_d: &mut [f32],
+    ) -> Result<f32> {
+        let loss = self.grad(theta, batch, out_g)?;
         // Hutchinson with diagonal H is exact: z ⊙ (Hz) = h (plus noise).
-        let d: Vec<f32> = (0..self.n)
-            .map(|i| {
+        if self.noise == 0.0 {
+            for i in 0..self.n {
+                out_d[i] = z[i] * self.h[i] * z[i];
+            }
+        } else {
+            for i in 0..self.n {
                 let exact = z[i] * self.h[i] * z[i];
-                exact + self.noise * self.rng.normal_f32(0.0, 0.5)
-            })
-            .collect();
-        Ok((loss, g, d))
+                out_d[i] = exact + self.noise * self.rng.normal_f32(0.0, 0.5);
+            }
+        }
+        Ok(loss)
     }
 
-    fn sgd(&mut self, theta: &mut Vec<f32>, g: &[f32], lr: f32) -> Result<()> {
+    /// Fused loss+gradient+apply: one pass over `theta` instead of three.
+    fn sgd_step(
+        &mut self,
+        theta: &mut [f32],
+        _batch: BatchRef<'_>,
+        lr: f32,
+        _scratch: &mut WorkerScratch,
+    ) -> Result<f32> {
+        debug_assert_eq!(theta.len(), self.n);
+        let mut loss = 0.0f32;
+        if self.noise == 0.0 {
+            // Pure closed form: no RNG in the loop body, auto-vectorizable.
+            for (i, t) in theta.iter_mut().enumerate() {
+                loss += self.loss_at(*t, i);
+                let g = self.grad_exact_at(*t, i);
+                *t -= lr * g;
+            }
+        } else {
+            for i in 0..self.n {
+                loss += self.loss_at(theta[i], i);
+                let g = self.grad_at(theta[i], i);
+                theta[i] -= lr * g;
+            }
+        }
+        Ok(loss)
+    }
+
+    /// Fused loss+gradient+momentum apply: one pass over (theta, buf).
+    fn momentum_step(
+        &mut self,
+        theta: &mut [f32],
+        _batch: BatchRef<'_>,
+        buf: &mut [f32],
+        lr: f32,
+        _scratch: &mut WorkerScratch,
+    ) -> Result<f32> {
+        debug_assert_eq!(theta.len(), self.n);
+        debug_assert_eq!(buf.len(), self.n);
+        let mu = self.momentum;
+        let mut loss = 0.0f32;
+        if self.noise == 0.0 {
+            for i in 0..self.n {
+                loss += self.loss_at(theta[i], i);
+                let g = self.grad_exact_at(theta[i], i);
+                buf[i] = mu * buf[i] + g;
+                theta[i] -= lr * buf[i];
+            }
+        } else {
+            for i in 0..self.n {
+                loss += self.loss_at(theta[i], i);
+                let g = self.grad_at(theta[i], i);
+                buf[i] = mu * buf[i] + g;
+                theta[i] -= lr * buf[i];
+            }
+        }
+        Ok(loss)
+    }
+
+    // adahessian_step: default composed impl (grad_hess + adahessian).
+    // Interleaving the two noise streams into one pass would reorder RNG
+    // draws and break bit-determinism with the pre-fusion path.
+
+    fn sgd(&mut self, theta: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
         native::sgd_step(theta, g, lr);
         Ok(())
     }
 
-    fn momentum(
-        &mut self,
-        theta: &mut Vec<f32>,
-        g: &[f32],
-        buf: &mut Vec<f32>,
-        lr: f32,
-    ) -> Result<()> {
+    fn momentum(&mut self, theta: &mut [f32], g: &[f32], buf: &mut [f32], lr: f32) -> Result<()> {
         native::momentum_step(theta, g, buf, lr, self.momentum);
         Ok(())
     }
 
     fn adahessian(
         &mut self,
-        theta: &mut Vec<f32>,
+        theta: &mut [f32],
         g: &[f32],
         d: &[f32],
-        m: &mut Vec<f32>,
-        v: &mut Vec<f32>,
+        m: &mut [f32],
+        v: &mut [f32],
         t: u64,
         lr: f32,
     ) -> Result<()> {
@@ -171,7 +278,7 @@ impl Engine for QuadraticEngine {
         Ok(())
     }
 
-    fn elastic(&mut self, tw: &mut Vec<f32>, tm: &mut Vec<f32>, h1: f32, h2: f32) -> Result<()> {
+    fn elastic(&mut self, tw: &mut [f32], tm: &mut [f32], h1: f32, h2: f32) -> Result<()> {
         native::elastic_step(tw, tm, h1, h2);
         Ok(())
     }
@@ -194,7 +301,8 @@ mod tests {
     fn gradient_is_zero_at_optimum_without_noise() {
         let mut e = QuadraticEngine::new(32, 1, 0, 0.0, 0.0);
         let theta = e.optimum().to_vec();
-        let (loss, g) = e.grad(&theta, empty_batch()).unwrap();
+        let mut g = vec![0.0; 32];
+        let loss = e.grad(&theta, empty_batch(), &mut g).unwrap();
         assert!(loss.abs() < 1e-10);
         assert!(g.iter().all(|&x| x.abs() < 1e-6));
     }
@@ -204,7 +312,9 @@ mod tests {
         let mut e = QuadraticEngine::new(16, 2, 0, 0.0, 0.0);
         let theta = vec![0.0; 16];
         let z: Vec<f32> = (0..16).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
-        let (_, _, d) = e.grad_hess(&theta, empty_batch(), &z).unwrap();
+        let mut g = vec![0.0; 16];
+        let mut d = vec![0.0; 16];
+        e.grad_hess(&theta, empty_batch(), &z, &mut g, &mut d).unwrap();
         for (di, hi) in d.iter().zip(&e.h) {
             assert!((di - hi).abs() < 1e-6);
         }
@@ -225,12 +335,12 @@ mod tests {
     fn sgd_converges_on_quadratic() {
         let mut e = QuadraticEngine::new(16, 4, 0, 0.0, 0.0);
         let mut theta = vec![0.0; 16];
+        let mut scratch = WorkerScratch::new(16);
         let l0 = e.exact_loss(&theta);
         // lr bounded by 2/h_max = 0.4; the smallest eigenvalue (0.05)
         // dominates the rate, so assert relative progress, not an absolute.
         for _ in 0..800 {
-            let (_, g) = e.grad(&theta, empty_batch()).unwrap();
-            e.sgd(&mut theta, &g, 0.3).unwrap();
+            e.sgd_step(&mut theta, empty_batch(), 0.3, &mut scratch).unwrap();
         }
         assert!(e.exact_loss(&theta) < 0.01 * l0, "{} vs {l0}", e.exact_loss(&theta));
     }
@@ -238,19 +348,28 @@ mod tests {
     #[test]
     fn adahessian_converges_faster_than_sgd_on_ill_conditioned() {
         let steps = 60;
+        let mut scratch = WorkerScratch::new(64);
         let mut e1 = QuadraticEngine::new(64, 5, 0, 0.0, 0.0);
         let mut sgd_theta = vec![0.0; 64];
         for _ in 0..steps {
-            let (_, g) = e1.grad(&sgd_theta, empty_batch()).unwrap();
-            e1.sgd(&mut sgd_theta, &g, 0.05).unwrap();
+            e1.sgd_step(&mut sgd_theta, empty_batch(), 0.05, &mut scratch).unwrap();
         }
         let mut e2 = QuadraticEngine::new(64, 5, 0, 0.0, 0.0);
         let mut ada_theta = vec![0.0; 64];
         let (mut m, mut v) = (vec![0.0; 64], vec![0.0; 64]);
         let z: Vec<f32> = (0..64).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
         for t in 1..=steps {
-            let (_, g, d) = e2.grad_hess(&ada_theta, empty_batch(), &z).unwrap();
-            e2.adahessian(&mut ada_theta, &g, &d, &mut m, &mut v, t, 0.05).unwrap();
+            e2.adahessian_step(
+                &mut ada_theta,
+                empty_batch(),
+                &z,
+                &mut m,
+                &mut v,
+                t,
+                0.05,
+                &mut scratch,
+            )
+            .unwrap();
         }
         assert!(
             e2.exact_loss(&ada_theta) < e1.exact_loss(&sgd_theta),

@@ -1,6 +1,19 @@
 //! The production engine: every operation executes an AOT HLO artifact via
 //! PJRT. Python authored the graphs once at build time; at run time this is
 //! rust -> PJRT C API -> compiled XLA executable, nothing else.
+//!
+//! ## Hot path
+//!
+//! `grad`/`grad_hess` copy the artifact outputs straight into the caller's
+//! scratch buffers, and the fused `*_step` methods chain the gradient
+//! artifact with the update artifact through the same scratch arena — the
+//! engine layer itself adds no allocation. True zero-copy would need PJRT
+//! **buffer donation** (input-output aliasing so the update artifact
+//! mutates the parameter buffer in place); the vendored `xla` crate does
+//! not expose donation, so the copy at the PJRT boundary stands in for it
+//! (stubbed, per the donation plan in docs/ARCHITECTURE.md §Hot path) and
+//! the artifact outputs are still materialized by the runtime. The
+//! coordinator above this layer is allocation-free either way.
 
 use super::{BatchRef, Engine};
 use crate::optim::native;
@@ -92,10 +105,10 @@ impl Engine for XlaEngine {
         self.batch_eval
     }
 
-    fn grad(&mut self, theta: &[f32], batch: BatchRef<'_>) -> Result<(f32, Vec<f32>)> {
-        ensure!(theta.len() == self.n);
+    fn grad(&mut self, theta: &[f32], batch: BatchRef<'_>, out: &mut [f32]) -> Result<f32> {
+        ensure!(theta.len() == self.n && out.len() == self.n);
         let y_shape = [self.batch_train, self.num_classes];
-        let mut out = self.rt.call(
+        let mut res = self.rt.call(
             "grad",
             &[
                 Arg::Tensor(theta, &[self.n]),
@@ -103,9 +116,9 @@ impl Engine for XlaEngine {
                 Arg::Tensor(batch.y1h, &y_shape),
             ],
         )?;
-        let g = out.pop().unwrap();
-        let loss = Self::scalar_of(&out.pop().unwrap());
-        Ok((loss, g))
+        let g = res.pop().unwrap();
+        out.copy_from_slice(&g);
+        Ok(Self::scalar_of(&res.pop().unwrap()))
     }
 
     fn grad_hess(
@@ -113,10 +126,13 @@ impl Engine for XlaEngine {
         theta: &[f32],
         batch: BatchRef<'_>,
         z: &[f32],
-    ) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+        out_g: &mut [f32],
+        out_d: &mut [f32],
+    ) -> Result<f32> {
         ensure!(theta.len() == self.n && z.len() == self.n);
+        ensure!(out_g.len() == self.n && out_d.len() == self.n);
         let y_shape = [self.batch_train, self.num_classes];
-        let mut out = self.rt.call(
+        let mut res = self.rt.call(
             "grad_hess",
             &[
                 Arg::Tensor(theta, &[self.n]),
@@ -125,37 +141,39 @@ impl Engine for XlaEngine {
                 Arg::Tensor(z, &[self.n]),
             ],
         )?;
-        let d = out.pop().unwrap();
-        let g = out.pop().unwrap();
-        let loss = Self::scalar_of(&out.pop().unwrap());
-        Ok((loss, g, d))
+        let d = res.pop().unwrap();
+        out_d.copy_from_slice(&d);
+        let g = res.pop().unwrap();
+        out_g.copy_from_slice(&g);
+        Ok(Self::scalar_of(&res.pop().unwrap()))
     }
 
-    fn sgd(&mut self, theta: &mut Vec<f32>, g: &[f32], lr: f32) -> Result<()> {
+    // sgd_step / momentum_step / adahessian_step: the default composed
+    // implementations (gradient artifact into scratch, then the update
+    // below) are already optimal at this boundary — see the buffer-donation
+    // note in the module docs. The PJRT call stats therefore keep their
+    // per-artifact shape ("grad" + "sgd"/"momentum"/"adahessian"), which
+    // `mean_costs` relies on.
+
+    fn sgd(&mut self, theta: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
         if self.optim == OptimImpl::Native {
             native::sgd_step(theta, g, lr);
             return Ok(());
         }
-        let mut out = self.rt.call(
+        let mut res = self.rt.call(
             "sgd",
             &[Arg::Tensor(theta, &[self.n]), Arg::Tensor(g, &[self.n]), Arg::Scalar(lr)],
         )?;
-        *theta = out.pop().unwrap();
+        theta.copy_from_slice(&res.pop().unwrap());
         Ok(())
     }
 
-    fn momentum(
-        &mut self,
-        theta: &mut Vec<f32>,
-        g: &[f32],
-        buf: &mut Vec<f32>,
-        lr: f32,
-    ) -> Result<()> {
+    fn momentum(&mut self, theta: &mut [f32], g: &[f32], buf: &mut [f32], lr: f32) -> Result<()> {
         if self.optim == OptimImpl::Native {
             native::momentum_step(theta, g, buf, lr, self.hp.momentum as f32);
             return Ok(());
         }
-        let mut out = self.rt.call(
+        let mut res = self.rt.call(
             "momentum",
             &[
                 Arg::Tensor(theta, &[self.n]),
@@ -164,18 +182,18 @@ impl Engine for XlaEngine {
                 Arg::Scalar(lr),
             ],
         )?;
-        *buf = out.pop().unwrap();
-        *theta = out.pop().unwrap();
+        buf.copy_from_slice(&res.pop().unwrap());
+        theta.copy_from_slice(&res.pop().unwrap());
         Ok(())
     }
 
     fn adahessian(
         &mut self,
-        theta: &mut Vec<f32>,
+        theta: &mut [f32],
         g: &[f32],
         d: &[f32],
-        m: &mut Vec<f32>,
-        v: &mut Vec<f32>,
+        m: &mut [f32],
+        v: &mut [f32],
         t: u64,
         lr: f32,
     ) -> Result<()> {
@@ -194,7 +212,7 @@ impl Engine for XlaEngine {
             );
             return Ok(());
         }
-        let mut out = self.rt.call(
+        let mut res = self.rt.call(
             "adahessian",
             &[
                 Arg::Tensor(theta, &[self.n]),
@@ -206,18 +224,18 @@ impl Engine for XlaEngine {
                 Arg::Scalar(lr),
             ],
         )?;
-        *v = out.pop().unwrap();
-        *m = out.pop().unwrap();
-        *theta = out.pop().unwrap();
+        v.copy_from_slice(&res.pop().unwrap());
+        m.copy_from_slice(&res.pop().unwrap());
+        theta.copy_from_slice(&res.pop().unwrap());
         Ok(())
     }
 
-    fn elastic(&mut self, tw: &mut Vec<f32>, tm: &mut Vec<f32>, h1: f32, h2: f32) -> Result<()> {
+    fn elastic(&mut self, tw: &mut [f32], tm: &mut [f32], h1: f32, h2: f32) -> Result<()> {
         if self.optim == OptimImpl::Native {
             native::elastic_step(tw, tm, h1, h2);
             return Ok(());
         }
-        let mut out = self.rt.call(
+        let mut res = self.rt.call(
             "elastic",
             &[
                 Arg::Tensor(tw, &[self.n]),
@@ -226,8 +244,8 @@ impl Engine for XlaEngine {
                 Arg::Scalar(h2),
             ],
         )?;
-        *tm = out.pop().unwrap();
-        *tw = out.pop().unwrap();
+        tm.copy_from_slice(&res.pop().unwrap());
+        tw.copy_from_slice(&res.pop().unwrap());
         Ok(())
     }
 

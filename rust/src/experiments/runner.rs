@@ -381,6 +381,7 @@ mod tests {
             },
             wall_secs: 0.0,
             cached: false,
+            perf: String::new(),
         }
     }
 

@@ -5,6 +5,7 @@
 //!   fig3          regenerate the paper's Fig. 3 (overlap-ratio sweep)
 //!   grid          regenerate Figs. 4+5 (method × workers × tau grid)
 //!   policy-sweep  compare sync-policy specs on one config (policy axis)
+//!   bench         hot-path micro/macro benchmarks -> BENCH_hotpath.json
 //!   inspect       validate artifacts/metadata.json and time each artifact
 //!   datagen       dump synthetic-MNIST samples as ASCII (sanity check)
 //!
@@ -15,12 +16,15 @@
 //!   deahes fig3 --ratios 0,0.125,0.25,0.375,0.5 --seeds 3
 //!   deahes grid --grid-workers 4,8 --taus 1,2,4 --seeds 3
 //!   deahes policy-sweep --engine quad --policies "dynamic,hysteresis,staleness"
+//!   deahes bench --smoke --out /tmp/BENCH_hotpath.json
 //!
 //! Sweeps (fig3, grid) run through the trial-schedule engine: `--jobs N`
 //! keeps N trials in flight on a thread pool, `--run-dir d` appends each
 //! finished trial to d/runs.jsonl, and `--resume` skips trials already
 //! committed there — a killed grid picks up where it stopped:
 //!   deahes grid --engine quad --jobs 4 --run-dir runs/grid --resume
+//! `train` routes through a 1-slot plan, so single runs commit/resume the
+//! same way (the seed is used verbatim — numbers match a plan-less run).
 
 use deahes::config::{EngineKind, ExperimentConfig, GossipMode};
 use deahes::coordinator::{sim, FailureModel};
@@ -59,6 +63,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "fig3" => cmd_fig3(rest),
         "grid" => cmd_grid(rest),
         "policy-sweep" => cmd_policy_sweep(rest),
+        "bench" => cmd_bench(rest),
         "inspect" => cmd_inspect(rest),
         "datagen" => cmd_datagen(rest),
         "--help" | "-h" | "help" => {
@@ -78,6 +83,7 @@ fn print_usage() {
          \x20 fig3          overlap-ratio sweep (paper Fig. 3)\n\
          \x20 grid          method × workers × tau grid (paper Figs. 4+5)\n\
          \x20 policy-sweep  sync-policy specs compared on one config\n\
+         \x20 bench         hot-path micro/macro benchmarks (BENCH_hotpath.json)\n\
          \x20 inspect       validate + time the AOT artifacts\n\
          \x20 datagen       preview synthetic-MNIST samples\n\
          \n\
@@ -152,6 +158,17 @@ fn schedule_options(a: &Args) -> Result<ScheduleOptions> {
         bail!("--resume needs --run-dir to resume from");
     }
     Ok(ScheduleOptions { jobs, run_dir, resume })
+}
+
+/// Schedule options for single-run subcommands (`train`): no `--jobs` flag,
+/// one trial in flight.
+fn schedule_options_single(a: &Args) -> Result<ScheduleOptions> {
+    let run_dir = a.opt_nonempty("run-dir").map(PathBuf::from);
+    let resume = a.flag("resume");
+    if resume && run_dir.is_none() {
+        bail!("--resume needs --run-dir to resume from");
+    }
+    Ok(ScheduleOptions { jobs: 1, run_dir, resume })
 }
 
 /// Policy specs are self-contained: when one is given, the classic
@@ -234,10 +251,36 @@ fn config_from_args(a: &Args) -> Result<ExperimentConfig> {
 
 fn cmd_train(argv: Vec<String>) -> Result<()> {
     let a = experiment_cli("deahes train", "run one experiment")
+        .opt("run-dir", "", "commit the run to <dir>/runs.jsonl (resumable like a sweep)")
+        .flag("resume", "skip the run if its fingerprint is already committed in --run-dir")
         .parse(&argv)
         .map_err(anyhow::Error::msg)?;
     let cfg = config_from_args(&a)?;
-    let result = sim::run(&cfg)?;
+    let opts = schedule_options_single(&a)?;
+    // 1-slot plan: same committed/resumable path as the sweeps, with the
+    // seed used verbatim so the numbers match a plan-less sim::run exactly.
+    let mut plan = deahes::schedule::TrialPlan::new();
+    plan.push_run("train", "train", &cfg);
+    let report = deahes::schedule::execute_plan(&plan, &opts)?;
+    let outcome = report
+        .outcomes
+        .into_iter()
+        .next()
+        .expect("1-slot plan yields one outcome");
+    if outcome.cached {
+        println!(
+            "resumed from {}: trial {} already committed (wall time 0.0s this invocation)",
+            opts.run_dir.as_ref().expect("cache hits need a run dir").display(),
+            outcome.record.fingerprint
+        );
+    }
+    let result = sim::RunResult {
+        log: outcome.record.log,
+        wall_secs: outcome.wall_secs,
+        sim: outcome.record.sim,
+        perf: outcome.perf,
+        worker_stats: outcome.record.worker_stats,
+    };
     println!(
         "method={} policy={} k={} tau={} rounds={} overlap={:.3} detector={} failure={}",
         cfg.method.name(),
@@ -429,6 +472,25 @@ fn cmd_policy_sweep(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench(argv: Vec<String>) -> Result<()> {
+    let a = Cli::new(
+        "deahes bench",
+        "hot-path micro/macro benchmarks; emits a BENCH_hotpath.json trajectory point",
+    )
+    .opt("out", "BENCH_hotpath.json", "output JSON path")
+    .flag("smoke", "tiny sizes: prove the harness runs and emits valid JSON")
+    .parse(&argv)
+    .map_err(anyhow::Error::msg)?;
+    // Bench output should be the numbers, not per-trial schedule logging.
+    logging::init(Level::Warn);
+    let bc = deahes::bench::BenchConfig { smoke: a.flag("smoke") };
+    let out = PathBuf::from(a.get("out"));
+    let doc = deahes::bench::run(&bc, &out)?;
+    println!("{}", deahes::bench::summary(&doc));
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
 fn cmd_inspect(argv: Vec<String>) -> Result<()> {
     use deahes::engine::xla::{OptimImpl, XlaEngine};
     use deahes::engine::{BatchRef, Engine};
@@ -467,13 +529,15 @@ fn cmd_inspect(argv: Vec<String>) -> Result<()> {
     let z = vec![1.0f32; n];
     let g = vec![0.01f32; n];
     let d = vec![0.5f32; n];
+    let mut gbuf = vec![0.0f32; n];
+    let mut dbuf = vec![0.0f32; n];
     for _ in 0..reps {
         let mut th = theta.clone();
         let (mut m, mut v) = (vec![0.0; n], vec![0.0; n]);
         let mut buf = vec![0.0; n];
         let mut tm = theta.clone();
-        engine.grad(&theta, BatchRef { x: &x_t, y1h: &y_t })?;
-        engine.grad_hess(&theta, BatchRef { x: &x_t, y1h: &y_t }, &z)?;
+        engine.grad(&theta, BatchRef { x: &x_t, y1h: &y_t }, &mut gbuf)?;
+        engine.grad_hess(&theta, BatchRef { x: &x_t, y1h: &y_t }, &z, &mut gbuf, &mut dbuf)?;
         engine.adahessian(&mut th, &g, &d, &mut m, &mut v, 1, 0.01)?;
         engine.momentum(&mut th, &g, &mut buf, 0.01)?;
         engine.sgd(&mut th, &g, 0.01)?;

@@ -58,6 +58,42 @@ pub fn adahessian_step(
     }
 }
 
+/// Fused AdamW update (Loshchilov & Hutter 2019: decoupled weight decay),
+/// bias-corrected; `t` is 1-based. One pass over every buffer:
+/// m = b1*m + (1-b1)*g ; v = b2*v + (1-b2)*g^2 ;
+/// theta -= lr * ( (m/(1-b1^t)) / (sqrt(v/(1-b2^t)) + eps) + wd*theta )
+///
+/// Pinned pointwise-identical to a three-pass reference (separate m, v and
+/// theta passes) by `tests/kernel_equivalence.rs` — element-wise updates
+/// commute, so fusing the passes changes no bits.
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_step(
+    theta: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: u64,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+) {
+    debug_assert!(t >= 1);
+    debug_assert_eq!(theta.len(), g.len());
+    debug_assert_eq!(theta.len(), m.len());
+    debug_assert_eq!(theta.len(), v.len());
+    let bc1 = 1.0 - beta1.powi(t as i32);
+    let bc2 = 1.0 - beta2.powi(t as i32);
+    for i in 0..theta.len() {
+        m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+        v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+        let mh = m[i] / bc1;
+        let vh = v[i] / bc2;
+        theta[i] -= lr * (mh / (vh.sqrt() + eps) + weight_decay * theta[i]);
+    }
+}
+
 /// Elastic pair update (paper eqs. 12-13); both sides read the OLD diff.
 pub fn elastic_step(tw: &mut [f32], tm: &mut [f32], h1: f32, h2: f32) {
     debug_assert_eq!(tw.len(), tm.len());
@@ -65,6 +101,20 @@ pub fn elastic_step(tw: &mut [f32], tm: &mut [f32], h1: f32, h2: f32) {
         let diff = tw[i] - tm[i];
         tw[i] -= h1 * diff;
         tm[i] += h2 * diff;
+    }
+}
+
+/// Worker-side half of the elastic update: pull `tw` toward a READ-ONLY
+/// master snapshot (eq. 12 alone). This is the kernel the double-buffered
+/// snapshot path serves — a worker can pull against a shared
+/// `Arc<Vec<f32>>` without taking a lock on, or copying, the master's
+/// buffer; the master applies its own eq. 13 half separately.
+/// `elastic_pull(tw, tm, h1)` is bit-identical to the `tw` side of
+/// `elastic_step(tw, tm, h1, _)` (pinned by `tests/kernel_equivalence.rs`).
+pub fn elastic_pull(tw: &mut [f32], tm: &[f32], h1: f32) {
+    debug_assert_eq!(tw.len(), tm.len());
+    for (w, &m) in tw.iter_mut().zip(tm) {
+        *w -= h1 * (*w - m);
     }
 }
 
@@ -129,6 +179,43 @@ mod tests {
             adahessian_step(&mut x, &g, &h, &mut m, &mut v, t, 0.05, 0.9, 0.999, 1e-8);
         }
         assert!(f(&x) < 0.05 * f0, "{} vs {}", f(&x), f0);
+    }
+
+    #[test]
+    fn adamw_first_step_matches_closed_form() {
+        let mut theta = vec![1.0f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        let g = 2.0f32;
+        adamw_step(&mut theta, &[g], &mut m, &mut v, 1, 0.1, 0.9, 0.999, 1e-8, 0.01);
+        // bias correction at t=1: mh=g, vh=g^2 -> adam term = sign(g)
+        let expected = 1.0 - 0.1 * (g / (g + 1e-8) + 0.01 * 1.0);
+        assert!((theta[0] - expected).abs() < 1e-5, "{} vs {expected}", theta[0]);
+    }
+
+    #[test]
+    fn adamw_weight_decay_shrinks_at_optimum() {
+        // zero gradient: only the decoupled decay acts
+        let mut theta = vec![2.0f32; 4];
+        let mut m = vec![0.0f32; 4];
+        let mut v = vec![0.0f32; 4];
+        for t in 1..=10 {
+            adamw_step(&mut theta, &[0.0; 4], &mut m, &mut v, t, 0.1, 0.9, 0.999, 1e-8, 0.1);
+        }
+        assert!(theta.iter().all(|&x| x < 2.0 && x > 0.0), "{theta:?}");
+    }
+
+    #[test]
+    fn elastic_pull_is_the_worker_half() {
+        let mut full_w = vec![2.0f32, -1.0, 0.5];
+        let mut full_m = vec![0.0f32, 1.0, 0.5];
+        let mut pull_w = full_w.clone();
+        let snapshot = full_m.clone();
+        elastic_step(&mut full_w, &mut full_m, 0.3, 0.1);
+        elastic_pull(&mut pull_w, &snapshot, 0.3);
+        for (a, b) in full_w.iter().zip(&pull_w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

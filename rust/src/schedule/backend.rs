@@ -43,6 +43,7 @@ pub fn run_trial(slot: &TrialSlot) -> Result<TrialOutcome> {
         record: TrialRecord::from_run(slot, &r),
         wall_secs: t0.elapsed().as_secs_f64(),
         cached: false,
+        perf: r.perf,
     })
 }
 

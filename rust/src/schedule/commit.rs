@@ -99,6 +99,7 @@ mod tests {
             },
             wall_secs: 0.0,
             cached,
+            perf: String::new(),
         }
     }
 

@@ -32,7 +32,7 @@ pub use backend::{SequentialBackend, ThreadPoolBackend, TrialBackend};
 pub use commit::Committer;
 pub use plan::{fingerprint, trial_seed, TrialPlan, TrialSlot};
 pub use record::{TrialOutcome, TrialRecord};
-pub use sink::{JsonlRunSink, NullSink, RunSink};
+pub use sink::{config_schema_hash, JsonlRunSink, NullSink, RunSink};
 
 use crate::{log_info, log_warn};
 use anyhow::{bail, Result};
@@ -88,7 +88,7 @@ pub fn execute_plan(plan: &TrialPlan, opts: &ScheduleOptions) -> Result<Schedule
             let path = dir.join(RUNS_FILE);
             if opts.resume {
                 cache = JsonlRunSink::load(&path)?;
-            } else if path.metadata().map(|m| m.len() > 0).unwrap_or(false) {
+            } else if sink::has_committed_records(&path) {
                 log_warn!(
                     "{} already holds committed trials; appending duplicates — \
                      pass --resume to skip them instead",
@@ -112,7 +112,10 @@ pub fn execute_plan(plan: &TrialPlan, opts: &ScheduleOptions) -> Result<Schedule
         match cache.remove(&slot.fingerprint) {
             Some(record) => {
                 skipped += 1;
-                committer.offer(index, TrialOutcome { record, wall_secs: 0.0, cached: true })?;
+                committer.offer(
+                    index,
+                    TrialOutcome { record, wall_secs: 0.0, cached: true, perf: String::new() },
+                )?;
             }
             None => to_run.push((index, slot.clone())),
         }

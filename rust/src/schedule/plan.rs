@@ -73,6 +73,26 @@ impl TrialPlan {
         }
     }
 
+    /// Append one slot for a single, fully-resolved run (`deahes train`):
+    /// unlike [`TrialPlan::push_cell`], the config's `seed` is used
+    /// **verbatim** — no per-repetition derivation — so a planned single
+    /// run commits exactly the numbers a direct `sim::run` of the same
+    /// config produces, while still getting a fingerprint for the run
+    /// sink (committed/resumable like any sweep trial).
+    pub fn push_run(&mut self, cell: &str, label: &str, cfg: &ExperimentConfig) {
+        let n = self.cell_counts.entry(cell.to_string()).or_insert(0);
+        *n += 1;
+        let key = if *n == 1 { cell.to_string() } else { format!("{cell}#{n}") };
+        let fingerprint = fingerprint(cfg, &key, 0);
+        self.slots.push(TrialSlot {
+            cell: key,
+            label: label.to_string(),
+            seed_index: 0,
+            config: cfg.clone(),
+            fingerprint,
+        });
+    }
+
     pub fn len(&self) -> usize {
         self.slots.len()
     }
@@ -161,6 +181,20 @@ mod tests {
         let mut other = cfg.clone();
         other.tau = 7;
         assert_ne!(a, fingerprint(&other, "c", 0));
+    }
+
+    #[test]
+    fn push_run_keeps_the_seed_verbatim() {
+        let cfg = ExperimentConfig { seed: 777, ..ExperimentConfig::default() };
+        let mut plan = TrialPlan::new();
+        plan.push_run("train", "train", &cfg);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.slots[0].config.seed, 777, "single runs must not re-derive the seed");
+        assert_eq!(plan.slots[0].seed_index, 0);
+        assert_eq!(plan.slots[0].fingerprint, fingerprint(&cfg, "train", 0));
+        // a second push of the same cell key stays a distinct cell
+        plan.push_run("train", "train", &cfg);
+        assert_eq!(plan.cells(), vec!["train", "train#2"]);
     }
 
     #[test]

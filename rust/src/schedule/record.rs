@@ -94,6 +94,10 @@ pub struct TrialOutcome {
     pub wall_secs: f64,
     /// True when the record was loaded from the run sink, not executed.
     pub cached: bool,
+    /// Host-specific engine perf text (PJRT call stats). In-memory only —
+    /// like wall time it never enters the sink — so `deahes train` routed
+    /// through a 1-slot plan can still print it. Empty for cache hits.
+    pub perf: String,
 }
 
 #[cfg(test)]

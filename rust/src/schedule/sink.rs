@@ -6,13 +6,173 @@
 //! in flight. [`JsonlRunSink::load`] reads a run file back as a
 //! fingerprint-keyed map for `--resume`, tolerating a truncated final line
 //! (the crash case it exists for).
+//!
+//! ## Schema header
+//!
+//! The first line of every run file is a one-line header carrying a hash of
+//! the serialized config/record **schema** (the key structure, not the
+//! values — see [`config_schema_hash`]). Opening or resuming against a file
+//! whose header names a different schema is a hard error: without it, a
+//! `runs.jsonl` written by an older build would silently resume under a
+//! newer config layout, with every renamed/removed field quietly falling
+//! back to its default. Headerless files (written before the header
+//! existed) still load, with a warning.
 
 use crate::schedule::record::TrialRecord;
 use crate::{log_info, log_warn};
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+
+/// Marker key identifying the header line of a run file.
+pub const HEADER_KEY: &str = "deahes_runs_header";
+
+/// Stable hash of the persisted schema: the sorted set of key *paths* in a
+/// fully-populated sample record JSON (every optional config key present,
+/// both engine kinds, one metrics round, the sim report). Adding, removing
+/// or renaming any serialized field — top-level or nested — changes the
+/// hash; changing a VALUE does not (value drift is already covered
+/// per-trial by the fingerprints).
+pub fn config_schema_hash() -> String {
+    use crate::config::{EngineKind, ExperimentConfig};
+    use crate::coordinator::simclock::SimClockReport;
+    use crate::metrics::{MetricsLog, RoundRecord};
+    use crate::util::json::Json;
+
+    fn collect(prefix: &str, j: &Json, out: &mut Vec<String>) {
+        match j {
+            Json::Obj(m) => {
+                for (k, v) in m {
+                    let path = format!("{prefix}.{k}");
+                    collect(&path, v, out);
+                    out.push(path);
+                }
+            }
+            // Arrays are homogeneous here; the first element carries the
+            // element schema (RoundRecord objects, worker-stat pairs).
+            Json::Arr(v) => {
+                if let Some(first) = v.first() {
+                    collect(&format!("{prefix}[]"), first, out);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // A sample record exercising every serialized key: the default-omitted
+    // `policy` key forced present, one round record, a non-empty sim report
+    // and worker-stat list.
+    let mut cfg = ExperimentConfig::default();
+    cfg.policy = Some("fixed(alpha=0.1)".into());
+    let mut log = MetricsLog::default();
+    log.push(RoundRecord {
+        round: 0,
+        test_acc: 0.0,
+        test_loss: 0.0,
+        train_loss: 0.0,
+        syncs_ok: 0,
+        syncs_failed: 0,
+        mean_h1: 0.0,
+        mean_h2: 0.0,
+        mean_score: 0.0,
+    });
+    let sample = TrialRecord {
+        fingerprint: String::new(),
+        cell: String::new(),
+        label: String::new(),
+        seed_index: 0,
+        config: cfg,
+        log,
+        sim: SimClockReport {
+            virtual_secs: 0.0,
+            master_utilization: 0.0,
+            mean_sync_wait: 0.0,
+            p95_style_max_wait: 0.0,
+            rounds: 0,
+        },
+        worker_stats: vec![(0, 0)],
+    };
+    let mut keys: Vec<String> = Vec::new();
+    collect("record", &sample.to_json(), &mut keys);
+    // The default engine is xla; cover the quadratic variant's keys too.
+    let quad_cfg = ExperimentConfig {
+        engine: EngineKind::Quadratic { dim: 1, heterogeneity: 0.0, noise: 0.0 },
+        ..ExperimentConfig::default()
+    };
+    collect("config.quadratic", &quad_cfg.to_json(), &mut keys);
+    keys.sort();
+    format!("{:016x}", crate::schedule::plan::fnv1a64(keys.join("\n").as_bytes()))
+}
+
+/// The header line for the current schema.
+fn header_line() -> String {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        (HEADER_KEY, Json::num(1.0)),
+        ("schema", Json::str(&config_schema_hash())),
+    ])
+    .to_string_compact()
+}
+
+/// If `line` is a header, return its schema hash.
+fn parse_header(line: &str) -> Option<String> {
+    let j = crate::util::json::Json::parse(line).ok()?;
+    if *j.get(HEADER_KEY) == crate::util::json::Json::Null {
+        return None;
+    }
+    Some(j.get("schema").as_str().unwrap_or("").to_string())
+}
+
+/// First non-empty line of `path` (None for a missing or blank file),
+/// read through a buffered reader — run files can be large and callers
+/// usually only need the header line.
+fn first_content_line(path: &Path) -> Result<Option<String>> {
+    use std::io::BufRead as _;
+    let file = match std::fs::File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading run sink {}", path.display()))
+        }
+    };
+    for line in std::io::BufReader::new(file).lines() {
+        let line = line.with_context(|| format!("reading run sink {}", path.display()))?;
+        if !line.trim().is_empty() {
+            return Ok(Some(line));
+        }
+    }
+    Ok(None)
+}
+
+/// Cheap check whether `path` holds at least one committed record (any
+/// non-header content line). Never errors: IO/schema problems surface when
+/// the sink is actually opened or loaded.
+pub fn has_committed_records(path: &Path) -> bool {
+    use std::io::BufRead as _;
+    let Ok(file) = std::fs::File::open(path) else { return false };
+    for line in std::io::BufReader::new(file).lines() {
+        let Ok(line) = line else { return false };
+        if !line.trim().is_empty() && parse_header(&line).is_none() {
+            return true;
+        }
+    }
+    false
+}
+
+/// Hard-error when `found` names a schema other than the current one.
+fn check_schema(path: &Path, found: &str) -> Result<()> {
+    let ours = config_schema_hash();
+    if found != ours {
+        bail!(
+            "run sink {} was written with config schema {found}, this build uses {ours}: \
+             refusing to mix schema versions (start a fresh --run-dir, or re-run the sweep \
+             with the build that wrote it)",
+            path.display()
+        );
+    }
+    Ok(())
+}
 
 pub trait RunSink {
     /// Called once per trial, in plan order.
@@ -30,13 +190,16 @@ impl RunSink for NullSink {
 }
 
 /// Append-only JSONL file, one committed trial per line.
+#[derive(Debug)]
 pub struct JsonlRunSink {
     path: PathBuf,
     file: std::fs::File,
 }
 
 impl JsonlRunSink {
-    /// Open (creating parents and the file as needed) for appending.
+    /// Open (creating parents and the file as needed) for appending. A new
+    /// (or empty) file gets the schema header as its first line; appending
+    /// to a file whose header names a different schema is an error.
     pub fn open(path: &Path) -> Result<JsonlRunSink> {
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
@@ -44,11 +207,29 @@ impl JsonlRunSink {
                     .with_context(|| format!("creating {}", parent.display()))?;
             }
         }
-        let file = std::fs::OpenOptions::new()
+        let first = first_content_line(path)?;
+        match &first {
+            None => {}
+            Some(first) => match parse_header(first) {
+                Some(found) => check_schema(path, &found)?,
+                None => log_warn!(
+                    "run sink {}: no schema header (written by an older build); appending \
+                     without schema verification",
+                    path.display()
+                ),
+            },
+        }
+        let mut file = std::fs::OpenOptions::new()
             .create(true)
             .append(true)
             .open(path)
             .with_context(|| format!("opening run sink {}", path.display()))?;
+        if first.is_none() {
+            writeln!(file, "{}", header_line())
+                .with_context(|| format!("writing header to {}", path.display()))?;
+            file.flush()
+                .with_context(|| format!("flushing {}", path.display()))?;
+        }
         Ok(JsonlRunSink { path: path.to_path_buf(), file })
     }
 
@@ -58,7 +239,9 @@ impl JsonlRunSink {
 
     /// Read a run file back as fingerprint -> record. Missing file means an
     /// empty map; a malformed line (crash mid-append) is skipped with a
-    /// warning rather than poisoning the resume.
+    /// warning rather than poisoning the resume. A header naming a
+    /// different config schema is a hard error — resuming across schema
+    /// versions would silently reinterpret the stored configs.
     pub fn load(path: &Path) -> Result<BTreeMap<String, TrialRecord>> {
         let mut out = BTreeMap::new();
         let text = match std::fs::read_to_string(path) {
@@ -69,13 +252,29 @@ impl JsonlRunSink {
             }
         };
         let mut dropped = 0usize;
+        let mut saw_header = false;
         for (lineno, line) in text.lines().enumerate() {
             if line.trim().is_empty() {
                 continue;
             }
-            let parsed = crate::util::json::Json::parse(line)
-                .ok()
-                .and_then(|j| TrialRecord::from_json(&j).ok());
+            // One JSON parse per line: the parsed value serves both the
+            // header check and the record decode.
+            let json = crate::util::json::Json::parse(line).ok();
+            if let Some(j) = &json {
+                if *j.get(HEADER_KEY) != crate::util::json::Json::Null {
+                    check_schema(path, j.get("schema").as_str().unwrap_or(""))?;
+                    saw_header = true;
+                    continue;
+                }
+            }
+            if !saw_header && out.is_empty() && dropped == 0 && lineno == 0 {
+                log_warn!(
+                    "run sink {}: no schema header (written by an older build); resuming \
+                     without schema verification",
+                    path.display()
+                );
+            }
+            let parsed = json.and_then(|j| TrialRecord::from_json(&j).ok());
             match parsed {
                 Some(rec) => {
                     out.insert(rec.fingerprint.clone(), rec);
@@ -181,5 +380,71 @@ mod tests {
     fn load_missing_file_is_empty() {
         let map = JsonlRunSink::load(Path::new("/nonexistent/deahes-runs.jsonl")).unwrap();
         assert!(map.is_empty());
+    }
+
+    #[test]
+    fn new_sink_starts_with_a_schema_header() {
+        let path = tmp("header.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut sink = JsonlRunSink::open(&path).unwrap();
+            sink.append(&rec("aa")).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let first = text.lines().next().unwrap();
+        assert_eq!(parse_header(first).as_deref(), Some(config_schema_hash().as_str()));
+        // header is not a record
+        let map = JsonlRunSink::load(&path).unwrap();
+        assert_eq!(map.len(), 1);
+        // reopening the same file appends, not re-headers
+        {
+            let mut sink = JsonlRunSink::open(&path).unwrap();
+            sink.append(&rec("bb")).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().filter(|l| parse_header(l).is_some()).count(), 1);
+        assert_eq!(JsonlRunSink::load(&path).unwrap().len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mismatched_schema_is_rejected_on_load_and_open() {
+        let path = tmp("schema-mismatch.jsonl");
+        let _ = std::fs::remove_file(&path);
+        std::fs::write(
+            &path,
+            format!("{{\"{HEADER_KEY}\":1,\"schema\":\"0123456789abcdef\"}}\n"),
+        )
+        .unwrap();
+        let err = JsonlRunSink::load(&path).unwrap_err().to_string();
+        assert!(err.contains("schema"), "{err}");
+        let err = JsonlRunSink::open(&path).unwrap_err().to_string();
+        assert!(err.contains("schema"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn headerless_legacy_files_still_load() {
+        let path = tmp("legacy.jsonl");
+        let _ = std::fs::remove_file(&path);
+        // a legacy file: records only, no header line
+        std::fs::write(&path, format!("{}\n", rec("aa").to_json().to_string_compact())).unwrap();
+        let map = JsonlRunSink::load(&path).unwrap();
+        assert_eq!(map.len(), 1);
+        // appending to it works too (warns, does not inject a header)
+        {
+            let mut sink = JsonlRunSink::open(&path).unwrap();
+            sink.append(&rec("bb")).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().all(|l| parse_header(l).is_none()));
+        assert_eq!(JsonlRunSink::load(&path).unwrap().len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn schema_hash_is_stable_within_a_build() {
+        assert_eq!(config_schema_hash(), config_schema_hash());
+        assert_eq!(config_schema_hash().len(), 16);
     }
 }

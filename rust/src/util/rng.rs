@@ -125,16 +125,22 @@ impl Rng {
 
     /// Rademacher vector (+1/-1), the Hutchinson probe.
     pub fn rademacher(&mut self, n: usize) -> Vec<f32> {
-        let mut v = Vec::with_capacity(n);
+        let mut v = vec![0.0; n];
+        self.rademacher_into(&mut v);
+        v
+    }
+
+    /// Fill `out` with a Rademacher (+1/-1) probe. Draw-for-draw identical
+    /// to [`Rng::rademacher`] (hot-path variant: no allocation).
+    pub fn rademacher_into(&mut self, out: &mut [f32]) {
         let mut bits = 0u64;
-        for i in 0..n {
+        for (i, o) in out.iter_mut().enumerate() {
             if i % 64 == 0 {
                 bits = self.next_u64();
             }
-            v.push(if bits & 1 == 1 { 1.0 } else { -1.0 });
+            *o = if bits & 1 == 1 { 1.0 } else { -1.0 };
             bits >>= 1;
         }
-        v
     }
 
     /// In-place Fisher-Yates shuffle.
@@ -147,9 +153,18 @@ impl Rng {
 
     /// A random permutation of 0..n.
     pub fn permutation(&mut self, n: usize) -> Vec<usize> {
-        let mut p: Vec<usize> = (0..n).collect();
-        self.shuffle(&mut p);
+        let mut p = Vec::with_capacity(n);
+        self.permutation_into(&mut p, n);
         p
+    }
+
+    /// Write a random permutation of 0..n into `out` (cleared first).
+    /// Draw-for-draw identical to [`Rng::permutation`]; reusing one buffer
+    /// across rounds keeps the driver's round loop allocation-free.
+    pub fn permutation_into(&mut self, out: &mut Vec<usize>, n: usize) {
+        out.clear();
+        out.extend(0..n);
+        self.shuffle(out);
     }
 
     /// Sample `k` distinct indices from 0..n (partial Fisher-Yates).
@@ -240,6 +255,22 @@ mod tests {
         let mut p = r.permutation(100);
         p.sort_unstable();
         assert_eq!(p, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones() {
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        let v = a.rademacher(130);
+        let mut w = vec![0.0f32; 130];
+        b.rademacher_into(&mut w);
+        assert_eq!(v, w);
+        let p = a.permutation(37);
+        let mut q = Vec::new();
+        b.permutation_into(&mut q, 37);
+        assert_eq!(p, q);
+        // and the streams stayed aligned
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

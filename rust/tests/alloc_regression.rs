@@ -1,0 +1,201 @@
+//! Allocation regression: the quad-engine steady-state round is heap-free.
+//!
+//! A counting global allocator tallies every `alloc`/`realloc` made while a
+//! thread-local tracking flag is set. The test warms the full coordinator
+//! round (fused worker steps through the scratch arena, gossip estimate,
+//! score pipeline, policy decision, elastic sync, snapshot publish) until
+//! every buffer has reached steady state — scratch sized, score ring at
+//! capacity, snapshot pool saturated — then asserts that further rounds
+//! allocate NOTHING. Any hot-path regression (a fresh `Vec` per gradient, a
+//! per-sync `theta.clone()`, a growing ring) trips this immediately.
+//!
+//! Scope: the steady-state round loop itself. Evaluation/metrics rounds may
+//! allocate (amortized `MetricsLog` growth) and are exercised elsewhere.
+
+use deahes::config::GossipMode;
+use deahes::coordinator::gossip::GossipBoard;
+use deahes::coordinator::master::MasterState;
+use deahes::coordinator::worker::WorkerState;
+use deahes::elastic::policy::{self, SyncContext};
+use deahes::elastic::score::geometric_weights;
+use deahes::engine::quad::QuadraticEngine;
+use deahes::optim::{OptState, Optimizer};
+use deahes::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+std::thread_local! {
+    static TRACK: Cell<bool> = const { Cell::new(false) };
+}
+
+struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if TRACK.try_with(|t| t.get()).unwrap_or(false) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if TRACK.try_with(|t| t.get()).unwrap_or(false) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAllocator = CountingAllocator;
+
+/// Count allocations made by `f` on this thread.
+fn count_allocs<F: FnOnce()>(f: F) -> u64 {
+    TRACK.with(|t| t.set(true));
+    let before = ALLOCS.load(Ordering::Relaxed);
+    f();
+    let after = ALLOCS.load(Ordering::Relaxed);
+    TRACK.with(|t| t.set(false));
+    after - before
+}
+
+/// One full communication round over the coordinator state machines —
+/// exactly the work `run_sequential` does per round, minus eval/metrics.
+#[allow(clippy::too_many_arguments)]
+fn round(
+    engine: &mut QuadraticEngine,
+    workers: &mut [WorkerState],
+    master: &mut MasterState,
+    gossip: &GossipBoard,
+    order_rng: &mut Rng,
+    gossip_rng: &mut Rng,
+    order: &mut Vec<usize>,
+    tau: usize,
+    round_no: u64,
+) {
+    order_rng.permutation_into(order, workers.len());
+    for &w in order.iter() {
+        workers[w].local_round(engine, tau).unwrap();
+        let (_, est) = gossip.estimate(w, gossip_rng);
+        let score = workers[w].observe_and_score(&est);
+        let mut tw = std::mem::take(&mut workers[w].theta);
+        let ctx = SyncContext {
+            worker: w,
+            round: round_no,
+            raw_score: score,
+            missed: workers[w].missed,
+            alpha: 0.1,
+        };
+        master.serve_sync(engine, &ctx, &mut tw).unwrap();
+        workers[w].complete_sync(tw);
+        gossip.publish(w, round_no + 1, master.publish_snapshot());
+    }
+}
+
+fn build(k: usize, n: usize, opt: Optimizer) -> (
+    QuadraticEngine,
+    Vec<WorkerState>,
+    MasterState,
+    GossipBoard,
+    Rng,
+    Rng,
+) {
+    let engine = QuadraticEngine::new(n, 77, 0, 0.2, 0.02);
+    let workers: Vec<WorkerState> = (0..k)
+        .map(|i| {
+            WorkerState::new(
+                i,
+                vec![0.0; n],
+                OptState::new(opt, n),
+                0.05,
+                None,
+                geometric_weights(4, 0.5),
+                Rng::new(77).derive(0x2AD).derive(i as u64),
+            )
+        })
+        .collect();
+    let master = MasterState::new(
+        vec![0.0; n],
+        policy::parse("dynamic(alpha=0.1,knee=-0.05,detector=paper-sign)").unwrap(),
+        k,
+    );
+    let gossip = GossipBoard::new(k, Arc::new(vec![0.0; n]), GossipMode::Peers);
+    (engine, workers, master, gossip, Rng::new(1), Rng::new(2))
+}
+
+fn assert_steady_state_round_is_alloc_free(opt: Optimizer, label: &str) {
+    let (k, n, tau) = (4, 256, 2);
+    let (mut engine, mut workers, mut master, gossip, mut order_rng, mut gossip_rng) =
+        build(k, n, opt);
+    let mut order: Vec<usize> = Vec::with_capacity(k);
+    // Warm-up: fills the score rings (p+1 entries), saturates the snapshot
+    // pool, and settles every Vec at its final capacity.
+    for r in 0..10u64 {
+        round(
+            &mut engine,
+            &mut workers,
+            &mut master,
+            &gossip,
+            &mut order_rng,
+            &mut gossip_rng,
+            &mut order,
+            tau,
+            r,
+        );
+    }
+    let allocs = count_allocs(|| {
+        for r in 10..15u64 {
+            round(
+                &mut engine,
+                &mut workers,
+                &mut master,
+                &gossip,
+                &mut order_rng,
+                &mut gossip_rng,
+                &mut order,
+                tau,
+                r,
+            );
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "{label}: steady-state rounds must not allocate ({allocs} allocations in 5 rounds)"
+    );
+    // sanity: the run actually trained and synced
+    assert!(master.total_syncs >= 15 * k as u64);
+    assert!(workers.iter().all(|w| w.steps >= 15 * tau as u64));
+}
+
+#[test]
+fn sgd_steady_state_round_allocates_nothing() {
+    assert_steady_state_round_is_alloc_free(Optimizer::Sgd, "sgd");
+}
+
+#[test]
+fn momentum_steady_state_round_allocates_nothing() {
+    assert_steady_state_round_is_alloc_free(Optimizer::Momentum, "momentum");
+}
+
+#[test]
+fn adahessian_steady_state_round_allocates_nothing() {
+    assert_steady_state_round_is_alloc_free(Optimizer::AdaHessian, "adahessian");
+}
+
+/// The counting harness itself works: an intentional allocation is seen.
+#[test]
+fn harness_detects_allocations() {
+    let seen = count_allocs(|| {
+        let v: Vec<u8> = Vec::with_capacity(1024);
+        std::hint::black_box(&v);
+    });
+    assert!(seen >= 1, "counting allocator failed to observe a Vec allocation");
+}

@@ -1,0 +1,213 @@
+//! Equivalence regression for the zero-allocation hot-path redesign.
+//!
+//! The fused engine steps (`sgd_step`, `momentum_step`, `adahessian_step`)
+//! and the new fused kernels (`adamw_step`, `elastic_pull`) must be
+//! pointwise **bit-identical** to the pre-change multi-pass compositions
+//! (gradient into a buffer, then the separate update kernel). Two engines
+//! constructed from the same seed share identical RNG streams, so running
+//! one through the fused path and one through the composed path and
+//! comparing every parameter bit after every step pins the contract the
+//! schedule-determinism and driver-parity suites rely on.
+
+use deahes::engine::quad::QuadraticEngine;
+use deahes::engine::{BatchRef, Engine, WorkerScratch};
+use deahes::optim::native;
+use deahes::util::rng::Rng;
+
+fn empty() -> BatchRef<'static> {
+    BatchRef { x: &[], y1h: &[] }
+}
+
+fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit divergence at index {i}: {x} vs {y}");
+    }
+}
+
+/// Engines with noise exercise the RNG-ordering half of the contract;
+/// noise-free engines exercise the vectorizable fast path. Test both.
+const NOISES: [f32; 2] = [0.0, 0.05];
+
+#[test]
+fn fused_sgd_step_is_bit_identical_to_grad_plus_sgd() {
+    for noise in NOISES {
+        let n = 96;
+        let mut fused = QuadraticEngine::new(n, 41, 1, 0.3, noise);
+        let mut composed = QuadraticEngine::new(n, 41, 1, 0.3, noise);
+        let mut theta_f = vec![0.7f32; n];
+        let mut theta_c = vec![0.7f32; n];
+        let mut scratch = WorkerScratch::new(n);
+        let mut g = vec![0.0f32; n];
+        for step in 0..50 {
+            let lf = fused.sgd_step(&mut theta_f, empty(), 0.03, &mut scratch).unwrap();
+            let lc = composed.grad(&theta_c, empty(), &mut g).unwrap();
+            composed.sgd(&mut theta_c, &g, 0.03).unwrap();
+            assert_eq!(lf.to_bits(), lc.to_bits(), "loss bits, noise={noise}, step {step}");
+            assert_bits(&theta_f, &theta_c, &format!("sgd theta, noise={noise}, step {step}"));
+        }
+    }
+}
+
+#[test]
+fn fused_momentum_step_is_bit_identical_to_grad_plus_momentum() {
+    for noise in NOISES {
+        let n = 64;
+        let mut fused = QuadraticEngine::new(n, 42, 2, 0.3, noise);
+        let mut composed = QuadraticEngine::new(n, 42, 2, 0.3, noise);
+        let mut theta_f = vec![-0.4f32; n];
+        let mut theta_c = vec![-0.4f32; n];
+        let mut buf_f = vec![0.0f32; n];
+        let mut buf_c = vec![0.0f32; n];
+        let mut scratch = WorkerScratch::new(n);
+        let mut g = vec![0.0f32; n];
+        for step in 0..50 {
+            let lf = fused
+                .momentum_step(&mut theta_f, empty(), &mut buf_f, 0.02, &mut scratch)
+                .unwrap();
+            let lc = composed.grad(&theta_c, empty(), &mut g).unwrap();
+            composed.momentum(&mut theta_c, &g, &mut buf_c, 0.02).unwrap();
+            assert_eq!(lf.to_bits(), lc.to_bits(), "loss bits, noise={noise}, step {step}");
+            assert_bits(&theta_f, &theta_c, &format!("momentum theta, noise={noise}"));
+            assert_bits(&buf_f, &buf_c, &format!("momentum buf, noise={noise}"));
+        }
+    }
+}
+
+#[test]
+fn fused_adahessian_step_is_bit_identical_to_grad_hess_plus_adahessian() {
+    for noise in NOISES {
+        let n = 64;
+        let mut fused = QuadraticEngine::new(n, 43, 3, 0.3, noise);
+        let mut composed = QuadraticEngine::new(n, 43, 3, 0.3, noise);
+        let mut theta_f = vec![0.9f32; n];
+        let mut theta_c = vec![0.9f32; n];
+        let (mut mf, mut vf) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let (mut mc, mut vc) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let mut scratch = WorkerScratch::new(n);
+        let mut g = vec![0.0f32; n];
+        let mut d = vec![0.0f32; n];
+        // identical probe streams for both paths
+        let mut probe_f = Rng::new(99);
+        let mut probe_c = Rng::new(99);
+        for t in 1..=40 {
+            let zf = probe_f.rademacher(n);
+            let zc = probe_c.rademacher(n);
+            let lf = fused
+                .adahessian_step(
+                    &mut theta_f,
+                    empty(),
+                    &zf,
+                    &mut mf,
+                    &mut vf,
+                    t,
+                    0.02,
+                    &mut scratch,
+                )
+                .unwrap();
+            let lc = composed.grad_hess(&theta_c, empty(), &zc, &mut g, &mut d).unwrap();
+            composed.adahessian(&mut theta_c, &g, &d, &mut mc, &mut vc, t, 0.02).unwrap();
+            assert_eq!(lf.to_bits(), lc.to_bits(), "loss bits, noise={noise}, t={t}");
+            assert_bits(&theta_f, &theta_c, &format!("ada theta, noise={noise}"));
+            assert_bits(&mf, &mc, "ada m");
+            assert_bits(&vf, &vc, "ada v");
+        }
+    }
+}
+
+/// The fused AdamW kernel against an explicit three-pass reference
+/// (moment pass, variance pass, parameter pass over separate loops).
+#[test]
+fn fused_adamw_matches_three_pass_reference() {
+    let n = 128;
+    let (beta1, beta2, eps, wd, lr) = (0.9f32, 0.999f32, 1e-8f32, 0.01f32, 0.05f32);
+    let mut rng = Rng::new(5);
+    let mut theta_a: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut theta_b = theta_a.clone();
+    let (mut ma, mut va) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let (mut mb, mut vb) = (vec![0.0f32; n], vec![0.0f32; n]);
+    for t in 1..=30 {
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        native::adamw_step(&mut theta_a, &g, &mut ma, &mut va, t, lr, beta1, beta2, eps, wd);
+        // three-pass reference
+        let bc1 = 1.0 - beta1.powi(t as i32);
+        let bc2 = 1.0 - beta2.powi(t as i32);
+        for i in 0..n {
+            mb[i] = beta1 * mb[i] + (1.0 - beta1) * g[i];
+        }
+        for i in 0..n {
+            vb[i] = beta2 * vb[i] + (1.0 - beta2) * g[i] * g[i];
+        }
+        for i in 0..n {
+            let mh = mb[i] / bc1;
+            let vh = vb[i] / bc2;
+            theta_b[i] -= lr * (mh / (vh.sqrt() + eps) + wd * theta_b[i]);
+        }
+        assert_bits(&theta_a, &theta_b, "adamw theta");
+        assert_bits(&ma, &mb, "adamw m");
+        assert_bits(&va, &vb, "adamw v");
+    }
+}
+
+/// `elastic_pull` is exactly the worker half of the pair update, and the
+/// pair update through the engine matches the native kernel.
+#[test]
+fn elastic_pull_matches_pair_update_worker_side() {
+    let n = 77;
+    let mut rng = Rng::new(6);
+    let tw0: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+    let tm0: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+    for h1 in [0.0f32, 0.1, 0.5, 1.0] {
+        let mut pair_w = tw0.clone();
+        let mut pair_m = tm0.clone();
+        native::elastic_step(&mut pair_w, &mut pair_m, h1, 0.1);
+        let mut pull_w = tw0.clone();
+        native::elastic_pull(&mut pull_w, &tm0, h1);
+        assert_bits(&pair_w, &pull_w, &format!("elastic h1={h1}"));
+        // and through the engine trait
+        let mut e = QuadraticEngine::new(n, 7, 0, 0.0, 0.0);
+        let mut ew = tw0.clone();
+        let mut em = tm0.clone();
+        e.elastic(&mut ew, &mut em, h1, 0.1).unwrap();
+        assert_bits(&ew, &pair_w, "engine elastic tw");
+        assert_bits(&em, &pair_m, "engine elastic tm");
+    }
+}
+
+/// A full worker-state round through the fused path matches a manual
+/// composed emulation bit-for-bit — the whole-round contract the drivers
+/// depend on.
+#[test]
+fn worker_round_is_bit_identical_to_composed_emulation() {
+    use deahes::coordinator::worker::WorkerState;
+    use deahes::elastic::score::geometric_weights;
+    use deahes::optim::OptState;
+    use deahes::optim::Optimizer;
+
+    let n = 48;
+    let tau = 3;
+    let mut engine_f = QuadraticEngine::new(n, 44, 1, 0.2, 0.05);
+    let mut engine_c = QuadraticEngine::new(n, 44, 1, 0.2, 0.05);
+    let mut ws = WorkerState::new(
+        0,
+        vec![0.25; n],
+        OptState::new(Optimizer::Sgd, n),
+        0.05,
+        None,
+        geometric_weights(4, 0.5),
+        Rng::new(9),
+    );
+    let mut theta_c = vec![0.25f32; n];
+    let mut g = vec![0.0f32; n];
+    for round in 0..10 {
+        let loss_f = ws.local_round(&mut engine_f, tau).unwrap();
+        let mut loss_sum = 0.0f32;
+        for _ in 0..tau {
+            loss_sum += engine_c.grad(&theta_c, empty(), &mut g).unwrap();
+            engine_c.sgd(&mut theta_c, &g, 0.05).unwrap();
+        }
+        let loss_c = loss_sum / tau as f32;
+        assert_eq!(loss_f.to_bits(), loss_c.to_bits(), "round {round} loss");
+        assert_bits(&ws.theta, &theta_c, &format!("round {round} theta"));
+    }
+}

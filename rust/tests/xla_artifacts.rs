@@ -125,9 +125,13 @@ fn grad_hess_consistent_with_grad() {
     let theta = m.init_theta(3);
     let (x, y) = batch(&m, &mut rng);
     let z = rng.rademacher(m.param_count);
-    let (l1, g1) = engine.grad(&theta, BatchRef { x: &x, y1h: &y }).unwrap();
-    let (l2, g2, d) = engine
-        .grad_hess(&theta, BatchRef { x: &x, y1h: &y }, &z)
+    let n = m.param_count;
+    let mut g1 = vec![0.0f32; n];
+    let l1 = engine.grad(&theta, BatchRef { x: &x, y1h: &y }, &mut g1).unwrap();
+    let mut g2 = vec![0.0f32; n];
+    let mut d = vec![0.0f32; n];
+    let l2 = engine
+        .grad_hess(&theta, BatchRef { x: &x, y1h: &y }, &z, &mut g2, &mut d)
         .unwrap();
     assert!((l1 - l2).abs() < 1e-4, "loss mismatch {l1} vs {l2}");
     assert_close(&g1, &g2, 1e-4, "grad");
@@ -154,18 +158,20 @@ fn grad_matches_finite_difference_spot_check() {
     let mut rng = Rng::new(4);
     let theta = m.init_theta(5);
     let (x, y) = batch(&m, &mut rng);
-    let (_, g) = engine.grad(&theta, BatchRef { x: &x, y1h: &y }).unwrap();
+    let mut g = vec![0.0f32; m.param_count];
+    engine.grad(&theta, BatchRef { x: &x, y1h: &y }, &mut g).unwrap();
     // central differences on a few random coordinates
     let mut idx_rng = Rng::new(6);
+    let mut scratch_g = vec![0.0f32; m.param_count];
     for _ in 0..4 {
         let i = idx_rng.usize_below(m.param_count);
         let eps = 2e-3f32;
         let mut tp = theta.clone();
         tp[i] += eps;
-        let (lp, _) = engine.grad(&tp, BatchRef { x: &x, y1h: &y }).unwrap();
+        let lp = engine.grad(&tp, BatchRef { x: &x, y1h: &y }, &mut scratch_g).unwrap();
         let mut tm = theta.clone();
         tm[i] -= eps;
-        let (lm, _) = engine.grad(&tm, BatchRef { x: &x, y1h: &y }).unwrap();
+        let lm = engine.grad(&tm, BatchRef { x: &x, y1h: &y }, &mut scratch_g).unwrap();
         let fd = (lp - lm) / (2.0 * eps);
         let tol = 0.1 * fd.abs().max(0.02);
         assert!(
@@ -209,10 +215,12 @@ fn native_opt_engine_matches_kernel_engine_over_a_round() {
     let mut tn = tk.clone();
     let (mut mk, mut vk) = (vec![0.0; n], vec![0.0; n]);
     let (mut mn, mut vn) = (vec![0.0; n], vec![0.0; n]);
+    let (mut gk, mut dk) = (vec![0.0f32; n], vec![0.0f32; n]);
+    let (mut gn, mut dn) = (vec![0.0f32; n], vec![0.0f32; n]);
     for t in 1..=3u64 {
-        let (_, gk, dk) = ek.grad_hess(&tk, BatchRef { x: &x, y1h: &y }, &z).unwrap();
+        ek.grad_hess(&tk, BatchRef { x: &x, y1h: &y }, &z, &mut gk, &mut dk).unwrap();
         ek.adahessian(&mut tk, &gk, &dk, &mut mk, &mut vk, t, 0.05).unwrap();
-        let (_, gn, dn) = en.grad_hess(&tn, BatchRef { x: &x, y1h: &y }, &z).unwrap();
+        en.grad_hess(&tn, BatchRef { x: &x, y1h: &y }, &z, &mut gn, &mut dn).unwrap();
         en.adahessian(&mut tn, &gn, &dn, &mut mn, &mut vn, t, 0.05).unwrap();
     }
     // Tolerance note: the kernel computes bias correction as exp(t·ln β)
