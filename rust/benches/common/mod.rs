@@ -64,6 +64,7 @@ pub fn schedule_options() -> ScheduleOptions {
         jobs: env_u64("BENCH_JOBS", 1).max(1) as usize,
         resume: resume_requested && run_dir.is_some(),
         run_dir,
+        ..ScheduleOptions::default()
     }
 }
 

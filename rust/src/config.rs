@@ -152,15 +152,30 @@ impl ExperimentConfig {
         if !(0.0..1.0).contains(&self.overlap_ratio) {
             bail!("overlap_ratio must be in [0,1)");
         }
-        if !(0.0..=1.0).contains(&self.alpha) {
-            bail!("alpha must be in [0,1]");
+        if !(self.alpha > 0.0 && self.alpha <= 1.0) {
+            bail!(
+                "alpha must be in (0,1] — alpha=0 disables elastic averaging entirely \
+                 (every preset degenerates to isolated local SGD)"
+            );
         }
         if self.knee >= 0.0 {
             bail!("knee must be negative (paper: k < 0)");
         }
-        if let Some(spec) = &self.policy {
-            crate::elastic::policy::validate(spec)
-                .with_context(|| format!("config: bad policy spec '{spec}'"))?;
+        match &self.policy {
+            Some(spec) => crate::elastic::policy::validate(spec)
+                .with_context(|| format!("config: bad policy spec '{spec}'"))?,
+            // The preset alias must build too (e.g. alpha=0 yields a spec
+            // the registry rejects as degenerate) — catch it at validation
+            // time instead of deep inside Setup::build.
+            None => {
+                let spec = self.effective_policy_spec();
+                crate::elastic::policy::validate(&spec).with_context(|| {
+                    format!(
+                        "config: method preset '{}' resolves to invalid policy spec '{spec}'",
+                        self.method.name()
+                    )
+                })?
+            }
         }
         if self.lr <= 0.0 {
             bail!("lr must be positive");
@@ -382,6 +397,12 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.overlap_ratio = 1.0;
         assert!(c.validate().is_err());
+        // alpha=0 is degenerate everywhere (no elastic coupling): rejected
+        // with the direct range error, not a confusing preset-spec one.
+        let mut c = ExperimentConfig::default();
+        c.alpha = 0.0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("(0,1]"), "{err}");
     }
 
     /// Legacy fingerprint stability: a preset-driven config (policy=None)

@@ -1,0 +1,223 @@
+//! Mid-trial checkpoint state: a consistent cut of a running simulation at
+//! a communication-round boundary.
+//!
+//! The paper's premise is tolerating *worker* failure mid-training; this
+//! module is the harness-level mirror — tolerating failure of the harness
+//! itself mid-*trial*. Following Zhang's EASGD treatment (the elastic
+//! center θ̃ is the durable state of the system), a [`RunCheckpoint`]
+//! captures exactly what a round boundary owns:
+//!
+//!  * the master aggregate θ̃, per-worker sync stats and the policy's
+//!    cross-sync state ([`MasterState::snapshot`](crate::coordinator::master::MasterState::snapshot));
+//!  * every worker replica θ with its optimizer state, miss counter,
+//!    score-tracker ring, probe RNG and batcher cursor
+//!    ([`WorkerState::snapshot`](crate::coordinator::worker::WorkerState::snapshot));
+//!  * the gossip board entries (stamp round + estimate per worker);
+//!  * engine-internal noise RNG streams and the driver's own RNG streams;
+//!  * the metric log and per-round sync counts accumulated so far (the
+//!    virtual clock is replayed from the counts on completion).
+//!
+//! All floating-point payloads are hex bit-blobs (`util::bits`), so a
+//! restore continues **bit-identically** on engines without host-anchored
+//! timing (the quadratic engine — pinned by `tests/checkpoint_resume.rs`).
+//! A checkpoint is driver-specific: the sequential driver shares one
+//! engine and two RNG streams, the threaded driver keeps them per thread,
+//! so each driver validates the `driver` tag before restoring.
+
+use crate::metrics::MetricsLog;
+use crate::util::bits;
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+
+/// Format version of the checkpoint payload itself (bumped when the state
+/// layout changes; a mismatch invalidates the checkpoint, never the
+/// committed records around it).
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// Driver tag of the sequential simulator.
+pub const DRIVER_SEQUENTIAL: &str = "sequential";
+/// Driver tag of the threaded simulator.
+pub const DRIVER_THREADED: &str = "threaded";
+
+/// Full simulator state at a round boundary. See the module docs.
+#[derive(Clone, Debug)]
+pub struct RunCheckpoint {
+    /// [`DRIVER_SEQUENTIAL`] or [`DRIVER_THREADED`] — a checkpoint only
+    /// restores into the driver that wrote it (the config's `threaded`
+    /// flag is part of the trial fingerprint, so this never mixes in
+    /// practice; the tag makes it a hard error instead of a silent one).
+    pub driver: String,
+    /// First round the resumed run executes.
+    pub next_round: u64,
+    /// `MasterState::snapshot` payload.
+    pub master: Json,
+    /// One `WorkerState::snapshot` payload per worker, index-ordered.
+    pub workers: Vec<Json>,
+    /// Gossip board content: (stamp round, θ estimate) per worker.
+    pub gossip: Vec<(u64, Vec<f32>)>,
+    /// Engine-internal state. Sequential: `{"all": ...}` (one shared
+    /// engine). Threaded: `{"master": ..., "workers": [...]}`.
+    pub engines: Json,
+    /// Driver RNG streams. Sequential: `{"order": ..., "gossip": ...}`.
+    /// Threaded: `{"gossip": [per-worker states]}` (no order stream).
+    pub rngs: Json,
+    /// Metric log accumulated so far.
+    pub log: MetricsLog,
+    /// Served-sync count of every completed round (virtual-clock replay).
+    pub per_round_syncs: Vec<usize>,
+}
+
+impl RunCheckpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(CHECKPOINT_VERSION as f64)),
+            ("driver", Json::str(&self.driver)),
+            ("next_round", Json::num(self.next_round as f64)),
+            ("master", self.master.clone()),
+            ("workers", Json::Arr(self.workers.clone())),
+            (
+                "gossip",
+                Json::Arr(
+                    self.gossip
+                        .iter()
+                        .map(|(round, theta)| {
+                            Json::obj(vec![
+                                ("round", Json::num(*round as f64)),
+                                ("theta", Json::str(&bits::f32s_hex(theta))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("engines", self.engines.clone()),
+            ("rngs", self.rngs.clone()),
+            ("records", self.log.to_json()),
+            (
+                "per_round_syncs",
+                Json::Arr(self.per_round_syncs.iter().map(|&s| Json::num(s as f64)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunCheckpoint> {
+        let version = j.get("version").as_f64().context("checkpoint: missing 'version'")? as u64;
+        ensure!(
+            version == CHECKPOINT_VERSION,
+            "checkpoint format v{version}, this build reads v{CHECKPOINT_VERSION}"
+        );
+        let driver = j
+            .get("driver")
+            .as_str()
+            .context("checkpoint: missing 'driver'")?
+            .to_string();
+        ensure!(
+            driver == DRIVER_SEQUENTIAL || driver == DRIVER_THREADED,
+            "checkpoint: unknown driver '{driver}'"
+        );
+        let gossip = j
+            .get("gossip")
+            .as_arr()
+            .context("checkpoint: missing 'gossip'")?
+            .iter()
+            .map(|e| {
+                Ok((
+                    e.get("round").as_f64().context("checkpoint: gossip entry round")? as u64,
+                    bits::f32s_from_hex(
+                        e.get("theta").as_str().context("checkpoint: gossip entry theta")?,
+                    )?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let next_round =
+            j.get("next_round").as_f64().context("checkpoint: missing 'next_round'")? as u64;
+        let per_round_syncs: Vec<usize> = j
+            .get("per_round_syncs")
+            .as_arr()
+            .context("checkpoint: missing 'per_round_syncs'")?
+            .iter()
+            .map(|v| v.as_usize().context("checkpoint: non-numeric sync count"))
+            .collect::<Result<_>>()?;
+        ensure!(
+            per_round_syncs.len() as u64 == next_round,
+            "checkpoint: {} sync counts for {} completed rounds",
+            per_round_syncs.len(),
+            next_round
+        );
+        let workers = j
+            .get("workers")
+            .as_arr()
+            .context("checkpoint: missing 'workers'")?
+            .to_vec();
+        ensure!(
+            workers.len() == gossip.len(),
+            "checkpoint: {} worker states but {} gossip entries",
+            workers.len(),
+            gossip.len()
+        );
+        Ok(RunCheckpoint {
+            driver,
+            next_round,
+            master: j.get("master").clone(),
+            workers,
+            gossip,
+            engines: j.get("engines").clone(),
+            rngs: j.get("rngs").clone(),
+            log: MetricsLog::from_json(j.get("records")).context("checkpoint: bad 'records'")?,
+            per_round_syncs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunCheckpoint {
+        RunCheckpoint {
+            driver: DRIVER_SEQUENTIAL.into(),
+            next_round: 2,
+            master: Json::obj(vec![("theta", Json::str("3f800000"))]),
+            workers: vec![Json::Null, Json::Null],
+            gossip: vec![(1, vec![1.0, -0.5]), (0, vec![0.0, 0.0])],
+            engines: Json::obj(vec![("all", Json::Null)]),
+            rngs: Json::obj(vec![("order", Json::Null)]),
+            log: MetricsLog::default(),
+            per_round_syncs: vec![2, 1],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let cp = sample();
+        let text = cp.to_json().to_string_compact();
+        let back = RunCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.driver, cp.driver);
+        assert_eq!(back.next_round, 2);
+        assert_eq!(back.workers.len(), 2);
+        assert_eq!(back.gossip, cp.gossip);
+        assert_eq!(back.per_round_syncs, vec![2, 1]);
+        assert_eq!(back.to_json().to_string_compact(), text, "canonical fixed point");
+    }
+
+    #[test]
+    fn malformed_checkpoints_are_rejected() {
+        // wrong version
+        let mut j = sample().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), Json::num(99.0));
+        }
+        assert!(RunCheckpoint::from_json(&j).is_err());
+        // sync-count / round mismatch
+        let mut cp = sample();
+        cp.per_round_syncs.pop();
+        assert!(RunCheckpoint::from_json(&cp.to_json()).is_err());
+        // unknown driver
+        let mut cp = sample();
+        cp.driver = "quantum".into();
+        assert!(RunCheckpoint::from_json(&cp.to_json()).is_err());
+        // worker/gossip arity mismatch
+        let mut cp = sample();
+        cp.workers.pop();
+        assert!(RunCheckpoint::from_json(&cp.to_json()).is_err());
+    }
+}

@@ -67,6 +67,20 @@ impl GossipBoard {
         }
     }
 
+    /// Copy out every worker's current (stamp round, θ estimate) — the
+    /// checkpointable content of the board. Restoring is a sequence of
+    /// [`GossipBoard::publish`] calls onto a fresh board (every entry
+    /// starts at round 0, so the monotonicity guard always admits them).
+    pub fn entries_snapshot(&self) -> Vec<(u64, Arc<Vec<f32>>)> {
+        self.entries
+            .iter()
+            .map(|e| {
+                let e = e.read().unwrap();
+                (e.round, e.theta.clone())
+            })
+            .collect()
+    }
+
     /// Freshest stamp on the board (diagnostics).
     pub fn freshest(&self) -> u64 {
         self.entries

@@ -135,6 +135,78 @@ impl MasterState {
         self.snapshots.len()
     }
 
+    /// Bit-exact snapshot of the master's durable state: the aggregate θ̃
+    /// (Zhang's elastic center — *the* state of the system), per-worker
+    /// sync stats, and the policy's cross-sync state. The snapshot pool is
+    /// a perf cache and is deliberately excluded.
+    pub fn snapshot(&self) -> crate::util::json::Json {
+        use crate::util::bits;
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("theta", Json::str(&bits::f32s_hex(&self.theta))),
+            ("total_syncs", Json::num(self.total_syncs as f64)),
+            (
+                "per_worker",
+                Json::Arr(
+                    self.per_worker
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("served", Json::num(s.served as f64)),
+                                ("h1_sum", Json::str(&bits::f64_hex(s.h1_sum))),
+                                ("h2_sum", Json::str(&bits::f64_hex(s.h2_sum))),
+                                ("corrections", Json::num(s.corrections as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("policy", self.policy.snapshot()),
+        ])
+    }
+
+    /// Restore a snapshot produced by [`MasterState::snapshot`] on a master
+    /// freshly built from the same config (same worker count and policy
+    /// spec; `init` already ran).
+    pub fn restore(&mut self, j: &crate::util::json::Json) -> Result<()> {
+        use crate::util::bits;
+        use anyhow::{ensure, Context as _};
+        let theta =
+            bits::f32s_from_hex(j.get("theta").as_str().context("master state: missing 'theta'")?)?;
+        ensure!(
+            theta.len() == self.theta.len(),
+            "master state: theta has {} params, expected {}",
+            theta.len(),
+            self.theta.len()
+        );
+        self.theta = theta;
+        self.total_syncs =
+            j.get("total_syncs").as_f64().context("master state: missing 'total_syncs'")? as u64;
+        let stats = j
+            .get("per_worker")
+            .as_arr()
+            .context("master state: missing 'per_worker'")?;
+        ensure!(
+            stats.len() == self.per_worker.len(),
+            "master state: stats for {} workers, expected {}",
+            stats.len(),
+            self.per_worker.len()
+        );
+        for (slot, s) in self.per_worker.iter_mut().zip(stats) {
+            slot.served = s.get("served").as_f64().context("master state: bad 'served'")? as u64;
+            slot.h1_sum = bits::f64_from_hex(
+                s.get("h1_sum").as_str().context("master state: bad 'h1_sum'")?,
+            )?;
+            slot.h2_sum = bits::f64_from_hex(
+                s.get("h2_sum").as_str().context("master state: bad 'h2_sum'")?,
+            )?;
+            slot.corrections =
+                s.get("corrections").as_f64().context("master state: bad 'corrections'")? as u64;
+        }
+        self.policy.restore(j.get("policy")).context("master state: bad policy snapshot")?;
+        Ok(())
+    }
+
     /// Serve one sync: ask the policy for (h1, h2), run the elastic pair
     /// update through the engine (L1 kernel or native mirror), update stats.
     ///
@@ -271,6 +343,34 @@ mod tests {
             m.serve_sync(&mut e, &ctx(0, r, None, 0), &mut tw).unwrap();
         }
         assert_eq!(m.per_worker[0].corrections, 0);
+    }
+
+    /// Master snapshot/restore: the stats, aggregate and (stateful) policy
+    /// all continue bit-exactly.
+    #[test]
+    fn state_snapshot_roundtrips_including_policy_latch() {
+        let (mut m, mut e) = master("hysteresis(hold=2)");
+        let mut tw = vec![1.0; 8];
+        m.serve_sync(&mut e, &ctx(0, 0, Some(-0.5), 1), &mut tw).unwrap(); // arm latch
+        m.serve_sync(&mut e, &ctx(1, 0, Some(0.5), 0), &mut tw).unwrap();
+        let snap = m.snapshot();
+        let (mut m2, mut e2) = master("hysteresis(hold=2)");
+        m2.restore(&snap).unwrap();
+        assert_eq!(m2.theta, m.theta);
+        assert_eq!(m2.total_syncs, 2);
+        assert_eq!(m2.per_worker[0].corrections, 1);
+        // worker 0's latch survived: healthy score still serves the correction
+        let mut a = vec![1.0; 8];
+        let mut b = vec![1.0; 8];
+        let ea = m.serve_sync(&mut e, &ctx(0, 1, Some(0.9), 0), &mut a).unwrap();
+        let eb = m2.serve_sync(&mut e2, &ctx(0, 1, Some(0.9), 0), &mut b).unwrap();
+        assert_eq!((ea.h1, ea.h2), (eb.h1, eb.h2));
+        assert_eq!((eb.h1, eb.h2), (1.0, 0.0));
+        assert_eq!(a, b);
+        // mismatched worker counts are rejected
+        let mut bad =
+            MasterState::new(vec![0.0; 8], policy::parse("hysteresis(hold=2)").unwrap(), 3);
+        assert!(bad.restore(&snap).is_err());
     }
 
     #[test]

@@ -33,6 +33,9 @@ pub enum ToMaster {
     Eval { reply: Sender<(f64, f64)> },
     /// Fetch a copy of the aggregated model.
     Snapshot { reply: Sender<Vec<f32>> },
+    /// Serialize the master's checkpointable state (aggregate, stats,
+    /// policy state, engine RNG) for a mid-trial checkpoint cut.
+    Checkpoint { reply: Sender<crate::util::json::Json> },
     /// Drain and exit.
     Shutdown,
 }

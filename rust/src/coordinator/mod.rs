@@ -8,6 +8,7 @@
 //! worker-to-worker master estimation; `simclock` adds the virtual
 //! wall-clock model the paper defers to future work.
 
+pub mod checkpoint;
 pub mod evaluator;
 pub mod failure;
 pub mod gossip;

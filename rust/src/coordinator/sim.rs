@@ -13,7 +13,19 @@
 //!
 //! Failure injection is a pure function of (seed, worker, round), so both
 //! drivers face the *identical* fault schedule.
+//!
+//! Both drivers support **mid-trial checkpointing** ([`run_with`]): at
+//! configurable round boundaries the full simulator state — master θ̃ +
+//! stats + policy state, every worker replica + optimizer + score ring,
+//! the gossip board, and every RNG stream — is captured as a
+//! [`RunCheckpoint`] and handed to a caller hook; a later invocation
+//! restores it and continues. On the sequential driver with the quadratic
+//! engine the continuation is bit-identical to the uninterrupted run
+//! (pinned by `tests/checkpoint_resume.rs`); the threaded driver captures
+//! a consistent cut (workers parked between round barriers) but continues
+//! with its usual arrival-order nondeterminism.
 
+use super::checkpoint::{self, RunCheckpoint};
 use super::evaluator::Evaluator;
 use super::failure::FailureModel;
 use super::gossip::GossipBoard;
@@ -29,6 +41,7 @@ use crate::engine::Engine;
 use crate::metrics::{MetricsLog, RoundRecord};
 use crate::optim::{OptState, Optimizer};
 use crate::runtime::Manifest;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::{log_debug, log_info};
 use anyhow::{Context, Result};
@@ -191,13 +204,38 @@ impl RunResult {
     }
 }
 
+/// Mid-trial checkpoint control for one run.
+pub struct CheckpointHooks<'a> {
+    /// Rounds between checkpoint cuts (taken at round boundaries, never at
+    /// the final one — the run is about to commit anyway); 0 = never.
+    pub every: u64,
+    /// Persist one checkpoint; called from the driving thread. On the
+    /// sequential driver an error aborts the run immediately (the
+    /// crash-injection tests rely on this); the threaded driver finishes
+    /// the run and reports the first error at the end, because aborting
+    /// between round barriers would deadlock the worker threads.
+    pub save: &'a mut dyn FnMut(RunCheckpoint) -> Result<()>,
+}
+
 /// Entry point: dispatches on `cfg.threaded`.
 pub fn run(cfg: &ExperimentConfig) -> Result<RunResult> {
+    run_with(cfg, None, None)
+}
+
+/// [`run`] with mid-trial checkpoint support: `resume` restores a prior
+/// [`RunCheckpoint`] (which must have been written by the same driver for
+/// the same config) before the first round; `hooks` captures periodic
+/// checkpoints while running.
+pub fn run_with(
+    cfg: &ExperimentConfig,
+    resume: Option<&RunCheckpoint>,
+    hooks: Option<CheckpointHooks<'_>>,
+) -> Result<RunResult> {
     let setup = Setup::build(cfg)?;
     if cfg.threaded {
-        run_threaded(&setup)
+        run_threaded_with(&setup, resume, hooks)
     } else {
-        run_sequential(&setup)
+        run_sequential_with(&setup, resume, hooks)
     }
 }
 
@@ -206,6 +244,14 @@ pub fn run(cfg: &ExperimentConfig) -> Result<RunResult> {
 // ---------------------------------------------------------------------------
 
 pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
+    run_sequential_with(setup, None, None)
+}
+
+pub fn run_sequential_with(
+    setup: &Setup,
+    resume: Option<&RunCheckpoint>,
+    mut hooks: Option<CheckpointHooks<'_>>,
+) -> Result<RunResult> {
     let cfg = &setup.cfg;
     let t0 = Instant::now();
     let mut engine = setup.make_engine(Role::All)?;
@@ -222,6 +268,44 @@ pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
     let mut gossip_rng = Rng::new(cfg.seed).derive(0x6055);
     let mut log = MetricsLog::default();
     let mut per_round_syncs: Vec<usize> = Vec::with_capacity(cfg.rounds as usize);
+    let mut start_round = 0u64;
+    if let Some(cp) = resume {
+        anyhow::ensure!(
+            cp.driver == checkpoint::DRIVER_SEQUENTIAL,
+            "checkpoint was written by the '{}' driver, this run is sequential",
+            cp.driver
+        );
+        anyhow::ensure!(
+            cp.workers.len() == cfg.workers,
+            "checkpoint holds {} workers, config has {}",
+            cp.workers.len(),
+            cfg.workers
+        );
+        anyhow::ensure!(
+            cp.next_round <= cfg.rounds,
+            "checkpoint resumes at round {} but the run has only {}",
+            cp.next_round,
+            cfg.rounds
+        );
+        master.restore(&cp.master).context("restoring master state")?;
+        for (w, snap) in workers.iter_mut().zip(&cp.workers) {
+            w.restore(snap).with_context(|| format!("restoring worker {}", w.id))?;
+        }
+        for (w, (round, theta)) in cp.gossip.iter().enumerate() {
+            gossip.publish(w, *round, Arc::new(theta.clone()));
+        }
+        engine
+            .state_restore(cp.engines.get("all"))
+            .context("restoring engine state")?;
+        order_rng =
+            Rng::from_state_json(cp.rngs.get("order")).context("restoring order rng")?;
+        gossip_rng =
+            Rng::from_state_json(cp.rngs.get("gossip")).context("restoring gossip rng")?;
+        log = cp.log.clone();
+        per_round_syncs.extend_from_slice(&cp.per_round_syncs);
+        start_round = cp.next_round;
+        log_info!("sequential run: resuming from checkpoint at round {start_round}");
+    }
     // Round-scoped buffers, hoisted out of the loop: a warmed-up round
     // performs no heap allocation (pinned by tests/alloc_regression.rs).
     let mut losses: Vec<f64> = Vec::with_capacity(cfg.workers);
@@ -241,7 +325,7 @@ pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
         cfg.failure.describe()
     );
 
-    for round in 0..cfg.rounds {
+    for round in start_round..cfg.rounds {
         losses.clear();
         h1s.clear();
         h2s.clear();
@@ -305,6 +389,30 @@ pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
                 mean_score: mean(&scores),
             });
         }
+        if let Some(h) = hooks.as_mut() {
+            let next = round + 1;
+            if h.every > 0 && next % h.every == 0 && next < cfg.rounds {
+                (h.save)(RunCheckpoint {
+                    driver: checkpoint::DRIVER_SEQUENTIAL.into(),
+                    next_round: next,
+                    master: master.snapshot(),
+                    workers: workers.iter().map(|w| w.snapshot()).collect(),
+                    gossip: gossip
+                        .entries_snapshot()
+                        .into_iter()
+                        .map(|(r, t)| (r, t.as_ref().clone()))
+                        .collect(),
+                    engines: Json::obj(vec![("all", engine.state_snapshot())]),
+                    rngs: Json::obj(vec![
+                        ("order", order_rng.state_json()),
+                        ("gossip", gossip_rng.state_json()),
+                    ]),
+                    log: log.clone(),
+                    per_round_syncs: per_round_syncs.clone(),
+                })
+                .with_context(|| format!("writing checkpoint at round boundary {next}"))?;
+            }
+        }
     }
 
     let (t_step, t_sync) = measured_costs([engine.mean_costs()]);
@@ -365,22 +473,120 @@ fn measured_costs(costs: impl IntoIterator<Item = (Option<f64>, Option<f64>)>) -
 // ---------------------------------------------------------------------------
 
 pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
+    run_threaded_with(setup, None, None)
+}
+
+pub fn run_threaded_with(
+    setup: &Setup,
+    resume: Option<&RunCheckpoint>,
+    mut hooks: Option<CheckpointHooks<'_>>,
+) -> Result<RunResult> {
     let cfg = &setup.cfg;
     let t0 = Instant::now();
     let k = cfg.workers;
     let rounds = cfg.rounds;
+    if let Some(cp) = resume {
+        anyhow::ensure!(
+            cp.driver == checkpoint::DRIVER_THREADED,
+            "checkpoint was written by the '{}' driver, this run is threaded",
+            cp.driver
+        );
+        anyhow::ensure!(
+            cp.workers.len() == k,
+            "checkpoint holds {} workers, config has {k}",
+            cp.workers.len()
+        );
+        anyhow::ensure!(
+            cp.next_round <= rounds,
+            "checkpoint resumes at round {} but the run has only {rounds}",
+            cp.next_round
+        );
+        // Per-thread payloads must exist AND decode for every worker
+        // BEFORE spawning: a restore failure inside a spawned thread would
+        // exit it before its first barrier and strand its peers (the
+        // monitor would block on the report channel forever). Nothing
+        // fallible may be left for the threads themselves.
+        anyhow::ensure!(
+            cp.engines.get("workers").as_arr().map(|a| a.len()) == Some(k),
+            "checkpoint is missing per-worker engine states"
+        );
+        anyhow::ensure!(
+            cp.rngs.get("gossip").as_arr().map(|a| a.len()) == Some(k),
+            "checkpoint is missing per-worker gossip rng states"
+        );
+        for i in 0..k {
+            Rng::from_state_json(cp.rngs.get("gossip").idx(i))
+                .with_context(|| format!("worker {i}: restoring gossip rng"))?;
+        }
+        // The master thread re-restores for real; this probe surfaces a
+        // corrupt master/policy payload on the driving thread.
+        setup
+            .make_master()?
+            .restore(&cp.master)
+            .context("restoring master state")?;
+        match &cfg.engine {
+            EngineKind::Quadratic { .. } => {
+                // Quadratic engines are cheap to build: probe-restore every
+                // engine payload here (the threads restore again for real).
+                setup
+                    .make_engine(Role::Master)?
+                    .state_restore(cp.engines.get("master"))
+                    .context("restoring master engine state")?;
+                for i in 0..k {
+                    setup
+                        .make_engine(Role::Worker(i))?
+                        .state_restore(cp.engines.get("workers").idx(i))
+                        .with_context(|| format!("worker {i}: restoring engine state"))?;
+                }
+            }
+            EngineKind::Xla { .. } => {
+                // XLA engines keep no checkpointable state (snapshot =
+                // Null, and Null always restores); anything else here is a
+                // corrupt checkpoint — reject it before spawning instead
+                // of letting an expensive per-thread engine build fail.
+                let all_null = std::iter::once(cp.engines.get("master"))
+                    .chain((0..k).map(|i| cp.engines.get("workers").idx(i)))
+                    .all(|j| *j == Json::Null);
+                anyhow::ensure!(
+                    all_null,
+                    "checkpoint carries engine state the XLA engine cannot restore"
+                );
+            }
+        }
+    }
+    let start_round = resume.map_or(0, |cp| cp.next_round);
+    let ckpt_every = hooks.as_ref().map_or(0, |h| h.every);
     let gossip = Arc::new(GossipBoard::new(k, Arc::new(setup.theta0.clone()), cfg.gossip));
+    if let Some(cp) = resume {
+        for (w, (round, theta)) in cp.gossip.iter().enumerate() {
+            gossip.publish(w, *round, Arc::new(theta.clone()));
+        }
+    }
+    // Worker states restore on this thread, also before spawning.
+    let mut worker_states: Vec<WorkerState> = Vec::with_capacity(k);
+    for i in 0..k {
+        let mut st = setup.make_worker(i);
+        if let Some(cp) = resume {
+            st.restore(&cp.workers[i]).with_context(|| format!("restoring worker {i}"))?;
+        }
+        worker_states.push(st);
+    }
     let barrier = Arc::new(Barrier::new(k + 1));
     let (master_tx, master_rx) = mpsc::channel::<ToMaster>();
     let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
+    // Worker → monitor channel carrying per-worker state snapshots at
+    // checkpoint boundaries (workers are parked between barriers A and B
+    // while the monitor assembles the cut).
+    let (state_tx, state_rx) = mpsc::channel::<(usize, Json)>();
 
     log_info!(
-        "threaded run: method={} policy={} k={} tau={} rounds={}",
+        "threaded run: method={} policy={} k={} tau={} rounds={}{}",
         cfg.method.name(),
         cfg.effective_policy_spec(),
         cfg.workers,
         cfg.tau,
-        cfg.rounds
+        cfg.rounds,
+        if start_round > 0 { format!(" (resuming at round {start_round})") } else { String::new() }
     );
 
     std::thread::scope(|scope| -> Result<RunResult> {
@@ -390,11 +596,19 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
         type WorkerReturn = (String, (Option<f64>, Option<f64>));
         let master_handle = {
             let setup_ref = &*setup;
+            let resume_master: Option<(Json, Json)> =
+                resume.map(|cp| (cp.master.clone(), cp.engines.get("master").clone()));
             std::thread::Builder::new()
                 .name("master".into())
                 .spawn_scoped(scope, move || -> Result<MasterReturn> {
                     let mut engine = setup_ref.make_engine(Role::Master)?;
                     let mut master = setup_ref.make_master()?;
+                    if let Some((mstate, estate)) = &resume_master {
+                        master.restore(mstate).context("restoring master state")?;
+                        engine
+                            .state_restore(estate)
+                            .context("restoring master engine state")?;
+                    }
                     let mut evaluator = setup_ref.make_evaluator();
                     let alpha = setup_ref.cfg.alpha;
                     while let Ok(msg) = master_rx.recv() {
@@ -431,6 +645,12 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
                             ToMaster::Snapshot { reply } => {
                                 let _ = reply.send(master.theta.clone());
                             }
+                            ToMaster::Checkpoint { reply } => {
+                                let _ = reply.send(Json::obj(vec![
+                                    ("master", master.snapshot()),
+                                    ("engine", engine.state_snapshot()),
+                                ]));
+                            }
                             ToMaster::Shutdown => break,
                         }
                     }
@@ -449,13 +669,19 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
 
         // ---- worker threads ----
         let mut worker_handles = Vec::with_capacity(k);
-        for i in 0..k {
+        for (i, mut state) in worker_states.into_iter().enumerate() {
             let setup_ref = &*setup;
             let gossip = gossip.clone();
             let barrier = barrier.clone();
             let master_tx = master_tx.clone();
             let report_tx = report_tx.clone();
-            let mut state = setup.make_worker(i);
+            let state_tx = state_tx.clone();
+            let resume_worker: Option<(Json, Json)> = resume.map(|cp| {
+                (
+                    cp.engines.get("workers").idx(i).clone(),
+                    cp.rngs.get("gossip").idx(i).clone(),
+                )
+            });
             let failure: FailureModel = cfg.failure.clone();
             let fail_style = cfg.fail_style;
             let seed = cfg.seed;
@@ -465,8 +691,15 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
                 .spawn_scoped(scope, move || -> Result<WorkerReturn> {
                     let mut engine = setup_ref.make_engine(Role::Worker(i))?;
                     let mut gossip_rng = Rng::new(seed).derive(0x6055).derive(i as u64);
+                    if let Some((estate, gstate)) = &resume_worker {
+                        engine
+                            .state_restore(estate)
+                            .with_context(|| format!("worker {i}: restoring engine state"))?;
+                        gossip_rng = Rng::from_state_json(gstate)
+                            .with_context(|| format!("worker {i}: restoring gossip rng"))?;
+                    }
                     let (reply_tx, reply_rx) = mpsc::channel::<SyncReply>();
-                    for round in 0..rounds {
+                    for round in start_round..rounds {
                         let suppressed = failure.suppressed(seed, i, round);
                         let node_down = suppressed
                             && fail_style == crate::coordinator::failure::FailStyle::Node;
@@ -512,6 +745,17 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
                         }
                         report_tx.send(rep).ok();
                         barrier.wait(); // A: round work done
+                        if ckpt_every > 0 && (round + 1) % ckpt_every == 0 && round + 1 < rounds
+                        {
+                            // Parked between barriers: this worker's state
+                            // is stable, ship it to the monitor's cut.
+                            let snap = Json::obj(vec![
+                                ("worker", state.snapshot()),
+                                ("engine", engine.state_snapshot()),
+                                ("gossip_rng", gossip_rng.state_json()),
+                            ]);
+                            state_tx.send((i, snap)).ok();
+                        }
                         barrier.wait(); // B: metrics sampled, go on
                     }
                     Ok((engine.perf_summary(), engine.mean_costs()))
@@ -520,11 +764,16 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
             worker_handles.push(handle);
         }
         drop(report_tx);
+        drop(state_tx);
 
         // ---- monitor (this thread) ----
-        let mut log = MetricsLog::default();
+        let mut log = resume.map(|cp| cp.log.clone()).unwrap_or_default();
         let mut per_round_syncs = Vec::with_capacity(rounds as usize);
-        for round in 0..rounds {
+        if let Some(cp) = resume {
+            per_round_syncs.extend_from_slice(&cp.per_round_syncs);
+        }
+        let mut save_err: Option<anyhow::Error> = None;
+        for round in start_round..rounds {
             let mut losses = Vec::with_capacity(k);
             let mut h1s = Vec::new();
             let mut h2s = Vec::new();
@@ -567,6 +816,57 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
                     mean_score: mean(&scores),
                 });
             }
+            if ckpt_every > 0 && (round + 1) % ckpt_every == 0 && round + 1 < rounds {
+                // Assemble the cut while every worker is parked between
+                // barriers A and B and the master has drained this round's
+                // syncs. A failure here must NOT abort mid-round (the
+                // barrier protocol would deadlock): remember the first
+                // error, keep running, report it after the joins.
+                let cut = (|| -> Result<RunCheckpoint> {
+                    let mut worker_snaps: Vec<Json> = vec![Json::Null; k];
+                    let mut engine_snaps: Vec<Json> = vec![Json::Null; k];
+                    let mut rng_snaps: Vec<Json> = vec![Json::Null; k];
+                    for _ in 0..k {
+                        let (w, snap) =
+                            state_rx.recv().context("worker state channel closed")?;
+                        worker_snaps[w] = snap.get("worker").clone();
+                        engine_snaps[w] = snap.get("engine").clone();
+                        rng_snaps[w] = snap.get("gossip_rng").clone();
+                    }
+                    let (ms_tx, ms_rx) = mpsc::channel();
+                    master_tx.send(ToMaster::Checkpoint { reply: ms_tx }).ok();
+                    let mstate = ms_rx.recv().context("master checkpoint reply dropped")?;
+                    Ok(RunCheckpoint {
+                        driver: checkpoint::DRIVER_THREADED.into(),
+                        next_round: round + 1,
+                        master: mstate.get("master").clone(),
+                        workers: worker_snaps,
+                        gossip: gossip
+                            .entries_snapshot()
+                            .into_iter()
+                            .map(|(r, t)| (r, t.as_ref().clone()))
+                            .collect(),
+                        engines: Json::obj(vec![
+                            ("master", mstate.get("engine").clone()),
+                            ("workers", Json::Arr(engine_snaps)),
+                        ]),
+                        rngs: Json::obj(vec![("gossip", Json::Arr(rng_snaps))]),
+                        log: log.clone(),
+                        per_round_syncs: per_round_syncs.clone(),
+                    })
+                })();
+                match (cut, hooks.as_mut()) {
+                    (Ok(cp), Some(h)) => {
+                        if let Err(e) = (h.save)(cp) {
+                            save_err.get_or_insert(e);
+                        }
+                    }
+                    (Err(e), _) => {
+                        save_err.get_or_insert(e);
+                    }
+                    (Ok(_), None) => unreachable!("ckpt_every > 0 implies hooks"),
+                }
+            }
             barrier.wait(); // B: release workers into the next round
         }
 
@@ -585,6 +885,9 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
             master_handle.join().expect("master panicked")?;
         perf.push_str(&master_perf);
         engine_costs.push(master_costs);
+        if let Some(e) = save_err {
+            return Err(e.context("mid-trial checkpointing failed"));
+        }
 
         let (t_step, t_sync) = measured_costs(engine_costs);
         let mut clock = SimClock::new(t_step, t_sync);

@@ -136,6 +136,70 @@ impl WorkerState {
     pub fn epoch(&self) -> u64 {
         self.batcher.as_ref().map(|b| b.epoch()).unwrap_or(0)
     }
+
+    /// Bit-exact snapshot of everything a worker carries across rounds: θ,
+    /// optimizer state, miss counter, score-tracker ring, the probe RNG and
+    /// the batcher cursor. Transient buffers (scratch arena, probe vector,
+    /// batch staging) are overwritten before every use and are not state.
+    pub fn snapshot(&self) -> crate::util::json::Json {
+        use crate::util::bits;
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("theta", Json::str(&bits::f32s_hex(&self.theta))),
+            ("opt", self.opt.to_json()),
+            ("missed", Json::num(self.missed as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("last_loss", Json::str(&bits::f32_hex(self.last_loss))),
+            ("score", Json::str(&bits::f64s_hex(self.score.history()))),
+            ("probe_rng", self.probe_rng.state_json()),
+            (
+                "batcher",
+                match &self.batcher {
+                    Some(b) => b.state_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Restore a snapshot produced by [`WorkerState::snapshot`] on a worker
+    /// freshly built from the same config (same parameter count, optimizer
+    /// and shard).
+    pub fn restore(&mut self, j: &crate::util::json::Json) -> Result<()> {
+        use crate::util::bits;
+        use crate::util::json::Json;
+        use anyhow::{ensure, Context as _};
+        let theta =
+            bits::f32s_from_hex(j.get("theta").as_str().context("worker state: missing 'theta'")?)?;
+        ensure!(
+            theta.len() == self.theta.len(),
+            "worker state: theta has {} params, expected {}",
+            theta.len(),
+            self.theta.len()
+        );
+        self.theta = theta;
+        self.opt.restore_json(j.get("opt")).context("worker state: bad 'opt'")?;
+        self.missed = j.get("missed").as_f64().context("worker state: missing 'missed'")? as u32;
+        self.steps = j.get("steps").as_f64().context("worker state: missing 'steps'")? as u64;
+        self.last_loss = bits::f32_from_hex(
+            j.get("last_loss").as_str().context("worker state: missing 'last_loss'")?,
+        )?;
+        self.score
+            .restore_history(bits::f64s_from_hex(
+                j.get("score").as_str().context("worker state: missing 'score'")?,
+            )?)
+            .context("worker state: bad score history")?;
+        self.probe_rng = crate::util::rng::Rng::from_state_json(j.get("probe_rng"))
+            .context("worker state: bad probe rng")?;
+        match (&mut self.batcher, j.get("batcher")) {
+            (None, Json::Null) => {}
+            (Some(b), state) => b.restore_state(state).context("worker state: bad batcher")?,
+            (None, _) => {
+                anyhow::bail!("worker state: snapshot has a batcher, this engine has none")
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -199,6 +263,52 @@ mod tests {
         let a = w.observe_and_score(&[2.0, 0.0, 0.0, 0.0]);
         assert!(a.is_some());
         assert!(a.unwrap() > 0.0, "distance grew -> positive slope");
+    }
+
+    #[test]
+    fn snapshot_restore_continues_local_rounds_exactly() {
+        for opt in [Optimizer::Sgd, Optimizer::Momentum, Optimizer::AdaHessian] {
+            let mut e = QuadraticEngine::new(16, 7, 1, 0.3, 0.05);
+            let mut w = worker(16, opt);
+            for _ in 0..5 {
+                w.local_round(&mut e, 3).unwrap();
+                w.observe_and_score(&[0.25; 16]);
+            }
+            w.record_miss();
+            let snap = w.snapshot();
+            let engine_snap = e.state_snapshot();
+            // fresh pair restored from the snapshots
+            let mut e2 = QuadraticEngine::new(16, 7, 1, 0.3, 0.05);
+            e2.state_restore(&engine_snap).unwrap();
+            let mut w2 = worker(16, opt);
+            w2.restore(&snap).unwrap();
+            assert_eq!(w2.missed, 1);
+            assert_eq!(w2.steps, w.steps);
+            for _ in 0..4 {
+                let la = w.local_round(&mut e, 3).unwrap();
+                let lb = w2.local_round(&mut e2, 3).unwrap();
+                assert_eq!(la.to_bits(), lb.to_bits(), "{opt:?}");
+                assert_eq!(
+                    w.observe_and_score(&[0.5; 16]),
+                    w2.observe_and_score(&[0.5; 16]),
+                    "{opt:?}"
+                );
+            }
+            assert_eq!(
+                w.theta.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                w2.theta.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_shapes() {
+        let w = worker(8, Optimizer::Momentum);
+        let snap = w.snapshot();
+        let mut wrong_size = worker(4, Optimizer::Momentum);
+        assert!(wrong_size.restore(&snap).is_err());
+        let mut wrong_opt = worker(8, Optimizer::Sgd);
+        assert!(wrong_opt.restore(&snap).is_err());
     }
 
     #[test]

@@ -41,6 +41,50 @@ impl Batcher {
         self.batch
     }
 
+    /// Serialize the batcher's mutable state — the current index
+    /// permutation, cursor, epoch and shuffle-RNG stream — for mid-trial
+    /// checkpointing. The dataset itself is rebuilt from config.
+    pub fn state_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            (
+                "indices",
+                Json::Arr(self.indices.iter().map(|&i| Json::num(i as f64)).collect()),
+            ),
+            ("cursor", Json::num(self.cursor as f64)),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("rng", self.rng.state_json()),
+        ])
+    }
+
+    /// Restore state captured by [`Batcher::state_json`] into a batcher
+    /// built over the same shard.
+    pub fn restore_state(&mut self, j: &crate::util::json::Json) -> anyhow::Result<()> {
+        use anyhow::Context as _;
+        let indices = j
+            .get("indices")
+            .as_arr()
+            .context("batcher state: missing 'indices'")?;
+        anyhow::ensure!(
+            indices.len() == self.indices.len(),
+            "batcher state: {} indices for a shard of {}",
+            indices.len(),
+            self.indices.len()
+        );
+        let restored: Vec<usize> = indices
+            .iter()
+            .map(|v| v.as_usize().context("batcher state: non-numeric index"))
+            .collect::<anyhow::Result<_>>()?;
+        let cursor = j.get("cursor").as_usize().context("batcher state: missing 'cursor'")?;
+        anyhow::ensure!(cursor <= restored.len(), "batcher state: cursor out of range");
+        self.indices = restored;
+        self.cursor = cursor;
+        self.epoch = j.get("epoch").as_f64().context("batcher state: missing 'epoch'")? as u64;
+        self.rng = crate::util::rng::Rng::from_state_json(j.get("rng"))
+            .context("batcher state: bad rng")?;
+        Ok(())
+    }
+
     /// Fill the next mini-batch; reshuffles and bumps the epoch counter when
     /// the shard is exhausted (dropping any ragged tail, as the fixed-shape
     /// AOT artifacts require full batches).
@@ -114,6 +158,38 @@ mod tests {
             assert_eq!(x1, x2);
             assert_eq!(y1, y2);
         }
+    }
+
+    #[test]
+    fn state_snapshot_continues_the_batch_stream_exactly() {
+        let (d, idx) = fixture();
+        let mut a = Batcher::new(d.clone(), idx.clone(), 8, Rng::new(3));
+        let mut x = vec![0.0; 8 * IMAGE_PIXELS];
+        let mut y = vec![0.0; 8 * NUM_CLASSES];
+        // run past an epoch boundary so cursor/epoch/rng are all non-trivial
+        for _ in 0..9 {
+            a.next_into(&mut x, &mut y);
+        }
+        let snap = a.state_json();
+        let mut b = Batcher::new(d, idx, 8, Rng::new(999)); // wrong seed on purpose
+        b.restore_state(&snap).unwrap();
+        assert_eq!(b.epoch(), a.epoch());
+        let (mut xb, mut yb) = (x.clone(), y.clone());
+        for _ in 0..10 {
+            a.next_into(&mut x, &mut y);
+            b.next_into(&mut xb, &mut yb);
+            assert_eq!(x, xb);
+            assert_eq!(y, yb);
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_shards() {
+        let (d, idx) = fixture();
+        let a = Batcher::new(d.clone(), idx.clone(), 8, Rng::new(3));
+        let snap = a.state_json();
+        let mut small = Batcher::new(d, idx[..20].to_vec(), 8, Rng::new(3));
+        assert!(small.restore_state(&snap).is_err());
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //! into a contiguous correction window. `hold=0` degenerates to `dynamic` —
 //! guaranteed structurally: the untriggered/unlatched path delegates to an
 //! embedded [`DynamicPolicy`], so the eqs. 12-13 dispatch lives in exactly
-//! one place.
+//! one place. Because that degenerate spelling silently behaves like a
+//! different registered policy, `hold=0` is rejected at parse time (the
+//! constructor still accepts it, which is what the structural-degeneration
+//! test exercises).
 //!
 //! The first genuinely stateful policy — it is why [`SyncPolicy::weights`]
 //! takes `&mut self` and carries the worker id in the context.
@@ -40,6 +43,12 @@ impl HysteresisPolicy {
     pub fn from_params(p: &mut Params) -> Result<HysteresisPolicy> {
         let dynamic = DynamicPolicy::from_params(p)?;
         let hold = p.u32("hold", 2)?;
+        if hold == 0 {
+            anyhow::bail!(
+                "hold must be >= 1 (hold=0 makes the latch a no-op — that is exactly \
+                 the 'dynamic' policy; spell it as such)"
+            );
+        }
         Ok(HysteresisPolicy { dynamic, hold, latch: Vec::new() })
     }
 
@@ -89,6 +98,33 @@ impl SyncPolicy for HysteresisPolicy {
 
     fn healthy_h2(&self) -> f64 {
         self.dynamic.healthy_h2()
+    }
+
+    /// The latch table is the policy's only cross-sync state (the embedded
+    /// dynamic policy is stateless).
+    fn snapshot(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![(
+            "latch",
+            Json::Arr(self.latch.iter().map(|&l| Json::num(l as f64)).collect()),
+        )])
+    }
+
+    fn restore(&mut self, state: &crate::util::json::Json) -> Result<()> {
+        use anyhow::Context as _;
+        let latch = state
+            .get("latch")
+            .as_arr()
+            .with_context(|| format!("policy '{}': snapshot missing 'latch'", self.spec()))?;
+        self.latch = latch
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|x| x as u32)
+                    .with_context(|| format!("policy '{}': non-numeric latch entry", self.spec()))
+            })
+            .collect::<Result<Vec<u32>>>()?;
+        Ok(())
     }
 }
 
@@ -161,6 +197,23 @@ mod tests {
         let mut p = policy(2);
         let w = p.weights(&test_ctx(0, None, 0));
         assert_eq!((w.h1, w.h2), (0.1, 0.1));
+    }
+
+    #[test]
+    fn snapshot_restores_armed_latches() {
+        let mut p = policy(3);
+        p.weights(&test_ctx(1, Some(-0.5), 0)); // arm worker 1 for 3 syncs
+        p.weights(&test_ctx(1, Some(0.5), 0)); // consume one: 2 left
+        let snap = p.snapshot();
+        let mut q = policy(3);
+        q.restore(&snap).unwrap();
+        for _ in 0..2 {
+            let w = q.weights(&test_ctx(1, Some(0.5), 0));
+            assert_eq!((w.h1, w.h2), (1.0, 0.0));
+        }
+        let w = q.weights(&test_ctx(1, Some(0.5), 0));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1), "latch must expire exactly where it would have");
+        assert!(q.restore(&crate::util::json::Json::Null).is_err());
     }
 
     #[test]

@@ -86,6 +86,24 @@ pub trait SyncPolicy: Send {
     /// the stat stays correct when `--policy` pins a different α than the
     /// run default.
     fn healthy_h2(&self) -> f64;
+
+    /// Serialize the policy's mutable cross-sync state for a mid-trial
+    /// checkpoint. Stateless policies (the default) return `Json::Null`;
+    /// stateful ones must return something [`SyncPolicy::restore`] can
+    /// rebuild so a resumed run serves bit-identical weights.
+    fn snapshot(&self) -> crate::util::json::Json {
+        crate::util::json::Json::Null
+    }
+
+    /// Restore state produced by [`SyncPolicy::snapshot`] on a policy built
+    /// from the same spec (after `init`). The default accepts only `Null`.
+    fn restore(&mut self, state: &crate::util::json::Json) -> Result<()> {
+        if *state == crate::util::json::Json::Null {
+            Ok(())
+        } else {
+            bail!("policy '{}' keeps no state, cannot restore a snapshot", self.spec())
+        }
+    }
 }
 
 /// One registry row: a policy name plus its spec-driven constructor.
@@ -175,8 +193,14 @@ pub fn validate(spec_text: &str) -> Result<()> {
 // ---------------- shared parameter validation ----------------
 
 pub(crate) fn check_alpha(alpha: f64) -> Result<f64> {
-    if !(0.0..=1.0).contains(&alpha) {
-        bail!("alpha must be in [0,1], got {alpha}");
+    // Registry audit: alpha=0 is rejected as degenerate — it turns every
+    // healthy sync into a no-op (h1=h2=0), so `fixed(alpha=0)` silently
+    // behaves like "never sync" and `oracle`/`staleness` collapse into
+    // pure-pull policies. `ExperimentConfig::validate` applies the same
+    // (0,1] range to the run-level alpha, since every method preset embeds
+    // it into its policy spec.
+    if !(alpha > 0.0 && alpha <= 1.0) {
+        bail!("alpha must be in (0,1] (alpha=0 makes every sync a no-op), got {alpha}");
     }
     Ok(alpha)
 }
@@ -234,6 +258,25 @@ mod tests {
         assert!(parse("hysteresis(hold=-1)").is_err());
     }
 
+    /// Degenerate parameters that silently alias another policy are parse
+    /// errors: `hold=0` makes hysteresis exactly `dynamic`, `alpha=0` makes
+    /// every healthy sync a no-op.
+    #[test]
+    fn degenerate_params_rejected_with_clear_errors() {
+        let err = parse("hysteresis(hold=0)").unwrap_err().to_string();
+        assert!(err.contains("dynamic"), "should point at 'dynamic': {err}");
+        for spec in [
+            "fixed(alpha=0)",
+            "oracle(alpha=0)",
+            "dynamic(alpha=0)",
+            "hysteresis(alpha=0)",
+            "staleness(alpha=0)",
+        ] {
+            let err = parse(spec).unwrap_err().to_string();
+            assert!(err.contains("(0,1]"), "'{spec}' must reject alpha=0: {err}");
+        }
+    }
+
     #[test]
     fn unknown_policy_error_lists_registry() {
         let err = parse("bogus").unwrap_err().to_string();
@@ -247,9 +290,9 @@ mod tests {
         // Any spec we can build from random in-range parameters must
         // canonicalize to a fixed point and rebuild an identical policy.
         proptest::check("policy spec roundtrip", 150, |g| {
-            let alpha = g.f64(0.0, 1.0);
+            let alpha = g.f64(1e-6, 1.0);
             let knee = -g.f64(1e-6, 2.0);
-            let hold = g.usize(0, 9);
+            let hold = g.usize(1, 9);
             let halflife = g.f64(0.1, 20.0);
             let det = if g.bool() { "paper-sign" } else { "drift-sign" };
             let specs = [
@@ -282,5 +325,46 @@ mod tests {
         for d in REGISTRY {
             assert!(d.summary.starts_with(d.name), "{}", d.name);
         }
+    }
+
+    /// Snapshot/restore contract for every registered policy: after any
+    /// sync history, a fresh policy restored from the snapshot must serve
+    /// the exact same weights for the exact same future contexts.
+    #[test]
+    fn every_registered_policy_snapshot_roundtrips() {
+        let history = [
+            (0usize, Some(-0.5), 0u32),
+            (1, Some(0.4), 2),
+            (0, Some(0.3), 0),
+            (2, None, 1),
+        ];
+        let future = [(0usize, Some(0.2), 0u32), (1, Some(-0.6), 0), (2, Some(0.1), 3)];
+        for spec in default_specs() {
+            let mut original = parse(&spec).unwrap();
+            original.init(3);
+            for &(w, a, m) in &history {
+                original.weights(&test_ctx(w, a, m));
+            }
+            let snap = original.snapshot();
+            // snapshots must survive the JSONL text round-trip
+            let snap = crate::util::json::Json::parse(&snap.to_string_compact()).unwrap();
+            let mut restored = parse(&spec).unwrap();
+            restored.init(3);
+            restored.restore(&snap).unwrap();
+            for &(w, a, m) in &future {
+                assert_eq!(
+                    original.weights(&test_ctx(w, a, m)),
+                    restored.weights(&test_ctx(w, a, m)),
+                    "{spec}: restored policy diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stateless_policies_reject_foreign_snapshots() {
+        let mut p = parse("fixed").unwrap();
+        assert_eq!(p.snapshot(), crate::util::json::Json::Null);
+        assert!(p.restore(&crate::util::json::Json::num(1.0)).is_err());
     }
 }

@@ -100,6 +100,26 @@ impl ScoreTracker {
     pub fn reset(&mut self) {
         self.history.clear();
     }
+
+    /// The retained u-value ring (newest last) — the tracker's only mutable
+    /// state, exposed for mid-trial checkpointing.
+    pub fn history(&self) -> &[f64] {
+        &self.history
+    }
+
+    /// Restore a ring previously read through [`ScoreTracker::history`].
+    /// The weights are config-derived and therefore not part of the
+    /// snapshot; only the ring length is validated.
+    pub fn restore_history(&mut self, history: Vec<f64>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            history.len() <= self.weights.len() + 1,
+            "score history of {} entries exceeds ring capacity {}",
+            history.len(),
+            self.weights.len() + 1
+        );
+        self.history = history;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -178,6 +178,26 @@ pub trait Engine {
     fn mean_costs(&self) -> (Option<f64>, Option<f64>) {
         (None, None)
     }
+
+    /// Engine-internal mutable state (noise RNG streams) for mid-trial
+    /// checkpointing; `Json::Null` when the engine keeps none (the XLA
+    /// engine — its per-call perf stats are diagnostics, not numerics).
+    /// Restoring the snapshot into a freshly built engine of the same
+    /// config must continue the exact draw sequence the snapshotted engine
+    /// would have produced.
+    fn state_snapshot(&self) -> crate::util::json::Json {
+        crate::util::json::Json::Null
+    }
+
+    /// Restore a snapshot produced by [`Engine::state_snapshot`] on an
+    /// identically-configured engine. The default accepts only `Null`.
+    fn state_restore(&mut self, state: &crate::util::json::Json) -> Result<()> {
+        anyhow::ensure!(
+            *state == crate::util::json::Json::Null,
+            "this engine keeps no internal state to restore"
+        );
+        Ok(())
+    }
 }
 
 /// Builds an engine inside the consuming thread.

@@ -287,6 +287,19 @@ impl Engine for QuadraticEngine {
         let loss = self.global_loss(theta);
         Ok(((-loss as f64).exp() as f32, loss))
     }
+
+    /// The gradient-noise RNG is this engine's only mutable state; the
+    /// spectrum/target/offset are pure functions of the constructor args.
+    fn state_snapshot(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![("rng", self.rng.state_json())])
+    }
+
+    fn state_restore(&mut self, state: &crate::util::json::Json) -> Result<()> {
+        use anyhow::Context as _;
+        self.rng = Rng::from_state_json(state.get("rng"))
+            .context("quadratic engine: bad rng snapshot")?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -377,6 +390,30 @@ mod tests {
             e2.exact_loss(&ada_theta),
             e1.exact_loss(&sgd_theta)
         );
+    }
+
+    #[test]
+    fn state_snapshot_continues_the_noise_stream_exactly() {
+        let mut a = QuadraticEngine::new(16, 11, 2, 0.3, 0.05);
+        let mut scratch = WorkerScratch::new(16);
+        let mut theta_a = vec![0.5; 16];
+        for _ in 0..7 {
+            a.sgd_step(&mut theta_a, empty_batch(), 0.05, &mut scratch).unwrap();
+        }
+        let snap = a.state_snapshot();
+        let mut b = QuadraticEngine::new(16, 11, 2, 0.3, 0.05);
+        b.state_restore(&snap).unwrap();
+        let mut theta_b = theta_a.clone();
+        for _ in 0..7 {
+            let la = a.sgd_step(&mut theta_a, empty_batch(), 0.05, &mut scratch).unwrap();
+            let lb = b.sgd_step(&mut theta_b, empty_batch(), 0.05, &mut scratch).unwrap();
+            assert_eq!(la.to_bits(), lb.to_bits());
+        }
+        assert_eq!(
+            theta_a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            theta_b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(b.state_restore(&crate::util::json::Json::Null).is_err());
     }
 
     #[test]

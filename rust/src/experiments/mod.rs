@@ -7,6 +7,7 @@
 //! | Fig 5 | training loss vs rounds, same grid                       | [`fig45_grid`] |
 //! | §VII  | final-accuracy ordering table                            | [`summary_table`] |
 //! | —     | sync-policy spec sweep (beyond the paper)                | [`policy_sweep`] |
+//! | —     | run-dir crash resume + figure re-materialization         | [`resume_run_dir`] |
 //!
 //! Every driver averages over `seeds` runs (the paper uses 3) and returns
 //! per-round mean series, so the bench binaries and examples print exactly
@@ -23,6 +24,6 @@ pub mod runner;
 
 pub use runner::{
     averaged_run, averaged_run_with, fig3_overlap_sweep, fig3_overlap_sweep_with, fig45_grid,
-    fig45_grid_with, policy_sweep, policy_sweep_with, series_by_cell, summary_table,
-    AveragedSeries, GridCell,
+    fig45_grid_with, policy_sweep, policy_sweep_with, resume_run_dir, series_by_cell,
+    series_from_records, summary_table, AveragedSeries, GridCell, ResumeReport,
 };

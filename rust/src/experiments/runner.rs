@@ -10,11 +10,14 @@
 
 use crate::config::ExperimentConfig;
 use crate::log_warn;
-use crate::schedule::{self, ScheduleOptions, TrialOutcome, TrialPlan};
+use crate::schedule::{
+    self, JsonlRunSink, ScheduleOptions, TrialOutcome, TrialPlan, TrialRecord, TrialSlot,
+};
 use crate::strategies::Method;
 use crate::util::stats::mean;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::fmt::Write as _;
+use std::path::Path;
 
 /// Per-round series averaged over seeds.
 #[derive(Clone, Debug)]
@@ -116,6 +119,103 @@ pub fn series_by_cell(plan: &TrialPlan, outcomes: &[TrialOutcome]) -> Vec<Averag
         i = j;
     }
     out
+}
+
+/// Aggregate committed records into averaged series straight from their
+/// stored identity — `series_by_cell` for a run directory instead of an
+/// in-memory plan. Records group by their `cell` key, ordered by
+/// (cell, seed index); the series label is the cell key (unique in a run
+/// file, unlike display labels which repeat across grid cells).
+pub fn series_from_records(records: &[TrialRecord]) -> Vec<AveragedSeries> {
+    let mut sorted: Vec<&TrialRecord> = records.iter().collect();
+    sorted.sort_by(|a, b| (&a.cell, a.seed_index).cmp(&(&b.cell, b.seed_index)));
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < sorted.len() {
+        let cell = &sorted[i].cell;
+        let mut j = i;
+        let mut group: Vec<TrialOutcome> = Vec::new();
+        while j < sorted.len() && sorted[j].cell == *cell {
+            group.push(TrialOutcome {
+                record: sorted[j].clone(),
+                wall_secs: 0.0,
+                cached: true,
+                perf: String::new(),
+            });
+            j += 1;
+        }
+        let refs: Vec<&TrialOutcome> = group.iter().collect();
+        out.push(average_cell(cell, &refs));
+        i = j;
+    }
+    out
+}
+
+/// What [`resume_run_dir`] did.
+pub struct ResumeReport {
+    /// Trials already committed in the run file before this invocation.
+    pub committed: usize,
+    /// Half-finished trials completed now, from their checkpoints.
+    pub finished: usize,
+    /// Every committed trial (old + newly finished), averaged per cell.
+    pub series: Vec<AveragedSeries>,
+}
+
+/// `deahes resume <run-dir>`: finish every half-run trial recorded in
+/// `runs.jsonl` (continuing from its latest mid-trial checkpoint instead
+/// of re-running), then re-materialize the figures from the committed
+/// records alone — no memory of the original sweep command needed.
+pub fn resume_run_dir(dir: &Path, jobs: usize) -> Result<ResumeReport> {
+    let path = dir.join(schedule::RUNS_FILE);
+    // Lock BEFORE the scan: the scan's contents feed straight into the
+    // execution, so no concurrent sweep may append in between (and the
+    // file — checkpoint records carry parameter-sized blobs — is only
+    // parsed once, not re-loaded by the executor).
+    let lock = schedule::RunDirLock::acquire(dir)?;
+    let (committed, pending) = JsonlRunSink::load_with_checkpoints(&path)?;
+    if committed.is_empty() && pending.is_empty() {
+        bail!("{} holds no committed trials and no mid-trial checkpoints", path.display());
+    }
+    // Rebuild a continuation plan from checkpoint identity. BTreeMap order
+    // (fingerprint) keeps the plan deterministic across invocations.
+    let mut plan = TrialPlan::new();
+    for cp in pending.values() {
+        plan.push_slot(TrialSlot {
+            cell: cp.cell.clone(),
+            label: cp.label.clone(),
+            seed_index: cp.seed_index,
+            config: cp.config.clone(),
+            fingerprint: cp.fingerprint.clone(),
+        });
+    }
+    let finished = plan.len();
+    let committed_count = committed.len();
+    let records: Vec<TrialRecord> = if finished > 0 {
+        // Hand the held lock and the pending scan straight to the executor
+        // (the plan holds only pending fingerprints, so the committed-cache
+        // side of the preload is irrelevant — pass it empty and keep our
+        // copy); trials keep checkpointing at their stored cadence. The
+        // final record set is committed ∪ newly-executed outcomes — no
+        // re-read of runs.jsonl, and in particular no read after the lock
+        // has been released.
+        let opts = ScheduleOptions {
+            jobs: jobs.max(1),
+            run_dir: Some(dir.to_path_buf()),
+            resume: true,
+            ..ScheduleOptions::default()
+        };
+        let preloaded = (std::collections::BTreeMap::new(), pending);
+        let report = schedule::execute_plan_locked(&plan, &opts, Some(lock), Some(preloaded))?;
+        committed
+            .into_values()
+            .chain(report.outcomes.into_iter().map(|o| o.record))
+            .collect()
+    } else {
+        drop(lock);
+        committed.into_values().collect()
+    };
+    let series = series_from_records(&records);
+    Ok(ResumeReport { committed: committed_count, finished, series })
 }
 
 /// Run `cfg` once per derived seed and average the per-round series.
@@ -468,6 +568,34 @@ mod tests {
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].label, "fixed(alpha=0.1)");
         assert_eq!(out[1].label, "oracle(alpha=0.1)");
+    }
+
+    /// `series_from_records` must reproduce `series_by_cell`'s numbers from
+    /// the committed records alone (cell-keyed labels, lexicographic cell
+    /// order) — the `deahes resume` re-materialization path.
+    #[test]
+    fn series_from_records_matches_plan_based_aggregation() {
+        let cfg = quad_cfg();
+        let mut plan = TrialPlan::new();
+        plan.push_cell("b-cell", "b", &cfg, 2);
+        plan.push_cell("a-cell", "a", &cfg, 1);
+        let report = schedule::execute_plan(&plan, &ScheduleOptions::default()).unwrap();
+        let by_plan = series_by_cell(&plan, &report.outcomes);
+        let records: Vec<TrialRecord> =
+            report.outcomes.iter().map(|o| o.record.clone()).collect();
+        let by_records = series_from_records(&records);
+        assert_eq!(by_records.len(), 2);
+        // record-based output is cell-sorted and labelled by cell key
+        assert_eq!(by_records[0].label, "a-cell");
+        assert_eq!(by_records[1].label, "b-cell");
+        let find = |label: &str| by_plan.iter().find(|s| s.label == label).unwrap();
+        assert_eq!(
+            by_records[0].test_acc,
+            find("a").test_acc,
+            "a-cell numbers must match the plan aggregation"
+        );
+        assert_eq!(by_records[1].test_acc, find("b").test_acc);
+        assert_eq!(by_records[1].final_acc_mean.to_bits(), find("b").final_acc_mean.to_bits());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //!   fig3          regenerate the paper's Fig. 3 (overlap-ratio sweep)
 //!   grid          regenerate Figs. 4+5 (method × workers × tau grid)
 //!   policy-sweep  compare sync-policy specs on one config (policy axis)
+//!   resume        finish half-run trials in a run dir + re-materialize figures
 //!   bench         hot-path micro/macro benchmarks -> BENCH_hotpath.json
 //!   inspect       validate artifacts/metadata.json and time each artifact
 //!   datagen       dump synthetic-MNIST samples as ASCII (sanity check)
@@ -25,6 +26,12 @@
 //!   deahes grid --engine quad --jobs 4 --run-dir runs/grid --resume
 //! `train` routes through a 1-slot plan, so single runs commit/resume the
 //! same way (the seed is used verbatim — numbers match a plan-less run).
+//! `--checkpoint-every N` additionally writes a mid-trial checkpoint record
+//! every N rounds, so a killed run loses at most N rounds of the trial in
+//! flight — `deahes resume <run-dir>` (or re-running the sweep with
+//! `--resume`) continues it from the latest checkpoint, bit-identically on
+//! the quad engine:
+//!   deahes resume runs/grid
 
 use deahes::config::{EngineKind, ExperimentConfig, GossipMode};
 use deahes::coordinator::{sim, FailureModel};
@@ -63,6 +70,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "fig3" => cmd_fig3(rest),
         "grid" => cmd_grid(rest),
         "policy-sweep" => cmd_policy_sweep(rest),
+        "resume" => cmd_resume(rest),
         "bench" => cmd_bench(rest),
         "inspect" => cmd_inspect(rest),
         "datagen" => cmd_datagen(rest),
@@ -83,6 +91,7 @@ fn print_usage() {
          \x20 fig3          overlap-ratio sweep (paper Fig. 3)\n\
          \x20 grid          method × workers × tau grid (paper Figs. 4+5)\n\
          \x20 policy-sweep  sync-policy specs compared on one config\n\
+         \x20 resume        finish half-run trials in a run dir, re-materialize figures\n\
          \x20 bench         hot-path micro/macro benchmarks (BENCH_hotpath.json)\n\
          \x20 inspect       validate + time the AOT artifacts\n\
          \x20 datagen       preview synthetic-MNIST samples\n\
@@ -144,6 +153,11 @@ fn sweep_cli(name: &str, about: &str) -> Cli {
         .opt("seeds", "3", "runs to average per sweep cell")
         .opt("jobs", "1", "trials in flight (>1 selects the thread-pool backend)")
         .opt("run-dir", "", "persist each finished trial to <dir>/runs.jsonl")
+        .opt(
+            "checkpoint-every",
+            "0",
+            "write a mid-trial checkpoint record every N rounds (0 = off; needs --run-dir)",
+        )
         .flag("resume", "skip trials already committed in --run-dir")
 }
 
@@ -157,18 +171,43 @@ fn schedule_options(a: &Args) -> Result<ScheduleOptions> {
     if resume && run_dir.is_none() {
         bail!("--resume needs --run-dir to resume from");
     }
-    Ok(ScheduleOptions { jobs, run_dir, resume })
+    let checkpoint_every = a.u64("checkpoint-every");
+    if checkpoint_every > 0 && run_dir.is_none() {
+        bail!("--checkpoint-every needs --run-dir for the checkpoint records to land in");
+    }
+    Ok(ScheduleOptions {
+        jobs,
+        run_dir,
+        resume,
+        checkpoint_every,
+        ..ScheduleOptions::default()
+    })
 }
 
 /// Schedule options for single-run subcommands (`train`): no `--jobs` flag,
-/// one trial in flight.
+/// one trial in flight; `train` additionally exposes the crash-injection
+/// testing flag the CI kill-and-resume smoke uses.
 fn schedule_options_single(a: &Args) -> Result<ScheduleOptions> {
     let run_dir = a.opt_nonempty("run-dir").map(PathBuf::from);
     let resume = a.flag("resume");
     if resume && run_dir.is_none() {
         bail!("--resume needs --run-dir to resume from");
     }
-    Ok(ScheduleOptions { jobs: 1, run_dir, resume })
+    let checkpoint_every = a.u64("checkpoint-every");
+    if checkpoint_every > 0 && run_dir.is_none() {
+        bail!("--checkpoint-every needs --run-dir for the checkpoint records to land in");
+    }
+    let crash_after_checkpoints = a.u64("crash-after-checkpoints");
+    if crash_after_checkpoints > 0 && checkpoint_every == 0 {
+        bail!("--crash-after-checkpoints needs --checkpoint-every to write any checkpoints");
+    }
+    Ok(ScheduleOptions {
+        jobs: 1,
+        run_dir,
+        resume,
+        checkpoint_every,
+        crash_after_checkpoints,
+    })
 }
 
 /// Policy specs are self-contained: when one is given, the classic
@@ -252,6 +291,17 @@ fn config_from_args(a: &Args) -> Result<ExperimentConfig> {
 fn cmd_train(argv: Vec<String>) -> Result<()> {
     let a = experiment_cli("deahes train", "run one experiment")
         .opt("run-dir", "", "commit the run to <dir>/runs.jsonl (resumable like a sweep)")
+        .opt(
+            "checkpoint-every",
+            "0",
+            "write a mid-trial checkpoint record every N rounds (0 = off; needs --run-dir)",
+        )
+        .opt(
+            "crash-after-checkpoints",
+            "0",
+            "TESTING: abort the run after N checkpoints were written (crash injection \
+             for the kill-and-resume smoke; 0 = off)",
+        )
         .flag("resume", "skip the run if its fingerprint is already committed in --run-dir")
         .parse(&argv)
         .map_err(anyhow::Error::msg)?;
@@ -464,6 +514,49 @@ fn cmd_policy_sweep(argv: Vec<String>) -> Result<()> {
     for s in &out {
         println!(
             "{:<55} {:>10.2}% {:>11.4}",
+            s.label,
+            s.final_acc_mean * 100.0,
+            s.final_train_loss
+        );
+    }
+    Ok(())
+}
+
+fn cmd_resume(argv: Vec<String>) -> Result<()> {
+    let a = Cli::new(
+        "deahes resume",
+        "finish half-run trials in a run directory (from their mid-trial checkpoints) \
+         and re-materialize figures straight from runs.jsonl",
+    )
+    .opt("jobs", "1", "trials in flight while finishing (>1 selects the thread pool)")
+    .flag("quiet", "suppress info logging")
+    .parse(&argv)
+    .map_err(anyhow::Error::msg)?;
+    if a.flag("quiet") {
+        logging::init(Level::Warn);
+    }
+    let [dir] = a.positional.as_slice() else {
+        bail!("usage: deahes resume <run-dir> [--jobs N] (got {} args)", a.positional.len());
+    };
+    let jobs = a.usize("jobs");
+    if jobs == 0 {
+        bail!("--jobs must be >= 1");
+    }
+    let report = experiments::resume_run_dir(std::path::Path::new(dir), jobs)?;
+    println!(
+        "{dir}: {} trial(s) were already committed, {} finished from mid-trial checkpoints",
+        report.committed, report.finished
+    );
+    let series: Vec<(&str, Vec<f64>)> = report
+        .series
+        .iter()
+        .map(|s| (s.label.as_str(), s.test_acc.clone()))
+        .collect();
+    print!("{}", ascii_chart("test accuracy over rounds (from runs.jsonl)", &series, 72, 16));
+    println!("{:<52} {:>11} {:>11}", "cell", "final acc", "train loss");
+    for s in &report.series {
+        println!(
+            "{:<52} {:>10.2}% {:>11.4}",
             s.label,
             s.final_acc_mean * 100.0,
             s.final_train_loss

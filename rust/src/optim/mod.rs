@@ -55,6 +55,61 @@ impl OptState {
             OptState::AdaHessian { .. } => Optimizer::AdaHessian,
         }
     }
+
+    /// Bit-exact snapshot of the optimizer state for mid-trial
+    /// checkpointing (f32 buffers as hex blobs — see `util::bits`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::bits;
+        use crate::util::json::Json;
+        match self {
+            OptState::Sgd => Json::obj(vec![("kind", Json::str("sgd"))]),
+            OptState::Momentum { buf } => Json::obj(vec![
+                ("kind", Json::str("momentum")),
+                ("buf", Json::str(&bits::f32s_hex(buf))),
+            ]),
+            OptState::AdaHessian { m, v, t } => Json::obj(vec![
+                ("kind", Json::str("adahessian")),
+                ("m", Json::str(&bits::f32s_hex(m))),
+                ("v", Json::str(&bits::f32s_hex(v))),
+                ("t", Json::num(*t as f64)),
+            ]),
+        }
+    }
+
+    /// Inverse of [`OptState::to_json`]; the snapshot must match this
+    /// state's optimizer kind and buffer sizes (both derive from config).
+    pub fn restore_json(&mut self, j: &crate::util::json::Json) -> anyhow::Result<()> {
+        use crate::util::bits;
+        use anyhow::{bail, ensure, Context as _};
+        let kind = j.get("kind").as_str().context("opt state: missing 'kind'")?;
+        ensure!(
+            kind == self.optimizer().name(),
+            "opt state: snapshot is for '{kind}', this run uses '{}'",
+            self.optimizer().name()
+        );
+        match self {
+            OptState::Sgd => {}
+            OptState::Momentum { buf } => {
+                let blob = j.get("buf").as_str().context("opt state: missing 'buf'")?;
+                let restored = bits::f32s_from_hex(blob)?;
+                ensure!(restored.len() == buf.len(), "opt state: momentum buffer size mismatch");
+                *buf = restored;
+            }
+            OptState::AdaHessian { m, v, t } => {
+                let rm =
+                    bits::f32s_from_hex(j.get("m").as_str().context("opt state: missing 'm'")?)?;
+                let rv =
+                    bits::f32s_from_hex(j.get("v").as_str().context("opt state: missing 'v'")?)?;
+                if rm.len() != m.len() || rv.len() != v.len() {
+                    bail!("opt state: adahessian moment size mismatch");
+                }
+                *m = rm;
+                *v = rv;
+                *t = j.get("t").as_f64().context("opt state: missing 't'")? as u64;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -66,6 +121,42 @@ mod tests {
         for opt in [Optimizer::Sgd, Optimizer::Momentum, Optimizer::AdaHessian] {
             let s = OptState::new(opt, 8);
             assert_eq!(s.optimizer(), opt);
+        }
+    }
+
+    #[test]
+    fn opt_state_json_roundtrips_bitwise() {
+        let src = OptState::AdaHessian {
+            m: vec![0.25, -1.5e-8, f32::NAN],
+            v: vec![1.0, 2.0, 3.0],
+            t: 41,
+        };
+        let mut dst = OptState::new(Optimizer::AdaHessian, 3);
+        dst.restore_json(&src.to_json()).unwrap();
+        match (&src, &dst) {
+            (
+                OptState::AdaHessian { m: ma, v: va, t: ta },
+                OptState::AdaHessian { m: mb, v: vb, t: tb },
+            ) => {
+                assert_eq!(ta, tb);
+                assert_eq!(
+                    ma.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    mb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+                assert_eq!(va, vb);
+            }
+            _ => unreachable!(),
+        }
+        // kind and size mismatches are hard errors
+        assert!(OptState::new(Optimizer::Sgd, 3).restore_json(&src.to_json()).is_err());
+        assert!(OptState::new(Optimizer::AdaHessian, 4).restore_json(&src.to_json()).is_err());
+        // momentum buffer round-trip
+        let mom = OptState::Momentum { buf: vec![0.5, -0.25] };
+        let mut back = OptState::new(Optimizer::Momentum, 2);
+        back.restore_json(&mom.to_json()).unwrap();
+        match back {
+            OptState::Momentum { buf } => assert_eq!(buf, vec![0.5, -0.25]),
+            _ => unreachable!(),
         }
     }
 

@@ -16,18 +16,92 @@
 
 use crate::coordinator::sim;
 use crate::log_info;
+use crate::schedule::checkpoint::TrialCheckpoint;
 use crate::schedule::commit::Committer;
 use crate::schedule::plan::TrialSlot;
 use crate::schedule::record::{TrialOutcome, TrialRecord};
-use anyhow::{Context, Result};
+use crate::schedule::sink::CheckpointWriter;
+use anyhow::{bail, Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::time::Instant;
 
-/// Run one slot to completion on the calling thread.
-pub fn run_trial(slot: &TrialSlot) -> Result<TrialOutcome> {
+/// One schedulable unit: the plan index, the slot, and — when resuming a
+/// sweep whose process died mid-trial — the checkpoint to continue from.
+#[derive(Clone, Debug)]
+pub struct PlannedTrial {
+    pub index: usize,
+    pub slot: TrialSlot,
+    pub resume_from: Option<TrialCheckpoint>,
+}
+
+/// Shared mid-trial checkpoint plumbing for one plan execution: every
+/// running trial appends its periodic checkpoints through the same writer
+/// (same open `runs.jsonl`, line-atomic under its lock).
+#[derive(Clone)]
+pub struct CheckpointCtx {
+    /// Plan-level cadence in rounds. 0 = no new cadence; trials resumed
+    /// from a checkpoint then keep the cadence stored in it.
+    pub every: u64,
+    pub writer: CheckpointWriter,
+    /// Testing aid (CI kill-and-resume smoke, crash-injection tests):
+    /// abort the trial with an error after this many checkpoints have been
+    /// written. 0 = never.
+    pub crash_after: u64,
+}
+
+/// Run one trial to completion on the calling thread, resuming from its
+/// checkpoint when one is present and writing new checkpoints through
+/// `ckpt`.
+pub fn run_trial(trial: &PlannedTrial, ckpt: Option<&CheckpointCtx>) -> Result<TrialOutcome> {
     let t0 = Instant::now();
-    let r = sim::run(&slot.config).with_context(|| {
+    let slot = &trial.slot;
+    let resume_state = trial.resume_from.as_ref().map(|cp| &cp.state);
+    if let Some(cp) = &trial.resume_from {
+        log_info!(
+            "{} seed[{}]: resuming from mid-trial checkpoint at round {}",
+            slot.cell,
+            slot.seed_index,
+            cp.next_round()
+        );
+    }
+    // Cadence: an explicit plan-level cadence wins; otherwise a resumed
+    // trial keeps checkpointing at the cadence its writer used.
+    let every = match (ckpt, &trial.resume_from) {
+        (Some(c), _) if c.every > 0 => c.every,
+        (Some(_), Some(resumed)) => resumed.every,
+        _ => 0,
+    };
+    let r = match ckpt {
+        Some(ctx) if every > 0 => {
+            let writer = ctx.writer.clone();
+            let crash_after = ctx.crash_after;
+            let mut written = 0u64;
+            let mut save = |state: crate::coordinator::checkpoint::RunCheckpoint| -> Result<()> {
+                writer.append(&TrialCheckpoint {
+                    fingerprint: slot.fingerprint.clone(),
+                    cell: slot.cell.clone(),
+                    label: slot.label.clone(),
+                    seed_index: slot.seed_index,
+                    config: slot.config.clone(),
+                    every,
+                    state,
+                })?;
+                written += 1;
+                if crash_after > 0 && written >= crash_after {
+                    bail!("crash injection: aborting after {written} checkpoint(s)");
+                }
+                Ok(())
+            };
+            sim::run_with(
+                &slot.config,
+                resume_state,
+                Some(sim::CheckpointHooks { every, save: &mut save }),
+            )
+        }
+        _ => sim::run_with(&slot.config, resume_state, None),
+    }
+    .with_context(|| {
         format!("trial {} [{} seed {}]", slot.fingerprint, slot.cell, slot.seed_index)
     })?;
     log_info!(
@@ -50,10 +124,14 @@ pub fn run_trial(slot: &TrialSlot) -> Result<TrialOutcome> {
 pub trait TrialBackend {
     fn name(&self) -> &'static str;
 
-    /// Execute every `(plan index, slot)` pair, delivering outcomes to the
-    /// committer (in any order).
-    fn execute(&self, trials: &[(usize, TrialSlot)], committer: &mut Committer<'_>)
-        -> Result<()>;
+    /// Execute every planned trial, delivering outcomes to the committer
+    /// (in any order).
+    fn execute(
+        &self,
+        trials: &[PlannedTrial],
+        ckpt: Option<&CheckpointCtx>,
+        committer: &mut Committer<'_>,
+    ) -> Result<()>;
 }
 
 /// Current behaviour: strictly one trial at a time, in plan order.
@@ -66,11 +144,12 @@ impl TrialBackend for SequentialBackend {
 
     fn execute(
         &self,
-        trials: &[(usize, TrialSlot)],
+        trials: &[PlannedTrial],
+        ckpt: Option<&CheckpointCtx>,
         committer: &mut Committer<'_>,
     ) -> Result<()> {
-        for (index, slot) in trials {
-            committer.offer(*index, run_trial(slot)?)?;
+        for trial in trials {
+            committer.offer(trial.index, run_trial(trial, ckpt)?)?;
         }
         Ok(())
     }
@@ -89,7 +168,8 @@ impl TrialBackend for ThreadPoolBackend {
 
     fn execute(
         &self,
-        trials: &[(usize, TrialSlot)],
+        trials: &[PlannedTrial],
+        ckpt: Option<&CheckpointCtx>,
         committer: &mut Committer<'_>,
     ) -> Result<()> {
         let n = trials.len();
@@ -110,9 +190,9 @@ impl TrialBackend for ThreadPoolBackend {
                         if i >= n {
                             break;
                         }
-                        let (index, slot) = &trials[i];
-                        let out = run_trial(slot);
-                        if tx.send((*index, out)).is_err() {
+                        let trial = &trials[i];
+                        let out = run_trial(trial, ckpt);
+                        if tx.send((trial.index, out)).is_err() {
                             break; // receiver gone: shut down quietly
                         }
                     })
@@ -175,11 +255,16 @@ mod tests {
 
     fn run_with(backend: &dyn TrialBackend) -> Vec<TrialOutcome> {
         let p = plan();
-        let trials: Vec<(usize, TrialSlot)> =
-            p.slots.iter().cloned().enumerate().collect();
+        let trials: Vec<PlannedTrial> = p
+            .slots
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(index, slot)| PlannedTrial { index, slot, resume_from: None })
+            .collect();
         let mut sink = NullSink;
         let mut committer = Committer::new(trials.len(), &mut sink);
-        backend.execute(&trials, &mut committer).unwrap();
+        backend.execute(&trials, None, &mut committer).unwrap();
         committer.finish().unwrap()
     }
 

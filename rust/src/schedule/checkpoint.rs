@@ -1,0 +1,143 @@
+//! Trial-level checkpoint records in the JSONL run sink.
+//!
+//! A [`TrialCheckpoint`] wraps a coordinator [`RunCheckpoint`] with the
+//! trial's full sink identity — fingerprint, plan coordinates and the
+//! resolved config — so `deahes resume <run-dir>` can rebuild a
+//! continuation plan from `runs.jsonl` alone, with no memory of the sweep
+//! command that wrote it. Checkpoint lines live in the same append-only
+//! file as committed [`TrialRecord`](crate::schedule::record::TrialRecord)
+//! lines, marked by [`CHECKPOINT_KEY`]; the resume loader keeps the latest
+//! valid checkpoint per fingerprint and drops every checkpoint whose trial
+//! has already committed (a committed record always wins). Each line also
+//! repeats the config-schema hash the file header carries, so a checkpoint
+//! spliced into a foreign file can never restore under the wrong schema.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::checkpoint::RunCheckpoint;
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+
+/// Marker key identifying a checkpoint line in a run file.
+pub const CHECKPOINT_KEY: &str = "deahes_checkpoint";
+
+/// One mid-trial checkpoint as persisted in `runs.jsonl`.
+#[derive(Clone, Debug)]
+pub struct TrialCheckpoint {
+    pub fingerprint: String,
+    pub cell: String,
+    pub label: String,
+    pub seed_index: u64,
+    pub config: ExperimentConfig,
+    /// Cadence (rounds between cuts) the writing run used — a resumed run
+    /// keeps it unless the caller overrides.
+    pub every: u64,
+    pub state: RunCheckpoint,
+}
+
+impl TrialCheckpoint {
+    /// First round a resume of this checkpoint executes.
+    pub fn next_round(&self) -> u64 {
+        self.state.next_round
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (CHECKPOINT_KEY, Json::num(1.0)),
+            ("schema", Json::str(&crate::schedule::sink::config_schema_hash())),
+            ("fingerprint", Json::str(&self.fingerprint)),
+            ("cell", Json::str(&self.cell)),
+            ("label", Json::str(&self.label)),
+            ("seed_index", Json::num(self.seed_index as f64)),
+            ("config", self.config.to_json()),
+            ("every", Json::num(self.every as f64)),
+            ("state", self.state.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrialCheckpoint> {
+        ensure!(
+            *j.get(CHECKPOINT_KEY) != Json::Null,
+            "not a checkpoint line (missing '{CHECKPOINT_KEY}')"
+        );
+        let schema = j.get("schema").as_str().unwrap_or("");
+        let ours = crate::schedule::sink::config_schema_hash();
+        ensure!(
+            schema == ours,
+            "checkpoint written under config schema {schema}, this build uses {ours}"
+        );
+        Ok(TrialCheckpoint {
+            fingerprint: j
+                .get("fingerprint")
+                .as_str()
+                .context("checkpoint: missing 'fingerprint'")?
+                .to_string(),
+            cell: j.get("cell").as_str().context("checkpoint: missing 'cell'")?.to_string(),
+            label: j.get("label").as_str().unwrap_or("").to_string(),
+            seed_index: j.get("seed_index").as_f64().unwrap_or(0.0) as u64,
+            config: ExperimentConfig::from_json(j.get("config"))
+                .context("checkpoint: bad 'config'")?,
+            every: j.get("every").as_f64().unwrap_or(0.0) as u64,
+            state: RunCheckpoint::from_json(j.get("state"))
+                .context("checkpoint: bad 'state'")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::checkpoint::DRIVER_SEQUENTIAL;
+    use crate::metrics::MetricsLog;
+
+    fn sample() -> TrialCheckpoint {
+        TrialCheckpoint {
+            fingerprint: "feedfacefeedface".into(),
+            cell: "fig3/r=0.25".into(),
+            label: "r=25.0%".into(),
+            seed_index: 1,
+            config: ExperimentConfig::default(),
+            every: 10,
+            state: RunCheckpoint {
+                driver: DRIVER_SEQUENTIAL.into(),
+                next_round: 0,
+                master: Json::Null,
+                workers: vec![],
+                gossip: vec![],
+                engines: Json::Null,
+                rngs: Json::Null,
+                log: MetricsLog::default(),
+                per_round_syncs: vec![],
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrips_with_identity_and_marker() {
+        let cp = sample();
+        let j = cp.to_json();
+        assert_eq!(*j.get(CHECKPOINT_KEY), Json::num(1.0));
+        let back = TrialCheckpoint::from_json(&Json::parse(&j.to_string_compact()).unwrap())
+            .unwrap();
+        assert_eq!(back.fingerprint, cp.fingerprint);
+        assert_eq!(back.cell, cp.cell);
+        assert_eq!(back.label, cp.label);
+        assert_eq!(back.seed_index, 1);
+        assert_eq!(back.every, 10);
+        assert_eq!(back.next_round(), 0);
+    }
+
+    #[test]
+    fn wrong_schema_is_rejected() {
+        let mut j = sample().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::str("0123456789abcdef"));
+        }
+        let err = TrialCheckpoint::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("schema"), "{err}");
+    }
+
+    #[test]
+    fn non_checkpoint_lines_are_rejected() {
+        assert!(TrialCheckpoint::from_json(&Json::obj(vec![("x", Json::num(1.0))])).is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Advisory multi-process lock on a run directory.
+//!
+//! Two concurrent sweeps appending to one `runs.jsonl` would interleave
+//! writes (and race the resume cache); [`RunDirLock::acquire`] makes the
+//! second process fail fast with a clear message instead. The lock is a
+//! `runs.lock` file created with `O_EXCL` carrying the holder's pid —
+//! dependency-free (no `flock` crate offline) and crash-tolerant: a lock
+//! left behind by a dead process is detected via `/proc/<pid>` and stolen.
+//! On non-Linux hosts liveness cannot be probed portably, so an existing
+//! lock is conservatively treated as held.
+//!
+//! The steal path (probe, remove, recreate) has a small race window if two
+//! processes steal the same stale lock simultaneously; the lock is
+//! advisory, and the window only exists when a third process already
+//! crashed. Dropping the guard removes the file.
+
+use crate::log_warn;
+use anyhow::{bail, Context, Result};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// File name of the lock inside a run directory.
+pub const LOCK_FILE: &str = "runs.lock";
+
+/// Held lock on a run directory; released (file removed) on drop.
+#[derive(Debug)]
+pub struct RunDirLock {
+    path: PathBuf,
+}
+
+fn process_alive(pid: u32) -> bool {
+    if cfg!(target_os = "linux") {
+        Path::new(&format!("/proc/{pid}")).exists()
+    } else {
+        // No portable liveness probe: assume the holder is alive (the safe
+        // direction — a stale lock then needs manual deletion).
+        true
+    }
+}
+
+impl RunDirLock {
+    pub fn acquire(dir: &Path) -> Result<RunDirLock> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating run directory {}", dir.display()))?;
+        let path = dir.join(LOCK_FILE);
+        // A few attempts so one stale-lock steal can retry the create; two
+        // LIVE contenders never loop (they bail on the alive check).
+        for _ in 0..5 {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    writeln!(f, "{}", std::process::id())
+                        .and_then(|_| f.flush())
+                        .with_context(|| format!("writing lock {}", path.display()))?;
+                    return Ok(RunDirLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let holder = std::fs::read_to_string(&path).unwrap_or_default();
+                    match holder.trim().parse::<u32>() {
+                        Ok(pid) if !process_alive(pid) => {
+                            log_warn!(
+                                "run dir {}: stealing lock left by dead process {pid}",
+                                dir.display()
+                            );
+                            let _ = std::fs::remove_file(&path);
+                            continue;
+                        }
+                        Ok(pid) => bail!(
+                            "run directory {} is locked by running process {pid}: two sweeps \
+                             must not share one runs.jsonl (wait for it, use another \
+                             --run-dir, or delete {} if you are certain nothing is running)",
+                            dir.display(),
+                            path.display()
+                        ),
+                        Err(_) => bail!(
+                            "run directory {} has an unreadable lock file {} — delete it if \
+                             no sweep is running",
+                            dir.display(),
+                            path.display()
+                        ),
+                    }
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("creating lock {}", path.display()))
+                }
+            }
+        }
+        bail!(
+            "could not acquire {} after repeated stale-lock steals (another process keeps \
+             crashing while holding it?)",
+            path.display()
+        )
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for RunDirLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("deahes-lock-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn second_acquire_fails_while_held_then_succeeds_after_release() {
+        let dir = tmp_dir("held");
+        let _ = std::fs::remove_dir_all(&dir);
+        let lock = RunDirLock::acquire(&dir).unwrap();
+        assert!(lock.path().exists());
+        let err = RunDirLock::acquire(&dir).unwrap_err().to_string();
+        assert!(err.contains("locked by running process"), "{err}");
+        drop(lock);
+        assert!(!dir.join(LOCK_FILE).exists(), "drop must remove the lock file");
+        let again = RunDirLock::acquire(&dir).unwrap();
+        drop(again);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn stale_lock_of_a_dead_pid_is_stolen() {
+        let dir = tmp_dir("stale");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // pid_max on Linux caps at 2^22; this pid cannot exist
+        std::fs::write(dir.join(LOCK_FILE), "4194399\n").unwrap();
+        let lock = RunDirLock::acquire(&dir).unwrap();
+        drop(lock);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn garbage_lock_content_fails_with_guidance() {
+        let dir = tmp_dir("garbage");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(LOCK_FILE), "not-a-pid\n").unwrap();
+        let err = RunDirLock::acquire(&dir).unwrap_err().to_string();
+        assert!(err.contains("unreadable lock"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -23,16 +23,22 @@
 //!    the cached records without re-running them.
 
 pub mod backend;
+pub mod checkpoint;
 pub mod commit;
+pub mod lock;
 pub mod plan;
 pub mod record;
 pub mod sink;
 
-pub use backend::{SequentialBackend, ThreadPoolBackend, TrialBackend};
+pub use backend::{
+    CheckpointCtx, PlannedTrial, SequentialBackend, ThreadPoolBackend, TrialBackend,
+};
+pub use checkpoint::{TrialCheckpoint, CHECKPOINT_KEY};
 pub use commit::Committer;
+pub use lock::RunDirLock;
 pub use plan::{fingerprint, trial_seed, TrialPlan, TrialSlot};
 pub use record::{TrialOutcome, TrialRecord};
-pub use sink::{config_schema_hash, JsonlRunSink, NullSink, RunSink};
+pub use sink::{config_schema_hash, CheckpointWriter, JsonlRunSink, NullSink, RunSink};
 
 use crate::{log_info, log_warn};
 use anyhow::{bail, Result};
@@ -48,13 +54,27 @@ pub struct ScheduleOptions {
     pub jobs: usize,
     /// Directory holding `runs.jsonl`; `None` disables persistence.
     pub run_dir: Option<PathBuf>,
-    /// Skip trials whose fingerprint is already committed in the run dir.
+    /// Skip trials whose fingerprint is already committed in the run dir,
+    /// and restart half-finished trials from their latest checkpoint.
     pub resume: bool,
+    /// Mid-trial checkpoint cadence: a `checkpoint` record is appended to
+    /// `runs.jsonl` every this many rounds inside every running trial
+    /// (0 = off). Requires `run_dir`.
+    pub checkpoint_every: u64,
+    /// Testing aid: abort each trial after it wrote this many checkpoints
+    /// (0 = never). See `CheckpointCtx::crash_after`.
+    pub crash_after_checkpoints: u64,
 }
 
 impl Default for ScheduleOptions {
     fn default() -> Self {
-        ScheduleOptions { jobs: 1, run_dir: None, resume: false }
+        ScheduleOptions {
+            jobs: 1,
+            run_dir: None,
+            resume: false,
+            checkpoint_every: 0,
+            crash_after_checkpoints: 0,
+        }
     }
 }
 
@@ -79,15 +99,44 @@ pub fn make_backend(jobs: usize) -> Box<dyn TrialBackend> {
     }
 }
 
-/// Execute a plan end to end: resolve resume hits, run the rest through the
+/// Execute a plan end to end: take the run-dir lock, resolve resume hits
+/// (committed records AND mid-trial checkpoints), run the rest through the
 /// chosen backend, commit deterministically, and return ordered outcomes.
 pub fn execute_plan(plan: &TrialPlan, opts: &ScheduleOptions) -> Result<ScheduleReport> {
+    let lock = match &opts.run_dir {
+        Some(dir) => Some(RunDirLock::acquire(dir)?),
+        None => None,
+    };
+    execute_plan_locked(plan, opts, lock, None)
+}
+
+/// [`execute_plan`] for callers that already hold the run-dir lock and may
+/// have pre-loaded the sink (`deahes resume` pre-scans `runs.jsonl` to
+/// build its continuation plan; checkpoint records carry parameter-sized
+/// blobs, so re-reading the file is worth avoiding — and taking the lock
+/// before that scan closes the window where a concurrent sweep could
+/// append between scan and execution).
+pub(crate) fn execute_plan_locked(
+    plan: &TrialPlan,
+    opts: &ScheduleOptions,
+    lock: Option<RunDirLock>,
+    preloaded: Option<sink::SinkContents>,
+) -> Result<ScheduleReport> {
     let mut cache = std::collections::BTreeMap::new();
+    let mut checkpoints: std::collections::BTreeMap<String, TrialCheckpoint> =
+        std::collections::BTreeMap::new();
+    let mut ckpt_ctx: Option<CheckpointCtx> = None;
+    // Held for the whole execution; released (file removed) on return.
+    let _lock = lock;
     let mut sink: Box<dyn RunSink> = match &opts.run_dir {
         Some(dir) => {
+            debug_assert!(_lock.is_some(), "a run dir requires the lock");
             let path = dir.join(RUNS_FILE);
             if opts.resume {
-                cache = JsonlRunSink::load(&path)?;
+                (cache, checkpoints) = match preloaded {
+                    Some(contents) => contents,
+                    None => JsonlRunSink::load_with_checkpoints(&path)?,
+                };
             } else if sink::has_committed_records(&path) {
                 log_warn!(
                     "{} already holds committed trials; appending duplicates — \
@@ -95,19 +144,31 @@ pub fn execute_plan(plan: &TrialPlan, opts: &ScheduleOptions) -> Result<Schedule
                     path.display()
                 );
             }
-            Box::new(JsonlRunSink::open(&path)?)
+            let sink = JsonlRunSink::open(&path)?;
+            if opts.checkpoint_every > 0 || !checkpoints.is_empty() {
+                ckpt_ctx = Some(CheckpointCtx {
+                    every: opts.checkpoint_every,
+                    writer: sink.checkpoint_writer(),
+                    crash_after: opts.crash_after_checkpoints,
+                });
+            }
+            Box::new(sink)
         }
         None => {
             if opts.resume {
                 bail!("--resume needs a run directory (--run-dir) to resume from");
+            }
+            if opts.checkpoint_every > 0 {
+                bail!("mid-trial checkpoints need a run directory (--run-dir) to land in");
             }
             Box::new(NullSink)
         }
     };
 
     let mut committer = Committer::new(plan.len(), sink.as_mut());
-    let mut to_run: Vec<(usize, TrialSlot)> = Vec::new();
+    let mut to_run: Vec<PlannedTrial> = Vec::new();
     let mut skipped = 0usize;
+    let mut mid_trial = 0usize;
     for (index, slot) in plan.slots.iter().enumerate() {
         match cache.remove(&slot.fingerprint) {
             Some(record) => {
@@ -117,20 +178,29 @@ pub fn execute_plan(plan: &TrialPlan, opts: &ScheduleOptions) -> Result<Schedule
                     TrialOutcome { record, wall_secs: 0.0, cached: true, perf: String::new() },
                 )?;
             }
-            None => to_run.push((index, slot.clone())),
+            None => {
+                let resume_from = checkpoints.remove(&slot.fingerprint);
+                mid_trial += usize::from(resume_from.is_some());
+                to_run.push(PlannedTrial { index, slot: slot.clone(), resume_from });
+            }
         }
     }
 
     let backend = make_backend(opts.jobs);
     log_info!(
-        "schedule: {} trial(s) over {} cell(s), backend={} jobs={}{}",
+        "schedule: {} trial(s) over {} cell(s), backend={} jobs={}{}{}",
         plan.len(),
         plan.cells().len(),
         backend.name(),
         opts.jobs.max(1),
-        if skipped > 0 { format!(", {skipped} resumed from sink") } else { String::new() }
+        if skipped > 0 { format!(", {skipped} resumed from sink") } else { String::new() },
+        if mid_trial > 0 {
+            format!(", {mid_trial} continuing from mid-trial checkpoints")
+        } else {
+            String::new()
+        }
     );
-    backend.execute(&to_run, &mut committer)?;
+    backend.execute(&to_run, ckpt_ctx.as_ref(), &mut committer)?;
     let outcomes = committer.finish()?;
     Ok(ScheduleReport { outcomes, executed: to_run.len(), skipped, backend: backend.name() })
 }

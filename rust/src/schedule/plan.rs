@@ -93,6 +93,17 @@ impl TrialPlan {
         });
     }
 
+    /// Append an already-resolved slot **verbatim** — config, seed and
+    /// fingerprint untouched. Used by `deahes resume` to rebuild a
+    /// continuation plan from the identity stored in checkpoint records;
+    /// normal sweeps go through [`TrialPlan::push_cell`]/[`TrialPlan::push_run`],
+    /// which derive those fields. The caller owns slot-identity hygiene
+    /// (distinct fingerprints per slot).
+    pub fn push_slot(&mut self, slot: TrialSlot) {
+        *self.cell_counts.entry(slot.cell.clone()).or_insert(0) += 1;
+        self.slots.push(slot);
+    }
+
     pub fn len(&self) -> usize {
         self.slots.len()
     }

@@ -18,15 +18,22 @@
 //! back to its default. Headerless files (written before the header
 //! existed) still load, with a warning.
 
+use crate::schedule::checkpoint::{TrialCheckpoint, CHECKPOINT_KEY};
 use crate::schedule::record::TrialRecord;
 use crate::{log_info, log_warn};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 /// Marker key identifying the header line of a run file.
 pub const HEADER_KEY: &str = "deahes_runs_header";
+
+/// What [`JsonlRunSink::load_with_checkpoints`] hands back: committed
+/// records and the latest pending checkpoint per trial, both
+/// fingerprint-keyed.
+pub type SinkContents = (BTreeMap<String, TrialRecord>, BTreeMap<String, TrialCheckpoint>);
 
 /// Stable hash of the persisted schema: the sorted set of key *paths* in a
 /// fully-populated sample record JSON (every optional config key present,
@@ -145,19 +152,71 @@ fn first_content_line(path: &Path) -> Result<Option<String>> {
     Ok(None)
 }
 
-/// Cheap check whether `path` holds at least one committed record (any
-/// non-header content line). Never errors: IO/schema problems surface when
-/// the sink is actually opened or loaded.
+/// Cheap check whether `path` holds at least one committed record (a
+/// parseable non-header, non-checkpoint content line — a line truncated by
+/// a crash is *not* a record; `load` skips it too). Never errors: IO/schema
+/// problems surface when the sink is actually opened or loaded.
 pub fn has_committed_records(path: &Path) -> bool {
     use std::io::BufRead as _;
     let Ok(file) = std::fs::File::open(path) else { return false };
     for line in std::io::BufReader::new(file).lines() {
         let Ok(line) = line else { return false };
-        if !line.trim().is_empty() && parse_header(&line).is_none() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        // Cheap marker scan before any JSON parse: checkpoint lines carry
+        // parameter-sized hex blobs, and a checkpoint-heavy prefix would
+        // otherwise be parsed in full just to be skipped. (A record whose
+        // string values embed the marker text is skipped too — acceptable
+        // for a warning-only helper.)
+        if line.contains("\"deahes_checkpoint\"") {
+            continue;
+        }
+        if parse_header(&line).is_some() {
+            continue;
+        }
+        if crate::util::json::Json::parse(&line).is_ok() {
             return true;
         }
+        // unparseable: an interrupted append, not a committed record
     }
     false
+}
+
+/// Crash repair for the append path: a writer killed mid-`writeln!` leaves
+/// a final line with no trailing newline; appending to it as-is would
+/// concatenate the next record onto the corrupt tail, destroying **both**
+/// lines. Terminate the tail first so the damage stays confined to the
+/// interrupted line (which `load` already skips). Returns whether a repair
+/// happened.
+fn repair_missing_trailing_newline(path: &Path) -> Result<bool> {
+    use std::io::{Read as _, Seek as _, SeekFrom};
+    let mut f = match std::fs::OpenOptions::new().read(true).append(true).open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(false),
+        Err(e) => {
+            return Err(e).with_context(|| format!("checking run sink tail {}", path.display()))
+        }
+    };
+    let len = f
+        .metadata()
+        .with_context(|| format!("checking run sink tail {}", path.display()))?
+        .len();
+    if len == 0 {
+        return Ok(false);
+    }
+    f.seek(SeekFrom::End(-1))
+        .and_then(|_| {
+            let mut last = [0u8; 1];
+            f.read_exact(&mut last)?;
+            if last[0] == b'\n' {
+                return Ok(false);
+            }
+            f.write_all(b"\n")?;
+            f.flush()?;
+            Ok(true)
+        })
+        .with_context(|| format!("repairing run sink tail {}", path.display()))
 }
 
 /// Hard-error when `found` names a schema other than the current one.
@@ -189,23 +248,35 @@ impl RunSink for NullSink {
     }
 }
 
-/// Append-only JSONL file, one committed trial per line.
+/// Append-only JSONL file, one committed trial (or mid-trial checkpoint)
+/// per line. The open file handle is shared behind a mutex so record
+/// appends (committer thread) and checkpoint appends (trial threads, via
+/// [`CheckpointWriter`]) never interleave bytes within a line.
 #[derive(Debug)]
 pub struct JsonlRunSink {
     path: PathBuf,
-    file: std::fs::File,
+    file: Arc<Mutex<std::fs::File>>,
 }
 
 impl JsonlRunSink {
     /// Open (creating parents and the file as needed) for appending. A new
     /// (or empty) file gets the schema header as its first line; appending
-    /// to a file whose header names a different schema is an error.
+    /// to a file whose header names a different schema is an error. A file
+    /// whose final line was truncated mid-write (crash) gets its tail
+    /// newline-terminated first, so the next append starts a fresh line.
     pub fn open(path: &Path) -> Result<JsonlRunSink> {
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)
                     .with_context(|| format!("creating {}", parent.display()))?;
             }
+        }
+        if repair_missing_trailing_newline(path)? {
+            log_warn!(
+                "run sink {}: final line was truncated mid-write (crash?); terminated it so \
+                 new appends stay intact",
+                path.display()
+            );
         }
         let first = first_content_line(path)?;
         match &first {
@@ -230,49 +301,107 @@ impl JsonlRunSink {
             file.flush()
                 .with_context(|| format!("flushing {}", path.display()))?;
         }
-        Ok(JsonlRunSink { path: path.to_path_buf(), file })
+        Ok(JsonlRunSink { path: path.to_path_buf(), file: Arc::new(Mutex::new(file)) })
     }
 
     pub fn path(&self) -> &Path {
         &self.path
     }
 
+    /// A cloneable handle appending checkpoint lines to this sink's open
+    /// file (sharing its lock). Trial threads hold one each; the sink
+    /// itself keeps committing records through [`RunSink::append`].
+    pub fn checkpoint_writer(&self) -> CheckpointWriter {
+        CheckpointWriter { path: self.path.clone(), file: self.file.clone() }
+    }
+
     /// Read a run file back as fingerprint -> record. Missing file means an
     /// empty map; a malformed line (crash mid-append) is skipped with a
-    /// warning rather than poisoning the resume. A header naming a
-    /// different config schema is a hard error — resuming across schema
-    /// versions would silently reinterpret the stored configs.
+    /// warning rather than poisoning the resume; checkpoint lines are
+    /// ignored. A header naming a different config schema is a hard error —
+    /// resuming across schema versions would silently reinterpret the
+    /// stored configs.
     pub fn load(path: &Path) -> Result<BTreeMap<String, TrialRecord>> {
+        Ok(Self::load_impl(path, false)?.0)
+    }
+
+    /// [`JsonlRunSink::load`] plus the latest valid mid-trial checkpoint
+    /// per fingerprint — only for trials with **no** committed record (a
+    /// committed record supersedes every checkpoint of its trial). Invalid
+    /// or stale-format checkpoint lines are skipped with a warning: the
+    /// safe fallback is re-running the trial from round 0, never refusing
+    /// to resume the sweep.
+    pub fn load_with_checkpoints(path: &Path) -> Result<SinkContents> {
+        Self::load_impl(path, true)
+    }
+
+    fn load_impl(path: &Path, collect_checkpoints: bool) -> Result<SinkContents> {
         let mut out = BTreeMap::new();
+        let mut checkpoints: BTreeMap<String, TrialCheckpoint> = BTreeMap::new();
         let text = match std::fs::read_to_string(path) {
             Ok(t) => t,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok((out, checkpoints))
+            }
             Err(e) => {
                 return Err(e).with_context(|| format!("reading run sink {}", path.display()))
             }
         };
         let mut dropped = 0usize;
-        let mut saw_header = false;
+        let mut first_content_seen = false;
         for (lineno, line) in text.lines().enumerate() {
             if line.trim().is_empty() {
                 continue;
             }
-            // One JSON parse per line: the parsed value serves both the
-            // header check and the record decode.
+            // One JSON parse per line: the parsed value serves the header
+            // check, the checkpoint check and the record decode.
             let json = crate::util::json::Json::parse(line).ok();
-            if let Some(j) = &json {
-                if *j.get(HEADER_KEY) != crate::util::json::Json::Null {
-                    check_schema(path, j.get("schema").as_str().unwrap_or(""))?;
-                    saw_header = true;
-                    continue;
+            let is_header = json
+                .as_ref()
+                .is_some_and(|j| *j.get(HEADER_KEY) != crate::util::json::Json::Null);
+            if !first_content_seen {
+                first_content_seen = true;
+                // Keyed off the FIRST non-empty line regardless of how it
+                // decodes: a headerless file whose first record is garbage
+                // must still warn, and leading blank lines must not
+                // suppress the warning.
+                if !is_header {
+                    log_warn!(
+                        "run sink {}: no schema header (written by an older build); resuming \
+                         without schema verification",
+                        path.display()
+                    );
                 }
             }
-            if !saw_header && out.is_empty() && dropped == 0 && lineno == 0 {
-                log_warn!(
-                    "run sink {}: no schema header (written by an older build); resuming \
-                     without schema verification",
-                    path.display()
-                );
+            if is_header {
+                let j = json.as_ref().expect("is_header implies parsed");
+                check_schema(path, j.get("schema").as_str().unwrap_or(""))?;
+                continue;
+            }
+            if let Some(j) = &json {
+                if *j.get(CHECKPOINT_KEY) != crate::util::json::Json::Null {
+                    if collect_checkpoints {
+                        match TrialCheckpoint::from_json(j) {
+                            Ok(cp) => {
+                                // later lines win only when they are further
+                                // along (the latest VALID checkpoint)
+                                let replace = checkpoints
+                                    .get(&cp.fingerprint)
+                                    .map_or(true, |old| cp.next_round() >= old.next_round());
+                                if replace {
+                                    checkpoints.insert(cp.fingerprint.clone(), cp);
+                                }
+                            }
+                            Err(e) => log_warn!(
+                                "run sink {}: ignoring unusable checkpoint at line {} ({e:#}); \
+                                 its trial restarts from round 0",
+                                path.display(),
+                                lineno + 1
+                            ),
+                        }
+                    }
+                    continue;
+                }
             }
             let parsed = json.and_then(|j| TrialRecord::from_json(&j).ok());
             match parsed {
@@ -289,25 +418,53 @@ impl JsonlRunSink {
                 }
             }
         }
-        if !out.is_empty() {
+        // A committed record supersedes its trial's checkpoints.
+        checkpoints.retain(|fp, _| !out.contains_key(fp));
+        if !out.is_empty() || !checkpoints.is_empty() {
             log_info!(
-                "run sink {}: loaded {} committed trial(s){}",
+                "run sink {}: loaded {} committed trial(s){}{}",
                 path.display(),
                 out.len(),
+                if checkpoints.is_empty() {
+                    String::new()
+                } else {
+                    format!(", {} mid-trial checkpoint(s)", checkpoints.len())
+                },
                 if dropped > 0 { format!(", dropped {dropped}") } else { String::new() }
             );
         }
-        Ok(out)
+        Ok((out, checkpoints))
+    }
+}
+
+/// Cloneable handle appending checkpoint lines to an open run sink. Shares
+/// the sink's file handle and lock: a checkpoint line and a record line
+/// can never interleave bytes, whichever thread writes first.
+#[derive(Clone, Debug)]
+pub struct CheckpointWriter {
+    path: PathBuf,
+    file: Arc<Mutex<std::fs::File>>,
+}
+
+impl CheckpointWriter {
+    pub fn append(&self, cp: &TrialCheckpoint) -> Result<()> {
+        let line = cp.to_json().to_string_compact();
+        let mut file = self.file.lock().expect("run sink lock poisoned");
+        writeln!(file, "{line}")
+            .with_context(|| format!("appending checkpoint to {}", self.path.display()))?;
+        file.flush()
+            .with_context(|| format!("flushing {}", self.path.display()))?;
+        Ok(())
     }
 }
 
 impl RunSink for JsonlRunSink {
     fn append(&mut self, record: &TrialRecord) -> Result<()> {
         let line = record.to_json().to_string_compact();
-        writeln!(self.file, "{line}")
+        let mut file = self.file.lock().expect("run sink lock poisoned");
+        writeln!(file, "{line}")
             .with_context(|| format!("appending to {}", self.path.display()))?;
-        self.file
-            .flush()
+        file.flush()
             .with_context(|| format!("flushing {}", self.path.display()))?;
         Ok(())
     }
@@ -446,5 +603,132 @@ mod tests {
     fn schema_hash_is_stable_within_a_build() {
         assert_eq!(config_schema_hash(), config_schema_hash());
         assert_eq!(config_schema_hash().len(), 16);
+    }
+
+    /// Crash-repair regression: appending to a file whose final line was
+    /// truncated mid-write (no trailing newline) used to concatenate the
+    /// new record onto the corrupt tail, destroying both lines.
+    #[test]
+    fn append_after_truncated_tail_survives_both_sides() {
+        let path = tmp("tail-repair.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut sink = JsonlRunSink::open(&path).unwrap();
+            sink.append(&rec("aa")).unwrap();
+        }
+        // simulate a crash mid-append: a partial record with NO newline
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"fingerprint\":\"half\",\"cel");
+        std::fs::write(&path, text).unwrap();
+        {
+            let mut sink = JsonlRunSink::open(&path).unwrap();
+            sink.append(&rec("bb")).unwrap();
+        }
+        let map = JsonlRunSink::load(&path).unwrap();
+        assert_eq!(map.len(), 2, "the fresh append must not be destroyed by the corrupt tail");
+        assert!(map.contains_key("aa") && map.contains_key("bb"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    fn ckpt(fp: &str, next_round: u64) -> crate::schedule::checkpoint::TrialCheckpoint {
+        use crate::coordinator::checkpoint::{RunCheckpoint, DRIVER_SEQUENTIAL};
+        crate::schedule::checkpoint::TrialCheckpoint {
+            fingerprint: fp.to_string(),
+            cell: "c".into(),
+            label: "c".into(),
+            seed_index: 0,
+            config: ExperimentConfig::default(),
+            every: 5,
+            state: RunCheckpoint {
+                driver: DRIVER_SEQUENTIAL.into(),
+                next_round,
+                master: crate::util::json::Json::Null,
+                workers: vec![crate::util::json::Json::Null],
+                gossip: vec![(0, vec![])],
+                engines: crate::util::json::Json::Null,
+                rngs: crate::util::json::Json::Null,
+                log: MetricsLog::default(),
+                per_round_syncs: vec![1; next_round as usize],
+            },
+        }
+    }
+
+    #[test]
+    fn checkpoint_lines_are_invisible_to_record_loads() {
+        let path = tmp("ckpt-lines.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let sink = JsonlRunSink::open(&path).unwrap();
+            sink.checkpoint_writer().append(&ckpt("pending", 5)).unwrap();
+        }
+        assert!(!has_committed_records(&path), "a checkpoint is not a committed record");
+        assert!(JsonlRunSink::load(&path).unwrap().is_empty());
+        {
+            let mut sink = JsonlRunSink::open(&path).unwrap();
+            sink.append(&rec("done")).unwrap();
+        }
+        assert!(has_committed_records(&path));
+        assert_eq!(JsonlRunSink::load(&path).unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A checkpoint-only file whose final line was truncated mid-write
+    /// must NOT count as holding committed records (it holds none): the
+    /// "appending duplicates" warning would mislead the operator.
+    #[test]
+    fn truncated_checkpoint_tail_is_not_a_committed_record() {
+        let path = tmp("ckpt-truncated.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let sink = JsonlRunSink::open(&path).unwrap();
+            sink.checkpoint_writer().append(&ckpt("pending", 5)).unwrap();
+        }
+        // crash mid-checkpoint-append: a partial line, no trailing newline
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"cell\":\"c\",\"config\":{\"alpha\"");
+        std::fs::write(&path, text).unwrap();
+        assert!(!has_committed_records(&path));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn latest_checkpoint_wins_and_committed_records_supersede() {
+        let path = tmp("ckpt-latest.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut sink = JsonlRunSink::open(&path).unwrap();
+            let w = sink.checkpoint_writer();
+            w.append(&ckpt("pending", 5)).unwrap();
+            w.append(&ckpt("pending", 10)).unwrap();
+            w.append(&ckpt("finished", 5)).unwrap();
+            sink.append(&rec("finished")).unwrap();
+        }
+        let (records, checkpoints) = JsonlRunSink::load_with_checkpoints(&path).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(checkpoints.len(), 1, "committed trials must shed their checkpoints");
+        assert_eq!(checkpoints["pending"].next_round(), 10, "latest checkpoint wins");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unusable_checkpoints_fall_back_to_earlier_valid_ones() {
+        let path = tmp("ckpt-fallback.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let sink = JsonlRunSink::open(&path).unwrap();
+            sink.checkpoint_writer().append(&ckpt("pending", 5)).unwrap();
+        }
+        // a later checkpoint line with an unreadable payload (future format)
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        let key = crate::schedule::checkpoint::CHECKPOINT_KEY;
+        text.push_str(&format!(
+            "{{\"{key}\":1,\"schema\":\"{}\",\"fingerprint\":\"pending\",\
+             \"state\":{{\"version\":99}}}}\n",
+            config_schema_hash()
+        ));
+        std::fs::write(&path, text).unwrap();
+        let (_, checkpoints) = JsonlRunSink::load_with_checkpoints(&path).unwrap();
+        assert_eq!(checkpoints["pending"].next_round(), 5, "valid earlier checkpoint survives");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,120 @@
+//! Bit-exact hex codecs for checkpoint serialization.
+//!
+//! JSON numbers round-trip finite f64 values exactly (shortest round-trip
+//! printing) but cannot carry NaN/Inf and silently lose u64 bits above
+//! 2^53. Checkpoint state — RNG words, f32 parameter vectors, f64
+//! accumulators, a possibly-NaN `last_loss` — must survive byte-exact, so
+//! it is encoded as fixed-width lowercase hex of the raw bit patterns
+//! instead: 16 chars per u64/f64, 8 per f32, vectors concatenated.
+
+use anyhow::{bail, Context, Result};
+use std::fmt::Write as _;
+
+pub fn u64_hex(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+pub fn u64_from_hex(s: &str) -> Result<u64> {
+    if s.len() != 16 {
+        bail!("expected 16 hex chars, got '{s}'");
+    }
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex u64 '{s}'"))
+}
+
+pub fn f64_hex(x: f64) -> String {
+    u64_hex(x.to_bits())
+}
+
+pub fn f64_from_hex(s: &str) -> Result<f64> {
+    Ok(f64::from_bits(u64_from_hex(s)?))
+}
+
+pub fn f32_hex(x: f32) -> String {
+    format!("{:08x}", x.to_bits())
+}
+
+pub fn f32_from_hex(s: &str) -> Result<f32> {
+    if s.len() != 8 {
+        bail!("expected 8 hex chars, got '{s}'");
+    }
+    u32::from_str_radix(s, 16)
+        .map(f32::from_bits)
+        .with_context(|| format!("bad hex f32 '{s}'"))
+}
+
+/// A whole f32 slice as one hex blob (8 chars per element, concatenated).
+pub fn f32s_hex(xs: &[f32]) -> String {
+    let mut s = String::with_capacity(xs.len() * 8);
+    for x in xs {
+        let _ = write!(s, "{:08x}", x.to_bits());
+    }
+    s
+}
+
+pub fn f32s_from_hex(s: &str) -> Result<Vec<f32>> {
+    if !s.is_ascii() || s.len() % 8 != 0 {
+        bail!("f32 hex blob must be a multiple of 8 ascii chars, got {} chars", s.len());
+    }
+    (0..s.len() / 8).map(|i| f32_from_hex(&s[i * 8..(i + 1) * 8])).collect()
+}
+
+/// A whole f64 slice as one hex blob (16 chars per element, concatenated).
+pub fn f64s_hex(xs: &[f64]) -> String {
+    let mut s = String::with_capacity(xs.len() * 16);
+    for x in xs {
+        let _ = write!(s, "{:016x}", x.to_bits());
+    }
+    s
+}
+
+pub fn f64s_from_hex(s: &str) -> Result<Vec<f64>> {
+    if !s.is_ascii() || s.len() % 16 != 0 {
+        bail!("f64 hex blob must be a multiple of 16 ascii chars, got {} chars", s.len());
+    }
+    (0..s.len() / 16).map(|i| f64_from_hex(&s[i * 16..(i + 1) * 16])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_roundtrips_full_width() {
+        for x in [0u64, 1, u64::MAX, 0xDEAD_BEEF_CAFE_F00D, (1u64 << 53) + 1] {
+            assert_eq!(u64_from_hex(&u64_hex(x)).unwrap(), x);
+        }
+        assert!(u64_from_hex("abc").is_err());
+        assert!(u64_from_hex("zzzzzzzzzzzzzzzz").is_err());
+    }
+
+    #[test]
+    fn floats_roundtrip_including_non_finite() {
+        for x in [0.0f64, -0.0, 1.5, f64::NAN, f64::INFINITY, f64::MIN_POSITIVE] {
+            let back = f64_from_hex(&f64_hex(x)).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits());
+        }
+        for x in [0.0f32, -1.25, f32::NAN, f32::NEG_INFINITY] {
+            let back = f32_from_hex(&f32_hex(x)).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn slices_roundtrip_bitwise() {
+        let xs = vec![0.1f32, -2.5, f32::NAN, 7.0e-30];
+        let back = f32s_from_hex(&f32s_hex(&xs)).unwrap();
+        assert_eq!(
+            back.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        let ys = vec![1.0f64, f64::NAN, -0.0];
+        let back = f64s_from_hex(&f64s_hex(&ys)).unwrap();
+        assert_eq!(
+            back.iter().map(|y| y.to_bits()).collect::<Vec<_>>(),
+            ys.iter().map(|y| y.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(f32s_from_hex("abcd").is_err());
+        assert!(f64s_from_hex("0123456789abcde").is_err());
+        assert_eq!(f32s_from_hex("").unwrap(), Vec::<f32>::new());
+    }
+}

@@ -3,6 +3,7 @@
 //! build image only vendors the `xla` crate and its transitive deps — see
 //! DESIGN.md §2 (substitutions).
 
+pub mod bits;
 pub mod cli;
 pub mod json;
 pub mod logging;

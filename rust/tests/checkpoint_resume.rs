@@ -1,0 +1,302 @@
+//! Crash-safe mid-trial checkpoint/resume.
+//!
+//! The headline guarantee (ISSUE 4 acceptance): killing a run mid-trial
+//! and resuming from its checkpoint produces a `RunResult` byte-identical
+//! to the uninterrupted run, for every registered policy, on the quad
+//! engine. Three layers are pinned here:
+//!
+//!  1. driver level — `sim::run_with(cfg, Some(checkpoint), _)` continues
+//!     bit-exactly from any boundary the hooks captured (and capturing
+//!     checkpoints is observation-only: it changes no numbers);
+//!  2. schedule level — a trial killed by crash injection after writing a
+//!     checkpoint resumes through `execute_plan(resume: true)` and commits
+//!     the same record bytes an uninterrupted run commits;
+//!  3. CLI level — `experiments::resume_run_dir` (the `deahes resume`
+//!     engine) finishes half-run trials and re-materializes series from
+//!     `runs.jsonl` alone.
+//!
+//! The threaded driver is covered as a smoke test: its checkpoint is a
+//! consistent cut, but continuation has the driver's usual arrival-order
+//! nondeterminism (see docs/ARCHITECTURE.md), so only driver-invariant
+//! facts (fault schedule, record counts) are asserted.
+
+use deahes::config::{EngineKind, ExperimentConfig};
+use deahes::coordinator::checkpoint::RunCheckpoint;
+use deahes::coordinator::sim::{self, CheckpointHooks};
+use deahes::experiments;
+use deahes::schedule::{self, JsonlRunSink, ScheduleOptions, TrialPlan};
+use deahes::strategies::Method;
+use deahes::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Every registered policy with an optimizer exercising each OptState
+/// variant at least once (sgd, momentum, adahessian).
+const POLICY_MATRIX: &[(&str, Method)] = &[
+    ("fixed(alpha=0.1)", Method::Easgd),
+    ("oracle(alpha=0.1)", Method::Eamsgd),
+    ("dynamic(alpha=0.1,knee=-0.05,detector=paper-sign)", Method::DeahesO),
+    ("hysteresis(alpha=0.1,knee=-0.05,detector=paper-sign,hold=2)", Method::DeahesO),
+    ("staleness(alpha=0.1,halflife=2)", Method::Easgd),
+];
+
+fn quad_cfg(policy: &str, method: Method) -> ExperimentConfig {
+    ExperimentConfig {
+        engine: EngineKind::Quadratic { dim: 24, heterogeneity: 0.3, noise: 0.05 },
+        method,
+        workers: 3,
+        tau: 2,
+        rounds: 21,
+        eval_subset: 16,
+        policy: Some(policy.to_string()),
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Exactly the deterministic content the sink's `TrialRecord` persists:
+/// canonicalized log + sim report + worker stats; wall-clock and perf text
+/// excluded by design.
+fn digest(r: &sim::RunResult) -> String {
+    let mut log = r.log.clone();
+    log.canonicalize_non_finite();
+    Json::obj(vec![
+        ("records", log.to_json()),
+        ("sim", r.sim.to_json()),
+        ("worker_stats", Json::arr_u64_pairs(&r.worker_stats)),
+    ])
+    .to_string_compact()
+}
+
+fn capture_checkpoints(
+    cfg: &ExperimentConfig,
+    every: u64,
+) -> (sim::RunResult, Vec<RunCheckpoint>) {
+    let mut cps: Vec<RunCheckpoint> = Vec::new();
+    let mut save = |cp: RunCheckpoint| -> anyhow::Result<()> {
+        cps.push(cp);
+        Ok(())
+    };
+    let r = sim::run_with(cfg, None, Some(CheckpointHooks { every, save: &mut save })).unwrap();
+    (r, cps)
+}
+
+/// The acceptance pin: for each registered policy, run N rounds, kill,
+/// restore, run to completion — byte-identical `RunResult` vs an
+/// uninterrupted run, from EVERY checkpoint boundary.
+#[test]
+fn resume_is_bit_identical_for_every_policy_on_the_quad_engine() {
+    for &(policy, method) in POLICY_MATRIX {
+        let cfg = quad_cfg(policy, method);
+        let baseline = digest(&sim::run(&cfg).unwrap());
+        let (hooked, cps) = capture_checkpoints(&cfg, 8);
+        assert_eq!(digest(&hooked), baseline, "{policy}: capturing checkpoints changed numbers");
+        assert_eq!(cps.len(), 2, "{policy}: rounds=21, every=8 -> cuts at 8 and 16");
+        for cp in &cps {
+            let round = cp.next_round;
+            // restore from the in-memory checkpoint...
+            let resumed = sim::run_with(&cfg, Some(cp), None).unwrap();
+            assert_eq!(
+                digest(&resumed),
+                baseline,
+                "{policy}: resume from round {round} diverged"
+            );
+            // ...and from its JSON round-trip (what the sink actually stores)
+            let reread =
+                RunCheckpoint::from_json(&Json::parse(&cp.to_json().to_string_compact()).unwrap())
+                    .unwrap();
+            let resumed = sim::run_with(&cfg, Some(&reread), None).unwrap();
+            assert_eq!(
+                digest(&resumed),
+                baseline,
+                "{policy}: resume from persisted round-{round} checkpoint diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn checkpoints_refuse_the_wrong_driver_and_shape() {
+    let cfg = quad_cfg("fixed(alpha=0.1)", Method::Easgd);
+    let (_, cps) = capture_checkpoints(&cfg, 8);
+    // wrong driver
+    let mut threaded_cfg = cfg.clone();
+    threaded_cfg.threaded = true;
+    assert!(sim::run_with(&threaded_cfg, Some(&cps[0]), None).is_err());
+    // wrong worker count
+    let mut fat_cfg = cfg.clone();
+    fat_cfg.workers = 4;
+    assert!(sim::run_with(&fat_cfg, Some(&cps[0]), None).is_err());
+}
+
+/// Threaded-driver smoke: the cut is consistent and a resume completes
+/// with the driver-invariant facts intact (fault schedule is a pure
+/// function of (seed, worker, round), so per-round sync counts must match
+/// the sequential run's exactly even across the resume boundary).
+#[test]
+fn threaded_driver_checkpoints_and_resumes() {
+    let mut cfg = quad_cfg("dynamic(alpha=0.1,knee=-0.05,detector=paper-sign)", Method::DeahesO);
+    cfg.rounds = 18;
+    cfg.threaded = true;
+    let (full, cps) = capture_checkpoints(&cfg, 6);
+    assert_eq!(cps.len(), 2, "rounds=18, every=6 -> cuts at 6 and 12");
+    let resumed = sim::run_with(&cfg, Some(&cps[1]), None).unwrap();
+    assert_eq!(resumed.log.records.len(), full.log.records.len());
+    let mut seq_cfg = cfg.clone();
+    seq_cfg.threaded = false;
+    let seq = sim::run(&seq_cfg).unwrap();
+    for (a, b) in resumed.log.records.iter().zip(&seq.log.records) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(
+            (a.syncs_ok, a.syncs_failed),
+            (b.syncs_ok, b.syncs_failed),
+            "fault schedule diverged at round {} across the resume boundary",
+            a.round
+        );
+    }
+    let served_resumed: Vec<u64> = resumed.worker_stats.iter().map(|s| s.0).collect();
+    let served_seq: Vec<u64> = seq.worker_stats.iter().map(|s| s.0).collect();
+    assert_eq!(served_resumed, served_seq);
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("deahes-ckptres-{}-{name}", std::process::id()))
+}
+
+fn record_lines(dir: &Path) -> Vec<String> {
+    JsonlRunSink::load(&dir.join(schedule::RUNS_FILE))
+        .unwrap()
+        .values()
+        .map(|r| r.to_json().to_string_compact())
+        .collect()
+}
+
+fn one_slot_plan() -> TrialPlan {
+    let spec = "hysteresis(alpha=0.1,knee=-0.05,detector=paper-sign,hold=2)";
+    let mut cfg = quad_cfg(spec, Method::DeahesO);
+    cfg.rounds = 30;
+    let mut plan = TrialPlan::new();
+    plan.push_cell("ckpt/cell", "cell", &cfg, 1);
+    plan
+}
+
+/// Schedule level: crash injection kills the trial right after its first
+/// checkpoint lands in runs.jsonl; `--resume` finishes it from there and
+/// the committed record is byte-identical to an uninterrupted run's.
+#[test]
+fn killed_trial_resumes_from_its_checkpoint_at_the_schedule_level() {
+    let crash_dir = tmp_dir("crash");
+    let clean_dir = tmp_dir("clean");
+    let _ = std::fs::remove_dir_all(&crash_dir);
+    let _ = std::fs::remove_dir_all(&clean_dir);
+    let plan = one_slot_plan();
+
+    // uninterrupted reference
+    let clean_opts = ScheduleOptions {
+        run_dir: Some(clean_dir.clone()),
+        ..ScheduleOptions::default()
+    };
+    schedule::execute_plan(&plan, &clean_opts).unwrap();
+
+    // crash after the first checkpoint (round 8 of 30)
+    let crash_opts = ScheduleOptions {
+        run_dir: Some(crash_dir.clone()),
+        checkpoint_every: 8,
+        crash_after_checkpoints: 1,
+        ..ScheduleOptions::default()
+    };
+    let err = schedule::execute_plan(&plan, &crash_opts).unwrap_err().to_string();
+    assert!(err.contains("crash injection"), "{err}");
+    assert!(record_lines(&crash_dir).is_empty(), "the killed trial must not have committed");
+
+    // resume: the trial continues from round 8, commits, matches the clean run
+    let resume_opts = ScheduleOptions {
+        run_dir: Some(crash_dir.clone()),
+        resume: true,
+        checkpoint_every: 8,
+        ..ScheduleOptions::default()
+    };
+    let report = schedule::execute_plan(&plan, &resume_opts).unwrap();
+    assert_eq!(report.executed, 1);
+    assert_eq!(report.skipped, 0);
+    assert_eq!(
+        record_lines(&crash_dir),
+        record_lines(&clean_dir),
+        "resumed record must be byte-identical to the uninterrupted run's"
+    );
+
+    // a further resume is a pure cache hit
+    let again = schedule::execute_plan(&plan, &resume_opts).unwrap();
+    assert_eq!((again.executed, again.skipped), (0, 1));
+
+    let _ = std::fs::remove_dir_all(&crash_dir);
+    let _ = std::fs::remove_dir_all(&clean_dir);
+}
+
+/// CLI level: `deahes resume <run-dir>` (via `experiments::resume_run_dir`)
+/// needs nothing but the run directory — identity and config come from the
+/// checkpoint records themselves.
+#[test]
+fn resume_run_dir_finishes_pending_trials_and_rebuilds_series() {
+    let crash_dir = tmp_dir("cli-crash");
+    let clean_dir = tmp_dir("cli-clean");
+    let _ = std::fs::remove_dir_all(&crash_dir);
+    let _ = std::fs::remove_dir_all(&clean_dir);
+    let plan = one_slot_plan();
+
+    schedule::execute_plan(
+        &plan,
+        &ScheduleOptions { run_dir: Some(clean_dir.clone()), ..ScheduleOptions::default() },
+    )
+    .unwrap();
+    let crash_opts = ScheduleOptions {
+        run_dir: Some(crash_dir.clone()),
+        checkpoint_every: 8,
+        crash_after_checkpoints: 1,
+        ..ScheduleOptions::default()
+    };
+    assert!(schedule::execute_plan(&plan, &crash_opts).is_err());
+
+    let report = experiments::resume_run_dir(&crash_dir, 1).unwrap();
+    assert_eq!(report.committed, 0);
+    assert_eq!(report.finished, 1);
+    assert_eq!(report.series.len(), 1);
+    assert_eq!(report.series[0].label, "ckpt/cell", "series label is the cell key");
+    assert_eq!(record_lines(&crash_dir), record_lines(&clean_dir));
+
+    // resuming a fully-committed dir is a no-op that still yields series
+    let report = experiments::resume_run_dir(&crash_dir, 1).unwrap();
+    assert_eq!(report.committed, 1);
+    assert_eq!(report.finished, 0);
+    // and an empty/missing dir is a clear error
+    assert!(experiments::resume_run_dir(&tmp_dir("nonexistent"), 1).is_err());
+
+    let _ = std::fs::remove_dir_all(&crash_dir);
+    let _ = std::fs::remove_dir_all(&clean_dir);
+}
+
+/// The run-dir advisory lock: a second in-process acquisition (same live
+/// pid) fails fast with guidance, and checkpoints without a run dir are
+/// rejected up front.
+#[test]
+fn run_dir_lock_and_option_validation() {
+    let dir = tmp_dir("locked");
+    let _ = std::fs::remove_dir_all(&dir);
+    let _held = schedule::RunDirLock::acquire(&dir).unwrap();
+    let plan = one_slot_plan();
+    let err = schedule::execute_plan(
+        &plan,
+        &ScheduleOptions { run_dir: Some(dir.clone()), ..ScheduleOptions::default() },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("locked by running process"), "{err}");
+    drop(_held);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let err = schedule::execute_plan(
+        &plan,
+        &ScheduleOptions { checkpoint_every: 5, ..ScheduleOptions::default() },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("run directory"), "{err}");
+}

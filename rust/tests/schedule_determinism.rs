@@ -54,12 +54,12 @@ fn backends_commit_byte_identical_jsonl_and_series() {
     let plan = small_grid_plan();
     let seq = schedule::execute_plan(
         &plan,
-        &ScheduleOptions { jobs: 1, run_dir: Some(seq_dir.clone()), resume: false },
+        &ScheduleOptions { jobs: 1, run_dir: Some(seq_dir.clone()), ..ScheduleOptions::default() },
     )
     .unwrap();
     let pool = schedule::execute_plan(
         &plan,
-        &ScheduleOptions { jobs: 4, run_dir: Some(pool_dir.clone()), resume: false },
+        &ScheduleOptions { jobs: 4, run_dir: Some(pool_dir.clone()), ..ScheduleOptions::default() },
     )
     .unwrap();
     assert_eq!(seq.backend, "sequential");
@@ -96,7 +96,8 @@ fn killed_sweep_resumes_without_rerunning_committed_trials() {
         cfg.overlap_ratio = Method::Easgd.paper_overlap_ratio(cfg.workers);
         prefix.push_cell(&format!("det/{}", Method::Easgd.name()), Method::Easgd.name(), &cfg, 2);
     }
-    let opts = ScheduleOptions { jobs: 1, run_dir: Some(dir.clone()), resume: false };
+    let opts =
+        ScheduleOptions { jobs: 1, run_dir: Some(dir.clone()), ..ScheduleOptions::default() };
     let first = schedule::execute_plan(&prefix, &opts).unwrap();
     assert_eq!(first.executed, 2);
 
@@ -114,7 +115,11 @@ fn killed_sweep_resumes_without_rerunning_committed_trials() {
     let _ = std::fs::remove_dir_all(&fresh_dir);
     let fresh = schedule::execute_plan(
         &plan,
-        &ScheduleOptions { jobs: 1, run_dir: Some(fresh_dir.clone()), resume: false },
+        &ScheduleOptions {
+            jobs: 1,
+            run_dir: Some(fresh_dir.clone()),
+            ..ScheduleOptions::default()
+        },
     )
     .unwrap();
     assert_eq!(
