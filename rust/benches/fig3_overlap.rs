@@ -1,16 +1,22 @@
 //! Bench: regenerate the paper's **Fig. 3** — test accuracy over
 //! communication rounds for data-overlap ratios r ∈ {0, 12.5, 25, 37.5, 50}%
-//! on the AdaHessian + overlap method.
+//! on the AdaHessian + overlap method — swept over BOTH sync topologies
+//! (central EASGD round-trips vs decentralized gossip elastic pull), so the
+//! bench doubles as the straggler-free baseline comparison of the two modes.
 //!
 //!   cargo bench --bench fig3_overlap
 //!   BENCH_SEEDS=1 BENCH_ROUNDS=30 cargo bench --bench fig3_overlap   # smoke
 //!   BENCH_JOBS=4 BENCH_RUN_DIR=runs/fig3 ...                         # parallel + resumable
+//!   BENCH_SYNC_MODES=central cargo bench --bench fig3_overlap        # one mode only
 //!
 //! Expected shape (paper): accuracy is non-decreasing in r — the shared
-//! subset lowers the variance of per-worker Hessian estimates.
+//! subset lowers the variance of per-worker Hessian estimates. Gossip mode
+//! trails central slightly at equal rounds (its pulls run against a
+//! one-round-delayed snapshot) but needs no blocking master round-trip.
 
 mod common;
 
+use deahes::config::SyncMode;
 use deahes::experiments;
 use deahes::metrics::ascii_chart;
 
@@ -21,35 +27,53 @@ fn main() -> anyhow::Result<()> {
     base.tau = 1;
     let ratios = [0.0, 0.125, 0.25, 0.375, 0.5];
     let seeds = common::seeds();
+    // Unknown tokens are hard errors: a typo'd BENCH_SYNC_MODES must not
+    // silently bench nothing and exit green.
+    let modes_var = std::env::var("BENCH_SYNC_MODES").unwrap_or_else(|_| "central,gossip".into());
+    let modes: Vec<SyncMode> = modes_var
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            SyncMode::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("BENCH_SYNC_MODES: unknown mode '{s}' (central|gossip)"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!modes.is_empty(), "BENCH_SYNC_MODES resolved to an empty mode list");
 
     let opts = common::schedule_options();
-    println!(
-        "== Fig 3 reproduction: overlap ratios {ratios:?}, k=4, tau=1, {seeds} seed(s), {} rounds ==",
-        base.rounds
-    );
-    let out = common::timed("fig3 sweep", || {
-        experiments::fig3_overlap_sweep_with(&base, &ratios, seeds, &opts)
-    })?;
-
-    let chart: Vec<(&str, Vec<f64>)> =
-        out.iter().map(|s| (s.label.as_str(), s.test_acc.clone())).collect();
-    print!("{}", ascii_chart("Fig 3: test accuracy over rounds", &chart, 72, 16));
-
-    println!("{:<10} {:>12} {:>14} {:>12}", "ratio", "tail acc", "(std)", "train loss");
-    for s in &out {
+    for mode in modes {
+        base.sync_mode = mode;
         println!(
-            "{:<10} {:>11.2}% {:>13.2}% {:>12.4}",
-            s.label,
-            100.0 * s.final_acc_mean,
-            100.0 * s.final_acc_std,
-            s.final_train_loss
+            "== Fig 3 reproduction [{} sync]: overlap ratios {ratios:?}, k=4, tau=1, \
+             {seeds} seed(s), {} rounds ==",
+            mode.name(),
+            base.rounds
         );
-    }
+        let out = common::timed(&format!("fig3 sweep ({})", mode.name()), || {
+            experiments::fig3_overlap_sweep_with(&base, &ratios, seeds, &opts)
+        })?;
 
-    // Paper's qualitative claim: positive relationship between r and acc.
-    let accs: Vec<f64> = out.iter().map(|s| s.final_acc_mean).collect();
-    let xs: Vec<f64> = ratios.to_vec();
-    let slope = deahes::util::stats::linear_slope(&xs, &accs);
-    println!("\nacc-vs-ratio least-squares slope: {slope:+.4} (paper: positive)");
+        let chart: Vec<(&str, Vec<f64>)> =
+            out.iter().map(|s| (s.label.as_str(), s.test_acc.clone())).collect();
+        print!("{}", ascii_chart("Fig 3: test accuracy over rounds", &chart, 72, 16));
+
+        println!("{:<10} {:>12} {:>14} {:>12}", "ratio", "tail acc", "(std)", "train loss");
+        for s in &out {
+            println!(
+                "{:<10} {:>11.2}% {:>13.2}% {:>12.4}",
+                s.label,
+                100.0 * s.final_acc_mean,
+                100.0 * s.final_acc_std,
+                s.final_train_loss
+            );
+        }
+
+        // Paper's qualitative claim: positive relationship between r and acc.
+        let accs: Vec<f64> = out.iter().map(|s| s.final_acc_mean).collect();
+        let xs: Vec<f64> = ratios.to_vec();
+        let slope = deahes::util::stats::linear_slope(&xs, &accs);
+        println!("\nacc-vs-ratio least-squares slope: {slope:+.4} (paper: positive)\n");
+    }
     Ok(())
 }

@@ -5,8 +5,8 @@
 //!  * **micro** — per-kernel latency of the fused hot-path kernels
 //!    (`sgd_step` fused vs the legacy three-pass compose, `momentum_step`,
 //!    `adahessian_step`, `adamw_step`, the elastic pair update,
-//!    `elastic_pull`, and snapshot publishing pool-vs-clone), reported as
-//!    median/p95 nanoseconds per call;
+//!    `elastic_pull`/`elastic_absorb`, and snapshot publishing
+//!    pool-vs-clone), reported as median/p95 nanoseconds per call;
 //!  * **macro** — a fig3-shaped overlap-ratio sweep over the quadratic
 //!    engine driven through the real `TrialPlan` machinery, timed twice:
 //!    once through the current allocation-free hot path
@@ -202,6 +202,12 @@ fn run_micro(bc: &BenchConfig) -> Result<Vec<MicroResult>> {
     let mut tw2 = vec![1.0f32; n];
     out.push(micro("elastic_pull", iters, || {
         native::elastic_pull(&mut tw2, &snapshot, 0.1);
+    }));
+
+    let replica = vec![1.0f32; n];
+    let mut tm2 = vec![0.0f32; n];
+    out.push(micro("elastic_absorb", iters, || {
+        native::elastic_absorb(&mut tm2, &replica, 0.1);
     }));
 
     let src = vec![0.125f32; n];
@@ -430,6 +436,87 @@ pub fn run(bc: &BenchConfig, out: &Path) -> Result<Json> {
     Ok(doc)
 }
 
+/// Outcome of diffing two `BENCH_hotpath.json` trajectory points.
+pub struct CheckReport {
+    /// false = the macro rounds/sec regressed beyond the tolerance.
+    pub ok: bool,
+    /// Human-readable diff lines (always populated).
+    pub text: String,
+}
+
+/// Diff `current` against a `previous` trajectory point: the regression
+/// gate for CI (`deahes bench --check prev.json`). The pass/fail verdict is
+/// the **macro hot-path rounds/sec** — the number the whole bench subsystem
+/// exists to defend; micro-kernel medians and syncs/sec are reported
+/// informationally (they are far noisier at smoke sizes). Comparing two
+/// points measured at different sizes (`--smoke` vs full) is meaningless
+/// and is a hard error, not a verdict.
+pub fn check(current: &Json, previous: &Json, max_regression_pct: f64) -> Result<CheckReport> {
+    use std::fmt::Write as _;
+    ensure!(
+        max_regression_pct >= 0.0 && max_regression_pct.is_finite(),
+        "--max-regression must be a non-negative percentage"
+    );
+    for (name, doc) in [("current", current), ("previous", previous)] {
+        ensure!(
+            doc.get("bench").as_str() == Some("hotpath"),
+            "{name} document is not a BENCH_hotpath.json artifact"
+        );
+    }
+    for key in ["dim", "rounds_total", "trials"] {
+        let (a, b) = (
+            current.get("macro").get(key).as_f64(),
+            previous.get("macro").get(key).as_f64(),
+        );
+        ensure!(
+            a == b,
+            "trajectory points are not comparable: macro.{key} differs ({a:?} vs {b:?}) — \
+             was one of them a --smoke run?"
+        );
+    }
+    let rps = |doc: &Json| doc.get("macro").get("hotpath").get("rounds_per_sec").as_f64();
+    let cur = rps(current).context("current document is missing macro.hotpath.rounds_per_sec")?;
+    let prev =
+        rps(previous).context("previous document is missing macro.hotpath.rounds_per_sec")?;
+    ensure!(prev > 0.0, "previous rounds_per_sec is not positive ({prev})");
+    let delta_pct = (cur - prev) / prev * 100.0;
+    let ok = delta_pct >= -max_regression_pct;
+    let mut text = String::new();
+    let _ = writeln!(
+        text,
+        "macro rounds/sec: {prev:.0} -> {cur:.0} ({delta_pct:+.1}%, tolerance -{max_regression_pct:.1}%) {}",
+        if ok { "OK" } else { "REGRESSION" }
+    );
+    let sps = |doc: &Json| doc.get("macro").get("hotpath").get("syncs_per_sec").as_f64();
+    if let (Some(p), Some(c)) = (sps(previous), sps(current)) {
+        if p > 0.0 {
+            let _ = writeln!(
+                text,
+                "syncs/sec (informational): {p:.0} -> {c:.0} ({:+.1}%)",
+                (c - p) / p * 100.0
+            );
+        }
+    }
+    // Per-kernel medians, informational: name the big movers.
+    if let (Some(cm), Some(pm)) = (current.get("micro").as_obj(), previous.get("micro").as_obj())
+    {
+        for (name, cur_entry) in cm {
+            let c = cur_entry.get("median_ns").as_f64();
+            let p = pm.get(name).and_then(|e| e.get("median_ns").as_f64());
+            if let (Some(c), Some(p)) = (c, p) {
+                if p > 0.0 && ((c - p) / p).abs() * 100.0 > max_regression_pct {
+                    let _ = writeln!(
+                        text,
+                        "micro {name} median (informational): {p:.0}ns -> {c:.0}ns ({:+.1}%)",
+                        (c - p) / p * 100.0
+                    );
+                }
+            }
+        }
+    }
+    Ok(CheckReport { ok, text })
+}
+
 /// One-line human summary of a bench document.
 pub fn summary(doc: &Json) -> String {
     let mac = doc.get("macro");
@@ -466,5 +553,63 @@ mod tests {
         let mut cfg = macro_config(&bc);
         cfg.rounds = 3;
         legacy_trial(&cfg).unwrap();
+    }
+
+    fn point(rps: f64, dim: f64) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("hotpath")),
+            (
+                "macro",
+                Json::obj(vec![
+                    ("dim", Json::num(dim)),
+                    ("rounds_total", Json::num(36.0)),
+                    ("trials", Json::num(3.0)),
+                    (
+                        "hotpath",
+                        Json::obj(vec![
+                            ("rounds_per_sec", Json::num(rps)),
+                            ("syncs_per_sec", Json::num(rps * 4.0)),
+                        ]),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn check_gates_on_macro_rounds_per_sec() {
+        // 10% faster: fine under any tolerance
+        let r = check(&point(110.0, 512.0), &point(100.0, 512.0), 5.0).unwrap();
+        assert!(r.ok, "{}", r.text);
+        // 4% slower under a 5% tolerance: still fine
+        let r = check(&point(96.0, 512.0), &point(100.0, 512.0), 5.0).unwrap();
+        assert!(r.ok, "{}", r.text);
+        // 20% slower under a 5% tolerance: regression
+        let r = check(&point(80.0, 512.0), &point(100.0, 512.0), 5.0).unwrap();
+        assert!(!r.ok);
+        assert!(r.text.contains("REGRESSION"), "{}", r.text);
+    }
+
+    #[test]
+    fn check_refuses_incomparable_or_malformed_points() {
+        // different macro sizes (smoke vs full) are a hard error
+        assert!(check(&point(100.0, 512.0), &point(100.0, 32768.0), 5.0).is_err());
+        // non-bench documents are rejected
+        assert!(check(&Json::obj(vec![]), &point(100.0, 512.0), 5.0).is_err());
+        // negative tolerance is rejected
+        assert!(check(&point(100.0, 512.0), &point(100.0, 512.0), -1.0).is_err());
+    }
+
+    /// The real emitted artifact is self-comparable: a run checked against
+    /// its own file must pass with any tolerance.
+    #[test]
+    fn emitted_artifact_checks_against_itself() {
+        let out = std::env::temp_dir()
+            .join(format!("deahes-bench-check-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&out);
+        let doc = run(&BenchConfig { smoke: true }, &out).unwrap();
+        let r = check(&doc, &doc, 0.0).unwrap();
+        assert!(r.ok, "{}", r.text);
+        let _ = std::fs::remove_file(&out);
     }
 }

@@ -37,6 +37,39 @@ impl GossipMode {
     }
 }
 
+/// Sync topology: how worker replicas and the aggregate θ̃ meet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncMode {
+    /// The paper's centralized EASGD round-trip: each sync blocks on the
+    /// master, which applies the elastic pair update (eqs. 12-13) in one
+    /// operation.
+    Central,
+    /// Decentralized elastic pull (Zhang 2016 §asynchronous / DaSGD
+    /// flavor): workers pull (eq. 12, `native::elastic_pull`) against the
+    /// master snapshot last published on the gossip board and publish their
+    /// replicas back; the master is a periodic snapshot publisher + metrics
+    /// aggregator that folds replicas in (eq. 13, `native::elastic_absorb`)
+    /// at round end — no blocking round-trip.
+    Gossip,
+}
+
+impl SyncMode {
+    pub fn parse(s: &str) -> Option<SyncMode> {
+        match s {
+            "central" => Some(SyncMode::Central),
+            "gossip" => Some(SyncMode::Gossip),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SyncMode::Central => "central",
+            SyncMode::Gossip => "gossip",
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     pub method: Method,
@@ -68,12 +101,20 @@ pub struct ExperimentConfig {
     pub knee: f64,
     pub detector: Detector,
     pub gossip: GossipMode,
+    /// Sync topology (see [`SyncMode`]). Serialized only when `Gossip`, so
+    /// legacy central-mode config JSON — and every schedule fingerprint
+    /// hashed from it — stays byte-identical.
+    pub sync_mode: SyncMode,
     /// Explicit sync-policy spec (see `elastic::policy`), overriding the
     /// method preset. `None` = derive the spec from `method`/`alpha`/
     /// `knee`/`detector`, which reproduces the paper presets exactly and
     /// keeps legacy config JSON (and hence schedule fingerprints)
     /// byte-identical: the key is omitted from JSON when `None`.
     pub policy: Option<String>,
+    /// Explicit optimizer spec (see [`crate::optim::OptimSpec`]),
+    /// overriding the method preset's local optimizer — the only way to
+    /// select `adamw(...)`. Omitted from JSON when `None`, like `policy`.
+    pub optimizer: Option<String>,
     // -- engine & driver --
     pub engine: EngineKind,
     /// true: one OS thread per worker (realistic async); false: the
@@ -103,7 +144,9 @@ impl Default for ExperimentConfig {
             knee: -0.05,
             detector: Detector::PaperSign,
             gossip: GossipMode::Peers,
+            sync_mode: SyncMode::Central,
             policy: None,
+            optimizer: None,
             engine: EngineKind::Xla { artifacts_dir: "artifacts".into(), native_opt: false },
             threaded: false,
         }
@@ -136,6 +179,16 @@ impl ExperimentConfig {
     /// Build the sync policy for this run from its effective spec.
     pub fn build_policy(&self) -> Result<Box<dyn crate::elastic::policy::SyncPolicy>> {
         crate::elastic::policy::parse(&self.effective_policy_spec())
+    }
+
+    /// The optimizer this run steps with: the explicit `optimizer` override,
+    /// or the method preset's optimizer with default hyperparameters.
+    pub fn optimizer_spec(&self) -> Result<crate::optim::OptimSpec> {
+        match &self.optimizer {
+            Some(s) => crate::optim::OptimSpec::parse(s)
+                .with_context(|| format!("config: bad optimizer spec '{s}'")),
+            None => Ok(crate::optim::OptimSpec::preset(self.method.optimizer())),
+        }
     }
 
     pub fn score_weights(&self) -> Vec<f64> {
@@ -176,6 +229,10 @@ impl ExperimentConfig {
                     )
                 })?
             }
+        }
+        if let Some(spec) = &self.optimizer {
+            crate::optim::OptimSpec::parse(spec)
+                .with_context(|| format!("config: bad optimizer spec '{spec}'"))?;
         }
         if self.lr <= 0.0 {
             bail!("lr must be positive");
@@ -240,6 +297,14 @@ impl ExperimentConfig {
         // (and schedule fingerprints) they had before the policy layer.
         if let Some(spec) = &self.policy {
             fields.push(("policy", Json::str(spec)));
+        }
+        // Same omission discipline for the newer optional axes: central-mode
+        // preset configs serialize byte-identically to pre-gossip builds.
+        if self.sync_mode != SyncMode::Central {
+            fields.push(("sync_mode", Json::str(self.sync_mode.name())));
+        }
+        if let Some(spec) = &self.optimizer {
+            fields.push(("optimizer", Json::str(spec)));
         }
         Json::obj(fields)
     }
@@ -313,6 +378,19 @@ impl ExperimentConfig {
             knee: j.get("knee").as_f64().unwrap_or(d.knee),
             detector: Self::enum_field(j, "detector", d.detector, Detector::parse)?,
             gossip: Self::enum_field(j, "gossip", d.gossip, GossipMode::parse)?,
+            sync_mode: Self::enum_field(j, "sync_mode", d.sync_mode, SyncMode::parse)?,
+            optimizer: match j.get("optimizer") {
+                Json::Null => None,
+                v => {
+                    let s = v
+                        .as_str()
+                        .context("config: 'optimizer' must be a string spec")?;
+                    Some(
+                        crate::optim::OptimSpec::canonical(s)
+                            .with_context(|| format!("config: bad optimizer spec '{s}'"))?,
+                    )
+                }
+            },
             policy: match j.get("policy") {
                 Json::Null => None,
                 v => {
@@ -418,6 +496,48 @@ mod tests {
         assert!(!j.to_string_compact().contains("policy"));
     }
 
+    /// Same omission discipline for the newer optional axes: a default
+    /// (central, preset-optimizer) config must not grow `sync_mode` or
+    /// `optimizer` keys, and the non-default values must round-trip.
+    #[test]
+    fn sync_mode_and_optimizer_omitted_by_default_and_roundtrip() {
+        let cfg = ExperimentConfig::default();
+        let text = cfg.to_json().to_string_compact();
+        assert!(!text.contains("sync_mode"), "{text}");
+        assert!(!text.contains("optimizer"), "{text}");
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.sync_mode = SyncMode::Gossip;
+        cfg.optimizer = Some("adamw(beta1=0.9,beta2=0.999,eps=0.00000001,wd=0.01)".into());
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.sync_mode, SyncMode::Gossip);
+        assert_eq!(back.optimizer, cfg.optimizer);
+        // spelling variants canonicalize on the way in
+        let mut j = cfg.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("optimizer".into(), Json::str(" adamw ( wd=0.01, beta1 = 0.9 ) "));
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(
+            back.optimizer.as_deref(),
+            Some("adamw(beta1=0.9,beta2=0.999,eps=0.00000001,wd=0.01)")
+        );
+    }
+
+    #[test]
+    fn optimizer_spec_resolution_prefers_override() {
+        use crate::optim::{OptimSpec, Optimizer};
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.optimizer_spec().unwrap().kind(), Optimizer::AdaHessian);
+        cfg.method = Method::Easgd;
+        assert_eq!(cfg.optimizer_spec().unwrap(), OptimSpec::Sgd);
+        cfg.optimizer = Some("adamw(lr=0.005)".into());
+        assert_eq!(cfg.optimizer_spec().unwrap().kind(), Optimizer::AdamW);
+        // validate() catches bad specs up front
+        cfg.optimizer = Some("adamw(beta1=1)".into());
+        assert!(cfg.validate().is_err());
+    }
+
     #[test]
     fn policy_spec_roundtrips_canonicalized() {
         let mut cfg = ExperimentConfig::default();
@@ -454,8 +574,11 @@ mod tests {
             ("detector", "psychic"),
             ("gossip", "telepathy"),
             ("fail_style", "meteor"),
+            ("sync_mode", "quantum"),
             ("policy", "bogus(x=1)"),
             ("policy", "fixed(beta=9)"),
+            ("optimizer", "adam"),
+            ("optimizer", "adamw(beta1=2)"),
         ] {
             let mut j = ExperimentConfig::default().to_json();
             if let Json::Obj(m) = &mut j {
@@ -491,6 +614,8 @@ mod tests {
         assert_eq!(cfg.gossip, d.gossip);
         assert_eq!(cfg.fail_style, d.fail_style);
         assert_eq!(cfg.policy, None);
+        assert_eq!(cfg.sync_mode, SyncMode::Central);
+        assert_eq!(cfg.optimizer, None);
     }
 
     #[test]

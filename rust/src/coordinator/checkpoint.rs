@@ -58,9 +58,18 @@ pub struct RunCheckpoint {
     /// Engine-internal state. Sequential: `{"all": ...}` (one shared
     /// engine). Threaded: `{"master": ..., "workers": [...]}`.
     pub engines: Json,
-    /// Driver RNG streams. Sequential: `{"order": ..., "gossip": ...}`.
-    /// Threaded: `{"gossip": [per-worker states]}` (no order stream).
+    /// Driver RNG streams. Sequential: `{"order": ..., "gossip": ...}`
+    /// (gossip sync mode: `{"order": ...}` only — no peer-estimate stream).
+    /// Threaded: `{"gossip": [per-worker states]}` (no order stream;
+    /// gossip sync mode: empty).
     pub rngs: Json,
+    /// Sync-topology state. Central mode: `Null`. Gossip mode:
+    /// `{"mode": "gossip", "master_slot": {round, theta}, "pull_cursors":
+    /// [...], "worker_policies": [...]}` — the master's published snapshot
+    /// slot, each worker's last-pulled stamp, and the per-worker policy
+    /// instances' cross-sync state. The tag makes a cross-mode resume a
+    /// hard error instead of a silently wrong continuation.
+    pub sync: Json,
     /// Metric log accumulated so far.
     pub log: MetricsLog,
     /// Served-sync count of every completed round (virtual-clock replay).
@@ -68,8 +77,18 @@ pub struct RunCheckpoint {
 }
 
 impl RunCheckpoint {
+    /// The sync topology this checkpoint was cut under, decoded from the
+    /// `sync` payload (`Null` = central, the pre-gossip encoding).
+    pub fn sync_mode(&self) -> crate::config::SyncMode {
+        if self.sync.get("mode").as_str() == Some("gossip") {
+            crate::config::SyncMode::Gossip
+        } else {
+            crate::config::SyncMode::Central
+        }
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("version", Json::num(CHECKPOINT_VERSION as f64)),
             ("driver", Json::str(&self.driver)),
             ("next_round", Json::num(self.next_round as f64)),
@@ -96,7 +115,13 @@ impl RunCheckpoint {
                 "per_round_syncs",
                 Json::Arr(self.per_round_syncs.iter().map(|&s| Json::num(s as f64)).collect()),
             ),
-        ])
+        ];
+        // Omitted for central-mode checkpoints, so the pre-gossip payload
+        // encoding (and its canonical fixed point) is unchanged.
+        if self.sync != Json::Null {
+            fields.push(("sync", self.sync.clone()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<RunCheckpoint> {
@@ -154,6 +179,18 @@ impl RunCheckpoint {
             workers.len(),
             gossip.len()
         );
+        // A present sync payload must carry a mode tag this build knows.
+        // Decoding an unknown/corrupt tag as "central" would defeat the
+        // cross-mode hard error `validate_resume` exists for.
+        let sync = j.get("sync").clone();
+        if sync != Json::Null {
+            let mode = sync.get("mode").as_str().unwrap_or("<missing>");
+            ensure!(
+                mode == "gossip",
+                "checkpoint: unknown sync payload mode '{mode}' (this build knows 'gossip'; \
+                 central checkpoints carry no sync payload)"
+            );
+        }
         Ok(RunCheckpoint {
             driver,
             next_round,
@@ -162,6 +199,7 @@ impl RunCheckpoint {
             gossip,
             engines: j.get("engines").clone(),
             rngs: j.get("rngs").clone(),
+            sync,
             log: MetricsLog::from_json(j.get("records")).context("checkpoint: bad 'records'")?,
             per_round_syncs,
         })
@@ -181,6 +219,7 @@ mod tests {
             gossip: vec![(1, vec![1.0, -0.5]), (0, vec![0.0, 0.0])],
             engines: Json::obj(vec![("all", Json::Null)]),
             rngs: Json::obj(vec![("order", Json::Null)]),
+            sync: Json::Null,
             log: MetricsLog::default(),
             per_round_syncs: vec![2, 1],
         }
@@ -196,6 +235,34 @@ mod tests {
         assert_eq!(back.workers.len(), 2);
         assert_eq!(back.gossip, cp.gossip);
         assert_eq!(back.per_round_syncs, vec![2, 1]);
+        assert_eq!(back.to_json().to_string_compact(), text, "canonical fixed point");
+    }
+
+    /// Gossip-mode checkpoints round-trip their `sync` payload and decode
+    /// the right mode tag; central checkpoints stay `sync`-less on the wire
+    /// (pre-gossip encoding) and decode as central.
+    #[test]
+    fn sync_payload_roundtrips_and_tags_the_mode() {
+        use crate::config::SyncMode;
+        let central = sample();
+        assert_eq!(central.sync_mode(), SyncMode::Central);
+        assert!(!central.to_json().to_string_compact().contains("\"sync\""));
+
+        let mut gossip = sample();
+        gossip.sync = Json::obj(vec![
+            ("mode", Json::str("gossip")),
+            (
+                "master_slot",
+                Json::obj(vec![("round", Json::num(2.0)), ("theta", Json::str("3f800000"))]),
+            ),
+            ("pull_cursors", Json::Arr(vec![Json::num(1.0), Json::num(2.0)])),
+            ("worker_policies", Json::Arr(vec![Json::Null, Json::Null])),
+        ]);
+        assert_eq!(gossip.sync_mode(), SyncMode::Gossip);
+        let text = gossip.to_json().to_string_compact();
+        let back = RunCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.sync_mode(), SyncMode::Gossip);
+        assert_eq!(back.sync, gossip.sync);
         assert_eq!(back.to_json().to_string_compact(), text, "canonical fixed point");
     }
 
@@ -219,5 +286,16 @@ mod tests {
         let mut cp = sample();
         cp.workers.pop();
         assert!(RunCheckpoint::from_json(&cp.to_json()).is_err());
+        // unknown/corrupt sync payload modes must NOT decode as central
+        for bad_sync in [
+            Json::obj(vec![("mode", Json::str("gossip "))]),
+            Json::obj(vec![("mode", Json::str("quantum"))]),
+            Json::obj(vec![("master_slot", Json::Null)]),
+        ] {
+            let mut cp = sample();
+            cp.sync = bad_sync;
+            let err = RunCheckpoint::from_json(&cp.to_json()).unwrap_err().to_string();
+            assert!(err.contains("sync payload mode"), "{err}");
+        }
     }
 }

@@ -22,6 +22,13 @@ struct Entry {
 
 pub struct GossipBoard {
     entries: Vec<RwLock<Entry>>,
+    /// Decentralized (`sync_mode: gossip`) runs: the master's periodically
+    /// published aggregate snapshot. Workers `elastic_pull` directly against
+    /// this slot (the snapshots are pool-recycled `Arc`s, so a read is one
+    /// lock + one refcount bump — no copy); in gossip mode the per-worker
+    /// `entries` hold the workers' own published replicas instead of cached
+    /// master estimates. Central-mode runs never touch this slot.
+    master: RwLock<Entry>,
     mode: GossipMode,
 }
 
@@ -31,7 +38,8 @@ impl GossipBoard {
         let entries = (0..workers)
             .map(|_| RwLock::new(Entry { round: 0, theta: init.clone() }))
             .collect();
-        GossipBoard { entries, mode }
+        let master = RwLock::new(Entry { round: 0, theta: init });
+        GossipBoard { entries, master, mode }
     }
 
     pub fn workers(&self) -> usize {
@@ -65,6 +73,30 @@ impl GossipBoard {
         } else {
             (own.round, own.theta)
         }
+    }
+
+    /// Publish the master's aggregate snapshot at `round` (gossip sync
+    /// mode). Monotone like [`GossipBoard::publish`].
+    pub fn publish_master(&self, round: u64, theta: Arc<Vec<f32>>) {
+        let mut e = self.master.write().unwrap();
+        if round >= e.round {
+            *e = Entry { round, theta };
+        }
+    }
+
+    /// The last master snapshot published via [`GossipBoard::publish_master`]
+    /// — what gossip-mode workers pull against. Returns (stamp round, θ̃).
+    pub fn master_estimate(&self) -> (u64, Arc<Vec<f32>>) {
+        let e = self.master.read().unwrap();
+        (e.round, e.theta.clone())
+    }
+
+    /// One worker's current board entry (stamp round, θ). In gossip sync
+    /// mode this is the worker's freshly published replica, which the
+    /// master folds into the aggregate at round end.
+    pub fn entry(&self, w: usize) -> (u64, Arc<Vec<f32>>) {
+        let e = self.entries[w].read().unwrap();
+        (e.round, e.theta.clone())
     }
 
     /// Copy out every worker's current (stamp round, θ estimate) — the
@@ -141,5 +173,30 @@ mod tests {
         let b = board(1, GossipMode::Peers);
         let (r, _) = b.estimate(0, &mut Rng::new(0));
         assert_eq!(r, 0);
+    }
+
+    #[test]
+    fn master_slot_publishes_monotonically() {
+        let b = board(2, GossipMode::Peers);
+        let (r, t) = b.master_estimate();
+        assert_eq!(r, 0);
+        assert_eq!(*t, vec![0.0; 4]);
+        b.publish_master(3, Arc::new(vec![3.0; 4]));
+        b.publish_master(1, Arc::new(vec![1.0; 4])); // stale write must lose
+        let (r, t) = b.master_estimate();
+        assert_eq!(r, 3);
+        assert_eq!(*t, vec![3.0; 4]);
+        // the master slot is independent of the per-worker entries
+        let (r, _) = b.entry(0);
+        assert_eq!(r, 0);
+    }
+
+    #[test]
+    fn entry_reads_back_published_replicas() {
+        let b = board(2, GossipMode::Peers);
+        b.publish(1, 4, Arc::new(vec![4.0; 4]));
+        let (r, t) = b.entry(1);
+        assert_eq!(r, 4);
+        assert_eq!(*t, vec![4.0; 4]);
     }
 }

@@ -207,6 +207,25 @@ impl MasterState {
         Ok(())
     }
 
+    /// Gossip sync mode: fold one worker's published replica into the
+    /// aggregate (the eq. 13 half via [`crate::optim::native::elastic_absorb`])
+    /// and account the sync in the per-worker stats. The eq. 12 half already
+    /// ran worker-side (`native::elastic_pull` against a published master
+    /// snapshot), with (h1, h2) chosen by the worker's own policy instance —
+    /// the master here is a pure aggregator, so it takes the weights as
+    /// reported instead of consulting its (idle) policy.
+    pub fn absorb_gossip(&mut self, worker: usize, replica: &[f32], h1: f64, h2: f64) {
+        crate::optim::native::elastic_absorb(&mut self.theta, replica, h2 as f32);
+        let st = &mut self.per_worker[worker];
+        st.served += 1;
+        st.h1_sum += h1;
+        st.h2_sum += h2;
+        if h2 < self.correction_floor - 1e-12 {
+            st.corrections += 1;
+        }
+        self.total_syncs += 1;
+    }
+
     /// Serve one sync: ask the policy for (h1, h2), run the elastic pair
     /// update through the engine (L1 kernel or native mirror), update stats.
     ///
@@ -371,6 +390,29 @@ mod tests {
         let mut bad =
             MasterState::new(vec![0.0; 8], policy::parse("hysteresis(hold=2)").unwrap(), 3);
         assert!(bad.restore(&snap).is_err());
+    }
+
+    /// Gossip fold: absorbing a replica matches the master half of the
+    /// central pair update bit-for-bit, and the stats account it exactly
+    /// like a served sync (including the correction floor).
+    #[test]
+    fn absorb_gossip_matches_the_master_half_and_accounts_stats() {
+        let (mut central, mut e) = master("fixed(alpha=0.5)");
+        let (mut gossip, _) = master("fixed(alpha=0.5)");
+        let mut tw = vec![2.0; 8];
+        let replica_pre_pull = tw.clone();
+        central.serve_sync(&mut e, &ctx(0, 1, None, 0), &mut tw).unwrap();
+        // the gossip worker pulls first, then publishes; the master folds
+        // the POST-pull replica — different dynamics by design, so compare
+        // the kernel against the pre-pull replica here for bit-identity.
+        gossip.absorb_gossip(0, &replica_pre_pull, 0.5, 0.5);
+        assert_eq!(central.theta, gossip.theta);
+        assert_eq!(gossip.total_syncs, 1);
+        assert_eq!(gossip.per_worker[0].served, 1);
+        assert_eq!(gossip.per_worker[0].corrections, 0);
+        // below-floor h2 counts as a correction
+        gossip.absorb_gossip(1, &[1.0; 8], 1.0, 0.0);
+        assert_eq!(gossip.per_worker[1].corrections, 1);
     }
 
     #[test]

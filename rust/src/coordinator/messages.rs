@@ -29,6 +29,18 @@ pub enum ToMaster {
         missed: u32,
         reply: Sender<SyncReply>,
     },
+    /// Gossip sync mode: end-of-round fold. The monitor reports which
+    /// workers pulled this round (with the (h1, h2) their policies chose,
+    /// in worker-index order); the master absorbs each one's freshly
+    /// published board replica (eq. 13) and publishes its next aggregate
+    /// snapshot before replying — workers are parked between the round
+    /// barriers while this runs, so the fold is a consistent cut.
+    FoldRound {
+        round: u64,
+        /// (worker, h1, h2) per worker that pulled this round.
+        folds: Vec<(usize, f64, f64)>,
+        reply: Sender<()>,
+    },
     /// Evaluate the current aggregated model on the test subset.
     Eval { reply: Sender<(f64, f64)> },
     /// Fetch a copy of the aggregated model.

@@ -1,6 +1,20 @@
 //! Experiment drivers: wire the data, engines, worker/master state machines,
 //! gossip, failure injection and metrics into a full run.
 //!
+//! Two **sync topologies** (`cfg.sync_mode`, see docs/ARCHITECTURE.md
+//! §Sync topologies) share the worker/master state machines:
+//!
+//!  * **central** — the paper's EASGD round-trip: every sync blocks on the
+//!    master, which applies the elastic pair update in one operation.
+//!  * **gossip** — decentralized elastic pull: workers pull (eq. 12,
+//!    `native::elastic_pull`) against the master snapshot last published on
+//!    the gossip board, publish their replicas back, and the master — a
+//!    periodic snapshot publisher + metrics aggregator — folds the replicas
+//!    in (eq. 13) at round end. No blocking round-trip; each worker owns
+//!    its own sync-policy instance (policies key state by worker id, so the
+//!    split instances see exactly the per-worker context streams one shared
+//!    instance would).
+//!
 //! Two drivers share all algorithm code:
 //!
 //!  * **sequential** (default) — one engine, workers stepped in a seeded
@@ -29,18 +43,20 @@ use super::checkpoint::{self, RunCheckpoint};
 use super::evaluator::Evaluator;
 use super::failure::FailureModel;
 use super::gossip::GossipBoard;
-use super::master::MasterState;
+use super::master::{MasterState, SnapshotPool};
 use super::messages::{RoundReport, SyncReply, ToMaster};
 use super::simclock::{SimClock, SimClockReport};
 use super::worker::WorkerState;
-use crate::config::{EngineKind, ExperimentConfig};
+use crate::config::{EngineKind, ExperimentConfig, SyncMode};
 use crate::data::{synth, Batcher, Dataset, ShardPlan};
+use crate::elastic::policy::SyncPolicy;
 use crate::engine::quad::QuadraticEngine;
 use crate::engine::xla::{OptimImpl, XlaEngine, MASTER_ARTIFACTS};
 use crate::engine::Engine;
 use crate::metrics::{MetricsLog, RoundRecord};
-use crate::optim::{OptState, Optimizer};
+use crate::optim::Optimizer;
 use crate::runtime::Manifest;
+use crate::util::bits;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::{log_debug, log_info};
@@ -65,12 +81,15 @@ pub struct Setup {
     pub test: Arc<Dataset>,
     pub shard: ShardPlan,
     pub theta0: Vec<f32>,
+    /// The resolved optimizer spec (preset or `--optimizer` override).
+    pub optim: crate::optim::OptimSpec,
     manifest: Option<Arc<Manifest>>,
 }
 
 impl Setup {
     pub fn build(cfg: &ExperimentConfig) -> Result<Setup> {
         cfg.validate()?;
+        let optim = cfg.optimizer_spec()?;
         let data_seed = Rng::new(cfg.seed).derive(0xDA7A);
         let train = Arc::new(synth::dataset(cfg.train_size, cfg.seed ^ 0x7EA1));
         let test = Arc::new(synth::dataset(cfg.test_size, cfg.seed ^ 0x7E57));
@@ -89,7 +108,7 @@ impl Setup {
             }
             EngineKind::Quadratic { dim, .. } => (None, vec![0.0f32; *dim]),
         };
-        Ok(Setup { cfg: cfg.clone(), train, test, shard, theta0, manifest })
+        Ok(Setup { cfg: cfg.clone(), train, test, shard, theta0, optim, manifest })
     }
 
     /// Build an engine for `role` (must run on the calling thread for XLA).
@@ -114,10 +133,13 @@ impl Setup {
                 let names: Vec<&str> = match role {
                     Role::All => vec![],
                     Role::Master => MASTER_ARTIFACTS.to_vec(),
-                    Role::Worker(_) => match self.cfg.method.optimizer() {
+                    Role::Worker(_) => match self.optim.kind() {
                         Optimizer::Sgd => vec!["grad", "sgd"],
                         Optimizer::Momentum => vec!["grad", "momentum"],
                         Optimizer::AdaHessian => vec!["grad_hess", "adahessian"],
+                        // No AOT AdamW artifact: the gradient runs through
+                        // PJRT, the fused update through the native mirror.
+                        Optimizer::AdamW => vec!["grad"],
                     },
                 };
                 Ok(Box::new(XlaEngine::with_artifacts(m, &names, optim)?))
@@ -140,7 +162,7 @@ impl Setup {
         WorkerState::new(
             i,
             self.theta0.clone(),
-            OptState::new(cfg.method.optimizer(), n),
+            self.optim.state(n),
             cfg.lr as f32,
             batcher,
             cfg.score_weights(),
@@ -247,7 +269,56 @@ pub fn run_sequential(setup: &Setup) -> Result<RunResult> {
     run_sequential_with(setup, None, None)
 }
 
+/// Shared resume validation: driver tag, worker arity, round bound, and the
+/// sync-topology tag. A central-mode checkpoint restored into a gossip
+/// config (or vice versa) would silently continue under different dynamics
+/// — make it a hard error instead.
+fn validate_resume(
+    cp: &RunCheckpoint,
+    cfg: &ExperimentConfig,
+    driver: &str,
+) -> Result<()> {
+    anyhow::ensure!(
+        cp.driver == driver,
+        "checkpoint was written by the '{}' driver, this run is {driver}",
+        cp.driver
+    );
+    anyhow::ensure!(
+        cp.workers.len() == cfg.workers,
+        "checkpoint holds {} workers, config has {}",
+        cp.workers.len(),
+        cfg.workers
+    );
+    anyhow::ensure!(
+        cp.next_round <= cfg.rounds,
+        "checkpoint resumes at round {} but the run has only {}",
+        cp.next_round,
+        cfg.rounds
+    );
+    let cp_mode = cp.sync_mode();
+    anyhow::ensure!(
+        cp_mode == cfg.sync_mode,
+        "checkpoint was written by a sync_mode={} run but this config sets sync_mode={} — \
+         mixed-mode resume is not supported; resume under the original sync mode or start \
+         a fresh run directory",
+        cp_mode.name(),
+        cfg.sync_mode.name()
+    );
+    Ok(())
+}
+
 pub fn run_sequential_with(
+    setup: &Setup,
+    resume: Option<&RunCheckpoint>,
+    hooks: Option<CheckpointHooks<'_>>,
+) -> Result<RunResult> {
+    match setup.cfg.sync_mode {
+        SyncMode::Central => run_sequential_central(setup, resume, hooks),
+        SyncMode::Gossip => run_sequential_gossip(setup, resume, hooks),
+    }
+}
+
+fn run_sequential_central(
     setup: &Setup,
     resume: Option<&RunCheckpoint>,
     mut hooks: Option<CheckpointHooks<'_>>,
@@ -270,23 +341,7 @@ pub fn run_sequential_with(
     let mut per_round_syncs: Vec<usize> = Vec::with_capacity(cfg.rounds as usize);
     let mut start_round = 0u64;
     if let Some(cp) = resume {
-        anyhow::ensure!(
-            cp.driver == checkpoint::DRIVER_SEQUENTIAL,
-            "checkpoint was written by the '{}' driver, this run is sequential",
-            cp.driver
-        );
-        anyhow::ensure!(
-            cp.workers.len() == cfg.workers,
-            "checkpoint holds {} workers, config has {}",
-            cp.workers.len(),
-            cfg.workers
-        );
-        anyhow::ensure!(
-            cp.next_round <= cfg.rounds,
-            "checkpoint resumes at round {} but the run has only {}",
-            cp.next_round,
-            cfg.rounds
-        );
+        validate_resume(cp, cfg, checkpoint::DRIVER_SEQUENTIAL)?;
         master.restore(&cp.master).context("restoring master state")?;
         for (w, snap) in workers.iter_mut().zip(&cp.workers) {
             w.restore(snap).with_context(|| format!("restoring worker {}", w.id))?;
@@ -407,6 +462,318 @@ pub fn run_sequential_with(
                         ("order", order_rng.state_json()),
                         ("gossip", gossip_rng.state_json()),
                     ]),
+                    sync: Json::Null,
+                    log: log.clone(),
+                    per_round_syncs: per_round_syncs.clone(),
+                })
+                .with_context(|| format!("writing checkpoint at round boundary {next}"))?;
+            }
+        }
+    }
+
+    let (t_step, t_sync) = measured_costs([engine.mean_costs()]);
+    let mut clock = SimClock::new(t_step, t_sync);
+    for &s in &per_round_syncs {
+        clock.round(cfg.workers, cfg.tau, s);
+    }
+    Ok(RunResult {
+        log,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        sim: clock.report(),
+        perf: engine.perf_summary(),
+        worker_stats: master
+            .per_worker
+            .iter()
+            .map(|s| (s.served, s.corrections))
+            .collect(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// gossip (decentralized elastic-pull) sync mode
+// ---------------------------------------------------------------------------
+
+/// Build one sync-policy instance per worker from the run's effective spec.
+/// Policies key their state by worker id, so worker `w`'s private instance
+/// sees exactly the context stream a shared master-side instance would see
+/// for `w` — splitting the instances changes no decisions.
+fn make_worker_policies(cfg: &ExperimentConfig) -> Result<Vec<Box<dyn SyncPolicy>>> {
+    (0..cfg.workers)
+        .map(|_| {
+            let mut p = cfg.build_policy()?;
+            p.init(cfg.workers);
+            Ok(p)
+        })
+        .collect()
+}
+
+/// The gossip-topology half of a [`RunCheckpoint`]: the master's published
+/// snapshot slot, each worker's pull cursor (stamp of the snapshot it last
+/// pulled against) and the per-worker policy states.
+///
+/// The pull cursors are telemetry + forward-compat, not resume-critical
+/// state today: with the master publishing every round, the run's dynamics
+/// never read them back. They are in the cut so that per-worker view
+/// staleness survives a resume, and so the planned `publish_every` knob
+/// (ROADMAP) — under which a worker may legitimately skip re-pulling an
+/// unchanged snapshot — can rely on them without a checkpoint format bump.
+fn gossip_sync_snapshot(
+    board: &GossipBoard,
+    policies: &[Box<dyn SyncPolicy>],
+    pull_cursors: &[u64],
+) -> Json {
+    let (mround, mtheta) = board.master_estimate();
+    gossip_sync_payload(
+        mround,
+        &mtheta,
+        pull_cursors.iter().map(|&c| Json::num(c as f64)).collect(),
+        policies.iter().map(|p| p.snapshot()).collect(),
+    )
+}
+
+/// The ONE serializer of the gossip `sync` payload shape — both drivers
+/// route through it (the threaded driver hands in the per-worker parts it
+/// collected over the state channel), so the shape `restore_gossip_sync`
+/// reads can never fork between writers.
+fn gossip_sync_payload(
+    master_round: u64,
+    master_theta: &[f32],
+    pull_cursors: Vec<Json>,
+    worker_policies: Vec<Json>,
+) -> Json {
+    Json::obj(vec![
+        ("mode", Json::str("gossip")),
+        (
+            "master_slot",
+            Json::obj(vec![
+                ("round", Json::num(master_round as f64)),
+                ("theta", Json::str(&bits::f32s_hex(master_theta))),
+            ]),
+        ),
+        ("pull_cursors", Json::Arr(pull_cursors)),
+        ("worker_policies", Json::Arr(worker_policies)),
+    ])
+}
+
+/// Inverse of [`gossip_sync_snapshot`] onto freshly built state.
+fn restore_gossip_sync(
+    sync: &Json,
+    board: &GossipBoard,
+    policies: &mut [Box<dyn SyncPolicy>],
+    pull_cursors: &mut [u64],
+) -> Result<()> {
+    let slot = sync.get("master_slot");
+    let round = slot
+        .get("round")
+        .as_f64()
+        .context("gossip checkpoint: missing master_slot round")? as u64;
+    let theta = bits::f32s_from_hex(
+        slot.get("theta")
+            .as_str()
+            .context("gossip checkpoint: missing master_slot theta")?,
+    )?;
+    board.publish_master(round, Arc::new(theta));
+    let cursors = sync
+        .get("pull_cursors")
+        .as_arr()
+        .context("gossip checkpoint: missing pull_cursors")?;
+    anyhow::ensure!(
+        cursors.len() == pull_cursors.len(),
+        "gossip checkpoint: {} pull cursors for {} workers",
+        cursors.len(),
+        pull_cursors.len()
+    );
+    for (slot, v) in pull_cursors.iter_mut().zip(cursors) {
+        *slot = v.as_f64().context("gossip checkpoint: non-numeric pull cursor")? as u64;
+    }
+    let states = sync
+        .get("worker_policies")
+        .as_arr()
+        .context("gossip checkpoint: missing worker_policies")?;
+    anyhow::ensure!(
+        states.len() == policies.len(),
+        "gossip checkpoint: {} policy states for {} workers",
+        states.len(),
+        policies.len()
+    );
+    for (i, (p, s)) in policies.iter_mut().zip(states).enumerate() {
+        p.restore(s)
+            .with_context(|| format!("worker {i}: restoring sync-policy state"))?;
+    }
+    Ok(())
+}
+
+/// Sequential driver, gossip sync mode. Per round: every worker (seeded
+/// random order, same stream as the central driver) trains, scores against
+/// the last published master snapshot, pulls toward it with its policy's
+/// h1 (`native::elastic_pull` — in place, allocation-free) and publishes
+/// its replica through a per-worker recycling [`SnapshotPool`]. At round
+/// end the master folds the fresh replicas in worker-index order (eq. 13)
+/// and publishes the next snapshot. Fully deterministic and bit-exact
+/// across checkpoint/resume (pinned by `tests/checkpoint_resume.rs`).
+fn run_sequential_gossip(
+    setup: &Setup,
+    resume: Option<&RunCheckpoint>,
+    mut hooks: Option<CheckpointHooks<'_>>,
+) -> Result<RunResult> {
+    let cfg = &setup.cfg;
+    let t0 = Instant::now();
+    let mut engine = setup.make_engine(Role::All)?;
+    let mut workers: Vec<WorkerState> =
+        (0..cfg.workers).map(|i| setup.make_worker(i)).collect();
+    let mut master = setup.make_master()?;
+    let mut policies = make_worker_policies(cfg)?;
+    let mut pull_cursors: Vec<u64> = vec![0; cfg.workers];
+    let mut replica_pools: Vec<SnapshotPool> =
+        (0..cfg.workers).map(|_| SnapshotPool::new()).collect();
+    let gossip = GossipBoard::new(cfg.workers, Arc::new(setup.theta0.clone()), cfg.gossip);
+    let mut evaluator = setup.make_evaluator();
+    let mut order_rng = Rng::new(cfg.seed).derive(0x0DE2);
+    let mut log = MetricsLog::default();
+    let mut per_round_syncs: Vec<usize> = Vec::with_capacity(cfg.rounds as usize);
+    let mut start_round = 0u64;
+    if let Some(cp) = resume {
+        validate_resume(cp, cfg, checkpoint::DRIVER_SEQUENTIAL)?;
+        master.restore(&cp.master).context("restoring master state")?;
+        for (w, snap) in workers.iter_mut().zip(&cp.workers) {
+            w.restore(snap).with_context(|| format!("restoring worker {}", w.id))?;
+        }
+        for (w, (round, theta)) in cp.gossip.iter().enumerate() {
+            gossip.publish(w, *round, Arc::new(theta.clone()));
+        }
+        restore_gossip_sync(&cp.sync, &gossip, &mut policies, &mut pull_cursors)?;
+        engine
+            .state_restore(cp.engines.get("all"))
+            .context("restoring engine state")?;
+        order_rng =
+            Rng::from_state_json(cp.rngs.get("order")).context("restoring order rng")?;
+        log = cp.log.clone();
+        per_round_syncs.extend_from_slice(&cp.per_round_syncs);
+        start_round = cp.next_round;
+        log_info!("sequential gossip run: resuming from checkpoint at round {start_round}");
+    }
+    // Round-scoped buffers, hoisted: a warmed-up gossip round performs no
+    // heap allocation either (pinned by tests/alloc_regression.rs).
+    let mut losses: Vec<f64> = Vec::with_capacity(cfg.workers);
+    let mut h1s: Vec<f64> = Vec::with_capacity(cfg.workers);
+    let mut h2s: Vec<f64> = Vec::with_capacity(cfg.workers);
+    let mut scores: Vec<f64> = Vec::with_capacity(cfg.workers);
+    let mut order: Vec<usize> = Vec::with_capacity(cfg.workers);
+    let mut folds: Vec<(usize, f64, f64)> = Vec::with_capacity(cfg.workers);
+
+    log_info!(
+        "sequential gossip run: method={} policy={} k={} tau={} rounds={} failure={}",
+        cfg.method.name(),
+        master.policy_spec(),
+        cfg.workers,
+        cfg.tau,
+        cfg.rounds,
+        cfg.failure.describe()
+    );
+
+    for round in start_round..cfg.rounds {
+        losses.clear();
+        h1s.clear();
+        h2s.clear();
+        scores.clear();
+        folds.clear();
+        let mut ok = 0u32;
+        let mut failed = 0u32;
+        order_rng.permutation_into(&mut order, cfg.workers);
+        for &w in &order {
+            let suppressed = cfg.failure.suppressed(cfg.seed, w, round);
+            if suppressed && cfg.fail_style == crate::coordinator::failure::FailStyle::Node {
+                // Node down: frozen — no steps, no board access.
+                workers[w].record_miss();
+                failed += 1;
+                if workers[w].last_loss.is_finite() {
+                    losses.push(workers[w].last_loss as f64);
+                }
+                continue;
+            }
+            let loss = workers[w].local_round(engine.as_mut(), cfg.tau)?;
+            losses.push(loss as f64);
+            if suppressed {
+                // Comm-only failure: trained, but in gossip mode the board
+                // IS the severed link — no estimate, no score, no pull, no
+                // publish. (Central mode keeps scoring through a master-link
+                // failure because peer gossip still serves the estimate;
+                // gossip mode has no estimate source besides the board.)
+                workers[w].record_miss();
+                failed += 1;
+                continue;
+            }
+            // The published master snapshot doubles as the score estimate:
+            // it IS the master view a gossip worker can see.
+            let (stamp, est) = gossip.master_estimate();
+            let score = workers[w].observe_and_score(&est);
+            if let Some(a) = score {
+                scores.push(a);
+            }
+            let ctx = crate::elastic::policy::SyncContext {
+                worker: w,
+                round,
+                raw_score: score,
+                missed: workers[w].missed,
+                alpha: cfg.alpha,
+            };
+            let wts = policies[w].weights(&ctx);
+            // Worker half (eq. 12) against the read-only shared snapshot.
+            crate::optim::native::elastic_pull(
+                &mut workers[w].theta,
+                &est,
+                wts.h1 as f32,
+            );
+            workers[w].complete_pull();
+            pull_cursors[w] = stamp;
+            // Publish the post-pull replica through this worker's pool.
+            gossip.publish(w, round + 1, replica_pools[w].publish(&workers[w].theta));
+            folds.push((w, wts.h1, wts.h2));
+            h1s.push(wts.h1);
+            h2s.push(wts.h2);
+            ok += 1;
+        }
+        // The master's periodic role: fold the freshly published replicas
+        // (worker-index order — deterministic and driver-invariant) and
+        // publish the next snapshot for round `round + 1`.
+        folds.sort_unstable_by_key(|&(w, _, _)| w);
+        for &(w, h1, h2) in &folds {
+            let (_, replica) = gossip.entry(w);
+            master.absorb_gossip(w, &replica, h1, h2);
+        }
+        gossip.publish_master(round + 1, master.publish_snapshot());
+        per_round_syncs.push(ok as usize);
+        if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            let (acc, tl) = evaluator.evaluate(engine.as_mut(), &master.theta)?;
+            log_debug!("round {round}: acc={acc:.4} train_loss={:.4}", mean(&losses));
+            log.push(RoundRecord {
+                round,
+                test_acc: acc,
+                test_loss: tl,
+                train_loss: mean(&losses),
+                syncs_ok: ok,
+                syncs_failed: failed,
+                mean_h1: mean(&h1s),
+                mean_h2: mean(&h2s),
+                mean_score: mean(&scores),
+            });
+        }
+        if let Some(h) = hooks.as_mut() {
+            let next = round + 1;
+            if h.every > 0 && next % h.every == 0 && next < cfg.rounds {
+                (h.save)(RunCheckpoint {
+                    driver: checkpoint::DRIVER_SEQUENTIAL.into(),
+                    next_round: next,
+                    master: master.snapshot(),
+                    workers: workers.iter().map(|w| w.snapshot()).collect(),
+                    gossip: gossip
+                        .entries_snapshot()
+                        .into_iter()
+                        .map(|(r, t)| (r, t.as_ref().clone()))
+                        .collect(),
+                    engines: Json::obj(vec![("all", engine.state_snapshot())]),
+                    rngs: Json::obj(vec![("order", order_rng.state_json())]),
+                    sync: gossip_sync_snapshot(&gossip, &policies, &pull_cursors),
                     log: log.clone(),
                     per_round_syncs: per_round_syncs.clone(),
                 })
@@ -479,6 +846,59 @@ pub fn run_threaded(setup: &Setup) -> Result<RunResult> {
 pub fn run_threaded_with(
     setup: &Setup,
     resume: Option<&RunCheckpoint>,
+    hooks: Option<CheckpointHooks<'_>>,
+) -> Result<RunResult> {
+    match setup.cfg.sync_mode {
+        SyncMode::Central => run_threaded_central(setup, resume, hooks),
+        SyncMode::Gossip => run_threaded_gossip(setup, resume, hooks),
+    }
+}
+
+/// Probe-restore every per-thread engine payload on the driving thread: a
+/// restore failure inside a spawned thread would exit it before its first
+/// barrier and strand its peers, so nothing fallible may be left for the
+/// threads themselves.
+fn probe_engine_payloads(setup: &Setup, cp: &RunCheckpoint) -> Result<()> {
+    let k = setup.cfg.workers;
+    anyhow::ensure!(
+        cp.engines.get("workers").as_arr().map(|a| a.len()) == Some(k),
+        "checkpoint is missing per-worker engine states"
+    );
+    match &setup.cfg.engine {
+        EngineKind::Quadratic { .. } => {
+            // Quadratic engines are cheap to build: probe-restore every
+            // engine payload here (the threads restore again for real).
+            setup
+                .make_engine(Role::Master)?
+                .state_restore(cp.engines.get("master"))
+                .context("restoring master engine state")?;
+            for i in 0..k {
+                setup
+                    .make_engine(Role::Worker(i))?
+                    .state_restore(cp.engines.get("workers").idx(i))
+                    .with_context(|| format!("worker {i}: restoring engine state"))?;
+            }
+        }
+        EngineKind::Xla { .. } => {
+            // XLA engines keep no checkpointable state (snapshot = Null,
+            // and Null always restores); anything else here is a corrupt
+            // checkpoint — reject it before spawning instead of letting an
+            // expensive per-thread engine build fail.
+            let all_null = std::iter::once(cp.engines.get("master"))
+                .chain((0..k).map(|i| cp.engines.get("workers").idx(i)))
+                .all(|j| *j == Json::Null);
+            anyhow::ensure!(
+                all_null,
+                "checkpoint carries engine state the XLA engine cannot restore"
+            );
+        }
+    }
+    Ok(())
+}
+
+fn run_threaded_central(
+    setup: &Setup,
+    resume: Option<&RunCheckpoint>,
     mut hooks: Option<CheckpointHooks<'_>>,
 ) -> Result<RunResult> {
     let cfg = &setup.cfg;
@@ -486,30 +906,11 @@ pub fn run_threaded_with(
     let k = cfg.workers;
     let rounds = cfg.rounds;
     if let Some(cp) = resume {
-        anyhow::ensure!(
-            cp.driver == checkpoint::DRIVER_THREADED,
-            "checkpoint was written by the '{}' driver, this run is threaded",
-            cp.driver
-        );
-        anyhow::ensure!(
-            cp.workers.len() == k,
-            "checkpoint holds {} workers, config has {k}",
-            cp.workers.len()
-        );
-        anyhow::ensure!(
-            cp.next_round <= rounds,
-            "checkpoint resumes at round {} but the run has only {rounds}",
-            cp.next_round
-        );
-        // Per-thread payloads must exist AND decode for every worker
+        validate_resume(cp, cfg, checkpoint::DRIVER_THREADED)?;
         // BEFORE spawning: a restore failure inside a spawned thread would
         // exit it before its first barrier and strand its peers (the
         // monitor would block on the report channel forever). Nothing
         // fallible may be left for the threads themselves.
-        anyhow::ensure!(
-            cp.engines.get("workers").as_arr().map(|a| a.len()) == Some(k),
-            "checkpoint is missing per-worker engine states"
-        );
         anyhow::ensure!(
             cp.rngs.get("gossip").as_arr().map(|a| a.len()) == Some(k),
             "checkpoint is missing per-worker gossip rng states"
@@ -524,35 +925,7 @@ pub fn run_threaded_with(
             .make_master()?
             .restore(&cp.master)
             .context("restoring master state")?;
-        match &cfg.engine {
-            EngineKind::Quadratic { .. } => {
-                // Quadratic engines are cheap to build: probe-restore every
-                // engine payload here (the threads restore again for real).
-                setup
-                    .make_engine(Role::Master)?
-                    .state_restore(cp.engines.get("master"))
-                    .context("restoring master engine state")?;
-                for i in 0..k {
-                    setup
-                        .make_engine(Role::Worker(i))?
-                        .state_restore(cp.engines.get("workers").idx(i))
-                        .with_context(|| format!("worker {i}: restoring engine state"))?;
-                }
-            }
-            EngineKind::Xla { .. } => {
-                // XLA engines keep no checkpointable state (snapshot =
-                // Null, and Null always restores); anything else here is a
-                // corrupt checkpoint — reject it before spawning instead
-                // of letting an expensive per-thread engine build fail.
-                let all_null = std::iter::once(cp.engines.get("master"))
-                    .chain((0..k).map(|i| cp.engines.get("workers").idx(i)))
-                    .all(|j| *j == Json::Null);
-                anyhow::ensure!(
-                    all_null,
-                    "checkpoint carries engine state the XLA engine cannot restore"
-                );
-            }
-        }
+        probe_engine_payloads(setup, cp)?;
     }
     let start_round = resume.map_or(0, |cp| cp.next_round);
     let ckpt_every = hooks.as_ref().map_or(0, |h| h.every);
@@ -650,6 +1023,11 @@ pub fn run_threaded_with(
                                     ("master", master.snapshot()),
                                     ("engine", engine.state_snapshot()),
                                 ]));
+                            }
+                            ToMaster::FoldRound { .. } => {
+                                anyhow::bail!(
+                                    "gossip folds are not part of central mode (driver bug)"
+                                );
                             }
                             ToMaster::Shutdown => break,
                         }
@@ -851,6 +1229,382 @@ pub fn run_threaded_with(
                             ("workers", Json::Arr(engine_snaps)),
                         ]),
                         rngs: Json::obj(vec![("gossip", Json::Arr(rng_snaps))]),
+                        sync: Json::Null,
+                        log: log.clone(),
+                        per_round_syncs: per_round_syncs.clone(),
+                    })
+                })();
+                match (cut, hooks.as_mut()) {
+                    (Ok(cp), Some(h)) => {
+                        if let Err(e) = (h.save)(cp) {
+                            save_err.get_or_insert(e);
+                        }
+                    }
+                    (Err(e), _) => {
+                        save_err.get_or_insert(e);
+                    }
+                    (Ok(_), None) => unreachable!("ckpt_every > 0 implies hooks"),
+                }
+            }
+            barrier.wait(); // B: release workers into the next round
+        }
+
+        let mut perf = String::new();
+        let mut engine_costs: Vec<(Option<f64>, Option<f64>)> = Vec::with_capacity(k + 1);
+        for h in worker_handles {
+            let (s, costs) = h.join().expect("worker panicked")?;
+            if !s.is_empty() {
+                perf.push_str(&s);
+            }
+            engine_costs.push(costs);
+        }
+        master_tx.send(ToMaster::Shutdown).ok();
+        drop(master_tx);
+        let (master_perf, worker_stats, master_costs) =
+            master_handle.join().expect("master panicked")?;
+        perf.push_str(&master_perf);
+        engine_costs.push(master_costs);
+        if let Some(e) = save_err {
+            return Err(e.context("mid-trial checkpointing failed"));
+        }
+
+        let (t_step, t_sync) = measured_costs(engine_costs);
+        let mut clock = SimClock::new(t_step, t_sync);
+        for &s in &per_round_syncs {
+            clock.round(k, cfg.tau, s);
+        }
+        Ok(RunResult {
+            log,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            sim: clock.report(),
+            perf,
+            worker_stats,
+        })
+    })
+}
+
+/// Threaded driver, gossip sync mode: one OS thread per worker plus a
+/// master (aggregator) thread. Workers never block on the master — a round
+/// is local steps, a read of the published snapshot, the in-place elastic
+/// pull and a replica publish through the worker's own [`SnapshotPool`].
+/// The monitor hands the master a [`ToMaster::FoldRound`] between the round
+/// barriers (workers parked), so the fold set and the published snapshot
+/// are identical to the sequential driver's; only the engine noise streams
+/// differ (per-thread engines), exactly as in central mode.
+fn run_threaded_gossip(
+    setup: &Setup,
+    resume: Option<&RunCheckpoint>,
+    mut hooks: Option<CheckpointHooks<'_>>,
+) -> Result<RunResult> {
+    let cfg = &setup.cfg;
+    let t0 = Instant::now();
+    let k = cfg.workers;
+    let rounds = cfg.rounds;
+    if let Some(cp) = resume {
+        validate_resume(cp, cfg, checkpoint::DRIVER_THREADED)?;
+        // Everything fallible happens on the driving thread, before any
+        // worker thread exists (same discipline as the central driver).
+        setup
+            .make_master()?
+            .restore(&cp.master)
+            .context("restoring master state")?;
+        probe_engine_payloads(setup, cp)?;
+    }
+    let start_round = resume.map_or(0, |cp| cp.next_round);
+    let ckpt_every = hooks.as_ref().map_or(0, |h| h.every);
+    let gossip = Arc::new(GossipBoard::new(k, Arc::new(setup.theta0.clone()), cfg.gossip));
+    let mut policies = make_worker_policies(cfg)?;
+    let mut pull_cursors: Vec<u64> = vec![0; k];
+    if let Some(cp) = resume {
+        for (w, (round, theta)) in cp.gossip.iter().enumerate() {
+            gossip.publish(w, *round, Arc::new(theta.clone()));
+        }
+        restore_gossip_sync(&cp.sync, &gossip, &mut policies, &mut pull_cursors)?;
+    }
+    // Worker states restore on this thread, also before spawning.
+    let mut worker_states: Vec<WorkerState> = Vec::with_capacity(k);
+    for i in 0..k {
+        let mut st = setup.make_worker(i);
+        if let Some(cp) = resume {
+            st.restore(&cp.workers[i]).with_context(|| format!("restoring worker {i}"))?;
+        }
+        worker_states.push(st);
+    }
+    let barrier = Arc::new(Barrier::new(k + 1));
+    let (master_tx, master_rx) = mpsc::channel::<ToMaster>();
+    let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
+    let (state_tx, state_rx) = mpsc::channel::<(usize, Json)>();
+
+    log_info!(
+        "threaded gossip run: method={} policy={} k={} tau={} rounds={}{}",
+        cfg.method.name(),
+        cfg.effective_policy_spec(),
+        cfg.workers,
+        cfg.tau,
+        cfg.rounds,
+        if start_round > 0 { format!(" (resuming at round {start_round})") } else { String::new() }
+    );
+
+    std::thread::scope(|scope| -> Result<RunResult> {
+        type MasterReturn = (String, Vec<(u64, u64)>, (Option<f64>, Option<f64>));
+        type WorkerReturn = (String, (Option<f64>, Option<f64>));
+        // ---- master (aggregator) thread ----
+        let master_handle = {
+            let setup_ref = &*setup;
+            let gossip = gossip.clone();
+            let resume_master: Option<(Json, Json)> =
+                resume.map(|cp| (cp.master.clone(), cp.engines.get("master").clone()));
+            std::thread::Builder::new()
+                .name("master".into())
+                .spawn_scoped(scope, move || -> Result<MasterReturn> {
+                    let mut engine = setup_ref.make_engine(Role::Master)?;
+                    let mut master = setup_ref.make_master()?;
+                    if let Some((mstate, estate)) = &resume_master {
+                        master.restore(mstate).context("restoring master state")?;
+                        engine
+                            .state_restore(estate)
+                            .context("restoring master engine state")?;
+                    }
+                    let mut evaluator = setup_ref.make_evaluator();
+                    while let Ok(msg) = master_rx.recv() {
+                        match msg {
+                            ToMaster::FoldRound { round, folds, reply } => {
+                                for &(w, h1, h2) in &folds {
+                                    let (_, replica) = gossip.entry(w);
+                                    master.absorb_gossip(w, &replica, h1, h2);
+                                }
+                                gossip.publish_master(round + 1, master.publish_snapshot());
+                                let _ = reply.send(());
+                            }
+                            ToMaster::Eval { reply } => {
+                                let r = evaluator.evaluate(engine.as_mut(), &master.theta)?;
+                                let _ = reply.send(r);
+                            }
+                            ToMaster::Snapshot { reply } => {
+                                let _ = reply.send(master.theta.clone());
+                            }
+                            ToMaster::Checkpoint { reply } => {
+                                let _ = reply.send(Json::obj(vec![
+                                    ("master", master.snapshot()),
+                                    ("engine", engine.state_snapshot()),
+                                ]));
+                            }
+                            ToMaster::Sync { .. } => {
+                                anyhow::bail!(
+                                    "sync round-trips are not part of gossip mode (driver bug)"
+                                );
+                            }
+                            ToMaster::Shutdown => break,
+                        }
+                    }
+                    Ok((
+                        engine.perf_summary(),
+                        master
+                            .per_worker
+                            .iter()
+                            .map(|s| (s.served, s.corrections))
+                            .collect(),
+                        engine.mean_costs(),
+                    ))
+                })
+                .expect("spawn master")
+        };
+
+        // ---- worker threads ----
+        let mut worker_handles = Vec::with_capacity(k);
+        let policy_iter = policies.into_iter();
+        let cursor_iter = pull_cursors.into_iter();
+        for (((i, mut state), mut policy), mut cursor) in worker_states
+            .into_iter()
+            .enumerate()
+            .zip(policy_iter)
+            .zip(cursor_iter)
+        {
+            let setup_ref = &*setup;
+            let gossip = gossip.clone();
+            let barrier = barrier.clone();
+            let report_tx = report_tx.clone();
+            let state_tx = state_tx.clone();
+            let resume_engine: Option<Json> =
+                resume.map(|cp| cp.engines.get("workers").idx(i).clone());
+            let failure: FailureModel = cfg.failure.clone();
+            let fail_style = cfg.fail_style;
+            let seed = cfg.seed;
+            let tau = cfg.tau;
+            let alpha = cfg.alpha;
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{i}"))
+                .spawn_scoped(scope, move || -> Result<WorkerReturn> {
+                    let mut engine = setup_ref.make_engine(Role::Worker(i))?;
+                    if let Some(estate) = &resume_engine {
+                        engine
+                            .state_restore(estate)
+                            .with_context(|| format!("worker {i}: restoring engine state"))?;
+                    }
+                    let mut pool = SnapshotPool::new();
+                    for round in start_round..rounds {
+                        let suppressed = failure.suppressed(seed, i, round);
+                        let node_down = suppressed
+                            && fail_style == crate::coordinator::failure::FailStyle::Node;
+                        let mut rep = RoundReport {
+                            worker: i,
+                            round,
+                            train_loss: state.last_loss,
+                            synced: !suppressed,
+                            raw_score: None,
+                            h1: None,
+                            h2: None,
+                        };
+                        if !node_down {
+                            rep.train_loss = state.local_round(engine.as_mut(), tau)?;
+                            if !suppressed {
+                                // Comm-suppressed workers never touch the
+                                // board (see the sequential driver): the
+                                // board is the link the failure severs.
+                                let (stamp, est) = gossip.master_estimate();
+                                rep.raw_score = state.observe_and_score(&est);
+                                let ctx = crate::elastic::policy::SyncContext {
+                                    worker: i,
+                                    round,
+                                    raw_score: rep.raw_score,
+                                    missed: state.missed,
+                                    alpha,
+                                };
+                                let wts = policy.weights(&ctx);
+                                crate::optim::native::elastic_pull(
+                                    &mut state.theta,
+                                    &est,
+                                    wts.h1 as f32,
+                                );
+                                state.complete_pull();
+                                cursor = stamp;
+                                gossip.publish(i, round + 1, pool.publish(&state.theta));
+                                rep.h1 = Some(wts.h1);
+                                rep.h2 = Some(wts.h2);
+                            }
+                        }
+                        if suppressed {
+                            state.record_miss();
+                        }
+                        report_tx.send(rep).ok();
+                        barrier.wait(); // A: round work done
+                        if ckpt_every > 0 && (round + 1) % ckpt_every == 0 && round + 1 < rounds
+                        {
+                            let snap = Json::obj(vec![
+                                ("worker", state.snapshot()),
+                                ("engine", engine.state_snapshot()),
+                                ("policy", policy.snapshot()),
+                                ("cursor", Json::num(cursor as f64)),
+                            ]);
+                            state_tx.send((i, snap)).ok();
+                        }
+                        barrier.wait(); // B: fold published, go on
+                    }
+                    Ok((engine.perf_summary(), engine.mean_costs()))
+                })
+                .expect("spawn worker");
+            worker_handles.push(handle);
+        }
+        drop(report_tx);
+        drop(state_tx);
+
+        // ---- monitor (this thread) ----
+        let mut log = resume.map(|cp| cp.log.clone()).unwrap_or_default();
+        let mut per_round_syncs = Vec::with_capacity(rounds as usize);
+        if let Some(cp) = resume {
+            per_round_syncs.extend_from_slice(&cp.per_round_syncs);
+        }
+        let mut save_err: Option<anyhow::Error> = None;
+        for round in start_round..rounds {
+            let mut losses = Vec::with_capacity(k);
+            let mut h1s = Vec::new();
+            let mut h2s = Vec::new();
+            let mut scores = Vec::new();
+            let mut folds: Vec<(usize, f64, f64)> = Vec::with_capacity(k);
+            let mut ok = 0u32;
+            let mut failed = 0u32;
+            for _ in 0..k {
+                let rep = report_rx.recv().context("worker report channel closed")?;
+                if rep.train_loss.is_finite() {
+                    losses.push(rep.train_loss as f64);
+                }
+                if let Some(a) = rep.raw_score {
+                    scores.push(a);
+                }
+                if rep.synced {
+                    ok += 1;
+                    if let (Some(a), Some(b)) = (rep.h1, rep.h2) {
+                        h1s.push(a);
+                        h2s.push(b);
+                        folds.push((rep.worker, a, b));
+                    }
+                } else {
+                    failed += 1;
+                }
+            }
+            barrier.wait(); // A: workers idle, every replica published
+            // Worker-index order makes the fold identical to the
+            // sequential driver's regardless of report arrival order.
+            folds.sort_unstable_by_key(|&(w, _, _)| w);
+            let (fold_tx, fold_rx) = mpsc::channel();
+            master_tx
+                .send(ToMaster::FoldRound { round, folds, reply: fold_tx })
+                .ok()
+                .context("master channel closed")?;
+            fold_rx.recv().context("fold reply dropped")?;
+            per_round_syncs.push(ok as usize);
+            if round % cfg.eval_every == 0 || round + 1 == rounds {
+                let (acc_tx, acc_rx) = mpsc::channel();
+                master_tx.send(ToMaster::Eval { reply: acc_tx }).ok();
+                let (acc, tl) = acc_rx.recv().context("eval reply dropped")?;
+                log.push(RoundRecord {
+                    round,
+                    test_acc: acc,
+                    test_loss: tl,
+                    train_loss: mean(&losses),
+                    syncs_ok: ok,
+                    syncs_failed: failed,
+                    mean_h1: mean(&h1s),
+                    mean_h2: mean(&h2s),
+                    mean_score: mean(&scores),
+                });
+            }
+            if ckpt_every > 0 && (round + 1) % ckpt_every == 0 && round + 1 < rounds {
+                // Consistent cut between barriers A and B: the fold for
+                // this round has been published, every worker is parked.
+                let cut = (|| -> Result<RunCheckpoint> {
+                    let mut worker_snaps: Vec<Json> = vec![Json::Null; k];
+                    let mut engine_snaps: Vec<Json> = vec![Json::Null; k];
+                    let mut policy_snaps: Vec<Json> = vec![Json::Null; k];
+                    let mut cursor_snaps: Vec<Json> = vec![Json::Null; k];
+                    for _ in 0..k {
+                        let (w, snap) =
+                            state_rx.recv().context("worker state channel closed")?;
+                        worker_snaps[w] = snap.get("worker").clone();
+                        engine_snaps[w] = snap.get("engine").clone();
+                        policy_snaps[w] = snap.get("policy").clone();
+                        cursor_snaps[w] = snap.get("cursor").clone();
+                    }
+                    let (ms_tx, ms_rx) = mpsc::channel();
+                    master_tx.send(ToMaster::Checkpoint { reply: ms_tx }).ok();
+                    let mstate = ms_rx.recv().context("master checkpoint reply dropped")?;
+                    let (mround, mtheta) = gossip.master_estimate();
+                    Ok(RunCheckpoint {
+                        driver: checkpoint::DRIVER_THREADED.into(),
+                        next_round: round + 1,
+                        master: mstate.get("master").clone(),
+                        workers: worker_snaps,
+                        gossip: gossip
+                            .entries_snapshot()
+                            .into_iter()
+                            .map(|(r, t)| (r, t.as_ref().clone()))
+                            .collect(),
+                        engines: Json::obj(vec![
+                            ("master", mstate.get("engine").clone()),
+                            ("workers", Json::Arr(engine_snaps)),
+                        ]),
+                        rngs: Json::obj(vec![]),
+                        sync: gossip_sync_payload(mround, &mtheta, cursor_snaps, policy_snaps),
                         log: log.clone(),
                         per_round_syncs: per_round_syncs.clone(),
                     })

@@ -105,6 +105,23 @@ impl WorkerState {
                         &mut self.scratch,
                     )?
                 }
+                OptState::AdamW { m, v, t, params } => {
+                    *t += 1;
+                    let lr = params.lr.map(|l| l as f32).unwrap_or(self.lr);
+                    engine.adamw_step(
+                        &mut self.theta,
+                        batch,
+                        m,
+                        v,
+                        *t,
+                        lr,
+                        params.beta1 as f32,
+                        params.beta2 as f32,
+                        params.eps as f32,
+                        params.wd as f32,
+                        &mut self.scratch,
+                    )?
+                }
             };
             self.steps += 1;
         }
@@ -130,6 +147,13 @@ impl WorkerState {
     /// A successful sync: adopt the post-elastic worker params.
     pub fn complete_sync(&mut self, new_theta: Vec<f32>) {
         self.theta = new_theta;
+        self.missed = 0;
+    }
+
+    /// A successful gossip-mode pull: θ was already updated in place
+    /// (`native::elastic_pull` against a shared snapshot), so only the miss
+    /// counter resets — no buffer hand-off, no allocation.
+    pub fn complete_pull(&mut self) {
         self.missed = 0;
     }
 
@@ -266,8 +290,36 @@ mod tests {
     }
 
     #[test]
+    fn adamw_round_updates_t_and_descends() {
+        let mut e = QuadraticEngine::new(16, 2, 0, 0.0, 0.0);
+        let mut w = worker(16, Optimizer::AdamW);
+        let l0 = w.local_round(&mut e, 3).unwrap();
+        for _ in 0..40 {
+            w.local_round(&mut e, 3).unwrap();
+        }
+        let l1 = w.local_round(&mut e, 3).unwrap();
+        assert!(l1 < l0, "{l1} !< {l0}");
+        match &w.opt {
+            OptState::AdamW { t, .. } => assert_eq!(*t, 42 * 3),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn complete_pull_resets_misses_in_place() {
+        let mut w = worker(4, Optimizer::Sgd);
+        w.theta = vec![2.0; 4];
+        w.record_miss();
+        w.complete_pull();
+        assert_eq!(w.missed, 0);
+        assert_eq!(w.theta, vec![2.0; 4], "pull completion must not touch θ");
+    }
+
+    #[test]
     fn snapshot_restore_continues_local_rounds_exactly() {
-        for opt in [Optimizer::Sgd, Optimizer::Momentum, Optimizer::AdaHessian] {
+        for opt in
+            [Optimizer::Sgd, Optimizer::Momentum, Optimizer::AdaHessian, Optimizer::AdamW]
+        {
             let mut e = QuadraticEngine::new(16, 7, 1, 0.3, 0.05);
             let mut w = worker(16, opt);
             for _ in 0..5 {

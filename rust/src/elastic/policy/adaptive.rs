@@ -1,0 +1,240 @@
+//! `adaptive(alpha0=A,window=W)` — per-worker elastic rate derived from the
+//! sync-wait statistics the master already observes.
+//!
+//! ROADMAP follow-up to the policy layer: instead of reacting to the
+//! *current* sync alone (`staleness`, `delayed`), adapt each worker's rate
+//! to its recent *reliability*. The policy keeps, per worker, a ring of the
+//! `missed` values observed at its last `window` served syncs — exactly the
+//! wait history `MasterState`'s per-worker stats summarize — and derives
+//!
+//! ```text
+//! m̄  = mean(ring)                  — average waits per served sync
+//! r  = 1 / (1 + m̄)        ∈ (0,1]  — reliability factor
+//! h2 = α₀ · r                       — a flaky worker's influence fades
+//! h1 = 1 − (1 − α₀) · r             — and the pull back strengthens
+//! ```
+//!
+//! A fully healthy worker (`m̄ = 0`) gets exactly (α₀, α₀) — plain EASGD;
+//! a worker that keeps missing syncs slides continuously toward the oracle
+//! correction (1, 0), and — unlike `staleness` — stays attenuated for a
+//! full window after recovering instead of snapping back on its first
+//! successful sync. The ring is the policy's cross-sync state and is
+//! snapshot/restored bit-exactly for mid-trial checkpoints.
+//!
+//! `window=0` is rejected as degenerate: no history, nothing to adapt from.
+
+use super::spec::Params;
+use super::{check_alpha, SyncContext, SyncPolicy, SyncWeights};
+use crate::util::json::Json;
+use anyhow::{bail, Context as _, Result};
+
+#[derive(Clone, Debug)]
+pub struct AdaptivePolicy {
+    pub alpha0: f64,
+    /// Served syncs of history per worker.
+    pub window: u32,
+    /// Per-worker ring of the last `window` observed `missed` values.
+    /// Capacity is reserved up front (window + 1), so steady-state updates
+    /// never allocate — the gossip-mode alloc regression test runs this
+    /// policy in the hot round loop.
+    hist: Vec<Vec<u32>>,
+}
+
+impl AdaptivePolicy {
+    pub fn from_params(p: &mut Params) -> Result<AdaptivePolicy> {
+        let alpha0 = check_alpha(p.f64("alpha0", 0.1)?)?;
+        let window = p.u32("window", 8)?;
+        if window == 0 {
+            bail!("window must be >= 1 (window=0 keeps no sync-wait history to adapt from)");
+        }
+        Ok(AdaptivePolicy { alpha0, window, hist: Vec::new() })
+    }
+
+    fn ring_capacity(&self) -> usize {
+        self.window as usize + 1
+    }
+
+    fn slot(&mut self, worker: usize) -> &mut Vec<u32> {
+        if self.hist.len() <= worker {
+            let cap = self.ring_capacity();
+            self.hist.resize_with(worker + 1, || Vec::with_capacity(cap));
+        }
+        &mut self.hist[worker]
+    }
+}
+
+impl SyncPolicy for AdaptivePolicy {
+    fn spec(&self) -> String {
+        format!("adaptive(alpha0={},window={})", self.alpha0, self.window)
+    }
+
+    fn init(&mut self, workers: usize) {
+        let cap = self.ring_capacity();
+        self.hist = (0..workers).map(|_| Vec::with_capacity(cap)).collect();
+    }
+
+    fn weights(&mut self, ctx: &SyncContext) -> SyncWeights {
+        let alpha0 = self.alpha0;
+        let window = self.window as usize;
+        let ring = self.slot(ctx.worker);
+        ring.push(ctx.missed);
+        if ring.len() > window {
+            ring.remove(0);
+        }
+        let mean = ring.iter().map(|&m| m as f64).sum::<f64>() / ring.len() as f64;
+        let r = 1.0 / (1.0 + mean);
+        SyncWeights { h1: 1.0 - (1.0 - alpha0) * r, h2: alpha0 * r }
+    }
+
+    fn healthy_h2(&self) -> f64 {
+        self.alpha0
+    }
+
+    /// The per-worker rings are the policy's only cross-sync state.
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![(
+            "hist",
+            Json::Arr(
+                self.hist
+                    .iter()
+                    .map(|ring| {
+                        Json::Arr(ring.iter().map(|&m| Json::num(m as f64)).collect())
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<()> {
+        let rings = state
+            .get("hist")
+            .as_arr()
+            .with_context(|| format!("policy '{}': snapshot missing 'hist'", self.spec()))?;
+        let cap = self.ring_capacity();
+        let window = self.window as usize;
+        let mut hist = Vec::with_capacity(rings.len());
+        for (w, ring) in rings.iter().enumerate() {
+            let entries = ring
+                .as_arr()
+                .with_context(|| format!("policy '{}': worker {w} ring is not an array", self.spec()))?;
+            anyhow::ensure!(
+                entries.len() <= window,
+                "policy '{}': worker {w} ring holds {} entries, window is {}",
+                self.spec(),
+                entries.len(),
+                window
+            );
+            let mut slot = Vec::with_capacity(cap);
+            for v in entries {
+                slot.push(
+                    v.as_f64()
+                        .with_context(|| {
+                            format!("policy '{}': non-numeric ring entry", self.spec())
+                        })? as u32,
+                );
+            }
+            hist.push(slot);
+        }
+        self.hist = hist;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::policy::test_ctx;
+    use crate::util::proptest;
+
+    fn policy(window: u32) -> AdaptivePolicy {
+        let mut p = AdaptivePolicy { alpha0: 0.1, window, hist: Vec::new() };
+        p.init(4);
+        p
+    }
+
+    #[test]
+    fn healthy_history_is_exactly_easgd() {
+        let mut p = policy(4);
+        for _ in 0..10 {
+            let w = p.weights(&test_ctx(0, None, 0));
+            assert_eq!((w.h1, w.h2), (0.1, 0.1));
+        }
+    }
+
+    #[test]
+    fn misses_attenuate_for_a_full_window() {
+        let mut p = policy(4);
+        // one sync after 3 misses: m̄ = 3 → r = 1/4
+        let w = p.weights(&test_ctx(1, None, 3));
+        assert!((w.h2 - 0.1 / 4.0).abs() < 1e-12);
+        assert!((w.h1 - (1.0 - 0.9 / 4.0)).abs() < 1e-12);
+        // three healthy syncs later the window still remembers the miss
+        for _ in 0..3 {
+            let w = p.weights(&test_ctx(1, None, 0));
+            assert!(w.h2 < 0.1);
+        }
+        // once it slides out, full rate returns
+        let w = p.weights(&test_ctx(1, None, 0));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1));
+    }
+
+    #[test]
+    fn state_is_per_worker() {
+        let mut p = policy(4);
+        p.weights(&test_ctx(0, None, 5));
+        let w = p.weights(&test_ctx(2, None, 0));
+        assert_eq!((w.h1, w.h2), (0.1, 0.1), "worker 2 unaffected by worker 0's misses");
+    }
+
+    #[test]
+    fn grows_for_unseen_workers() {
+        let mut p = AdaptivePolicy { alpha0: 0.1, window: 2, hist: Vec::new() };
+        let w = p.weights(&test_ctx(7, None, 1));
+        assert!(w.h2 < 0.1);
+    }
+
+    #[test]
+    fn snapshot_restores_the_rings_exactly() {
+        let mut p = policy(3);
+        p.weights(&test_ctx(0, None, 2));
+        p.weights(&test_ctx(1, None, 0));
+        p.weights(&test_ctx(0, None, 0));
+        let snap = p.snapshot();
+        // survive the JSONL text round-trip
+        let snap = Json::parse(&snap.to_string_compact()).unwrap();
+        let mut q = policy(3);
+        q.restore(&snap).unwrap();
+        for (w, missed) in [(0, 0), (1, 1), (2, 0), (0, 3)] {
+            assert_eq!(
+                p.weights(&test_ctx(w, None, missed)),
+                q.weights(&test_ctx(w, None, missed)),
+                "worker {w}"
+            );
+        }
+        // oversized rings are rejected
+        let bad = Json::obj(vec![(
+            "hist",
+            Json::Arr(vec![Json::Arr(vec![Json::num(0.0); 10])]),
+        )]);
+        assert!(policy(3).restore(&bad).is_err());
+    }
+
+    #[test]
+    fn property_bounded_and_monotone_in_mean_misses() {
+        proptest::check("adaptive bounded + monotone", 200, |g| {
+            let alpha0 = g.f64(0.01, 0.9);
+            let window = g.usize(1, 12) as u32;
+            let mut p = AdaptivePolicy { alpha0, window, hist: Vec::new() };
+            p.init(1);
+            for _ in 0..20 {
+                let missed = g.usize(0, 6) as u32;
+                let w = p.weights(&test_ctx(0, None, missed));
+                assert!(w.h1 >= alpha0 - 1e-12 && w.h1 <= 1.0 + 1e-12);
+                assert!(w.h2 >= -1e-12 && w.h2 <= alpha0 + 1e-12);
+                // h1 and h2 mirror each other around the reliability factor
+                let r = w.h2 / alpha0;
+                assert!((w.h1 - (1.0 - (1.0 - alpha0) * r)).abs() < 1e-12);
+            }
+        });
+    }
+}

@@ -1,0 +1,111 @@
+//! `delayed(alpha=A,staleness_cap=C)` — DaSGD-style delayed averaging with
+//! a hard staleness guard.
+//!
+//! DaSGD (*Squeezing SGD Parallelization Performance in Distributed
+//! Training Using Delayed Averaging*, Zhou et al. 2020) overlaps
+//! computation and communication by averaging against a snapshot that is
+//! one step behind. The gossip sync topology (`sync_mode: gossip`) embodies
+//! exactly that delay: every pull runs against the master snapshot
+//! published at the END of the previous round, never against a live
+//! aggregate. This policy is the weighting companion: while the delay is
+//! bounded it trusts plain EASGD rates,
+//!
+//! ```text
+//! missed <  cap:  (h1, h2) = (α, α)      — delayed averaging as usual
+//! missed >= cap:  (h1, h2) = (1, 0)      — replica too stale: teleport it
+//!                                          back, give it no influence
+//! ```
+//!
+//! where `missed` counts consecutive suppressed syncs (the observable
+//! staleness a failure causes). Unlike `staleness(alpha,halflife)` — a
+//! smooth geometric decay — this is the DaSGD trade-off stated sharply: a
+//! bounded delay is free, an unbounded one is a failure. The policy also
+//! runs unchanged in central mode (it only reads `missed`).
+//!
+//! `staleness_cap=0` is rejected as degenerate: every sync would be a full
+//! correction and the healthy branch would never serve.
+
+use super::spec::Params;
+use super::{check_alpha, SyncContext, SyncPolicy, SyncWeights};
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug)]
+pub struct DelayedPolicy {
+    pub alpha: f64,
+    /// Consecutive missed syncs at which the delayed update stops being
+    /// trusted (hard knee).
+    pub staleness_cap: u32,
+}
+
+impl DelayedPolicy {
+    pub fn from_params(p: &mut Params) -> Result<DelayedPolicy> {
+        let alpha = check_alpha(p.f64("alpha", 0.1)?)?;
+        let staleness_cap = p.u32("staleness_cap", 4)?;
+        if staleness_cap == 0 {
+            bail!(
+                "staleness_cap must be >= 1 (staleness_cap=0 turns every sync into a full \
+                 correction — the delayed-averaging branch never serves)"
+            );
+        }
+        Ok(DelayedPolicy { alpha, staleness_cap })
+    }
+}
+
+impl SyncPolicy for DelayedPolicy {
+    fn spec(&self) -> String {
+        format!("delayed(alpha={},staleness_cap={})", self.alpha, self.staleness_cap)
+    }
+
+    fn weights(&mut self, ctx: &SyncContext) -> SyncWeights {
+        if ctx.missed >= self.staleness_cap {
+            SyncWeights { h1: 1.0, h2: 0.0 }
+        } else {
+            SyncWeights { h1: self.alpha, h2: self.alpha }
+        }
+    }
+
+    fn healthy_h2(&self) -> f64 {
+        self.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::policy::test_ctx;
+
+    fn policy(cap: u32) -> DelayedPolicy {
+        DelayedPolicy { alpha: 0.1, staleness_cap: cap }
+    }
+
+    #[test]
+    fn bounded_delay_is_plain_easgd() {
+        let mut p = policy(4);
+        for missed in 0..4 {
+            let w = p.weights(&test_ctx(0, None, missed));
+            assert_eq!((w.h1, w.h2), (0.1, 0.1), "missed={missed}");
+        }
+    }
+
+    #[test]
+    fn cap_and_beyond_teleports() {
+        let mut p = policy(4);
+        for missed in [4, 5, 40] {
+            let w = p.weights(&test_ctx(0, Some(0.9), missed));
+            assert_eq!((w.h1, w.h2), (1.0, 0.0), "missed={missed}");
+        }
+    }
+
+    #[test]
+    fn score_is_ignored() {
+        let mut p = policy(2);
+        let a = p.weights(&test_ctx(0, Some(-5.0), 0));
+        let b = p.weights(&test_ctx(0, Some(5.0), 0));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn spec_is_canonical() {
+        assert_eq!(policy(4).spec(), "delayed(alpha=0.1,staleness_cap=4)");
+    }
+}

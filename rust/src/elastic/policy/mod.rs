@@ -13,7 +13,8 @@
 //! [`spec`]): `fixed(alpha=0.1)`, `oracle(alpha=0.1)`,
 //! `dynamic(alpha=0.1,knee=-0.05,detector=paper-sign)`,
 //! `hysteresis(alpha=0.1,knee=-0.05,detector=paper-sign,hold=2)`,
-//! `staleness(alpha=0.1,halflife=2)`. [`parse`] builds the policy,
+//! `staleness(alpha=0.1,halflife=2)`, `delayed(alpha=0.1,staleness_cap=4)`,
+//! `adaptive(alpha0=0.1,window=8)`. [`parse`] builds the policy,
 //! [`SyncPolicy::spec`] prints the canonical spec back, and every canonical
 //! spec survives `parse → spec() → parse` bit-exactly — that invariant is
 //! what lets specs ride inside `ExperimentConfig` JSON and hence inside
@@ -24,6 +25,8 @@
 //! overrides the preset, and `experiments::policy_sweep` sweeps specs as a
 //! first-class axis.
 
+pub mod adaptive;
+pub mod delayed;
 pub mod dynamic;
 pub mod fixed;
 pub mod hysteresis;
@@ -31,6 +34,8 @@ pub mod oracle;
 pub mod spec;
 pub mod staleness;
 
+pub use adaptive::AdaptivePolicy;
+pub use delayed::DelayedPolicy;
 pub use dynamic::DynamicPolicy;
 pub use fixed::FixedPolicy;
 pub use hysteresis::HysteresisPolicy;
@@ -141,6 +146,16 @@ pub const REGISTRY: &[PolicyDef] = &[
         name: "staleness",
         summary: "staleness(alpha=0.1,halflife=2) — score-free geometric decay in missed syncs",
         build: |p| Ok(Box::new(StalenessPolicy::from_params(p)?)),
+    },
+    PolicyDef {
+        name: "delayed",
+        summary: "delayed(alpha=0.1,staleness_cap=4) — DaSGD-style delayed averaging with a hard staleness guard",
+        build: |p| Ok(Box::new(DelayedPolicy::from_params(p)?)),
+    },
+    PolicyDef {
+        name: "adaptive",
+        summary: "adaptive(alpha0=0.1,window=8) — per-worker rate from windowed sync-wait history",
+        build: |p| Ok(Box::new(AdaptivePolicy::from_params(p)?)),
     },
 ];
 
@@ -256,6 +271,11 @@ mod tests {
         assert!(parse("staleness(halflife=-3)").is_err());
         assert!(parse("hysteresis(hold=1.5)").is_err());
         assert!(parse("hysteresis(hold=-1)").is_err());
+        assert!(parse("delayed(staleness_cap=-1)").is_err());
+        assert!(parse("delayed(alpha=2)").is_err());
+        assert!(parse("adaptive(window=1.5)").is_err());
+        assert!(parse("adaptive(alpha0=0)").is_err());
+        assert!(parse("adaptive(alpha=0.1)").is_err(), "adaptive's rate knob is alpha0");
     }
 
     /// Degenerate parameters that silently alias another policy are parse
@@ -271,10 +291,16 @@ mod tests {
             "dynamic(alpha=0)",
             "hysteresis(alpha=0)",
             "staleness(alpha=0)",
+            "delayed(alpha=0)",
+            "adaptive(alpha0=0)",
         ] {
             let err = parse(spec).unwrap_err().to_string();
             assert!(err.contains("(0,1]"), "'{spec}' must reject alpha=0: {err}");
         }
+        let err = parse("delayed(staleness_cap=0)").unwrap_err().to_string();
+        assert!(err.contains("staleness_cap"), "{err}");
+        let err = parse("adaptive(window=0)").unwrap_err().to_string();
+        assert!(err.contains("window"), "{err}");
     }
 
     #[test]
@@ -295,12 +321,16 @@ mod tests {
             let hold = g.usize(1, 9);
             let halflife = g.f64(0.1, 20.0);
             let det = if g.bool() { "paper-sign" } else { "drift-sign" };
+            let cap = g.usize(1, 12);
+            let window = g.usize(1, 16);
             let specs = [
                 format!("fixed(alpha={alpha})"),
                 format!("oracle(alpha={alpha})"),
                 format!("dynamic(alpha={alpha},knee={knee},detector={det})"),
                 format!("hysteresis(alpha={alpha},knee={knee},detector={det},hold={hold})"),
                 format!("staleness(alpha={alpha},halflife={halflife})"),
+                format!("delayed(alpha={alpha},staleness_cap={cap})"),
+                format!("adaptive(alpha0={alpha},window={window})"),
             ];
             for s in specs {
                 let c1 = canonical(&s).unwrap_or_else(|e| panic!("'{s}': {e}"));

@@ -75,7 +75,15 @@ impl ParsedSpec {
     }
 
     pub fn into_params(self) -> Params {
-        Params { policy: self.name, map: self.params }
+        self.into_params_named("policy")
+    }
+
+    /// [`ParsedSpec::into_params`] with a caller-chosen noun for error
+    /// messages — the grammar is shared with optimizer specs
+    /// (`optim::OptimSpec`), and an `--optimizer` mistake must not be
+    /// reported as a "policy" error.
+    pub fn into_params_named(self, noun: &'static str) -> Params {
+        Params { noun, spec_name: self.name, map: self.params }
     }
 }
 
@@ -84,7 +92,9 @@ impl ParsedSpec {
 /// parameter name is a hard error rather than a silently applied default.
 #[derive(Debug)]
 pub struct Params {
-    policy: String,
+    /// What kind of spec this is, for error messages ("policy", "optimizer").
+    noun: &'static str,
+    spec_name: String,
     map: BTreeMap<String, String>,
 }
 
@@ -92,9 +102,20 @@ impl Params {
     pub fn f64(&mut self, key: &str, default: f64) -> Result<f64> {
         match self.map.remove(key) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .with_context(|| format!("policy '{}': {key}='{v}' is not a number", self.policy)),
+            Some(v) => v.parse().with_context(|| {
+                format!("{} '{}': {key}='{v}' is not a number", self.noun, self.spec_name)
+            }),
+        }
+    }
+
+    /// A genuinely optional numeric parameter: `None` when absent (no
+    /// default substitution — the consumer decides what absence means).
+    pub fn opt_f64(&mut self, key: &str) -> Result<Option<f64>> {
+        match self.map.remove(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).with_context(|| {
+                format!("{} '{}': {key}='{v}' is not a number", self.noun, self.spec_name)
+            }),
         }
     }
 
@@ -102,7 +123,10 @@ impl Params {
         match self.map.remove(key) {
             None => Ok(default),
             Some(v) => v.parse().with_context(|| {
-                format!("policy '{}': {key}='{v}' is not a non-negative integer", self.policy)
+                format!(
+                    "{} '{}': {key}='{v}' is not a non-negative integer",
+                    self.noun, self.spec_name
+                )
             }),
         }
     }
@@ -117,7 +141,12 @@ impl Params {
             return Ok(());
         }
         let leftover: Vec<&str> = self.map.keys().map(|s| s.as_str()).collect();
-        bail!("policy '{}': unknown parameter(s) {}", self.policy, leftover.join(", "))
+        bail!(
+            "{} '{}': unknown parameter(s) {}",
+            self.noun,
+            self.spec_name,
+            leftover.join(", ")
+        )
     }
 }
 

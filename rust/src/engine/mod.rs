@@ -133,6 +133,44 @@ pub trait Engine {
         Ok(loss)
     }
 
+    /// Fused local AdamW step (gradient + m/v/theta update with decoupled
+    /// weight decay); `t` is 1-based. Returns the mean loss. There is no
+    /// AOT artifact for AdamW, so the update half always runs through the
+    /// fused native kernel ([`crate::optim::native::adamw_step`]) via the
+    /// scratch arena; only the gradient is engine-specific. Bit-identical
+    /// to composing `grad` with a three-pass m/v/theta reference (pinned by
+    /// `tests/kernel_equivalence.rs`).
+    #[allow(clippy::too_many_arguments)]
+    fn adamw_step(
+        &mut self,
+        theta: &mut [f32],
+        batch: BatchRef<'_>,
+        m: &mut [f32],
+        v: &mut [f32],
+        t: u64,
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        wd: f32,
+        scratch: &mut WorkerScratch,
+    ) -> Result<f32> {
+        let loss = self.grad(theta, batch, &mut scratch.grad)?;
+        crate::optim::native::adamw_step(
+            theta,
+            &scratch.grad,
+            m,
+            v,
+            t,
+            lr,
+            beta1,
+            beta2,
+            eps,
+            wd,
+        );
+        Ok(loss)
+    }
+
     /// theta <- theta - lr*g (in place). Update-only kernel: the hot path
     /// uses [`Engine::sgd_step`]; this remains for equivalence tests,
     /// `deahes inspect` and micro-benches.

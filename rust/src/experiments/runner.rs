@@ -218,6 +218,21 @@ pub fn resume_run_dir(dir: &Path, jobs: usize) -> Result<ResumeReport> {
     Ok(ResumeReport { committed: committed_count, finished, series })
 }
 
+/// Namespace a plan cell key by sync topology — the ONE place the split
+/// lives. Central keys stay exactly as they always were (byte-stable for
+/// existing run dirs); gossip keys gain a `gossip/` segment after the
+/// sweep prefix, so central and gossip records sharing a run dir never
+/// merge into one cell when `deahes resume` groups by cell key.
+fn gossip_cell_key(base: &ExperimentConfig, central_key: String) -> String {
+    match base.sync_mode {
+        crate::config::SyncMode::Central => central_key,
+        crate::config::SyncMode::Gossip => match central_key.split_once('/') {
+            Some((head, rest)) => format!("{head}/gossip/{rest}"),
+            None => format!("gossip/{central_key}"),
+        },
+    }
+}
+
 /// Run `cfg` once per derived seed and average the per-round series.
 ///
 /// `label` doubles as the plan's cell key: it names the series AND
@@ -268,7 +283,8 @@ pub fn fig3_overlap_sweep_with(
         let label = format!("r={:.1}%", r * 100.0);
         // Key on the full-precision ratio, not the rounded display label:
         // two ratios that print alike must stay separate cells.
-        plan.push_cell(&format!("fig3/r={r}"), &label, &cfg, seeds);
+        let key = gossip_cell_key(base, format!("fig3/r={r}"));
+        plan.push_cell(&key, &label, &cfg, seeds);
     }
     let report = schedule::execute_plan(&plan, opts)?;
     Ok(series_by_cell(&plan, &report.outcomes))
@@ -314,12 +330,11 @@ pub fn fig45_grid_with(
                 cfg.workers = k;
                 cfg.tau = tau;
                 cfg.overlap_ratio = m.paper_overlap_ratio(k);
-                plan.push_cell(
-                    &format!("fig45/k={k}/tau={tau}/{}", m.name()),
-                    m.name(),
-                    &cfg,
-                    seeds,
+                let key = gossip_cell_key(
+                    base,
+                    format!("fig45/k={k}/tau={tau}/{}", m.name()),
                 );
+                plan.push_cell(&key, m.name(), &cfg, seeds);
             }
         }
     }
@@ -370,7 +385,8 @@ pub fn policy_sweep_with(
         }
         let mut cfg = base.clone();
         cfg.policy = Some(canon.clone());
-        plan.push_cell(&format!("policy/{canon}"), &canon, &cfg, seeds);
+        let key = gossip_cell_key(base, format!("policy/{canon}"));
+        plan.push_cell(&key, &canon, &cfg, seeds);
     }
     let report = schedule::execute_plan(&plan, opts)?;
     Ok(series_by_cell(&plan, &report.outcomes))
@@ -548,6 +564,25 @@ mod tests {
         fps.sort_unstable();
         fps.dedup();
         assert_eq!(fps.len(), 3, "each policy spec must fingerprint distinctly");
+    }
+
+    /// The topology key namespace: central keys are byte-stable, gossip
+    /// keys gain the `gossip/` segment after the sweep prefix — for every
+    /// sweep family through the one shared helper.
+    #[test]
+    fn gossip_cell_keys_namespace_after_the_sweep_prefix() {
+        let central = quad_cfg();
+        let mut gossip = quad_cfg();
+        gossip.sync_mode = crate::config::SyncMode::Gossip;
+        for (key, expect) in [
+            ("fig3/r=0.25", "fig3/gossip/r=0.25"),
+            ("policy/fixed(alpha=0.1)", "policy/gossip/fixed(alpha=0.1)"),
+            ("fig45/k=2/tau=1/EASGD", "fig45/gossip/k=2/tau=1/EASGD"),
+            ("bare", "gossip/bare"),
+        ] {
+            assert_eq!(gossip_cell_key(&central, key.into()), key);
+            assert_eq!(gossip_cell_key(&gossip, key.into()), expect);
+        }
     }
 
     #[test]

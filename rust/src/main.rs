@@ -14,10 +14,13 @@
 //!   deahes train --method deahes-o --workers 4 --tau 1 --rounds 100
 //!   deahes train --method easgd --engine quad --rounds 50
 //!   deahes train --policy "hysteresis(hold=3)" --engine quad
+//!   deahes train --engine quad --sync-mode gossip --optimizer "adamw(lr=0.02)"
 //!   deahes fig3 --ratios 0,0.125,0.25,0.375,0.5 --seeds 3
 //!   deahes grid --grid-workers 4,8 --taus 1,2,4 --seeds 3
 //!   deahes policy-sweep --engine quad --policies "dynamic,hysteresis,staleness"
+//!   deahes policy-sweep --engine quad --sync-mode gossip --policy "delayed(staleness_cap=4)"
 //!   deahes bench --smoke --out /tmp/BENCH_hotpath.json
+//!   deahes bench --check prev/BENCH_hotpath.json --max-regression 10
 //!
 //! Sweeps (fig3, grid) run through the trial-schedule engine: `--jobs N`
 //! keeps N trials in flight on a thread pool, `--run-dir d` appends each
@@ -33,7 +36,7 @@
 //! the quad engine:
 //!   deahes resume runs/grid
 
-use deahes::config::{EngineKind, ExperimentConfig, GossipMode};
+use deahes::config::{EngineKind, ExperimentConfig, GossipMode, SyncMode};
 use deahes::coordinator::{sim, FailureModel};
 use deahes::elastic::weight::Detector;
 use deahes::experiments;
@@ -128,11 +131,23 @@ fn experiment_cli(name: &str, about: &str) -> Cli {
             "",
             "sync-policy spec overriding the method preset, e.g. \
              hysteresis(alpha=0.1,knee=-0.05,detector=paper-sign,hold=2); \
-             registered: fixed|oracle|dynamic|hysteresis|staleness",
+             registered: fixed|oracle|dynamic|hysteresis|staleness|delayed|adaptive",
+        )
+        .opt(
+            "optimizer",
+            "",
+            "optimizer spec overriding the method preset: \
+             sgd|momentum|adahessian|adamw(lr=...,beta1=...,beta2=...,eps=...,wd=...)",
         )
         .opt("score-p", "4", "raw-score history depth p")
         .opt("score-decay", "0.5", "raw-score recency decay")
         .opt("gossip", "peers", "peers|stale (master-estimate source)")
+        .opt(
+            "sync-mode",
+            "central",
+            "central (EASGD master round-trips) | gossip (decentralized elastic pull \
+             against published snapshots; master aggregates at round end)",
+        )
         .opt("engine", "xla", "xla|quad")
         .opt("artifacts", "artifacts", "artifacts directory (xla engine)")
         .opt("quad-dim", "64", "problem dimension (quad engine)")
@@ -274,10 +289,17 @@ fn config_from_args(a: &Args) -> Result<ExperimentConfig> {
         knee: a.f64("knee"),
         detector: Detector::parse(a.get("detector")).context("bad --detector")?,
         gossip: GossipMode::parse(a.get("gossip")).context("bad --gossip")?,
+        sync_mode: SyncMode::parse(a.get("sync-mode")).context("bad --sync-mode")?,
         policy: match a.opt_nonempty("policy") {
             Some(s) => {
                 reject_shadowed_weighting_flags(a, "--policy is given")?;
                 Some(deahes::elastic::policy::canonical(s).context("bad --policy spec")?)
+            }
+            None => None,
+        },
+        optimizer: match a.opt_nonempty("optimizer") {
+            Some(s) => {
+                Some(deahes::optim::OptimSpec::canonical(s).context("bad --optimizer spec")?)
             }
             None => None,
         },
@@ -332,9 +354,12 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         worker_stats: outcome.record.worker_stats,
     };
     println!(
-        "method={} policy={} k={} tau={} rounds={} overlap={:.3} detector={} failure={}",
+        "method={} policy={} optimizer={} sync={} k={} tau={} rounds={} overlap={:.3} \
+         detector={} failure={}",
         cfg.method.name(),
         cfg.effective_policy_spec(),
+        cfg.optimizer_spec()?.spec(),
+        cfg.sync_mode.name(),
         cfg.workers,
         cfg.tau,
         cfg.rounds,
@@ -477,6 +502,9 @@ fn cmd_grid(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// Default spec list for `deahes policy-sweep`: every registered policy.
+const POLICY_SWEEP_DEFAULT: &str = "fixed,oracle,dynamic,hysteresis,staleness,delayed,adaptive";
+
 fn cmd_policy_sweep(argv: Vec<String>) -> Result<()> {
     let a = sweep_cli(
         "deahes policy-sweep",
@@ -484,27 +512,37 @@ fn cmd_policy_sweep(argv: Vec<String>) -> Result<()> {
     )
     .opt(
         "policies",
-        "fixed,oracle,dynamic,hysteresis,staleness",
-        "comma list of policy specs (commas inside parentheses don't split)",
+        POLICY_SWEEP_DEFAULT,
+        "comma list of policy specs (commas inside parentheses don't split); \
+         --policy SPEC is shorthand for a single-spec sweep",
     )
     .parse(&argv)
     .map_err(anyhow::Error::msg)?;
-    if a.opt_nonempty("policy").is_some() {
-        bail!("policy-sweep takes its specs from --policies; --policy would be ignored");
+    reject_shadowed_weighting_flags(&a, "the specs come from --policies/--policy")?;
+    // --policy is accepted as single-spec shorthand (the acceptance-path
+    // spelling `policy-sweep --policy 'delayed(...)'`); combining it with
+    // an explicitly-passed --policies list would be ambiguous — detected
+    // via Args::provided, so even spelling out the default list counts.
+    let single = a.opt_nonempty("policy").map(str::to_string);
+    if single.is_some() && a.provided("policies") {
+        bail!("pass either --policy (one spec) or --policies (a list), not both");
     }
-    reject_shadowed_weighting_flags(&a, "the specs come from --policies")?;
     let base = config_from_args(&a)?;
     let opts = schedule_options(&a)?;
-    let specs = a.spec_list("policies");
+    let specs = match single {
+        Some(s) => vec![s],
+        None => a.spec_list("policies"),
+    };
     if specs.is_empty() {
         bail!("--policies needs at least one spec");
     }
     let out = experiments::policy_sweep_with(&base, &specs, a.u64("seeds"), &opts)?;
     println!(
-        "\n== policy sweep: {} on k={}, tau={}, failure={} ==",
+        "\n== policy sweep: {} on k={}, tau={}, sync={}, failure={} ==",
         base.method.name(),
         base.workers,
         base.tau,
+        base.sync_mode.name(),
         base.failure.describe()
     );
     let series: Vec<(&str, Vec<f64>)> =
@@ -571,16 +609,53 @@ fn cmd_bench(argv: Vec<String>) -> Result<()> {
         "hot-path micro/macro benchmarks; emits a BENCH_hotpath.json trajectory point",
     )
     .opt("out", "BENCH_hotpath.json", "output JSON path")
+    .opt(
+        "check",
+        "",
+        "previous BENCH_hotpath.json to diff against; exits nonzero when the macro \
+         rounds/sec regressed beyond --max-regression",
+    )
+    .opt("max-regression", "10", "tolerated macro rounds/sec regression vs --check, in percent")
     .flag("smoke", "tiny sizes: prove the harness runs and emits valid JSON")
     .parse(&argv)
     .map_err(anyhow::Error::msg)?;
     // Bench output should be the numbers, not per-trial schedule logging.
     logging::init(Level::Warn);
+    // Preflight the --check baseline BEFORE the (potentially long) run: a
+    // typo'd path or bad tolerance must not surface only after the sweep.
+    let baseline: Option<(String, deahes::util::json::Json)> =
+        match a.opt_nonempty("check") {
+            Some(prev_path) => {
+                let max = a.f64("max-regression");
+                if !(max.is_finite() && max >= 0.0) {
+                    bail!("--max-regression must be a non-negative percentage, got {max}");
+                }
+                let text = std::fs::read_to_string(prev_path)
+                    .with_context(|| format!("reading {prev_path}"))?;
+                let prev = deahes::util::json::Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("{prev_path} is not valid JSON: {e}"))?;
+                if prev.get("bench").as_str() != Some("hotpath") {
+                    bail!("{prev_path} is not a BENCH_hotpath.json artifact");
+                }
+                Some((prev_path.to_string(), prev))
+            }
+            None => None,
+        };
     let bc = deahes::bench::BenchConfig { smoke: a.flag("smoke") };
     let out = PathBuf::from(a.get("out"));
     let doc = deahes::bench::run(&bc, &out)?;
     println!("{}", deahes::bench::summary(&doc));
     println!("wrote {}", out.display());
+    if let Some((prev_path, prev)) = baseline {
+        let report = deahes::bench::check(&doc, &prev, a.f64("max-regression"))?;
+        print!("--- regression check vs {prev_path} ---\n{}", report.text);
+        if !report.ok {
+            bail!(
+                "performance regression vs {prev_path} (tolerance {}%)",
+                a.get("max-regression")
+            );
+        }
+    }
     Ok(())
 }
 

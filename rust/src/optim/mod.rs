@@ -1,7 +1,19 @@
 //! Optimizer update rules: pure-rust mirrors of the L1 pallas kernels, plus
-//! the per-worker optimizer state machine.
+//! the per-worker optimizer state machine and the optimizer spec grammar.
+//!
+//! Like sync policies (`elastic::policy`), the local optimizer is
+//! addressable by a round-trippable spec string: `sgd`, `momentum`,
+//! `adahessian`, or `adamw(lr=…,beta1=…,beta2=…,eps=…,wd=…)`. The paper's
+//! method presets pick the optimizer (`Method::optimizer`);
+//! `ExperimentConfig::optimizer` / `--optimizer` overrides the preset, which
+//! is how the fused `native::adamw_step` kernel becomes a real training
+//! path instead of a bench-only curiosity. Specs reuse the policy-spec
+//! grammar (`name(key=value,…)`) and survive `parse → spec() → parse`
+//! bit-exactly, so they ride inside config JSON and schedule fingerprints.
 
 pub mod native;
+
+use anyhow::{bail, Context, Result};
 
 /// Which local optimizer a strategy runs between syncs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -12,6 +24,8 @@ pub enum Optimizer {
     Momentum,
     /// AdaHessian second-order (EAHES family).
     AdaHessian,
+    /// AdamW with decoupled weight decay (spec-only; no method preset).
+    AdamW,
 }
 
 impl Optimizer {
@@ -20,6 +34,7 @@ impl Optimizer {
             Optimizer::Sgd => "sgd",
             Optimizer::Momentum => "momentum",
             Optimizer::AdaHessian => "adahessian",
+            Optimizer::AdamW => "adamw",
         }
     }
 
@@ -29,12 +44,148 @@ impl Optimizer {
     }
 }
 
+/// AdamW hyperparameters as pinned by an `adamw(...)` spec. `lr = None`
+/// inherits the run-level learning rate; the rest default to the
+/// Loshchilov & Hutter conventions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdamWParams {
+    /// Spec-pinned learning rate; `None` = the run's `lr`.
+    pub lr: Option<f64>,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    /// Decoupled weight decay.
+    pub wd: f64,
+}
+
+impl Default for AdamWParams {
+    fn default() -> Self {
+        AdamWParams { lr: None, beta1: 0.9, beta2: 0.999, eps: 1e-8, wd: 0.01 }
+    }
+}
+
+/// A parsed optimizer spec: the optimizer kind plus its hyperparameters
+/// (only AdamW has any today). Canonical printing mirrors the policy-spec
+/// convention: shortest round-trip float `Display`, fixed key order, and
+/// `parse(spec.spec())` reconstructs the spec bit-exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptimSpec {
+    Sgd,
+    Momentum,
+    AdaHessian,
+    AdamW(AdamWParams),
+}
+
+impl OptimSpec {
+    /// The spec a method preset resolves to (no explicit override).
+    pub fn preset(kind: Optimizer) -> OptimSpec {
+        match kind {
+            Optimizer::Sgd => OptimSpec::Sgd,
+            Optimizer::Momentum => OptimSpec::Momentum,
+            Optimizer::AdaHessian => OptimSpec::AdaHessian,
+            Optimizer::AdamW => OptimSpec::AdamW(AdamWParams::default()),
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<OptimSpec> {
+        // Same tiny grammar as policy specs — `name` or `name(k=v,...)`.
+        let parsed = crate::elastic::policy::ParsedSpec::parse(text)
+            .with_context(|| format!("bad optimizer spec '{text}'"))?;
+        let name = parsed.name.clone();
+        let mut p = parsed.into_params_named("optimizer");
+        let spec = match name.as_str() {
+            "sgd" => OptimSpec::Sgd,
+            "momentum" => OptimSpec::Momentum,
+            "adahessian" => OptimSpec::AdaHessian,
+            "adamw" => {
+                let d = AdamWParams::default();
+                let lr = p.opt_f64("lr")?;
+                if let Some(lr) = lr {
+                    if !lr.is_finite() || lr <= 0.0 {
+                        bail!("optimizer 'adamw': lr must be positive and finite, got {lr}");
+                    }
+                }
+                let beta1 = p.f64("beta1", d.beta1)?;
+                let beta2 = p.f64("beta2", d.beta2)?;
+                for (key, beta) in [("beta1", beta1), ("beta2", beta2)] {
+                    if !(0.0..1.0).contains(&beta) {
+                        bail!(
+                            "optimizer 'adamw': {key} must be in [0,1) — {key}={beta} makes the \
+                             bias correction divide by zero (or the moment never decay)"
+                        );
+                    }
+                }
+                let eps = p.f64("eps", d.eps)?;
+                if !eps.is_finite() || eps <= 0.0 {
+                    bail!("optimizer 'adamw': eps must be positive and finite, got {eps}");
+                }
+                let wd = p.f64("wd", d.wd)?;
+                if !wd.is_finite() || wd < 0.0 {
+                    bail!("optimizer 'adamw': wd must be non-negative and finite, got {wd}");
+                }
+                OptimSpec::AdamW(AdamWParams { lr, beta1, beta2, eps, wd })
+            }
+            other => bail!(
+                "unknown optimizer '{other}' (registered: sgd, momentum, adahessian, adamw)"
+            ),
+        };
+        p.finish().with_context(|| format!("bad optimizer spec '{text}'"))?;
+        Ok(spec)
+    }
+
+    /// Canonical spec string; `parse(self.spec())` reconstructs the spec.
+    pub fn spec(&self) -> String {
+        match self {
+            OptimSpec::Sgd => "sgd".into(),
+            OptimSpec::Momentum => "momentum".into(),
+            OptimSpec::AdaHessian => "adahessian".into(),
+            OptimSpec::AdamW(p) => {
+                let lr = match p.lr {
+                    Some(lr) => format!("lr={lr},"),
+                    None => String::new(),
+                };
+                format!(
+                    "adamw({lr}beta1={},beta2={},eps={},wd={})",
+                    p.beta1, p.beta2, p.eps, p.wd
+                )
+            }
+        }
+    }
+
+    /// Normalize a spec to its canonical form.
+    pub fn canonical(text: &str) -> Result<String> {
+        Ok(OptimSpec::parse(text)?.spec())
+    }
+
+    pub fn kind(&self) -> Optimizer {
+        match self {
+            OptimSpec::Sgd => Optimizer::Sgd,
+            OptimSpec::Momentum => Optimizer::Momentum,
+            OptimSpec::AdaHessian => Optimizer::AdaHessian,
+            OptimSpec::AdamW(_) => Optimizer::AdamW,
+        }
+    }
+
+    /// Fresh per-worker optimizer state for this spec.
+    pub fn state(&self, n: usize) -> OptState {
+        match self {
+            OptimSpec::AdamW(params) => {
+                OptState::AdamW { m: vec![0.0; n], v: vec![0.0; n], t: 0, params: *params }
+            }
+            _ => OptState::new(self.kind(), n),
+        }
+    }
+}
+
 /// Per-worker optimizer state (flat vectors sized to the param count).
 #[derive(Clone, Debug)]
 pub enum OptState {
     Sgd,
     Momentum { buf: Vec<f32> },
     AdaHessian { m: Vec<f32>, v: Vec<f32>, t: u64 },
+    /// AdamW carries its spec-pinned hyperparameters alongside the moment
+    /// buffers (the params derive from config, so snapshots exclude them).
+    AdamW { m: Vec<f32>, v: Vec<f32>, t: u64, params: AdamWParams },
 }
 
 impl OptState {
@@ -45,6 +196,12 @@ impl OptState {
             Optimizer::AdaHessian => {
                 OptState::AdaHessian { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
             }
+            Optimizer::AdamW => OptState::AdamW {
+                m: vec![0.0; n],
+                v: vec![0.0; n],
+                t: 0,
+                params: AdamWParams::default(),
+            },
         }
     }
 
@@ -53,6 +210,7 @@ impl OptState {
             OptState::Sgd => Optimizer::Sgd,
             OptState::Momentum { .. } => Optimizer::Momentum,
             OptState::AdaHessian { .. } => Optimizer::AdaHessian,
+            OptState::AdamW { .. } => Optimizer::AdamW,
         }
     }
 
@@ -69,6 +227,14 @@ impl OptState {
             ]),
             OptState::AdaHessian { m, v, t } => Json::obj(vec![
                 ("kind", Json::str("adahessian")),
+                ("m", Json::str(&bits::f32s_hex(m))),
+                ("v", Json::str(&bits::f32s_hex(v))),
+                ("t", Json::num(*t as f64)),
+            ]),
+            // Hyperparameters are config, not state: the restoring run
+            // rebuilds them from its own optimizer spec.
+            OptState::AdamW { m, v, t, params: _ } => Json::obj(vec![
+                ("kind", Json::str("adamw")),
                 ("m", Json::str(&bits::f32s_hex(m))),
                 ("v", Json::str(&bits::f32s_hex(v))),
                 ("t", Json::num(*t as f64)),
@@ -95,13 +261,13 @@ impl OptState {
                 ensure!(restored.len() == buf.len(), "opt state: momentum buffer size mismatch");
                 *buf = restored;
             }
-            OptState::AdaHessian { m, v, t } => {
+            OptState::AdaHessian { m, v, t } | OptState::AdamW { m, v, t, .. } => {
                 let rm =
                     bits::f32s_from_hex(j.get("m").as_str().context("opt state: missing 'm'")?)?;
                 let rv =
                     bits::f32s_from_hex(j.get("v").as_str().context("opt state: missing 'v'")?)?;
                 if rm.len() != m.len() || rv.len() != v.len() {
-                    bail!("opt state: adahessian moment size mismatch");
+                    bail!("opt state: moment buffer size mismatch");
                 }
                 *m = rm;
                 *v = rv;
@@ -118,10 +284,91 @@ mod tests {
 
     #[test]
     fn state_matches_optimizer() {
-        for opt in [Optimizer::Sgd, Optimizer::Momentum, Optimizer::AdaHessian] {
+        for opt in
+            [Optimizer::Sgd, Optimizer::Momentum, Optimizer::AdaHessian, Optimizer::AdamW]
+        {
             let s = OptState::new(opt, 8);
             assert_eq!(s.optimizer(), opt);
         }
+    }
+
+    #[test]
+    fn optim_specs_roundtrip_canonically() {
+        for (input, canonical) in [
+            ("sgd", "sgd"),
+            ("momentum", "momentum"),
+            ("adahessian", "adahessian"),
+            ("adamw", "adamw(beta1=0.9,beta2=0.999,eps=0.00000001,wd=0.01)"),
+            ("adamw()", "adamw(beta1=0.9,beta2=0.999,eps=0.00000001,wd=0.01)"),
+            (
+                " adamw ( wd = 0.1 , beta1=0.8 ) ",
+                "adamw(beta1=0.8,beta2=0.999,eps=0.00000001,wd=0.1)",
+            ),
+            (
+                "adamw(lr=0.005,beta1=0.9,beta2=0.99,eps=0.00000001,wd=0.05)",
+                "adamw(lr=0.005,beta1=0.9,beta2=0.99,eps=0.00000001,wd=0.05)",
+            ),
+        ] {
+            let c = OptimSpec::canonical(input).unwrap();
+            assert_eq!(c, canonical, "{input}");
+            // canonical form is a parse fixed point
+            assert_eq!(OptimSpec::canonical(&c).unwrap(), c);
+            assert_eq!(OptimSpec::parse(&c).unwrap().spec(), c);
+        }
+    }
+
+    #[test]
+    fn degenerate_adamw_specs_rejected() {
+        for bad in [
+            "adamw(beta1=1)",
+            "adamw(beta2=1)",
+            "adamw(beta1=1.5)",
+            "adamw(beta2=-0.1)",
+            "adamw(eps=0)",
+            "adamw(wd=-0.01)",
+            "adamw(lr=0)",
+            "adamw(lr=-1)",
+        ] {
+            let err = OptimSpec::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("adamw"), "'{bad}': {err}");
+        }
+        // unknown names and stray parameters are hard errors
+        assert!(OptimSpec::parse("adam").is_err());
+        assert!(OptimSpec::parse("sgd(lr=0.1)").is_err());
+        assert!(OptimSpec::parse("adamw(zzz=1)").is_err());
+    }
+
+    #[test]
+    fn preset_specs_cover_every_kind() {
+        for kind in
+            [Optimizer::Sgd, Optimizer::Momentum, Optimizer::AdaHessian, Optimizer::AdamW]
+        {
+            let spec = OptimSpec::preset(kind);
+            assert_eq!(spec.kind(), kind);
+            assert_eq!(OptimSpec::parse(&spec.spec()).unwrap(), spec);
+            assert_eq!(spec.state(4).optimizer(), kind);
+        }
+    }
+
+    #[test]
+    fn adamw_opt_state_json_roundtrips_and_keeps_params() {
+        let params = AdamWParams { lr: Some(0.005), beta1: 0.8, beta2: 0.99, eps: 1e-8, wd: 0.1 };
+        let src = OptState::AdamW { m: vec![0.5, -0.25], v: vec![1.0, 2.0], t: 9, params };
+        let spec = OptimSpec::AdamW(params);
+        let mut dst = spec.state(2);
+        dst.restore_json(&src.to_json()).unwrap();
+        match dst {
+            OptState::AdamW { m, v, t, params: p } => {
+                assert_eq!(m, vec![0.5, -0.25]);
+                assert_eq!(v, vec![1.0, 2.0]);
+                assert_eq!(t, 9);
+                // hyperparameters come from the spec, not the snapshot
+                assert_eq!(p, params);
+            }
+            _ => unreachable!(),
+        }
+        // kind mismatch against adahessian is still a hard error
+        assert!(OptState::new(Optimizer::AdaHessian, 2).restore_json(&src.to_json()).is_err());
     }
 
     #[test]

@@ -118,6 +118,21 @@ pub fn elastic_pull(tw: &mut [f32], tm: &[f32], h1: f32) {
     }
 }
 
+/// Master-side half of the elastic update: absorb a READ-ONLY worker
+/// replica into the aggregate (eq. 13 alone). Mirror of [`elastic_pull`]:
+/// in the decentralized gossip sync mode the worker applies eq. 12 against
+/// a published master snapshot, publishes its post-pull replica, and the
+/// master folds that replica in with this kernel at its own pace — no
+/// blocking round-trip, no lock on the worker's buffer.
+/// `elastic_absorb(tm, tw, h2)` is bit-identical to the `tm` side of
+/// `elastic_step(tw, tm, _, h2)` (pinned by `tests/kernel_equivalence.rs`).
+pub fn elastic_absorb(tm: &mut [f32], tw: &[f32], h2: f32) {
+    debug_assert_eq!(tm.len(), tw.len());
+    for (m, &w) in tm.iter_mut().zip(tw) {
+        *m += h2 * (w - *m);
+    }
+}
+
 /// Blockwise spatial average (mirror of kernels/spatial.py) over conv
 /// segments of the flat Hessian-diagonal estimate.
 pub fn spatial_average(hdiag: &mut [f32], conv_segments: &[(usize, usize, usize)]) {
@@ -214,6 +229,19 @@ mod tests {
         elastic_step(&mut full_w, &mut full_m, 0.3, 0.1);
         elastic_pull(&mut pull_w, &snapshot, 0.3);
         for (a, b) in full_w.iter().zip(&pull_w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn elastic_absorb_is_the_master_half() {
+        let mut full_w = vec![2.0f32, -1.0, 0.5];
+        let mut full_m = vec![0.0f32, 1.0, 0.5];
+        let mut absorb_m = full_m.clone();
+        let replica = full_w.clone();
+        elastic_step(&mut full_w, &mut full_m, 0.3, 0.1);
+        elastic_absorb(&mut absorb_m, &replica, 0.1);
+        for (a, b) in full_m.iter().zip(&absorb_m) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
     }

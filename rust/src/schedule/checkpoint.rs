@@ -105,6 +105,7 @@ mod tests {
                 gossip: vec![],
                 engines: Json::Null,
                 rngs: Json::Null,
+                sync: Json::Null,
                 log: MetricsLog::default(),
                 per_round_syncs: vec![],
             },

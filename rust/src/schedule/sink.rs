@@ -68,10 +68,13 @@ pub fn config_schema_hash() -> String {
     }
 
     // A sample record exercising every serialized key: the default-omitted
-    // `policy` key forced present, one round record, a non-empty sim report
-    // and worker-stat list.
+    // optional config keys (`policy`, `optimizer`, `sync_mode`) forced
+    // present, one round record, a non-empty sim report and worker-stat
+    // list.
     let mut cfg = ExperimentConfig::default();
     cfg.policy = Some("fixed(alpha=0.1)".into());
+    cfg.optimizer = Some("adamw(beta1=0.9,beta2=0.999,eps=0.00000001,wd=0.01)".into());
+    cfg.sync_mode = crate::config::SyncMode::Gossip;
     let mut log = MetricsLog::default();
     log.push(RoundRecord {
         round: 0,
@@ -647,6 +650,7 @@ mod tests {
                 gossip: vec![(0, vec![])],
                 engines: crate::util::json::Json::Null,
                 rngs: crate::util::json::Json::Null,
+                sync: crate::util::json::Json::Null,
                 log: MetricsLog::default(),
                 per_round_syncs: vec![1; next_round as usize],
             },

@@ -23,6 +23,9 @@ pub struct Cli {
 
 pub struct Args {
     values: BTreeMap<String, String>,
+    /// Option keys the user actually passed (vs. defaulted) — lets callers
+    /// distinguish `--policies <default text>` from no `--policies` at all.
+    explicit: std::collections::BTreeSet<String>,
     flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -87,6 +90,7 @@ impl Cli {
     /// Parse; on `--help` prints usage and exits. Unknown options error.
     pub fn parse(self, argv: &[String]) -> Result<Args, String> {
         let mut values = BTreeMap::new();
+        let mut explicit = std::collections::BTreeSet::new();
         let mut flags = Vec::new();
         let mut positional = Vec::new();
         for spec in &self.specs {
@@ -126,6 +130,7 @@ impl Cli {
                                 .ok_or_else(|| format!("--{key} requires a value"))?
                         }
                     };
+                    explicit.insert(key.clone());
                     values.insert(key, v);
                 }
             } else {
@@ -138,7 +143,7 @@ impl Cli {
                 return Err(format!("missing required option --{}", spec.name));
             }
         }
-        Ok(Args { values, flags, positional })
+        Ok(Args { values, explicit, flags, positional })
     }
 }
 
@@ -147,6 +152,12 @@ impl Args {
         self.values
             .get(name)
             .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    /// Was this option explicitly passed on the command line (rather than
+    /// taking its declared default)?
+    pub fn provided(&self, name: &str) -> bool {
+        self.explicit.contains(name)
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -276,6 +287,19 @@ mod tests {
         assert_eq!(a.usize("workers"), 4);
         assert_eq!(a.get("method"), "easgd");
         assert!(!a.flag("verbose"));
+    }
+
+    /// `provided` distinguishes an explicitly-passed value from the default
+    /// — even when the passed value EQUALS the default.
+    #[test]
+    fn provided_tracks_explicit_options_only() {
+        let a = cli().parse(&argv(&["--method", "easgd", "--workers", "4"])).unwrap();
+        assert!(a.provided("workers"), "explicit --workers 4 (the default value) still counts");
+        assert!(a.provided("method"));
+        assert!(!a.provided("alpha"));
+        let a = cli().parse(&argv(&["--method=easgd", "--alpha=0.2"])).unwrap();
+        assert!(a.provided("alpha"), "--key=value syntax counts too");
+        assert!(!a.provided("workers"));
     }
 
     #[test]

@@ -175,9 +175,144 @@ fn assert_steady_state_round_is_alloc_free(opt: Optimizer, label: &str) {
     assert!(workers.iter().all(|w| w.steps >= 15 * tau as u64));
 }
 
+// ---------------------------------------------------------------------------
+// gossip (decentralized elastic-pull) sync mode
+// ---------------------------------------------------------------------------
+
+/// One gossip-mode communication round over the coordinator state machines —
+/// exactly the work the sequential gossip driver does per round, minus
+/// eval/metrics: fused local steps, score against the published master
+/// snapshot, per-worker policy decision, in-place `elastic_pull`, replica
+/// publish through a per-worker `SnapshotPool`, and the master's
+/// end-of-round fold + snapshot publish.
+#[allow(clippy::too_many_arguments)]
+fn gossip_round(
+    engine: &mut QuadraticEngine,
+    workers: &mut [WorkerState],
+    master: &mut MasterState,
+    gossip: &GossipBoard,
+    policies: &mut [Box<dyn deahes::elastic::policy::SyncPolicy>],
+    pools: &mut [deahes::coordinator::master::SnapshotPool],
+    order_rng: &mut Rng,
+    order: &mut Vec<usize>,
+    folds: &mut Vec<(usize, f64, f64)>,
+    tau: usize,
+    round_no: u64,
+) {
+    use deahes::optim::native;
+    folds.clear();
+    order_rng.permutation_into(order, workers.len());
+    for &w in order.iter() {
+        workers[w].local_round(engine, tau).unwrap();
+        let (_, est) = gossip.master_estimate();
+        let score = workers[w].observe_and_score(&est);
+        let ctx = SyncContext {
+            worker: w,
+            round: round_no,
+            raw_score: score,
+            missed: workers[w].missed,
+            alpha: 0.1,
+        };
+        let wts = policies[w].weights(&ctx);
+        native::elastic_pull(&mut workers[w].theta, &est, wts.h1 as f32);
+        workers[w].complete_pull();
+        gossip.publish(w, round_no + 1, pools[w].publish(&workers[w].theta));
+        folds.push((w, wts.h1, wts.h2));
+    }
+    folds.sort_unstable_by_key(|&(w, _, _)| w);
+    for &(w, h1, h2) in folds.iter() {
+        let (_, replica) = gossip.entry(w);
+        master.absorb_gossip(w, &replica, h1, h2);
+    }
+    gossip.publish_master(round_no + 1, master.publish_snapshot());
+}
+
+/// Gossip-mode steady state is allocation-free too: the replica pools and
+/// the master's snapshot pool saturate during warm-up, the per-worker
+/// policy state (adaptive's rings) reaches capacity, and further rounds
+/// allocate NOTHING.
+fn assert_gossip_steady_state_round_is_alloc_free(
+    opt: Optimizer,
+    policy_spec: &str,
+    label: &str,
+) {
+    let (k, n, tau) = (4, 256, 2);
+    let (mut engine, mut workers, mut master, gossip, mut order_rng, _) = build(k, n, opt);
+    let mut policies: Vec<Box<dyn deahes::elastic::policy::SyncPolicy>> = (0..k)
+        .map(|_| {
+            let mut p = policy::parse(policy_spec).unwrap();
+            p.init(k);
+            p
+        })
+        .collect();
+    let mut pools: Vec<deahes::coordinator::master::SnapshotPool> =
+        (0..k).map(|_| deahes::coordinator::master::SnapshotPool::new()).collect();
+    let mut order: Vec<usize> = Vec::with_capacity(k);
+    let mut folds: Vec<(usize, f64, f64)> = Vec::with_capacity(k);
+    for r in 0..10u64 {
+        gossip_round(
+            &mut engine,
+            &mut workers,
+            &mut master,
+            &gossip,
+            &mut policies,
+            &mut pools,
+            &mut order_rng,
+            &mut order,
+            &mut folds,
+            tau,
+            r,
+        );
+    }
+    let allocs = count_allocs(|| {
+        for r in 10..15u64 {
+            gossip_round(
+                &mut engine,
+                &mut workers,
+                &mut master,
+                &gossip,
+                &mut policies,
+                &mut pools,
+                &mut order_rng,
+                &mut order,
+                &mut folds,
+                tau,
+                r,
+            );
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "{label}: steady-state gossip rounds must not allocate ({allocs} in 5 rounds)"
+    );
+    assert!(master.total_syncs >= 15 * k as u64);
+    assert!(workers.iter().all(|w| w.steps >= 15 * tau as u64));
+}
+
 #[test]
 fn sgd_steady_state_round_allocates_nothing() {
     assert_steady_state_round_is_alloc_free(Optimizer::Sgd, "sgd");
+}
+
+#[test]
+fn gossip_sgd_steady_state_round_allocates_nothing() {
+    assert_gossip_steady_state_round_is_alloc_free(
+        Optimizer::Sgd,
+        "dynamic(alpha=0.1,knee=-0.05,detector=paper-sign)",
+        "gossip/sgd/dynamic",
+    );
+}
+
+/// The AdamW preset and the stateful adaptive policy keep the invariant:
+/// moment buffers live in `OptState`, the policy's rings are
+/// capacity-reserved, and the pull is in place.
+#[test]
+fn gossip_adamw_adaptive_steady_state_round_allocates_nothing() {
+    assert_gossip_steady_state_round_is_alloc_free(
+        Optimizer::AdamW,
+        "adaptive(alpha0=0.1,window=4)",
+        "gossip/adamw/adaptive",
+    );
 }
 
 #[test]

@@ -37,6 +37,8 @@ const POLICY_MATRIX: &[(&str, Method)] = &[
     ("dynamic(alpha=0.1,knee=-0.05,detector=paper-sign)", Method::DeahesO),
     ("hysteresis(alpha=0.1,knee=-0.05,detector=paper-sign,hold=2)", Method::DeahesO),
     ("staleness(alpha=0.1,halflife=2)", Method::Easgd),
+    ("delayed(alpha=0.1,staleness_cap=3)", Method::Eamsgd),
+    ("adaptive(alpha0=0.1,window=4)", Method::Easgd),
 ];
 
 fn quad_cfg(policy: &str, method: Method) -> ExperimentConfig {
@@ -111,6 +113,124 @@ fn resume_is_bit_identical_for_every_policy_on_the_quad_engine() {
             );
         }
     }
+}
+
+/// Gossip-mode acceptance pin: the decentralized topology (per-worker
+/// policies, pull cursors, master snapshot slot, replica board) restores
+/// bit-exactly from every boundary, for the two new policies and for the
+/// AdamW preset — the sequential quad continuation is byte-identical.
+#[test]
+fn gossip_resume_is_bit_identical_for_the_new_policies_and_adamw() {
+    use deahes::config::SyncMode;
+    for (policy, method, optimizer) in [
+        ("delayed(alpha=0.1,staleness_cap=3)", Method::Easgd, None),
+        ("adaptive(alpha0=0.1,window=4)", Method::DeahesO, None),
+        // AdamW preset through the same pin (covers OptState::AdamW
+        // snapshots riding inside a gossip checkpoint).
+        (
+            "adaptive(alpha0=0.1,window=4)",
+            Method::Easgd,
+            Some("adamw(lr=0.02,beta1=0.9,beta2=0.999,eps=0.00000001,wd=0.01)"),
+        ),
+    ] {
+        let mut cfg = quad_cfg(policy, method);
+        cfg.sync_mode = SyncMode::Gossip;
+        cfg.optimizer = optimizer.map(|s| s.to_string());
+        let baseline = digest(&sim::run(&cfg).unwrap());
+        let (hooked, cps) = capture_checkpoints(&cfg, 8);
+        assert_eq!(
+            digest(&hooked),
+            baseline,
+            "{policy}: capturing gossip checkpoints changed numbers"
+        );
+        assert_eq!(cps.len(), 2, "{policy}: rounds=21, every=8 -> cuts at 8 and 16");
+        for cp in &cps {
+            assert_eq!(cp.sync_mode(), SyncMode::Gossip, "{policy}: checkpoint missing mode tag");
+            let round = cp.next_round;
+            let resumed = sim::run_with(&cfg, Some(cp), None).unwrap();
+            assert_eq!(
+                digest(&resumed),
+                baseline,
+                "{policy} optimizer={optimizer:?}: gossip resume from round {round} diverged"
+            );
+            // ...and from the JSON round-trip the sink actually stores
+            let reread =
+                RunCheckpoint::from_json(&Json::parse(&cp.to_json().to_string_compact()).unwrap())
+                    .unwrap();
+            let resumed = sim::run_with(&cfg, Some(&reread), None).unwrap();
+            assert_eq!(
+                digest(&resumed),
+                baseline,
+                "{policy}: resume from persisted round-{round} gossip checkpoint diverged"
+            );
+        }
+    }
+}
+
+/// Mixed-mode resume is a hard error with a clear message, both ways:
+/// a central checkpoint cannot continue a gossip config and vice versa.
+#[test]
+fn mixed_mode_resume_is_a_hard_error() {
+    use deahes::config::SyncMode;
+    let central_cfg = quad_cfg("fixed(alpha=0.1)", Method::Easgd);
+    let (_, central_cps) = capture_checkpoints(&central_cfg, 8);
+    let mut gossip_cfg = central_cfg.clone();
+    gossip_cfg.sync_mode = SyncMode::Gossip;
+    let (_, gossip_cps) = capture_checkpoints(&gossip_cfg, 8);
+
+    // central checkpoint -> gossip config
+    let err = sim::run_with(&gossip_cfg, Some(&central_cps[0]), None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("sync_mode=central"), "{err}");
+    assert!(err.contains("sync_mode=gossip"), "{err}");
+    assert!(err.contains("mixed-mode"), "{err}");
+    // gossip checkpoint -> central config
+    let err = sim::run_with(&central_cfg, Some(&gossip_cps[0]), None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("mixed-mode"), "{err}");
+    // the threaded driver refuses just the same
+    let mut threaded_gossip = gossip_cfg.clone();
+    threaded_gossip.threaded = true;
+    let (_, thr_cps) = capture_checkpoints(&threaded_gossip, 8);
+    let mut threaded_central = central_cfg.clone();
+    threaded_central.threaded = true;
+    let err = sim::run_with(&threaded_central, Some(&thr_cps[0]), None)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("mixed-mode"), "{err}");
+}
+
+/// Threaded gossip smoke: the cut is consistent and a resume completes
+/// with the driver-invariant facts intact (the pull schedule is a pure
+/// function of (seed, worker, round) even across the resume boundary).
+#[test]
+fn threaded_gossip_driver_checkpoints_and_resumes() {
+    use deahes::config::SyncMode;
+    let mut cfg = quad_cfg("adaptive(alpha0=0.1,window=4)", Method::DeahesO);
+    cfg.rounds = 18;
+    cfg.threaded = true;
+    cfg.sync_mode = SyncMode::Gossip;
+    let (full, cps) = capture_checkpoints(&cfg, 6);
+    assert_eq!(cps.len(), 2, "rounds=18, every=6 -> cuts at 6 and 12");
+    let resumed = sim::run_with(&cfg, Some(&cps[1]), None).unwrap();
+    assert_eq!(resumed.log.records.len(), full.log.records.len());
+    let mut seq_cfg = cfg.clone();
+    seq_cfg.threaded = false;
+    let seq = sim::run(&seq_cfg).unwrap();
+    for (a, b) in resumed.log.records.iter().zip(&seq.log.records) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(
+            (a.syncs_ok, a.syncs_failed),
+            (b.syncs_ok, b.syncs_failed),
+            "pull schedule diverged at round {} across the resume boundary",
+            a.round
+        );
+    }
+    let served_resumed: Vec<u64> = resumed.worker_stats.iter().map(|s| s.0).collect();
+    let served_seq: Vec<u64> = seq.worker_stats.iter().map(|s| s.0).collect();
+    assert_eq!(served_resumed, served_seq);
 }
 
 #[test]
@@ -268,6 +388,50 @@ fn resume_run_dir_finishes_pending_trials_and_rebuilds_series() {
     assert_eq!(report.finished, 0);
     // and an empty/missing dir is a clear error
     assert!(experiments::resume_run_dir(&tmp_dir("nonexistent"), 1).is_err());
+
+    let _ = std::fs::remove_dir_all(&crash_dir);
+    let _ = std::fs::remove_dir_all(&clean_dir);
+}
+
+/// The acceptance path: a gossip-mode trial killed after its first
+/// checkpoint is finished by `deahes resume <run-dir>`
+/// (`experiments::resume_run_dir`) and commits record bytes identical to
+/// an uninterrupted run's — the gossip `sync` payload survives the full
+/// JSONL round trip through the schedule layer.
+#[test]
+fn killed_gossip_trial_resumes_byte_identically_via_resume_run_dir() {
+    use deahes::config::SyncMode;
+    let crash_dir = tmp_dir("gossip-crash");
+    let clean_dir = tmp_dir("gossip-clean");
+    let _ = std::fs::remove_dir_all(&crash_dir);
+    let _ = std::fs::remove_dir_all(&clean_dir);
+    let mut cfg = quad_cfg("delayed(alpha=0.1,staleness_cap=3)", Method::Easgd);
+    cfg.rounds = 30;
+    cfg.sync_mode = SyncMode::Gossip;
+    let mut plan = TrialPlan::new();
+    plan.push_cell("gossip-ckpt/cell", "cell", &cfg, 1);
+
+    schedule::execute_plan(
+        &plan,
+        &ScheduleOptions { run_dir: Some(clean_dir.clone()), ..ScheduleOptions::default() },
+    )
+    .unwrap();
+    let crash_opts = ScheduleOptions {
+        run_dir: Some(crash_dir.clone()),
+        checkpoint_every: 8,
+        crash_after_checkpoints: 1,
+        ..ScheduleOptions::default()
+    };
+    assert!(schedule::execute_plan(&plan, &crash_opts).is_err());
+    assert!(record_lines(&crash_dir).is_empty(), "the killed trial must not have committed");
+
+    let report = experiments::resume_run_dir(&crash_dir, 1).unwrap();
+    assert_eq!((report.committed, report.finished), (0, 1));
+    assert_eq!(
+        record_lines(&crash_dir),
+        record_lines(&clean_dir),
+        "resumed gossip record must be byte-identical to the uninterrupted run's"
+    );
 
     let _ = std::fs::remove_dir_all(&crash_dir);
     let _ = std::fs::remove_dir_all(&clean_dir);

@@ -1,0 +1,166 @@
+//! Sequential-vs-threaded parity in the decentralized gossip sync mode —
+//! the mirror of `driver_parity.rs` for the second topology.
+//!
+//! Failure injection is a pure function of (seed, worker, round) and a
+//! gossip-mode "sync" is a pull+publish with no master round-trip, so both
+//! drivers must record the *identical* per-round pull schedule and the
+//! master must fold the identical per-worker sync counts. Numerics differ
+//! only through the per-thread engine noise streams (the threaded driver
+//! builds one engine per worker), so accuracy agrees statistically, not
+//! bitwise — exactly the central-mode contract.
+//!
+//! A central-vs-gossip smoke rides along: same config, same fault schedule,
+//! both topologies must converge on the quadratic model under burst
+//! failures, and their schedule fingerprints must differ (sync_mode is a
+//! real config axis).
+
+use deahes::config::{EngineKind, ExperimentConfig, SyncMode};
+use deahes::coordinator::{sim, FailureModel};
+use deahes::schedule::fingerprint;
+use deahes::strategies::Method;
+
+fn gossip_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        engine: EngineKind::Quadratic { dim: 48, heterogeneity: 0.3, noise: 0.02 },
+        workers: 3,
+        tau: 2,
+        rounds: 50,
+        lr: 0.05,
+        eval_subset: 8,
+        eval_every: 1, // record every round so pull counts align 1:1
+        failure: FailureModel::Burst { p_start: 0.2, mean_len: 5.0 },
+        sync_mode: SyncMode::Gossip,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn run_both(cfg: &ExperimentConfig) -> (sim::RunResult, sim::RunResult) {
+    let seq = sim::run(cfg).unwrap();
+    let mut threaded = cfg.clone();
+    threaded.threaded = true;
+    let thr = sim::run(&threaded).unwrap();
+    (seq, thr)
+}
+
+#[test]
+fn per_round_pull_counts_are_identical_across_drivers() {
+    let (seq, thr) = run_both(&gossip_cfg());
+    assert_eq!(seq.log.records.len(), thr.log.records.len());
+    for (s, t) in seq.log.records.iter().zip(&thr.log.records) {
+        assert_eq!(s.round, t.round);
+        assert_eq!(
+            (s.syncs_ok, s.syncs_failed),
+            (t.syncs_ok, t.syncs_failed),
+            "pull schedule diverged at round {}",
+            s.round
+        );
+    }
+    // the masters therefore folded the same number of replicas per worker
+    let served_seq: Vec<u64> = seq.worker_stats.iter().map(|s| s.0).collect();
+    let served_thr: Vec<u64> = thr.worker_stats.iter().map(|s| s.0).collect();
+    assert_eq!(served_seq, served_thr);
+    // and the policy-weight telemetry is populated in both drivers (every
+    // round that served at least one pull records finite mean weights)
+    for (name, r) in [("sequential", &seq), ("threaded", &thr)] {
+        let with_pulls: Vec<_> =
+            r.log.records.iter().filter(|rec| rec.syncs_ok > 0).collect();
+        assert!(!with_pulls.is_empty(), "{name}: no round served a pull");
+        for rec in with_pulls {
+            assert!(rec.mean_h1.is_finite(), "{name} round {}: mean_h1 missing", rec.round);
+            assert!(rec.mean_h2.is_finite(), "{name} round {}: mean_h2 missing", rec.round);
+        }
+    }
+}
+
+#[test]
+fn final_accuracy_agrees_within_tolerance() {
+    for method in [Method::DeahesO, Method::Easgd] {
+        let mut cfg = gossip_cfg();
+        cfg.method = method;
+        let (seq, thr) = run_both(&cfg);
+        let a_seq = seq.log.tail_acc(10);
+        let a_thr = thr.log.tail_acc(10);
+        assert!(
+            (a_seq - a_thr).abs() < 0.25,
+            "{}: sequential tail acc {a_seq} vs threaded {a_thr}",
+            method.name()
+        );
+        // and both actually converged (loss halved)
+        for (name, r) in [("sequential", &seq), ("threaded", &thr)] {
+            let first = r.log.records.first().unwrap().test_loss;
+            let last = r.log.records.last().unwrap().test_loss;
+            assert!(
+                last < 0.5 * first,
+                "{} {name}: loss {first} -> {last} did not halve",
+                method.name()
+            );
+        }
+    }
+}
+
+/// Central-vs-gossip smoke: same config modulo `sync_mode`, same burst
+/// fault schedule. Both topologies converge; the per-round sync/pull
+/// schedule is identical (suppression does not depend on the topology);
+/// the fingerprints differ.
+#[test]
+fn central_and_gossip_both_converge_under_bursts() {
+    let gossip = gossip_cfg();
+    let mut central = gossip.clone();
+    central.sync_mode = SyncMode::Central;
+
+    let rg = sim::run(&gossip).unwrap();
+    let rc = sim::run(&central).unwrap();
+
+    for (name, r) in [("central", &rc), ("gossip", &rg)] {
+        let first = r.log.records.first().unwrap().test_loss;
+        let last = r.log.records.last().unwrap().test_loss;
+        assert!(
+            last.is_finite() && last < 0.5 * first,
+            "{name}: loss {first} -> {last} did not halve under bursts"
+        );
+    }
+    // identical fault schedule -> identical per-round sync/pull counts
+    for (c, g) in rc.log.records.iter().zip(&rg.log.records) {
+        assert_eq!(
+            (c.syncs_ok, c.syncs_failed),
+            (g.syncs_ok, g.syncs_failed),
+            "round {}: topology changed the fault schedule",
+            c.round
+        );
+    }
+    // sync_mode is a first-class fingerprint axis
+    assert_ne!(
+        fingerprint(&central, "cell", 0),
+        fingerprint(&gossip, "cell", 0),
+        "central and gossip configs must fingerprint distinctly"
+    );
+    // and the serialized configs round-trip the mode
+    let back = ExperimentConfig::from_json(&gossip.to_json()).unwrap();
+    assert_eq!(back.sync_mode, SyncMode::Gossip);
+}
+
+/// The two new policies and the AdamW preset run end-to-end in gossip mode
+/// (threaded included), converging on the quad model.
+#[test]
+fn new_policies_and_adamw_run_end_to_end_in_gossip_mode() {
+    for (policy, optimizer) in [
+        ("delayed(alpha=0.1,staleness_cap=3)", None),
+        ("adaptive(alpha0=0.1,window=4)", None),
+        ("delayed(alpha=0.1,staleness_cap=3)", Some("adamw(lr=0.02)")),
+    ] {
+        for threaded in [false, true] {
+            let mut cfg = gossip_cfg();
+            cfg.rounds = 40;
+            cfg.policy = Some(policy.into());
+            cfg.optimizer = optimizer.map(|s| s.to_string());
+            cfg.threaded = threaded;
+            let r = sim::run(&cfg).unwrap();
+            let first = r.log.records.first().unwrap().test_loss;
+            let last = r.log.records.last().unwrap().test_loss;
+            assert!(
+                last.is_finite() && last < first,
+                "{policy} optimizer={optimizer:?} threaded={threaded}: {first} -> {last}"
+            );
+        }
+    }
+}

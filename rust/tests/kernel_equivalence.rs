@@ -174,6 +174,97 @@ fn elastic_pull_matches_pair_update_worker_side() {
     }
 }
 
+/// `elastic_absorb` is exactly the master half of the pair update — the
+/// gossip-mode fold kernel (`MasterState::absorb_gossip`) splits eq. 13
+/// from the pair exactly like `elastic_pull` splits eq. 12.
+#[test]
+fn elastic_absorb_matches_pair_update_master_side() {
+    let n = 77;
+    let mut rng = Rng::new(8);
+    let tw0: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+    let tm0: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+    for h2 in [0.0f32, 0.1, 0.5, 1.0] {
+        let mut pair_w = tw0.clone();
+        let mut pair_m = tm0.clone();
+        native::elastic_step(&mut pair_w, &mut pair_m, 0.3, h2);
+        let mut absorb_m = tm0.clone();
+        native::elastic_absorb(&mut absorb_m, &tw0, h2);
+        assert_bits(&pair_m, &absorb_m, &format!("absorb h2={h2}"));
+    }
+}
+
+/// The fused AdamW training path (`WorkerState::local_round` over an AdamW
+/// `OptState`, stepping through `Engine::adamw_step` and the scratch arena)
+/// is bit-identical to a whole-round manual emulation: per step, a gradient
+/// pass into a buffer followed by three separate m/v/θ passes. This is the
+/// preset-level mirror of `fused_adamw_matches_three_pass_reference` — it
+/// pins the kernel AND all the plumbing (OptState params, per-step `t`,
+/// spec-pinned lr) between the driver and the kernel.
+#[test]
+fn adamw_preset_round_is_bit_identical_to_three_pass_emulation() {
+    use deahes::coordinator::worker::WorkerState;
+    use deahes::elastic::score::geometric_weights;
+    use deahes::optim::OptimSpec;
+
+    let n = 48;
+    let tau = 3;
+    let spec =
+        OptimSpec::parse("adamw(lr=0.02,beta1=0.9,beta2=0.999,eps=0.00000001,wd=0.01)").unwrap();
+    // Derive the emulation's f32 constants from the parsed spec exactly as
+    // the worker does, so the comparison can only diverge through the
+    // update path itself.
+    let OptimSpec::AdamW(params) = spec else { unreachable!() };
+    let lr = params.lr.unwrap() as f32;
+    let (beta1, beta2) = (params.beta1 as f32, params.beta2 as f32);
+    let (eps, wd) = (params.eps as f32, params.wd as f32);
+    for noise in NOISES {
+        let mut engine_f = QuadraticEngine::new(n, 45, 1, 0.2, noise);
+        let mut engine_c = QuadraticEngine::new(n, 45, 1, 0.2, noise);
+        let mut ws = WorkerState::new(
+            0,
+            vec![0.25; n],
+            spec.state(n),
+            0.05, // run-level lr — must be shadowed by the spec's lr=0.02
+            None,
+            geometric_weights(4, 0.5),
+            Rng::new(9),
+        );
+        let mut theta_c = vec![0.25f32; n];
+        let (mut mc, mut vc) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let mut g = vec![0.0f32; n];
+        let mut t = 0u64;
+        for round in 0..10 {
+            let loss_f = ws.local_round(&mut engine_f, tau).unwrap();
+            let mut loss_sum = 0.0f32;
+            for _ in 0..tau {
+                t += 1;
+                loss_sum += engine_c.grad(&theta_c, empty(), &mut g).unwrap();
+                // three-pass reference
+                let bc1 = 1.0 - beta1.powi(t as i32);
+                let bc2 = 1.0 - beta2.powi(t as i32);
+                for i in 0..n {
+                    mc[i] = beta1 * mc[i] + (1.0 - beta1) * g[i];
+                }
+                for i in 0..n {
+                    vc[i] = beta2 * vc[i] + (1.0 - beta2) * g[i] * g[i];
+                }
+                for i in 0..n {
+                    let mh = mc[i] / bc1;
+                    let vh = vc[i] / bc2;
+                    theta_c[i] -= lr * (mh / (vh.sqrt() + eps) + wd * theta_c[i]);
+                }
+            }
+            let loss_c = loss_sum / tau as f32;
+            assert_eq!(
+                loss_f.to_bits(),
+                loss_c.to_bits(),
+                "round {round} loss, noise={noise}"
+            );
+            assert_bits(&ws.theta, &theta_c, &format!("round {round} theta, noise={noise}"));
+        }
+    }
+}
+
 /// A full worker-state round through the fused path matches a manual
 /// composed emulation bit-for-bit — the whole-round contract the drivers
 /// depend on.

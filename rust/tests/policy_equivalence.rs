@@ -178,4 +178,97 @@ fn every_registered_policy_spec_roundtrips() {
         assert_eq!(rebuilt.spec(), spec, "'{spec}' must be a parse fixed point");
         assert_eq!(policy::canonical(&spec).unwrap(), spec);
     }
+    // the PR-5 policies are registered
+    for name in ["delayed", "adaptive"] {
+        assert!(policy::names().contains(&name), "'{name}' missing from the registry");
+    }
+}
+
+/// Property: the new specs survive parse → describe → parse over their full
+/// in-range parameter space, idempotently, and rebuild identical policies.
+#[test]
+fn property_delayed_and_adaptive_specs_roundtrip() {
+    proptest::check("delayed/adaptive spec roundtrip", 200, |g| {
+        let alpha = g.f64(1e-6, 1.0);
+        let cap = g.usize(1, 40);
+        let window = g.usize(1, 40);
+        for s in [
+            format!("delayed(alpha={alpha},staleness_cap={cap})"),
+            format!("adaptive(alpha0={alpha},window={window})"),
+        ] {
+            let c1 = policy::canonical(&s).unwrap_or_else(|e| panic!("'{s}': {e}"));
+            let c2 = policy::canonical(&c1).unwrap();
+            assert_eq!(c1, c2, "canonicalization must be idempotent for '{s}'");
+            // the rebuilt policy prints the same canonical spec
+            assert_eq!(policy::parse(&c1).unwrap().spec(), c1);
+        }
+        // spelling variants (whitespace, argument order) collapse
+        let spaced = format!(" delayed ( staleness_cap = {cap} , alpha = {alpha} ) ");
+        assert_eq!(
+            policy::canonical(&spaced).unwrap(),
+            policy::canonical(&format!("delayed(alpha={alpha},staleness_cap={cap})")).unwrap()
+        );
+    });
+}
+
+/// Degenerate parameters of the PR-5 specs are parse errors with messages
+/// naming the offending knob: `staleness_cap=0` (delayed never serves its
+/// healthy branch), `window=0` (adaptive has no history), and AdamW betas
+/// ≥ 1 (bias correction divides by zero).
+#[test]
+fn degenerate_new_specs_rejected() {
+    use deahes::optim::OptimSpec;
+    let err = policy::parse("delayed(staleness_cap=0)").unwrap_err().to_string();
+    assert!(err.contains("staleness_cap"), "{err}");
+    let err = policy::parse("adaptive(window=0)").unwrap_err().to_string();
+    assert!(err.contains("window"), "{err}");
+    for bad in ["adamw(beta1=1)", "adamw(beta2=1)", "adamw(beta1=1.001)"] {
+        let err = OptimSpec::parse(bad).unwrap_err().to_string();
+        assert!(err.contains("beta"), "'{bad}': {err}");
+    }
+    // the config layer surfaces all three rejections
+    let mut cfg = quad_cfg();
+    cfg.policy = Some("delayed(staleness_cap=0)".into());
+    assert!(cfg.validate().is_err());
+    cfg.policy = Some("adaptive(window=0)".into());
+    assert!(cfg.validate().is_err());
+    cfg.policy = None;
+    cfg.optimizer = Some("adamw(beta1=1)".into());
+    assert!(cfg.validate().is_err());
+}
+
+/// The new policies join the sweep axis like any other registered policy,
+/// with canonical labels and distinct fingerprints.
+#[test]
+fn delayed_and_adaptive_are_sweepable() {
+    let mut base = quad_cfg();
+    base.rounds = 12;
+    let specs: Vec<String> = ["delayed(staleness_cap=3)", "adaptive(window=4)"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let out = experiments::policy_sweep(&base, &specs, 1).unwrap();
+    assert_eq!(out.len(), 2);
+    let labels: Vec<&str> = out.iter().map(|s| s.label.as_str()).collect();
+    assert!(labels.contains(&"delayed(alpha=0.1,staleness_cap=3)"), "{labels:?}");
+    assert!(labels.contains(&"adaptive(alpha0=0.1,window=4)"), "{labels:?}");
+}
+
+/// The new policies converge end-to-end under burst failures and exercise
+/// their correction mechanisms (delayed: a burst longer than the cap;
+/// adaptive: any windowed miss history attenuates h2 below α₀).
+#[test]
+fn delayed_and_adaptive_run_end_to_end() {
+    for spec in ["delayed(alpha=0.1,staleness_cap=3)", "adaptive(alpha0=0.1,window=4)"] {
+        let mut cfg = quad_cfg();
+        cfg.rounds = 80;
+        cfg.failure = FailureModel::Burst { p_start: 0.2, mean_len: 5.0 };
+        cfg.policy = Some(spec.to_string());
+        let r = sim::run(&cfg).unwrap();
+        let first = r.log.records.first().unwrap().test_loss;
+        let last = r.log.records.last().unwrap().test_loss;
+        assert!(last.is_finite() && last < first, "{spec}: {first} -> {last}");
+        let corrections: u64 = r.worker_stats.iter().map(|s| s.1).sum();
+        assert!(corrections > 0, "{spec}: failure handling never fired under bursts");
+    }
 }
