@@ -1,12 +1,13 @@
 //! Hot-path benchmark subsystem (`deahes bench`).
 //!
-//! Two tiers, one JSON artifact:
+//! Four tiers, one JSON artifact:
 //!
 //!  * **micro** — per-kernel latency of the fused hot-path kernels
 //!    (`sgd_step` fused vs the legacy three-pass compose, `momentum_step`,
 //!    `adahessian_step`, `adamw_step`, the elastic pair update,
 //!    `elastic_pull`/`elastic_absorb`, and snapshot publishing
-//!    pool-vs-clone), reported as median/p95 nanoseconds per call;
+//!    pool-vs-clone), reported as median/p95/MAD nanoseconds per call —
+//!    the MAD feeds `--check`'s variance-aware regression gate;
 //!  * **macro** — a fig3-shaped overlap-ratio sweep over the quadratic
 //!    engine driven through the real `TrialPlan` machinery, timed twice:
 //!    once through the current allocation-free hot path
@@ -16,7 +17,15 @@
 //!    identical configs, seeds and eval cadence, so the recorded
 //!    rounds/sec ratio is the speedup of this PR's redesign over its own
 //!    baseline — the `BENCH_hotpath.json` trajectory future PRs regress
-//!    against.
+//!    against;
+//!  * **macro_ext** — the same legacy-vs-hotpath comparison for momentum
+//!    and AdaHessian locals (one overlap cell each), so the fused-kernel
+//!    claim is measured for every optimizer with a legacy three-pass shape;
+//!  * **dsweep** — fused `sgd_step` throughput across a wide-d axis,
+//!    serial vs parameter-chunked dispatch ([`crate::util::par`]).
+//!    Informational (without the `par` feature both columns run the same
+//!    sequential plan); it puts the chunked tier's scaling on the
+//!    trajectory.
 //!
 //! The emitted JSON also records peak RSS (`VmHWM`, Linux; 0 elsewhere)
 //! and is re-parsed before the run reports success, so a CI smoke step
@@ -28,12 +37,13 @@ use crate::coordinator::master::SnapshotPool;
 use crate::coordinator::{FailureModel, Role, Setup};
 use crate::engine::quad::QuadraticEngine;
 use crate::engine::{BatchRef, Engine, WorkerScratch};
-use crate::optim::{native, Optimizer};
+use crate::optim::{native, OptState, Optimizer};
 use crate::schedule::{self, ScheduleOptions, TrialPlan};
 use crate::strategies::Method;
 use crate::util::json::Json;
+use crate::util::par::Chunker;
 use crate::util::rng::Rng;
-use crate::util::stats::quantile;
+use crate::util::stats::{mad, quantile};
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
@@ -89,11 +99,16 @@ impl BenchConfig {
     }
 }
 
-/// median/p95 of one timed kernel.
+/// median/p95/MAD of one timed kernel. The MAD (median absolute deviation)
+/// is the sample set's robust noise floor: `deahes bench --check` gates each
+/// kernel on `median > prev_median + max(5*MAD, 25%, 50ns)` instead of a
+/// flat percentage, so a genuinely noisy kernel gets proportional slack
+/// while a stable one is held tight.
 struct MicroResult {
     name: &'static str,
     median_ns: f64,
     p95_ns: f64,
+    mad_ns: f64,
     iters: usize,
 }
 
@@ -118,6 +133,7 @@ fn micro(name: &'static str, iters: usize, f: impl FnMut()) -> MicroResult {
         name,
         median_ns: quantile(&s, 0.5) * 1e9,
         p95_ns: quantile(&s, 0.95) * 1e9,
+        mad_ns: mad(&s) * 1e9,
         iters,
     }
 }
@@ -262,24 +278,35 @@ fn macro_plan(bc: &BenchConfig) -> TrialPlan {
 }
 
 /// Emulation of the pre-change hot path for one trial: per-step gradient
-/// allocation + separate loss/gradient/apply passes, and a full
-/// `theta.clone()` behind a fresh `Arc` per snapshot publish. Scoring,
-/// policy decisions, sync order, evaluation cadence and all RNG streams
-/// match the real sequential driver, so the wall-clock difference against
-/// `schedule::execute_plan` isolates exactly the allocation/fusion work.
+/// (and, for AdaHessian, probe/diagonal) allocation + separate
+/// loss/gradient/apply passes, and a full `theta.clone()` behind a fresh
+/// `Arc` per snapshot publish. Scoring, policy decisions, sync order,
+/// evaluation cadence and all RNG streams match the real sequential driver,
+/// so the wall-clock difference against `schedule::execute_plan` isolates
+/// exactly the allocation/fusion work. Covers SGD, momentum and AdaHessian
+/// locals (the three optimizers with a legacy three-pass shape; AdamW
+/// never had one — its fused kernel predates it).
 fn legacy_trial(cfg: &ExperimentConfig) -> Result<()> {
     ensure!(
         matches!(cfg.engine, EngineKind::Quadratic { .. }),
         "legacy bench emulation supports the quadratic engine only"
     );
     ensure!(
-        cfg.method.optimizer() == Optimizer::Sgd,
-        "legacy bench emulation covers SGD locals only"
+        matches!(
+            cfg.optimizer_spec()?.kind(),
+            Optimizer::Sgd | Optimizer::Momentum | Optimizer::AdaHessian
+        ),
+        "legacy bench emulation covers sgd/momentum/adahessian locals only"
     );
     let setup = Setup::build(cfg)?;
     let mut engine = setup.make_engine(Role::All)?;
     let n = setup.theta0.len();
     let mut workers: Vec<_> = (0..cfg.workers).map(|i| setup.make_worker(i)).collect();
+    // Same probe stream as `WorkerState`'s own (private) probe RNG, so the
+    // emulated AdaHessian trial walks the exact trajectory of the real one.
+    let mut probe_rngs: Vec<Rng> = (0..cfg.workers)
+        .map(|i| Rng::new(cfg.seed).derive(0x2AD).derive(i as u64))
+        .collect();
     let mut master = setup.make_master()?;
     let gossip = GossipBoard::new(cfg.workers, Arc::new(setup.theta0.clone()), cfg.gossip);
     let mut evaluator = setup.make_evaluator();
@@ -287,12 +314,36 @@ fn legacy_trial(cfg: &ExperimentConfig) -> Result<()> {
     let mut gossip_rng = Rng::new(cfg.seed).derive(0x6055);
     for round in 0..cfg.rounds {
         for w in order_rng.permutation(cfg.workers) {
-            // legacy local round: fresh Vec per gradient, three passes
+            // legacy local round: fresh Vec per gradient (per probe and
+            // Hessian diagonal too), separate passes per update
             let ws = &mut workers[w];
             for _ in 0..cfg.tau {
                 let mut g = vec![0.0f32; n];
-                engine.grad(&ws.theta, BatchRef { x: &[], y1h: &[] }, &mut g)?;
-                engine.sgd(&mut ws.theta, &g, cfg.lr as f32)?;
+                match &mut ws.opt {
+                    OptState::Sgd => {
+                        engine.grad(&ws.theta, BatchRef { x: &[], y1h: &[] }, &mut g)?;
+                        engine.sgd(&mut ws.theta, &g, cfg.lr as f32)?;
+                    }
+                    OptState::Momentum { buf } => {
+                        engine.grad(&ws.theta, BatchRef { x: &[], y1h: &[] }, &mut g)?;
+                        engine.momentum(&mut ws.theta, &g, buf, cfg.lr as f32)?;
+                    }
+                    OptState::AdaHessian { m, v, t } => {
+                        let mut z = vec![0.0f32; n];
+                        probe_rngs[w].rademacher_into(&mut z);
+                        let mut d = vec![0.0f32; n];
+                        *t += 1;
+                        engine.grad_hess(
+                            &ws.theta,
+                            BatchRef { x: &[], y1h: &[] },
+                            &z,
+                            &mut g,
+                            &mut d,
+                        )?;
+                        engine.adahessian(&mut ws.theta, &g, &d, m, v, *t, cfg.lr as f32)?;
+                    }
+                    OptState::AdamW { .. } => unreachable!("gated above"),
+                }
             }
             let (_, est) = gossip.estimate(w, &mut gossip_rng);
             let score = workers[w].observe_and_score(&est);
@@ -363,6 +414,108 @@ fn run_macro(bc: &BenchConfig) -> Result<MacroResult> {
     })
 }
 
+/// One optimizer of the legacy-vs-hotpath macro extension (momentum and
+/// AdaHessian ride the same fig3-shaped trial as the SGD comparison, one
+/// overlap cell each — enough signal for a trajectory without tripling the
+/// bench wall time).
+struct MacroExtResult {
+    optimizer: &'static str,
+    rounds_total: u64,
+    baseline_wall: f64,
+    hotpath_wall: f64,
+    speedup: f64,
+}
+
+fn run_macro_ext(bc: &BenchConfig) -> Result<Vec<MacroExtResult>> {
+    let mut out = Vec::new();
+    for name in ["momentum", "adahessian"] {
+        let mut cfg = macro_config(bc);
+        cfg.optimizer = Some(name.into());
+        cfg.overlap_ratio = 0.25;
+        let mut plan = TrialPlan::new();
+        plan.push_cell(&format!("bench-ext/{name}"), name, &cfg, bc.macro_seeds());
+        let rounds_total: u64 = plan.slots.iter().map(|s| s.config.rounds).sum();
+        let t0 = Instant::now();
+        for slot in &plan.slots {
+            legacy_trial(&slot.config)?;
+        }
+        let baseline_wall = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        schedule::execute_plan(&plan, &ScheduleOptions::default())?;
+        let hotpath_wall = t1.elapsed().as_secs_f64();
+        out.push(MacroExtResult {
+            optimizer: name,
+            rounds_total,
+            baseline_wall,
+            hotpath_wall,
+            speedup: baseline_wall / hotpath_wall.max(1e-12),
+        });
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// wide-d sweep (parameter-chunked tier)
+// ---------------------------------------------------------------------------
+
+/// One dimension of the intra-parallel sweep: fused `sgd_step` throughput
+/// through the serial dispatcher vs the chunked one ([`Chunker::auto`]).
+/// Without the `par` feature both columns run the same sequential chunk
+/// plan, so the ratio hovers at 1.0 — the sweep is informational, never a
+/// gate, and exists to put the chunked tier's scaling on the trajectory.
+struct DsweepPoint {
+    dim: usize,
+    serial_sps: f64,
+    chunked_sps: f64,
+    threads: usize,
+}
+
+fn dsweep_dims(bc: &BenchConfig) -> &'static [usize] {
+    if bc.smoke {
+        &[1 << 14, 1 << 16]
+    } else {
+        &[1 << 16, 1 << 18, 1 << 20]
+    }
+}
+
+/// Best-of-3 steps/sec of the fused noise-free `sgd_step` at `dim` through
+/// a dispatcher with `threads` workers.
+fn dsweep_throughput(dim: usize, steps: usize, threads: usize) -> Result<f64> {
+    let mut e = QuadraticEngine::new(dim, 7, 0, 0.0, 0.0);
+    if threads > 1 {
+        e.set_intra_parallel(threads);
+    }
+    let mut theta = vec![0.5f32; dim];
+    let mut scratch = WorkerScratch::new(dim);
+    let empty = BatchRef { x: &[], y1h: &[] };
+    e.sgd_step(&mut theta, empty, 1e-4, &mut scratch)?; // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            e.sgd_step(&mut theta, BatchRef { x: &[], y1h: &[] }, 1e-4, &mut scratch)?;
+        }
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    Ok(steps as f64 / best.max(1e-12))
+}
+
+fn run_dsweep(bc: &BenchConfig) -> Result<Vec<DsweepPoint>> {
+    let threads = Chunker::auto().threads();
+    let steps = if bc.smoke { 8 } else { 40 };
+    dsweep_dims(bc)
+        .iter()
+        .map(|&dim| {
+            Ok(DsweepPoint {
+                dim,
+                serial_sps: dsweep_throughput(dim, steps, 1)?,
+                chunked_sps: dsweep_throughput(dim, steps, threads)?,
+                threads,
+            })
+        })
+        .collect()
+}
+
 // ---------------------------------------------------------------------------
 // entry point
 // ---------------------------------------------------------------------------
@@ -372,6 +525,8 @@ fn run_macro(bc: &BenchConfig) -> Result<MacroResult> {
 pub fn run(bc: &BenchConfig, out: &Path) -> Result<Json> {
     let micro_results = run_micro(bc)?;
     let mac = run_macro(bc)?;
+    let ext = run_macro_ext(bc)?;
+    let dsweep = run_dsweep(bc)?;
 
     let micro_json = Json::Obj(
         micro_results
@@ -382,9 +537,39 @@ pub fn run(bc: &BenchConfig, out: &Path) -> Result<Json> {
                     Json::obj(vec![
                         ("median_ns", Json::num(r.median_ns)),
                         ("p95_ns", Json::num(r.p95_ns)),
+                        ("mad_ns", Json::num(r.mad_ns)),
                         ("iters", Json::num(r.iters as f64)),
                     ]),
                 )
+            })
+            .collect(),
+    );
+    let macro_ext_json = Json::Obj(
+        ext.iter()
+            .map(|r| {
+                (
+                    r.optimizer.to_string(),
+                    Json::obj(vec![
+                        ("rounds_total", Json::num(r.rounds_total as f64)),
+                        ("baseline_wall_secs", Json::num(r.baseline_wall)),
+                        ("hotpath_wall_secs", Json::num(r.hotpath_wall)),
+                        ("speedup", Json::num(r.speedup)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let dsweep_json = Json::Arr(
+        dsweep
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("dim", Json::num(p.dim as f64)),
+                    ("threads", Json::num(p.threads as f64)),
+                    ("serial_steps_per_sec", Json::num(p.serial_sps)),
+                    ("chunked_steps_per_sec", Json::num(p.chunked_sps)),
+                    ("speedup", Json::num(p.chunked_sps / p.serial_sps.max(1e-12))),
+                ])
             })
             .collect(),
     );
@@ -419,6 +604,15 @@ pub fn run(bc: &BenchConfig, out: &Path) -> Result<Json> {
                 ("speedup", Json::num(mac.speedup)),
             ]),
         ),
+        ("macro_ext", macro_ext_json),
+        (
+            "dsweep",
+            Json::obj(vec![
+                ("kernel", Json::str("sgd_step_fused")),
+                ("par_feature", Json::Bool(cfg!(feature = "par"))),
+                ("points", dsweep_json),
+            ]),
+        ),
         ("peak_rss_bytes", Json::num(peak_rss_bytes() as f64)),
     ]);
 
@@ -438,19 +632,24 @@ pub fn run(bc: &BenchConfig, out: &Path) -> Result<Json> {
 
 /// Outcome of diffing two `BENCH_hotpath.json` trajectory points.
 pub struct CheckReport {
-    /// false = the macro rounds/sec regressed beyond the tolerance.
+    /// false = the macro rounds/sec regressed beyond the tolerance, or a
+    /// micro-kernel median moved past its variance-aware noise floor.
     pub ok: bool,
     /// Human-readable diff lines (always populated).
     pub text: String,
 }
 
 /// Diff `current` against a `previous` trajectory point: the regression
-/// gate for CI (`deahes bench --check prev.json`). The pass/fail verdict is
-/// the **macro hot-path rounds/sec** — the number the whole bench subsystem
-/// exists to defend; micro-kernel medians and syncs/sec are reported
-/// informationally (they are far noisier at smoke sizes). Comparing two
-/// points measured at different sizes (`--smoke` vs full) is meaningless
-/// and is a hard error, not a verdict.
+/// gate for CI (`deahes bench --check prev.json`). Two verdicts feed the
+/// pass/fail: the **macro hot-path rounds/sec** (flat percentage tolerance
+/// — the number the whole bench subsystem exists to defend) and the
+/// **micro-kernel medians** under a variance-aware gate — a kernel fails
+/// only when its median rises past `max(5×MAD, 25% of the previous median,
+/// 50 ns)`, so run-to-run jitter earns proportional slack instead of
+/// tripping a flat threshold. Micro entries without a recorded `mad_ns`
+/// (artifacts predating the gate) and syncs/sec stay informational.
+/// Comparing two points measured at different sizes (`--smoke` vs full) is
+/// meaningless and is a hard error, not a verdict.
 pub fn check(current: &Json, previous: &Json, max_regression_pct: f64) -> Result<CheckReport> {
     use std::fmt::Write as _;
     ensure!(
@@ -497,24 +696,45 @@ pub fn check(current: &Json, previous: &Json, max_regression_pct: f64) -> Result
             );
         }
     }
-    // Per-kernel medians, informational: name the big movers.
+    // Per-kernel medians, variance-aware: a kernel regresses only when its
+    // median rises past the noise floor max(5×MAD, 25% of the previous
+    // median, 50 ns) — proportional slack for kernels whose samples are
+    // genuinely noisy, a tight leash for stable ones, and an absolute floor
+    // so nanosecond-scale kernels never gate on scheduler jitter.
+    let mut micro_ok = true;
     if let (Some(cm), Some(pm)) = (current.get("micro").as_obj(), previous.get("micro").as_obj())
     {
         for (name, cur_entry) in cm {
+            let prev_entry = pm.get(name);
             let c = cur_entry.get("median_ns").as_f64();
-            let p = pm.get(name).and_then(|e| e.get("median_ns").as_f64());
-            if let (Some(c), Some(p)) = (c, p) {
-                if p > 0.0 && ((c - p) / p).abs() * 100.0 > max_regression_pct {
+            let p = prev_entry.and_then(|e| e.get("median_ns").as_f64());
+            let (Some(c), Some(p)) = (c, p) else { continue };
+            if p <= 0.0 {
+                continue;
+            }
+            if let Some(p_mad) = prev_entry.and_then(|e| e.get("mad_ns").as_f64()) {
+                let floor = (5.0 * p_mad).max(0.25 * p).max(50.0);
+                if c > p + floor {
+                    micro_ok = false;
                     let _ = writeln!(
                         text,
-                        "micro {name} median (informational): {p:.0}ns -> {c:.0}ns ({:+.1}%)",
-                        (c - p) / p * 100.0
+                        "micro {name} median: {p:.0}ns -> {c:.0}ns (beyond the noise floor \
+                         +{floor:.0}ns; 5*MAD = {mad5:.0}ns) REGRESSION",
+                        mad5 = 5.0 * p_mad
                     );
                 }
+            } else if ((c - p) / p).abs() * 100.0 > max_regression_pct {
+                // pre-gate artifact: no recorded MAD, stay informational
+                let _ = writeln!(
+                    text,
+                    "micro {name} median (informational, no mad_ns): {p:.0}ns -> {c:.0}ns \
+                     ({:+.1}%)",
+                    (c - p) / p * 100.0
+                );
             }
         }
     }
-    Ok(CheckReport { ok, text })
+    Ok(CheckReport { ok: ok && micro_ok, text })
 }
 
 /// One-line human summary of a bench document.
@@ -543,6 +763,27 @@ mod tests {
         let doc = run(&BenchConfig { smoke: true }, &out).unwrap();
         assert_eq!(doc.get("bench").as_str(), Some("hotpath"));
         assert!(doc.get("macro").get("speedup").as_f64().unwrap() > 0.0);
+        // every micro entry carries the MAD the check gate keys on
+        for kernel in ["sgd_step_fused", "elastic_pull", "adamw_step_fused"] {
+            assert!(
+                doc.get("micro").get(kernel).get("mad_ns").as_f64().is_some(),
+                "{kernel} missing mad_ns"
+            );
+        }
+        // the macro extension covers both remaining legacy-shaped optimizers
+        for opt in ["momentum", "adahessian"] {
+            assert!(
+                doc.get("macro_ext").get(opt).get("speedup").as_f64().unwrap() > 0.0,
+                "macro_ext.{opt}"
+            );
+        }
+        // the d-sweep emits one point per dimension with both columns
+        let points = doc.get("dsweep").get("points").as_arr().unwrap();
+        assert_eq!(points.len(), dsweep_dims(&BenchConfig { smoke: true }).len());
+        for p in points {
+            assert!(p.get("serial_steps_per_sec").as_f64().unwrap() > 0.0);
+            assert!(p.get("chunked_steps_per_sec").as_f64().unwrap() > 0.0);
+        }
         assert!(!summary(&doc).is_empty());
         let _ = std::fs::remove_file(&out);
     }
@@ -553,6 +794,22 @@ mod tests {
         let mut cfg = macro_config(&bc);
         cfg.rounds = 3;
         legacy_trial(&cfg).unwrap();
+    }
+
+    /// The emulation's per-optimizer arms drive real trials for momentum
+    /// and AdaHessian (and still refuse AdamW, which never had a legacy
+    /// three-pass shape).
+    #[test]
+    fn legacy_emulation_covers_momentum_and_adahessian() {
+        let bc = BenchConfig { smoke: true };
+        let mut cfg = macro_config(&bc);
+        cfg.rounds = 3;
+        for spec in ["momentum", "adahessian"] {
+            cfg.optimizer = Some(spec.into());
+            legacy_trial(&cfg).unwrap();
+        }
+        cfg.optimizer = Some("adamw".into());
+        assert!(legacy_trial(&cfg).is_err());
     }
 
     fn point(rps: f64, dim: f64) -> Json {
@@ -588,6 +845,51 @@ mod tests {
         let r = check(&point(80.0, 512.0), &point(100.0, 512.0), 5.0).unwrap();
         assert!(!r.ok);
         assert!(r.text.contains("REGRESSION"), "{}", r.text);
+    }
+
+    /// `point()` plus one micro kernel entry (median, optional MAD).
+    fn point_with_micro(rps: f64, median_ns: f64, mad_ns: Option<f64>) -> Json {
+        let mut kernel = vec![("median_ns", Json::num(median_ns))];
+        if let Some(m) = mad_ns {
+            kernel.push(("mad_ns", Json::num(m)));
+        }
+        Json::obj(vec![
+            ("bench", Json::str("hotpath")),
+            ("micro", Json::obj(vec![("sgd_step_fused", Json::obj(kernel))])),
+            (
+                "macro",
+                Json::obj(vec![
+                    ("dim", Json::num(512.0)),
+                    ("rounds_total", Json::num(36.0)),
+                    ("trials", Json::num(3.0)),
+                    ("hotpath", Json::obj(vec![("rounds_per_sec", Json::num(rps))])),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn micro_gate_is_variance_aware() {
+        let prev = point_with_micro(100.0, 1000.0, Some(40.0));
+        // noise floor = max(5*40, 0.25*1000, 50) = 250ns: +200 passes...
+        let r = check(&point_with_micro(100.0, 1200.0, Some(40.0)), &prev, 5.0).unwrap();
+        assert!(r.ok, "{}", r.text);
+        // ...+400 fails, and the verdict names the kernel
+        let r = check(&point_with_micro(100.0, 1400.0, Some(40.0)), &prev, 5.0).unwrap();
+        assert!(!r.ok);
+        assert!(
+            r.text.contains("sgd_step_fused") && r.text.contains("REGRESSION"),
+            "{}",
+            r.text
+        );
+        // getting FASTER never gates, no matter how far
+        let r = check(&point_with_micro(100.0, 100.0, Some(1.0)), &prev, 5.0).unwrap();
+        assert!(r.ok, "{}", r.text);
+        // entries without a recorded MAD stay informational (pre-gate artifacts)
+        let legacy_prev = point_with_micro(100.0, 1000.0, None);
+        let r = check(&point_with_micro(100.0, 9000.0, None), &legacy_prev, 5.0).unwrap();
+        assert!(r.ok, "{}", r.text);
+        assert!(r.text.contains("informational"), "{}", r.text);
     }
 
     #[test]

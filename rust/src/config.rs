@@ -115,6 +115,14 @@ pub struct ExperimentConfig {
     /// overriding the method preset's local optimizer — the only way to
     /// select `adamw(...)`. Omitted from JSON when `None`, like `policy`.
     pub optimizer: Option<String>,
+    /// Parameter-chunked parallel tier (`--par-threshold`): engage the
+    /// chunked kernels when the model dimension is at least this threshold.
+    /// `None` = scalar path everywhere. Omitted from JSON when `None`, so
+    /// existing config JSON and schedule fingerprints stay byte-identical.
+    /// Chunking never changes numerics (bit-identical by contract), so the
+    /// key is an execution knob, not a science axis — but it still
+    /// fingerprints when set, which keeps run provenance honest.
+    pub intra_parallel: Option<usize>,
     // -- engine & driver --
     pub engine: EngineKind,
     /// true: one OS thread per worker (realistic async); false: the
@@ -147,6 +155,7 @@ impl Default for ExperimentConfig {
             sync_mode: SyncMode::Central,
             policy: None,
             optimizer: None,
+            intra_parallel: None,
             engine: EngineKind::Xla { artifacts_dir: "artifacts".into(), native_opt: false },
             threaded: false,
         }
@@ -234,6 +243,9 @@ impl ExperimentConfig {
             crate::optim::OptimSpec::parse(spec)
                 .with_context(|| format!("config: bad optimizer spec '{spec}'"))?;
         }
+        if self.intra_parallel == Some(0) {
+            bail!("intra_parallel must be >= 1 (the dimension threshold at which chunked kernels engage)");
+        }
         if self.lr <= 0.0 {
             bail!("lr must be positive");
         }
@@ -305,6 +317,9 @@ impl ExperimentConfig {
         }
         if let Some(spec) = &self.optimizer {
             fields.push(("optimizer", Json::str(spec)));
+        }
+        if let Some(t) = self.intra_parallel {
+            fields.push(("intra_parallel", Json::num(t as f64)));
         }
         Json::obj(fields)
     }
@@ -404,6 +419,13 @@ impl ExperimentConfig {
                             .with_context(|| format!("config: bad policy spec '{s}'"))?,
                     )
                 }
+            },
+            intra_parallel: match j.get("intra_parallel") {
+                Json::Null => None,
+                v => Some(
+                    v.as_usize()
+                        .context("config: 'intra_parallel' must be a positive integer")?,
+                ),
             },
             engine,
             threaded: j.get("threaded").as_bool().unwrap_or(d.threaded),
@@ -505,6 +527,7 @@ mod tests {
         let text = cfg.to_json().to_string_compact();
         assert!(!text.contains("sync_mode"), "{text}");
         assert!(!text.contains("optimizer"), "{text}");
+        assert!(!text.contains("intra_parallel"), "{text}");
 
         let mut cfg = ExperimentConfig::default();
         cfg.sync_mode = SyncMode::Gossip;
@@ -616,6 +639,31 @@ mod tests {
         assert_eq!(cfg.policy, None);
         assert_eq!(cfg.sync_mode, SyncMode::Central);
         assert_eq!(cfg.optimizer, None);
+        assert_eq!(cfg.intra_parallel, None);
+    }
+
+    /// The chunked-tier threshold follows the optional-key discipline:
+    /// omitted when off, round-trips when set, rejects nonsense.
+    #[test]
+    fn intra_parallel_roundtrips_and_validates() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.intra_parallel = Some(4096);
+        let j = cfg.to_json();
+        assert!(j.to_string_compact().contains("intra_parallel"));
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.intra_parallel, Some(4096));
+        // zero threshold is meaningless (would read as "never engage"
+        // to some and "always" to others): hard error
+        cfg.intra_parallel = Some(0);
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("intra_parallel"), "{err}");
+        // non-numeric values are hard errors, not silent defaults
+        let mut j = ExperimentConfig::default().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("intra_parallel".into(), Json::str("many"));
+        }
+        let err = ExperimentConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("intra_parallel"), "{err}");
     }
 
     #[test]

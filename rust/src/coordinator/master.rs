@@ -25,6 +25,7 @@
 
 use crate::elastic::policy::{SyncContext, SyncPolicy};
 use crate::engine::Engine;
+use crate::util::par::Chunker;
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -103,6 +104,12 @@ pub struct MasterState {
     /// stays correct when `--policy` pins a different α than the run's.
     correction_floor: f64,
     snapshots: SnapshotPool,
+    /// Dispatcher for the master-half elastic fold (`absorb_gossip`).
+    /// Serial by default; [`MasterState::set_chunker`] upgrades it when the
+    /// run enables the parameter-chunked tier. Bit-identical either way
+    /// (the determinism contract in [`crate::util::par`]), so it is run
+    /// configuration, not checkpointed state.
+    chunker: Chunker,
 }
 
 impl MasterState {
@@ -116,7 +123,13 @@ impl MasterState {
             total_syncs: 0,
             correction_floor,
             snapshots: SnapshotPool::new(),
+            chunker: Chunker::serial(),
         }
+    }
+
+    /// Install the run's chunk dispatcher (see [`crate::util::par`]).
+    pub fn set_chunker(&mut self, chunker: Chunker) {
+        self.chunker = chunker;
     }
 
     /// Canonical spec of the policy serving this master.
@@ -208,14 +221,20 @@ impl MasterState {
     }
 
     /// Gossip sync mode: fold one worker's published replica into the
-    /// aggregate (the eq. 13 half via [`crate::optim::native::elastic_absorb`])
-    /// and account the sync in the per-worker stats. The eq. 12 half already
+    /// aggregate (the eq. 13 half via
+    /// [`crate::optim::native::elastic_absorb_chunked`]) and account the
+    /// sync in the per-worker stats. The eq. 12 half already
     /// ran worker-side (`native::elastic_pull` against a published master
     /// snapshot), with (h1, h2) chosen by the worker's own policy instance —
     /// the master here is a pure aggregator, so it takes the weights as
     /// reported instead of consulting its (idle) policy.
     pub fn absorb_gossip(&mut self, worker: usize, replica: &[f32], h1: f64, h2: f64) {
-        crate::optim::native::elastic_absorb(&mut self.theta, replica, h2 as f32);
+        crate::optim::native::elastic_absorb_chunked(
+            &mut self.theta,
+            replica,
+            h2 as f32,
+            &self.chunker,
+        );
         let st = &mut self.per_worker[worker];
         st.served += 1;
         st.h1_sum += h1;

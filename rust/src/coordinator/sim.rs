@@ -58,6 +58,7 @@ use crate::optim::Optimizer;
 use crate::runtime::Manifest;
 use crate::util::bits;
 use crate::util::json::Json;
+use crate::util::par::Chunker;
 use crate::util::rng::Rng;
 use crate::{log_debug, log_info};
 use anyhow::{Context, Result};
@@ -111,6 +112,20 @@ impl Setup {
         Ok(Setup { cfg: cfg.clone(), train, test, shard, theta0, optim, manifest })
     }
 
+    /// The run's chunk dispatcher for the parameter-chunked parallel tier:
+    /// [`Chunker::auto`] when `cfg.intra_parallel` is set and the model
+    /// dimension meets the threshold, serial otherwise. Either way the
+    /// kernels are bit-identical (the determinism contract in
+    /// [`crate::util::par`]), so this only ever changes speed.
+    pub fn chunker(&self) -> Chunker {
+        let dim = self.theta0.len();
+        if self.cfg.intra_parallel.is_some_and(|t| dim >= t) {
+            Chunker::auto()
+        } else {
+            Chunker::serial()
+        }
+    }
+
     /// Build an engine for `role` (must run on the calling thread for XLA).
     pub fn make_engine(&self, role: Role) -> Result<Box<dyn Engine>> {
         match &self.cfg.engine {
@@ -119,13 +134,18 @@ impl Setup {
                     Role::Worker(i) => i as u64 + 1,
                     _ => 0,
                 };
-                Ok(Box::new(QuadraticEngine::new(
+                let mut engine = Box::new(QuadraticEngine::new(
                     *dim,
                     self.cfg.seed,
                     tag,
                     *heterogeneity as f32,
                     *noise as f32,
-                )))
+                ));
+                let c = self.chunker();
+                if !c.is_serial() {
+                    engine.set_intra_parallel(c.threads());
+                }
+                Ok(engine)
             }
             EngineKind::Xla { native_opt, .. } => {
                 let m = self.manifest.as_ref().unwrap();
@@ -172,7 +192,9 @@ impl Setup {
 
     pub fn make_master(&self) -> Result<MasterState> {
         let policy = self.cfg.build_policy()?;
-        Ok(MasterState::new(self.theta0.clone(), policy, self.cfg.workers))
+        let mut master = MasterState::new(self.theta0.clone(), policy, self.cfg.workers);
+        master.set_chunker(self.chunker());
+        Ok(master)
     }
 
     pub fn make_evaluator(&self) -> Evaluator {
@@ -233,9 +255,11 @@ pub struct CheckpointHooks<'a> {
     pub every: u64,
     /// Persist one checkpoint; called from the driving thread. On the
     /// sequential driver an error aborts the run immediately (the
-    /// crash-injection tests rely on this); the threaded driver finishes
-    /// the run and reports the first error at the end, because aborting
-    /// between round barriers would deadlock the worker threads.
+    /// crash-injection tests rely on this). The threaded driver aborts at
+    /// the next barrier edge: the monitor raises a poison flag before
+    /// releasing barrier B, every worker observes it right after the
+    /// barrier and exits, and the first error is reported after the joins.
+    /// The hook is never called again after a failure.
     pub save: &'a mut dyn FnMut(RunCheckpoint) -> Result<()>,
 }
 
@@ -622,6 +646,7 @@ fn run_sequential_gossip(
     let mut workers: Vec<WorkerState> =
         (0..cfg.workers).map(|i| setup.make_worker(i)).collect();
     let mut master = setup.make_master()?;
+    let chunker = setup.chunker();
     let mut policies = make_worker_policies(cfg)?;
     let mut pull_cursors: Vec<u64> = vec![0; cfg.workers];
     let mut replica_pools: Vec<SnapshotPool> =
@@ -719,10 +744,11 @@ fn run_sequential_gossip(
             };
             let wts = policies[w].weights(&ctx);
             // Worker half (eq. 12) against the read-only shared snapshot.
-            crate::optim::native::elastic_pull(
+            crate::optim::native::elastic_pull_chunked(
                 &mut workers[w].theta,
                 &est,
                 wts.h1 as f32,
+                &chunker,
             );
             workers[w].complete_pull();
             pull_cursors[w] = stamp;
@@ -945,6 +971,11 @@ fn run_threaded_central(
         worker_states.push(st);
     }
     let barrier = Arc::new(Barrier::new(k + 1));
+    // Set by the monitor when a checkpoint save fails: every worker observes
+    // it right after the next barrier B (the one release edge where no peer
+    // can be blocked on this thread) and exits instead of starting the next
+    // round. Scoped threads borrow it directly — no Arc needed.
+    let poison = std::sync::atomic::AtomicBool::new(false);
     let (master_tx, master_rx) = mpsc::channel::<ToMaster>();
     let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
     // Worker → monitor channel carrying per-worker state snapshots at
@@ -1051,6 +1082,7 @@ fn run_threaded_central(
             let setup_ref = &*setup;
             let gossip = gossip.clone();
             let barrier = barrier.clone();
+            let poison = &poison;
             let master_tx = master_tx.clone();
             let report_tx = report_tx.clone();
             let state_tx = state_tx.clone();
@@ -1135,6 +1167,11 @@ fn run_threaded_central(
                             state_tx.send((i, snap)).ok();
                         }
                         barrier.wait(); // B: metrics sampled, go on
+                        if poison.load(std::sync::atomic::Ordering::SeqCst) {
+                            // Checkpoint save failed: the monitor is
+                            // aborting the run at this barrier edge.
+                            break;
+                        }
                     }
                     Ok((engine.perf_summary(), engine.mean_costs()))
                 })
@@ -1197,9 +1234,10 @@ fn run_threaded_central(
             if ckpt_every > 0 && (round + 1) % ckpt_every == 0 && round + 1 < rounds {
                 // Assemble the cut while every worker is parked between
                 // barriers A and B and the master has drained this round's
-                // syncs. A failure here must NOT abort mid-round (the
-                // barrier protocol would deadlock): remember the first
-                // error, keep running, report it after the joins.
+                // syncs. A failure here must not abort mid-round (the
+                // barrier protocol would deadlock): remember the error,
+                // poison the next barrier-B edge so everyone exits there,
+                // and report it after the joins.
                 let cut = (|| -> Result<RunCheckpoint> {
                     let mut worker_snaps: Vec<Json> = vec![Json::Null; k];
                     let mut engine_snaps: Vec<Json> = vec![Json::Null; k];
@@ -1237,16 +1275,25 @@ fn run_threaded_central(
                 match (cut, hooks.as_mut()) {
                     (Ok(cp), Some(h)) => {
                         if let Err(e) = (h.save)(cp) {
-                            save_err.get_or_insert(e);
+                            save_err = Some(e);
                         }
                     }
-                    (Err(e), _) => {
-                        save_err.get_or_insert(e);
-                    }
+                    (Err(e), _) => save_err = Some(e),
                     (Ok(_), None) => unreachable!("ckpt_every > 0 implies hooks"),
+                }
+                if save_err.is_some() {
+                    // Poison BEFORE releasing barrier B: the barrier edge
+                    // orders the store, so every worker sees the flag on
+                    // its post-B check and exits instead of starting the
+                    // next round. Aborting anywhere else would deadlock the
+                    // barrier protocol; aborting here is safe and prompt.
+                    poison.store(true, std::sync::atomic::Ordering::SeqCst);
                 }
             }
             barrier.wait(); // B: release workers into the next round
+            if save_err.is_some() {
+                break;
+            }
         }
 
         let mut perf = String::new();
@@ -1331,6 +1378,11 @@ fn run_threaded_gossip(
         worker_states.push(st);
     }
     let barrier = Arc::new(Barrier::new(k + 1));
+    // Set by the monitor when a checkpoint save fails: every worker observes
+    // it right after the next barrier B (the one release edge where no peer
+    // can be blocked on this thread) and exits instead of starting the next
+    // round. Scoped threads borrow it directly — no Arc needed.
+    let poison = std::sync::atomic::AtomicBool::new(false);
     let (master_tx, master_rx) = mpsc::channel::<ToMaster>();
     let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
     let (state_tx, state_rx) = mpsc::channel::<(usize, Json)>();
@@ -1423,6 +1475,7 @@ fn run_threaded_gossip(
             let setup_ref = &*setup;
             let gossip = gossip.clone();
             let barrier = barrier.clone();
+            let poison = &poison;
             let report_tx = report_tx.clone();
             let state_tx = state_tx.clone();
             let resume_engine: Option<Json> =
@@ -1441,6 +1494,10 @@ fn run_threaded_gossip(
                             .state_restore(estate)
                             .with_context(|| format!("worker {i}: restoring engine state"))?;
                     }
+                    // Per-thread dispatcher for the worker-half elastic pull
+                    // (eq. 12) — chunk-partition invariant, so the threaded
+                    // and sequential drivers stay bit-identical per worker.
+                    let chunker = setup_ref.chunker();
                     let mut pool = SnapshotPool::new();
                     for round in start_round..rounds {
                         let suppressed = failure.suppressed(seed, i, round);
@@ -1471,10 +1528,11 @@ fn run_threaded_gossip(
                                     alpha,
                                 };
                                 let wts = policy.weights(&ctx);
-                                crate::optim::native::elastic_pull(
+                                crate::optim::native::elastic_pull_chunked(
                                     &mut state.theta,
                                     &est,
                                     wts.h1 as f32,
+                                    &chunker,
                                 );
                                 state.complete_pull();
                                 cursor = stamp;
@@ -1499,6 +1557,11 @@ fn run_threaded_gossip(
                             state_tx.send((i, snap)).ok();
                         }
                         barrier.wait(); // B: fold published, go on
+                        if poison.load(std::sync::atomic::Ordering::SeqCst) {
+                            // Checkpoint save failed: the monitor is
+                            // aborting the run at this barrier edge.
+                            break;
+                        }
                     }
                     Ok((engine.perf_summary(), engine.mean_costs()))
                 })
@@ -1612,16 +1675,25 @@ fn run_threaded_gossip(
                 match (cut, hooks.as_mut()) {
                     (Ok(cp), Some(h)) => {
                         if let Err(e) = (h.save)(cp) {
-                            save_err.get_or_insert(e);
+                            save_err = Some(e);
                         }
                     }
-                    (Err(e), _) => {
-                        save_err.get_or_insert(e);
-                    }
+                    (Err(e), _) => save_err = Some(e),
                     (Ok(_), None) => unreachable!("ckpt_every > 0 implies hooks"),
+                }
+                if save_err.is_some() {
+                    // Poison BEFORE releasing barrier B: the barrier edge
+                    // orders the store, so every worker sees the flag on
+                    // its post-B check and exits instead of starting the
+                    // next round. Aborting anywhere else would deadlock the
+                    // barrier protocol; aborting here is safe and prompt.
+                    poison.store(true, std::sync::atomic::Ordering::SeqCst);
                 }
             }
             barrier.wait(); // B: release workers into the next round
+            if save_err.is_some() {
+                break;
+            }
         }
 
         let mut perf = String::new();

@@ -34,7 +34,9 @@ pub struct WorkerState {
     // hot-loop buffers (never reallocated)
     x_buf: Vec<f32>,
     y_buf: Vec<f32>,
-    /// Engine scratch arena (gradient/diagonal), reused across rounds.
+    /// Engine scratch arena (gradient/diagonal, plus the per-noise-block
+    /// loss slab the chunked fused steps write their partial sums into —
+    /// see `WorkerScratch::block_loss`), reused across rounds.
     scratch: WorkerScratch,
     /// Rademacher probe buffer (AdaHessian), refilled in place each step.
     probe: Vec<f32>,

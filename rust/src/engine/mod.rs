@@ -52,11 +52,20 @@ pub struct WorkerScratch {
     pub grad: Vec<f32>,
     /// Hutchinson Hessian-diagonal buffer (`grad_hess`).
     pub diag: Vec<f32>,
+    /// Per-noise-block partial loss sums for the chunked fused steps (one
+    /// slot per [`crate::util::par::NOISE_BLOCK`] block). Each chunk writes
+    /// the slots of its own blocks; the caller folds them in block order so
+    /// the f32 accumulation sequence is independent of the chunk partition.
+    pub block_loss: Vec<f32>,
 }
 
 impl WorkerScratch {
     pub fn new(n: usize) -> WorkerScratch {
-        WorkerScratch { grad: vec![0.0; n], diag: vec![0.0; n] }
+        WorkerScratch {
+            grad: vec![0.0; n],
+            diag: vec![0.0; n],
+            block_loss: vec![0.0; crate::util::par::n_blocks(n)],
+        }
     }
 
     pub fn param_count(&self) -> usize {
@@ -236,6 +245,13 @@ pub trait Engine {
         );
         Ok(())
     }
+
+    /// Enable the parameter-chunked parallel tier with the given worker
+    /// count (`ExperimentConfig.intra_parallel` / `--par-threshold`). The
+    /// default is a no-op: engines without chunked kernels simply keep
+    /// their scalar path, which is always bit-identical to the chunked one
+    /// by the determinism contract in [`crate::util::par`].
+    fn set_intra_parallel(&mut self, _threads: usize) {}
 }
 
 /// Builds an engine inside the consuming thread.
@@ -251,5 +267,9 @@ mod tests {
         assert_eq!(s.param_count(), 17);
         assert_eq!(s.grad.len(), 17);
         assert_eq!(s.diag.len(), 17);
+        assert_eq!(s.block_loss.len(), 1);
+        // block_loss covers the block grid, not the raw index space
+        let big = WorkerScratch::new(3 * crate::util::par::NOISE_BLOCK + 1);
+        assert_eq!(big.block_loss.len(), 4);
     }
 }

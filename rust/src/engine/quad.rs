@@ -20,27 +20,53 @@
 //!
 //! ## Hot path
 //!
-//! The fused `sgd_step`/`momentum_step` overrides compute the loss term,
-//! the gradient element and the parameter update in a single pass per
-//! index — one sweep over `theta` instead of the three (loss pass, gradient
-//! pass + allocation, apply pass) the composed path makes. When the engine
-//! is noise-free the loop body is pure closed-form arithmetic over parallel
-//! slices, which LLVM auto-vectorizes. Fusion is **bit-identical** to the
-//! composed `grad` + update path: per-index expressions are evaluated in
-//! the same order with the same operand grouping, the loss accumulates in
-//! index order exactly like `exact_loss`, and the noise RNG is drawn once
-//! per index in the same sequence. The `noise == 0` fast path (no RNG in
-//! the loop body) is taken by the composed `grad`/`grad_hess` AND the
-//! fused steps alike, so the two stay bit-identical in both regimes.
-//! Pinned by `tests/kernel_equivalence.rs`.
-//! `adahessian_step` keeps the default composed path: its gradient noise
-//! stream must be fully drawn before the diagonal noise stream starts, so
-//! a single interleaved pass would reorder RNG draws and change bits.
+//! Every fused `*_step` override computes the loss term, the gradient
+//! element and the parameter update in a single pass per index — one sweep
+//! over `theta` instead of the three (loss pass, gradient pass + allocation,
+//! apply pass) the composed path makes. When the engine is noise-free the
+//! loop body is pure closed-form arithmetic over parallel slices, which
+//! LLVM auto-vectorizes.
+//!
+//! ## Block-keyed noise streams (the determinism contract)
+//!
+//! Randomness is organized on the [`NOISE_BLOCK`] grid so the chunked
+//! parallel tier (`set_intra_parallel` / `--par-threshold`) is bit-identical
+//! to the scalar path for **any** chunk count:
+//!
+//!   * each noise pass draws exactly one `key` (`next_u64`) from the
+//!     engine's persistent stream — gradient passes one key, `grad_hess`
+//!     and the fused AdaHessian step a gradient key then a diagonal key;
+//!     noise-free engines draw nothing;
+//!   * the noise for block `b` comes from a fresh
+//!     [`Rng::split_stream`]`(key, tag, b)` generator, consumed in index
+//!     order within the block and discarded after it — no Box-Muller spare
+//!     or rejection state ever crosses a block boundary;
+//!   * the f32 loss reduction is blocked the same way: per-block partial
+//!     sums (written to `WorkerScratch::block_loss` by the fused steps)
+//!     folded in block order, so the accumulation sequence is independent
+//!     of the partition.
+//!
+//! Chunk boundaries always fall on block boundaries
+//! ([`crate::util::par::Chunker::plan`]), so every chunk rebuilds exactly
+//! the generators of its own blocks. Fusion and chunking are both
+//! **bit-identical** to the composed `grad`/`grad_hess` + update path:
+//! per-index expressions are evaluated in the same order with the same
+//! operand grouping (the AdaHessian/AdamW moment updates mirror
+//! `optim::native` verbatim), and interleaving the gradient and diagonal
+//! draws per index is safe because they come from independent per-block
+//! generators. Pinned by `tests/kernel_equivalence.rs` and
+//! `tests/chunk_partition.rs`.
 
 use super::{BatchRef, Engine, WorkerScratch};
 use crate::optim::native;
+use crate::util::par::{self, Chunker, SendPtr, NOISE_BLOCK};
 use crate::util::rng::Rng;
 use anyhow::Result;
+
+/// Domain tag of the per-block gradient-noise streams.
+const TAG_GRAD: u64 = 0x6AD0;
+/// Domain tag of the per-block Hessian-diagonal-noise streams.
+const TAG_DIAG: u64 = 0xD1A6;
 
 pub struct QuadraticEngine {
     n: usize,
@@ -53,6 +79,8 @@ pub struct QuadraticEngine {
     /// Gradient noise scale (minibatch stochasticity).
     noise: f32,
     rng: Rng,
+    /// Chunk plan for the parameter-chunked tier (serial by default).
+    chunker: Chunker,
     // AdaHessian hyperparams (mirror the artifact-baked values).
     beta1: f32,
     beta2: f32,
@@ -83,6 +111,7 @@ impl QuadraticEngine {
             offset,
             noise,
             rng: Rng::new(seed).derive(0xC0FFEE + worker_tag),
+            chunker: Chunker::serial(),
             beta1: 0.9,
             beta2: 0.999,
             eps: 1e-8,
@@ -90,16 +119,21 @@ impl QuadraticEngine {
         }
     }
 
-    /// The exact loss against this engine's (offset) target.
+    /// The exact loss against this engine's (offset) target. Accumulated in
+    /// per-[`NOISE_BLOCK`] partial sums folded in block order — the same
+    /// sequence of f32 additions the chunked fused steps produce, and (for
+    /// `n <= NOISE_BLOCK`, i.e. a single block) the plain index-order sum.
     pub fn exact_loss(&self, theta: &[f32]) -> f32 {
-        theta
-            .iter()
-            .enumerate()
-            .map(|(i, &t)| {
-                let d = t - (self.target[i] + self.offset[i]);
-                0.5 * self.h[i] * d * d
-            })
-            .sum()
+        let mut total = 0.0f32;
+        for bstart in (0..theta.len()).step_by(NOISE_BLOCK) {
+            let bend = (bstart + NOISE_BLOCK).min(theta.len());
+            let mut s = 0.0f32;
+            for (i, &t) in theta[bstart..bend].iter().enumerate() {
+                s += self.loss_at(t, bstart + i);
+            }
+            total += s;
+        }
+        total
     }
 
     /// The global (offset-free) loss — what the master is evaluated on.
@@ -119,18 +153,10 @@ impl QuadraticEngine {
     }
 
     /// One noiseless gradient element (the `noise == 0` fast path; shared
-    /// operand grouping with [`QuadraticEngine::grad_at`]).
+    /// operand grouping with the noisy fused loops).
     #[inline]
     fn grad_exact_at(&self, theta_i: f32, i: usize) -> f32 {
         self.h[i] * (theta_i - self.target[i] - self.offset[i])
-    }
-
-    /// One gradient element with minibatch noise, exactly as the non-fused
-    /// `grad` computes it (the noise draw advances the shared stream).
-    #[inline]
-    fn grad_at(&mut self, theta_i: f32, i: usize) -> f32 {
-        self.h[i] * (theta_i - self.target[i] - self.offset[i])
-            + self.noise * self.rng.normal_f32(0.0, 1.0)
     }
 
     /// The loss term of index `i`, exactly as `exact_loss` computes it.
@@ -138,6 +164,185 @@ impl QuadraticEngine {
     fn loss_at(&self, theta_i: f32, i: usize) -> f32 {
         let d = theta_i - (self.target[i] + self.offset[i]);
         0.5 * self.h[i] * d * d
+    }
+
+    /// The fresh noise generator of the block starting at `bstart`.
+    #[inline]
+    fn block_rng(key: u64, tag: u64, bstart: usize) -> Rng {
+        Rng::split_stream(key, tag, (bstart / NOISE_BLOCK) as u64)
+    }
+
+    /// Draw this pass's noise key, advancing the persistent stream — or
+    /// `None` on the noise-free fast path, which must draw nothing so both
+    /// regimes keep the composed and fused paths aligned.
+    #[inline]
+    fn pass_key(&mut self) -> Option<u64> {
+        (self.noise != 0.0).then(|| self.rng.next_u64())
+    }
+
+    /// Fused SGD body for one chunk `[start, end)` (block-aligned start).
+    fn sgd_chunk(
+        &self,
+        chunk: &mut [f32],
+        start: usize,
+        end: usize,
+        key: Option<u64>,
+        lr: f32,
+        block_loss: &mut [f32],
+    ) {
+        for (slot, bstart) in (start..end).step_by(NOISE_BLOCK).enumerate() {
+            let bend = (bstart + NOISE_BLOCK).min(end);
+            let mut s = 0.0f32;
+            match key {
+                None => {
+                    // Pure closed form: no RNG in the loop body.
+                    for i in bstart..bend {
+                        let t = &mut chunk[i - start];
+                        s += self.loss_at(*t, i);
+                        let g = self.grad_exact_at(*t, i);
+                        *t -= lr * g;
+                    }
+                }
+                Some(k) => {
+                    let mut nrng = Self::block_rng(k, TAG_GRAD, bstart);
+                    for i in bstart..bend {
+                        let t = &mut chunk[i - start];
+                        s += self.loss_at(*t, i);
+                        let g = self.grad_exact_at(*t, i)
+                            + self.noise * nrng.normal_f32(0.0, 1.0);
+                        *t -= lr * g;
+                    }
+                }
+            }
+            block_loss[slot] = s;
+        }
+    }
+
+    /// Fused momentum body for one chunk.
+    fn momentum_chunk(
+        &self,
+        chunk: &mut [f32],
+        buf: &mut [f32],
+        start: usize,
+        end: usize,
+        key: Option<u64>,
+        lr: f32,
+        block_loss: &mut [f32],
+    ) {
+        let mu = self.momentum;
+        for (slot, bstart) in (start..end).step_by(NOISE_BLOCK).enumerate() {
+            let bend = (bstart + NOISE_BLOCK).min(end);
+            let mut s = 0.0f32;
+            let mut nrng = key.map(|k| Self::block_rng(k, TAG_GRAD, bstart));
+            for i in bstart..bend {
+                let j = i - start;
+                s += self.loss_at(chunk[j], i);
+                let g = match &mut nrng {
+                    None => self.grad_exact_at(chunk[j], i),
+                    Some(r) => {
+                        self.grad_exact_at(chunk[j], i) + self.noise * r.normal_f32(0.0, 1.0)
+                    }
+                };
+                buf[j] = mu * buf[j] + g;
+                chunk[j] -= lr * buf[j];
+            }
+            block_loss[slot] = s;
+        }
+    }
+
+    /// Fused AdaHessian body for one chunk: per index, the gradient draw
+    /// (from the block's TAG_GRAD stream) then the diagonal draw (from its
+    /// independent TAG_DIAG stream), then the m/v/θ update copied verbatim
+    /// from [`native::adahessian_step`].
+    #[allow(clippy::too_many_arguments)]
+    fn adahessian_chunk(
+        &self,
+        chunk: &mut [f32],
+        z: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        start: usize,
+        end: usize,
+        keys: Option<(u64, u64)>,
+        t: u64,
+        lr: f32,
+        block_loss: &mut [f32],
+    ) {
+        let bc1 = 1.0 - self.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        for (slot, bstart) in (start..end).step_by(NOISE_BLOCK).enumerate() {
+            let bend = (bstart + NOISE_BLOCK).min(end);
+            let mut s = 0.0f32;
+            let mut rngs =
+                keys.map(|(gk, dk)| {
+                    (Self::block_rng(gk, TAG_GRAD, bstart), Self::block_rng(dk, TAG_DIAG, bstart))
+                });
+            for i in bstart..bend {
+                let j = i - start;
+                s += self.loss_at(chunk[j], i);
+                let (g, d) = match &mut rngs {
+                    None => (self.grad_exact_at(chunk[j], i), z[i] * self.h[i] * z[i]),
+                    Some((grng, drng)) => (
+                        self.grad_exact_at(chunk[j], i) + self.noise * grng.normal_f32(0.0, 1.0),
+                        z[i] * self.h[i] * z[i] + self.noise * drng.normal_f32(0.0, 0.5),
+                    ),
+                };
+                m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * g;
+                v[j] = self.beta2 * v[j] + (1.0 - self.beta2) * d * d;
+                let mh = m[j] / bc1;
+                let vh = v[j] / bc2;
+                chunk[j] -= lr * mh / (vh.sqrt() + self.eps);
+            }
+            block_loss[slot] = s;
+        }
+    }
+
+    /// Fused AdamW body for one chunk (update copied verbatim from
+    /// [`native::adamw_step`]).
+    #[allow(clippy::too_many_arguments)]
+    fn adamw_chunk(
+        &self,
+        chunk: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        start: usize,
+        end: usize,
+        key: Option<u64>,
+        t: u64,
+        hp: (f32, f32, f32, f32, f32),
+        block_loss: &mut [f32],
+    ) {
+        let (lr, beta1, beta2, eps, wd) = hp;
+        let bc1 = 1.0 - beta1.powi(t as i32);
+        let bc2 = 1.0 - beta2.powi(t as i32);
+        for (slot, bstart) in (start..end).step_by(NOISE_BLOCK).enumerate() {
+            let bend = (bstart + NOISE_BLOCK).min(end);
+            let mut s = 0.0f32;
+            let mut nrng = key.map(|k| Self::block_rng(k, TAG_GRAD, bstart));
+            for i in bstart..bend {
+                let j = i - start;
+                s += self.loss_at(chunk[j], i);
+                let g = match &mut nrng {
+                    None => self.grad_exact_at(chunk[j], i),
+                    Some(r) => {
+                        self.grad_exact_at(chunk[j], i) + self.noise * r.normal_f32(0.0, 1.0)
+                    }
+                };
+                m[j] = beta1 * m[j] + (1.0 - beta1) * g;
+                v[j] = beta2 * v[j] + (1.0 - beta2) * g * g;
+                let mh = m[j] / bc1;
+                let vh = v[j] / bc2;
+                chunk[j] -= lr * (mh / (vh.sqrt() + eps) + wd * chunk[j]);
+            }
+            block_loss[slot] = s;
+        }
+    }
+
+    /// Fold the per-block partial loss sums in block order (the same f32
+    /// addition sequence as [`QuadraticEngine::exact_loss`]).
+    #[inline]
+    fn fold_block_loss(scratch: &WorkerScratch, nb: usize) -> f32 {
+        scratch.block_loss[..nb].iter().sum()
     }
 }
 
@@ -154,16 +359,28 @@ impl Engine for QuadraticEngine {
         1
     }
 
+    fn set_intra_parallel(&mut self, threads: usize) {
+        self.chunker = Chunker::new(threads);
+    }
+
     fn grad(&mut self, theta: &[f32], _batch: BatchRef<'_>, out: &mut [f32]) -> Result<f32> {
         debug_assert_eq!(out.len(), self.n);
         let loss = self.exact_loss(theta);
-        if self.noise == 0.0 {
-            for i in 0..self.n {
-                out[i] = self.grad_exact_at(theta[i], i);
+        match self.pass_key() {
+            None => {
+                for i in 0..self.n {
+                    out[i] = self.grad_exact_at(theta[i], i);
+                }
             }
-        } else {
-            for i in 0..self.n {
-                out[i] = self.grad_at(theta[i], i);
+            Some(key) => {
+                for bstart in (0..self.n).step_by(NOISE_BLOCK) {
+                    let bend = (bstart + NOISE_BLOCK).min(self.n);
+                    let mut nrng = Self::block_rng(key, TAG_GRAD, bstart);
+                    for i in bstart..bend {
+                        out[i] = self.grad_exact_at(theta[i], i)
+                            + self.noise * nrng.normal_f32(0.0, 1.0);
+                    }
+                }
             }
         }
         Ok(loss)
@@ -179,44 +396,47 @@ impl Engine for QuadraticEngine {
     ) -> Result<f32> {
         let loss = self.grad(theta, batch, out_g)?;
         // Hutchinson with diagonal H is exact: z ⊙ (Hz) = h (plus noise).
-        if self.noise == 0.0 {
-            for i in 0..self.n {
-                out_d[i] = z[i] * self.h[i] * z[i];
+        match self.pass_key() {
+            None => {
+                for i in 0..self.n {
+                    out_d[i] = z[i] * self.h[i] * z[i];
+                }
             }
-        } else {
-            for i in 0..self.n {
-                let exact = z[i] * self.h[i] * z[i];
-                out_d[i] = exact + self.noise * self.rng.normal_f32(0.0, 0.5);
+            Some(key) => {
+                for bstart in (0..self.n).step_by(NOISE_BLOCK) {
+                    let bend = (bstart + NOISE_BLOCK).min(self.n);
+                    let mut nrng = Self::block_rng(key, TAG_DIAG, bstart);
+                    for i in bstart..bend {
+                        let exact = z[i] * self.h[i] * z[i];
+                        out_d[i] = exact + self.noise * nrng.normal_f32(0.0, 0.5);
+                    }
+                }
             }
         }
         Ok(loss)
     }
 
-    /// Fused loss+gradient+apply: one pass over `theta` instead of three.
+    /// Fused loss+gradient+apply: one pass over `theta` instead of three,
+    /// chunk-dispatched across the configured [`Chunker`].
     fn sgd_step(
         &mut self,
         theta: &mut [f32],
         _batch: BatchRef<'_>,
         lr: f32,
-        _scratch: &mut WorkerScratch,
+        scratch: &mut WorkerScratch,
     ) -> Result<f32> {
         debug_assert_eq!(theta.len(), self.n);
-        let mut loss = 0.0f32;
-        if self.noise == 0.0 {
-            // Pure closed form: no RNG in the loop body, auto-vectorizable.
-            for (i, t) in theta.iter_mut().enumerate() {
-                loss += self.loss_at(*t, i);
-                let g = self.grad_exact_at(*t, i);
-                *t -= lr * g;
-            }
-        } else {
-            for i in 0..self.n {
-                loss += self.loss_at(theta[i], i);
-                let g = self.grad_at(theta[i], i);
-                theta[i] -= lr * g;
-            }
-        }
-        Ok(loss)
+        let key = self.pass_key();
+        let nb = par::n_blocks(self.n);
+        let this = &*self;
+        let tp = SendPtr::new(theta);
+        let lp = SendPtr::new(&mut scratch.block_loss[..nb]);
+        this.chunker.dispatch(this.n, &|start, end| {
+            let chunk = unsafe { tp.slice(start, end) };
+            let loss = unsafe { lp.slice(start / NOISE_BLOCK, par::n_blocks(end)) };
+            this.sgd_chunk(chunk, start, end, key, lr, loss);
+        });
+        Ok(Self::fold_block_loss(scratch, nb))
     }
 
     /// Fused loss+gradient+momentum apply: one pass over (theta, buf).
@@ -226,41 +446,105 @@ impl Engine for QuadraticEngine {
         _batch: BatchRef<'_>,
         buf: &mut [f32],
         lr: f32,
-        _scratch: &mut WorkerScratch,
+        scratch: &mut WorkerScratch,
     ) -> Result<f32> {
         debug_assert_eq!(theta.len(), self.n);
         debug_assert_eq!(buf.len(), self.n);
-        let mu = self.momentum;
-        let mut loss = 0.0f32;
-        if self.noise == 0.0 {
-            for i in 0..self.n {
-                loss += self.loss_at(theta[i], i);
-                let g = self.grad_exact_at(theta[i], i);
-                buf[i] = mu * buf[i] + g;
-                theta[i] -= lr * buf[i];
-            }
-        } else {
-            for i in 0..self.n {
-                loss += self.loss_at(theta[i], i);
-                let g = self.grad_at(theta[i], i);
-                buf[i] = mu * buf[i] + g;
-                theta[i] -= lr * buf[i];
-            }
-        }
-        Ok(loss)
+        let key = self.pass_key();
+        let nb = par::n_blocks(self.n);
+        let this = &*self;
+        let tp = SendPtr::new(theta);
+        let bp = SendPtr::new(buf);
+        let lp = SendPtr::new(&mut scratch.block_loss[..nb]);
+        this.chunker.dispatch(this.n, &|start, end| {
+            let chunk = unsafe { tp.slice(start, end) };
+            let b = unsafe { bp.slice(start, end) };
+            let loss = unsafe { lp.slice(start / NOISE_BLOCK, par::n_blocks(end)) };
+            this.momentum_chunk(chunk, b, start, end, key, lr, loss);
+        });
+        Ok(Self::fold_block_loss(scratch, nb))
     }
 
-    // adahessian_step: default composed impl (grad_hess + adahessian).
-    // Interleaving the two noise streams into one pass would reorder RNG
-    // draws and break bit-determinism with the pre-fusion path.
+    /// Fused loss+gradient+diag+AdaHessian apply in a single pass. The
+    /// gradient key is drawn before the diagonal key — the same persistent-
+    /// stream order as the composed `grad_hess` path — and the per-index
+    /// interleave of the two draws is bit-safe because each block's
+    /// gradient and diagonal generators are independent.
+    fn adahessian_step(
+        &mut self,
+        theta: &mut [f32],
+        _batch: BatchRef<'_>,
+        z: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        t: u64,
+        lr: f32,
+        scratch: &mut WorkerScratch,
+    ) -> Result<f32> {
+        debug_assert_eq!(theta.len(), self.n);
+        let keys = if self.noise != 0.0 {
+            let gk = self.rng.next_u64();
+            let dk = self.rng.next_u64();
+            Some((gk, dk))
+        } else {
+            None
+        };
+        let nb = par::n_blocks(self.n);
+        let this = &*self;
+        let tp = SendPtr::new(theta);
+        let mp = SendPtr::new(m);
+        let vp = SendPtr::new(v);
+        let lp = SendPtr::new(&mut scratch.block_loss[..nb]);
+        this.chunker.dispatch(this.n, &|start, end| {
+            let chunk = unsafe { tp.slice(start, end) };
+            let mm = unsafe { mp.slice(start, end) };
+            let vv = unsafe { vp.slice(start, end) };
+            let loss = unsafe { lp.slice(start / NOISE_BLOCK, par::n_blocks(end)) };
+            this.adahessian_chunk(chunk, z, mm, vv, start, end, keys, t, lr, loss);
+        });
+        Ok(Self::fold_block_loss(scratch, nb))
+    }
+
+    /// Fused loss+gradient+AdamW apply in a single pass.
+    fn adamw_step(
+        &mut self,
+        theta: &mut [f32],
+        _batch: BatchRef<'_>,
+        m: &mut [f32],
+        v: &mut [f32],
+        t: u64,
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        wd: f32,
+        scratch: &mut WorkerScratch,
+    ) -> Result<f32> {
+        debug_assert_eq!(theta.len(), self.n);
+        let key = self.pass_key();
+        let nb = par::n_blocks(self.n);
+        let this = &*self;
+        let tp = SendPtr::new(theta);
+        let mp = SendPtr::new(m);
+        let vp = SendPtr::new(v);
+        let lp = SendPtr::new(&mut scratch.block_loss[..nb]);
+        this.chunker.dispatch(this.n, &|start, end| {
+            let chunk = unsafe { tp.slice(start, end) };
+            let mm = unsafe { mp.slice(start, end) };
+            let vv = unsafe { vp.slice(start, end) };
+            let loss = unsafe { lp.slice(start / NOISE_BLOCK, par::n_blocks(end)) };
+            this.adamw_chunk(chunk, mm, vv, start, end, key, t, (lr, beta1, beta2, eps, wd), loss);
+        });
+        Ok(Self::fold_block_loss(scratch, nb))
+    }
 
     fn sgd(&mut self, theta: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        native::sgd_step(theta, g, lr);
+        native::sgd_step_chunked(theta, g, lr, &self.chunker);
         Ok(())
     }
 
     fn momentum(&mut self, theta: &mut [f32], g: &[f32], buf: &mut [f32], lr: f32) -> Result<()> {
-        native::momentum_step(theta, g, buf, lr, self.momentum);
+        native::momentum_step_chunked(theta, g, buf, lr, self.momentum, &self.chunker);
         Ok(())
     }
 
@@ -274,12 +558,24 @@ impl Engine for QuadraticEngine {
         t: u64,
         lr: f32,
     ) -> Result<()> {
-        native::adahessian_step(theta, g, d, m, v, t, lr, self.beta1, self.beta2, self.eps);
+        native::adahessian_step_chunked(
+            theta,
+            g,
+            d,
+            m,
+            v,
+            t,
+            lr,
+            self.beta1,
+            self.beta2,
+            self.eps,
+            &self.chunker,
+        );
         Ok(())
     }
 
     fn elastic(&mut self, tw: &mut [f32], tm: &mut [f32], h1: f32, h2: f32) -> Result<()> {
-        native::elastic_step(tw, tm, h1, h2);
+        native::elastic_step_chunked(tw, tm, h1, h2, &self.chunker);
         Ok(())
     }
 
@@ -289,7 +585,9 @@ impl Engine for QuadraticEngine {
     }
 
     /// The gradient-noise RNG is this engine's only mutable state; the
-    /// spectrum/target/offset are pure functions of the constructor args.
+    /// spectrum/target/offset are pure functions of the constructor args,
+    /// the per-block noise generators are ephemeral (re-derived from keys
+    /// drawn off this stream), and the chunk plan never affects numerics.
     fn state_snapshot(&self) -> crate::util::json::Json {
         crate::util::json::Json::obj(vec![("rng", self.rng.state_json())])
     }
@@ -425,5 +723,151 @@ mod tests {
         let (acc_bad, loss_bad) = e.eval(&bad, empty_batch()).unwrap();
         assert!(loss_good < loss_bad);
         assert!(acc_good > acc_bad);
+    }
+
+    /// The tentpole contract at the engine level: every fused step produces
+    /// the exact same bits under any chunk plan — multi-block `n` with a
+    /// ragged tail, both noise regimes, several thread counts. Without the
+    /// `par` feature the dispatch runs the same chunk plan sequentially, so
+    /// this pins the partition math in tier-1 runs too.
+    #[test]
+    fn chunked_fused_steps_are_bit_identical_to_serial() {
+        let n = 2 * NOISE_BLOCK + 52; // 3 blocks, last one ragged
+        let assert_bits = |a: &[f32], b: &[f32], what: &str| {
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+            }
+        };
+        for noise in [0.0f32, 0.05] {
+            for threads in [2usize, 3, 5, 8] {
+                let mut ser = QuadraticEngine::new(n, 21, 1, 0.3, noise);
+                let mut par_e = QuadraticEngine::new(n, 21, 1, 0.3, noise);
+                par_e.set_intra_parallel(threads);
+                let mut scratch_s = WorkerScratch::new(n);
+                let mut scratch_p = WorkerScratch::new(n);
+                let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.311).cos()).collect();
+                let z: Vec<f32> =
+                    (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+
+                // sgd
+                let (mut ta, mut tb) = (init.clone(), init.clone());
+                for _ in 0..3 {
+                    let la = ser.sgd_step(&mut ta, empty_batch(), 0.03, &mut scratch_s).unwrap();
+                    let lb =
+                        par_e.sgd_step(&mut tb, empty_batch(), 0.03, &mut scratch_p).unwrap();
+                    assert_eq!(la.to_bits(), lb.to_bits(), "sgd loss");
+                }
+                assert_bits(&ta, &tb, "sgd theta");
+
+                // momentum
+                let (mut ta, mut tb) = (init.clone(), init.clone());
+                let (mut ba, mut bb) = (vec![0.0; n], vec![0.0; n]);
+                for _ in 0..3 {
+                    let la = ser
+                        .momentum_step(&mut ta, empty_batch(), &mut ba, 0.02, &mut scratch_s)
+                        .unwrap();
+                    let lb = par_e
+                        .momentum_step(&mut tb, empty_batch(), &mut bb, 0.02, &mut scratch_p)
+                        .unwrap();
+                    assert_eq!(la.to_bits(), lb.to_bits(), "momentum loss");
+                }
+                assert_bits(&ta, &tb, "momentum theta");
+                assert_bits(&ba, &bb, "momentum buf");
+
+                // adahessian
+                let (mut ta, mut tb) = (init.clone(), init.clone());
+                let (mut ma, mut mb) = (vec![0.0; n], vec![0.0; n]);
+                let (mut va, mut vb) = (vec![0.0; n], vec![0.0; n]);
+                for t in 1..=3 {
+                    let la = ser
+                        .adahessian_step(
+                            &mut ta,
+                            empty_batch(),
+                            &z,
+                            &mut ma,
+                            &mut va,
+                            t,
+                            0.02,
+                            &mut scratch_s,
+                        )
+                        .unwrap();
+                    let lb = par_e
+                        .adahessian_step(
+                            &mut tb,
+                            empty_batch(),
+                            &z,
+                            &mut mb,
+                            &mut vb,
+                            t,
+                            0.02,
+                            &mut scratch_p,
+                        )
+                        .unwrap();
+                    assert_eq!(la.to_bits(), lb.to_bits(), "adahessian loss");
+                }
+                assert_bits(&ta, &tb, "adahessian theta");
+                assert_bits(&ma, &mb, "adahessian m");
+                assert_bits(&va, &vb, "adahessian v");
+
+                // adamw
+                let (mut ta, mut tb) = (init.clone(), init.clone());
+                let (mut ma, mut mb) = (vec![0.0; n], vec![0.0; n]);
+                let (mut va, mut vb) = (vec![0.0; n], vec![0.0; n]);
+                for t in 1..=3 {
+                    let la = ser
+                        .adamw_step(
+                            &mut ta,
+                            empty_batch(),
+                            &mut ma,
+                            &mut va,
+                            t,
+                            0.02,
+                            0.9,
+                            0.999,
+                            1e-8,
+                            0.01,
+                            &mut scratch_s,
+                        )
+                        .unwrap();
+                    let lb = par_e
+                        .adamw_step(
+                            &mut tb,
+                            empty_batch(),
+                            &mut mb,
+                            &mut vb,
+                            t,
+                            0.02,
+                            0.9,
+                            0.999,
+                            1e-8,
+                            0.01,
+                            &mut scratch_p,
+                        )
+                        .unwrap();
+                    assert_eq!(la.to_bits(), lb.to_bits(), "adamw loss");
+                }
+                assert_bits(&ta, &tb, "adamw theta");
+                assert_bits(&ma, &mb, "adamw m");
+                assert_bits(&va, &vb, "adamw v");
+            }
+        }
+    }
+
+    /// The fused chunked loss is the same blocked fold `exact_loss` makes,
+    /// so loss values agree bitwise across every partition.
+    #[test]
+    fn blocked_loss_matches_exact_loss_across_block_boundary() {
+        let n = NOISE_BLOCK + 37;
+        let mut e = QuadraticEngine::new(n, 9, 0, 0.0, 0.0);
+        let mut scratch = WorkerScratch::new(n);
+        let theta: Vec<f32> = (0..n).map(|i| (i as f32 * 0.17).sin()).collect();
+        let expected = e.exact_loss(&theta);
+        let mut stepped = theta.clone();
+        // lr = 0 keeps theta unchanged: the fused loss is the pre-step loss
+        let fused = e.sgd_step(&mut stepped, empty_batch(), 0.0, &mut scratch).unwrap();
+        assert_eq!(fused.to_bits(), expected.to_bits());
+        for (a, b) in theta.iter().zip(&stepped) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

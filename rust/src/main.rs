@@ -149,6 +149,12 @@ fn experiment_cli(name: &str, about: &str) -> Cli {
              against published snapshots; master aggregates at round end)",
         )
         .opt("engine", "xla", "xla|quad")
+        .opt(
+            "par-threshold",
+            "",
+            "enable the parameter-chunked parallel kernels when the model dimension is \
+             >= this (bit-identical to the scalar path; empty = off)",
+        )
         .opt("artifacts", "artifacts", "artifacts directory (xla engine)")
         .opt("quad-dim", "64", "problem dimension (quad engine)")
         .opt("quad-het", "0.2", "worker heterogeneity (quad engine)")
@@ -301,6 +307,13 @@ fn config_from_args(a: &Args) -> Result<ExperimentConfig> {
             Some(s) => {
                 Some(deahes::optim::OptimSpec::canonical(s).context("bad --optimizer spec")?)
             }
+            None => None,
+        },
+        intra_parallel: match a.opt_nonempty("par-threshold") {
+            Some(s) => Some(
+                s.parse::<usize>()
+                    .with_context(|| format!("bad --par-threshold '{s}' (want a dimension)"))?,
+            ),
             None => None,
         },
         engine,

@@ -133,6 +133,161 @@ pub fn elastic_absorb(tm: &mut [f32], tw: &[f32], h2: f32) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Parameter-chunked variants (the intra-trial parallel tier).
+//
+// Each `*_chunked` kernel partitions every buffer identically on the
+// NOISE_BLOCK grid and runs the scalar kernel above on each sub-slice. All
+// of these updates are element-wise with coefficients that depend only on
+// scalars (lr, mu, betas, t), so ANY partition is trivially bit-identical
+// to the single full-slice pass — `tests/chunk_partition.rs` pins that for
+// arbitrary chunk counts. With a serial chunker the dispatch collapses to
+// one inline call: same code path, zero overhead, zero allocation.
+// ---------------------------------------------------------------------------
+
+use crate::util::par::{Chunker, SendPtr};
+
+/// Chunked [`sgd_step`].
+pub fn sgd_step_chunked(theta: &mut [f32], g: &[f32], lr: f32, chunker: &Chunker) {
+    debug_assert_eq!(theta.len(), g.len());
+    let n = theta.len();
+    let tp = SendPtr::new(theta);
+    chunker.dispatch(n, &|start, end| {
+        sgd_step(unsafe { tp.slice(start, end) }, &g[start..end], lr);
+    });
+}
+
+/// Chunked [`momentum_step`].
+pub fn momentum_step_chunked(
+    theta: &mut [f32],
+    g: &[f32],
+    buf: &mut [f32],
+    lr: f32,
+    mu: f32,
+    chunker: &Chunker,
+) {
+    debug_assert_eq!(theta.len(), g.len());
+    debug_assert_eq!(theta.len(), buf.len());
+    let n = theta.len();
+    let tp = SendPtr::new(theta);
+    let bp = SendPtr::new(buf);
+    chunker.dispatch(n, &|start, end| {
+        momentum_step(
+            unsafe { tp.slice(start, end) },
+            &g[start..end],
+            unsafe { bp.slice(start, end) },
+            lr,
+            mu,
+        );
+    });
+}
+
+/// Chunked [`adahessian_step`]. Sub-slicing is sound because the bias
+/// corrections depend only on `t`, never on position.
+#[allow(clippy::too_many_arguments)]
+pub fn adahessian_step_chunked(
+    theta: &mut [f32],
+    g: &[f32],
+    d: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: u64,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    chunker: &Chunker,
+) {
+    debug_assert_eq!(theta.len(), g.len());
+    debug_assert_eq!(theta.len(), d.len());
+    let n = theta.len();
+    let tp = SendPtr::new(theta);
+    let mp = SendPtr::new(m);
+    let vp = SendPtr::new(v);
+    chunker.dispatch(n, &|start, end| {
+        adahessian_step(
+            unsafe { tp.slice(start, end) },
+            &g[start..end],
+            &d[start..end],
+            unsafe { mp.slice(start, end) },
+            unsafe { vp.slice(start, end) },
+            t,
+            lr,
+            beta1,
+            beta2,
+            eps,
+        );
+    });
+}
+
+/// Chunked [`adamw_step`].
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_step_chunked(
+    theta: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: u64,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    chunker: &Chunker,
+) {
+    debug_assert_eq!(theta.len(), g.len());
+    let n = theta.len();
+    let tp = SendPtr::new(theta);
+    let mp = SendPtr::new(m);
+    let vp = SendPtr::new(v);
+    chunker.dispatch(n, &|start, end| {
+        adamw_step(
+            unsafe { tp.slice(start, end) },
+            &g[start..end],
+            unsafe { mp.slice(start, end) },
+            unsafe { vp.slice(start, end) },
+            t,
+            lr,
+            beta1,
+            beta2,
+            eps,
+            weight_decay,
+        );
+    });
+}
+
+/// Chunked [`elastic_step`] (both halves in one pass, old-diff semantics
+/// preserved per element).
+pub fn elastic_step_chunked(tw: &mut [f32], tm: &mut [f32], h1: f32, h2: f32, chunker: &Chunker) {
+    debug_assert_eq!(tw.len(), tm.len());
+    let n = tw.len();
+    let wp = SendPtr::new(tw);
+    let mp = SendPtr::new(tm);
+    chunker.dispatch(n, &|start, end| {
+        elastic_step(unsafe { wp.slice(start, end) }, unsafe { mp.slice(start, end) }, h1, h2);
+    });
+}
+
+/// Chunked [`elastic_pull`].
+pub fn elastic_pull_chunked(tw: &mut [f32], tm: &[f32], h1: f32, chunker: &Chunker) {
+    debug_assert_eq!(tw.len(), tm.len());
+    let n = tw.len();
+    let wp = SendPtr::new(tw);
+    chunker.dispatch(n, &|start, end| {
+        elastic_pull(unsafe { wp.slice(start, end) }, &tm[start..end], h1);
+    });
+}
+
+/// Chunked [`elastic_absorb`].
+pub fn elastic_absorb_chunked(tm: &mut [f32], tw: &[f32], h2: f32, chunker: &Chunker) {
+    debug_assert_eq!(tm.len(), tw.len());
+    let n = tm.len();
+    let mp = SendPtr::new(tm);
+    chunker.dispatch(n, &|start, end| {
+        elastic_absorb(unsafe { mp.slice(start, end) }, &tw[start..end], h2);
+    });
+}
+
 /// Blockwise spatial average (mirror of kernels/spatial.py) over conv
 /// segments of the flat Hessian-diagonal estimate.
 pub fn spatial_average(hdiag: &mut [f32], conv_segments: &[(usize, usize, usize)]) {
@@ -263,6 +418,80 @@ mod tests {
         elastic_step(&mut tw, &mut tm, 0.0, 0.0);
         assert_eq!(tw, w0);
         assert_eq!(tm, m0);
+    }
+
+    #[test]
+    fn chunked_kernels_are_bit_identical_to_scalar() {
+        // n spans several NOISE_BLOCK chunks with a ragged tail; every
+        // chunked kernel must match its scalar twin bit-for-bit for every
+        // thread count.
+        let n = 3 * crate::util::par::NOISE_BLOCK + 129;
+        let mk = |phase: f32| -> Vec<f32> {
+            (0..n).map(|i| (i as f32 * 0.173 + phase).sin()).collect()
+        };
+        for threads in [1usize, 2, 3, 5, 8] {
+            let ck = Chunker::new(threads);
+            let g = mk(0.1);
+            let d = mk(0.7);
+
+            let (mut a, mut b) = (mk(0.0), mk(0.0));
+            sgd_step(&mut a, &g, 0.05);
+            sgd_step_chunked(&mut b, &g, 0.05, &ck);
+            assert_bits(&a, &b);
+
+            let (mut a, mut b) = (mk(0.2), mk(0.2));
+            let (mut ba, mut bb) = (mk(0.3), mk(0.3));
+            momentum_step(&mut a, &g, &mut ba, 0.05, 0.9);
+            momentum_step_chunked(&mut b, &g, &mut bb, 0.05, 0.9, &ck);
+            assert_bits(&a, &b);
+            assert_bits(&ba, &bb);
+
+            let (mut a, mut b) = (mk(0.4), mk(0.4));
+            let (mut ma, mut mb) = (mk(0.5), mk(0.5));
+            let (mut va, mut vb) = (vec![0.5; n], vec![0.5; n]);
+            adahessian_step(&mut a, &g, &d, &mut ma, &mut va, 3, 0.05, 0.9, 0.999, 1e-8);
+            adahessian_step_chunked(
+                &mut b, &g, &d, &mut mb, &mut vb, 3, 0.05, 0.9, 0.999, 1e-8, &ck,
+            );
+            assert_bits(&a, &b);
+            assert_bits(&ma, &mb);
+            assert_bits(&va, &vb);
+
+            let (mut a, mut b) = (mk(0.6), mk(0.6));
+            let (mut ma, mut mb) = (mk(0.8), mk(0.8));
+            let (mut va, mut vb) = (vec![0.25; n], vec![0.25; n]);
+            adamw_step(&mut a, &g, &mut ma, &mut va, 7, 0.05, 0.9, 0.999, 1e-8, 0.01);
+            adamw_step_chunked(
+                &mut b, &g, &mut mb, &mut vb, 7, 0.05, 0.9, 0.999, 1e-8, 0.01, &ck,
+            );
+            assert_bits(&a, &b);
+            assert_bits(&ma, &mb);
+            assert_bits(&va, &vb);
+
+            let (mut wa, mut wb) = (mk(0.9), mk(0.9));
+            let (mut mma, mut mmb) = (mk(1.1), mk(1.1));
+            elastic_step(&mut wa, &mut mma, 0.3, 0.1);
+            elastic_step_chunked(&mut wb, &mut mmb, 0.3, 0.1, &ck);
+            assert_bits(&wa, &wb);
+            assert_bits(&mma, &mmb);
+
+            let (mut wa, mut wb) = (mk(1.2), mk(1.2));
+            elastic_pull(&mut wa, &g, 0.3);
+            elastic_pull_chunked(&mut wb, &g, 0.3, &ck);
+            assert_bits(&wa, &wb);
+
+            let (mut mma, mut mmb) = (mk(1.3), mk(1.3));
+            elastic_absorb(&mut mma, &g, 0.1);
+            elastic_absorb_chunked(&mut mmb, &g, 0.1, &ck);
+            assert_bits(&mma, &mmb);
+        }
+    }
+
+    fn assert_bits(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "index {i}: {x} vs {y}");
+        }
     }
 
     #[test]

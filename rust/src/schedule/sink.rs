@@ -68,13 +68,14 @@ pub fn config_schema_hash() -> String {
     }
 
     // A sample record exercising every serialized key: the default-omitted
-    // optional config keys (`policy`, `optimizer`, `sync_mode`) forced
-    // present, one round record, a non-empty sim report and worker-stat
-    // list.
+    // optional config keys (`policy`, `optimizer`, `sync_mode`,
+    // `intra_parallel`) forced present, one round record, a non-empty sim
+    // report and worker-stat list.
     let mut cfg = ExperimentConfig::default();
     cfg.policy = Some("fixed(alpha=0.1)".into());
     cfg.optimizer = Some("adamw(beta1=0.9,beta2=0.999,eps=0.00000001,wd=0.01)".into());
     cfg.sync_mode = crate::config::SyncMode::Gossip;
+    cfg.intra_parallel = Some(4096);
     let mut log = MetricsLog::default();
     log.push(RoundRecord {
         round: 0,

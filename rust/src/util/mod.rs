@@ -7,6 +7,7 @@ pub mod bits;
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

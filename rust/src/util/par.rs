@@ -1,0 +1,277 @@
+//! Parameter-chunked dispatch for the intra-trial parallel tier.
+//!
+//! The fused kernels walk `θ` element-wise; for large `d` that single-threaded
+//! pass dominates a round. This module splits index space into chunks whose
+//! boundaries always fall on [`NOISE_BLOCK`] multiples and runs a closure over
+//! each `[start, end)` range — across a small scoped thread pool when the
+//! `par` feature is on, sequentially otherwise.
+//!
+//! Determinism contract: the dispatch order is observationally irrelevant.
+//! Every chunked call site must (a) write disjoint slices only, (b) derive any
+//! randomness per *noise block* via [`crate::util::rng::Rng::split_stream`]
+//! (never from a shared sequential stream), and (c) accumulate reductions per
+//! block into a slab that the caller folds in block order. Under those rules
+//! any chunk count — including 1, i.e. the scalar path — produces bit-identical
+//! results, which `tests/chunk_partition.rs` and `tests/kernel_equivalence.rs`
+//! pin.
+//!
+//! Allocation contract: `dispatch` with a serial chunker (or `chunks <= 1`)
+//! is a plain loop and allocates nothing, preserving the steady-state
+//! alloc-free hot path (`tests/alloc_regression.rs`). The parallel arm spawns
+//! scoped threads per call — acceptable because it only engages when the
+//! per-call work is large (`d >= --par-threshold`).
+
+use std::marker::PhantomData;
+
+/// Granularity of the chunked tier: chunk boundaries, per-block RNG streams,
+/// and per-block loss partial sums all use this grid. Must never change
+/// without a deliberate bit-compatibility break — it is baked into the noise
+/// stream derivation of every engine pass.
+pub const NOISE_BLOCK: usize = 1024;
+
+/// Number of `NOISE_BLOCK` blocks covering `n` indices.
+#[inline]
+pub fn n_blocks(n: usize) -> usize {
+    n.div_ceil(NOISE_BLOCK)
+}
+
+/// A chunk plan: how many workers to split an `n`-element pass across.
+///
+/// `Chunker` is deliberately dumb — it owns no threads. Each [`dispatch`]
+/// call spawns scoped workers (with the `par` feature) or loops in place, so
+/// a `Chunker` can be freely copied into per-worker engines and drivers.
+///
+/// [`dispatch`]: Chunker::dispatch
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunker {
+    threads: usize,
+}
+
+impl Chunker {
+    /// The scalar path: one chunk, executed inline.
+    pub const fn serial() -> Chunker {
+        Chunker { threads: 1 }
+    }
+
+    /// A chunker over `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Chunker {
+        Chunker { threads: threads.max(1) }
+    }
+
+    /// Hardware-sized chunker: `min(available_parallelism, 8)` with the `par`
+    /// feature, serial without it (no threads will be spawned anyway, and a
+    /// plan of 1 keeps the sequential fallback on the zero-overhead arm).
+    pub fn auto() -> Chunker {
+        #[cfg(feature = "par")]
+        {
+            let n = std::thread::available_parallelism().map_or(1, |p| p.get());
+            Chunker::new(n.min(8))
+        }
+        #[cfg(not(feature = "par"))]
+        {
+            Chunker::serial()
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.threads <= 1
+    }
+
+    /// Split `n` indices into `(chunks, chunk_len)` with `chunk_len` a
+    /// multiple of [`NOISE_BLOCK`] and `chunks * chunk_len >= n`. The last
+    /// chunk may be short. `n == 0` yields zero chunks.
+    pub fn plan(&self, n: usize) -> (usize, usize) {
+        let blocks = n_blocks(n);
+        if blocks == 0 {
+            return (0, 0);
+        }
+        let chunks = self.threads.min(blocks);
+        let chunk_len = blocks.div_ceil(chunks) * NOISE_BLOCK;
+        // Shrinking chunk_len up to the block grid can leave trailing chunks
+        // empty; recompute the count that actually covers n.
+        let chunks = n.div_ceil(chunk_len);
+        (chunks, chunk_len)
+    }
+
+    /// Run `task(start, end)` over every chunk of `0..n`. Chunk boundaries
+    /// fall on `NOISE_BLOCK` multiples (except `end = n` on the last chunk).
+    ///
+    /// With `chunks <= 1` (always true for [`Chunker::serial`]) the task runs
+    /// inline with no allocation. Otherwise, with the `par` feature, chunks
+    /// are claimed off an atomic cursor by `threads` scoped workers (the
+    /// calling thread participates); without the feature they run in
+    /// ascending order on the calling thread. All three arms execute the
+    /// identical set of `(start, end)` ranges.
+    pub fn dispatch(&self, n: usize, task: &(dyn Fn(usize, usize) + Sync)) {
+        let (chunks, chunk_len) = self.plan(n);
+        if chunks == 0 {
+            return;
+        }
+        if chunks == 1 {
+            task(0, n);
+            return;
+        }
+        self.dispatch_chunks(n, chunks, chunk_len, task);
+    }
+
+    #[cfg(feature = "par")]
+    fn dispatch_chunks(
+        &self,
+        n: usize,
+        chunks: usize,
+        chunk_len: usize,
+        task: &(dyn Fn(usize, usize) + Sync),
+    ) {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let cursor = AtomicUsize::new(0);
+        let run = |cursor: &AtomicUsize| loop {
+            let c = cursor.fetch_add(1, Ordering::Relaxed);
+            if c >= chunks {
+                break;
+            }
+            let start = c * chunk_len;
+            let end = (start + chunk_len).min(n);
+            task(start, end);
+        };
+        let helpers = self.threads.min(chunks) - 1;
+        std::thread::scope(|scope| {
+            for _ in 0..helpers {
+                scope.spawn(|| run(&cursor));
+            }
+            run(&cursor);
+        });
+    }
+
+    #[cfg(not(feature = "par"))]
+    fn dispatch_chunks(
+        &self,
+        n: usize,
+        chunks: usize,
+        chunk_len: usize,
+        task: &(dyn Fn(usize, usize) + Sync),
+    ) {
+        for c in 0..chunks {
+            let start = c * chunk_len;
+            let end = (start + chunk_len).min(n);
+            task(start, end);
+        }
+    }
+}
+
+/// A `Send + Sync` wrapper around a mutable f32 buffer so disjoint chunk
+/// sub-slices can be carved out inside a `Fn(usize, usize) + Sync` closure.
+///
+/// Safety rests entirely on the chunk plan: [`Chunker::dispatch`] hands every
+/// `(start, end)` range to exactly one task invocation and the ranges never
+/// overlap, so the aliasing carved out by [`SendPtr::slice`] is disjoint.
+pub struct SendPtr<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _marker: PhantomData<&'a mut [f32]>,
+}
+
+unsafe impl Send for SendPtr<'_> {}
+unsafe impl Sync for SendPtr<'_> {}
+
+impl<'a> SendPtr<'a> {
+    pub fn new(xs: &'a mut [f32]) -> SendPtr<'a> {
+        SendPtr { ptr: xs.as_mut_ptr(), len: xs.len(), _marker: PhantomData }
+    }
+
+    /// Reborrow `[start, end)` of the wrapped buffer.
+    ///
+    /// # Safety
+    /// The caller must guarantee no two live slices from the same `SendPtr`
+    /// overlap (chunk disjointness) and `start <= end <= len`.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, end: usize) -> &'a mut [f32] {
+        debug_assert!(start <= end && end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_covers_n_exactly_on_the_block_grid() {
+        for threads in [1usize, 2, 3, 5, 8, 64] {
+            let ck = Chunker::new(threads);
+            for n in [0usize, 1, 1023, 1024, 1025, 3000, 4096, 10_000, 1 << 20] {
+                let (chunks, chunk_len) = ck.plan(n);
+                if n == 0 {
+                    assert_eq!((chunks, chunk_len), (0, 0));
+                    continue;
+                }
+                assert!(chunks >= 1 && chunks <= threads.max(1));
+                assert_eq!(chunk_len % NOISE_BLOCK, 0);
+                // full coverage, no empty trailing chunk
+                assert!(chunks * chunk_len >= n, "n={n} threads={threads}");
+                assert!((chunks - 1) * chunk_len < n, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_visits_every_index_exactly_once() {
+        use std::sync::Mutex;
+        for threads in [1usize, 2, 3, 7] {
+            for n in [0usize, 1, 1024, 2049, 5000] {
+                let hits = Mutex::new(vec![0u8; n]);
+                Chunker::new(threads).dispatch(n, &|start, end| {
+                    assert!(start < end || n == 0);
+                    assert_eq!(start % NOISE_BLOCK, 0);
+                    let mut h = hits.lock().unwrap();
+                    for x in &mut h[start..end] {
+                        *x += 1;
+                    }
+                });
+                assert!(hits.lock().unwrap().iter().all(|&c| c == 1), "n={n} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_chunker_runs_inline_as_one_chunk() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        Chunker::serial().dispatch(10_000, &|start, end| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            assert_eq!((start, end), (0, 10_000));
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+        assert!(Chunker::serial().is_serial());
+        assert!(!Chunker::new(4).is_serial());
+        assert_eq!(Chunker::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn send_ptr_chunks_write_disjointly() {
+        let n = 4096 + 17;
+        let mut buf = vec![0.0f32; n];
+        let ptr = SendPtr::new(&mut buf);
+        Chunker::new(4).dispatch(n, &|start, end| {
+            let chunk = unsafe { ptr.slice(start, end) };
+            for (off, x) in chunk.iter_mut().enumerate() {
+                *x = (start + off) as f32;
+            }
+        });
+        for (i, &x) in buf.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
+    }
+
+    #[test]
+    fn n_blocks_matches_grid() {
+        assert_eq!(n_blocks(0), 0);
+        assert_eq!(n_blocks(1), 1);
+        assert_eq!(n_blocks(NOISE_BLOCK), 1);
+        assert_eq!(n_blocks(NOISE_BLOCK + 1), 2);
+    }
+}

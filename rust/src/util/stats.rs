@@ -34,6 +34,25 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Median (linear-interpolated); 0.0 for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Median absolute deviation from the median — the robust spread estimate
+/// the bench harness's variance-aware regression gate is built on (a noisy
+/// outlier run inflates `std_dev` but barely moves the MAD). 0.0 for empty
+/// input. Reported raw (no 1.4826 normal-consistency rescale): the gate
+/// compares MADs to MADs, so the scale factor would cancel anyway.
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = median(xs);
+    let dev: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&dev)
+}
+
 /// Least-squares slope of y over x (used by convergence-rate assertions).
 pub fn linear_slope(x: &[f64], y: &[f64]) -> f64 {
     assert_eq!(x.len(), y.len());
@@ -152,6 +171,20 @@ mod tests {
         assert_eq!(quantile(&xs, 0.0), 1.0);
         assert_eq!(quantile(&xs, 1.0), 4.0);
         assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_and_mad_are_robust_to_one_outlier() {
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(mad(&[]), 0.0);
+        assert_eq!(median(&[7.0]), 7.0);
+        assert_eq!(mad(&[7.0]), 0.0);
+        let xs = [10.0, 11.0, 12.0, 13.0, 1000.0];
+        assert_eq!(median(&xs), 12.0);
+        assert_eq!(mad(&xs), 1.0);
+        // while the outlier drags mean and std far away
+        assert!(mean(&xs) > 200.0);
+        assert!(std_dev(&xs) > 300.0);
     }
 
     #[test]

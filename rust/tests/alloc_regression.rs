@@ -325,6 +325,37 @@ fn adahessian_steady_state_round_allocates_nothing() {
     assert_steady_state_round_is_alloc_free(Optimizer::AdaHessian, "adahessian");
 }
 
+/// The chunked-tier call sites keep the invariant when driven with a serial
+/// chunker — the configuration every driver uses below `--par-threshold`,
+/// and the one the allocation contract in `util::par` promises is a plain
+/// inline loop. Fused chunked engine steps (block-keyed noise, per-block
+/// loss slab) and the chunked elastic kernels allocate nothing at steady
+/// state, across a dimension spanning several NOISE_BLOCK chunks.
+#[test]
+fn chunked_call_sites_with_a_serial_chunker_allocate_nothing() {
+    use deahes::engine::{BatchRef, Engine, WorkerScratch};
+    use deahes::optim::native;
+    use deahes::util::par::Chunker;
+
+    let n = 2100;
+    let mut engine = QuadraticEngine::new(n, 5, 0, 0.2, 0.02);
+    engine.set_intra_parallel(1); // chunked tier on, serial plan: inline dispatch
+    let ck = Chunker::serial();
+    let mut theta = vec![0.1f32; n];
+    let mut master = vec![0.0f32; n];
+    let mut scratch = WorkerScratch::new(n);
+    let mut run = |rounds: u64| {
+        for _ in 0..rounds {
+            engine.sgd_step(&mut theta, BatchRef { x: &[], y1h: &[] }, 0.03, &mut scratch).unwrap();
+            native::elastic_pull_chunked(&mut theta, &master, 0.1, &ck);
+            native::elastic_absorb_chunked(&mut master, &theta, 0.1, &ck);
+        }
+    };
+    run(5); // warm-up
+    let allocs = count_allocs(|| run(5));
+    assert_eq!(allocs, 0, "serial-chunker call sites must not allocate ({allocs} in 5 rounds)");
+}
+
 /// The counting harness itself works: an intentional allocation is seen.
 #[test]
 fn harness_detects_allocations() {

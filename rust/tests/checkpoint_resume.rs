@@ -277,6 +277,78 @@ fn threaded_driver_checkpoints_and_resumes() {
     assert_eq!(served_resumed, served_seq);
 }
 
+/// The chunked parallel tier rides inside the byte-identity contract twice
+/// over: (a) a run with `intra_parallel` enabled digests identically to the
+/// same config without it (chunked kernels are bit-identical to scalar), and
+/// (b) checkpoint/resume of the chunked config is itself byte-identical from
+/// every boundary. Uses a dimension spanning multiple NOISE_BLOCK chunks so
+/// the multi-chunk dispatch path is the one under test.
+#[test]
+fn intra_parallel_runs_digest_identically_and_resume_byte_exactly() {
+    use deahes::config::SyncMode;
+    for sync_mode in [SyncMode::Central, SyncMode::Gossip] {
+        let mut scalar_cfg =
+            quad_cfg("dynamic(alpha=0.1,knee=-0.05,detector=paper-sign)", Method::DeahesO);
+        scalar_cfg.engine = EngineKind::Quadratic { dim: 2100, heterogeneity: 0.3, noise: 0.05 };
+        scalar_cfg.rounds = 12;
+        scalar_cfg.sync_mode = sync_mode;
+        let mut chunked_cfg = scalar_cfg.clone();
+        // threshold 1: every dim qualifies, so the engines and the gossip
+        // elastic kernels all run through the chunked dispatch
+        chunked_cfg.intra_parallel = Some(1);
+
+        let baseline = digest(&sim::run(&scalar_cfg).unwrap());
+        let chunked = digest(&sim::run(&chunked_cfg).unwrap());
+        assert_eq!(chunked, baseline, "{sync_mode:?}: chunked tier changed run numbers");
+
+        let (hooked, cps) = capture_checkpoints(&chunked_cfg, 5);
+        assert_eq!(digest(&hooked), baseline, "{sync_mode:?}: chunked checkpointing changed numbers");
+        assert_eq!(cps.len(), 2, "{sync_mode:?}: rounds=12, every=5 -> cuts at 5 and 10");
+        for cp in &cps {
+            let resumed = sim::run_with(&chunked_cfg, Some(cp), None).unwrap();
+            assert_eq!(
+                digest(&resumed),
+                baseline,
+                "{sync_mode:?}: chunked resume from round {} diverged",
+                cp.next_round
+            );
+        }
+    }
+}
+
+/// A failing checkpoint save aborts the threaded drivers promptly: the
+/// monitor poisons the barrier edge, every worker exits at its next round
+/// boundary, and the save hook is never invoked a second time. Covers both
+/// the central and the gossip threaded drivers.
+#[test]
+fn threaded_drivers_abort_on_checkpoint_save_failure() {
+    use deahes::config::SyncMode;
+    for sync_mode in [SyncMode::Central, SyncMode::Gossip] {
+        let mut cfg = quad_cfg("fixed(alpha=0.1)", Method::Easgd);
+        cfg.rounds = 18;
+        cfg.threaded = true;
+        cfg.sync_mode = sync_mode;
+        let mut calls = 0u32;
+        let mut save = |_cp: RunCheckpoint| -> anyhow::Result<()> {
+            calls += 1;
+            anyhow::bail!("disk full (injected)")
+        };
+        // `{:#}` prints the whole context chain — the driver wraps the
+        // hook's error in "mid-trial checkpointing failed".
+        let err = format!(
+            "{:#}",
+            sim::run_with(&cfg, None, Some(CheckpointHooks { every: 6, save: &mut save }))
+                .unwrap_err()
+        );
+        assert!(err.contains("mid-trial checkpointing failed"), "{sync_mode:?}: {err}");
+        assert!(err.contains("disk full (injected)"), "{sync_mode:?}: {err}");
+        assert_eq!(
+            calls, 1,
+            "{sync_mode:?}: save hook must not be called again after a failure"
+        );
+    }
+}
+
 fn tmp_dir(name: &str) -> PathBuf {
     std::env::temp_dir().join(format!("deahes-ckptres-{}-{name}", std::process::id()))
 }

@@ -1,0 +1,170 @@
+//! Partition-invariance properties for the parameter-chunked parallel tier.
+//!
+//! The determinism contract in `util::par` says a chunked kernel's result is
+//! **bit-identical** for *any* chunk partition, including the scalar
+//! one-chunk path. These properties attack that from two sides:
+//!
+//!   * the elastic sync kernels (`elastic_pull` / `elastic_absorb` /
+//!     `elastic_step`) must commute with arbitrary block-aligned partitions —
+//!     not just the uniform plans a [`Chunker`] produces;
+//!   * the fused engine steps must produce the same bits under any thread
+//!     count, in both noise regimes (the noisy path re-derives per-block RNG
+//!     streams; the noise-free path is a plain vectorizable loop).
+//!
+//! With the `par` feature off, chunked dispatch runs the identical chunk
+//! ranges sequentially, so these properties pin the same bits either way.
+
+use deahes::engine::quad::QuadraticEngine;
+use deahes::engine::{BatchRef, Engine, WorkerScratch};
+use deahes::optim::native;
+use deahes::util::par::{Chunker, NOISE_BLOCK};
+use deahes::util::proptest;
+
+fn empty() -> BatchRef<'static> {
+    BatchRef { x: &[], y1h: &[] }
+}
+
+fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit divergence at index {i}: {x} vs {y}");
+    }
+}
+
+/// Random block-aligned cut points covering `0..n`: the partitions a chunked
+/// call site could in principle be handed, a strict superset of the uniform
+/// `(chunks, chunk_len)` plans `Chunker::plan` emits.
+fn random_partition(g: &mut proptest::Gen, n: usize) -> Vec<(usize, usize)> {
+    let mut cuts = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let blocks = 1 + g.rng().usize_below(4);
+        let end = (start + blocks * NOISE_BLOCK).min(n);
+        cuts.push((start, end));
+        start = end;
+    }
+    cuts
+}
+
+#[test]
+fn elastic_kernels_commute_with_any_block_partition() {
+    proptest::check("elastic partition invariance", 120, |g| {
+        let n = g.usize(1, 6000);
+        let tw0 = g.vec_f32(n, -2.0, 2.0);
+        let tm0 = g.vec_f32(n, -2.0, 2.0);
+        let h1 = g.f32(0.0, 1.0);
+        let h2 = g.f32(0.0, 1.0);
+
+        // Whole-slice references.
+        let mut pull_ref = tw0.clone();
+        native::elastic_pull(&mut pull_ref, &tm0, h1);
+        let mut absorb_ref = tm0.clone();
+        native::elastic_absorb(&mut absorb_ref, &tw0, h2);
+        let (mut step_w_ref, mut step_m_ref) = (tw0.clone(), tm0.clone());
+        native::elastic_step(&mut step_w_ref, &mut step_m_ref, h1, h2);
+
+        // (a) the scalar kernel applied per arbitrary block-aligned
+        // sub-range matches the whole-slice call ...
+        let parts = random_partition(g, n);
+        let mut pull_parts = tw0.clone();
+        let mut absorb_parts = tm0.clone();
+        for &(s, e) in &parts {
+            native::elastic_pull(&mut pull_parts[s..e], &tm0[s..e], h1);
+            native::elastic_absorb(&mut absorb_parts[s..e], &tw0[s..e], h2);
+        }
+        assert_bits(&pull_ref, &pull_parts, "pull vs arbitrary partition");
+        assert_bits(&absorb_ref, &absorb_parts, "absorb vs arbitrary partition");
+
+        // ... and (b) the chunked dispatch wrappers match for any thread
+        // count, including degenerate ones far above the block count.
+        let threads = *g.pick(&[1usize, 2, 3, 5, 8, 64]);
+        let ck = Chunker::new(threads);
+        let mut pull_ck = tw0.clone();
+        native::elastic_pull_chunked(&mut pull_ck, &tm0, h1, &ck);
+        assert_bits(&pull_ref, &pull_ck, &format!("pull vs chunked t={threads}"));
+        let mut absorb_ck = tm0.clone();
+        native::elastic_absorb_chunked(&mut absorb_ck, &tw0, h2, &ck);
+        assert_bits(&absorb_ref, &absorb_ck, &format!("absorb vs chunked t={threads}"));
+        let (mut step_w_ck, mut step_m_ck) = (tw0.clone(), tm0.clone());
+        native::elastic_step_chunked(&mut step_w_ck, &mut step_m_ck, h1, h2, &ck);
+        assert_bits(&step_w_ref, &step_w_ck, &format!("step θw vs chunked t={threads}"));
+        assert_bits(&step_m_ref, &step_m_ck, &format!("step θm vs chunked t={threads}"));
+    });
+}
+
+#[test]
+fn fused_steps_are_partition_invariant_in_both_noise_regimes() {
+    proptest::check("fused step partition invariance", 40, |g| {
+        let n = g.usize(1, 5000);
+        let noise = *g.pick(&[0.0f32, 0.05]);
+        let threads = *g.pick(&[2usize, 3, 5, 8]);
+        let seed = g.u64();
+        let lr = g.f32(0.005, 0.05);
+        let theta0 = g.vec_f32(n, -1.0, 1.0);
+        // Identical probe draws for both trajectories (AdaHessian).
+        let probe_seed = g.u64();
+
+        let mut scalar = QuadraticEngine::new(n, seed, 1, 0.3, noise);
+        let mut chunked = QuadraticEngine::new(n, seed, 1, 0.3, noise);
+        chunked.set_intra_parallel(threads);
+
+        let mut theta_s = theta0.clone();
+        let mut theta_c = theta0;
+        let (mut m_s, mut v_s) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let (mut m_c, mut v_c) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let mut probe_s = deahes::util::rng::Rng::new(probe_seed);
+        let mut probe_c = deahes::util::rng::Rng::new(probe_seed);
+        let mut scratch = WorkerScratch::new(n);
+
+        for t in 1..=3u64 {
+            // Alternate optimizers so both the single-noise-pass kernel
+            // (sgd) and the double-pass kernel (adahessian: grad key then
+            // diag key) are exercised on the same engine stream.
+            let (ls, lc) = if t % 2 == 1 {
+                let ls = scalar.sgd_step(&mut theta_s, empty(), lr, &mut scratch).unwrap();
+                let lc = chunked.sgd_step(&mut theta_c, empty(), lr, &mut scratch).unwrap();
+                (ls, lc)
+            } else {
+                let zs = probe_s.rademacher(n);
+                let zc = probe_c.rademacher(n);
+                let ls = scalar
+                    .adahessian_step(
+                        &mut theta_s,
+                        empty(),
+                        &zs,
+                        &mut m_s,
+                        &mut v_s,
+                        t,
+                        lr,
+                        &mut scratch,
+                    )
+                    .unwrap();
+                let lc = chunked
+                    .adahessian_step(
+                        &mut theta_c,
+                        empty(),
+                        &zc,
+                        &mut m_c,
+                        &mut v_c,
+                        t,
+                        lr,
+                        &mut scratch,
+                    )
+                    .unwrap();
+                (ls, lc)
+            };
+            assert_eq!(
+                ls.to_bits(),
+                lc.to_bits(),
+                "loss bits, n={n} noise={noise} threads={threads} t={t}"
+            );
+            assert_bits(
+                &theta_s,
+                &theta_c,
+                &format!("theta, n={n} noise={noise} threads={threads} t={t}"),
+            );
+        }
+        assert_bits(&m_s, &m_c, "adahessian m");
+        assert_bits(&v_s, &v_c, "adahessian v");
+    });
+}

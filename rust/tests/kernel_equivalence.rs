@@ -265,6 +265,155 @@ fn adamw_preset_round_is_bit_identical_to_three_pass_emulation() {
     }
 }
 
+/// The parameter-chunked parallel tier must be bit-identical to the scalar
+/// tier for **every** fused optimizer step, any thread count, both noise
+/// regimes, and dimensions that do / don't divide evenly into noise blocks.
+/// This is the core determinism contract of `util::par`: a chunked engine
+/// (`set_intra_parallel`) re-derives each block's noise stream from the same
+/// per-pass key as the scalar engine, and the block-ordered loss fold makes
+/// the f32 accumulation sequence partition-independent. With the `par`
+/// feature off the dispatch degenerates to a sequential loop over the same
+/// chunk ranges, so this test pins the same bits either way.
+#[test]
+fn chunked_fused_steps_are_bit_identical_to_scalar_for_all_optimizers() {
+    // 3000 is not a multiple of NOISE_BLOCK (tail block), 4096 is several
+    // whole blocks; both must chunk cleanly.
+    for n in [3000usize, 4096] {
+        for noise in NOISES {
+            // Scalar reference trajectories, one per optimizer.
+            let mut scalar = Trajectories::new(n, noise, 0);
+            for step in 1..=4 {
+                scalar.step(step);
+            }
+            for threads in [1usize, 2, 3, 5, 8] {
+                let mut chunked = Trajectories::new(n, noise, threads);
+                for step in 1..=4 {
+                    chunked.step(step);
+                }
+                let what = format!("n={n} noise={noise} threads={threads}");
+                assert_eq!(
+                    scalar.loss_bits, chunked.loss_bits,
+                    "loss bit divergence, {what}"
+                );
+                assert_bits(&scalar.sgd_theta, &chunked.sgd_theta, &format!("sgd {what}"));
+                assert_bits(&scalar.mom_theta, &chunked.mom_theta, &format!("mom θ {what}"));
+                assert_bits(&scalar.mom_buf, &chunked.mom_buf, &format!("mom buf {what}"));
+                assert_bits(&scalar.ada_theta, &chunked.ada_theta, &format!("ada θ {what}"));
+                assert_bits(&scalar.ada_m, &chunked.ada_m, &format!("ada m {what}"));
+                assert_bits(&scalar.ada_v, &chunked.ada_v, &format!("ada v {what}"));
+                assert_bits(&scalar.adamw_theta, &chunked.adamw_theta, &format!("adamw θ {what}"));
+                assert_bits(&scalar.adamw_m, &chunked.adamw_m, &format!("adamw m {what}"));
+                assert_bits(&scalar.adamw_v, &chunked.adamw_v, &format!("adamw v {what}"));
+            }
+        }
+    }
+
+    /// One engine + parameter/state vectors per fused optimizer, all
+    /// advanced in lock-step so a single pass covers the whole kernel set.
+    struct Trajectories {
+        sgd_e: QuadraticEngine,
+        mom_e: QuadraticEngine,
+        ada_e: QuadraticEngine,
+        adamw_e: QuadraticEngine,
+        sgd_theta: Vec<f32>,
+        mom_theta: Vec<f32>,
+        mom_buf: Vec<f32>,
+        ada_theta: Vec<f32>,
+        ada_m: Vec<f32>,
+        ada_v: Vec<f32>,
+        adamw_theta: Vec<f32>,
+        adamw_m: Vec<f32>,
+        adamw_v: Vec<f32>,
+        probe: Rng,
+        scratch: WorkerScratch,
+        /// Sum of all loss bit patterns (wrapping) — a cheap order-sensitive
+        /// digest of every per-step loss across the run.
+        loss_bits: u64,
+    }
+
+    impl Trajectories {
+        fn new(n: usize, noise: f32, threads: usize) -> Trajectories {
+            let mk = |seed: u64| {
+                let mut e = QuadraticEngine::new(n, seed, 1, 0.3, noise);
+                if threads > 0 {
+                    e.set_intra_parallel(threads);
+                }
+                e
+            };
+            Trajectories {
+                sgd_e: mk(71),
+                mom_e: mk(72),
+                ada_e: mk(73),
+                adamw_e: mk(74),
+                sgd_theta: vec![0.6; n],
+                mom_theta: vec![-0.4; n],
+                mom_buf: vec![0.0; n],
+                ada_theta: vec![0.9; n],
+                ada_m: vec![0.0; n],
+                ada_v: vec![0.0; n],
+                adamw_theta: vec![0.25; n],
+                adamw_m: vec![0.0; n],
+                adamw_v: vec![0.0; n],
+                probe: Rng::new(75),
+                scratch: WorkerScratch::new(n),
+                loss_bits: 0,
+            }
+        }
+
+        fn step(&mut self, t: u64) {
+            let n = self.sgd_theta.len();
+            let mut losses = [0.0f32; 4];
+            losses[0] = self
+                .sgd_e
+                .sgd_step(&mut self.sgd_theta, empty(), 0.03, &mut self.scratch)
+                .unwrap();
+            losses[1] = self
+                .mom_e
+                .momentum_step(
+                    &mut self.mom_theta,
+                    empty(),
+                    &mut self.mom_buf,
+                    0.02,
+                    &mut self.scratch,
+                )
+                .unwrap();
+            let z = self.probe.rademacher(n);
+            losses[2] = self
+                .ada_e
+                .adahessian_step(
+                    &mut self.ada_theta,
+                    empty(),
+                    &z,
+                    &mut self.ada_m,
+                    &mut self.ada_v,
+                    t,
+                    0.02,
+                    &mut self.scratch,
+                )
+                .unwrap();
+            losses[3] = self
+                .adamw_e
+                .adamw_step(
+                    &mut self.adamw_theta,
+                    empty(),
+                    &mut self.adamw_m,
+                    &mut self.adamw_v,
+                    t,
+                    0.02,
+                    0.9,
+                    0.999,
+                    1e-8,
+                    0.01,
+                    &mut self.scratch,
+                )
+                .unwrap();
+            for l in losses {
+                self.loss_bits = self.loss_bits.wrapping_add(l.to_bits() as u64);
+            }
+        }
+    }
+}
+
 /// A full worker-state round through the fused path matches a manual
 /// composed emulation bit-for-bit — the whole-round contract the drivers
 /// depend on.
