@@ -253,6 +253,13 @@ pub struct CheckpointHooks<'a> {
     /// Rounds between checkpoint cuts (taken at round boundaries, never at
     /// the final one — the run is about to commit anyway); 0 = never.
     pub every: u64,
+    /// Wall-clock seconds between cuts; 0 = off. ORed with `every`: a cut
+    /// is taken when either cadence is due, and a save resets the clock.
+    /// For engines with variable round cost this bounds the recovery window
+    /// in time rather than rounds. Only the *placement* of cuts depends on
+    /// the wall clock — the cut contents stay bit-exact round-boundary
+    /// state, so resumed runs remain byte-identical.
+    pub every_secs: f64,
     /// Persist one checkpoint; called from the driving thread. On the
     /// sequential driver an error aborts the run immediately (the
     /// crash-injection tests rely on this). The threaded driver aborts at
@@ -404,6 +411,7 @@ fn run_sequential_central(
         cfg.failure.describe()
     );
 
+    let mut last_cut = Instant::now();
     for round in start_round..cfg.rounds {
         losses.clear();
         h1s.clear();
@@ -470,7 +478,10 @@ fn run_sequential_central(
         }
         if let Some(h) = hooks.as_mut() {
             let next = round + 1;
-            if h.every > 0 && next % h.every == 0 && next < cfg.rounds {
+            let due_rounds = h.every > 0 && next % h.every == 0;
+            let due_secs =
+                h.every_secs > 0.0 && last_cut.elapsed().as_secs_f64() >= h.every_secs;
+            if (due_rounds || due_secs) && next < cfg.rounds {
                 (h.save)(RunCheckpoint {
                     driver: checkpoint::DRIVER_SEQUENTIAL.into(),
                     next_round: next,
@@ -491,6 +502,7 @@ fn run_sequential_central(
                     per_round_syncs: per_round_syncs.clone(),
                 })
                 .with_context(|| format!("writing checkpoint at round boundary {next}"))?;
+                last_cut = Instant::now();
             }
         }
     }
@@ -696,6 +708,7 @@ fn run_sequential_gossip(
         cfg.failure.describe()
     );
 
+    let mut last_cut = Instant::now();
     for round in start_round..cfg.rounds {
         losses.clear();
         h1s.clear();
@@ -786,7 +799,10 @@ fn run_sequential_gossip(
         }
         if let Some(h) = hooks.as_mut() {
             let next = round + 1;
-            if h.every > 0 && next % h.every == 0 && next < cfg.rounds {
+            let due_rounds = h.every > 0 && next % h.every == 0;
+            let due_secs =
+                h.every_secs > 0.0 && last_cut.elapsed().as_secs_f64() >= h.every_secs;
+            if (due_rounds || due_secs) && next < cfg.rounds {
                 (h.save)(RunCheckpoint {
                     driver: checkpoint::DRIVER_SEQUENTIAL.into(),
                     next_round: next,
@@ -804,6 +820,7 @@ fn run_sequential_gossip(
                     per_round_syncs: per_round_syncs.clone(),
                 })
                 .with_context(|| format!("writing checkpoint at round boundary {next}"))?;
+                last_cut = Instant::now();
             }
         }
     }
@@ -955,6 +972,7 @@ fn run_threaded_central(
     }
     let start_round = resume.map_or(0, |cp| cp.next_round);
     let ckpt_every = hooks.as_ref().map_or(0, |h| h.every);
+    let ckpt_secs = hooks.as_ref().map_or(0.0, |h| h.every_secs);
     let gossip = Arc::new(GossipBoard::new(k, Arc::new(setup.theta0.clone()), cfg.gossip));
     if let Some(cp) = resume {
         for (w, (round, theta)) in cp.gossip.iter().enumerate() {
@@ -976,6 +994,11 @@ fn run_threaded_central(
     // can be blocked on this thread) and exits instead of starting the next
     // round. Scoped threads borrow it directly — no Arc needed.
     let poison = std::sync::atomic::AtomicBool::new(false);
+    // Per-round "cut this round" decision. Only the monitor can evaluate the
+    // wall-clock cadence (workers have no shared clock), so it stores the
+    // verdict BEFORE its barrier-A wait and workers read it right after
+    // theirs — the barrier edge orders the store, exactly like `poison`.
+    let ckpt_due = std::sync::atomic::AtomicBool::new(false);
     let (master_tx, master_rx) = mpsc::channel::<ToMaster>();
     let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
     // Worker → monitor channel carrying per-worker state snapshots at
@@ -1083,6 +1106,7 @@ fn run_threaded_central(
             let gossip = gossip.clone();
             let barrier = barrier.clone();
             let poison = &poison;
+            let ckpt_due = &ckpt_due;
             let master_tx = master_tx.clone();
             let report_tx = report_tx.clone();
             let state_tx = state_tx.clone();
@@ -1155,8 +1179,7 @@ fn run_threaded_central(
                         }
                         report_tx.send(rep).ok();
                         barrier.wait(); // A: round work done
-                        if ckpt_every > 0 && (round + 1) % ckpt_every == 0 && round + 1 < rounds
-                        {
+                        if ckpt_due.load(std::sync::atomic::Ordering::SeqCst) {
                             // Parked between barriers: this worker's state
                             // is stable, ship it to the monitor's cut.
                             let snap = Json::obj(vec![
@@ -1188,6 +1211,7 @@ fn run_threaded_central(
             per_round_syncs.extend_from_slice(&cp.per_round_syncs);
         }
         let mut save_err: Option<anyhow::Error> = None;
+        let mut last_cut = Instant::now();
         for round in start_round..rounds {
             let mut losses = Vec::with_capacity(k);
             let mut h1s = Vec::new();
@@ -1213,6 +1237,17 @@ fn run_threaded_central(
                     failed += 1;
                 }
             }
+            // The monitor alone owns the cadence decision (round modulus OR
+            // wall clock); the store is ordered before the workers' post-A
+            // reads by the barrier edge.
+            let due = {
+                let next = round + 1;
+                let due_rounds = ckpt_every > 0 && next % ckpt_every == 0;
+                let due_secs =
+                    ckpt_secs > 0.0 && last_cut.elapsed().as_secs_f64() >= ckpt_secs;
+                (due_rounds || due_secs) && next < rounds
+            };
+            ckpt_due.store(due, std::sync::atomic::Ordering::SeqCst);
             barrier.wait(); // A: workers idle, master drained of syncs
             per_round_syncs.push(ok as usize);
             if round % cfg.eval_every == 0 || round + 1 == rounds {
@@ -1231,7 +1266,7 @@ fn run_threaded_central(
                     mean_score: mean(&scores),
                 });
             }
-            if ckpt_every > 0 && (round + 1) % ckpt_every == 0 && round + 1 < rounds {
+            if due {
                 // Assemble the cut while every worker is parked between
                 // barriers A and B and the master has drained this round's
                 // syncs. A failure here must not abort mid-round (the
@@ -1276,10 +1311,12 @@ fn run_threaded_central(
                     (Ok(cp), Some(h)) => {
                         if let Err(e) = (h.save)(cp) {
                             save_err = Some(e);
+                        } else {
+                            last_cut = Instant::now();
                         }
                     }
                     (Err(e), _) => save_err = Some(e),
-                    (Ok(_), None) => unreachable!("ckpt_every > 0 implies hooks"),
+                    (Ok(_), None) => unreachable!("a due checkpoint implies hooks"),
                 }
                 if save_err.is_some() {
                     // Poison BEFORE releasing barrier B: the barrier edge
@@ -1359,6 +1396,7 @@ fn run_threaded_gossip(
     }
     let start_round = resume.map_or(0, |cp| cp.next_round);
     let ckpt_every = hooks.as_ref().map_or(0, |h| h.every);
+    let ckpt_secs = hooks.as_ref().map_or(0.0, |h| h.every_secs);
     let gossip = Arc::new(GossipBoard::new(k, Arc::new(setup.theta0.clone()), cfg.gossip));
     let mut policies = make_worker_policies(cfg)?;
     let mut pull_cursors: Vec<u64> = vec![0; k];
@@ -1383,6 +1421,9 @@ fn run_threaded_gossip(
     // can be blocked on this thread) and exits instead of starting the next
     // round. Scoped threads borrow it directly — no Arc needed.
     let poison = std::sync::atomic::AtomicBool::new(false);
+    // Per-round cut decision, monitor-owned (see the central driver): the
+    // store before barrier A is ordered ahead of the workers' post-A reads.
+    let ckpt_due = std::sync::atomic::AtomicBool::new(false);
     let (master_tx, master_rx) = mpsc::channel::<ToMaster>();
     let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
     let (state_tx, state_rx) = mpsc::channel::<(usize, Json)>();
@@ -1476,6 +1517,7 @@ fn run_threaded_gossip(
             let gossip = gossip.clone();
             let barrier = barrier.clone();
             let poison = &poison;
+            let ckpt_due = &ckpt_due;
             let report_tx = report_tx.clone();
             let state_tx = state_tx.clone();
             let resume_engine: Option<Json> =
@@ -1546,8 +1588,7 @@ fn run_threaded_gossip(
                         }
                         report_tx.send(rep).ok();
                         barrier.wait(); // A: round work done
-                        if ckpt_every > 0 && (round + 1) % ckpt_every == 0 && round + 1 < rounds
-                        {
+                        if ckpt_due.load(std::sync::atomic::Ordering::SeqCst) {
                             let snap = Json::obj(vec![
                                 ("worker", state.snapshot()),
                                 ("engine", engine.state_snapshot()),
@@ -1578,6 +1619,7 @@ fn run_threaded_gossip(
             per_round_syncs.extend_from_slice(&cp.per_round_syncs);
         }
         let mut save_err: Option<anyhow::Error> = None;
+        let mut last_cut = Instant::now();
         for round in start_round..rounds {
             let mut losses = Vec::with_capacity(k);
             let mut h1s = Vec::new();
@@ -1605,6 +1647,15 @@ fn run_threaded_gossip(
                     failed += 1;
                 }
             }
+            // Monitor-owned cadence decision (see the central driver).
+            let due = {
+                let next = round + 1;
+                let due_rounds = ckpt_every > 0 && next % ckpt_every == 0;
+                let due_secs =
+                    ckpt_secs > 0.0 && last_cut.elapsed().as_secs_f64() >= ckpt_secs;
+                (due_rounds || due_secs) && next < rounds
+            };
+            ckpt_due.store(due, std::sync::atomic::Ordering::SeqCst);
             barrier.wait(); // A: workers idle, every replica published
             // Worker-index order makes the fold identical to the
             // sequential driver's regardless of report arrival order.
@@ -1632,7 +1683,7 @@ fn run_threaded_gossip(
                     mean_score: mean(&scores),
                 });
             }
-            if ckpt_every > 0 && (round + 1) % ckpt_every == 0 && round + 1 < rounds {
+            if due {
                 // Consistent cut between barriers A and B: the fold for
                 // this round has been published, every worker is parked.
                 let cut = (|| -> Result<RunCheckpoint> {
@@ -1676,10 +1727,12 @@ fn run_threaded_gossip(
                     (Ok(cp), Some(h)) => {
                         if let Err(e) = (h.save)(cp) {
                             save_err = Some(e);
+                        } else {
+                            last_cut = Instant::now();
                         }
                     }
                     (Err(e), _) => save_err = Some(e),
-                    (Ok(_), None) => unreachable!("ckpt_every > 0 implies hooks"),
+                    (Ok(_), None) => unreachable!("a due checkpoint implies hooks"),
                 }
                 if save_err.is_some() {
                     // Poison BEFORE releasing barrier B: the barrier edge

@@ -24,6 +24,7 @@ pub mod runner;
 
 pub use runner::{
     averaged_run, averaged_run_with, fig3_overlap_sweep, fig3_overlap_sweep_with, fig45_grid,
-    fig45_grid_with, policy_sweep, policy_sweep_with, resume_run_dir, series_by_cell,
-    series_from_records, summary_table, AveragedSeries, GridCell, ResumeReport,
+    fig45_grid_with, policy_sweep, policy_sweep_with, resume_run_dir, resume_run_dir_with,
+    series_by_cell, series_from_records, summary_table, AveragedSeries, GridCell, ResumeReport,
+    ResumeTrialDetail,
 };

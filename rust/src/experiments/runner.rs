@@ -151,12 +151,28 @@ pub fn series_from_records(records: &[TrialRecord]) -> Vec<AveragedSeries> {
     out
 }
 
+/// How one not-yet-committed trial was recovered by [`resume_run_dir`].
+pub struct ResumeTrialDetail {
+    pub fingerprint: String,
+    pub cell: String,
+    pub seed_index: u64,
+    /// `Some(round)` when the trial continued from a mid-trial checkpoint;
+    /// `None` when its checkpoints were unusable and it re-ran from scratch.
+    pub from_round: Option<u64>,
+}
+
 /// What [`resume_run_dir`] did.
 pub struct ResumeReport {
     /// Trials already committed in the run file before this invocation.
     pub committed: usize,
     /// Half-finished trials completed now, from their checkpoints.
     pub finished: usize,
+    /// Trials whose checkpoint lines were present but unrestorable,
+    /// re-run from round 0 now.
+    pub rerun: usize,
+    /// Per-trial recovery detail for everything run this invocation
+    /// (plan order: checkpoint resumes first, then scratch re-runs).
+    pub trials: Vec<ResumeTrialDetail>,
     /// Every committed trial (old + newly finished), averaged per cell.
     pub series: Vec<AveragedSeries>,
 }
@@ -166,19 +182,32 @@ pub struct ResumeReport {
 /// of re-running), then re-materialize the figures from the committed
 /// records alone — no memory of the original sweep command needed.
 pub fn resume_run_dir(dir: &Path, jobs: usize) -> Result<ResumeReport> {
+    let opts = ScheduleOptions { jobs: jobs.max(1), ..ScheduleOptions::default() };
+    resume_run_dir_with(dir, &opts)
+}
+
+/// [`resume_run_dir`] with full scheduling control: `base` carries the
+/// backend choice, job count, checkpoint cadence and process-supervisor
+/// knobs; its `run_dir`/`resume` fields are overridden to point at `dir`.
+pub fn resume_run_dir_with(dir: &Path, base: &ScheduleOptions) -> Result<ResumeReport> {
     let path = dir.join(schedule::RUNS_FILE);
     // Lock BEFORE the scan: the scan's contents feed straight into the
     // execution, so no concurrent sweep may append in between (and the
     // file — checkpoint records carry parameter-sized blobs — is only
     // parsed once, not re-loaded by the executor).
     let lock = schedule::RunDirLock::acquire(dir)?;
-    let (committed, pending) = JsonlRunSink::load_with_checkpoints(&path)?;
-    if committed.is_empty() && pending.is_empty() {
+    let contents = JsonlRunSink::load_with_checkpoints(&path)?;
+    let schedule::sink::SinkContents { records: committed, checkpoints: pending, scratch } =
+        contents;
+    if committed.is_empty() && pending.is_empty() && scratch.is_empty() {
         bail!("{} holds no committed trials and no mid-trial checkpoints", path.display());
     }
-    // Rebuild a continuation plan from checkpoint identity. BTreeMap order
-    // (fingerprint) keeps the plan deterministic across invocations.
+    // Rebuild a continuation plan from checkpoint identity: restorable
+    // checkpoints first, then trials whose checkpoint state is unreadable
+    // (these re-run from round 0). BTreeMap order (fingerprint) keeps the
+    // plan deterministic across invocations.
     let mut plan = TrialPlan::new();
+    let mut trials = Vec::new();
     for cp in pending.values() {
         plan.push_slot(TrialSlot {
             cell: cp.cell.clone(),
@@ -187,10 +216,26 @@ pub fn resume_run_dir(dir: &Path, jobs: usize) -> Result<ResumeReport> {
             config: cp.config.clone(),
             fingerprint: cp.fingerprint.clone(),
         });
+        trials.push(ResumeTrialDetail {
+            fingerprint: cp.fingerprint.clone(),
+            cell: cp.cell.clone(),
+            seed_index: cp.seed_index,
+            from_round: Some(cp.next_round()),
+        });
     }
-    let finished = plan.len();
+    for slot in scratch.values() {
+        plan.push_slot(slot.clone());
+        trials.push(ResumeTrialDetail {
+            fingerprint: slot.fingerprint.clone(),
+            cell: slot.cell.clone(),
+            seed_index: slot.seed_index,
+            from_round: None,
+        });
+    }
+    let finished = pending.len();
+    let rerun = scratch.len();
     let committed_count = committed.len();
-    let records: Vec<TrialRecord> = if finished > 0 {
+    let records: Vec<TrialRecord> = if !plan.is_empty() {
         // Hand the held lock and the pending scan straight to the executor
         // (the plan holds only pending fingerprints, so the committed-cache
         // side of the preload is irrelevant — pass it empty and keep our
@@ -199,12 +244,16 @@ pub fn resume_run_dir(dir: &Path, jobs: usize) -> Result<ResumeReport> {
         // re-read of runs.jsonl, and in particular no read after the lock
         // has been released.
         let opts = ScheduleOptions {
-            jobs: jobs.max(1),
+            jobs: base.jobs.max(1),
             run_dir: Some(dir.to_path_buf()),
             resume: true,
-            ..ScheduleOptions::default()
+            ..base.clone()
         };
-        let preloaded = (std::collections::BTreeMap::new(), pending);
+        let preloaded = schedule::sink::SinkContents {
+            records: std::collections::BTreeMap::new(),
+            checkpoints: pending,
+            scratch: std::collections::BTreeMap::new(),
+        };
         let report = schedule::execute_plan_locked(&plan, &opts, Some(lock), Some(preloaded))?;
         committed
             .into_values()
@@ -215,7 +264,7 @@ pub fn resume_run_dir(dir: &Path, jobs: usize) -> Result<ResumeReport> {
         committed.into_values().collect()
     };
     let series = series_from_records(&records);
-    Ok(ResumeReport { committed: committed_count, finished, series })
+    Ok(ResumeReport { committed: committed_count, finished, rerun, trials, series })
 }
 
 /// Namespace a plan cell key by sync topology — the ONE place the split

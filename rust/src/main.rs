@@ -6,9 +6,14 @@
 //!   grid          regenerate Figs. 4+5 (method × workers × tau grid)
 //!   policy-sweep  compare sync-policy specs on one config (policy axis)
 //!   resume        finish half-run trials in a run dir + re-materialize figures
+//!   chaos         kill-and-resume smoke: proc backend + injected SIGKILL vs sequential
 //!   bench         hot-path micro/macro benchmarks -> BENCH_hotpath.json
 //!   inspect       validate artifacts/metadata.json and time each artifact
 //!   datagen       dump synthetic-MNIST samples as ASCII (sanity check)
+//!
+//! (`trial-worker` also exists as a hidden subcommand: the child half of
+//! `--backend proc`, speaking length-prefixed JSON frames over stdin/stdout.
+//! Never invoke it by hand.)
 //!
 //! Examples:
 //!   deahes train --method deahes-o --workers 4 --tau 1 --rounds 100
@@ -30,18 +35,24 @@
 //! `train` routes through a 1-slot plan, so single runs commit/resume the
 //! same way (the seed is used verbatim — numbers match a plan-less run).
 //! `--checkpoint-every N` additionally writes a mid-trial checkpoint record
-//! every N rounds, so a killed run loses at most N rounds of the trial in
-//! flight — `deahes resume <run-dir>` (or re-running the sweep with
-//! `--resume`) continues it from the latest checkpoint, bit-identically on
-//! the quad engine:
+//! every N rounds (`--checkpoint-secs S` adds a wall-clock cadence, ORed
+//! in), so a killed run loses at most that much of the trial in flight —
+//! `deahes resume <run-dir>` (or re-running the sweep with `--resume`)
+//! continues it from the latest checkpoint, bit-identically on the quad
+//! engine:
 //!   deahes resume runs/grid
+//! `--backend proc` executes each trial in a child OS process under a
+//! supervisor (per-trial deadlines via --trial-timeout, bounded retry with
+//! exponential backoff, resume-from-latest-checkpoint relaunch), so a
+//! `kill -9`'d worker really is a killed process, not a simulated flag:
+//!   deahes grid --engine quad --backend proc --jobs 4 --run-dir runs/grid
 
 use deahes::config::{EngineKind, ExperimentConfig, GossipMode, SyncMode};
 use deahes::coordinator::{sim, FailureModel};
 use deahes::elastic::weight::Detector;
 use deahes::experiments;
 use deahes::metrics::ascii_chart;
-use deahes::schedule::ScheduleOptions;
+use deahes::schedule::{BackendChoice, KillSpec, ScheduleOptions};
 use deahes::strategies::{Method, ALL_METHODS};
 use deahes::util::cli::{Args, Cli};
 use deahes::util::logging::{self, Level};
@@ -74,6 +85,10 @@ fn run(argv: Vec<String>) -> Result<()> {
         "grid" => cmd_grid(rest),
         "policy-sweep" => cmd_policy_sweep(rest),
         "resume" => cmd_resume(rest),
+        "chaos" => cmd_chaos(rest),
+        // Hidden: the child half of `--backend proc`. Reads one request
+        // frame from stdin, streams checkpoint/outcome frames to stdout.
+        "trial-worker" => deahes::schedule::proc::worker::run_worker(),
         "bench" => cmd_bench(rest),
         "inspect" => cmd_inspect(rest),
         "datagen" => cmd_datagen(rest),
@@ -95,6 +110,7 @@ fn print_usage() {
          \x20 grid          method × workers × tau grid (paper Figs. 4+5)\n\
          \x20 policy-sweep  sync-policy specs compared on one config\n\
          \x20 resume        finish half-run trials in a run dir, re-materialize figures\n\
+         \x20 chaos         kill-and-resume smoke (proc backend + injected SIGKILL)\n\
          \x20 bench         hot-path micro/macro benchmarks (BENCH_hotpath.json)\n\
          \x20 inspect       validate + time the AOT artifacts\n\
          \x20 datagen       preview synthetic-MNIST samples\n\
@@ -167,19 +183,89 @@ fn experiment_cli(name: &str, about: &str) -> Cli {
         .flag("quiet", "suppress info logging")
 }
 
+/// Backend-selection and process-supervisor flags, shared by every
+/// subcommand that executes trials (sweeps, `train`, `resume`).
+fn backend_cli(cli: Cli) -> Cli {
+    cli.opt(
+        "backend",
+        "auto",
+        "auto|sequential|thread|proc; proc runs each trial in a child OS process under \
+         a deadline/retry supervisor (auto = sequential for --jobs 1, thread pool above)",
+    )
+    .opt(
+        "checkpoint-secs",
+        "0",
+        "also write a mid-trial checkpoint when this much wall-clock passed since the \
+         trial's last one, ORed with --checkpoint-every (0 = off; needs --run-dir)",
+    )
+    .opt(
+        "trial-timeout",
+        "0",
+        "per-attempt deadline in seconds under --backend proc; an overdue worker is \
+         killed and the attempt retried (0 = no deadline)",
+    )
+    .opt(
+        "max-retries",
+        "2",
+        "failed attempts beyond the first before a trial fails the whole plan \
+         (--backend proc)",
+    )
+    .opt(
+        "inject-kill",
+        "",
+        "TESTING: SIGKILL workers mid-trial, spec trial=K,after=R[;trial=...] — kill \
+         plan-index K's worker after its R-th checkpoint (needs --backend proc)",
+    )
+}
+
 /// Experiment flags plus the trial-schedule execution flags shared by every
 /// sweep subcommand (fig3, grid).
 fn sweep_cli(name: &str, about: &str) -> Cli {
-    experiment_cli(name, about)
-        .opt("seeds", "3", "runs to average per sweep cell")
-        .opt("jobs", "1", "trials in flight (>1 selects the thread-pool backend)")
-        .opt("run-dir", "", "persist each finished trial to <dir>/runs.jsonl")
-        .opt(
-            "checkpoint-every",
-            "0",
-            "write a mid-trial checkpoint record every N rounds (0 = off; needs --run-dir)",
-        )
-        .flag("resume", "skip trials already committed in --run-dir")
+    backend_cli(
+        experiment_cli(name, about)
+            .opt("seeds", "3", "runs to average per sweep cell")
+            .opt("jobs", "1", "trials in flight (threads, or processes under --backend proc)")
+            .opt("run-dir", "", "persist each finished trial to <dir>/runs.jsonl")
+            .opt(
+                "checkpoint-every",
+                "0",
+                "write a mid-trial checkpoint record every N rounds (0 = off; needs --run-dir)",
+            )
+            .flag("resume", "skip trials already committed in --run-dir"),
+    )
+}
+
+/// Parse the `backend_cli` flags into `opts`. Expects `opts.run_dir` and
+/// `opts.checkpoint_every` to be filled in already (the validation couples
+/// them).
+fn apply_backend_options(a: &Args, opts: &mut ScheduleOptions) -> Result<()> {
+    opts.backend = BackendChoice::parse(a.get("backend"))?;
+    let secs = a.f64("checkpoint-secs");
+    if !(secs.is_finite() && secs >= 0.0) {
+        bail!("--checkpoint-secs must be a non-negative number of seconds, got {secs}");
+    }
+    if secs > 0.0 && opts.run_dir.is_none() {
+        bail!("--checkpoint-secs needs --run-dir for the checkpoint records to land in");
+    }
+    opts.checkpoint_secs = secs;
+    let timeout = a.f64("trial-timeout");
+    if !(timeout.is_finite() && timeout >= 0.0) {
+        bail!("--trial-timeout must be a non-negative number of seconds, got {timeout}");
+    }
+    opts.proc.timeout_secs = timeout;
+    opts.proc.max_retries = u32::try_from(a.u64("max-retries"))
+        .map_err(|_| anyhow::anyhow!("--max-retries is absurdly large"))?;
+    let kills = KillSpec::parse_list(a.get("inject-kill"))?;
+    if opts.backend != BackendChoice::Proc {
+        if !kills.is_empty() {
+            bail!("--inject-kill only makes sense with --backend proc (real processes to kill)");
+        }
+        if a.provided("trial-timeout") || a.provided("max-retries") {
+            bail!("--trial-timeout/--max-retries are supervisor knobs; they need --backend proc");
+        }
+    }
+    opts.proc.inject_kill = kills;
+    Ok(())
 }
 
 fn schedule_options(a: &Args) -> Result<ScheduleOptions> {
@@ -196,13 +282,15 @@ fn schedule_options(a: &Args) -> Result<ScheduleOptions> {
     if checkpoint_every > 0 && run_dir.is_none() {
         bail!("--checkpoint-every needs --run-dir for the checkpoint records to land in");
     }
-    Ok(ScheduleOptions {
+    let mut opts = ScheduleOptions {
         jobs,
         run_dir,
         resume,
         checkpoint_every,
         ..ScheduleOptions::default()
-    })
+    };
+    apply_backend_options(a, &mut opts)?;
+    Ok(opts)
 }
 
 /// Schedule options for single-run subcommands (`train`): no `--jobs` flag,
@@ -219,16 +307,22 @@ fn schedule_options_single(a: &Args) -> Result<ScheduleOptions> {
         bail!("--checkpoint-every needs --run-dir for the checkpoint records to land in");
     }
     let crash_after_checkpoints = a.u64("crash-after-checkpoints");
-    if crash_after_checkpoints > 0 && checkpoint_every == 0 {
-        bail!("--crash-after-checkpoints needs --checkpoint-every to write any checkpoints");
-    }
-    Ok(ScheduleOptions {
+    let mut opts = ScheduleOptions {
         jobs: 1,
         run_dir,
         resume,
         checkpoint_every,
         crash_after_checkpoints,
-    })
+        ..ScheduleOptions::default()
+    };
+    apply_backend_options(a, &mut opts)?;
+    if crash_after_checkpoints > 0 && checkpoint_every == 0 && opts.checkpoint_secs == 0.0 {
+        bail!(
+            "--crash-after-checkpoints needs --checkpoint-every or --checkpoint-secs to \
+             write any checkpoints"
+        );
+    }
+    Ok(opts)
 }
 
 /// Policy specs are self-contained: when one is given, the classic
@@ -324,22 +418,24 @@ fn config_from_args(a: &Args) -> Result<ExperimentConfig> {
 }
 
 fn cmd_train(argv: Vec<String>) -> Result<()> {
-    let a = experiment_cli("deahes train", "run one experiment")
-        .opt("run-dir", "", "commit the run to <dir>/runs.jsonl (resumable like a sweep)")
-        .opt(
-            "checkpoint-every",
-            "0",
-            "write a mid-trial checkpoint record every N rounds (0 = off; needs --run-dir)",
-        )
-        .opt(
-            "crash-after-checkpoints",
-            "0",
-            "TESTING: abort the run after N checkpoints were written (crash injection \
-             for the kill-and-resume smoke; 0 = off)",
-        )
-        .flag("resume", "skip the run if its fingerprint is already committed in --run-dir")
-        .parse(&argv)
-        .map_err(anyhow::Error::msg)?;
+    let a = backend_cli(
+        experiment_cli("deahes train", "run one experiment")
+            .opt("run-dir", "", "commit the run to <dir>/runs.jsonl (resumable like a sweep)")
+            .opt(
+                "checkpoint-every",
+                "0",
+                "write a mid-trial checkpoint record every N rounds (0 = off; needs --run-dir)",
+            )
+            .opt(
+                "crash-after-checkpoints",
+                "0",
+                "TESTING: abort the run after N checkpoints were written (crash injection \
+                 for the kill-and-resume smoke; 0 = off)",
+            )
+            .flag("resume", "skip the run if its fingerprint is already committed in --run-dir"),
+    )
+    .parse(&argv)
+    .map_err(anyhow::Error::msg)?;
     let cfg = config_from_args(&a)?;
     let opts = schedule_options_single(&a)?;
     // 1-slot plan: same committed/resumable path as the sweeps, with the
@@ -574,13 +670,15 @@ fn cmd_policy_sweep(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_resume(argv: Vec<String>) -> Result<()> {
-    let a = Cli::new(
-        "deahes resume",
-        "finish half-run trials in a run directory (from their mid-trial checkpoints) \
-         and re-materialize figures straight from runs.jsonl",
+    let a = backend_cli(
+        Cli::new(
+            "deahes resume",
+            "finish half-run trials in a run directory (from their mid-trial checkpoints) \
+             and re-materialize figures straight from runs.jsonl",
+        )
+        .opt("jobs", "1", "trials in flight while finishing (threads, or processes)")
+        .flag("quiet", "suppress info logging"),
     )
-    .opt("jobs", "1", "trials in flight while finishing (>1 selects the thread pool)")
-    .flag("quiet", "suppress info logging")
     .parse(&argv)
     .map_err(anyhow::Error::msg)?;
     if a.flag("quiet") {
@@ -593,11 +691,33 @@ fn cmd_resume(argv: Vec<String>) -> Result<()> {
     if jobs == 0 {
         bail!("--jobs must be >= 1");
     }
-    let report = experiments::resume_run_dir(std::path::Path::new(dir), jobs)?;
+    let mut opts = ScheduleOptions {
+        jobs,
+        // resume_run_dir_with overrides these two to point at <dir>; the
+        // backend flags below are what matter here.
+        run_dir: Some(PathBuf::from(dir)),
+        resume: true,
+        ..ScheduleOptions::default()
+    };
+    apply_backend_options(&a, &mut opts)?;
+    let report = experiments::resume_run_dir_with(std::path::Path::new(dir), &opts)?;
     println!(
-        "{dir}: {} trial(s) were already committed, {} finished from mid-trial checkpoints",
-        report.committed, report.finished
+        "{dir}: {} trial(s) were already committed, {} finished from mid-trial checkpoints, \
+         {} re-run from scratch",
+        report.committed, report.finished, report.rerun
     );
+    for t in &report.trials {
+        match t.from_round {
+            Some(round) => println!(
+                "  {} [{} seed {}]: resumed from its checkpoint at round {round}",
+                t.fingerprint, t.cell, t.seed_index
+            ),
+            None => println!(
+                "  {} [{} seed {}]: checkpoint state unusable; re-run from scratch",
+                t.fingerprint, t.cell, t.seed_index
+            ),
+        }
+    }
     let series: Vec<(&str, Vec<f64>)> = report
         .series
         .iter()
@@ -613,6 +733,125 @@ fn cmd_resume(argv: Vec<String>) -> Result<()> {
             s.final_train_loss
         );
     }
+    Ok(())
+}
+
+/// `deahes chaos`: self-contained kill-and-resume smoke. Runs a small
+/// fig3-shaped quad plan twice — once on the sequential backend (the
+/// reference), once under `--backend proc` with a SIGKILL injected into one
+/// worker after its first checkpoint — and byte-compares the committed
+/// records. Exits nonzero on any divergence: the supervisor's
+/// relaunch-from-checkpoint path must reproduce the unkilled run exactly.
+fn cmd_chaos(argv: Vec<String>) -> Result<()> {
+    let a = Cli::new(
+        "deahes chaos",
+        "kill-and-resume smoke: run a small quad grid sequentially, then again under \
+         the proc backend with an injected SIGKILL, and byte-compare the records",
+    )
+    .opt("dir", "", "scratch directory (default: fresh under the system temp dir)")
+    .opt("jobs", "2", "worker processes in flight for the proc run")
+    .opt("rounds", "8", "rounds per trial")
+    .opt("checkpoint-every", "3", "checkpoint cadence in rounds for the proc run")
+    .flag("keep", "keep the scratch directory instead of deleting it")
+    .flag("quiet", "suppress info logging")
+    .parse(&argv)
+    .map_err(anyhow::Error::msg)?;
+    if a.flag("quiet") {
+        logging::init(Level::Warn);
+    }
+    let rounds = a.u64("rounds");
+    let every = a.u64("checkpoint-every");
+    if every == 0 || every >= rounds {
+        bail!(
+            "chaos needs 0 < --checkpoint-every < --rounds so the injected kill \
+             lands mid-trial (got every={every}, rounds={rounds})"
+        );
+    }
+    let scratch = match a.opt_nonempty("dir") {
+        Some(d) => PathBuf::from(d),
+        None => std::env::temp_dir().join(format!("deahes-chaos-{}", std::process::id())),
+    };
+    let seq_dir = scratch.join("sequential");
+    let proc_dir = scratch.join("proc");
+    for d in [&seq_dir, &proc_dir] {
+        if d.join(deahes::schedule::RUNS_FILE).exists() {
+            bail!("{} already holds a runs.jsonl; pass a fresh --dir", d.display());
+        }
+    }
+
+    // A fig3-shaped quad plan: 2 overlap ratios × 2 seeds = 4 trials.
+    let base = ExperimentConfig {
+        engine: EngineKind::Quadratic { dim: 16, heterogeneity: 0.2, noise: 0.02 },
+        workers: 2,
+        rounds,
+        eval_subset: 8,
+        ..ExperimentConfig::default()
+    };
+    let mut plan = deahes::schedule::TrialPlan::new();
+    for &r in &[0.0, 0.25] {
+        let mut cfg = base.clone();
+        cfg.method = Method::EahesO;
+        cfg.overlap_ratio = r;
+        plan.push_cell(&format!("chaos/r={r}"), &format!("r={r}"), &cfg, 2);
+    }
+
+    // Reference run: sequential backend, no checkpoints, no failures.
+    let seq_opts = ScheduleOptions {
+        backend: BackendChoice::Sequential,
+        run_dir: Some(seq_dir.clone()),
+        ..ScheduleOptions::default()
+    };
+    deahes::schedule::execute_plan(&plan, &seq_opts)?;
+
+    // Run under test: child processes, checkpoints on, SIGKILL injected
+    // into plan-index 1's worker after its first checkpoint.
+    let mut proc_opts = ScheduleOptions {
+        jobs: a.usize("jobs").max(1),
+        backend: BackendChoice::Proc,
+        run_dir: Some(proc_dir.clone()),
+        checkpoint_every: every,
+        ..ScheduleOptions::default()
+    };
+    proc_opts.proc.inject_kill = vec![KillSpec { trial: 1, after: 1 }];
+    deahes::schedule::execute_plan(&plan, &proc_opts)?;
+
+    let seq = deahes::schedule::JsonlRunSink::load(&seq_dir.join(deahes::schedule::RUNS_FILE))?;
+    let prc = deahes::schedule::JsonlRunSink::load(&proc_dir.join(deahes::schedule::RUNS_FILE))?;
+    if seq.len() != plan.len() || prc.len() != plan.len() {
+        bail!(
+            "chaos: expected {} committed records on both sides, got {} sequential / {} proc",
+            plan.len(),
+            seq.len(),
+            prc.len()
+        );
+    }
+    let mut mismatches = 0usize;
+    for (fp, rec) in &seq {
+        let Some(other) = prc.get(fp) else {
+            bail!("chaos: trial {fp} missing from the proc run");
+        };
+        if rec.to_json().to_string_compact() != other.to_json().to_string_compact() {
+            mismatches += 1;
+            eprintln!("chaos: trial {fp} differs between the sequential and proc runs");
+        }
+    }
+    if a.flag("keep") {
+        println!("scratch kept at {}", scratch.display());
+    } else {
+        let _ = std::fs::remove_dir_all(&scratch);
+    }
+    if mismatches > 0 {
+        bail!(
+            "chaos: {mismatches} of {} trial record(s) differ across backends after the \
+             injected kill",
+            plan.len()
+        );
+    }
+    println!(
+        "chaos: OK — {} trials byte-identical across sequential and proc backends (one \
+         worker SIGKILLed after checkpoint 1, relaunched from its checkpoint)",
+        plan.len()
+    );
     Ok(())
 }
 

@@ -13,6 +13,12 @@
 //!    pulling from a shared cursor. Each trial is itself the deterministic
 //!    sequential simulation, so results are identical to the sequential
 //!    backend; only wall-clock changes.
+//!  * [`ProcessBackend`](crate::schedule::proc::ProcessBackend) — up to
+//!    `jobs` trials in flight as child OS processes (`deahes trial-worker`),
+//!    supervised with deadlines, retry + backoff, and
+//!    resume-from-latest-checkpoint relaunch. Lives in `schedule::proc`;
+//!    shares [`run_trial_with_saver`] with the in-process backends, so a
+//!    worker process runs exactly the code path the sequential backend does.
 
 use crate::coordinator::sim;
 use crate::log_info;
@@ -43,6 +49,9 @@ pub struct CheckpointCtx {
     /// Plan-level cadence in rounds. 0 = no new cadence; trials resumed
     /// from a checkpoint then keep the cadence stored in it.
     pub every: u64,
+    /// Plan-level wall-clock cadence in seconds (0 = off); ORed with
+    /// `every` inside the drivers.
+    pub every_secs: f64,
     pub writer: CheckpointWriter,
     /// Testing aid (CI kill-and-resume smoke, crash-injection tests):
     /// abort the trial with an error after this many checkpoints have been
@@ -50,10 +59,50 @@ pub struct CheckpointCtx {
     pub crash_after: u64,
 }
 
+/// Effective checkpoint cadence for one trial: an explicit plan-level
+/// cadence (either knob) wins; otherwise a resumed trial keeps the cadence
+/// its writer used.
+pub fn resolve_cadence(
+    every: u64,
+    every_secs: f64,
+    resume_from: Option<&TrialCheckpoint>,
+) -> (u64, f64) {
+    if every > 0 || every_secs > 0.0 {
+        (every, every_secs)
+    } else if let Some(cp) = resume_from {
+        (cp.every, cp.every_secs)
+    } else {
+        (0, 0.0)
+    }
+}
+
 /// Run one trial to completion on the calling thread, resuming from its
 /// checkpoint when one is present and writing new checkpoints through
 /// `ckpt`.
 pub fn run_trial(trial: &PlannedTrial, ckpt: Option<&CheckpointCtx>) -> Result<TrialOutcome> {
+    match ckpt {
+        Some(ctx) => {
+            let (every, every_secs) =
+                resolve_cadence(ctx.every, ctx.every_secs, trial.resume_from.as_ref());
+            let writer = ctx.writer.clone();
+            let mut persist = move |cp: &TrialCheckpoint| writer.append(cp);
+            run_trial_with_saver(trial, every, every_secs, ctx.crash_after, &mut persist)
+        }
+        None => run_trial_with_saver(trial, 0, 0.0, 0, &mut |_| Ok(())),
+    }
+}
+
+/// Core of every backend's trial execution, parameterized over where
+/// checkpoints go: the in-process backends persist through the shared
+/// [`CheckpointWriter`]; a `deahes trial-worker` child streams them to its
+/// parent as wire frames. A cadence of (0, 0.0) runs without hooks.
+pub fn run_trial_with_saver(
+    trial: &PlannedTrial,
+    every: u64,
+    every_secs: f64,
+    crash_after: u64,
+    persist: &mut dyn FnMut(&TrialCheckpoint) -> Result<()>,
+) -> Result<TrialOutcome> {
     let t0 = Instant::now();
     let slot = &trial.slot;
     let resume_state = trial.resume_from.as_ref().map(|cp| &cp.state);
@@ -65,41 +114,32 @@ pub fn run_trial(trial: &PlannedTrial, ckpt: Option<&CheckpointCtx>) -> Result<T
             cp.next_round()
         );
     }
-    // Cadence: an explicit plan-level cadence wins; otherwise a resumed
-    // trial keeps checkpointing at the cadence its writer used.
-    let every = match (ckpt, &trial.resume_from) {
-        (Some(c), _) if c.every > 0 => c.every,
-        (Some(_), Some(resumed)) => resumed.every,
-        _ => 0,
-    };
-    let r = match ckpt {
-        Some(ctx) if every > 0 => {
-            let writer = ctx.writer.clone();
-            let crash_after = ctx.crash_after;
-            let mut written = 0u64;
-            let mut save = |state: crate::coordinator::checkpoint::RunCheckpoint| -> Result<()> {
-                writer.append(&TrialCheckpoint {
-                    fingerprint: slot.fingerprint.clone(),
-                    cell: slot.cell.clone(),
-                    label: slot.label.clone(),
-                    seed_index: slot.seed_index,
-                    config: slot.config.clone(),
-                    every,
-                    state,
-                })?;
-                written += 1;
-                if crash_after > 0 && written >= crash_after {
-                    bail!("crash injection: aborting after {written} checkpoint(s)");
-                }
-                Ok(())
-            };
-            sim::run_with(
-                &slot.config,
-                resume_state,
-                Some(sim::CheckpointHooks { every, save: &mut save }),
-            )
-        }
-        _ => sim::run_with(&slot.config, resume_state, None),
+    let r = if every > 0 || every_secs > 0.0 {
+        let mut written = 0u64;
+        let mut save = |state: crate::coordinator::checkpoint::RunCheckpoint| -> Result<()> {
+            persist(&TrialCheckpoint {
+                fingerprint: slot.fingerprint.clone(),
+                cell: slot.cell.clone(),
+                label: slot.label.clone(),
+                seed_index: slot.seed_index,
+                config: slot.config.clone(),
+                every,
+                every_secs,
+                state,
+            })?;
+            written += 1;
+            if crash_after > 0 && written >= crash_after {
+                bail!("crash injection: aborting after {written} checkpoint(s)");
+            }
+            Ok(())
+        };
+        sim::run_with(
+            &slot.config,
+            resume_state,
+            Some(sim::CheckpointHooks { every, every_secs, save: &mut save }),
+        )
+    } else {
+        sim::run_with(&slot.config, resume_state, None)
     }
     .with_context(|| {
         format!("trial {} [{} seed {}]", slot.fingerprint, slot.cell, slot.seed_index)

@@ -31,6 +31,9 @@ pub struct TrialCheckpoint {
     /// Cadence (rounds between cuts) the writing run used — a resumed run
     /// keeps it unless the caller overrides.
     pub every: u64,
+    /// Wall-clock cadence (seconds between cuts; 0 = off) the writing run
+    /// used — ORed with `every`, carried across resume like it.
+    pub every_secs: f64,
     pub state: RunCheckpoint,
 }
 
@@ -41,7 +44,7 @@ impl TrialCheckpoint {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             (CHECKPOINT_KEY, Json::num(1.0)),
             ("schema", Json::str(&crate::schedule::sink::config_schema_hash())),
             ("fingerprint", Json::str(&self.fingerprint)),
@@ -50,8 +53,14 @@ impl TrialCheckpoint {
             ("seed_index", Json::num(self.seed_index as f64)),
             ("config", self.config.to_json()),
             ("every", Json::num(self.every as f64)),
-            ("state", self.state.to_json()),
-        ])
+        ];
+        // Omitted when off, so round-cadence-only runs serialize exactly as
+        // they did before the wall-clock knob existed.
+        if self.every_secs > 0.0 {
+            fields.push(("every_secs", Json::num(self.every_secs)));
+        }
+        fields.push(("state", self.state.to_json()));
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<TrialCheckpoint> {
@@ -77,8 +86,39 @@ impl TrialCheckpoint {
             config: ExperimentConfig::from_json(j.get("config"))
                 .context("checkpoint: bad 'config'")?,
             every: j.get("every").as_f64().unwrap_or(0.0) as u64,
+            every_secs: j.get("every_secs").as_f64().unwrap_or(0.0),
             state: RunCheckpoint::from_json(j.get("state"))
                 .context("checkpoint: bad 'state'")?,
+        })
+    }
+
+    /// Decode only the trial *identity* of a checkpoint line — fingerprint,
+    /// plan coordinates, config — skipping the (possibly unusable) `state`.
+    /// `deahes resume` uses this to rebuild a from-scratch slot for trials
+    /// whose checkpoint state cannot restore (e.g. written by a different
+    /// driver build), so they re-run instead of silently vanishing.
+    pub fn identity_from_json(j: &Json) -> Result<crate::schedule::plan::TrialSlot> {
+        ensure!(
+            *j.get(CHECKPOINT_KEY) != Json::Null,
+            "not a checkpoint line (missing '{CHECKPOINT_KEY}')"
+        );
+        let schema = j.get("schema").as_str().unwrap_or("");
+        let ours = crate::schedule::sink::config_schema_hash();
+        ensure!(
+            schema == ours,
+            "checkpoint written under config schema {schema}, this build uses {ours}"
+        );
+        Ok(crate::schedule::plan::TrialSlot {
+            fingerprint: j
+                .get("fingerprint")
+                .as_str()
+                .context("checkpoint: missing 'fingerprint'")?
+                .to_string(),
+            cell: j.get("cell").as_str().context("checkpoint: missing 'cell'")?.to_string(),
+            label: j.get("label").as_str().unwrap_or("").to_string(),
+            seed_index: j.get("seed_index").as_f64().unwrap_or(0.0) as u64,
+            config: ExperimentConfig::from_json(j.get("config"))
+                .context("checkpoint: bad 'config'")?,
         })
     }
 }
@@ -97,6 +137,7 @@ mod tests {
             seed_index: 1,
             config: ExperimentConfig::default(),
             every: 10,
+            every_secs: 0.0,
             state: RunCheckpoint {
                 driver: DRIVER_SEQUENTIAL.into(),
                 next_round: 0,
@@ -125,6 +166,36 @@ mod tests {
         assert_eq!(back.seed_index, 1);
         assert_eq!(back.every, 10);
         assert_eq!(back.next_round(), 0);
+    }
+
+    /// `every_secs` round-trips when set, and is *omitted* when off so the
+    /// pre-wall-clock line encoding stays byte-stable.
+    #[test]
+    fn every_secs_roundtrips_and_is_omitted_when_off() {
+        let mut cp = sample();
+        assert!(!cp.to_json().to_string_compact().contains("every_secs"));
+        cp.every_secs = 2.5;
+        let j = cp.to_json();
+        assert!(j.to_string_compact().contains("every_secs"));
+        let back = TrialCheckpoint::from_json(&j).unwrap();
+        assert_eq!(back.every_secs, 2.5);
+        assert_eq!(back.every, 10);
+    }
+
+    /// Identity decode recovers the slot coordinates without touching the
+    /// state payload — even a state another build cannot restore.
+    #[test]
+    fn identity_from_json_skips_the_state() {
+        let cp = sample();
+        let mut j = cp.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("state".into(), Json::str("opaque-garbage"));
+        }
+        assert!(TrialCheckpoint::from_json(&j).is_err(), "state must be unusable");
+        let slot = TrialCheckpoint::identity_from_json(&j).unwrap();
+        assert_eq!(slot.fingerprint, cp.fingerprint);
+        assert_eq!(slot.cell, cp.cell);
+        assert_eq!(slot.seed_index, 1);
     }
 
     #[test]

@@ -3,11 +3,19 @@
 //! Two concurrent sweeps appending to one `runs.jsonl` would interleave
 //! writes (and race the resume cache); [`RunDirLock::acquire`] makes the
 //! second process fail fast with a clear message instead. The lock is a
-//! `runs.lock` file created with `O_EXCL` carrying the holder's pid —
-//! dependency-free (no `flock` crate offline) and crash-tolerant: a lock
-//! left behind by a dead process is detected via `/proc/<pid>` and stolen.
-//! On non-Linux hosts liveness cannot be probed portably, so an existing
-//! lock is conservatively treated as held.
+//! `runs.lock` file created with `O_EXCL` carrying the holder's pid and —
+//! on Linux — the pid's start-time from `/proc/<pid>/stat`, so a *recycled*
+//! pid (same number, different process) cannot hold a dead lock forever:
+//! staleness is "no such pid, or a pid born at a different time", not mere
+//! `/proc/<pid>` existence. Dependency-free (no `flock` crate offline) and
+//! crash-tolerant. On non-Linux hosts liveness cannot be probed portably,
+//! so an existing lock is conservatively treated as held.
+//!
+//! The process backend also uses this shape for **per-trial sublocks**
+//! ([`RunDirLock::acquire_file`]): each `deahes trial-worker` child stamps
+//! `<run-dir>/locks/trial-<fingerprint>.lock` while it runs, so two
+//! supervisors sharing one run dir (multi-host sweeps) cannot execute the
+//! same trial concurrently.
 //!
 //! The steal path (probe, remove, recreate) has a small race window if two
 //! processes steal the same stale lock simultaneously; the lock is
@@ -22,59 +30,92 @@ use std::path::{Path, PathBuf};
 /// File name of the lock inside a run directory.
 pub const LOCK_FILE: &str = "runs.lock";
 
-/// Held lock on a run directory; released (file removed) on drop.
+/// Held lock on a run directory (or a single lock file); released (file
+/// removed) on drop.
 #[derive(Debug)]
 pub struct RunDirLock {
     path: PathBuf,
 }
 
-fn process_alive(pid: u32) -> bool {
-    if cfg!(target_os = "linux") {
-        Path::new(&format!("/proc/{pid}")).exists()
-    } else {
+/// Start time of `pid` in clock ticks since boot (field 22 of
+/// `/proc/<pid>/stat`), or `None` when it cannot be read — the process is
+/// gone, or we are not on Linux. The comm field (2) may contain spaces and
+/// parentheses, so the line is split after the *last* `)` before indexing.
+fn pid_start_time(pid: u32) -> Option<u64> {
+    let stat = std::fs::read_to_string(format!("/proc/{pid}/stat")).ok()?;
+    let after_comm = &stat[stat.rfind(')')? + 1..];
+    // after_comm starts at field 3 (state); start-time is field 22, i.e.
+    // index 19 of the whitespace-split remainder.
+    after_comm.split_whitespace().nth(19)?.parse().ok()
+}
+
+/// Is the lock holder recorded as `pid` (born at `start`, when recorded)
+/// still alive? A recycled pid — same number, different start-time — counts
+/// as dead.
+fn holder_alive(pid: u32, start: Option<u64>) -> bool {
+    if !cfg!(target_os = "linux") {
         // No portable liveness probe: assume the holder is alive (the safe
         // direction — a stale lock then needs manual deletion).
-        true
+        return true;
+    }
+    match (pid_start_time(pid), start) {
+        (None, _) => false,                       // no such process
+        (Some(_), None) => true,                  // legacy pid-only lock: existence is all we have
+        (Some(now), Some(then)) => now == then,   // recycled pid ⇒ dead holder
     }
 }
 
 impl RunDirLock {
+    /// Lock a run directory (creates it if missing) via its `runs.lock`.
     pub fn acquire(dir: &Path) -> Result<RunDirLock> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating run directory {}", dir.display()))?;
-        let path = dir.join(LOCK_FILE);
+        RunDirLock::acquire_file(&dir.join(LOCK_FILE))
+    }
+
+    /// Lock a single lock file by path (parent directories are created).
+    /// Used for per-trial sublocks under `<run-dir>/locks/`.
+    pub fn acquire_file(path: &Path) -> Result<RunDirLock> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating lock directory {}", parent.display()))?;
+        }
         // A few attempts so one stale-lock steal can retry the create; two
         // LIVE contenders never loop (they bail on the alive check).
         for _ in 0..5 {
-            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(path) {
                 Ok(mut f) => {
-                    writeln!(f, "{}", std::process::id())
-                        .and_then(|_| f.flush())
-                        .with_context(|| format!("writing lock {}", path.display()))?;
-                    return Ok(RunDirLock { path });
+                    let pid = std::process::id();
+                    match pid_start_time(pid) {
+                        Some(start) => writeln!(f, "{pid} {start}"),
+                        None => writeln!(f, "{pid}"),
+                    }
+                    .and_then(|_| f.flush())
+                    .with_context(|| format!("writing lock {}", path.display()))?;
+                    return Ok(RunDirLock { path: path.to_path_buf() });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                    let holder = std::fs::read_to_string(&path).unwrap_or_default();
-                    match holder.trim().parse::<u32>() {
-                        Ok(pid) if !process_alive(pid) => {
+                    let holder = std::fs::read_to_string(path).unwrap_or_default();
+                    let mut tokens = holder.split_whitespace();
+                    let pid = tokens.next().map(|t| t.parse::<u32>());
+                    let start = tokens.next().and_then(|t| t.parse::<u64>().ok());
+                    match pid {
+                        Some(Ok(pid)) if !holder_alive(pid, start) => {
                             log_warn!(
-                                "run dir {}: stealing lock left by dead process {pid}",
-                                dir.display()
+                                "lock {}: stealing lock left by dead process {pid}",
+                                path.display()
                             );
-                            let _ = std::fs::remove_file(&path);
+                            let _ = std::fs::remove_file(path);
                             continue;
                         }
-                        Ok(pid) => bail!(
-                            "run directory {} is locked by running process {pid}: two sweeps \
-                             must not share one runs.jsonl (wait for it, use another \
-                             --run-dir, or delete {} if you are certain nothing is running)",
-                            dir.display(),
+                        Some(Ok(pid)) => bail!(
+                            "{} is locked by running process {pid}: two runs must not \
+                             share it (wait for it, use another --run-dir, or delete the \
+                             lock file if you are certain nothing is running)",
                             path.display()
                         ),
-                        Err(_) => bail!(
-                            "run directory {} has an unreadable lock file {} — delete it if \
-                             no sweep is running",
-                            dir.display(),
+                        _ => bail!(
+                            "unreadable lock file {} — delete it if no sweep is running",
                             path.display()
                         ),
                     }
@@ -132,10 +173,43 @@ mod tests {
         let dir = tmp_dir("stale");
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
-        // pid_max on Linux caps at 2^22; this pid cannot exist
+        // pid_max on Linux caps at 2^22; this pid cannot exist. Pid-only
+        // content also exercises the legacy (no start-time) lock format.
         std::fs::write(dir.join(LOCK_FILE), "4194399\n").unwrap();
         let lock = RunDirLock::acquire(&dir).unwrap();
         drop(lock);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A lock stamped with a *live* pid but the wrong start-time is a
+    /// recycled pid: the original holder is dead and the lock is stolen.
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn recycled_pid_with_wrong_start_time_is_stolen() {
+        let dir = tmp_dir("recycled");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let pid = std::process::id();
+        let start = pid_start_time(pid).expect("own start time readable on linux");
+        std::fs::write(dir.join(LOCK_FILE), format!("{pid} {}\n", start + 1)).unwrap();
+        let lock = RunDirLock::acquire(&dir).unwrap();
+        drop(lock);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The matching start-time branch: a live pid whose recorded start-time
+    /// agrees really does hold the lock.
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn live_pid_with_matching_start_time_holds() {
+        let dir = tmp_dir("matching");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let pid = std::process::id();
+        let start = pid_start_time(pid).expect("own start time readable on linux");
+        std::fs::write(dir.join(LOCK_FILE), format!("{pid} {start}\n")).unwrap();
+        let err = RunDirLock::acquire(&dir).unwrap_err().to_string();
+        assert!(err.contains("locked by running process"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -147,6 +221,21 @@ mod tests {
         std::fs::write(dir.join(LOCK_FILE), "not-a-pid\n").unwrap();
         let err = RunDirLock::acquire(&dir).unwrap_err().to_string();
         assert!(err.contains("unreadable lock"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Per-trial sublocks: path-based acquire creates parents, conflicts
+    /// like the run-dir lock, and releases on drop.
+    #[test]
+    fn sublock_acquire_conflict_and_release() {
+        let dir = tmp_dir("sublock");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("locks").join("trial-abc.lock");
+        let lock = RunDirLock::acquire_file(&path).unwrap();
+        assert!(path.exists());
+        assert!(RunDirLock::acquire_file(&path).is_err());
+        drop(lock);
+        assert!(!path.exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

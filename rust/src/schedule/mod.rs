@@ -6,8 +6,8 @@
 //! ```text
 //!   sweep ──▶ TrialPlan ──▶ TrialBackend ──▶ Committer ──▶ RunSink
 //!             (flat slots,   (sequential |    (re-orders     (JSONL, one
-//!              derived seeds, thread-pool     completions     record per
-//!              fingerprints)  --jobs N)       to plan order)  trial)
+//!              derived seeds, thread-pool |   completions     record per
+//!              fingerprints)  child procs)    to plan order)  trial)
 //!                                                 │
 //!                                                 ▼
 //!                                        ordered TrialOutcomes
@@ -27,6 +27,7 @@ pub mod checkpoint;
 pub mod commit;
 pub mod lock;
 pub mod plan;
+pub mod proc;
 pub mod record;
 pub mod sink;
 
@@ -37,6 +38,7 @@ pub use checkpoint::{TrialCheckpoint, CHECKPOINT_KEY};
 pub use commit::Committer;
 pub use lock::RunDirLock;
 pub use plan::{fingerprint, trial_seed, TrialPlan, TrialSlot};
+pub use proc::{KillSpec, ProcOptions, ProcessBackend};
 pub use record::{TrialOutcome, TrialRecord};
 pub use sink::{config_schema_hash, CheckpointWriter, JsonlRunSink, NullSink, RunSink};
 
@@ -47,11 +49,41 @@ use std::path::PathBuf;
 /// File name of the run sink inside a run directory.
 pub const RUNS_FILE: &str = "runs.jsonl";
 
+/// Which [`TrialBackend`] executes the plan (`--backend`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Historic behaviour: `--jobs 1` → sequential, `--jobs N` → thread
+    /// pool.
+    #[default]
+    Auto,
+    Sequential,
+    Thread,
+    /// Child OS processes under the retry/backoff supervisor
+    /// ([`ProcessBackend`]).
+    Proc,
+}
+
+impl BackendChoice {
+    pub fn parse(text: &str) -> Result<BackendChoice> {
+        match text {
+            "auto" => Ok(BackendChoice::Auto),
+            "sequential" => Ok(BackendChoice::Sequential),
+            "thread" => Ok(BackendChoice::Thread),
+            "proc" => Ok(BackendChoice::Proc),
+            other => bail!("unknown backend '{other}' (want auto, sequential, thread, proc)"),
+        }
+    }
+}
+
 /// How a plan should be executed.
 #[derive(Clone, Debug)]
 pub struct ScheduleOptions {
-    /// Trials in flight: 1 = sequential backend, >1 = thread pool.
+    /// Trials in flight: 1 = sequential backend, >1 = thread pool (under
+    /// `BackendChoice::Auto`); worker-process count for `--backend proc`.
     pub jobs: usize,
+    /// Which backend runs the plan. Execution-only: fingerprints, plan
+    /// order and committed bytes are identical across choices.
+    pub backend: BackendChoice,
     /// Directory holding `runs.jsonl`; `None` disables persistence.
     pub run_dir: Option<PathBuf>,
     /// Skip trials whose fingerprint is already committed in the run dir,
@@ -61,19 +93,28 @@ pub struct ScheduleOptions {
     /// `runs.jsonl` every this many rounds inside every running trial
     /// (0 = off). Requires `run_dir`.
     pub checkpoint_every: u64,
+    /// Wall-clock checkpoint cadence in seconds (0 = off), ORed with
+    /// `checkpoint_every`. Requires `run_dir`.
+    pub checkpoint_secs: f64,
     /// Testing aid: abort each trial after it wrote this many checkpoints
     /// (0 = never). See `CheckpointCtx::crash_after`.
     pub crash_after_checkpoints: u64,
+    /// Supervisor knobs for `--backend proc` (deadline, retries, backoff,
+    /// fault injection).
+    pub proc: ProcOptions,
 }
 
 impl Default for ScheduleOptions {
     fn default() -> Self {
         ScheduleOptions {
             jobs: 1,
+            backend: BackendChoice::Auto,
             run_dir: None,
             resume: false,
             checkpoint_every: 0,
+            checkpoint_secs: 0.0,
             crash_after_checkpoints: 0,
+            proc: ProcOptions::default(),
         }
     }
 }
@@ -90,12 +131,19 @@ pub struct ScheduleReport {
     pub backend: &'static str,
 }
 
-/// Pick the backend for a jobs count.
-pub fn make_backend(jobs: usize) -> Box<dyn TrialBackend> {
-    if jobs <= 1 {
-        Box::new(SequentialBackend)
-    } else {
-        Box::new(ThreadPoolBackend { jobs })
+/// Pick the backend for the chosen options.
+pub fn make_backend(opts: &ScheduleOptions) -> Box<dyn TrialBackend> {
+    let jobs = opts.jobs.max(1);
+    match opts.backend {
+        BackendChoice::Auto if jobs <= 1 => Box::new(SequentialBackend),
+        BackendChoice::Auto => Box::new(ThreadPoolBackend { jobs }),
+        BackendChoice::Sequential => Box::new(SequentialBackend),
+        BackendChoice::Thread => Box::new(ThreadPoolBackend { jobs }),
+        BackendChoice::Proc => Box::new(ProcessBackend {
+            jobs,
+            opts: opts.proc.clone(),
+            run_dir: opts.run_dir.clone(),
+        }),
     }
 }
 
@@ -133,10 +181,15 @@ pub(crate) fn execute_plan_locked(
             debug_assert!(_lock.is_some(), "a run dir requires the lock");
             let path = dir.join(RUNS_FILE);
             if opts.resume {
-                (cache, checkpoints) = match preloaded {
+                let contents = match preloaded {
                     Some(contents) => contents,
                     None => JsonlRunSink::load_with_checkpoints(&path)?,
                 };
+                cache = contents.records;
+                checkpoints = contents.checkpoints;
+                // contents.scratch (checkpoint lines whose state cannot
+                // restore) is a `deahes resume` concern: a sweep re-invoked
+                // with --resume re-plans those trials from its own grid.
             } else if sink::has_committed_records(&path) {
                 log_warn!(
                     "{} already holds committed trials; appending duplicates — \
@@ -145,9 +198,11 @@ pub(crate) fn execute_plan_locked(
                 );
             }
             let sink = JsonlRunSink::open(&path)?;
-            if opts.checkpoint_every > 0 || !checkpoints.is_empty() {
+            if opts.checkpoint_every > 0 || opts.checkpoint_secs > 0.0 || !checkpoints.is_empty()
+            {
                 ckpt_ctx = Some(CheckpointCtx {
                     every: opts.checkpoint_every,
+                    every_secs: opts.checkpoint_secs,
                     writer: sink.checkpoint_writer(),
                     crash_after: opts.crash_after_checkpoints,
                 });
@@ -158,7 +213,7 @@ pub(crate) fn execute_plan_locked(
             if opts.resume {
                 bail!("--resume needs a run directory (--run-dir) to resume from");
             }
-            if opts.checkpoint_every > 0 {
+            if opts.checkpoint_every > 0 || opts.checkpoint_secs > 0.0 {
                 bail!("mid-trial checkpoints need a run directory (--run-dir) to land in");
             }
             Box::new(NullSink)
@@ -186,7 +241,7 @@ pub(crate) fn execute_plan_locked(
         }
     }
 
-    let backend = make_backend(opts.jobs);
+    let backend = make_backend(opts);
     log_info!(
         "schedule: {} trial(s) over {} cell(s), backend={} jobs={}{}{}",
         plan.len(),

@@ -14,7 +14,9 @@
 //! grids).
 
 use crate::config::ExperimentConfig;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+use anyhow::{Context, Result};
 
 /// One unit of schedulable work: a fully-resolved config for a single run.
 #[derive(Clone, Debug)]
@@ -31,6 +33,35 @@ pub struct TrialSlot {
     pub config: ExperimentConfig,
     /// Stable identity of this trial for the run sink (hex).
     pub fingerprint: String,
+}
+
+impl TrialSlot {
+    /// Serialize for the process-backend wire protocol. Fingerprints travel
+    /// verbatim (never re-derived on the worker side), so a slot round-trips
+    /// into exactly the sink identity the supervisor planned.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cell", Json::str(&self.cell)),
+            ("label", Json::str(&self.label)),
+            ("seed_index", Json::num(self.seed_index as f64)),
+            ("config", self.config.to_json()),
+            ("fingerprint", Json::str(&self.fingerprint)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrialSlot> {
+        Ok(TrialSlot {
+            cell: j.get("cell").as_str().context("slot: missing 'cell'")?.to_string(),
+            label: j.get("label").as_str().unwrap_or("").to_string(),
+            seed_index: j.get("seed_index").as_f64().unwrap_or(0.0) as u64,
+            config: ExperimentConfig::from_json(j.get("config")).context("slot: bad 'config'")?,
+            fingerprint: j
+                .get("fingerprint")
+                .as_str()
+                .context("slot: missing 'fingerprint'")?
+                .to_string(),
+        })
+    }
 }
 
 /// An ordered, flat execution plan over sweep cells.
@@ -206,6 +237,23 @@ mod tests {
         // a second push of the same cell key stays a distinct cell
         plan.push_run("train", "train", &cfg);
         assert_eq!(plan.cells(), vec!["train", "train#2"]);
+    }
+
+    /// Wire-protocol identity: a slot survives a JSON round-trip with its
+    /// fingerprint verbatim (the worker must never re-derive it).
+    #[test]
+    fn slot_json_roundtrip_preserves_identity() {
+        let cfg = ExperimentConfig::default();
+        let mut plan = TrialPlan::new();
+        plan.push_cell("fig3/r=0.25", "r=25.0%", &cfg, 2);
+        let slot = &plan.slots[1];
+        let j = Json::parse(&slot.to_json().to_string_compact()).unwrap();
+        let back = TrialSlot::from_json(&j).unwrap();
+        assert_eq!(back.cell, slot.cell);
+        assert_eq!(back.label, slot.label);
+        assert_eq!(back.seed_index, slot.seed_index);
+        assert_eq!(back.fingerprint, slot.fingerprint);
+        assert_eq!(back.config.seed, slot.config.seed);
     }
 
     #[test]

@@ -1,0 +1,597 @@
+//! Out-of-process trial backend: real worker processes, real failures.
+//!
+//! [`ProcessBackend`] executes each planned trial in a child OS process
+//! (`deahes trial-worker`) and supervises the fleet: submit → poll with
+//! per-trial deadlines, bounded retry with exponential backoff + jitter,
+//! crash classification (clean exit / nonzero / signal / timeout), and
+//! automatic resume-from-latest-checkpoint on relaunch. The paper's failure
+//! story — a worker node dying mid-training — stops being an in-memory
+//! flag here: `kill -9` a worker and the supervisor relaunches it from the
+//! newest checkpoint cut, converging to a committed record byte-identical
+//! to an unkilled run (where the cadence allows; rounds since the last cut
+//! are re-executed deterministically).
+//!
+//! Determinism: the backend is execution-only. Fingerprints, plan order,
+//! committed bytes are all decided before any process spawns; the wire
+//! layer ships parsed JSON whose serialization is byte-stable, and the
+//! committer re-orders completions into plan order exactly as it does for
+//! the thread-pool backend.
+//!
+//! Fault injection is first-class: [`KillSpec`] (`--inject-kill
+//! trial=K,after=R`) SIGKILLs trial `K`'s worker after its `R`-th observed
+//! checkpoint — an injected kill consumes no retry budget and relaunches
+//! immediately, because it is the scenario the backend exists to absorb.
+
+pub mod wire;
+pub mod worker;
+
+use crate::schedule::backend::{resolve_cadence, CheckpointCtx, PlannedTrial, TrialBackend};
+use crate::schedule::checkpoint::TrialCheckpoint;
+use crate::schedule::commit::Committer;
+use crate::schedule::plan::fnv1a64;
+use crate::schedule::record::{TrialOutcome, TrialRecord};
+use crate::util::json::Json;
+use crate::{log_info, log_warn};
+use anyhow::{bail, Context, Result};
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One fault-injection rule: SIGKILL the worker running plan-index `trial`
+/// once `after` of its checkpoints have been observed by the supervisor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KillSpec {
+    pub trial: usize,
+    pub after: u64,
+}
+
+impl KillSpec {
+    /// Parse `trial=K,after=R` specs, `;`-separated: the grammar of
+    /// `--inject-kill`.
+    pub fn parse_list(text: &str) -> Result<Vec<KillSpec>> {
+        let mut out = Vec::new();
+        for spec in text.split(';').filter(|s| !s.trim().is_empty()) {
+            let mut trial: Option<usize> = None;
+            let mut after: Option<u64> = None;
+            for part in spec.split(',') {
+                let (key, value) = part
+                    .split_once('=')
+                    .with_context(|| format!("--inject-kill: expected key=value in '{part}'"))?;
+                match key.trim() {
+                    "trial" => {
+                        trial = Some(value.trim().parse().with_context(|| {
+                            format!("--inject-kill: bad trial index '{value}'")
+                        })?)
+                    }
+                    "after" => {
+                        after = Some(value.trim().parse().with_context(|| {
+                            format!("--inject-kill: bad checkpoint count '{value}'")
+                        })?)
+                    }
+                    other => bail!("--inject-kill: unknown key '{other}' (want trial, after)"),
+                }
+            }
+            let trial = trial.context("--inject-kill: missing 'trial='")?;
+            let after = after.context("--inject-kill: missing 'after='")?;
+            anyhow::ensure!(after >= 1, "--inject-kill: 'after' must be >= 1");
+            out.push(KillSpec { trial, after });
+        }
+        Ok(out)
+    }
+}
+
+/// Supervisor policy knobs, CLI-shaped.
+#[derive(Clone, Debug)]
+pub struct ProcOptions {
+    /// Per-attempt wall-clock deadline in seconds; 0 = none. A worker past
+    /// its deadline is killed and the attempt classified as a timeout.
+    pub timeout_secs: f64,
+    /// Failed attempts beyond the first before the plan fails fast.
+    /// Injected kills do not count.
+    pub max_retries: u32,
+    /// Base relaunch delay; attempt `n` waits `backoff_ms * 2^(n-1)` plus a
+    /// deterministic fingerprint-keyed jitter.
+    pub backoff_ms: u64,
+    pub inject_kill: Vec<KillSpec>,
+    /// Worker binary; defaults to `current_exe`. Integration tests point it
+    /// at `CARGO_BIN_EXE_deahes` (the test harness binary is not `deahes`).
+    pub worker_exe: Option<PathBuf>,
+    /// Test hook forwarded to workers: sleep before starting the trial so
+    /// timeout tests get a deterministic window.
+    pub test_stall_ms: u64,
+}
+
+impl Default for ProcOptions {
+    fn default() -> ProcOptions {
+        ProcOptions {
+            timeout_secs: 0.0,
+            max_retries: 2,
+            backoff_ms: 250,
+            inject_kill: Vec::new(),
+            worker_exe: None,
+            test_stall_ms: 0,
+        }
+    }
+}
+
+/// `jobs` child processes in flight, one trial per process.
+pub struct ProcessBackend {
+    pub jobs: usize,
+    pub opts: ProcOptions,
+    /// Run directory (when persisting): children stamp per-trial sublocks
+    /// under `<run_dir>/locks/`.
+    pub run_dir: Option<PathBuf>,
+}
+
+/// What a reader thread distilled from its worker's stdout.
+enum Event {
+    Checkpoint(TrialCheckpoint),
+    Outcome(Box<TrialOutcome>),
+    /// The worker reported a structured error frame (it will exit 1).
+    WorkerError(String),
+    /// Stream over — cleanly, or with the read error a kill leaves behind.
+    Eof { read_error: Option<String> },
+}
+
+/// Supervisor-side state for one planned trial.
+struct SlotState {
+    attempts: u32,
+    /// Newest checkpoint observed across all attempts: the relaunch resume
+    /// point.
+    latest: Option<TrialCheckpoint>,
+    checkpoints_seen: u64,
+    injected: bool,
+    next_launch_at: Instant,
+    launched: bool,
+    done: bool,
+}
+
+/// One live child process.
+struct Running {
+    pos: usize,
+    generation: u64,
+    child: Child,
+    deadline: Option<Instant>,
+    outcome_seen: bool,
+    kill_injected: bool,
+    timeout_fired: bool,
+    worker_error: Option<String>,
+}
+
+impl ProcessBackend {
+    fn worker_exe(&self) -> Result<PathBuf> {
+        match &self.opts.worker_exe {
+            Some(p) => Ok(p.clone()),
+            None => std::env::current_exe().context("resolving the deahes binary path"),
+        }
+    }
+
+    fn sublock_path(&self, trial: &PlannedTrial) -> Option<String> {
+        self.run_dir.as_ref().map(|dir| {
+            dir.join("locks")
+                .join(format!("trial-{}.lock", trial.slot.fingerprint))
+                .to_string_lossy()
+                .into_owned()
+        })
+    }
+
+    /// Exponential backoff with deterministic jitter: the jitter dodges
+    /// thundering-herd relaunches without introducing a nondeterministic
+    /// schedule (it is keyed on fingerprint and attempt, not a clock).
+    fn backoff(&self, trial: &PlannedTrial, attempts: u32) -> Duration {
+        let base = self.opts.backoff_ms.saturating_mul(1u64 << (attempts - 1).min(16));
+        let key = format!("{}#{attempts}", trial.slot.fingerprint);
+        let jitter = fnv1a64(key.as_bytes()) % self.opts.backoff_ms.max(1);
+        Duration::from_millis(base.saturating_add(jitter))
+    }
+}
+
+impl TrialBackend for ProcessBackend {
+    fn name(&self) -> &'static str {
+        "proc"
+    }
+
+    fn execute(
+        &self,
+        trials: &[PlannedTrial],
+        ckpt: Option<&CheckpointCtx>,
+        committer: &mut Committer<'_>,
+    ) -> Result<()> {
+        let n = trials.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let exe = self.worker_exe()?;
+        let jobs = self.jobs.clamp(1, n);
+        let now = Instant::now();
+        let mut slots: Vec<SlotState> = (0..n)
+            .map(|_| SlotState {
+                attempts: 0,
+                latest: None,
+                checkpoints_seen: 0,
+                injected: false,
+                next_launch_at: now,
+                launched: false,
+                done: false,
+            })
+            .collect();
+        let mut running: Vec<Running> = Vec::with_capacity(jobs);
+        let mut remaining = n;
+        let mut generation = 0u64;
+        let (tx, rx) = mpsc::channel::<(u64, Event)>();
+
+        let kill_all = |running: &mut Vec<Running>| {
+            for r in running.iter_mut() {
+                let _ = r.child.kill();
+                let _ = r.child.wait();
+            }
+            running.clear();
+        };
+
+        let result = std::thread::scope(|scope| -> Result<()> {
+            while remaining > 0 {
+                // Launch phase: fill free job slots with trials whose
+                // backoff deadline has passed, in plan order.
+                while running.len() < jobs {
+                    let now = Instant::now();
+                    let Some(pos) = (0..n).find(|&i| {
+                        !slots[i].done
+                            && !slots[i].launched
+                            && slots[i].next_launch_at <= now
+                    }) else {
+                        break;
+                    };
+                    let slot = &mut slots[pos];
+                    let trial = &trials[pos];
+                    let (every, every_secs) = match ckpt {
+                        Some(ctx) => resolve_cadence(
+                            ctx.every,
+                            ctx.every_secs,
+                            slot.latest.as_ref().or(trial.resume_from.as_ref()),
+                        ),
+                        None => (0, 0.0),
+                    };
+                    let request = worker::WorkerRequest {
+                        slot: trial.slot.clone(),
+                        // The newest checkpoint this supervisor observed
+                        // beats the (older) one the plan was built with.
+                        resume: slot.latest.clone().or_else(|| trial.resume_from.clone()),
+                        every,
+                        every_secs,
+                        crash_after: ckpt.map_or(0, |c| c.crash_after),
+                        sublock: self.sublock_path(trial),
+                        stall_ms: self.opts.test_stall_ms,
+                    }
+                    .to_json();
+                    generation += 1;
+                    let generation = generation;
+                    let mut child = Command::new(&exe)
+                        .arg("trial-worker")
+                        .stdin(Stdio::piped())
+                        .stdout(Stdio::piped())
+                        .stderr(Stdio::inherit())
+                        .spawn()
+                        .with_context(|| {
+                            format!("spawning trial-worker ({})", exe.display())
+                        })?;
+                    let stdin = child.stdin.take().expect("piped stdin");
+                    let stdout = child.stdout.take().expect("piped stdout");
+                    let tx = tx.clone();
+                    std::thread::Builder::new()
+                        .name(format!("proc-reader-{pos}"))
+                        .spawn_scoped(scope, move || {
+                            reader_thread(generation, request, stdin, stdout, tx)
+                        })
+                        .expect("spawn reader thread");
+                    let deadline = (self.opts.timeout_secs > 0.0)
+                        .then(|| Instant::now() + Duration::from_secs_f64(self.opts.timeout_secs));
+                    log_info!(
+                        "proc backend: trial {} [{} seed {}] launched as pid {} (attempt {})",
+                        trial.slot.fingerprint,
+                        trial.slot.cell,
+                        trial.slot.seed_index,
+                        child.id(),
+                        slot.attempts + 1
+                    );
+                    slot.launched = true;
+                    running.push(Running {
+                        pos,
+                        generation,
+                        child,
+                        deadline,
+                        outcome_seen: false,
+                        kill_injected: false,
+                        timeout_fired: false,
+                        worker_error: None,
+                    });
+                }
+
+                // Poll phase: one event or a 50ms tick, then deadline scan.
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok((gen, event)) => {
+                        let Some(ri) = running.iter().position(|r| r.generation == gen)
+                        else {
+                            continue; // stale event from a reaped attempt
+                        };
+                        match event {
+                            Event::Checkpoint(cp) => {
+                                let pos = running[ri].pos;
+                                if let Some(ctx) = ckpt {
+                                    if let Err(e) = ctx.writer.append(&cp) {
+                                        kill_all(&mut running);
+                                        return Err(e.context(
+                                            "proc backend: persisting a worker checkpoint",
+                                        ));
+                                    }
+                                }
+                                slots[pos].latest = Some(cp);
+                                slots[pos].checkpoints_seen += 1;
+                                let due_kill = !slots[pos].injected
+                                    && self.opts.inject_kill.iter().any(|k| {
+                                        k.trial == trials[pos].index
+                                            && slots[pos].checkpoints_seen >= k.after
+                                    });
+                                if due_kill {
+                                    log_warn!(
+                                        "proc backend: injecting SIGKILL into trial {} after \
+                                         checkpoint {}",
+                                        trials[pos].slot.fingerprint,
+                                        slots[pos].checkpoints_seen
+                                    );
+                                    slots[pos].injected = true;
+                                    running[ri].kill_injected = true;
+                                    let _ = running[ri].child.kill();
+                                }
+                            }
+                            Event::Outcome(out) => {
+                                let pos = running[ri].pos;
+                                running[ri].outcome_seen = true;
+                                if let Err(e) = committer.offer(trials[pos].index, *out) {
+                                    kill_all(&mut running);
+                                    return Err(e);
+                                }
+                                slots[pos].done = true;
+                                remaining -= 1;
+                            }
+                            Event::WorkerError(msg) => {
+                                running[ri].worker_error = Some(msg);
+                            }
+                            Event::Eof { read_error } => {
+                                let mut r = running.swap_remove(ri);
+                                let status = r
+                                    .child
+                                    .wait()
+                                    .context("waiting on a finished trial-worker")?;
+                                let pos = r.pos;
+                                let trial = &trials[pos];
+                                slots[pos].launched = false;
+                                if r.outcome_seen {
+                                    continue; // success; record already committed
+                                }
+                                if r.kill_injected {
+                                    // The injected death is the scenario
+                                    // under test: relaunch immediately from
+                                    // the newest checkpoint, no budget spent.
+                                    log_info!(
+                                        "proc backend: trial {} killed by injection, \
+                                         relaunching from checkpoint",
+                                        trial.slot.fingerprint
+                                    );
+                                    slots[pos].next_launch_at = Instant::now();
+                                    continue;
+                                }
+                                let why =
+                                    classify(&status, r.timeout_fired, self.opts.timeout_secs);
+                                let detail = r
+                                    .worker_error
+                                    .or(read_error)
+                                    .map(|m| format!(": {m}"))
+                                    .unwrap_or_default();
+                                slots[pos].attempts += 1;
+                                if slots[pos].attempts > self.opts.max_retries {
+                                    kill_all(&mut running);
+                                    bail!(
+                                        "proc backend: trial {} [{} seed {}] failed after {} \
+                                         attempt(s); last attempt {why}{detail}",
+                                        trial.slot.fingerprint,
+                                        trial.slot.cell,
+                                        trial.slot.seed_index,
+                                        slots[pos].attempts,
+                                    );
+                                }
+                                let delay = self.backoff(trial, slots[pos].attempts);
+                                log_warn!(
+                                    "proc backend: trial {} attempt {} {why}{detail}; \
+                                     relaunching in {:.2}s{}",
+                                    trial.slot.fingerprint,
+                                    slots[pos].attempts,
+                                    delay.as_secs_f64(),
+                                    if slots[pos].latest.is_some() {
+                                        " from its latest checkpoint"
+                                    } else {
+                                        " from scratch"
+                                    }
+                                );
+                                slots[pos].next_launch_at = Instant::now() + delay;
+                            }
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        // Unreachable while we hold `tx`, but fail loudly.
+                        kill_all(&mut running);
+                        bail!("proc backend: event channel closed unexpectedly");
+                    }
+                }
+
+                // Deadline scan: kill overdue workers; their reader delivers
+                // the Eof that routes through crash classification.
+                let now = Instant::now();
+                for r in running.iter_mut() {
+                    if let Some(d) = r.deadline {
+                        if now >= d && !r.outcome_seen && !r.timeout_fired {
+                            log_warn!(
+                                "proc backend: trial {} exceeded its {:.1}s deadline, killing \
+                                 pid {}",
+                                trials[r.pos].slot.fingerprint,
+                                self.opts.timeout_secs,
+                                r.child.id()
+                            );
+                            r.timeout_fired = true;
+                            let _ = r.child.kill();
+                        }
+                    }
+                }
+            }
+            // Reap stragglers (e.g. a worker that delivered its outcome but
+            // has not exited yet) so the reader threads see EOF and join.
+            for r in running.iter_mut() {
+                let _ = r.child.wait();
+            }
+            running.clear();
+            Ok(())
+        });
+        drop(tx);
+        result
+    }
+}
+
+/// Human classification of one failed attempt from its exit status.
+fn classify(status: &std::process::ExitStatus, timeout_fired: bool, timeout_secs: f64) -> String {
+    if timeout_fired {
+        return format!("timed out after {timeout_secs:.1}s and was killed");
+    }
+    #[cfg(unix)]
+    {
+        use std::os::unix::process::ExitStatusExt;
+        if let Some(sig) = status.signal() {
+            return format!("was killed by signal {sig}");
+        }
+    }
+    match status.code() {
+        Some(0) => "exited cleanly without delivering an outcome (protocol violation)".into(),
+        Some(code) => format!("exited with code {code}"),
+        None => "ended without an exit code".into(),
+    }
+}
+
+/// Owns the child's pipes for one attempt: writes the request frame, then
+/// decodes stdout frames into events until the stream ends. Runs on its own
+/// thread so a worker streaming a large checkpoint can never block the
+/// supervisor loop.
+fn reader_thread(
+    generation: u64,
+    request: Json,
+    mut stdin: std::process::ChildStdin,
+    mut stdout: std::process::ChildStdout,
+    tx: mpsc::Sender<(u64, Event)>,
+) {
+    if let Err(e) = wire::write_frame(&mut stdin, &request) {
+        // EPIPE: the worker died before reading its request. The Eof path
+        // carries the message; the supervisor classifies from exit status.
+        let _ = tx.send((generation, Event::Eof { read_error: Some(format!("{e:#}")) }));
+        return;
+    }
+    let _ = stdin.flush();
+    drop(stdin); // worker reads exactly one frame; close the pipe
+    loop {
+        match wire::read_frame(&mut stdout) {
+            Ok(Some(frame)) => {
+                let event = match frame.get("type").as_str().unwrap_or("") {
+                    "checkpoint" => TrialCheckpoint::from_json(frame.get("checkpoint"))
+                        .map(Event::Checkpoint)
+                        .unwrap_or_else(|e| {
+                            Event::WorkerError(format!("undecodable checkpoint frame: {e:#}"))
+                        }),
+                    "outcome" => match TrialRecord::from_json(frame.get("record")) {
+                        Ok(record) => Event::Outcome(Box::new(TrialOutcome {
+                            record,
+                            wall_secs: frame.get("wall_secs").as_f64().unwrap_or(0.0),
+                            cached: false,
+                            perf: frame.get("perf").as_str().unwrap_or("").to_string(),
+                        })),
+                        Err(e) => {
+                            Event::WorkerError(format!("undecodable outcome frame: {e:#}"))
+                        }
+                    },
+                    "error" => Event::WorkerError(
+                        frame.get("message").as_str().unwrap_or("unknown worker error").into(),
+                    ),
+                    other => Event::WorkerError(format!("unknown frame type '{other}'")),
+                };
+                if tx.send((generation, event)).is_err() {
+                    return; // supervisor gone (fatal path); stop reading
+                }
+            }
+            Ok(None) => {
+                let _ = tx.send((generation, Event::Eof { read_error: None }));
+                return;
+            }
+            Err(e) => {
+                let _ =
+                    tx.send((generation, Event::Eof { read_error: Some(format!("{e:#}")) }));
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_spec_grammar() {
+        assert_eq!(
+            KillSpec::parse_list("trial=1,after=2").unwrap(),
+            vec![KillSpec { trial: 1, after: 2 }]
+        );
+        assert_eq!(
+            KillSpec::parse_list("trial=0,after=1;trial=3,after=2").unwrap(),
+            vec![KillSpec { trial: 0, after: 1 }, KillSpec { trial: 3, after: 2 }]
+        );
+        assert_eq!(KillSpec::parse_list("").unwrap(), vec![]);
+        for bad in ["trial=1", "after=2", "trial=x,after=1", "trial=1,after=0", "who=1"] {
+            assert!(KillSpec::parse_list(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    /// Backoff grows exponentially and its jitter is deterministic: the
+    /// relaunch schedule is a function of (fingerprint, attempt), never of
+    /// wall clock or thread timing.
+    #[test]
+    fn backoff_is_exponential_and_deterministic() {
+        let backend = ProcessBackend {
+            jobs: 1,
+            opts: ProcOptions { backoff_ms: 100, ..ProcOptions::default() },
+            run_dir: None,
+        };
+        let cfg = crate::config::ExperimentConfig::default();
+        let mut plan = crate::schedule::plan::TrialPlan::new();
+        plan.push_cell("c", "c", &cfg, 1);
+        let trial = PlannedTrial { index: 0, slot: plan.slots[0].clone(), resume_from: None };
+        let d1 = backend.backoff(&trial, 1);
+        let d2 = backend.backoff(&trial, 2);
+        let d3 = backend.backoff(&trial, 3);
+        assert_eq!(d1, backend.backoff(&trial, 1), "jitter must be deterministic");
+        assert!(d1 >= Duration::from_millis(100) && d1 < Duration::from_millis(200));
+        assert!(d2 >= Duration::from_millis(200) && d2 < Duration::from_millis(300));
+        assert!(d3 >= Duration::from_millis(400) && d3 < Duration::from_millis(500));
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn classify_names_the_failure_mode() {
+        use std::os::unix::process::ExitStatusExt;
+        let ok = std::process::ExitStatus::from_raw(0);
+        assert!(classify(&ok, true, 1.5).contains("timed out after 1.5s"));
+        assert!(classify(&ok, false, 0.0).contains("without delivering an outcome"));
+        // Raw wait statuses: low byte = terminating signal, next = exit code.
+        let sig = std::process::ExitStatus::from_raw(9);
+        assert!(classify(&sig, false, 0.0).contains("signal 9"));
+        let code = std::process::ExitStatus::from_raw(1 << 8);
+        assert!(classify(&code, false, 0.0).contains("exited with code 1"));
+    }
+}

@@ -1,0 +1,110 @@
+//! Length-prefixed JSON framing for the parent ↔ trial-worker pipe.
+//!
+//! A frame is a 4-byte big-endian `u32` payload length followed by that
+//! many bytes of compact JSON (UTF-8). The framing exists because the
+//! child's stdout is a byte stream shared by nothing else — stderr carries
+//! the logger — and the parent must be able to tell "clean end of stream"
+//! (worker exited after its last frame) from "stream died mid-frame"
+//! (worker was killed); a bare JSONL pipe cannot distinguish a truncated
+//! line from a complete one in all cases, a length prefix can.
+//!
+//! Byte-identity across backends rides on this layer carrying *parsed JSON*
+//! whose serialization is byte-stable (`record::serialization_is_stable`
+//! pins the round-trip): the supervisor re-serializes the decoded
+//! [`TrialRecord`](crate::schedule::record::TrialRecord) through the same
+//! sink code the sequential backend uses, so committed lines cannot differ.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Upper bound on one frame's payload. Checkpoint frames carry full
+/// parameter blobs, so this is generous; anything larger is a corrupted
+/// length prefix, not a real message.
+pub const MAX_FRAME: u32 = 256 * 1024 * 1024;
+
+/// Write one frame (length prefix + compact JSON) and flush.
+pub fn write_frame(w: &mut impl Write, j: &Json) -> Result<()> {
+    let payload = j.to_string_compact();
+    let bytes = payload.as_bytes();
+    let len = u32::try_from(bytes.len()).context("frame payload over 4GiB")?;
+    if len > MAX_FRAME {
+        bail!("frame payload of {len} bytes exceeds the {MAX_FRAME}-byte frame cap");
+    }
+    w.write_all(&len.to_be_bytes()).context("writing frame length")?;
+    w.write_all(bytes).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` only on a clean EOF *at a frame boundary*
+/// (zero bytes of the next length prefix); EOF inside a prefix or payload
+/// is an error — that is what a killed worker looks like.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    // Probe the first byte by hand: read_exact cannot distinguish "no next
+    // frame" from "frame truncated after 1-3 bytes".
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame length"),
+        }
+    }
+    len_buf[0] = first[0];
+    r.read_exact(&mut len_buf[1..]).context("stream died inside a frame length prefix")?;
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds the {MAX_FRAME}-byte cap (corrupt stream?)");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("stream died inside a frame payload")?;
+    let text = String::from_utf8(payload).context("frame payload is not UTF-8")?;
+    Json::parse(&text).context("frame payload is not valid JSON")
+        .map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_clean_eof() {
+        let a = Json::obj(vec![("type", Json::str("outcome")), ("n", Json::num(3.0))]);
+        let b = Json::obj(vec![("type", Json::str("checkpoint"))]);
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &a).unwrap();
+        write_frame(&mut buf, &b).unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), a);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b);
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF at a frame boundary");
+    }
+
+    /// A stream cut mid-frame (what SIGKILL leaves behind) must be an
+    /// error, never a silent end-of-stream.
+    #[test]
+    fn truncated_frames_are_errors() {
+        let j = Json::obj(vec![("k", Json::str("vvvvvvvvvvvvvvvv"))]);
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &j).unwrap();
+        // cut inside the payload
+        let mut r = &buf[..buf.len() - 3];
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("inside a frame payload"), "{err}");
+        // cut inside the length prefix
+        let mut r = &buf[..2];
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("length prefix"), "{err}");
+    }
+
+    #[test]
+    fn absurd_length_prefix_is_rejected() {
+        let mut buf = u32::MAX.to_be_bytes().to_vec();
+        buf.extend_from_slice(b"junk");
+        let err = read_frame(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+    }
+}

@@ -1,0 +1,190 @@
+//! Child side of the process backend: the hidden `deahes trial-worker`
+//! subcommand.
+//!
+//! The worker reads exactly one request frame from stdin, runs the planned
+//! trial through the same [`run_trial_with_saver`] path every in-process
+//! backend uses, and streams checkpoint frames plus one final outcome frame
+//! back over stdout. Stdout belongs to the wire protocol exclusively — the
+//! logger writes to stderr, which the parent inherits, so worker
+//! diagnostics land on the supervisor's stderr untouched.
+//!
+//! Exit discipline: 0 after a delivered outcome; 1 after an error frame.
+//! Anything else (a signal, a missing outcome on exit 0) is the parent's
+//! crash-classification problem — the worker never tries to outsmart its
+//! own death.
+
+use crate::schedule::backend::{run_trial_with_saver, PlannedTrial};
+use crate::schedule::checkpoint::TrialCheckpoint;
+use crate::schedule::lock::RunDirLock;
+use crate::schedule::plan::TrialSlot;
+use crate::schedule::proc::wire;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Decoded request frame (parent → worker).
+pub struct WorkerRequest {
+    pub slot: TrialSlot,
+    pub resume: Option<TrialCheckpoint>,
+    pub every: u64,
+    pub every_secs: f64,
+    pub crash_after: u64,
+    /// Per-trial sublock to hold for the trial's duration (multi-host
+    /// sweeps sharing one run dir); absent when no run dir is in play.
+    pub sublock: Option<String>,
+    /// Test hook: sleep this long before starting the trial, so timeout
+    /// tests have a deterministic window to fire in.
+    pub stall_ms: u64,
+}
+
+impl WorkerRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("type", Json::str("run")),
+            ("slot", self.slot.to_json()),
+            (
+                "resume",
+                match &self.resume {
+                    Some(cp) => cp.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            ("every", Json::num(self.every as f64)),
+            ("every_secs", Json::num(self.every_secs)),
+            ("crash_after", Json::num(self.crash_after as f64)),
+            (
+                "sublock",
+                match &self.sublock {
+                    Some(p) => Json::str(p),
+                    None => Json::Null,
+                },
+            ),
+            ("stall_ms", Json::num(self.stall_ms as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkerRequest> {
+        let kind = j.get("type").as_str().unwrap_or("");
+        if kind != "run" {
+            bail!("trial-worker: expected a 'run' request frame, got '{kind}'");
+        }
+        Ok(WorkerRequest {
+            slot: TrialSlot::from_json(j.get("slot")).context("request: bad 'slot'")?,
+            resume: match j.get("resume") {
+                Json::Null => None,
+                cp => Some(TrialCheckpoint::from_json(cp).context("request: bad 'resume'")?),
+            },
+            every: j.get("every").as_f64().unwrap_or(0.0) as u64,
+            every_secs: j.get("every_secs").as_f64().unwrap_or(0.0),
+            crash_after: j.get("crash_after").as_f64().unwrap_or(0.0) as u64,
+            sublock: j.get("sublock").as_str().map(str::to_string),
+            stall_ms: j.get("stall_ms").as_f64().unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+/// Entry point for `deahes trial-worker`: one request in, checkpoint and
+/// outcome frames out. Returns `Err` (process exit 1) after writing an
+/// error frame, so the supervisor sees both the message and the status.
+pub fn run_worker() -> Result<()> {
+    let mut stdin = std::io::stdin().lock();
+    let req = match wire::read_frame(&mut stdin)? {
+        Some(j) => WorkerRequest::from_json(&j)?,
+        None => bail!("trial-worker: stdin closed before a request frame arrived"),
+    };
+    drop(stdin);
+
+    // Held for the whole trial; dropped (file removed) on every exit path
+    // except a hard kill, which the start-time-verified stale-steal covers.
+    let _sublock = match &req.sublock {
+        Some(path) => Some(
+            RunDirLock::acquire_file(std::path::Path::new(path))
+                .context("trial-worker: acquiring per-trial sublock")?,
+        ),
+        None => None,
+    };
+
+    if req.stall_ms > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(req.stall_ms));
+    }
+
+    let trial = PlannedTrial { index: 0, slot: req.slot, resume_from: req.resume };
+    let mut persist = |cp: &TrialCheckpoint| -> Result<()> {
+        let mut out = std::io::stdout().lock();
+        wire::write_frame(
+            &mut out,
+            &Json::obj(vec![
+                ("type", Json::str("checkpoint")),
+                ("checkpoint", cp.to_json()),
+            ]),
+        )
+        .context("trial-worker: writing checkpoint frame")
+    };
+    match run_trial_with_saver(&trial, req.every, req.every_secs, req.crash_after, &mut persist)
+    {
+        Ok(outcome) => {
+            let mut out = std::io::stdout().lock();
+            wire::write_frame(
+                &mut out,
+                &Json::obj(vec![
+                    ("type", Json::str("outcome")),
+                    ("record", outcome.record.to_json()),
+                    ("wall_secs", Json::num(outcome.wall_secs)),
+                    ("perf", Json::str(&outcome.perf)),
+                ]),
+            )
+            .context("trial-worker: writing outcome frame")?;
+            Ok(())
+        }
+        Err(e) => {
+            let mut out = std::io::stdout().lock();
+            let _ = wire::write_frame(
+                &mut out,
+                &Json::obj(vec![
+                    ("type", Json::str("error")),
+                    ("message", Json::str(&format!("{e:#}"))),
+                ]),
+            );
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn request_roundtrips() {
+        let cfg = ExperimentConfig::default();
+        let slot = TrialSlot {
+            cell: "fig3/r=0.25".into(),
+            label: "r=25.0%".into(),
+            seed_index: 2,
+            config: cfg,
+            fingerprint: "feedfacefeedface".into(),
+        };
+        let req = WorkerRequest {
+            slot,
+            resume: None,
+            every: 5,
+            every_secs: 1.5,
+            crash_after: 0,
+            sublock: Some("/tmp/locks/trial-x.lock".into()),
+            stall_ms: 0,
+        };
+        let j = Json::parse(&req.to_json().to_string_compact()).unwrap();
+        let back = WorkerRequest::from_json(&j).unwrap();
+        assert_eq!(back.slot.fingerprint, "feedfacefeedface");
+        assert_eq!(back.every, 5);
+        assert_eq!(back.every_secs, 1.5);
+        assert_eq!(back.sublock.as_deref(), Some("/tmp/locks/trial-x.lock"));
+        assert!(back.resume.is_none());
+    }
+
+    #[test]
+    fn non_run_frames_are_rejected() {
+        let j = Json::obj(vec![("type", Json::str("outcome"))]);
+        assert!(WorkerRequest::from_json(&j).is_err());
+    }
+}

@@ -19,6 +19,7 @@
 //! existed) still load, with a warning.
 
 use crate::schedule::checkpoint::{TrialCheckpoint, CHECKPOINT_KEY};
+use crate::schedule::plan::TrialSlot;
 use crate::schedule::record::TrialRecord;
 use crate::{log_info, log_warn};
 use anyhow::{bail, Context, Result};
@@ -30,10 +31,21 @@ use std::sync::{Arc, Mutex};
 /// Marker key identifying the header line of a run file.
 pub const HEADER_KEY: &str = "deahes_runs_header";
 
-/// What [`JsonlRunSink::load_with_checkpoints`] hands back: committed
-/// records and the latest pending checkpoint per trial, both
+/// What [`JsonlRunSink::load_with_checkpoints`] hands back, all
 /// fingerprint-keyed.
-pub type SinkContents = (BTreeMap<String, TrialRecord>, BTreeMap<String, TrialCheckpoint>);
+#[derive(Debug, Default)]
+pub struct SinkContents {
+    /// Committed trial records.
+    pub records: BTreeMap<String, TrialRecord>,
+    /// Latest restorable mid-trial checkpoint per uncommitted trial.
+    pub checkpoints: BTreeMap<String, TrialCheckpoint>,
+    /// Trials whose checkpoint lines exist but whose state cannot be
+    /// restored (future driver format, corrupt payload) and that have no
+    /// earlier restorable checkpoint either: identity only, so `deahes
+    /// resume` can report "re-run from scratch" instead of pretending the
+    /// trial was never started.
+    pub scratch: BTreeMap<String, TrialSlot>,
+}
 
 /// Stable hash of the persisted schema: the sorted set of key *paths* in a
 /// fully-populated sample record JSON (every optional config key present,
@@ -326,7 +338,7 @@ impl JsonlRunSink {
     /// resuming across schema versions would silently reinterpret the
     /// stored configs.
     pub fn load(path: &Path) -> Result<BTreeMap<String, TrialRecord>> {
-        Ok(Self::load_impl(path, false)?.0)
+        Ok(Self::load_impl(path, false)?.records)
     }
 
     /// [`JsonlRunSink::load`] plus the latest valid mid-trial checkpoint
@@ -342,10 +354,11 @@ impl JsonlRunSink {
     fn load_impl(path: &Path, collect_checkpoints: bool) -> Result<SinkContents> {
         let mut out = BTreeMap::new();
         let mut checkpoints: BTreeMap<String, TrialCheckpoint> = BTreeMap::new();
+        let mut scratch: BTreeMap<String, TrialSlot> = BTreeMap::new();
         let text = match std::fs::read_to_string(path) {
             Ok(t) => t,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                return Ok((out, checkpoints))
+                return Ok(SinkContents::default())
             }
             Err(e) => {
                 return Err(e).with_context(|| format!("reading run sink {}", path.display()))
@@ -396,12 +409,20 @@ impl JsonlRunSink {
                                     checkpoints.insert(cp.fingerprint.clone(), cp);
                                 }
                             }
-                            Err(e) => log_warn!(
-                                "run sink {}: ignoring unusable checkpoint at line {} ({e:#}); \
-                                 its trial restarts from round 0",
-                                path.display(),
-                                lineno + 1
-                            ),
+                            Err(e) => {
+                                log_warn!(
+                                    "run sink {}: ignoring unusable checkpoint at line {} \
+                                     ({e:#}); its trial restarts from round 0",
+                                    path.display(),
+                                    lineno + 1
+                                );
+                                // The state is unreadable but the identity
+                                // usually isn't: remember the slot so resume
+                                // reporting can name the trial.
+                                if let Ok(slot) = TrialCheckpoint::identity_from_json(j) {
+                                    scratch.insert(slot.fingerprint.clone(), slot);
+                                }
+                            }
                         }
                     }
                     continue;
@@ -422,8 +443,10 @@ impl JsonlRunSink {
                 }
             }
         }
-        // A committed record supersedes its trial's checkpoints.
+        // A committed record supersedes its trial's checkpoints, and any
+        // restorable checkpoint supersedes identity-only scratch entries.
         checkpoints.retain(|fp, _| !out.contains_key(fp));
+        scratch.retain(|fp, _| !out.contains_key(fp) && !checkpoints.contains_key(fp));
         if !out.is_empty() || !checkpoints.is_empty() {
             log_info!(
                 "run sink {}: loaded {} committed trial(s){}{}",
@@ -437,7 +460,7 @@ impl JsonlRunSink {
                 if dropped > 0 { format!(", dropped {dropped}") } else { String::new() }
             );
         }
-        Ok((out, checkpoints))
+        Ok(SinkContents { records: out, checkpoints, scratch })
     }
 }
 
@@ -643,6 +666,7 @@ mod tests {
             seed_index: 0,
             config: ExperimentConfig::default(),
             every: 5,
+            every_secs: 0.0,
             state: RunCheckpoint {
                 driver: DRIVER_SEQUENTIAL.into(),
                 next_round,
@@ -708,10 +732,15 @@ mod tests {
             w.append(&ckpt("finished", 5)).unwrap();
             sink.append(&rec("finished")).unwrap();
         }
-        let (records, checkpoints) = JsonlRunSink::load_with_checkpoints(&path).unwrap();
-        assert_eq!(records.len(), 1);
-        assert_eq!(checkpoints.len(), 1, "committed trials must shed their checkpoints");
-        assert_eq!(checkpoints["pending"].next_round(), 10, "latest checkpoint wins");
+        let contents = JsonlRunSink::load_with_checkpoints(&path).unwrap();
+        assert_eq!(contents.records.len(), 1);
+        assert_eq!(
+            contents.checkpoints.len(),
+            1,
+            "committed trials must shed their checkpoints"
+        );
+        assert_eq!(contents.checkpoints["pending"].next_round(), 10, "latest checkpoint wins");
+        assert!(contents.scratch.is_empty());
         let _ = std::fs::remove_file(&path);
     }
 
@@ -732,8 +761,44 @@ mod tests {
             config_schema_hash()
         ));
         std::fs::write(&path, text).unwrap();
-        let (_, checkpoints) = JsonlRunSink::load_with_checkpoints(&path).unwrap();
-        assert_eq!(checkpoints["pending"].next_round(), 5, "valid earlier checkpoint survives");
+        let contents = JsonlRunSink::load_with_checkpoints(&path).unwrap();
+        assert_eq!(
+            contents.checkpoints["pending"].next_round(),
+            5,
+            "valid earlier checkpoint survives"
+        );
+        assert!(
+            contents.scratch.is_empty(),
+            "a restorable checkpoint supersedes the identity-only scratch entry"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A trial whose ONLY checkpoint lines are unrestorable still surfaces
+    /// through `scratch`, so resume reporting can say "re-run from scratch"
+    /// rather than silently treating the trial as never started.
+    #[test]
+    fn unrestorable_only_checkpoints_surface_as_scratch_identities() {
+        let path = tmp("ckpt-scratch.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let _sink = JsonlRunSink::open(&path).unwrap();
+        }
+        // a checkpoint whose state payload is unreadable but whose identity
+        // fields are intact
+        let mut cp_json = ckpt("orphan", 5).to_json();
+        if let crate::util::json::Json::Obj(m) = &mut cp_json {
+            m.insert("state".into(), crate::util::json::Json::str("opaque-garbage"));
+        }
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str(&cp_json.to_string_compact());
+        text.push('\n');
+        std::fs::write(&path, text).unwrap();
+        let contents = JsonlRunSink::load_with_checkpoints(&path).unwrap();
+        assert!(contents.records.is_empty());
+        assert!(contents.checkpoints.is_empty());
+        assert_eq!(contents.scratch.len(), 1);
+        assert_eq!(contents.scratch["orphan"].cell, "c");
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -77,7 +77,12 @@ fn capture_checkpoints(
         cps.push(cp);
         Ok(())
     };
-    let r = sim::run_with(cfg, None, Some(CheckpointHooks { every, save: &mut save })).unwrap();
+    let r = sim::run_with(
+        cfg,
+        None,
+        Some(CheckpointHooks { every, every_secs: 0.0, save: &mut save }),
+    )
+    .unwrap();
     (r, cps)
 }
 
@@ -337,8 +342,12 @@ fn threaded_drivers_abort_on_checkpoint_save_failure() {
         // hook's error in "mid-trial checkpointing failed".
         let err = format!(
             "{:#}",
-            sim::run_with(&cfg, None, Some(CheckpointHooks { every: 6, save: &mut save }))
-                .unwrap_err()
+            sim::run_with(
+                &cfg,
+                None,
+                Some(CheckpointHooks { every: 6, every_secs: 0.0, save: &mut save })
+            )
+            .unwrap_err()
         );
         assert!(err.contains("mid-trial checkpointing failed"), "{sync_mode:?}: {err}");
         assert!(err.contains("disk full (injected)"), "{sync_mode:?}: {err}");

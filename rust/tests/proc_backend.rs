@@ -1,0 +1,207 @@
+//! Integration: the out-of-process trial backend (`--backend proc`).
+//!
+//! The contract under test (docs/ARCHITECTURE.md, "Process backend &
+//! failure injection"):
+//!  * a plan executed through child worker processes commits records
+//!    byte-identical to the sequential backend's;
+//!  * a worker SIGKILLed mid-trial (fault injection) is relaunched from its
+//!    latest checkpoint and still converges to the identical committed
+//!    record;
+//!  * a worker that exceeds its deadline or exhausts its retry budget
+//!    surfaces a structured, classified error instead of wedging the sweep.
+//!
+//! These tests spawn real `deahes trial-worker` processes: the worker
+//! binary is the crate's own bin target, resolved via CARGO_BIN_EXE (the
+//! test harness executable is not `deahes` itself).
+
+use deahes::config::{EngineKind, ExperimentConfig};
+use deahes::schedule::{
+    self, BackendChoice, JsonlRunSink, KillSpec, ProcOptions, ScheduleOptions, TrialPlan,
+};
+use deahes::strategies::Method;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn quad_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        engine: EngineKind::Quadratic { dim: 16, heterogeneity: 0.2, noise: 0.02 },
+        workers: 2,
+        rounds: 8,
+        eval_subset: 8,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// 2 overlap ratios × 2 seeds: the fig3-shaped grid from the acceptance
+/// check, small enough that every test spawns at most a handful of
+/// processes.
+fn quad_plan() -> TrialPlan {
+    let mut plan = TrialPlan::new();
+    for &r in &[0.0, 0.25] {
+        let mut cfg = quad_cfg();
+        cfg.method = Method::EahesO;
+        cfg.overlap_ratio = r;
+        plan.push_cell(&format!("proc/r={r}"), &format!("r={r}"), &cfg, 2);
+    }
+    plan
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("deahes-procbackend-{}-{name}", std::process::id()))
+}
+
+/// Supervisor options pointing at the real `deahes` binary, with a short
+/// backoff so retry tests stay fast.
+fn proc_opts() -> ProcOptions {
+    ProcOptions {
+        worker_exe: Some(PathBuf::from(env!("CARGO_BIN_EXE_deahes"))),
+        backoff_ms: 10,
+        ..ProcOptions::default()
+    }
+}
+
+/// fingerprint -> compact committed-record bytes for a run dir.
+fn record_bytes(dir: &Path) -> BTreeMap<String, String> {
+    JsonlRunSink::load(&dir.join(schedule::RUNS_FILE))
+        .unwrap()
+        .into_iter()
+        .map(|(fp, r)| (fp, r.to_json().to_string_compact()))
+        .collect()
+}
+
+#[test]
+fn proc_backend_commits_byte_identical_records_to_sequential() {
+    let seq_dir = tmp_dir("seq");
+    let proc_dir = tmp_dir("proc");
+    let _ = std::fs::remove_dir_all(&seq_dir);
+    let _ = std::fs::remove_dir_all(&proc_dir);
+
+    let plan = quad_plan();
+    let seq = schedule::execute_plan(
+        &plan,
+        &ScheduleOptions {
+            backend: BackendChoice::Sequential,
+            run_dir: Some(seq_dir.clone()),
+            ..ScheduleOptions::default()
+        },
+    )
+    .unwrap();
+    let prc = schedule::execute_plan(
+        &plan,
+        &ScheduleOptions {
+            jobs: 2,
+            backend: BackendChoice::Proc,
+            run_dir: Some(proc_dir.clone()),
+            proc: proc_opts(),
+            ..ScheduleOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(prc.backend, "proc");
+    assert_eq!(seq.outcomes.len(), prc.outcomes.len());
+    // In-memory outcomes agree in plan order...
+    for (a, b) in seq.outcomes.iter().zip(&prc.outcomes) {
+        assert_eq!(a.record.fingerprint, b.record.fingerprint, "plan order must match");
+        assert_eq!(
+            a.record.to_json().to_string_compact(),
+            b.record.to_json().to_string_compact(),
+            "trial {} must be backend-invariant",
+            a.record.fingerprint
+        );
+    }
+    // ...and so do the committed bytes on disk.
+    assert_eq!(record_bytes(&seq_dir), record_bytes(&proc_dir));
+    let _ = std::fs::remove_dir_all(&seq_dir);
+    let _ = std::fs::remove_dir_all(&proc_dir);
+}
+
+/// The acceptance pin: SIGKILL a worker after its first checkpoint; the
+/// supervisor relaunches it from that checkpoint and the committed record
+/// is byte-identical to an unkilled sequential run.
+#[test]
+fn sigkilled_worker_relaunches_from_checkpoint_byte_identically() {
+    let seq_dir = tmp_dir("kill-seq");
+    let proc_dir = tmp_dir("kill-proc");
+    let _ = std::fs::remove_dir_all(&seq_dir);
+    let _ = std::fs::remove_dir_all(&proc_dir);
+
+    let plan = quad_plan();
+    schedule::execute_plan(
+        &plan,
+        &ScheduleOptions {
+            backend: BackendChoice::Sequential,
+            run_dir: Some(seq_dir.clone()),
+            ..ScheduleOptions::default()
+        },
+    )
+    .unwrap();
+    let mut opts = ScheduleOptions {
+        jobs: 2,
+        backend: BackendChoice::Proc,
+        run_dir: Some(proc_dir.clone()),
+        checkpoint_every: 3,
+        proc: proc_opts(),
+        ..ScheduleOptions::default()
+    };
+    opts.proc.inject_kill = vec![KillSpec { trial: 1, after: 1 }];
+    let report = schedule::execute_plan(&plan, &opts).unwrap();
+    assert_eq!(report.executed, plan.len(), "the killed trial still completes");
+    assert_eq!(
+        record_bytes(&seq_dir),
+        record_bytes(&proc_dir),
+        "a SIGKILLed+relaunched trial must commit the same bytes as an unkilled run"
+    );
+    let _ = std::fs::remove_dir_all(&seq_dir);
+    let _ = std::fs::remove_dir_all(&proc_dir);
+}
+
+/// A worker past its deadline is killed, retried, and — once the budget is
+/// spent — surfaces a structured failure naming the timeout instead of
+/// wedging the supervisor loop.
+#[test]
+fn timeout_exhausts_retries_with_a_classified_error() {
+    let mut plan = TrialPlan::new();
+    plan.push_cell("proc/timeout", "timeout", &quad_cfg(), 1);
+    let mut opts = ScheduleOptions {
+        backend: BackendChoice::Proc,
+        proc: proc_opts(),
+        ..ScheduleOptions::default()
+    };
+    opts.proc.timeout_secs = 0.3;
+    opts.proc.max_retries = 1;
+    opts.proc.test_stall_ms = 5_000; // every attempt stalls well past the deadline
+    let err = format!("{:#}", schedule::execute_plan(&plan, &opts).unwrap_err());
+    assert!(err.contains("timed out"), "{err}");
+    assert!(err.contains("failed after 2 attempt(s)"), "{err}");
+}
+
+/// Repeated worker crashes (exit code 1 via crash injection) consume the
+/// retry budget — each attempt resuming further along from its checkpoints
+/// — and the final error names the exit-code classification.
+#[test]
+fn crashing_worker_exhausts_retries_with_exit_code_classification() {
+    let dir = tmp_dir("crash");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut plan = TrialPlan::new();
+    plan.push_cell("proc/crash", "crash", &quad_cfg(), 1);
+    let mut opts = ScheduleOptions {
+        backend: BackendChoice::Proc,
+        run_dir: Some(dir.clone()),
+        checkpoint_every: 2,
+        crash_after_checkpoints: 1,
+        proc: proc_opts(),
+        ..ScheduleOptions::default()
+    };
+    opts.proc.max_retries = 1;
+    let err = format!("{:#}", schedule::execute_plan(&plan, &opts).unwrap_err());
+    assert!(err.contains("exited with code 1"), "{err}");
+    assert!(err.contains("crash injection"), "{err}");
+    assert!(err.contains("failed after 2 attempt(s)"), "{err}");
+    // The failed sweep left its checkpoints behind: the trial is resumable,
+    // not lost.
+    let contents =
+        JsonlRunSink::load_with_checkpoints(&dir.join(schedule::RUNS_FILE)).unwrap();
+    assert!(contents.records.is_empty());
+    assert_eq!(contents.checkpoints.len(), 1, "checkpoints survive the failed sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+}
