@@ -12,7 +12,8 @@
 //! run-sink machinery of the figure sweeps.
 //!
 //! Sweeps: detector sign, failure semantics, gossip mode, knee constant,
-//! raw-score history depth p, communication period tau.
+//! raw-score history depth p, communication period tau, fault scenarios
+//! (no-kill straggler regime + elastic membership churn).
 
 mod common;
 
@@ -82,6 +83,33 @@ fn cases() -> Vec<(&'static str, String, ExperimentConfig)> {
             cfg,
         ));
     }
+    // Straggler regime: one worker at one-third speed, NO failures at all.
+    // The sync-wait column goes nonuniform (the clock's wait stream sees the
+    // straggler's long spans), and the staleness-aware policies must respond
+    // where `fixed` cannot — this is the no-kill separation the scenario
+    // subsystem exists to expose.
+    for policy in ["fixed", "delayed(staleness_cap=4)", "adaptive"] {
+        let mut cfg = base();
+        cfg.failure = FailureModel::None;
+        cfg.speeds = Some(vec![1.0, 1.0, 1.0, 3.0]);
+        cfg.policy =
+            Some(deahes::elastic::policy::canonical(policy).expect("literal policy spec"));
+        out.push((
+            "straggler, no kills (worker 3 at 1/3 speed)",
+            format!("policy = {policy}"),
+            cfg,
+        ));
+    }
+    // Elastic membership churn: worker 3 leaves after round 29 and rejoins
+    // at round 90, adopting the master estimate. Compared against the same
+    // config at full membership.
+    for (label, membership) in
+        [("full membership", None), ("worker 3 out for rounds 30-89", Some("3=0-29+90-"))]
+    {
+        let mut cfg = base();
+        cfg.membership = membership.map(str::to_string);
+        out.push(("elastic membership churn", label.to_string(), cfg));
+    }
     out
 }
 
@@ -90,11 +118,14 @@ fn report(label: &str, o: &TrialOutcome) {
     let corrections: u64 = o.record.worker_stats.iter().map(|s| s.1).sum();
     let served: u64 = o.record.worker_stats.iter().map(|s| s.0).sum();
     println!(
-        "{label:<44} loss {:>9.4}  corrections {:>4}/{:<4} syncs  h2̄ {:>5.3}{}",
+        "{label:<44} loss {:>9.4}  corrections {:>4}/{:<4} syncs  h2̄ {:>5.3}  \
+         wait {:>8.5}s/{:>8.5}s{}",
         last.test_loss,
         corrections,
         served,
         last.mean_h2,
+        o.record.sim.mean_sync_wait,
+        o.record.sim.p95_style_max_wait,
         if o.cached { "  [resumed]" } else { "" },
     );
 }

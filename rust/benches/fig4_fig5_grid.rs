@@ -66,6 +66,59 @@ fn main() -> anyhow::Result<()> {
     println!("\n== §VII summary table (tail accuracy) ==");
     print!("{}", experiments::summary_table(&cells));
 
+    // Tuned-policy promotion: run the fault-scenario battery (burst kills,
+    // a no-kill straggler, membership churn — paired schedules, so every
+    // policy faces identical faults) on the k=4 slice, then promote the
+    // winning policy into the grid's flagship method and compare it against
+    // the method's preset weighting under the grid's own failure model.
+    let mut tuning_base = base.clone();
+    tuning_base.workers = 4;
+    tuning_base.overlap_ratio = tuning_base.method.paper_overlap_ratio(4);
+    let scenarios = experiments::FaultScenario::paper_battery(4, tuning_base.rounds);
+    let faulty_scenarios = &scenarios[1..]; // skip the clean control: tune on faults
+    let specs: Vec<String> = ["fixed", "dynamic", "delayed(staleness_cap=4)", "adaptive"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let battery = common::timed("scenario battery (policy tuning)", || {
+        experiments::scenario_battery_with(&tuning_base, faulty_scenarios, &specs, 1, &opts)
+    })?;
+    println!("\n== fault-scenario battery (k=4, paired schedules) ==");
+    for o in &battery {
+        println!(
+            "  {:<10} {:<40} tail acc {:>6.2}%",
+            o.scenario,
+            o.policy,
+            100.0 * o.series.final_acc_mean
+        );
+    }
+    let ranked = experiments::rank_policies(&battery);
+    let (tuned, tuned_acc) = ranked.first().expect("battery produced a ranking");
+    println!("tuned policy (best mean tail acc across scenarios): {tuned} ({:.2}%)", 100.0 * tuned_acc);
+
+    let mut promoted = tuning_base.clone();
+    promoted.policy = Some(tuned.clone());
+    let tuned_series = common::timed("fig4/5 promoted cell", || {
+        experiments::averaged_run_with(&promoted, seeds, "fig45/k=4/tau=1/tuned", &opts)
+    })?;
+    let preset = cells
+        .iter()
+        .find(|c| c.workers == 4 && c.tau == promoted.tau)
+        .and_then(|c| c.series.iter().find(|s| s.label == promoted.method.name()));
+    match preset {
+        Some(p) => println!(
+            "promoted {} + {tuned}: tail acc {:.2}% vs preset {:.2}%",
+            promoted.method.name(),
+            100.0 * tuned_series.final_acc_mean,
+            100.0 * p.final_acc_mean
+        ),
+        None => println!(
+            "promoted {} + {tuned}: tail acc {:.2}% (preset cell not in this grid selection)",
+            promoted.method.name(),
+            100.0 * tuned_series.final_acc_mean
+        ),
+    }
+
     // Qualitative ordering check per cell (shape, not absolute numbers).
     println!("\nordering check per cell: DEAHES-O vs EAHES (AdaHessian, no mitigation):");
     for cell in &cells {

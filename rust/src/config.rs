@@ -123,6 +123,19 @@ pub struct ExperimentConfig {
     /// key is an execution knob, not a science axis — but it still
     /// fingerprints when set, which keeps run provenance honest.
     pub intra_parallel: Option<usize>,
+    /// Per-worker slowdown factors (straggler scenario, the DaSGD regime):
+    /// `speeds[w] >= 1.0`, 1 = full speed; a factor-`s` worker reaches a
+    /// sync boundary only every ~`s` rounds (see
+    /// [`crate::coordinator::scenario::speed_participates`]). `None` =
+    /// uniform fleet. Omitted from JSON when `None`, so legacy config JSON
+    /// and schedule fingerprints stay byte-identical.
+    pub speeds: Option<Vec<f64>>,
+    /// Elastic-membership schedule (canonical
+    /// [`crate::coordinator::scenario::MembershipSchedule`] spec, e.g.
+    /// `"2=0-19+40-"`): workers join/leave mid-run, adopting the current
+    /// master estimate at each (re)join. `None` = fixed fleet; omitted
+    /// from JSON when `None` (same fingerprint discipline as `speeds`).
+    pub membership: Option<String>,
     // -- engine & driver --
     pub engine: EngineKind,
     /// true: one OS thread per worker (realistic async); false: the
@@ -156,6 +169,8 @@ impl Default for ExperimentConfig {
             policy: None,
             optimizer: None,
             intra_parallel: None,
+            speeds: None,
+            membership: None,
             engine: EngineKind::Xla { artifacts_dir: "artifacts".into(), native_opt: false },
             threaded: false,
         }
@@ -246,6 +261,29 @@ impl ExperimentConfig {
         if self.intra_parallel == Some(0) {
             bail!("intra_parallel must be >= 1 (the dimension threshold at which chunked kernels engage)");
         }
+        if let Some(speeds) = &self.speeds {
+            if speeds.len() != self.workers {
+                bail!(
+                    "speeds lists {} factors for {} workers",
+                    speeds.len(),
+                    self.workers
+                );
+            }
+            if let Some(bad) = speeds.iter().find(|s| !s.is_finite() || **s < 1.0) {
+                bail!("speeds must all be finite and >= 1.0 (1 = full speed), got {bad}");
+            }
+        }
+        if let Some(spec) = &self.membership {
+            let m = crate::coordinator::scenario::MembershipSchedule::parse(spec)
+                .with_context(|| format!("config: bad membership spec '{spec}'"))?;
+            if m.max_worker() >= self.workers {
+                bail!(
+                    "membership names worker {} but the run has only {} workers",
+                    m.max_worker(),
+                    self.workers
+                );
+            }
+        }
         if self.lr <= 0.0 {
             bail!("lr must be positive");
         }
@@ -320,6 +358,12 @@ impl ExperimentConfig {
         }
         if let Some(t) = self.intra_parallel {
             fields.push(("intra_parallel", Json::num(t as f64)));
+        }
+        if let Some(speeds) = &self.speeds {
+            fields.push(("speeds", Json::arr_f64(speeds)));
+        }
+        if let Some(spec) = &self.membership {
+            fields.push(("membership", Json::str(spec)));
         }
         Json::obj(fields)
     }
@@ -427,6 +471,39 @@ impl ExperimentConfig {
                         .context("config: 'intra_parallel' must be a positive integer")?,
                 ),
             },
+            speeds: match j.get("speeds") {
+                Json::Null => None,
+                v => {
+                    let arr = v
+                        .as_arr()
+                        .context("config: 'speeds' must be an array of numbers")?;
+                    Some(
+                        arr.iter()
+                            .map(|x| {
+                                x.as_f64().context(
+                                    "config: 'speeds' must be an array of numbers",
+                                )
+                            })
+                            .collect::<Result<Vec<f64>>>()?,
+                    )
+                }
+            },
+            membership: match j.get("membership") {
+                Json::Null => None,
+                v => {
+                    let s = v
+                        .as_str()
+                        .context("config: 'membership' must be a string spec")?;
+                    // Canonicalize (sorted worker order) so the stored spec
+                    // — and any fingerprint derived from re-serializing it
+                    // — is spelling-invariant, like policy/optimizer specs.
+                    Some(
+                        crate::coordinator::scenario::MembershipSchedule::parse(s)
+                            .with_context(|| format!("config: bad membership spec '{s}'"))?
+                            .describe(),
+                    )
+                }
+            },
             engine,
             threaded: j.get("threaded").as_bool().unwrap_or(d.threaded),
         };
@@ -446,6 +523,7 @@ impl FailureModel {
                 let ws: Vec<String> = workers.iter().map(|w| w.to_string()).collect();
                 format!("permanent:{from_round},{}", ws.join("+"))
             }
+            FailureModel::Trace { path } => format!("trace:{path}"),
         }
     }
 }
@@ -481,6 +559,7 @@ mod tests {
             FailureModel::Bernoulli { p: 0.25 },
             FailureModel::Burst { p_start: 0.1, mean_len: 4.0 },
             FailureModel::Permanent { from_round: 9, workers: vec![0, 2] },
+            FailureModel::Trace { path: "runs/bernoulli.trace.json".into() },
         ] {
             assert_eq!(FailureModel::parse(&m.describe_spec()), Some(m));
         }
@@ -528,6 +607,8 @@ mod tests {
         assert!(!text.contains("sync_mode"), "{text}");
         assert!(!text.contains("optimizer"), "{text}");
         assert!(!text.contains("intra_parallel"), "{text}");
+        assert!(!text.contains("speeds"), "{text}");
+        assert!(!text.contains("membership"), "{text}");
 
         let mut cfg = ExperimentConfig::default();
         cfg.sync_mode = SyncMode::Gossip;
@@ -664,6 +745,63 @@ mod tests {
         }
         let err = ExperimentConfig::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("intra_parallel"), "{err}");
+    }
+
+    /// The scenario axes (`speeds`, `membership`) follow the same
+    /// optional-key discipline: omitted when unset, round-trip when set
+    /// (membership canonicalized on the way in), reject nonsense.
+    #[test]
+    fn scenario_keys_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workers = 4;
+        cfg.speeds = Some(vec![1.0, 2.0, 1.5, 1.0]);
+        cfg.membership = Some("2=0-19+40-".into());
+        cfg.validate().unwrap();
+        let j = cfg.to_json();
+        let text = j.to_string_compact();
+        assert!(text.contains("speeds"), "{text}");
+        assert!(text.contains("membership"), "{text}");
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.speeds, cfg.speeds);
+        assert_eq!(back.membership, cfg.membership);
+
+        // membership spelling variants canonicalize on the way in
+        let mut j = cfg.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("membership".into(), Json::str("3=5-;2=0-19+40-"));
+        }
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.membership.as_deref(), Some("2=0-19+40-;3=5-"));
+
+        // arity mismatch, sub-1.0 and non-finite factors: hard errors
+        let mut c = ExperimentConfig::default();
+        c.workers = 4;
+        c.speeds = Some(vec![1.0, 2.0]);
+        assert!(c.validate().unwrap_err().to_string().contains("speeds"));
+        c.speeds = Some(vec![1.0, 0.5, 1.0, 1.0]);
+        assert!(c.validate().unwrap_err().to_string().contains("speeds"));
+        c.speeds = Some(vec![1.0, f64::NAN, 1.0, 1.0]);
+        assert!(c.validate().is_err());
+
+        // membership naming an out-of-range worker: hard error
+        let mut c = ExperimentConfig::default();
+        c.workers = 2;
+        c.membership = Some("5=0-9".into());
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("worker 5"), "{err}");
+        // malformed grammar rejected at validate AND from_json
+        c.membership = Some("nonsense".into());
+        assert!(c.validate().is_err());
+        let mut j = ExperimentConfig::default().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("membership".into(), Json::str("=0-9"));
+        }
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let mut j = ExperimentConfig::default().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("speeds".into(), Json::str("fast"));
+        }
+        assert!(ExperimentConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -6,8 +6,12 @@
 //! dynamic weighting must also survive; they appear in the ablation benches.
 //!
 //! Decisions are a pure function of (seed, worker, round) — a `FailureModel`
-//! precomputes nothing and holds no mutable state, so the threaded and
-//! sequential drivers inject *identical* fault schedules.
+//! holds no mutable state, so the threaded and sequential drivers inject
+//! *identical* fault schedules. At `Setup::build` the model is compiled
+//! into a [`crate::coordinator::scenario::FailureSchedule`] (a materialized
+//! bitmap, bit-for-bit the pure schedule): that is what turns `Burst`'s
+//! O(rounds²) history re-scan into one forward pass, and what backs the
+//! `trace:` replay model (recorded schedules re-injected byte-identically).
 
 use crate::util::rng::Rng;
 
@@ -57,11 +61,18 @@ pub enum FailureModel {
     Burst { p_start: f64, mean_len: f64 },
     /// Workers in `workers` fail permanently from `from_round` on.
     Permanent { from_round: u64, workers: Vec<usize> },
+    /// Replay a recorded schedule (`deahes record-trace`, format
+    /// `deahes-trace/v1`): the identical fault sequence across policies,
+    /// sync modes and drivers. Not a generative model — it compiles into a
+    /// [`crate::coordinator::scenario::FailureSchedule`] at `Setup::build`
+    /// (the pure [`FailureModel::suppressed`] cannot do IO).
+    Trace { path: String },
 }
 
 impl FailureModel {
     pub fn parse(spec: &str) -> Option<FailureModel> {
         // grammar: "none" | "bernoulli:P" | "burst:P,L" | "permanent:R,w0+w1"
+        //        | "trace:PATH"
         // P is a probability in [0,1]; L is a mean burst length >= 1.
         let (kind, rest) = match spec.split_once(':') {
             Some((k, r)) => (k, r),
@@ -84,6 +95,9 @@ impl FailureModel {
                     .collect::<Option<Vec<usize>>>()?;
                 Some(FailureModel::Permanent { from_round: r.parse().ok()?, workers })
             }
+            "trace" if !rest.is_empty() => {
+                Some(FailureModel::Trace { path: rest.to_string() })
+            }
             _ => None,
         }
     }
@@ -98,6 +112,7 @@ impl FailureModel {
             FailureModel::Permanent { from_round, workers } => {
                 format!("permanent(from={from_round}, workers={workers:?})")
             }
+            FailureModel::Trace { path } => format!("trace(path={path})"),
         }
     }
 
@@ -133,6 +148,17 @@ impl FailureModel {
             }
             FailureModel::Permanent { from_round, workers } => {
                 round >= *from_round && workers.contains(&w)
+            }
+            FailureModel::Trace { path } => {
+                // A trace has no pure generative form: decisions live in a
+                // file, and this function cannot do IO without breaking its
+                // purity contract. Every driver queries the compiled
+                // `FailureSchedule` built at `Setup::build`, which loads
+                // (and validates) the trace exactly once.
+                panic!(
+                    "FailureModel::Trace('{path}') has no pure suppressed(); \
+                     query the compiled FailureSchedule instead"
+                );
             }
         }
     }
@@ -172,6 +198,7 @@ mod tests {
             FailureModel::Burst { p_start: 0.05, mean_len: 6.5 },
             FailureModel::Permanent { from_round: 0, workers: vec![0] },
             FailureModel::Permanent { from_round: 10, workers: vec![0, 2, 7] },
+            FailureModel::Trace { path: "runs/burst.trace.json".into() },
         ];
         for m in models {
             let spec = m.describe_spec();
@@ -200,6 +227,8 @@ mod tests {
             "permanent:x,1",
             "permanent:5,a+b",
             "permanent:5,1+",
+            "trace",
+            "trace:",
             "bogus",
             "bogus:1",
         ];

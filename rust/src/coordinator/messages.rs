@@ -57,6 +57,12 @@ pub enum ToMaster {
 pub struct RoundReport {
     pub worker: usize,
     pub round: u64,
+    /// False when the worker sat the round out entirely (elastic membership
+    /// gap, or a straggler mid-compute): the monitor still receives exactly
+    /// one report per worker per round — the barrier protocol depends on
+    /// that arity — but counts an absent worker neither as synced nor as
+    /// failed.
+    pub present: bool,
     pub train_loss: f32,
     pub synced: bool,
     pub raw_score: Option<f64>,

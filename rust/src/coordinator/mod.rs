@@ -4,9 +4,11 @@
 //! the elastic averaging + dynamic weighting algorithm; `sim` wires them
 //! into either a deterministic sequential driver or a real threaded
 //! master/worker topology over mpsc channels. `failure` injects the paper's
-//! communication-suppression fault model; `gossip` implements the
-//! worker-to-worker master estimation; `simclock` adds the virtual
-//! wall-clock model the paper defers to future work.
+//! communication-suppression fault model; `scenario` compiles it into a
+//! replayable per-run schedule and adds straggler speeds + elastic
+//! membership; `gossip` implements the worker-to-worker master estimation;
+//! `simclock` adds the virtual wall-clock model the paper defers to future
+//! work.
 
 pub mod checkpoint;
 pub mod evaluator;
@@ -14,9 +16,11 @@ pub mod failure;
 pub mod gossip;
 pub mod master;
 pub mod messages;
+pub mod scenario;
 pub mod sim;
 pub mod simclock;
 pub mod worker;
 
 pub use failure::FailureModel;
+pub use scenario::{FailureSchedule, MembershipSchedule, Scenario, TraceFile};
 pub use sim::{run, Role, RunResult, Setup};

@@ -1,0 +1,663 @@
+//! Fault-scenario subsystem: compiled failure schedules (trace replay +
+//! Burst memoization), persistent per-worker heterogeneity (stragglers),
+//! and elastic worker membership.
+//!
+//! Three pieces, all pure functions of the experiment config so both
+//! drivers — and a resumed run — see the identical scenario:
+//!
+//!  * [`FailureSchedule`] — the per-trial compiled form of a
+//!    [`FailureModel`]: every (worker, round) suppression decision
+//!    materialized into a packed bitmap at `Setup::build` time. This is
+//!    what kills the O(rounds²) `Burst` history re-scan (one forward pass
+//!    per worker instead of one per query) and what makes `trace:` replay
+//!    possible at all (the pure `suppressed` function cannot do IO).
+//!  * [`TraceFile`] — the on-disk `deahes-trace/v1` format: a recorded
+//!    realized schedule (`deahes record-trace`) that replays byte-
+//!    identically across policies, sync modes and drivers, for paired
+//!    A/B comparisons under the *same* fault sequence.
+//!  * [`Scenario`] — per-worker slowdown factors (`speeds:`) and the
+//!    `membership:` join/leave schedule, both gating round participation
+//!    as pure functions of (worker, round).
+//!
+//! See docs/ARCHITECTURE.md §Failure models & scenarios for the lifecycle
+//! tables and the clock semantics.
+
+use super::failure::FailureModel;
+use crate::schedule::plan::fnv1a64;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// On-disk trace format tag (bump on layout change).
+pub const TRACE_FORMAT: &str = "deahes-trace/v1";
+
+// ---------------------------------------------------------------------------
+// packed suppression table
+// ---------------------------------------------------------------------------
+
+/// A materialized per-(worker, round) suppression table: one bitmap per
+/// worker, round bits packed LSB-first into `u64` words.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SuppressionTable {
+    workers: usize,
+    rounds: u64,
+    words: Vec<Vec<u64>>,
+}
+
+impl SuppressionTable {
+    fn empty(workers: usize, rounds: u64) -> SuppressionTable {
+        let n_words = rounds.div_ceil(64) as usize;
+        SuppressionTable { workers, rounds, words: vec![vec![0u64; n_words]; workers] }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    fn set(&mut self, w: usize, round: u64) {
+        self.words[w][(round / 64) as usize] |= 1u64 << (round % 64);
+    }
+
+    /// Is worker `w` suppressed at `round`? Out-of-range rounds read false
+    /// (the drivers never ask past `rounds`; the clock replay matches).
+    pub fn get(&self, w: usize, round: u64) -> bool {
+        if w >= self.workers || round >= self.rounds {
+            return false;
+        }
+        self.words[w][(round / 64) as usize] >> (round % 64) & 1 == 1
+    }
+
+    /// Materialize `model` over the full (workers × rounds) grid. `Burst`
+    /// runs ONE forward pass per worker (the memoization the pure
+    /// [`FailureModel::suppressed`] cannot do); every other stochastic
+    /// model delegates to the pure function per cell, so the table is
+    /// bit-for-bit the naive schedule (pinned by the equivalence tests).
+    /// `Trace` has no generative form and is rejected here — it loads
+    /// through [`TraceFile::load`] instead.
+    pub fn capture(
+        model: &FailureModel,
+        seed: u64,
+        workers: usize,
+        rounds: u64,
+    ) -> Result<SuppressionTable> {
+        let mut table = SuppressionTable::empty(workers, rounds);
+        match model {
+            FailureModel::None => {}
+            FailureModel::Trace { path } => {
+                anyhow::bail!(
+                    "a trace failure model ('trace:{path}') cannot be captured from \
+                     itself — load it with TraceFile::load"
+                );
+            }
+            FailureModel::Burst { p_start, mean_len } => {
+                // One forward pass per worker: identical decisions to the
+                // pure per-query scan (same per-t RNG streams, same state
+                // machine), O(rounds) instead of O(rounds²).
+                for w in 0..workers {
+                    let mut in_burst = false;
+                    for t in 0..rounds {
+                        let mut r = crate::util::rng::Rng::new(seed)
+                            .derive(0xB557)
+                            .derive(w as u64)
+                            .derive(t);
+                        if in_burst {
+                            if r.bernoulli(1.0 / mean_len.max(1.0)) {
+                                in_burst = false;
+                            }
+                        } else if r.bernoulli(*p_start) {
+                            in_burst = true;
+                        }
+                        if in_burst {
+                            table.set(w, t);
+                        }
+                    }
+                }
+            }
+            _ => {
+                for w in 0..workers {
+                    for t in 0..rounds {
+                        if model.suppressed(seed, w, t) {
+                            table.set(w, t);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(table)
+    }
+
+    /// Copy the first `rounds` rounds of `self` (trace replay under a run
+    /// shorter than the recording).
+    fn truncated(&self, rounds: u64) -> SuppressionTable {
+        let mut out = SuppressionTable::empty(self.workers, rounds);
+        for w in 0..self.workers {
+            for t in 0..rounds {
+                if self.get(w, t) {
+                    out.set(w, t);
+                }
+            }
+        }
+        out
+    }
+
+    /// FNV-1a digest of the realized schedule (dimensions + bitmap words).
+    /// Two runs with the same digest faced the identical fault sequence.
+    pub fn digest(&self) -> u64 {
+        let mut text = format!("{}|{}", self.workers, self.rounds);
+        for bm in &self.words {
+            text.push('|');
+            for word in bm {
+                text.push_str(&format!("{word:016x}"));
+            }
+        }
+        fnv1a64(text.as_bytes())
+    }
+
+    fn words_hex(bm: &[u64]) -> String {
+        bm.iter().map(|w| format!("{w:016x}")).collect()
+    }
+
+    fn words_from_hex(s: &str) -> Result<Vec<u64>> {
+        anyhow::ensure!(s.len() % 16 == 0, "bitmap hex length {} not a multiple of 16", s.len());
+        (0..s.len() / 16)
+            .map(|i| {
+                u64::from_str_radix(&s[i * 16..(i + 1) * 16], 16)
+                    .with_context(|| format!("bad bitmap word at offset {}", i * 16))
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trace files
+// ---------------------------------------------------------------------------
+
+/// A recorded failure schedule: the `deahes-trace/v1` file a `trace:PATH`
+/// failure model replays. Self-describing (source spec + seed + digest)
+/// and self-checking (the digest is verified on load).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceFile {
+    /// Canonical spec of the model the schedule was recorded from.
+    pub source: String,
+    /// Seed the schedule was realized under.
+    pub seed: u64,
+    pub table: SuppressionTable,
+}
+
+impl TraceFile {
+    /// Record `model`'s realized schedule over (workers × rounds).
+    pub fn capture(
+        model: &FailureModel,
+        seed: u64,
+        workers: usize,
+        rounds: u64,
+    ) -> Result<TraceFile> {
+        let table = SuppressionTable::capture(model, seed, workers, rounds)?;
+        Ok(TraceFile { source: model.describe_spec(), seed, table })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let maps: Vec<Json> = self
+            .table
+            .words
+            .iter()
+            .map(|bm| Json::str(&SuppressionTable::words_hex(bm)))
+            .collect();
+        Json::obj(vec![
+            ("format", Json::str(TRACE_FORMAT)),
+            ("workers", Json::num(self.table.workers as f64)),
+            ("rounds", Json::num(self.table.rounds as f64)),
+            ("source", Json::str(&self.source)),
+            ("seed", Json::num(self.seed as f64)),
+            ("suppressed", Json::Arr(maps)),
+            ("digest", Json::str(&format!("{:016x}", self.table.digest()))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TraceFile> {
+        let format = j.get("format").as_str().context("trace: missing 'format'")?;
+        anyhow::ensure!(
+            format == TRACE_FORMAT,
+            "trace format '{format}' is not supported (expected '{TRACE_FORMAT}')"
+        );
+        let workers =
+            j.get("workers").as_usize().context("trace: missing 'workers'")?;
+        let rounds = j.get("rounds").as_f64().context("trace: missing 'rounds'")? as u64;
+        anyhow::ensure!(workers > 0, "trace: zero workers");
+        let maps = j.get("suppressed").as_arr().context("trace: missing 'suppressed'")?;
+        anyhow::ensure!(
+            maps.len() == workers,
+            "trace: {} bitmaps for {} workers",
+            maps.len(),
+            workers
+        );
+        let n_words = rounds.div_ceil(64) as usize;
+        let mut words = Vec::with_capacity(workers);
+        for (w, m) in maps.iter().enumerate() {
+            let bm = SuppressionTable::words_from_hex(
+                m.as_str().with_context(|| format!("trace: bitmap {w} is not a string"))?,
+            )
+            .with_context(|| format!("trace: bad bitmap for worker {w}"))?;
+            anyhow::ensure!(
+                bm.len() == n_words,
+                "trace: bitmap {w} holds {} words, expected {n_words}",
+                bm.len()
+            );
+            words.push(bm);
+        }
+        let table = SuppressionTable { workers, rounds, words };
+        let trace = TraceFile {
+            source: j.get("source").as_str().unwrap_or("").to_string(),
+            seed: j.get("seed").as_f64().unwrap_or(0.0) as u64,
+            table,
+        };
+        if let Some(d) = j.get("digest").as_str() {
+            let actual = format!("{:016x}", trace.table.digest());
+            anyhow::ensure!(
+                d == actual,
+                "trace digest mismatch: file says {d}, schedule hashes to {actual} \
+                 (corrupt or hand-edited trace)"
+            );
+        }
+        Ok(trace)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing trace file {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<TraceFile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace file {path}"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .with_context(|| format!("parsing trace file {path}"))?;
+        TraceFile::from_json(&j).with_context(|| format!("trace file {path}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// compiled per-trial failure schedule
+// ---------------------------------------------------------------------------
+
+/// The compiled form of a run's failure model, built once in
+/// `Setup::build` and shared by every driver thread: an O(1) table lookup
+/// per (worker, round) query, bit-for-bit the pure model's schedule.
+#[derive(Clone, Debug)]
+pub struct FailureSchedule {
+    table: SuppressionTable,
+}
+
+impl FailureSchedule {
+    /// Compile `model` for a (workers × rounds) run. `trace:PATH` loads
+    /// and validates the recording (worker count must match exactly; the
+    /// recording must cover at least `rounds` rounds).
+    pub fn build(
+        model: &FailureModel,
+        seed: u64,
+        workers: usize,
+        rounds: u64,
+    ) -> Result<FailureSchedule> {
+        let table = match model {
+            FailureModel::Trace { path } => {
+                let trace = TraceFile::load(path)?;
+                anyhow::ensure!(
+                    trace.table.workers == workers,
+                    "trace {path} was recorded for {} workers, this run has {workers}",
+                    trace.table.workers
+                );
+                anyhow::ensure!(
+                    trace.table.rounds >= rounds,
+                    "trace {path} covers {} rounds, this run needs {rounds}",
+                    trace.table.rounds
+                );
+                trace.table.truncated(rounds)
+            }
+            other => SuppressionTable::capture(other, seed, workers, rounds)?,
+        };
+        Ok(FailureSchedule { table })
+    }
+
+    pub fn suppressed(&self, w: usize, round: u64) -> bool {
+        self.table.get(w, round)
+    }
+
+    /// Digest of the realized (workers × rounds) schedule — recorded in
+    /// committed trial records so replayed runs are self-describing: a
+    /// `bernoulli` run and its `trace:` replay share the digest.
+    pub fn digest(&self) -> u64 {
+        self.table.digest()
+    }
+
+    pub fn table(&self) -> &SuppressionTable {
+        &self.table
+    }
+}
+
+// ---------------------------------------------------------------------------
+// elastic membership
+// ---------------------------------------------------------------------------
+
+/// The `membership:` schedule grammar: `;`-separated `W=WINDOWS` items,
+/// windows `+`-joined `A-B` (inclusive) or `A-` (open end) spans of
+/// ACTIVE rounds. Workers not listed are active for the whole run.
+///
+/// `"2=0-19+40-;3=10-"`: worker 2 leaves after round 19 and rejoins at
+/// round 40; worker 3 joins (cold) at round 10; everyone else is always
+/// in. A worker whose active window *starts* mid-run adopts the current
+/// master estimate at the transition round (see `WorkerState::rejoin`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MembershipSchedule {
+    /// (worker, windows) sorted by worker; windows sorted, non-overlapping,
+    /// `(start, inclusive end)` with `None` = open.
+    entries: Vec<(usize, Vec<(u64, Option<u64>)>)>,
+}
+
+impl MembershipSchedule {
+    pub fn parse(spec: &str) -> Result<MembershipSchedule> {
+        anyhow::ensure!(!spec.is_empty(), "membership: empty spec");
+        let mut entries: Vec<(usize, Vec<(u64, Option<u64>)>)> = Vec::new();
+        for item in spec.split(';') {
+            let (w, wins) = item
+                .split_once('=')
+                .with_context(|| format!("membership: item '{item}' is not 'W=WINDOWS'"))?;
+            let w: usize = w
+                .parse()
+                .with_context(|| format!("membership: bad worker id '{w}'"))?;
+            anyhow::ensure!(
+                !entries.iter().any(|(e, _)| *e == w),
+                "membership: worker {w} listed twice"
+            );
+            let mut windows: Vec<(u64, Option<u64>)> = Vec::new();
+            anyhow::ensure!(!wins.is_empty(), "membership: worker {w} has no windows");
+            for win in wins.split('+') {
+                let (a, b) = win
+                    .split_once('-')
+                    .with_context(|| format!("membership: window '{win}' is not 'A-B' or 'A-'"))?;
+                let start: u64 = a
+                    .parse()
+                    .with_context(|| format!("membership: bad window start '{a}'"))?;
+                let end: Option<u64> = if b.is_empty() {
+                    None
+                } else {
+                    let e: u64 = b
+                        .parse()
+                        .with_context(|| format!("membership: bad window end '{b}'"))?;
+                    anyhow::ensure!(
+                        e >= start,
+                        "membership: window '{win}' ends before it starts"
+                    );
+                    Some(e)
+                };
+                if let Some(&(ps, pe)) = windows.last() {
+                    let pe = pe.with_context(|| {
+                        format!("membership: worker {w}: window after open-ended '{ps}-'")
+                    })?;
+                    anyhow::ensure!(
+                        start > pe + 1,
+                        "membership: worker {w}: windows must be sorted and \
+                         non-adjacent ('{win}' follows '{ps}-{pe}')"
+                    );
+                }
+                windows.push((start, end));
+            }
+            entries.push((w, windows));
+        }
+        entries.sort_by_key(|(w, _)| *w);
+        Ok(MembershipSchedule { entries })
+    }
+
+    /// Canonical spec string; `parse(describe()) == self`.
+    pub fn describe(&self) -> String {
+        self.entries
+            .iter()
+            .map(|(w, wins)| {
+                let spans = wins
+                    .iter()
+                    .map(|(a, b)| match b {
+                        Some(b) => format!("{a}-{b}"),
+                        None => format!("{a}-"),
+                    })
+                    .collect::<Vec<_>>()
+                    .join("+");
+                format!("{w}={spans}")
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// Largest worker id mentioned (for validation against `cfg.workers`).
+    pub fn max_worker(&self) -> usize {
+        self.entries.last().map_or(0, |(w, _)| *w)
+    }
+
+    /// Is worker `w` part of the active set at `round`? Unlisted workers
+    /// always are. Allocation-free (the drivers call it every round).
+    pub fn active(&self, w: usize, round: u64) -> bool {
+        match self.entries.iter().find(|(e, _)| *e == w) {
+            None => true,
+            Some((_, wins)) => wins
+                .iter()
+                .any(|&(a, b)| round >= a && b.map_or(true, |b| round <= b)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// heterogeneity + scenario bundle
+// ---------------------------------------------------------------------------
+
+/// Does a worker with slowdown factor `s` (≥ 1; 1 = full speed) reach a
+/// sync boundary at `round`? A factor-`s` worker needs `s` rounds of wall
+/// time per local round, so it participates exactly when its accumulated
+/// progress crosses an integer: `floor((round+1)/s) > floor(round/s)`.
+/// Non-participating rounds freeze the worker and count as a missed sync
+/// — which is precisely the signal `delayed`/`adaptive` key on.
+pub fn speed_participates(s: f64, round: u64) -> bool {
+    if s <= 1.0 {
+        return true;
+    }
+    ((round as f64 + 1.0) / s).floor() > (round as f64 / s).floor()
+}
+
+/// The per-run scenario bundle: per-worker slowdowns + membership windows,
+/// both `None` for the legacy uniform fleet (and then every gate below is
+/// a constant-true fast path).
+#[derive(Clone, Debug, Default)]
+pub struct Scenario {
+    pub speeds: Option<Vec<f64>>,
+    pub membership: Option<MembershipSchedule>,
+}
+
+impl Scenario {
+    pub fn from_config(cfg: &crate::config::ExperimentConfig) -> Result<Scenario> {
+        let membership = match &cfg.membership {
+            None => None,
+            Some(spec) => Some(MembershipSchedule::parse(spec)?),
+        };
+        Ok(Scenario { speeds: cfg.speeds.clone(), membership })
+    }
+
+    /// No heterogeneity and no membership windows: the drivers keep the
+    /// legacy (byte-stable) code paths, including the count-based clock.
+    pub fn is_uniform(&self) -> bool {
+        self.membership.is_none()
+            && self.speeds.as_ref().map_or(true, |s| s.iter().all(|&v| v == 1.0))
+    }
+
+    pub fn speed(&self, w: usize) -> f64 {
+        self.speeds.as_ref().and_then(|s| s.get(w)).copied().unwrap_or(1.0)
+    }
+
+    /// Membership gate: is `w` part of the fleet at `round`?
+    pub fn active(&self, w: usize, round: u64) -> bool {
+        self.membership.as_ref().map_or(true, |m| m.active(w, round))
+    }
+
+    /// Straggler gate: does `w` reach its sync boundary at `round`?
+    pub fn participates(&self, w: usize, round: u64) -> bool {
+        speed_participates(self.speed(w), round)
+    }
+
+    /// Does `w` (re)join the fleet AT `round`? True when it is active now
+    /// but was not at `round - 1` — the transition where it must adopt the
+    /// current master estimate instead of continuing from stale state.
+    /// Round 0 is never a join (everyone starts from θ₀).
+    pub fn joins_at(&self, w: usize, round: u64) -> bool {
+        round > 0 && self.active(w, round) && !self.active(w, round - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_memoized_matches_naive_scan() {
+        let m = FailureModel::Burst { p_start: 0.12, mean_len: 4.0 };
+        for seed in [1u64, 7, 42] {
+            let table = SuppressionTable::capture(&m, seed, 3, 200).unwrap();
+            for w in 0..3 {
+                for r in 0..200 {
+                    assert_eq!(
+                        table.get(w, r),
+                        m.suppressed(seed, w, r),
+                        "seed {seed} worker {w} round {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_matches_every_pure_model() {
+        let models = [
+            FailureModel::None,
+            FailureModel::Bernoulli { p: 0.3 },
+            FailureModel::Permanent { from_round: 10, workers: vec![1] },
+        ];
+        for m in models {
+            let table = SuppressionTable::capture(&m, 9, 2, 130).unwrap();
+            for w in 0..2 {
+                for r in 0..130 {
+                    assert_eq!(table.get(w, r), m.suppressed(9, w, r), "{m:?} {w} {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trace_json_roundtrip_preserves_schedule_and_digest() {
+        let m = FailureModel::Bernoulli { p: 0.4 };
+        let t = TraceFile::capture(&m, 5, 4, 77).unwrap();
+        let back = TraceFile::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.table.digest(), t.table.digest());
+        assert_eq!(back.source, "bernoulli:0.4");
+        assert_eq!(back.seed, 5);
+    }
+
+    #[test]
+    fn trace_rejects_corruption() {
+        let t = TraceFile::capture(&FailureModel::Bernoulli { p: 0.5 }, 1, 2, 64).unwrap();
+        let mut j = t.to_json();
+        // flip a schedule bit without updating the digest
+        if let Json::Obj(map) = &mut j {
+            let hex = map.get("suppressed").unwrap().idx(0).as_str().unwrap();
+            let flipped = if hex.starts_with('0') {
+                format!("1{}", &hex[1..])
+            } else {
+                format!("0{}", &hex[1..])
+            };
+            let second = map.get("suppressed").unwrap().idx(1).clone();
+            map.insert("suppressed".into(), Json::Arr(vec![Json::str(&flipped), second]));
+        }
+        let err = TraceFile::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn trace_cannot_capture_itself() {
+        let m = FailureModel::Trace { path: "x.json".into() };
+        assert!(SuppressionTable::capture(&m, 0, 1, 1).is_err());
+    }
+
+    #[test]
+    fn schedule_digest_distinguishes_dimensions_and_bits() {
+        let m = FailureModel::Bernoulli { p: 0.5 };
+        let a = SuppressionTable::capture(&m, 1, 2, 100).unwrap();
+        let b = SuppressionTable::capture(&m, 1, 2, 101).unwrap();
+        let c = SuppressionTable::capture(&m, 2, 2, 100).unwrap();
+        assert_ne!(a.digest(), b.digest());
+        assert_ne!(a.digest(), c.digest());
+        assert_eq!(a.digest(), SuppressionTable::capture(&m, 1, 2, 100).unwrap().digest());
+    }
+
+    #[test]
+    fn membership_grammar_roundtrips() {
+        for spec in ["0=0-19", "2=0-19+40-", "1=10-;3=0-49+60-99", "0=5-"] {
+            let m = MembershipSchedule::parse(spec).unwrap();
+            assert_eq!(m.describe(), spec);
+            assert_eq!(MembershipSchedule::parse(&m.describe()).unwrap(), m);
+        }
+        // entries are canonicalized into worker order
+        let m = MembershipSchedule::parse("3=0-9;1=5-").unwrap();
+        assert_eq!(m.describe(), "1=5-;3=0-9");
+    }
+
+    #[test]
+    fn membership_malformed_rejected() {
+        for spec in [
+            "", "0", "0=", "a=0-9", "0=9-5", "0=0-9+5-20", "0=0-9+10-12", "0=0-+5-9",
+            "0=0-9;0=20-", "0=x-9", "0=1-y",
+        ] {
+            assert!(MembershipSchedule::parse(spec).is_err(), "'{spec}' should not parse");
+        }
+    }
+
+    #[test]
+    fn membership_active_and_join_semantics() {
+        let s = Scenario {
+            speeds: None,
+            membership: Some(MembershipSchedule::parse("1=0-19+40-;2=10-29").unwrap()),
+        };
+        // unlisted worker: always in, never joins
+        assert!(s.active(0, 0) && s.active(0, 500));
+        assert!(!s.joins_at(0, 10));
+        // worker 1: leaves after 19, rejoins at 40
+        assert!(s.active(1, 19) && !s.active(1, 20) && !s.active(1, 39) && s.active(1, 40));
+        assert!(s.joins_at(1, 40) && !s.joins_at(1, 41) && !s.joins_at(1, 0));
+        // worker 2: cold join at 10, gone for good after 29
+        assert!(!s.active(2, 9) && s.active(2, 10) && !s.active(2, 30));
+        assert!(s.joins_at(2, 10));
+    }
+
+    #[test]
+    fn speed_participation_rate_matches_factor() {
+        // a factor-s worker participates in ~rounds/s of the rounds
+        for s in [1.0, 2.0, 3.0, 4.0, 2.5] {
+            let n = 1000u64;
+            let hits = (0..n).filter(|&r| speed_participates(s, r)).count();
+            let expect = (n as f64 / s).round() as usize;
+            assert!(
+                (hits as i64 - expect as i64).abs() <= 1,
+                "s={s}: {hits} participations, expected ~{expect}"
+            );
+        }
+        // full-speed workers participate every round
+        assert!((0..100).all(|r| speed_participates(1.0, r)));
+    }
+
+    #[test]
+    fn uniform_scenario_gates_are_constant_true() {
+        let s = Scenario { speeds: Some(vec![1.0, 1.0]), membership: None };
+        assert!(s.is_uniform());
+        assert!(s.active(0, 3) && s.participates(1, 7) && !s.joins_at(0, 3));
+        let t = Scenario { speeds: Some(vec![1.0, 2.0]), membership: None };
+        assert!(!t.is_uniform());
+    }
+}

@@ -25,8 +25,14 @@
 //!    order at the master (that's the point); round boundaries are fenced
 //!    with barriers only to sample metrics.
 //!
-//! Failure injection is a pure function of (seed, worker, round), so both
-//! drivers face the *identical* fault schedule.
+//! Failure injection is a pure function of (seed, worker, round), compiled
+//! once per run into a [`FailureSchedule`] bitmap at [`Setup::build`], so
+//! both drivers face the *identical* fault schedule — and a `trace:` model
+//! replays a recorded schedule byte-for-byte. The same build step resolves
+//! the run's [`Scenario`] (per-worker speed factors, elastic membership
+//! windows); its pure gates — `active`/`participates`/`joins_at` — are
+//! applied in the same order by every driver (see
+//! docs/ARCHITECTURE.md §Failure models & scenarios).
 //!
 //! Both drivers support **mid-trial checkpointing** ([`run_with`]): at
 //! configurable round boundaries the full simulator state — master θ̃ +
@@ -41,10 +47,10 @@
 
 use super::checkpoint::{self, RunCheckpoint};
 use super::evaluator::Evaluator;
-use super::failure::FailureModel;
 use super::gossip::GossipBoard;
 use super::master::{MasterState, SnapshotPool};
 use super::messages::{RoundReport, SyncReply, ToMaster};
+use super::scenario::{FailureSchedule, Scenario};
 use super::simclock::{SimClock, SimClockReport};
 use super::worker::WorkerState;
 use crate::config::{EngineKind, ExperimentConfig, SyncMode};
@@ -84,6 +90,12 @@ pub struct Setup {
     pub theta0: Vec<f32>,
     /// The resolved optimizer spec (preset or `--optimizer` override).
     pub optim: crate::optim::OptimSpec,
+    /// The compiled (workers × rounds) failure schedule — the one source of
+    /// suppression decisions for every driver (a `trace:` model is loaded
+    /// and validated here, exactly once).
+    pub fsched: FailureSchedule,
+    /// Straggler speeds + elastic membership, resolved from the config.
+    pub scenario: Scenario,
     manifest: Option<Arc<Manifest>>,
 }
 
@@ -109,7 +121,20 @@ impl Setup {
             }
             EngineKind::Quadratic { dim, .. } => (None, vec![0.0f32; *dim]),
         };
-        Ok(Setup { cfg: cfg.clone(), train, test, shard, theta0, optim, manifest })
+        let fsched = FailureSchedule::build(&cfg.failure, cfg.seed, cfg.workers, cfg.rounds)
+            .context("compiling the failure schedule")?;
+        let scenario = Scenario::from_config(cfg)?;
+        Ok(Setup {
+            cfg: cfg.clone(),
+            train,
+            test,
+            shard,
+            theta0,
+            optim,
+            fsched,
+            scenario,
+            manifest,
+        })
     }
 
     /// The run's chunk dispatcher for the parameter-chunked parallel tier:
@@ -212,6 +237,11 @@ pub struct RunResult {
     pub perf: String,
     /// Per-worker (served, corrections).
     pub worker_stats: Vec<(u64, u64)>,
+    /// Digest of the realized failure schedule ([`FailureSchedule::digest`])
+    /// — identical across drivers, policies and sync modes for the same
+    /// schedule, so a `bernoulli` run and its `trace:` replay are provably
+    /// paired by inspection of the committed records.
+    pub fault_digest: u64,
 }
 
 impl RunResult {
@@ -230,6 +260,7 @@ impl RunResult {
             ("wall_secs", Json::num(self.wall_secs)),
             ("sim", self.sim.to_json()),
             ("worker_stats", Json::arr_u64_pairs(&self.worker_stats)),
+            ("fault_digest", Json::str(&bits::u64_hex(self.fault_digest))),
         ])
     }
 
@@ -244,6 +275,10 @@ impl RunResult {
             sim: SimClockReport::from_json(j.get("sim")),
             perf: String::new(),
             worker_stats: j.get("worker_stats").as_u64_pairs(),
+            fault_digest: j
+                .get("fault_digest")
+                .as_str()
+                .map_or(Ok(0), bits::u64_from_hex)?,
         })
     }
 }
@@ -421,7 +456,25 @@ fn run_sequential_central(
         let mut failed = 0u32;
         order_rng.permutation_into(&mut order, cfg.workers);
         for &w in &order {
-            let suppressed = cfg.failure.suppressed(cfg.seed, w, round);
+            if !setup.scenario.active(w, round) {
+                // Elastic-membership gap: not part of the fleet this round
+                // — neither a sync nor a failure.
+                continue;
+            }
+            if setup.scenario.joins_at(w, round) {
+                // (Re)joining the fleet: adopt the current master estimate.
+                workers[w].rejoin(master.theta.clone());
+            }
+            if !setup.scenario.participates(w, round) {
+                // Straggler mid-compute: alive, but not at a sync boundary.
+                workers[w].record_miss();
+                failed += 1;
+                if workers[w].last_loss.is_finite() {
+                    losses.push(workers[w].last_loss as f64);
+                }
+                continue;
+            }
+            let suppressed = setup.fsched.suppressed(w, round);
             if suppressed && cfg.fail_style == crate::coordinator::failure::FailStyle::Node {
                 // Node down: frozen — no steps, no gossip, no sync.
                 workers[w].record_miss();
@@ -508,20 +561,17 @@ fn run_sequential_central(
     }
 
     let (t_step, t_sync) = measured_costs([engine.mean_costs()]);
-    let mut clock = SimClock::new(t_step, t_sync);
-    for &s in &per_round_syncs {
-        clock.round(cfg.workers, cfg.tau, s);
-    }
     Ok(RunResult {
         log,
         wall_secs: t0.elapsed().as_secs_f64(),
-        sim: clock.report(),
+        sim: replay_clock(setup, t_step, t_sync, &per_round_syncs),
         perf: engine.perf_summary(),
         worker_stats: master
             .per_worker
             .iter()
             .map(|s| (s.served, s.corrections))
             .collect(),
+        fault_digest: setup.fsched.digest(),
     })
 }
 
@@ -719,7 +769,26 @@ fn run_sequential_gossip(
         let mut failed = 0u32;
         order_rng.permutation_into(&mut order, cfg.workers);
         for &w in &order {
-            let suppressed = cfg.failure.suppressed(cfg.seed, w, round);
+            if !setup.scenario.active(w, round) {
+                // Elastic-membership gap: sits the round out entirely.
+                continue;
+            }
+            if setup.scenario.joins_at(w, round) {
+                // (Re)joining: adopt the last published master snapshot —
+                // the master view a gossip worker can see.
+                let (_, est) = gossip.master_estimate();
+                workers[w].rejoin(est.as_ref().clone());
+            }
+            if !setup.scenario.participates(w, round) {
+                // Straggler mid-compute: alive, but not at a sync boundary.
+                workers[w].record_miss();
+                failed += 1;
+                if workers[w].last_loss.is_finite() {
+                    losses.push(workers[w].last_loss as f64);
+                }
+                continue;
+            }
+            let suppressed = setup.fsched.suppressed(w, round);
             if suppressed && cfg.fail_style == crate::coordinator::failure::FailStyle::Node {
                 // Node down: frozen — no steps, no board access.
                 workers[w].record_miss();
@@ -826,20 +895,17 @@ fn run_sequential_gossip(
     }
 
     let (t_step, t_sync) = measured_costs([engine.mean_costs()]);
-    let mut clock = SimClock::new(t_step, t_sync);
-    for &s in &per_round_syncs {
-        clock.round(cfg.workers, cfg.tau, s);
-    }
     Ok(RunResult {
         log,
         wall_secs: t0.elapsed().as_secs_f64(),
-        sim: clock.report(),
+        sim: replay_clock(setup, t_step, t_sync, &per_round_syncs),
         perf: engine.perf_summary(),
         worker_stats: master
             .per_worker
             .iter()
             .map(|s| (s.served, s.corrections))
             .collect(),
+        fault_digest: setup.fsched.digest(),
     })
 }
 
@@ -876,6 +942,52 @@ fn measured_costs(costs: impl IntoIterator<Item = (Option<f64>, Option<f64>)>) -
     let step = if steps.is_empty() { NOMINAL_STEP_SECS } else { mean(&steps) };
     let sync = if syncs.is_empty() { NOMINAL_SYNC_SECS } else { mean(&syncs) };
     (step, sync)
+}
+
+/// Replay the virtual clock over the run's realized per-round sync counts —
+/// the ONE helper all four drivers route through. A uniform fleet takes the
+/// legacy homogeneous path (bit-stable with every record committed before
+/// scenarios existed). A heterogeneous/elastic run reconstructs each
+/// round's participant set from the same pure gates the drivers applied:
+/// node-down and absent workers contribute nothing, a straggler surfaces
+/// only on its participating rounds with a compute span covering all the
+/// rounds it was computing through (total compute time is conserved), and
+/// comm-suppressed workers compute without syncing.
+fn replay_clock(
+    setup: &Setup,
+    t_step: f64,
+    t_sync: f64,
+    per_round_syncs: &[usize],
+) -> SimClockReport {
+    let cfg = &setup.cfg;
+    let mut clock = SimClock::new(t_step, t_sync);
+    if setup.scenario.is_uniform() {
+        for &s in per_round_syncs {
+            clock.round(cfg.workers, cfg.tau, s);
+        }
+        return clock.report();
+    }
+    let mut arrivals: Vec<(f64, bool)> = Vec::with_capacity(cfg.workers);
+    for round in 0..per_round_syncs.len() as u64 {
+        arrivals.clear();
+        for w in 0..cfg.workers {
+            if !setup.scenario.active(w, round) || !setup.scenario.participates(w, round) {
+                continue;
+            }
+            let suppressed = setup.fsched.suppressed(w, round);
+            if suppressed && cfg.fail_style == crate::coordinator::failure::FailStyle::Node {
+                continue; // down for the round: no compute, no sync
+            }
+            let span = setup.scenario.speed(w) * cfg.tau as f64 * t_step;
+            arrivals.push((span, !suppressed));
+        }
+        // Stable sort: ties stay in worker-index order, so the Welford wait
+        // stream — and the report hashed into committed records — is
+        // deterministic across drivers.
+        arrivals.sort_by(|a, b| a.0.total_cmp(&b.0));
+        clock.round_hetero(&arrivals);
+    }
+    clock.report()
 }
 
 // ---------------------------------------------------------------------------
@@ -1116,7 +1228,6 @@ fn run_threaded_central(
                     cp.rngs.get("gossip").idx(i).clone(),
                 )
             });
-            let failure: FailureModel = cfg.failure.clone();
             let fail_style = cfg.fail_style;
             let seed = cfg.seed;
             let tau = cfg.tau;
@@ -1134,48 +1245,75 @@ fn run_threaded_central(
                     }
                     let (reply_tx, reply_rx) = mpsc::channel::<SyncReply>();
                     for round in start_round..rounds {
-                        let suppressed = failure.suppressed(seed, i, round);
-                        let node_down = suppressed
-                            && fail_style == crate::coordinator::failure::FailStyle::Node;
-                        let (loss, score) = if node_down {
-                            // frozen for the round
-                            (state.last_loss, None)
-                        } else {
-                            let loss = state.local_round(engine.as_mut(), tau)?;
-                            let (_, est) = gossip.estimate(i, &mut gossip_rng);
-                            (loss, state.observe_and_score(&est))
-                        };
+                        let active = setup_ref.scenario.active(i, round);
                         let mut rep = RoundReport {
                             worker: i,
                             round,
-                            train_loss: loss,
-                            synced: !suppressed,
-                            raw_score: score,
+                            present: active,
+                            train_loss: state.last_loss,
+                            synced: false,
+                            raw_score: None,
                             h1: None,
                             h2: None,
                         };
-                        if suppressed {
-                            state.record_miss();
-                        } else {
-                            // Move θ_w into the sync message instead of
-                            // cloning it: the worker blocks on the reply,
-                            // which hands the (post-elastic) buffer back.
+                        if active && setup_ref.scenario.joins_at(i, round) {
+                            // (Re)joining: fetch and adopt the current
+                            // master estimate over the sync channel.
+                            let (snap_tx, snap_rx) = mpsc::channel();
                             master_tx
-                                .send(ToMaster::Sync {
-                                    worker: i,
-                                    round,
-                                    theta_w: std::mem::take(&mut state.theta),
-                                    raw_score: score,
-                                    missed: state.missed,
-                                    reply: reply_tx.clone(),
-                                })
+                                .send(ToMaster::Snapshot { reply: snap_tx })
                                 .ok()
                                 .context("master channel closed")?;
-                            let reply = reply_rx.recv().context("sync reply dropped")?;
-                            state.complete_sync(reply.theta_w);
-                            gossip.publish(i, round + 1, reply.theta_m);
-                            rep.h1 = Some(reply.h1);
-                            rep.h2 = Some(reply.h2);
+                            state.rejoin(
+                                snap_rx.recv().context("snapshot reply dropped")?,
+                            );
+                            rep.train_loss = state.last_loss;
+                        }
+                        if !active {
+                            // Membership gap: the report still flows (the
+                            // monitor's per-round arity is fixed at k) but
+                            // counts neither as a sync nor as a failure.
+                        } else if !setup_ref.scenario.participates(i, round) {
+                            // Straggler mid-compute: alive, no sync boundary.
+                            state.record_miss();
+                        } else {
+                            let suppressed = setup_ref.fsched.suppressed(i, round);
+                            let node_down = suppressed
+                                && fail_style == crate::coordinator::failure::FailStyle::Node;
+                            let (loss, score) = if node_down {
+                                // frozen for the round
+                                (state.last_loss, None)
+                            } else {
+                                let loss = state.local_round(engine.as_mut(), tau)?;
+                                let (_, est) = gossip.estimate(i, &mut gossip_rng);
+                                (loss, state.observe_and_score(&est))
+                            };
+                            rep.train_loss = loss;
+                            rep.synced = !suppressed;
+                            rep.raw_score = score;
+                            if suppressed {
+                                state.record_miss();
+                            } else {
+                                // Move θ_w into the sync message instead of
+                                // cloning it: the worker blocks on the reply,
+                                // which hands the (post-elastic) buffer back.
+                                master_tx
+                                    .send(ToMaster::Sync {
+                                        worker: i,
+                                        round,
+                                        theta_w: std::mem::take(&mut state.theta),
+                                        raw_score: score,
+                                        missed: state.missed,
+                                        reply: reply_tx.clone(),
+                                    })
+                                    .ok()
+                                    .context("master channel closed")?;
+                                let reply = reply_rx.recv().context("sync reply dropped")?;
+                                state.complete_sync(reply.theta_w);
+                                gossip.publish(i, round + 1, reply.theta_m);
+                                rep.h1 = Some(reply.h1);
+                                rep.h2 = Some(reply.h2);
+                            }
                         }
                         report_tx.send(rep).ok();
                         barrier.wait(); // A: round work done
@@ -1221,6 +1359,10 @@ fn run_threaded_central(
             let mut failed = 0u32;
             for _ in 0..k {
                 let rep = report_rx.recv().context("worker report channel closed")?;
+                if !rep.present {
+                    // Membership gap: neither a sync nor a failure.
+                    continue;
+                }
                 if rep.train_loss.is_finite() {
                     losses.push(rep.train_loss as f64);
                 }
@@ -1353,16 +1495,13 @@ fn run_threaded_central(
         }
 
         let (t_step, t_sync) = measured_costs(engine_costs);
-        let mut clock = SimClock::new(t_step, t_sync);
-        for &s in &per_round_syncs {
-            clock.round(k, cfg.tau, s);
-        }
         Ok(RunResult {
             log,
             wall_secs: t0.elapsed().as_secs_f64(),
-            sim: clock.report(),
+            sim: replay_clock(setup, t_step, t_sync, &per_round_syncs),
             perf,
             worker_stats,
+            fault_digest: setup.fsched.digest(),
         })
     })
 }
@@ -1522,9 +1661,7 @@ fn run_threaded_gossip(
             let state_tx = state_tx.clone();
             let resume_engine: Option<Json> =
                 resume.map(|cp| cp.engines.get("workers").idx(i).clone());
-            let failure: FailureModel = cfg.failure.clone();
             let fail_style = cfg.fail_style;
-            let seed = cfg.seed;
             let tau = cfg.tau;
             let alpha = cfg.alpha;
             let handle = std::thread::Builder::new()
@@ -1542,49 +1679,67 @@ fn run_threaded_gossip(
                     let chunker = setup_ref.chunker();
                     let mut pool = SnapshotPool::new();
                     for round in start_round..rounds {
-                        let suppressed = failure.suppressed(seed, i, round);
-                        let node_down = suppressed
-                            && fail_style == crate::coordinator::failure::FailStyle::Node;
+                        let active = setup_ref.scenario.active(i, round);
                         let mut rep = RoundReport {
                             worker: i,
                             round,
+                            present: active,
                             train_loss: state.last_loss,
-                            synced: !suppressed,
+                            synced: false,
                             raw_score: None,
                             h1: None,
                             h2: None,
                         };
-                        if !node_down {
-                            rep.train_loss = state.local_round(engine.as_mut(), tau)?;
-                            if !suppressed {
-                                // Comm-suppressed workers never touch the
-                                // board (see the sequential driver): the
-                                // board is the link the failure severs.
-                                let (stamp, est) = gossip.master_estimate();
-                                rep.raw_score = state.observe_and_score(&est);
-                                let ctx = crate::elastic::policy::SyncContext {
-                                    worker: i,
-                                    round,
-                                    raw_score: rep.raw_score,
-                                    missed: state.missed,
-                                    alpha,
-                                };
-                                let wts = policy.weights(&ctx);
-                                crate::optim::native::elastic_pull_chunked(
-                                    &mut state.theta,
-                                    &est,
-                                    wts.h1 as f32,
-                                    &chunker,
-                                );
-                                state.complete_pull();
-                                cursor = stamp;
-                                gossip.publish(i, round + 1, pool.publish(&state.theta));
-                                rep.h1 = Some(wts.h1);
-                                rep.h2 = Some(wts.h2);
-                            }
+                        if active && setup_ref.scenario.joins_at(i, round) {
+                            // (Re)joining: adopt the last published master
+                            // snapshot straight off the board.
+                            let (_, est) = gossip.master_estimate();
+                            state.rejoin(est.as_ref().clone());
+                            rep.train_loss = state.last_loss;
                         }
-                        if suppressed {
+                        if !active {
+                            // Membership gap: report still flows (fixed
+                            // per-round arity k), counts as neither.
+                        } else if !setup_ref.scenario.participates(i, round) {
+                            // Straggler mid-compute: alive, no sync boundary.
                             state.record_miss();
+                        } else {
+                            let suppressed = setup_ref.fsched.suppressed(i, round);
+                            let node_down = suppressed
+                                && fail_style == crate::coordinator::failure::FailStyle::Node;
+                            rep.synced = !suppressed;
+                            if !node_down {
+                                rep.train_loss = state.local_round(engine.as_mut(), tau)?;
+                                if !suppressed {
+                                    // Comm-suppressed workers never touch the
+                                    // board (see the sequential driver): the
+                                    // board is the link the failure severs.
+                                    let (stamp, est) = gossip.master_estimate();
+                                    rep.raw_score = state.observe_and_score(&est);
+                                    let ctx = crate::elastic::policy::SyncContext {
+                                        worker: i,
+                                        round,
+                                        raw_score: rep.raw_score,
+                                        missed: state.missed,
+                                        alpha,
+                                    };
+                                    let wts = policy.weights(&ctx);
+                                    crate::optim::native::elastic_pull_chunked(
+                                        &mut state.theta,
+                                        &est,
+                                        wts.h1 as f32,
+                                        &chunker,
+                                    );
+                                    state.complete_pull();
+                                    cursor = stamp;
+                                    gossip.publish(i, round + 1, pool.publish(&state.theta));
+                                    rep.h1 = Some(wts.h1);
+                                    rep.h2 = Some(wts.h2);
+                                }
+                            }
+                            if suppressed {
+                                state.record_miss();
+                            }
                         }
                         report_tx.send(rep).ok();
                         barrier.wait(); // A: round work done
@@ -1630,6 +1785,10 @@ fn run_threaded_gossip(
             let mut failed = 0u32;
             for _ in 0..k {
                 let rep = report_rx.recv().context("worker report channel closed")?;
+                if !rep.present {
+                    // Membership gap: neither a sync nor a failure.
+                    continue;
+                }
                 if rep.train_loss.is_finite() {
                     losses.push(rep.train_loss as f64);
                 }
@@ -1769,16 +1928,13 @@ fn run_threaded_gossip(
         }
 
         let (t_step, t_sync) = measured_costs(engine_costs);
-        let mut clock = SimClock::new(t_step, t_sync);
-        for &s in &per_round_syncs {
-            clock.round(k, cfg.tau, s);
-        }
         Ok(RunResult {
             log,
             wall_secs: t0.elapsed().as_secs_f64(),
-            sim: clock.report(),
+            sim: replay_clock(setup, t_step, t_sync, &per_round_syncs),
             perf,
             worker_stats,
+            fault_digest: setup.fsched.digest(),
         })
     })
 }

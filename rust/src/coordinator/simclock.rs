@@ -100,6 +100,42 @@ impl SimClock {
         self.now - start
     }
 
+    /// Advance one round with heterogeneous per-worker compute spans (the
+    /// straggler/elastic scenarios). `arrivals` holds one entry per
+    /// participating worker — `(compute_span_secs, wants_sync)` — sorted
+    /// ascending by span (ties in a fixed worker order), so the master
+    /// serves syncs in FIFO arrival order. A straggler's span covers ALL
+    /// the rounds it was computing through (it appears only on the round
+    /// it surfaces), so total compute time is conserved. Bit-equivalent
+    /// to [`SimClock::round`] when every span is equal: the first syncer
+    /// is the only one whose `free.max(compute_done)` binds, which is
+    /// exactly the legacy `master_free_at.max(compute_done)` hoist.
+    pub fn round_hetero(&mut self, arrivals: &[(f64, bool)]) -> f64 {
+        debug_assert!(
+            arrivals.windows(2).all(|w| w[0].0 <= w[1].0),
+            "arrivals must be sorted by compute span"
+        );
+        let start = self.now;
+        let mut finish = start;
+        let mut free = self.master_free_at;
+        for &(span, wants_sync) in arrivals {
+            let compute_done = start + span;
+            finish = finish.max(compute_done);
+            if wants_sync {
+                free = free.max(compute_done);
+                let wait = free - compute_done;
+                self.sync_wait.push(wait);
+                free += self.t_sync;
+                self.master_busy += self.t_sync;
+                finish = finish.max(free);
+            }
+        }
+        self.master_free_at = free;
+        self.now = finish;
+        self.rounds += 1;
+        self.now - start
+    }
+
     pub fn report(&self) -> SimClockReport {
         SimClockReport {
             virtual_secs: self.now,
@@ -153,6 +189,63 @@ mod tests {
         assert_eq!(back.virtual_secs.to_bits(), r.virtual_secs.to_bits());
         assert_eq!(back.rounds, r.rounds);
         assert_eq!(back.master_utilization.to_bits(), r.master_utilization.to_bits());
+    }
+
+    /// With a uniform fleet, `round_hetero` must be bit-for-bit the legacy
+    /// `round` — same waits (in the same Welford order), same makespans,
+    /// same report — so the uniform fast path and the scenario path can
+    /// never disagree on committed records.
+    #[test]
+    fn hetero_round_matches_legacy_when_uniform() {
+        let mut legacy = SimClock::new(0.01, 0.002);
+        let mut hetero = SimClock::new(0.01, 0.002);
+        // mixed sync counts, including a zero-sync round
+        for &syncs in &[4usize, 1, 0, 3, 4, 2, 0, 4] {
+            let tau = 2usize;
+            let dl = legacy.round(4, tau, syncs);
+            let span = tau as f64 * 0.01;
+            let arrivals: Vec<(f64, bool)> =
+                (0..4).map(|w| (span, w < syncs)).collect();
+            let dh = hetero.round_hetero(&arrivals);
+            assert_eq!(dl.to_bits(), dh.to_bits());
+        }
+        let (rl, rh) = (legacy.report(), hetero.report());
+        assert_eq!(rl.virtual_secs.to_bits(), rh.virtual_secs.to_bits());
+        assert_eq!(rl.mean_sync_wait.to_bits(), rh.mean_sync_wait.to_bits());
+        assert_eq!(
+            rl.p95_style_max_wait.to_bits(),
+            rh.p95_style_max_wait.to_bits()
+        );
+        assert_eq!(rl.master_utilization.to_bits(), rh.master_utilization.to_bits());
+        assert_eq!(rl.rounds, rh.rounds);
+    }
+
+    /// A slow-but-alive straggler stretches the round and makes the fast
+    /// workers' master contention visible as nonuniform waits.
+    #[test]
+    fn straggler_stretches_round_and_skews_waits() {
+        let mut uniform = SimClock::new(0.01, 0.002);
+        let mut skewed = SimClock::new(0.01, 0.002);
+        let du = uniform.round_hetero(&[(0.01, true), (0.01, true), (0.01, true)]);
+        // worker 2 is 3x slower: it arrives last, after the master drained
+        // the fast workers' queue — so IT waits nothing, and the makespan
+        // stretches to its compute span plus its own sync.
+        let ds = skewed.round_hetero(&[(0.01, true), (0.01, true), (0.03, true)]);
+        assert!(ds > du, "straggler round {ds} should exceed uniform {du}");
+        assert!((ds - (0.03 + 0.002)).abs() < 1e-12);
+        // fast workers still queued against each other: nonzero mean wait
+        assert!(skewed.sync_wait.mean() > 0.0);
+        // and the straggler itself waited 0 (master idle when it arrived)
+        assert!(skewed.sync_wait.count() == 3);
+    }
+
+    #[test]
+    fn empty_round_costs_nothing() {
+        let mut c = SimClock::new(0.01, 0.002);
+        let dt = c.round_hetero(&[]);
+        assert_eq!(dt, 0.0);
+        assert_eq!(c.report().rounds, 1);
+        assert_eq!(c.report().virtual_secs, 0.0);
     }
 
     #[test]

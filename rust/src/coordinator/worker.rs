@@ -159,6 +159,34 @@ impl WorkerState {
         self.missed = 0;
     }
 
+    /// A worker (re)joining an elastic run mid-stream: adopt the current
+    /// master estimate and wipe the momentum/curvature state and score
+    /// history that described its pre-departure trajectory — a joiner is a
+    /// fresh replica, not a resumed straggler. Buffers are reused in place
+    /// (join rounds allocate only for the adopted θ), the step counter and
+    /// batcher cursor survive so the data stream never repeats.
+    pub fn rejoin(&mut self, theta: Vec<f32>) {
+        debug_assert_eq!(theta.len(), self.theta.len());
+        self.theta = theta;
+        match &mut self.opt {
+            OptState::Sgd => {}
+            OptState::Momentum { buf } => buf.fill(0.0),
+            OptState::AdaHessian { m, v, t } => {
+                m.fill(0.0);
+                v.fill(0.0);
+                *t = 0;
+            }
+            OptState::AdamW { m, v, t, .. } => {
+                m.fill(0.0);
+                v.fill(0.0);
+                *t = 0;
+            }
+        }
+        self.score.reset();
+        self.missed = 0;
+        self.last_loss = f32::NAN;
+    }
+
     pub fn epoch(&self) -> u64 {
         self.batcher.as_ref().map(|b| b.epoch()).unwrap_or(0)
     }
@@ -363,6 +391,35 @@ mod tests {
         assert!(wrong_size.restore(&snap).is_err());
         let mut wrong_opt = worker(8, Optimizer::Sgd);
         assert!(wrong_opt.restore(&snap).is_err());
+    }
+
+    /// A rejoin adopts θ and clears trajectory state (momentum, score ring,
+    /// miss counter) while preserving the step counter and data cursor.
+    #[test]
+    fn rejoin_resets_trajectory_but_keeps_stream() {
+        let mut e = QuadraticEngine::new(8, 3, 0, 0.0, 0.0);
+        let mut w = worker(8, Optimizer::AdamW);
+        for _ in 0..4 {
+            w.local_round(&mut e, 2).unwrap();
+            w.observe_and_score(&[0.1; 8]);
+        }
+        w.record_miss();
+        let steps_before = w.steps;
+        w.rejoin(vec![0.5; 8]);
+        assert_eq!(w.theta, vec![0.5; 8]);
+        assert_eq!(w.missed, 0);
+        assert!(w.last_loss.is_nan());
+        assert_eq!(w.steps, steps_before, "step counter survives a rejoin");
+        match &w.opt {
+            OptState::AdamW { m, v, t, .. } => {
+                assert_eq!(*t, 0);
+                assert!(m.iter().all(|&x| x == 0.0));
+                assert!(v.iter().all(|&x| x == 0.0));
+            }
+            _ => unreachable!(),
+        }
+        // score warm-up restarts: first observation after a rejoin is None
+        assert_eq!(w.observe_and_score(&[0.2; 8]), None);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! | Fig 5 | training loss vs rounds, same grid                       | [`fig45_grid`] |
 //! | §VII  | final-accuracy ordering table                            | [`summary_table`] |
 //! | —     | sync-policy spec sweep (beyond the paper)                | [`policy_sweep`] |
+//! | —     | fault-scenario × policy tuning battery                   | [`scenario_battery`] |
 //! | —     | run-dir crash resume + figure re-materialization         | [`resume_run_dir`] |
 //!
 //! Every driver averages over `seeds` runs (the paper uses 3) and returns
@@ -24,7 +25,8 @@ pub mod runner;
 
 pub use runner::{
     averaged_run, averaged_run_with, fig3_overlap_sweep, fig3_overlap_sweep_with, fig45_grid,
-    fig45_grid_with, policy_sweep, policy_sweep_with, resume_run_dir, resume_run_dir_with,
-    series_by_cell, series_from_records, summary_table, AveragedSeries, GridCell, ResumeReport,
-    ResumeTrialDetail,
+    fig45_grid_with, policy_sweep, policy_sweep_with, rank_policies, resume_run_dir,
+    resume_run_dir_with, scenario_battery, scenario_battery_with, series_by_cell,
+    series_from_records, summary_table, AveragedSeries, FaultScenario, GridCell, ResumeReport,
+    ResumeTrialDetail, ScenarioOutcome,
 };

@@ -441,6 +441,150 @@ pub fn policy_sweep_with(
     Ok(series_by_cell(&plan, &report.outcomes))
 }
 
+/// One named fault scenario for the tuning battery: a declarative overlay
+/// on the base config's failure axes (failure model spec, per-worker
+/// straggler speeds, elastic-membership schedule). `None` keeps the base
+/// value for that axis.
+#[derive(Clone, Debug)]
+pub struct FaultScenario {
+    pub name: String,
+    /// Failure-model spec in the [`crate::coordinator::failure`] grammar
+    /// (`none`, `bernoulli:P`, `burst:P,L`, `trace:PATH`, ...).
+    pub failure: Option<String>,
+    /// Per-worker slowdown factors (see `ExperimentConfig::speeds`).
+    pub speeds: Option<Vec<f64>>,
+    /// Elastic-membership schedule (see `ExperimentConfig::membership`).
+    pub membership: Option<String>,
+}
+
+impl FaultScenario {
+    fn overlay(name: &str) -> FaultScenario {
+        FaultScenario { name: name.into(), failure: None, speeds: None, membership: None }
+    }
+
+    /// The default battery: one scenario per failure axis plus a clean
+    /// control, sized for a run of `workers` workers over `rounds` rounds.
+    pub fn paper_battery(workers: usize, rounds: u64) -> Vec<FaultScenario> {
+        assert!(workers >= 2, "battery scenarios perturb the last worker");
+        let last = workers - 1;
+        let mut clean = FaultScenario::overlay("clean");
+        clean.failure = Some("none".into());
+        let mut burst = FaultScenario::overlay("burst");
+        burst.failure = Some("burst:0.15,6".into());
+        // One straggler at one-third speed, NO kills: the regime where the
+        // delayed/adaptive policies differ from fixed without any failures.
+        let mut straggler = FaultScenario::overlay("straggler");
+        straggler.failure = Some("none".into());
+        let mut speeds = vec![1.0; workers];
+        speeds[last] = 3.0;
+        straggler.speeds = Some(speeds);
+        // The last worker leaves for the middle half of the run and rejoins.
+        let mut churn = FaultScenario::overlay("churn");
+        churn.failure = Some("none".into());
+        churn.membership = Some(format!("{last}=0-{}+{}-", rounds / 4, (rounds * 3) / 4));
+        vec![clean, burst, straggler, churn]
+    }
+
+    /// Apply this scenario's overlay to `base` and validate the result.
+    pub fn apply(&self, base: &ExperimentConfig) -> Result<ExperimentConfig> {
+        let mut cfg = base.clone();
+        if let Some(spec) = &self.failure {
+            cfg.failure = crate::coordinator::FailureModel::parse(spec).ok_or_else(|| {
+                anyhow::anyhow!("scenario '{}': bad failure spec '{spec}'", self.name)
+            })?;
+        }
+        if let Some(s) = &self.speeds {
+            cfg.speeds = Some(s.clone());
+        }
+        if let Some(m) = &self.membership {
+            cfg.membership = Some(m.clone());
+        }
+        cfg.validate()
+            .map_err(|e| e.context(format!("scenario '{}' produced a bad config", self.name)))?;
+        Ok(cfg)
+    }
+}
+
+/// One cell of the scenario × policy battery.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    pub scenario: String,
+    /// Canonicalized policy spec.
+    pub policy: String,
+    pub series: AveragedSeries,
+}
+
+/// The paired-schedule tuning battery: every policy spec under every fault
+/// scenario, sharing one plan so `--run-dir`/`--resume` dedup the grid.
+/// Pairing is exact by construction — a scenario's failure schedule,
+/// straggler speeds and membership windows are pure functions of the config
+/// (and, for `trace:`, of the recorded file), so every policy inside one
+/// scenario faces the byte-identical fault sequence; the committed records'
+/// `fault_digest` proves it.
+pub fn scenario_battery(
+    base: &ExperimentConfig,
+    scenarios: &[FaultScenario],
+    specs: &[String],
+    seeds: u64,
+) -> Result<Vec<ScenarioOutcome>> {
+    scenario_battery_with(base, scenarios, specs, seeds, &ScheduleOptions::default())
+}
+
+pub fn scenario_battery_with(
+    base: &ExperimentConfig,
+    scenarios: &[FaultScenario],
+    specs: &[String],
+    seeds: u64,
+    opts: &ScheduleOptions,
+) -> Result<Vec<ScenarioOutcome>> {
+    let mut plan = TrialPlan::new();
+    let mut idx = Vec::new();
+    for sc in scenarios {
+        let cfg = sc.apply(base)?;
+        let mut seen = std::collections::BTreeSet::new();
+        for spec in specs {
+            let canon = crate::elastic::policy::canonical(spec)?;
+            if !seen.insert(canon.clone()) {
+                log_warn!(
+                    "scenario battery: duplicate spec '{spec}' ≡ '{canon}' skipped in '{}'",
+                    sc.name
+                );
+                continue;
+            }
+            let mut cfg = cfg.clone();
+            cfg.policy = Some(canon.clone());
+            let key = gossip_cell_key(base, format!("scenario/{}/policy={canon}", sc.name));
+            plan.push_cell(&key, &canon, &cfg, seeds);
+            idx.push((sc.name.clone(), canon));
+        }
+    }
+    let report = schedule::execute_plan(&plan, opts)?;
+    let series = series_by_cell(&plan, &report.outcomes);
+    assert_eq!(series.len(), idx.len());
+    Ok(idx
+        .into_iter()
+        .zip(series)
+        .map(|((scenario, policy), series)| ScenarioOutcome { scenario, policy, series })
+        .collect())
+}
+
+/// Rank the battery's policies by mean tail accuracy across scenarios,
+/// best first (ties break on the spec string for determinism). The winner
+/// is the "tuned" policy the fig-4/5 benches promote.
+pub fn rank_policies(outcomes: &[ScenarioOutcome]) -> Vec<(String, f64)> {
+    let mut acc: std::collections::BTreeMap<&str, (f64, u32)> =
+        std::collections::BTreeMap::new();
+    for o in outcomes {
+        let e = acc.entry(o.policy.as_str()).or_insert((0.0, 0));
+        e.0 += o.series.final_acc_mean;
+        e.1 += 1;
+    }
+    let mut out: Vec<(String, f64)> =
+        acc.into_iter().map(|(p, (sum, n))| (p.to_string(), sum / n as f64)).collect();
+    out.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    out
+}
+
 /// The §VII ordering table: final accuracy per method per cell.
 pub fn summary_table(cells: &[GridCell]) -> String {
     let mut s = String::new();
@@ -543,6 +687,8 @@ mod tests {
                     rounds: n,
                 },
                 worker_stats: vec![],
+                fault_digest: None,
+                perf: None,
             },
             wall_secs: 0.0,
             cached: false,
@@ -680,6 +826,36 @@ mod tests {
         );
         assert_eq!(by_records[1].test_acc, find("b").test_acc);
         assert_eq!(by_records[1].final_acc_mean.to_bits(), find("b").final_acc_mean.to_bits());
+    }
+
+    /// The battery is a full scenario × policy grid, rankable, with every
+    /// scenario overlay producing a valid config.
+    #[test]
+    fn scenario_battery_covers_the_grid_and_ranks() {
+        let mut base = quad_cfg();
+        base.rounds = 16;
+        let scenarios = FaultScenario::paper_battery(base.workers, base.rounds);
+        assert_eq!(scenarios.len(), 4);
+        let two = &scenarios[..2]; // clean + burst keeps the test fast
+        let specs: Vec<String> = ["fixed", "delayed"].iter().map(|s| s.to_string()).collect();
+        let out = scenario_battery(&base, two, &specs, 1).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].scenario, "clean");
+        assert_eq!(out[0].policy, "fixed(alpha=0.1)");
+        assert_eq!(out[3].scenario, "burst");
+        let ranked = rank_policies(&out);
+        assert_eq!(ranked.len(), 2, "one rank entry per policy");
+        assert!(ranked[0].1 >= ranked[1].1, "ranking is best-first");
+    }
+
+    #[test]
+    fn scenario_overlay_rejects_bad_specs() {
+        let mut sc = FaultScenario::overlay("bad");
+        sc.failure = Some("bogus:x=1".into());
+        assert!(sc.apply(&quad_cfg()).is_err());
+        let mut sc = FaultScenario::overlay("bad-speeds");
+        sc.speeds = Some(vec![0.5; quad_cfg().workers]);
+        assert!(sc.apply(&quad_cfg()).is_err());
     }
 
     #[test]

@@ -1,15 +1,17 @@
 //! `deahes` — CLI launcher for the DEAHES distributed-training system.
 //!
 //! Subcommands:
-//!   train         run one experiment (any method/config), print metrics
-//!   fig3          regenerate the paper's Fig. 3 (overlap-ratio sweep)
-//!   grid          regenerate Figs. 4+5 (method × workers × tau grid)
-//!   policy-sweep  compare sync-policy specs on one config (policy axis)
-//!   resume        finish half-run trials in a run dir + re-materialize figures
-//!   chaos         kill-and-resume smoke: proc backend + injected SIGKILL vs sequential
-//!   bench         hot-path micro/macro benchmarks -> BENCH_hotpath.json
-//!   inspect       validate artifacts/metadata.json and time each artifact
-//!   datagen       dump synthetic-MNIST samples as ASCII (sanity check)
+//!   train            run one experiment (any method/config), print metrics
+//!   fig3             regenerate the paper's Fig. 3 (overlap-ratio sweep)
+//!   grid             regenerate Figs. 4+5 (method × workers × tau grid)
+//!   policy-sweep     compare sync-policy specs on one config (policy axis)
+//!   scenario-battery sync-policy specs × fault scenarios (paired schedules)
+//!   record-trace     capture a failure model's realized schedule as a trace file
+//!   resume           finish half-run trials in a run dir + re-materialize figures
+//!   chaos            kill-and-resume + trace-replay smoke vs sequential
+//!   bench            hot-path micro/macro benchmarks -> BENCH_hotpath.json
+//!   inspect          validate artifacts/metadata.json and time each artifact
+//!   datagen          dump synthetic-MNIST samples as ASCII (sanity check)
 //!
 //! (`trial-worker` also exists as a hidden subcommand: the child half of
 //! `--backend proc`, speaking length-prefixed JSON frames over stdin/stdout.
@@ -84,6 +86,8 @@ fn run(argv: Vec<String>) -> Result<()> {
         "fig3" => cmd_fig3(rest),
         "grid" => cmd_grid(rest),
         "policy-sweep" => cmd_policy_sweep(rest),
+        "scenario-battery" => cmd_scenario_battery(rest),
+        "record-trace" => cmd_record_trace(rest),
         "resume" => cmd_resume(rest),
         "chaos" => cmd_chaos(rest),
         // Hidden: the child half of `--backend proc`. Reads one request
@@ -109,8 +113,10 @@ fn print_usage() {
          \x20 fig3          overlap-ratio sweep (paper Fig. 3)\n\
          \x20 grid          method × workers × tau grid (paper Figs. 4+5)\n\
          \x20 policy-sweep  sync-policy specs compared on one config\n\
+         \x20 scenario-battery  policy specs × fault scenarios on paired schedules\n\
+         \x20 record-trace  capture a failure model's realized schedule as a trace file\n\
          \x20 resume        finish half-run trials in a run dir, re-materialize figures\n\
-         \x20 chaos         kill-and-resume smoke (proc backend + injected SIGKILL)\n\
+         \x20 chaos         kill-and-resume + trace-replay smoke\n\
          \x20 bench         hot-path micro/macro benchmarks (BENCH_hotpath.json)\n\
          \x20 inspect       validate + time the AOT artifacts\n\
          \x20 datagen       preview synthetic-MNIST samples\n\
@@ -137,9 +143,24 @@ fn experiment_cli(name: &str, about: &str) -> Cli {
         .opt(
             "failure",
             "bernoulli:0.3333333333333333",
-            "none|bernoulli:P|burst:P,L|permanent:R,w+w",
+            "none|bernoulli:P|burst:P,L|permanent:R,w+w|trace:PATH (a recorded schedule, \
+             see `deahes record-trace`)",
         )
         .opt("fail-style", "node", "node (down for the round) | comm (link-only, keeps training)")
+        .opt(
+            "speeds",
+            "",
+            "per-worker slowdown factors, comma list of k values >= 1 (1 = full speed; a \
+             worker at s syncs every s-th round — a straggler, not a dead node; empty = \
+             uniform)",
+        )
+        .opt(
+            "membership",
+            "",
+            "elastic-membership schedule 'W=A-B+C-[;W=...]': the listed workers are only \
+             active inside their round windows (join/leave mid-run); unlisted workers \
+             always run (empty = everyone, always)",
+        )
         .opt("knee", "-0.05", "dynamic-weight knee constant k (<0)")
         .opt("detector", "paper-sign", "paper-sign|drift-sign (raw-score convention)")
         .opt(
@@ -384,6 +405,17 @@ fn config_from_args(a: &Args) -> Result<ExperimentConfig> {
             .with_context(|| format!("bad failure spec '{}'", a.get("failure")))?,
         fail_style: deahes::coordinator::failure::FailStyle::parse(a.get("fail-style"))
             .context("bad --fail-style")?,
+        speeds: a.opt_nonempty("speeds").map(|_| a.f64_list("speeds")),
+        // Canonicalize here so two spellings of one schedule share a
+        // fingerprint (mirrors the --policy/--optimizer treatment).
+        membership: match a.opt_nonempty("membership") {
+            Some(s) => Some(
+                deahes::coordinator::MembershipSchedule::parse(s)
+                    .context("bad --membership spec")?
+                    .describe(),
+            ),
+            None => None,
+        },
         score_p: a.usize("score-p"),
         score_decay: a.f64("score-decay"),
         knee: a.f64("knee"),
@@ -456,6 +488,11 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         );
     }
     let result = sim::RunResult {
+        fault_digest: outcome
+            .record
+            .fault_digest
+            .as_deref()
+            .map_or(Ok(0), deahes::util::bits::u64_from_hex)?,
         log: outcome.record.log,
         wall_secs: outcome.wall_secs,
         sim: outcome.record.sim,
@@ -669,6 +706,128 @@ fn cmd_policy_sweep(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// `deahes scenario-battery`: the paired-schedule tuning grid. Every policy
+/// spec runs under every fault scenario (clean control, burst kills, a
+/// no-kill straggler, membership churn); within one scenario every policy
+/// faces the byte-identical fault sequence (`fault_digest` in the committed
+/// records proves the pairing), so the final ranking isolates the policy
+/// axis.
+fn cmd_scenario_battery(argv: Vec<String>) -> Result<()> {
+    let a = sweep_cli(
+        "deahes scenario-battery",
+        "compare sync-policy specs across fault scenarios on paired schedules",
+    )
+    .opt(
+        "scenarios",
+        "all",
+        "comma list of scenario names (clean|burst|straggler|churn) or 'all'",
+    )
+    .opt(
+        "policies",
+        POLICY_SWEEP_DEFAULT,
+        "comma list of policy specs (commas inside parentheses don't split)",
+    )
+    .parse(&argv)
+    .map_err(anyhow::Error::msg)?;
+    reject_shadowed_weighting_flags(&a, "the specs come from --policies")?;
+    let base = config_from_args(&a)?;
+    let opts = schedule_options(&a)?;
+    let battery = experiments::FaultScenario::paper_battery(base.workers, base.rounds);
+    let scenarios: Vec<experiments::FaultScenario> = if a.get("scenarios") == "all" {
+        battery
+    } else {
+        a.get("scenarios")
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|name| {
+                let name = name.trim();
+                battery
+                    .iter()
+                    .find(|sc| sc.name == name)
+                    .cloned()
+                    .with_context(|| {
+                        format!("unknown scenario '{name}' (want clean|burst|straggler|churn)")
+                    })
+            })
+            .collect::<Result<_>>()?
+    };
+    if scenarios.is_empty() {
+        bail!("--scenarios needs at least one scenario");
+    }
+    let specs = a.spec_list("policies");
+    if specs.is_empty() {
+        bail!("--policies needs at least one spec");
+    }
+    let out =
+        experiments::scenario_battery_with(&base, &scenarios, &specs, a.u64("seeds"), &opts)?;
+    println!(
+        "\n== scenario battery: {} on k={}, tau={}, sync={} ==",
+        base.method.name(),
+        base.workers,
+        base.tau,
+        base.sync_mode.name(),
+    );
+    println!("{:<12} {:<55} {:>11} {:>11}", "scenario", "policy", "final acc", "train loss");
+    for o in &out {
+        println!(
+            "{:<12} {:<55} {:>10.2}% {:>11.4}",
+            o.scenario,
+            o.policy,
+            o.series.final_acc_mean * 100.0,
+            o.series.final_train_loss
+        );
+    }
+    let ranked = experiments::rank_policies(&out);
+    println!("\n== ranking: mean tail accuracy across scenarios ==");
+    for (i, (policy, acc)) in ranked.iter().enumerate() {
+        println!("{:>3}. {:<55} {:>10.2}%", i + 1, policy, acc * 100.0);
+    }
+    if let Some((best, _)) = ranked.first() {
+        println!("\ntuned policy: {best}");
+    }
+    Ok(())
+}
+
+/// `deahes record-trace`: realize a generative failure model's schedule for
+/// the given config and write it as a `deahes-trace/v1` file. Any later run
+/// with `--failure trace:PATH` then replays that exact schedule —
+/// independent of policy, sync mode, driver, or even the failure seed.
+fn cmd_record_trace(argv: Vec<String>) -> Result<()> {
+    let a = experiment_cli(
+        "deahes record-trace",
+        "capture the realized failure schedule of a config as a replayable trace file",
+    )
+    .opt("out", "failure.trace.json", "path the trace file is written to")
+    .parse(&argv)
+    .map_err(anyhow::Error::msg)?;
+    let cfg = config_from_args(&a)?;
+    if matches!(cfg.failure, FailureModel::Trace { .. }) {
+        bail!(
+            "--failure {} is already a recorded trace; record from a generative model \
+             (bernoulli/burst/permanent/none)",
+            cfg.failure.describe_spec()
+        );
+    }
+    let trace = deahes::coordinator::TraceFile::capture(
+        &cfg.failure,
+        cfg.seed,
+        cfg.workers,
+        cfg.rounds,
+    )?;
+    let out = a.get("out");
+    trace.save(out)?;
+    println!(
+        "wrote {out}: {} workers x {} rounds from {} (seed {}), digest {:016x}",
+        cfg.workers,
+        cfg.rounds,
+        trace.source,
+        cfg.seed,
+        trace.table.digest()
+    );
+    println!("replay with: --failure trace:{out}");
+    Ok(())
+}
+
 fn cmd_resume(argv: Vec<String>) -> Result<()> {
     let a = backend_cli(
         Cli::new(
@@ -835,6 +994,62 @@ fn cmd_chaos(argv: Vec<String>) -> Result<()> {
             eprintln!("chaos: trial {fp} differs between the sequential and proc runs");
         }
     }
+    // --- Trace-replay leg --------------------------------------------------
+    // Record a burst model's realized schedule, then demand that a `trace:`
+    // replay reproduces the faulty run byte-for-byte (modulo the failure
+    // spec in the config) under two policies and both drivers. The shared
+    // fault digest is what proves the replay really paired the schedules.
+    let trace_path = scratch.join("burst.trace.json");
+    let mut faulty = base.clone();
+    faulty.method = Method::EahesO;
+    faulty.overlap_ratio = 0.25;
+    faulty.failure = FailureModel::parse("burst:0.3,3").expect("literal burst spec");
+    let trace = deahes::coordinator::TraceFile::capture(
+        &faulty.failure,
+        faulty.seed,
+        faulty.workers,
+        faulty.rounds,
+    )?;
+    trace.save(&trace_path.to_string_lossy())?;
+    let digest = trace.table.digest();
+    let replay_spec = format!("trace:{}", trace_path.display());
+    // Byte-identity holds within a driver (the drivers agree on schedules
+    // but intentionally differ in arrival order at the master), so each
+    // replay is paired with a same-driver burst reference.
+    for policy in ["fixed", "delayed"] {
+        let mut burst_cfg = faulty.clone();
+        burst_cfg.policy = Some(deahes::elastic::policy::canonical(policy)?);
+        for threaded in [false, true] {
+            let driver = if threaded { "threaded" } else { "sequential" };
+            let mut reference_cfg = burst_cfg.clone();
+            reference_cfg.threaded = threaded;
+            let reference = sim::run(&reference_cfg)?;
+            if reference.fault_digest != digest {
+                bail!(
+                    "chaos: the burst run ({policy}, {driver}) realized digest {:016x}, \
+                     the recorded trace says {digest:016x}",
+                    reference.fault_digest
+                );
+            }
+            let mut cfg = reference_cfg.clone();
+            cfg.failure = FailureModel::parse(&replay_spec).expect("trace spec parses");
+            let replayed = sim::run(&cfg)?;
+            if replayed.fault_digest != digest {
+                bail!(
+                    "chaos: trace replay ({policy}, {driver}) realized digest {:016x}, \
+                     expected {digest:016x}",
+                    replayed.fault_digest
+                );
+            }
+            if chaos_result_doc(&reference) != chaos_result_doc(&replayed) {
+                bail!(
+                    "chaos: trace replay ({policy}, {driver}) diverged from the burst \
+                     run it was recorded from"
+                );
+            }
+        }
+    }
+
     if a.flag("keep") {
         println!("scratch kept at {}", scratch.display());
     } else {
@@ -852,7 +1067,25 @@ fn cmd_chaos(argv: Vec<String>) -> Result<()> {
          worker SIGKILLed after checkpoint 1, relaunched from its checkpoint)",
         plan.len()
     );
+    println!(
+        "chaos: OK — recorded burst trace (digest {digest:016x}) replayed byte-identically \
+         under 2 policies x 2 drivers"
+    );
     Ok(())
+}
+
+/// The deterministic slice of a [`sim::RunResult`] for the chaos replay
+/// compare: everything except wall-clock, perf text and the config itself
+/// (the burst run and its replay intentionally differ in `failure` spec).
+fn chaos_result_doc(r: &sim::RunResult) -> String {
+    use deahes::util::json::Json;
+    Json::obj(vec![
+        ("records", r.log.to_json()),
+        ("sim", r.sim.to_json()),
+        ("worker_stats", Json::arr_u64_pairs(&r.worker_stats)),
+        ("fault_digest", Json::str(&deahes::util::bits::u64_hex(r.fault_digest))),
+    ])
+    .to_string_compact()
 }
 
 fn cmd_bench(argv: Vec<String>) -> Result<()> {

@@ -146,6 +146,12 @@ struct SlotState {
     next_launch_at: Instant,
     launched: bool,
     done: bool,
+    /// Injected SIGKILLs this trial absorbed (free relaunches).
+    kills_absorbed: u64,
+    /// Uninjected failed attempts (crash/timeout/protocol) absorbed.
+    crashes_absorbed: u64,
+    /// Total backoff delay this trial waited across its relaunches.
+    retry_wait_secs: f64,
 }
 
 /// One live child process.
@@ -215,6 +221,9 @@ impl TrialBackend for ProcessBackend {
                 next_launch_at: now,
                 launched: false,
                 done: false,
+                kills_absorbed: 0,
+                crashes_absorbed: 0,
+                retry_wait_secs: 0.0,
             })
             .collect();
         let mut running: Vec<Running> = Vec::with_capacity(jobs);
@@ -345,9 +354,24 @@ impl TrialBackend for ProcessBackend {
                                     let _ = running[ri].child.kill();
                                 }
                             }
-                            Event::Outcome(out) => {
+                            Event::Outcome(mut out) => {
                                 let pos = running[ri].pos;
                                 running[ri].outcome_seen = true;
+                                // Stamp supervisor telemetry into the record's
+                                // optional `perf` section. Backend-specific by
+                                // design: invariance byte-compares strip it.
+                                let s = &slots[pos];
+                                out.record.perf = Some(Json::obj(vec![
+                                    (
+                                        "attempts",
+                                        Json::num(
+                                            (s.crashes_absorbed + s.kills_absorbed + 1) as f64,
+                                        ),
+                                    ),
+                                    ("kills_absorbed", Json::num(s.kills_absorbed as f64)),
+                                    ("crashes_absorbed", Json::num(s.crashes_absorbed as f64)),
+                                    ("retry_wait_secs", Json::num(s.retry_wait_secs)),
+                                ]));
                                 if let Err(e) = committer.offer(trials[pos].index, *out) {
                                     kill_all(&mut running);
                                     return Err(e);
@@ -379,6 +403,7 @@ impl TrialBackend for ProcessBackend {
                                          relaunching from checkpoint",
                                         trial.slot.fingerprint
                                     );
+                                    slots[pos].kills_absorbed += 1;
                                     slots[pos].next_launch_at = Instant::now();
                                     continue;
                                 }
@@ -402,6 +427,8 @@ impl TrialBackend for ProcessBackend {
                                     );
                                 }
                                 let delay = self.backoff(trial, slots[pos].attempts);
+                                slots[pos].crashes_absorbed += 1;
+                                slots[pos].retry_wait_secs += delay.as_secs_f64();
                                 log_warn!(
                                     "proc backend: trial {} attempt {} {why}{detail}; \
                                      relaunching in {:.2}s{}",

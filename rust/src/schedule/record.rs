@@ -32,6 +32,19 @@ pub struct TrialRecord {
     pub sim: SimClockReport,
     /// Per-worker (syncs served, corrections fired).
     pub worker_stats: Vec<(u64, u64)>,
+    /// Hex digest of the realized failure schedule (see
+    /// [`crate::coordinator::scenario::FailureSchedule::digest`]) —
+    /// deterministic across drivers, policies and sync modes, so a
+    /// `bernoulli` run and its `trace:` replay are provably paired by
+    /// inspecting the committed records. `None` (key omitted, keeping
+    /// legacy record bytes stable) when the run injected no failures.
+    pub fault_digest: Option<String>,
+    /// Supervisor telemetry for proc-backend trials (attempt count, kills
+    /// absorbed, retry latency) — see `schedule::proc`. Backend-specific
+    /// diagnostics, NOT part of the deterministic result: every
+    /// backend-invariance byte-compare strips this key. `None` (omitted)
+    /// for in-process trials.
+    pub perf: Option<Json>,
 }
 
 impl TrialRecord {
@@ -50,11 +63,16 @@ impl TrialRecord {
             log,
             sim: r.sim.clone(),
             worker_stats: r.worker_stats.clone(),
+            fault_digest: match slot.config.failure {
+                crate::coordinator::FailureModel::None => None,
+                _ => Some(crate::util::bits::u64_hex(r.fault_digest)),
+            },
+            perf: None,
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("fingerprint", Json::str(&self.fingerprint)),
             ("cell", Json::str(&self.cell)),
             ("label", Json::str(&self.label)),
@@ -63,7 +81,14 @@ impl TrialRecord {
             ("records", self.log.to_json()),
             ("sim", self.sim.to_json()),
             ("worker_stats", Json::arr_u64_pairs(&self.worker_stats)),
-        ])
+        ];
+        if let Some(d) = &self.fault_digest {
+            fields.push(("fault_digest", Json::str(d)));
+        }
+        if let Some(p) = &self.perf {
+            fields.push(("perf", p.clone()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<TrialRecord> {
@@ -81,6 +106,11 @@ impl TrialRecord {
             log: MetricsLog::from_json(j.get("records")).context("record: bad 'records'")?,
             sim: SimClockReport::from_json(j.get("sim")),
             worker_stats: j.get("worker_stats").as_u64_pairs(),
+            fault_digest: j.get("fault_digest").as_str().map(str::to_string),
+            perf: match j.get("perf") {
+                Json::Null => None,
+                p => Some(p.clone()),
+            },
         })
     }
 }
@@ -133,6 +163,8 @@ mod tests {
                 rounds: 3,
             },
             worker_stats: vec![(10, 1), (9, 0)],
+            fault_digest: None,
+            perf: None,
         }
     }
 
@@ -148,6 +180,26 @@ mod tests {
         assert_eq!(back.log.records[0].test_acc, 0.5);
         assert_eq!(back.sim.virtual_secs, 1.5);
         assert_eq!(back.worker_stats, vec![(10, 1), (9, 0)]);
+        assert_eq!(back.fault_digest, None);
+        assert_eq!(back.perf, None);
+    }
+
+    /// The optional keys follow the config's omission discipline: absent
+    /// from the JSON when unset (legacy record bytes stay stable),
+    /// round-tripping when set.
+    #[test]
+    fn optional_keys_omitted_and_roundtrip() {
+        let rec = sample();
+        let text = rec.to_json().to_string_compact();
+        assert!(!text.contains("fault_digest"), "{text}");
+        assert!(!text.contains("perf"), "{text}");
+
+        let mut rec = sample();
+        rec.fault_digest = Some("00000000deadbeef".into());
+        rec.perf = Some(Json::obj(vec![("attempts", Json::num(2.0))]));
+        let back = TrialRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(back.fault_digest.as_deref(), Some("00000000deadbeef"));
+        assert_eq!(back.perf, rec.perf);
     }
 
     #[test]

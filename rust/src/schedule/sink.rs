@@ -88,6 +88,8 @@ pub fn config_schema_hash() -> String {
     cfg.optimizer = Some("adamw(beta1=0.9,beta2=0.999,eps=0.00000001,wd=0.01)".into());
     cfg.sync_mode = crate::config::SyncMode::Gossip;
     cfg.intra_parallel = Some(4096);
+    cfg.speeds = Some(vec![1.0; cfg.workers]);
+    cfg.membership = Some("0=0-".into());
     let mut log = MetricsLog::default();
     log.push(RoundRecord {
         round: 0,
@@ -115,6 +117,13 @@ pub fn config_schema_hash() -> String {
             rounds: 0,
         },
         worker_stats: vec![(0, 0)],
+        fault_digest: Some(String::new()),
+        perf: Some(Json::obj(vec![
+            ("attempts", Json::num(0.0)),
+            ("kills_absorbed", Json::num(0.0)),
+            ("crashes_absorbed", Json::num(0.0)),
+            ("retry_wait_secs", Json::num(0.0)),
+        ])),
     };
     let mut keys: Vec<String> = Vec::new();
     collect("record", &sample.to_json(), &mut keys);

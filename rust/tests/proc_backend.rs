@@ -60,12 +60,18 @@ fn proc_opts() -> ProcOptions {
     }
 }
 
-/// fingerprint -> compact committed-record bytes for a run dir.
+/// fingerprint -> compact committed-record bytes for a run dir, with the
+/// supervisor-only `perf` section stripped: telemetry (attempt counts,
+/// retry latencies) is intentionally backend-dependent, everything else
+/// must be byte-invariant.
 fn record_bytes(dir: &Path) -> BTreeMap<String, String> {
     JsonlRunSink::load(&dir.join(schedule::RUNS_FILE))
         .unwrap()
         .into_iter()
-        .map(|(fp, r)| (fp, r.to_json().to_string_compact()))
+        .map(|(fp, mut r)| {
+            r.perf = None;
+            (fp, r.to_json().to_string_compact())
+        })
         .collect()
 }
 
@@ -102,9 +108,17 @@ fn proc_backend_commits_byte_identical_records_to_sequential() {
     // In-memory outcomes agree in plan order...
     for (a, b) in seq.outcomes.iter().zip(&prc.outcomes) {
         assert_eq!(a.record.fingerprint, b.record.fingerprint, "plan order must match");
+        // ...modulo the supervisor-only perf section: proc records carry
+        // attempt telemetry, sequential records never do.
+        assert!(a.record.perf.is_none(), "sequential backend writes no perf section");
+        let perf = b.record.perf.as_ref().expect("proc backend stamps perf telemetry");
+        assert_eq!(perf.get("attempts").as_f64(), Some(1.0), "clean run = one attempt");
+        assert_eq!(perf.get("kills_absorbed").as_f64(), Some(0.0));
+        let mut b_stripped = b.record.clone();
+        b_stripped.perf = None;
         assert_eq!(
             a.record.to_json().to_string_compact(),
-            b.record.to_json().to_string_compact(),
+            b_stripped.to_json().to_string_compact(),
             "trial {} must be backend-invariant",
             a.record.fingerprint
         );
@@ -146,6 +160,13 @@ fn sigkilled_worker_relaunches_from_checkpoint_byte_identically() {
     opts.proc.inject_kill = vec![KillSpec { trial: 1, after: 1 }];
     let report = schedule::execute_plan(&plan, &opts).unwrap();
     assert_eq!(report.executed, plan.len(), "the killed trial still completes");
+    // The absorbed SIGKILL shows up in the committed telemetry: one free
+    // relaunch (injected kills never consume the retry budget).
+    let killed =
+        report.outcomes[1].record.perf.as_ref().expect("proc backend stamps perf telemetry");
+    assert_eq!(killed.get("kills_absorbed").as_f64(), Some(1.0));
+    assert_eq!(killed.get("attempts").as_f64(), Some(2.0), "kill + relaunch = two launches");
+    assert_eq!(killed.get("crashes_absorbed").as_f64(), Some(0.0));
     assert_eq!(
         record_bytes(&seq_dir),
         record_bytes(&proc_dir),

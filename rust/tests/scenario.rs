@@ -1,0 +1,471 @@
+//! The fault-scenario subsystem end to end (ISSUE 8 acceptance):
+//!
+//!  1. trace-driven replay — a generative model's realized schedule,
+//!     recorded to a `deahes-trace/v1` file, replays byte-identically
+//!     under `--failure trace:PATH` across policies and drivers (the
+//!     shared `fault_digest` proves the pairing);
+//!  2. heterogeneous stragglers — per-worker `speeds` produce nonuniform
+//!     sync participation and wait behaviour with NO kills, and the
+//!     staleness-aware policies (`delayed`, `adaptive`) measurably
+//!     respond where `fixed` cannot;
+//!  3. elastic membership — workers leave and rejoin mid-run, and
+//!     checkpoint/resume across the transitions stays byte-identical.
+//!
+//! Byte-identity is asserted within a driver: the threaded drivers agree
+//! with sequential on every schedule-level fact (fault schedule, sync
+//! counts, served totals) but intentionally differ in arrival order at
+//! the master (see tests/driver_parity.rs).
+
+use deahes::config::{EngineKind, ExperimentConfig, SyncMode};
+use deahes::coordinator::checkpoint::RunCheckpoint;
+use deahes::coordinator::sim::{self, CheckpointHooks};
+use deahes::coordinator::{FailureModel, TraceFile};
+use deahes::strategies::Method;
+use deahes::util::json::Json;
+use std::path::PathBuf;
+
+fn quad_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        engine: EngineKind::Quadratic { dim: 32, heterogeneity: 0.3, noise: 0.05 },
+        method: Method::DeahesO,
+        workers: 3,
+        tau: 2,
+        rounds: 24,
+        eval_subset: 16,
+        eval_every: 1,
+        failure: FailureModel::Burst { p_start: 0.25, mean_len: 4.0 },
+        ..ExperimentConfig::default()
+    }
+}
+
+/// The deterministic content a committed record would carry, plus the
+/// realized-schedule digest.
+fn digest(r: &sim::RunResult) -> String {
+    let mut log = r.log.clone();
+    log.canonicalize_non_finite();
+    Json::obj(vec![
+        ("records", log.to_json()),
+        ("sim", r.sim.to_json()),
+        ("worker_stats", Json::arr_u64_pairs(&r.worker_stats)),
+        ("fault_digest", Json::str(&deahes::util::bits::u64_hex(r.fault_digest))),
+    ])
+    .to_string_compact()
+}
+
+fn tmp_trace(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("deahes-scenario-{}-{name}.trace.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Trace files round-trip bit-exactly through disk, and the digest guards
+/// against corruption.
+#[test]
+fn trace_file_roundtrips_and_detects_corruption() {
+    let cfg = quad_cfg();
+    let trace =
+        TraceFile::capture(&cfg.failure, cfg.seed, cfg.workers, cfg.rounds).unwrap();
+    let path = tmp_trace("roundtrip");
+    trace.save(&path).unwrap();
+    let back = TraceFile::load(&path).unwrap();
+    assert_eq!(back, trace, "trace file must round-trip bit-exactly");
+    assert_eq!(back.table.digest(), trace.table.digest());
+
+    // flip one suppression bit in the JSON: the digest check must catch it
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = Json::parse(&text).unwrap();
+    let first = j.get("suppressed").as_arr().unwrap()[0].as_str().unwrap();
+    let mut chars: Vec<char> = first.chars().collect();
+    chars[0] = if chars[0] == '0' { '1' } else { '0' };
+    let flipped: String = chars.into_iter().collect();
+    let corrupted = text.replacen(first, &flipped, 1);
+    std::fs::write(&path, corrupted).unwrap();
+    let err = format!("{:#}", TraceFile::load(&path).unwrap_err());
+    assert!(err.contains("digest mismatch"), "{err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The headline acceptance pin: a recorded burst schedule replays
+/// byte-identically under 2 policies and both drivers (and in gossip
+/// mode), with the same `fault_digest` everywhere.
+#[test]
+fn recorded_trace_replays_byte_identically_across_policies_and_drivers() {
+    let base = quad_cfg();
+    let trace =
+        TraceFile::capture(&base.failure, base.seed, base.workers, base.rounds).unwrap();
+    let path = tmp_trace("replay");
+    trace.save(&path).unwrap();
+    let expect = trace.table.digest();
+
+    for policy in ["fixed(alpha=0.1)", "delayed(alpha=0.1,staleness_cap=3)"] {
+        for (sync_mode, threaded) in [
+            (SyncMode::Central, false),
+            (SyncMode::Central, true),
+            (SyncMode::Gossip, false),
+            (SyncMode::Gossip, true),
+        ] {
+            let mut burst_cfg = base.clone();
+            burst_cfg.policy = Some(policy.to_string());
+            burst_cfg.sync_mode = sync_mode;
+            burst_cfg.threaded = threaded;
+            let reference = sim::run(&burst_cfg).unwrap();
+            assert_eq!(
+                reference.fault_digest, expect,
+                "{policy} {sync_mode:?} threaded={threaded}: burst digest mismatch"
+            );
+            let mut replay_cfg = burst_cfg.clone();
+            replay_cfg.failure = FailureModel::Trace { path: path.clone() };
+            let replayed = sim::run(&replay_cfg).unwrap();
+            assert_eq!(
+                replayed.fault_digest, expect,
+                "{policy} {sync_mode:?} threaded={threaded}: replay digest mismatch"
+            );
+            if threaded {
+                // schedule-level facts are driver-invariant; numerics are
+                // arrival-order dependent, so byte-compare is sequential-only
+                assert_eq!(reference.log.records.len(), replayed.log.records.len());
+                for (a, b) in reference.log.records.iter().zip(&replayed.log.records) {
+                    assert_eq!(
+                        (a.round, a.syncs_ok, a.syncs_failed),
+                        (b.round, b.syncs_ok, b.syncs_failed),
+                        "{policy} {sync_mode:?}: replayed schedule diverged"
+                    );
+                }
+                let served = |r: &sim::RunResult| -> Vec<u64> {
+                    r.worker_stats.iter().map(|s| s.0).collect()
+                };
+                assert_eq!(served(&reference), served(&replayed));
+            } else {
+                assert_eq!(
+                    digest(&reference),
+                    digest(&replayed),
+                    "{policy} {sync_mode:?}: trace replay is not byte-identical"
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A longer recording truncates cleanly to a shorter run; a worker-count
+/// mismatch is a hard error naming both counts.
+#[test]
+fn trace_truncates_to_shorter_runs_and_rejects_wrong_arity() {
+    let base = quad_cfg();
+    let trace =
+        TraceFile::capture(&base.failure, base.seed, base.workers, base.rounds).unwrap();
+    let path = tmp_trace("truncate");
+    trace.save(&path).unwrap();
+
+    let mut short = base.clone();
+    short.rounds = 10;
+    short.failure = FailureModel::Trace { path: path.clone() };
+    let r = sim::run(&short).unwrap();
+    assert_eq!(r.log.records.len(), 10);
+    // the realized digest covers the truncated 10-round window, so it
+    // deliberately differs from the 24-round file's digest
+    assert_ne!(r.fault_digest, trace.table.digest());
+
+    let mut fat = base.clone();
+    fat.workers = 4;
+    fat.failure = FailureModel::Trace { path: path.clone() };
+    let err = format!("{:#}", sim::run(&fat).unwrap_err());
+    assert!(err.contains("3 workers") && err.contains("4"), "{err}");
+
+    let mut long = base.clone();
+    long.rounds = 100;
+    long.failure = FailureModel::Trace { path: path.clone() };
+    let err = format!("{:#}", sim::run(&long).unwrap_err());
+    assert!(err.contains("covers 24 rounds"), "{err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Straggler regime (NO kills): a worker at one-third speed participates in
+/// one round of three, which (a) skews the per-worker served-sync totals,
+/// (b) changes the virtual clock's wait stream vs the uniform run, and
+/// (c) is visible to the staleness-aware policies through `missed` — the
+/// `delayed` policy teleports the stale replica (h1=1) where `fixed` keeps
+/// h1=α always.
+#[test]
+fn stragglers_skew_participation_waits_and_policy_response() {
+    let mut uniform = quad_cfg();
+    uniform.failure = FailureModel::None;
+    uniform.policy = Some("fixed(alpha=0.1)".to_string());
+    let mut straggler = uniform.clone();
+    straggler.speeds = Some(vec![1.0, 1.0, 3.0]);
+
+    let u = sim::run(&uniform).unwrap();
+    let s = sim::run(&straggler).unwrap();
+
+    // (a) nonuniform participation: worker 2 served ~1/3 of the others
+    let served: Vec<u64> = s.worker_stats.iter().map(|w| w.0).collect();
+    assert_eq!(served[0], served[1], "full-speed workers stay uniform");
+    assert!(
+        served[2] <= served[0] / 2,
+        "straggler must serve at most half the syncs of a full-speed worker, \
+         got {served:?}"
+    );
+    // straggler rounds count as failed syncs even with FailureModel::None
+    let failed: u32 = s.log.records.iter().map(|r| r.syncs_failed).sum();
+    assert!(failed > 0, "straggler misses must surface as syncs_failed");
+    let u_failed: u32 = u.log.records.iter().map(|r| r.syncs_failed).sum();
+    assert_eq!(u_failed, 0, "uniform no-failure run has nothing to miss");
+
+    // (b) the wait stream is nonuniform vs the uniform run
+    assert!(
+        s.sim.mean_sync_wait != u.sim.mean_sync_wait
+            || s.sim.p95_style_max_wait != u.sim.p95_style_max_wait,
+        "straggler run must change the sync-wait behaviour \
+         (uniform mean={} p95={}, straggler mean={} p95={})",
+        u.sim.mean_sync_wait,
+        u.sim.p95_style_max_wait,
+        s.sim.mean_sync_wait,
+        s.sim.p95_style_max_wait
+    );
+    // and the straggler's compute stretches the virtual round span
+    assert!(s.sim.virtual_secs > u.sim.virtual_secs);
+
+    // (c) fixed never moves h1 off α; delayed teleports at the staleness cap
+    let max_h1 = |r: &sim::RunResult| -> f64 {
+        r.log
+            .records
+            .iter()
+            .filter(|rec| rec.syncs_ok > 0)
+            .map(|rec| rec.mean_h1)
+            .fold(f64::MIN, f64::max)
+    };
+    assert!(
+        (max_h1(&s) - 0.1).abs() < 1e-12,
+        "fixed policy must keep h1=alpha even under stragglers, got {}",
+        max_h1(&s)
+    );
+    let mut delayed = straggler.clone();
+    delayed.policy = Some("delayed(alpha=0.1,staleness_cap=2)".to_string());
+    let d = sim::run(&delayed).unwrap();
+    assert!(
+        max_h1(&d) > 0.3,
+        "delayed policy must teleport the stale straggler (h1=1 lifts the \
+         round mean), got max mean_h1 {}",
+        max_h1(&d)
+    );
+    // adaptive responds too: its weighting under stragglers differs from
+    // its uniform-regime weighting (where no syncs are ever missed)
+    let mut adaptive_uniform = uniform.clone();
+    adaptive_uniform.policy = Some("adaptive(alpha0=0.1,window=4)".to_string());
+    let mut adaptive_straggler = adaptive_uniform.clone();
+    adaptive_straggler.speeds = Some(vec![1.0, 1.0, 3.0]);
+    let au = sim::run(&adaptive_uniform).unwrap();
+    let asg = sim::run(&adaptive_straggler).unwrap();
+    let h1_series = |r: &sim::RunResult| -> Vec<u64> {
+        r.log.records.iter().map(|rec| rec.mean_h1.to_bits()).collect()
+    };
+    assert_ne!(
+        h1_series(&au),
+        h1_series(&asg),
+        "adaptive must respond to straggler-induced misses"
+    );
+}
+
+/// Membership + speeds are fingerprint axes: flipping either changes the
+/// schedule fingerprint, and omitting them keeps legacy fingerprints.
+#[test]
+fn scenario_axes_change_fingerprints() {
+    use deahes::schedule::TrialPlan;
+    let fp = |cfg: &ExperimentConfig| -> String {
+        let mut plan = TrialPlan::new();
+        plan.push_cell("c", "c", cfg, 1);
+        plan.slots[0].fingerprint.clone()
+    };
+    let base = quad_cfg();
+    let legacy = fp(&base);
+    let mut speeds = base.clone();
+    speeds.speeds = Some(vec![1.0, 1.0, 3.0]);
+    let mut membership = base.clone();
+    membership.membership = Some("2=0-9+15-".to_string());
+    assert_ne!(fp(&speeds), legacy);
+    assert_ne!(fp(&membership), legacy);
+    assert_ne!(fp(&speeds), fp(&membership));
+}
+
+/// Elastic membership end to end: the scheduled worker leaves, the run
+/// carries on with the remaining workers, and the rejoin adopts the master
+/// estimate — per-round sync arithmetic proves the window was honoured.
+#[test]
+fn membership_windows_gate_participation() {
+    let mut cfg = quad_cfg();
+    cfg.failure = FailureModel::None;
+    // worker 2 active rounds 0..=9 and 15.., absent 10..=14
+    cfg.membership = Some("2=0-9+15-".to_string());
+    let r = sim::run(&cfg).unwrap();
+    for rec in &r.log.records {
+        let expect = if (10..=14).contains(&rec.round) { 2 } else { 3 };
+        assert_eq!(
+            rec.syncs_ok + rec.syncs_failed,
+            expect,
+            "round {}: absent workers must neither sync nor fail",
+            rec.round
+        );
+    }
+    // threaded drivers honour the identical window (fixed report arity
+    // keeps the barrier protocol intact while worker 2 is away)
+    for sync_mode in [SyncMode::Central, SyncMode::Gossip] {
+        let mut thr = cfg.clone();
+        thr.threaded = true;
+        thr.sync_mode = sync_mode;
+        let t = sim::run(&thr).unwrap();
+        assert_eq!(t.log.records.len(), r.log.records.len());
+        for (a, b) in r.log.records.iter().zip(&t.log.records) {
+            assert_eq!(
+                a.syncs_ok + a.syncs_failed,
+                b.syncs_ok + b.syncs_failed,
+                "{sync_mode:?}: threaded membership diverged at round {}",
+                a.round
+            );
+        }
+    }
+}
+
+/// Checkpoint/resume byte-identity across membership transitions: cuts
+/// before the leave, inside the gap, and after the rejoin all continue to
+/// the same bytes as the uninterrupted run — in central AND gossip mode.
+#[test]
+fn membership_transition_checkpoint_resume_is_byte_identical() {
+    for sync_mode in [SyncMode::Central, SyncMode::Gossip] {
+        let mut cfg = quad_cfg();
+        cfg.failure = FailureModel::None;
+        cfg.sync_mode = sync_mode;
+        cfg.policy = Some("delayed(alpha=0.1,staleness_cap=3)".to_string());
+        // transitions at round 10 (leave) and 15 (rejoin); cuts at 6
+        // (before), 12 (inside the gap) and 18 (after the rejoin)
+        cfg.membership = Some("2=0-9+15-".to_string());
+        let baseline = digest(&sim::run(&cfg).unwrap());
+
+        let mut cps: Vec<RunCheckpoint> = Vec::new();
+        let mut save = |cp: RunCheckpoint| -> anyhow::Result<()> {
+            cps.push(cp);
+            Ok(())
+        };
+        let hooked = sim::run_with(
+            &cfg,
+            None,
+            Some(CheckpointHooks { every: 6, every_secs: 0.0, save: &mut save }),
+        )
+        .unwrap();
+        assert_eq!(
+            digest(&hooked),
+            baseline,
+            "{sync_mode:?}: capturing checkpoints changed numbers"
+        );
+        assert_eq!(cps.len(), 3, "{sync_mode:?}: rounds=24, every=6 -> cuts at 6, 12, 18");
+        for cp in &cps {
+            let round = cp.next_round;
+            let resumed = sim::run_with(&cfg, Some(cp), None).unwrap();
+            assert_eq!(
+                digest(&resumed),
+                baseline,
+                "{sync_mode:?}: resume from round {round} diverged across a \
+                 membership transition"
+            );
+            // and through the JSON round-trip the sink actually stores
+            let reread = RunCheckpoint::from_json(
+                &Json::parse(&cp.to_json().to_string_compact()).unwrap(),
+            )
+            .unwrap();
+            let resumed = sim::run_with(&cfg, Some(&reread), None).unwrap();
+            assert_eq!(
+                digest(&resumed),
+                baseline,
+                "{sync_mode:?}: resume from persisted round-{round} checkpoint diverged"
+            );
+        }
+    }
+}
+
+/// Combined scenario: stragglers + membership + a recorded trace all at
+/// once, checkpoint/resume included — the axes compose.
+#[test]
+fn combined_scenario_resumes_byte_identically() {
+    let base = quad_cfg();
+    let trace =
+        TraceFile::capture(&base.failure, base.seed, base.workers, base.rounds).unwrap();
+    let path = tmp_trace("combined");
+    trace.save(&path).unwrap();
+
+    let mut cfg = base.clone();
+    cfg.failure = FailureModel::Trace { path: path.clone() };
+    cfg.speeds = Some(vec![1.0, 2.0, 1.0]);
+    cfg.membership = Some("0=0-11+18-".to_string());
+    cfg.policy = Some("adaptive(alpha0=0.1,window=4)".to_string());
+    let baseline = digest(&sim::run(&cfg).unwrap());
+
+    let mut cps: Vec<RunCheckpoint> = Vec::new();
+    let mut save = |cp: RunCheckpoint| -> anyhow::Result<()> {
+        cps.push(cp);
+        Ok(())
+    };
+    sim::run_with(
+        &cfg,
+        None,
+        Some(CheckpointHooks { every: 8, every_secs: 0.0, save: &mut save }),
+    )
+    .unwrap();
+    assert_eq!(cps.len(), 2);
+    for cp in &cps {
+        let resumed = sim::run_with(&cfg, Some(cp), None).unwrap();
+        assert_eq!(
+            digest(&resumed),
+            baseline,
+            "combined scenario: resume from round {} diverged",
+            cp.next_round
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("deahes-scenario-{}-{name}", std::process::id()))
+}
+
+/// Committed records carry the realized-schedule digest: a burst run and
+/// its trace replay are provably paired by inspecting runs.jsonl alone,
+/// while a no-failure record omits the key entirely.
+#[test]
+fn committed_records_carry_the_fault_digest() {
+    use deahes::schedule::{self, JsonlRunSink, ScheduleOptions, TrialPlan};
+    let base = quad_cfg();
+    let trace =
+        TraceFile::capture(&base.failure, base.seed, base.workers, base.rounds).unwrap();
+    let path = tmp_trace("records");
+    trace.save(&path).unwrap();
+    let expect = deahes::util::bits::u64_hex(trace.table.digest());
+
+    let mut replay = base.clone();
+    replay.failure = FailureModel::Trace { path: path.clone() };
+    let mut clean = base.clone();
+    clean.failure = FailureModel::None;
+
+    let dir = tmp_dir("records");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut plan = TrialPlan::new();
+    plan.push_cell("sc/burst", "burst", &base, 1);
+    plan.push_cell("sc/replay", "replay", &replay, 1);
+    plan.push_cell("sc/clean", "clean", &clean, 1);
+    let opts = ScheduleOptions { run_dir: Some(dir.clone()), ..ScheduleOptions::default() };
+    schedule::execute_plan(&plan, &opts).unwrap();
+
+    let records = JsonlRunSink::load(&dir.join(schedule::RUNS_FILE)).unwrap();
+    let by_cell = |cell: &str| {
+        records.values().find(|r| r.cell == cell).expect("cell committed")
+    };
+    assert_eq!(by_cell("sc/burst").fault_digest.as_deref(), Some(expect.as_str()));
+    assert_eq!(by_cell("sc/replay").fault_digest.as_deref(), Some(expect.as_str()));
+    let clean_rec = by_cell("sc/clean");
+    assert_eq!(clean_rec.fault_digest, None);
+    assert!(
+        !clean_rec.to_json().to_string_compact().contains("fault_digest"),
+        "no-failure records must omit the key (legacy bytes)"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_file(&path);
+}
