@@ -15,6 +15,7 @@
 //!   BENCH_RESUME  1 = skip trials already committed in BENCH_RUN_DIR
 
 #![allow(dead_code)] // each bench binary uses a subset of this harness
+#![allow(clippy::disallowed_methods)] // bench harness times wall-clock by definition
 
 use deahes::config::{EngineKind, ExperimentConfig};
 use deahes::schedule::ScheduleOptions;

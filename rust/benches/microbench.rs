@@ -9,6 +9,9 @@
 //! (score update + h1/h2 + buffer moves, excluding XLA execute) ≤ 5% of a
 //! local training step.
 
+// Bench targets time wall-clock by definition.
+#![allow(clippy::disallowed_methods)]
+
 mod common;
 
 use deahes::elastic::score::{geometric_weights, ScoreTracker};

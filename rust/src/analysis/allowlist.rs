@@ -1,0 +1,189 @@
+//! `lint.toml` — the per-rule allowlist.
+//!
+//! Hand-rolled parser for the tiny TOML subset the allowlist needs (no new
+//! dependencies, matching the `par`-feature ethos): `[[allow]]` array-of-
+//! tables entries with exactly three string keys. Every entry must carry a
+//! `reason`; entries that stop matching any finding are surfaced as stale
+//! warnings so the file can't rot.
+//!
+//! ```toml
+//! [[allow]]
+//! rule = "wall-clock-in-core"
+//! path = "src/coordinator/sim.rs"
+//! reason = "telemetry + checkpoint cadence only; the virtual clock drives rounds"
+//! ```
+
+use super::rules;
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub reason: String,
+}
+
+pub struct Allowlist {
+    entries: Vec<AllowEntry>,
+    used: Vec<bool>,
+}
+
+impl Allowlist {
+    pub fn empty() -> Allowlist {
+        Allowlist { entries: Vec::new(), used: Vec::new() }
+    }
+
+    /// Parse `lint.toml` text. Unknown keys, unknown rule ids, entries
+    /// missing `rule`/`path`/`reason`, and keys before the first
+    /// `[[allow]]` are all hard errors.
+    pub fn parse(text: &str) -> Result<Allowlist> {
+        let known = rules::rule_ids();
+        let mut entries: Vec<AllowEntry> = Vec::new();
+        let mut open = false;
+        for (no, raw) in text.lines().enumerate() {
+            let line = strip_toml_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[[allow]]" {
+                entries.push(AllowEntry {
+                    rule: String::new(),
+                    path: String::new(),
+                    reason: String::new(),
+                });
+                open = true;
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("lint.toml:{}: expected `key = \"value\"` or `[[allow]]`", no + 1);
+            };
+            if !open {
+                bail!("lint.toml:{}: key outside an [[allow]] entry", no + 1);
+            }
+            let value = value.trim();
+            if value.len() < 2 || !value.starts_with('"') || !value.ends_with('"') {
+                bail!("lint.toml:{}: value must be a double-quoted string", no + 1);
+            }
+            let value = value[1..value.len() - 1].to_string();
+            let entry = entries.last_mut().expect("open entry");
+            match key.trim() {
+                "rule" => {
+                    if !known.contains(&value.as_str()) {
+                        bail!(
+                            "lint.toml:{}: unknown rule `{}` (known: {})",
+                            no + 1,
+                            value,
+                            known.join(", ")
+                        );
+                    }
+                    entry.rule = value;
+                }
+                "path" => entry.path = value,
+                "reason" => entry.reason = value,
+                other => bail!("lint.toml:{}: unknown key `{other}`", no + 1),
+            }
+        }
+        for (i, e) in entries.iter().enumerate() {
+            if e.rule.is_empty() || e.path.is_empty() || e.reason.is_empty() {
+                bail!("lint.toml: [[allow]] entry #{} must set rule, path AND reason", i + 1);
+            }
+        }
+        let used = vec![false; entries.len()];
+        Ok(Allowlist { entries, used })
+    }
+
+    /// Is `(rule, path)` allowlisted? Marks the matching entry used. An
+    /// entry path ending in '/' covers the whole subtree.
+    pub fn allows(&mut self, rule: &str, path: &str) -> bool {
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.rule == rule
+                && (e.path == path || (e.path.ends_with('/') && path.starts_with(&e.path)))
+            {
+                self.used[i] = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Entries that never matched a finding (stale — the violation they
+    /// excused is gone).
+    pub fn unused(&self) -> Vec<&AllowEntry> {
+        self.entries
+            .iter()
+            .zip(&self.used)
+            .filter_map(|(e, &u)| if u { None } else { Some(e) })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Drop a `# comment` tail, honouring quotes (a `#` inside a quoted value
+/// is content, not a comment).
+fn strip_toml_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"
+# header comment
+[[allow]]
+rule = "wall-clock-in-core"   # trailing comment
+path = "src/coordinator/sim.rs"
+reason = "telemetry only # not a comment"
+"#;
+
+    #[test]
+    fn parses_and_matches() {
+        let mut a = Allowlist::parse(GOOD).unwrap();
+        assert_eq!(a.len(), 1);
+        assert!(a.allows("wall-clock-in-core", "src/coordinator/sim.rs"));
+        assert!(!a.allows("wall-clock-in-core", "src/engine/quad.rs"));
+        assert!(!a.allows("undocumented-unsafe", "src/coordinator/sim.rs"));
+        assert!(a.unused().is_empty());
+    }
+
+    #[test]
+    fn unused_entries_are_reported() {
+        let a = Allowlist::parse(GOOD).unwrap();
+        assert_eq!(a.unused().len(), 1);
+    }
+
+    #[test]
+    fn subtree_entries_match_prefixes() {
+        let toml = "[[allow]]\nrule = \"nondeterministic-collections\"\npath = \"src/schedule/\"\nreason = \"x\"\n";
+        let mut a = Allowlist::parse(toml).unwrap();
+        assert!(a.allows("nondeterministic-collections", "src/schedule/sink.rs"));
+        assert!(!a.allows("nondeterministic-collections", "src/schedule"));
+    }
+
+    #[test]
+    fn rejects_unknown_rule_missing_reason_and_stray_keys() {
+        assert!(Allowlist::parse("[[allow]]\nrule = \"no-such-rule\"\n").is_err());
+        assert!(Allowlist::parse(
+            "[[allow]]\nrule = \"wall-clock-in-core\"\npath = \"src/x.rs\"\n"
+        )
+        .is_err());
+        assert!(Allowlist::parse("rule = \"wall-clock-in-core\"\n").is_err());
+        assert!(Allowlist::parse("[[allow]]\nbogus = \"x\"\n").is_err());
+        assert!(Allowlist::parse("[[allow]]\nrule = unquoted\n").is_err());
+    }
+}

@@ -1,0 +1,372 @@
+//! Comment/string-aware line lexer for `deahes lint`.
+//!
+//! Rules never see raw source: each line is split into three views —
+//! `code` (comments stripped, string/char contents blanked), `text`
+//! (comments stripped, string contents kept — format-spec rules need to
+//! look *inside* literals), and `comment` (everything the other two
+//! dropped). On top of that the lexer groups lines into statements by
+//! bracket depth, so a multi-line call like `chunker.dispatch(n, &|s, e| {
+//! ... });` is one unit and a `// SAFETY:` comment anywhere in or directly
+//! above it documents the `unsafe` it contains.
+//!
+//! This is a token-level approximation, not a parser: good enough to keep
+//! `unsafe`, `HashMap` or `Instant::now` inside comments and string
+//! literals from tripping rules, and to survive raw strings, escaped
+//! quotes, char literals and lifetimes. It does not expand macros.
+
+/// One source line in three views plus its stripped comment text.
+pub struct Line {
+    /// Original line, verbatim.
+    pub raw: String,
+    /// Comments stripped, string/char interiors blanked with spaces
+    /// (quotes kept, so bracket counting still sees balanced tokens).
+    pub code: String,
+    /// Comments stripped, string interiors kept.
+    pub text: String,
+    /// Comment text found on this line (`//…` tail and/or `/*…*/` body).
+    pub comment: String,
+}
+
+/// A bracket-balanced statement: inclusive 0-based line range.
+#[derive(Clone, Copy)]
+pub struct Stmt {
+    pub start: usize,
+    pub end: usize,
+}
+
+/// A lexed file: root-relative path (forward slashes) + lines + statements.
+pub struct SourceFile {
+    pub path: String,
+    pub lines: Vec<Line>,
+    pub stmts: Vec<Stmt>,
+}
+
+enum State {
+    Normal,
+    /// `/* … */`, nestable; payload is the nesting depth.
+    Block(u32),
+    /// `"…"` (or `b"…"`); escapes honoured, may span lines.
+    Str,
+    /// `r##"…"##` (or `br…`); payload is the hash count.
+    RawStr(u32),
+}
+
+pub fn lex(path: &str, source: &str) -> SourceFile {
+    let mut state = State::Normal;
+    let mut lines = Vec::new();
+    for raw in source.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::new();
+        let mut text = String::new();
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            let next = chars.get(i + 1).copied();
+            match state {
+                State::Normal => {
+                    if c == '/' && next == Some('/') {
+                        comment.extend(&chars[i..]);
+                        i = chars.len();
+                    } else if c == '/' && next == Some('*') {
+                        state = State::Block(1);
+                        i += 2;
+                    } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                        if let Some((hashes, skip)) = raw_string_start(&chars, i) {
+                            for &ch in &chars[i..i + skip] {
+                                code.push(ch);
+                                text.push(ch);
+                            }
+                            state = State::RawStr(hashes);
+                            i += skip;
+                        } else if c == 'b' && next == Some('"') {
+                            code.push_str("b\"");
+                            text.push_str("b\"");
+                            state = State::Str;
+                            i += 2;
+                        } else if c == 'b' && next == Some('\'') {
+                            // byte-char literal b'x' / b'\n'
+                            code.push('b');
+                            text.push('b');
+                            i += 1;
+                            i = eat_char_literal(&chars, i, &mut code, &mut text);
+                        } else {
+                            code.push(c);
+                            text.push(c);
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        code.push('"');
+                        text.push('"');
+                        state = State::Str;
+                        i += 1;
+                    } else if c == '\'' {
+                        i = eat_char_literal(&chars, i, &mut code, &mut text);
+                    } else {
+                        code.push(c);
+                        text.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if c == '\\' {
+                        text.push(c);
+                        code.push(' ');
+                        if let Some(n) = next {
+                            text.push(n);
+                            code.push(' ');
+                        }
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        text.push('"');
+                        state = State::Normal;
+                        i += 1;
+                    } else {
+                        text.push(c);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                State::RawStr(h) => {
+                    if c == '"' && (0..h as usize).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                        code.push('"');
+                        text.push('"');
+                        for _ in 0..h {
+                            code.push('#');
+                            text.push('#');
+                        }
+                        state = State::Normal;
+                        i += 1 + h as usize;
+                    } else {
+                        text.push(c);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                State::Block(d) => {
+                    if c == '/' && next == Some('*') {
+                        state = State::Block(d + 1);
+                        comment.push_str("/*");
+                        i += 2;
+                    } else if c == '*' && next == Some('/') {
+                        state = if d == 1 { State::Normal } else { State::Block(d - 1) };
+                        comment.push_str("*/");
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        lines.push(Line { raw: raw.to_string(), code, text, comment });
+    }
+    let stmts = group_statements(&lines);
+    SourceFile { path: path.to_string(), lines, stmts }
+}
+
+impl SourceFile {
+    /// The statement containing `line` (0-based), if any.
+    pub fn stmt_at(&self, line: usize) -> Option<Stmt> {
+        self.stmts.iter().copied().find(|s| s.start <= line && line <= s.end)
+    }
+}
+
+/// Is the char before `i` part of an identifier (so `r`/`b` at `i` is an
+/// identifier tail, not a raw/byte string prefix)?
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// If `r#*"` / `br#*"` starts at `i`, return (hash count, chars consumed).
+fn raw_string_start(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut h = 0u32;
+    while chars.get(j) == Some(&'#') {
+        h += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((h, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// At a `'`: consume a char literal (interior blanked in `code`) or emit a
+/// bare quote for a lifetime. Returns the next scan index.
+fn eat_char_literal(chars: &[char], i: usize, code: &mut String, text: &mut String) -> usize {
+    debug_assert_eq!(chars[i], '\'');
+    let next = chars.get(i + 1).copied();
+    if next == Some('\\') {
+        // escaped literal: '\n', '\u{1F600}', '\''
+        code.push('\'');
+        text.push('\'');
+        let mut j = i + 2; // past the backslash's escaped char on the next step
+        if j < chars.len() {
+            j += 1; // the escaped character itself ('\\' or 'n' or 'u'…)
+        }
+        while j < chars.len() && chars[j] != '\'' {
+            code.push(' ');
+            text.push(' ');
+            j += 1;
+        }
+        code.push(' '); // the escape head
+        text.push(' ');
+        if j < chars.len() {
+            code.push('\'');
+            text.push('\'');
+            j += 1;
+        }
+        j
+    } else if chars.get(i + 2) == Some(&'\'') {
+        // plain single-char literal 'x'
+        code.push('\'');
+        code.push(' ');
+        code.push('\'');
+        text.push('\'');
+        text.push(chars[i + 1]);
+        text.push('\'');
+        i + 3
+    } else {
+        // lifetime ('a, 'static) — keep the quote, scan on
+        code.push('\'');
+        text.push('\'');
+        i + 1
+    }
+}
+
+/// Attribute line (`#[…]` / `#![…]`)?
+pub fn is_attr_line(code: &str) -> bool {
+    let t = code.trim_start();
+    t.starts_with("#[") || t.starts_with("#![")
+}
+
+/// Does `code` contain `word` with identifier boundaries on both sides?
+pub fn has_word(code: &str, word: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0
+            || !code[..at].chars().next_back().map(|c| c.is_alphanumeric() || c == '_').unwrap_or(false);
+        let after = at + word.len();
+        let after_ok = after >= code.len()
+            || !code[after..].chars().next().map(|c| c.is_alphanumeric() || c == '_').unwrap_or(false);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + word.len();
+    }
+    false
+}
+
+/// Group lines into bracket-balanced statements. A statement ends when its
+/// bracket stack empties at end of line, or when the only open bracket is a
+/// single trailing `{` (a block header like `fn f(…) {` or `impl X {`).
+/// Attribute-only lines between statements attach to nothing; blank and
+/// comment-only lines inside an open statement are absorbed into it.
+fn group_statements(lines: &[Line]) -> Vec<Stmt> {
+    let mut stmts = Vec::new();
+    let mut cur: Option<(usize, Vec<char>)> = None;
+    for (idx, line) in lines.iter().enumerate() {
+        let code = line.code.trim();
+        if code.is_empty() {
+            continue;
+        }
+        if cur.is_none() {
+            if is_attr_line(code) && balanced(code) {
+                continue;
+            }
+            cur = Some((idx, Vec::new()));
+        }
+        let (start, mut stack) = cur.take().expect("statement opened above");
+        for c in code.chars() {
+            match c {
+                '(' | '[' | '{' => stack.push(c),
+                // Underflow = closing an ambient scope (`}` ending a block
+                // this statement didn't open) — treat as balanced.
+                ')' | ']' | '}' => {
+                    stack.pop();
+                }
+                _ => {}
+            }
+        }
+        let block_header = stack.len() == 1 && stack[0] == '{' && code.ends_with('{');
+        if stack.is_empty() || block_header {
+            stmts.push(Stmt { start, end: idx });
+        } else {
+            cur = Some((start, stack));
+        }
+    }
+    if let Some((start, _)) = cur {
+        // Unterminated trailing statement (truncated fixture): close it.
+        stmts.push(Stmt { start, end: lines.len() - 1 });
+    }
+    stmts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_stripped_from_code() {
+        let f = lex(
+            "src/x.rs",
+            "let a = \"unsafe { HashMap }\"; // unsafe trailing\nlet b = 1; /* unsafe */ let c = 2;\n",
+        );
+        assert!(!has_word(&f.lines[0].code, "unsafe"));
+        assert!(f.lines[0].comment.contains("unsafe trailing"));
+        // ...but the string interior survives in `text` for format-spec rules
+        assert!(f.lines[0].text.contains("unsafe { HashMap }"));
+        assert!(!f.lines[1].code.contains("unsafe"));
+        assert!(f.lines[1].code.contains("let c = 2;"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_do_not_confuse_the_scanner() {
+        let f = lex(
+            "src/x.rs",
+            "let j = r#\"{\"k\": \"unsafe\"}\"#;\nlet c = '\\'';\nlet l: &'static str = \"x\";\nlet q = 'u';\n",
+        );
+        for line in &f.lines {
+            assert!(!has_word(&line.code, "unsafe"), "{:?}", line.code);
+        }
+        // lifetime quote survives, scanning continues past it
+        assert!(f.lines[2].code.contains("&'static str"));
+    }
+
+    #[test]
+    fn multiline_call_is_one_statement() {
+        let src = "foo(\n    a,\n    bar(|x| {\n        x + 1\n    }),\n);\nlet y = 2;\n";
+        let f = lex("src/x.rs", src);
+        assert_eq!(f.stmts.len(), 2);
+        assert_eq!((f.stmts[0].start, f.stmts[0].end), (0, 5));
+        assert_eq!((f.stmts[1].start, f.stmts[1].end), (6, 6));
+    }
+
+    #[test]
+    fn block_headers_end_their_statement() {
+        let src = "pub fn f(\n    a: usize,\n) -> usize {\n    a\n}\n";
+        let f = lex("src/x.rs", src);
+        // header (0..=2), body (3), closing brace (4)
+        assert_eq!(f.stmts.len(), 3);
+        assert_eq!((f.stmts[0].start, f.stmts[0].end), (0, 2));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("unsafe impl Send", "unsafe"));
+        assert!(!has_word("unsafe_helper()", "unsafe"));
+        assert!(!has_word("not_unsafe", "unsafe"));
+        assert!(has_word("x.to_string()", "to_string"));
+    }
+}

@@ -1,0 +1,223 @@
+//! Static analysis: `deahes lint` — source-level enforcement of the
+//! project's determinism and unsafe-soundness contracts.
+//!
+//! Everything this repo claims rests on paired A/B byte-identity: two runs
+//! under the same `fault_digest` must differ only in policy. The contracts
+//! that guarantee it (block-keyed RNG, omitted-when-None fingerprints,
+//! hex-blob float serialization, disjoint-chunk `unsafe`) used to live only
+//! in runtime tests that fail *after* a violation is written; this
+//! subsystem rejects the violation at the source level, before anything
+//! compiles or runs.
+//!
+//! Layout: [`lexer`] turns files into comment/string-stripped lines grouped
+//! into bracket-balanced statements, [`rules`] holds the invariant catalog
+//! (five rules; adding one is a ~30-line diff), [`allowlist`] parses
+//! `lint.toml` (`[[allow]]` entries, reason mandatory, stale entries
+//! warned), and [`report`] renders `path:line: [rule-id] message` with
+//! optional fix hints. `deahes lint` scans `src`, `benches` and `tests`
+//! under the crate root and exits nonzero on any unallowlisted finding —
+//! it runs as a tier-1 CI gate next to fmt/clippy.
+
+pub mod allowlist;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use allowlist::Allowlist;
+use anyhow::{bail, Context, Result};
+use report::Report;
+use rules::Finding;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Directories scanned under the crate root.
+pub const SCAN_DIRS: &[&str] = &["src", "benches", "tests"];
+
+/// The crate root to lint when `--root` is not given: the manifest dir this
+/// crate was compiled from, falling back to `rust/` then `.` for relocated
+/// binaries.
+pub fn default_root() -> PathBuf {
+    let compiled = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    for cand in [compiled, PathBuf::from("rust"), PathBuf::from(".")] {
+        if cand.join("src").is_dir() && cand.join("Cargo.toml").is_file() {
+            return cand;
+        }
+    }
+    PathBuf::from(".")
+}
+
+/// Lint the tree at `root`: collect sources, load `<root>/lint.toml` if
+/// present, run the catalog (or just `rule_filter`).
+pub fn lint_tree(root: &Path, rule_filter: Option<&str>) -> Result<Report> {
+    let sources = collect_sources(root)?;
+    if sources.is_empty() {
+        bail!("no .rs sources under {} (looked in {})", root.display(), SCAN_DIRS.join(", "));
+    }
+    let toml = root.join("lint.toml");
+    let mut allow = if toml.is_file() {
+        let text = fs::read_to_string(&toml)
+            .with_context(|| format!("reading {}", toml.display()))?;
+        Allowlist::parse(&text).with_context(|| format!("parsing {}", toml.display()))?
+    } else {
+        Allowlist::empty()
+    };
+    lint_sources(&sources, &mut allow, rule_filter)
+}
+
+/// Lint in-memory `(root-relative path, contents)` pairs — the testable
+/// core `lint_tree` wraps and the fixture tests drive directly.
+pub fn lint_sources(
+    sources: &[(String, String)],
+    allow: &mut Allowlist,
+    rule_filter: Option<&str>,
+) -> Result<Report> {
+    let files: Vec<lexer::SourceFile> =
+        sources.iter().map(|(p, s)| lexer::lex(p, s)).collect();
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut ran = Vec::new();
+    for rule in rules::RULES {
+        if rule_filter.is_some_and(|f| f != rule.id) {
+            continue;
+        }
+        ran.push(rule.id);
+        (rule.run)(&files, &mut findings);
+    }
+    if ran.is_empty() {
+        bail!(
+            "unknown rule `{}` (known: {})",
+            rule_filter.unwrap_or(""),
+            rules::rule_ids().join(", ")
+        );
+    }
+    let mut findings: Vec<Finding> =
+        findings.into_iter().filter(|f| !allow.allows(f.rule, &f.path)).collect();
+    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    // Stale-entry warnings only make sense for a full-catalog run: under
+    // `--rule`, entries for the other rules are legitimately unmatched.
+    let warnings = if rule_filter.is_none() {
+        allow
+            .unused()
+            .iter()
+            .map(|e| {
+                format!(
+                    "stale lint.toml entry: rule `{}` path `{}` no longer matches any finding — remove it",
+                    e.rule, e.path
+                )
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    Ok(Report { findings, warnings, files: files.len(), rules: ran })
+}
+
+/// All `.rs` files under `<root>/{src,benches,tests}`, as root-relative
+/// forward-slash paths, sorted for deterministic reports.
+pub fn collect_sources(root: &Path) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for dir in SCAN_DIRS {
+        let d = root.join(dir);
+        if d.is_dir() {
+            walk(&d, root, &mut out)?;
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<(String, String)>) -> Result<()> {
+    for entry in
+        fs::read_dir(dir).with_context(|| format!("reading dir {}", dir.display()))?
+    {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            let text = fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            out.push((rel, text));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    //! Self-test fixtures: one violating + one clean snippet per rule, fed
+    //! through the same `lint_sources` path the CLI uses. The broader
+    //! matrix (allowlisting, filtering, exit codes, live-tree self-scan)
+    //! lives in `tests/lint_rules.rs`.
+    use super::*;
+
+    fn run(files: &[(&str, &str)]) -> Vec<Finding> {
+        let sources: Vec<(String, String)> =
+            files.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect();
+        lint_sources(&sources, &mut Allowlist::empty(), None).unwrap().findings
+    }
+
+    #[test]
+    fn fixture_undocumented_unsafe() {
+        let bad = "pub fn f(p: *mut u8) {\n    unsafe { *p = 0 };\n}\n";
+        let good = "pub fn f(p: *mut u8) {\n    // SAFETY: caller guarantees p is valid\n    unsafe { *p = 0 };\n}\n";
+        let hits = run(&[("src/a.rs", bad), ("src/b.rs", good)]);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!((hits[0].rule, hits[0].path.as_str(), hits[0].line), ("undocumented-unsafe", "src/a.rs", 2));
+    }
+
+    #[test]
+    fn fixture_nondeterministic_collections() {
+        let bad = "use std::collections::HashMap;\n";
+        let hits = run(&[
+            ("src/schedule/extra.rs", bad), // in scope
+            ("src/metrics/mod.rs", bad),    // out of scope: display-only module
+        ]);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].path, "src/schedule/extra.rs");
+    }
+
+    #[test]
+    fn fixture_wall_clock_in_core() {
+        let bad = "fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+        let hits = run(&[
+            ("src/coordinator/extra.rs", bad), // core: forbidden
+            ("src/bench/extra.rs", bad),       // bench tier: exempt
+            ("benches/extra.rs", bad),         // bench target: exempt
+        ]);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].path, "src/coordinator/extra.rs");
+    }
+
+    #[test]
+    fn fixture_float_serialization() {
+        let bad = "fn s(x: f32) -> String { format!(\"{:e}\", x) }\n";
+        let good = "fn s(xs: &[f32]) -> String { crate::util::bits::f32s_hex(xs) }\n";
+        let hits = run(&[("src/schedule/record.rs", bad), ("src/schedule/checkpoint.rs", good)]);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!((hits[0].rule, hits[0].line), ("float-serialization", 1));
+    }
+
+    #[test]
+    fn fixture_config_field_coverage() {
+        let config = "pub struct ExperimentConfig {\n    pub alpha: Option<f64>,\n}\nimpl ExperimentConfig {\n    pub fn to_json(&self) {\n        let _ = \"nothing serialized\";\n    }\n}\n";
+        let hits = run(&[("src/config.rs", config)]);
+        // missing from to_json AND from the schema-hash sample
+        assert_eq!(hits.len(), 2, "{hits:?}");
+        assert!(hits.iter().all(|h| h.rule == "config-field-coverage"));
+        assert!(hits.iter().all(|h| h.message.contains("alpha")));
+    }
+
+    #[test]
+    fn fixture_config_field_coverage_clean() {
+        let config = "pub struct ExperimentConfig {\n    pub alpha: Option<f64>,\n}\nimpl ExperimentConfig {\n    pub fn to_json(&self) {\n        if let Some(a) = self.alpha {\n            push((\"alpha\", a));\n        }\n    }\n}\n";
+        let sink = "pub fn config_schema_hash() -> String {\n    let mut cfg = ExperimentConfig::default();\n    cfg.alpha = Some(1.0);\n    hash(cfg)\n}\n";
+        let hits = run(&[("src/config.rs", config), ("src/schedule/sink.rs", sink)]);
+        assert!(hits.is_empty(), "{hits:?}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Lint report: findings sorted by location, rendered as
+//! `path:line: [rule-id] message` with optional per-rule fix hints, plus
+//! stale-allowlist warnings and a one-line summary.
+
+use super::rules::{self, Finding};
+
+pub struct Report {
+    /// Unallowlisted findings, sorted by (path, line, rule).
+    pub findings: Vec<Finding>,
+    /// Stale-allowlist (and other non-fatal) warnings.
+    pub warnings: Vec<String>,
+    /// Number of files scanned.
+    pub files: usize,
+    /// Rule ids that ran (all five, or the `--rule` selection).
+    pub rules: Vec<&'static str>,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report. With `fix_hints`, each finding carries an
+    /// indented `fix:` line from the rule registry.
+    pub fn render(&self, fix_hints: bool) -> String {
+        let mut out = String::new();
+        for w in &self.warnings {
+            out.push_str(&format!("warning: {w}\n"));
+        }
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.path, f.line, f.rule, f.message));
+            if fix_hints {
+                let hint = rules::hint_for(f.rule);
+                if !hint.is_empty() {
+                    out.push_str(&format!("    fix: {hint}\n"));
+                }
+            }
+        }
+        if self.clean() {
+            out.push_str(&format!(
+                "lint: clean — {} file(s), {} rule(s): {}\n",
+                self.files,
+                self.rules.len(),
+                self.rules.join(", ")
+            ));
+        } else {
+            out.push_str(&format!(
+                "lint: {} finding(s) across {} file(s) scanned\n",
+                self.findings.len(),
+                self.files
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_includes_location_rule_id_and_optional_hint() {
+        let report = Report {
+            findings: vec![Finding {
+                rule: "undocumented-unsafe",
+                path: "src/x.rs".into(),
+                line: 3,
+                message: "`unsafe` without a `// SAFETY:` comment".into(),
+            }],
+            warnings: vec!["stale entry".into()],
+            files: 1,
+            rules: rules::rule_ids(),
+        };
+        let plain = report.render(false);
+        assert!(plain.contains("src/x.rs:3: [undocumented-unsafe]"), "{plain}");
+        assert!(plain.contains("warning: stale entry"), "{plain}");
+        assert!(!plain.contains("fix:"), "{plain}");
+        let hinted = report.render(true);
+        assert!(hinted.contains("fix: add a `// SAFETY:"), "{hinted}");
+        assert!(hinted.contains("1 finding(s)"), "{hinted}");
+    }
+
+    #[test]
+    fn clean_render_names_the_rules_that_ran() {
+        let report =
+            Report { findings: vec![], warnings: vec![], files: 42, rules: vec!["wall-clock-in-core"] };
+        let s = report.render(true);
+        assert!(s.contains("clean"), "{s}");
+        assert!(s.contains("wall-clock-in-core"), "{s}");
+    }
+}

@@ -1,0 +1,334 @@
+//! The invariant catalog: five project-specific rules over lexed sources.
+//!
+//! Each rule guards a contract that otherwise only fails *later*, in a
+//! runtime byte-compare (paired A/B records, checkpoint resume identity,
+//! schema-hash pinning) — see `docs/ARCHITECTURE.md` § "Static analysis &
+//! the invariant catalog" for the rule ↔ runtime-test map. Rules are plain
+//! functions over `&[SourceFile]`; adding one is a ~30-line diff here plus
+//! a registry entry.
+
+use super::lexer::{has_word, is_attr_line, SourceFile, Stmt};
+
+/// One lint hit: rule id + root-relative path + 1-based line + message.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Registry entry: id, the invariant it guards, a fix hint, the checker.
+pub struct Rule {
+    pub id: &'static str,
+    pub invariant: &'static str,
+    pub hint: &'static str,
+    pub run: fn(&[SourceFile], &mut Vec<Finding>),
+}
+
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "undocumented-unsafe",
+        invariant: "every unsafe block/fn/impl states the disjointness or lifetime argument it rests on",
+        hint: "add a `// SAFETY: ...` comment directly above the statement (or `/// # Safety` on the fn), \
+               naming the aliasing/lifetime argument — e.g. Chunker::dispatch range disjointness",
+        run: undocumented_unsafe,
+    },
+    Rule {
+        id: "nondeterministic-collections",
+        invariant: "no HashMap/HashSet in modules whose output reaches fingerprints, records, checkpoints or schema hashes",
+        hint: "use BTreeMap/BTreeSet (or a keyed Vec) so iteration order is deterministic, \
+               or allowlist in lint.toml with a reason proving order-independence",
+        run: nondeterministic_collections,
+    },
+    Rule {
+        id: "wall-clock-in-core",
+        invariant: "the virtual clock is the only time source in coordinator/engine/optim/elastic",
+        hint: "thread time through SimClock (or accept it as a parameter); \
+               real wall-clock reads belong in schedule/proc, bench, util/logging — \
+               or allowlist telemetry-only reads in lint.toml",
+        run: wall_clock_in_core,
+    },
+    Rule {
+        id: "float-serialization",
+        invariant: "checkpoint/record modules never format or parse f32/f64 as decimal text",
+        hint: "route floats through util::bits hex blobs (f32s_hex / f64_hex and their _from_hex \
+               inverses) — decimal round-trips are lossy and break byte-identity",
+        run: float_serialization,
+    },
+    Rule {
+        id: "config-field-coverage",
+        invariant: "every Option<...> field on ExperimentConfig is serialized (omitted-when-None) AND forced present in the schema-hash sample",
+        hint: "add the field to ExperimentConfig::to_json under `if let Some(...)` and force it \
+               Some(...) in the sink::config_schema_hash sample record",
+        run: config_field_coverage,
+    },
+];
+
+/// Look up a rule's fix hint by id ("" if unknown).
+pub fn hint_for(id: &str) -> &'static str {
+    RULES.iter().find(|r| r.id == id).map(|r| r.hint).unwrap_or("")
+}
+
+pub fn rule_ids() -> Vec<&'static str> {
+    RULES.iter().map(|r| r.id).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Scope tables. Paths are root-relative with forward slashes; an entry
+// ending in '/' matches the whole subtree.
+// ---------------------------------------------------------------------------
+
+/// Modules whose iteration/serialization order reaches fingerprints,
+/// committed records, checkpoints or the schema hash.
+const ORDER_SENSITIVE: &[&str] = &[
+    "src/config.rs",
+    "src/schedule/",
+    "src/coordinator/checkpoint.rs",
+    "src/coordinator/scenario.rs",
+    "src/coordinator/sim.rs",
+    "src/elastic/policy/",
+    "src/data/shard.rs",
+];
+
+/// Supervisor/bench/logging tier where real wall-clock reads are the point.
+const WALL_CLOCK_EXEMPT: &[&str] =
+    &["src/schedule/proc/", "src/bench/", "src/util/logging.rs", "benches/"];
+
+/// Modules that write or read persisted float state.
+const FLOAT_SERIAL_SCOPE: &[&str] =
+    &["src/coordinator/checkpoint.rs", "src/schedule/checkpoint.rs", "src/schedule/record.rs"];
+
+fn in_scope(path: &str, scope: &[&str]) -> bool {
+    scope.iter().any(|s| path == *s || (s.ends_with('/') && path.starts_with(s)))
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: undocumented-unsafe
+// ---------------------------------------------------------------------------
+
+fn undocumented_unsafe(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for file in files {
+        for stmt in &file.stmts {
+            let unsafe_line = (stmt.start..=stmt.end)
+                .find(|&i| has_word(&file.lines[i].code, "unsafe"));
+            let Some(line) = unsafe_line else { continue };
+            if !stmt_documented(file, stmt) {
+                out.push(Finding {
+                    rule: "undocumented-unsafe",
+                    path: file.path.clone(),
+                    line: line + 1,
+                    message: "`unsafe` without a `// SAFETY:` comment".into(),
+                });
+            }
+        }
+    }
+}
+
+/// A statement is documented if a `SAFETY:` / `# Safety` comment sits on one
+/// of its own lines (closure-interior statements keep their comments inside
+/// the enclosing bracket span) or in the contiguous comment/attribute block
+/// directly above it. A fully blank line breaks the block, matching clippy's
+/// `undocumented_unsafe_blocks` comment-above-statement acceptance.
+fn stmt_documented(file: &SourceFile, stmt: &Stmt) -> bool {
+    if file.lines[stmt.start..=stmt.end].iter().any(|l| is_safety(&l.comment)) {
+        return true;
+    }
+    let mut i = stmt.start;
+    while i > 0 {
+        i -= 1;
+        let l = &file.lines[i];
+        let code = l.code.trim();
+        if code.is_empty() {
+            if is_safety(&l.comment) {
+                return true;
+            }
+            if l.comment.is_empty() && l.raw.trim().is_empty() {
+                break; // blank line ends the attached block
+            }
+        } else if is_attr_line(code) {
+            if is_safety(&l.comment) {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+fn is_safety(comment: &str) -> bool {
+    comment.contains("SAFETY:") || comment.contains("# Safety")
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: nondeterministic-collections
+// ---------------------------------------------------------------------------
+
+fn nondeterministic_collections(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for file in files.iter().filter(|f| in_scope(&f.path, ORDER_SENSITIVE)) {
+        for (i, line) in file.lines.iter().enumerate() {
+            for ty in ["HashMap", "HashSet"] {
+                if has_word(&line.code, ty) {
+                    out.push(Finding {
+                        rule: "nondeterministic-collections",
+                        path: file.path.clone(),
+                        line: i + 1,
+                        message: format!("`{ty}` in an order-sensitive module"),
+                    });
+                    break; // one finding per line is enough
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: wall-clock-in-core
+// ---------------------------------------------------------------------------
+
+fn wall_clock_in_core(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for file in files.iter().filter(|f| !in_scope(&f.path, WALL_CLOCK_EXEMPT)) {
+        for (i, line) in file.lines.iter().enumerate() {
+            for call in ["Instant::now", "SystemTime::now"] {
+                if line.code.contains(call) {
+                    out.push(Finding {
+                        rule: "wall-clock-in-core",
+                        path: file.path.clone(),
+                        line: i + 1,
+                        message: format!("`{call}` outside the supervisor/bench/logging tier"),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: float-serialization
+// ---------------------------------------------------------------------------
+
+fn float_serialization(files: &[SourceFile], out: &mut Vec<Finding>) {
+    for file in files.iter().filter(|f| in_scope(&f.path, FLOAT_SERIAL_SCOPE)) {
+        for (i, line) in file.lines.iter().enumerate() {
+            // Format specs live inside string literals → scan `text`.
+            let fmt_hit = ["{:e}", "{:E}", "{:."].iter().find(|p| line.text.contains(**p));
+            let parse_hit =
+                ["parse::<f32>", "parse::<f64>"].iter().find(|p| line.code.contains(**p));
+            let to_string_hit = has_word(&line.code, "to_string")
+                && (has_word(&line.code, "f32") || has_word(&line.code, "f64"));
+            let what = if let Some(p) = fmt_hit {
+                format!("`{p}` decimal float formatting")
+            } else if let Some(p) = parse_hit {
+                format!("`{p}` decimal float parsing")
+            } else if to_string_hit {
+                "`to_string` on a float value".into()
+            } else {
+                continue;
+            };
+            out.push(Finding {
+                rule: "float-serialization",
+                path: file.path.clone(),
+                line: i + 1,
+                message: format!("{what} in a checkpoint/record module"),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: config-field-coverage (cross-file)
+// ---------------------------------------------------------------------------
+
+fn config_field_coverage(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let Some(config) = files.iter().find(|f| f.path == "src/config.rs") else {
+        return; // nothing to cross-check in this file set
+    };
+    let Some(struct_region) = brace_region(config, "pub struct ExperimentConfig") else {
+        return;
+    };
+    let to_json = brace_region(config, "fn to_json");
+    let sink = files.iter().find(|f| f.path == "src/schedule/sink.rs");
+    let schema = sink.and_then(|f| brace_region(f, "fn config_schema_hash"));
+
+    for (line_no, name) in option_fields(config, struct_region) {
+        let serialized = to_json
+            .map(|r| region_mentions_key(config, r, &name))
+            .unwrap_or(false);
+        if !serialized {
+            out.push(Finding {
+                rule: "config-field-coverage",
+                path: config.path.clone(),
+                line: line_no + 1,
+                message: format!(
+                    "Option field `{name}` missing from the omitted-when-None to_json path"
+                ),
+            });
+        }
+        let sampled = match (sink, schema) {
+            (Some(s), Some(r)) => s.lines[r.0..r.1]
+                .iter()
+                .any(|l| l.code.contains(&format!(".{name}")) && l.code.contains("Some(")),
+            _ => false,
+        };
+        if !sampled {
+            out.push(Finding {
+                rule: "config-field-coverage",
+                path: config.path.clone(),
+                line: line_no + 1,
+                message: format!(
+                    "Option field `{name}` not forced Some(...) in sink::config_schema_hash's sample record"
+                ),
+            });
+        }
+    }
+}
+
+/// `(line, name)` for each `pub <name>: Option<...>` field in the region.
+fn option_fields(file: &SourceFile, region: (usize, usize)) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, line) in file.lines[region.0..region.1].iter().enumerate() {
+        let code = line.code.trim();
+        let Some(rest) = code.strip_prefix("pub ") else { continue };
+        let Some((name, ty)) = rest.split_once(':') else { continue };
+        if ty.trim_start().starts_with("Option<") {
+            out.push((region.0 + i, name.trim().to_string()));
+        }
+    }
+    out
+}
+
+/// Does the region's text mention the quoted key `"name"` (serialized key)
+/// or `self.name` / `.name` access? Escaped quotes are normalized first so
+/// `\"policy\"` inside a built JSON string still counts.
+fn region_mentions_key(file: &SourceFile, region: (usize, usize), name: &str) -> bool {
+    let quoted = format!("\"{name}\"");
+    file.lines[region.0..region.1].iter().any(|l| {
+        l.text.replace("\\\"", "\"").contains(&quoted) || l.code.contains(&format!(".{name}"))
+    })
+}
+
+/// Half-open line range `[header, close)` of the brace block whose header
+/// line contains `marker`: from the header to the line where its `{` closes.
+fn brace_region(file: &SourceFile, marker: &str) -> Option<(usize, usize)> {
+    let header = file.lines.iter().position(|l| l.code.contains(marker))?;
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (i, line) in file.lines.iter().enumerate().skip(header) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return Some((header, i + 1));
+        }
+    }
+    Some((header, file.lines.len()))
+}

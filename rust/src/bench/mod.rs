@@ -31,6 +31,10 @@
 //! and is re-parsed before the run reports success, so a CI smoke step
 //! (`deahes bench --smoke`) doubles as a validity check.
 
+// Benchmarks time real wall-clock by definition — built-in exemption
+// of the wall-clock-in-core lint rule.
+#![allow(clippy::disallowed_methods)]
+
 use crate::config::{EngineKind, ExperimentConfig};
 use crate::coordinator::gossip::GossipBoard;
 use crate::coordinator::master::SnapshotPool;

@@ -432,7 +432,11 @@ impl Engine for QuadraticEngine {
         let tp = SendPtr::new(theta);
         let lp = SendPtr::new(&mut scratch.block_loss[..nb]);
         this.chunker.dispatch(this.n, &|start, end| {
+            // SAFETY: dispatch hands [start, end) to exactly one task, so
+            // this is the only live reborrow of `tp` covering it.
             let chunk = unsafe { tp.slice(start, end) };
+            // SAFETY: chunk bounds are NOISE_BLOCK-aligned, so the mapped
+            // block ranges of `lp` are disjoint across tasks too.
             let loss = unsafe { lp.slice(start / NOISE_BLOCK, par::n_blocks(end)) };
             this.sgd_chunk(chunk, start, end, key, lr, loss);
         });
@@ -457,8 +461,13 @@ impl Engine for QuadraticEngine {
         let bp = SendPtr::new(buf);
         let lp = SendPtr::new(&mut scratch.block_loss[..nb]);
         this.chunker.dispatch(this.n, &|start, end| {
+            // SAFETY: dispatch hands [start, end) to exactly one task, so
+            // this is the only live reborrow of `tp` covering it.
             let chunk = unsafe { tp.slice(start, end) };
+            // SAFETY: same disjoint range of the separate momentum buffer.
             let b = unsafe { bp.slice(start, end) };
+            // SAFETY: chunk bounds are NOISE_BLOCK-aligned, so the mapped
+            // block ranges of `lp` are disjoint across tasks too.
             let loss = unsafe { lp.slice(start / NOISE_BLOCK, par::n_blocks(end)) };
             this.momentum_chunk(chunk, b, start, end, key, lr, loss);
         });
@@ -496,9 +505,15 @@ impl Engine for QuadraticEngine {
         let vp = SendPtr::new(v);
         let lp = SendPtr::new(&mut scratch.block_loss[..nb]);
         this.chunker.dispatch(this.n, &|start, end| {
+            // SAFETY: dispatch hands [start, end) to exactly one task, so
+            // this is the only live reborrow of `tp` covering it.
             let chunk = unsafe { tp.slice(start, end) };
+            // SAFETY: same disjoint range of the separate first-moment buffer.
             let mm = unsafe { mp.slice(start, end) };
+            // SAFETY: same disjoint range of the separate second-moment buffer.
             let vv = unsafe { vp.slice(start, end) };
+            // SAFETY: chunk bounds are NOISE_BLOCK-aligned, so the mapped
+            // block ranges of `lp` are disjoint across tasks too.
             let loss = unsafe { lp.slice(start / NOISE_BLOCK, par::n_blocks(end)) };
             this.adahessian_chunk(chunk, z, mm, vv, start, end, keys, t, lr, loss);
         });
@@ -529,9 +544,15 @@ impl Engine for QuadraticEngine {
         let vp = SendPtr::new(v);
         let lp = SendPtr::new(&mut scratch.block_loss[..nb]);
         this.chunker.dispatch(this.n, &|start, end| {
+            // SAFETY: dispatch hands [start, end) to exactly one task, so
+            // this is the only live reborrow of `tp` covering it.
             let chunk = unsafe { tp.slice(start, end) };
+            // SAFETY: same disjoint range of the separate first-moment buffer.
             let mm = unsafe { mp.slice(start, end) };
+            // SAFETY: same disjoint range of the separate second-moment buffer.
             let vv = unsafe { vp.slice(start, end) };
+            // SAFETY: chunk bounds are NOISE_BLOCK-aligned, so the mapped
+            // block ranges of `lp` are disjoint across tasks too.
             let loss = unsafe { lp.slice(start / NOISE_BLOCK, par::n_blocks(end)) };
             this.adamw_chunk(chunk, mm, vv, start, end, key, t, (lr, beta1, beta2, eps, wd), loss);
         });

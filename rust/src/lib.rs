@@ -22,6 +22,7 @@
 //! Quickstart: see `examples/quickstart.rs`, or
 //! `cargo run --release -- train --method deahes-o --workers 4`.
 
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -10,6 +10,7 @@
 //!   resume           finish half-run trials in a run dir + re-materialize figures
 //!   chaos            kill-and-resume + trace-replay smoke vs sequential
 //!   bench            hot-path micro/macro benchmarks -> BENCH_hotpath.json
+//!   lint             project-invariant static analysis (nonzero exit on findings)
 //!   inspect          validate artifacts/metadata.json and time each artifact
 //!   datagen          dump synthetic-MNIST samples as ASCII (sanity check)
 //!
@@ -94,6 +95,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         // frame from stdin, streams checkpoint/outcome frames to stdout.
         "trial-worker" => deahes::schedule::proc::worker::run_worker(),
         "bench" => cmd_bench(rest),
+        "lint" => cmd_lint(rest),
         "inspect" => cmd_inspect(rest),
         "datagen" => cmd_datagen(rest),
         "--help" | "-h" | "help" => {
@@ -118,6 +120,7 @@ fn print_usage() {
          \x20 resume        finish half-run trials in a run dir, re-materialize figures\n\
          \x20 chaos         kill-and-resume + trace-replay smoke\n\
          \x20 bench         hot-path micro/macro benchmarks (BENCH_hotpath.json)\n\
+         \x20 lint          project-invariant static analysis over rust/{{src,benches,tests}}\n\
          \x20 inspect       validate + time the AOT artifacts\n\
          \x20 datagen       preview synthetic-MNIST samples\n\
          \n\
@@ -1140,6 +1143,31 @@ fn cmd_bench(argv: Vec<String>) -> Result<()> {
                 a.get("max-regression")
             );
         }
+    }
+    Ok(())
+}
+
+fn cmd_lint(argv: Vec<String>) -> Result<()> {
+    use deahes::analysis;
+    let a = Cli::new(
+        "deahes lint",
+        "project-invariant static analysis: scans src, benches and tests against the \
+         rule catalog (see docs/ARCHITECTURE.md § static analysis); exits nonzero on \
+         any finding not allowlisted in lint.toml",
+    )
+    .opt("rule", "", "run a single rule id (default: the full catalog)")
+    .opt("root", "", "crate root to scan (default: this crate's manifest dir)")
+    .flag("fix-hints", "print a fix hint under each finding")
+    .parse(&argv)
+    .map_err(anyhow::Error::msg)?;
+    let root = match a.opt_nonempty("root") {
+        Some(r) => PathBuf::from(r),
+        None => analysis::default_root(),
+    };
+    let report = analysis::lint_tree(&root, a.opt_nonempty("rule"))?;
+    print!("{}", report.render(a.flag("fix-hints")));
+    if !report.clean() {
+        bail!("lint: {} finding(s) — see report above", report.findings.len());
     }
     Ok(())
 }

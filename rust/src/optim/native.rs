@@ -153,6 +153,9 @@ pub fn sgd_step_chunked(theta: &mut [f32], g: &[f32], lr: f32, chunker: &Chunker
     let n = theta.len();
     let tp = SendPtr::new(theta);
     chunker.dispatch(n, &|start, end| {
+        // SAFETY: dispatch hands each NOISE_BLOCK-aligned [start, end) to
+        // exactly one task and the ranges never overlap, so this is the
+        // only live reborrow of `tp` covering it.
         sgd_step(unsafe { tp.slice(start, end) }, &g[start..end], lr);
     });
 }
@@ -172,6 +175,8 @@ pub fn momentum_step_chunked(
     let tp = SendPtr::new(theta);
     let bp = SendPtr::new(buf);
     chunker.dispatch(n, &|start, end| {
+        // SAFETY: chunk ranges are disjoint (one task per [start, end)),
+        // so the `tp` and `bp` reborrows below alias nothing live.
         momentum_step(
             unsafe { tp.slice(start, end) },
             &g[start..end],
@@ -205,6 +210,8 @@ pub fn adahessian_step_chunked(
     let mp = SendPtr::new(m);
     let vp = SendPtr::new(v);
     chunker.dispatch(n, &|start, end| {
+        // SAFETY: chunk ranges are disjoint (one task per [start, end)),
+        // so the `tp`/`mp`/`vp` reborrows below alias nothing live.
         adahessian_step(
             unsafe { tp.slice(start, end) },
             &g[start..end],
@@ -241,6 +248,8 @@ pub fn adamw_step_chunked(
     let mp = SendPtr::new(m);
     let vp = SendPtr::new(v);
     chunker.dispatch(n, &|start, end| {
+        // SAFETY: chunk ranges are disjoint (one task per [start, end)),
+        // so the `tp`/`mp`/`vp` reborrows below alias nothing live.
         adamw_step(
             unsafe { tp.slice(start, end) },
             &g[start..end],
@@ -264,6 +273,8 @@ pub fn elastic_step_chunked(tw: &mut [f32], tm: &mut [f32], h1: f32, h2: f32, ch
     let wp = SendPtr::new(tw);
     let mp = SendPtr::new(tm);
     chunker.dispatch(n, &|start, end| {
+        // SAFETY: chunk ranges are disjoint (one task per [start, end)),
+        // and `wp`/`mp` wrap different buffers, so both reborrows are unique.
         elastic_step(unsafe { wp.slice(start, end) }, unsafe { mp.slice(start, end) }, h1, h2);
     });
 }
@@ -274,6 +285,8 @@ pub fn elastic_pull_chunked(tw: &mut [f32], tm: &[f32], h1: f32, chunker: &Chunk
     let n = tw.len();
     let wp = SendPtr::new(tw);
     chunker.dispatch(n, &|start, end| {
+        // SAFETY: dispatch hands [start, end) to exactly one task; this is
+        // the only live reborrow of `wp` covering it.
         elastic_pull(unsafe { wp.slice(start, end) }, &tm[start..end], h1);
     });
 }
@@ -284,6 +297,8 @@ pub fn elastic_absorb_chunked(tm: &mut [f32], tw: &[f32], h2: f32, chunker: &Chu
     let n = tm.len();
     let mp = SendPtr::new(tm);
     chunker.dispatch(n, &|start, end| {
+        // SAFETY: dispatch hands [start, end) to exactly one task; this is
+        // the only live reborrow of `mp` covering it.
         elastic_absorb(unsafe { mp.slice(start, end) }, &tw[start..end], h2);
     });
 }

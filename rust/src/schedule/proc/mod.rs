@@ -22,6 +22,10 @@
 //! checkpoint — an injected kill consumes no retry budget and relaunches
 //! immediately, because it is the scenario the backend exists to absorb.
 
+// The supervisor tier IS the wall-clock owner (deadlines, backoff) —
+// built-in exemption of the wall-clock-in-core lint rule.
+#![allow(clippy::disallowed_methods)]
+
 pub mod wire;
 pub mod worker;
 

@@ -174,7 +174,14 @@ pub struct SendPtr<'a> {
     _marker: PhantomData<&'a mut [f32]>,
 }
 
+// SAFETY: SendPtr is a borrow of a caller-owned `&mut [f32]` that outlives
+// every dispatch task (scoped threads join before `dispatch` returns); the
+// raw pointer itself is only dereferenced through `slice`, whose contract
+// requires disjoint ranges.
 unsafe impl Send for SendPtr<'_> {}
+// SAFETY: shared access from several tasks is sound because each task only
+// touches the disjoint [start, end) range handed to it by the chunk plan —
+// no two tasks ever alias an element.
 unsafe impl Sync for SendPtr<'_> {}
 
 impl<'a> SendPtr<'a> {
@@ -257,6 +264,8 @@ mod tests {
         let mut buf = vec![0.0f32; n];
         let ptr = SendPtr::new(&mut buf);
         Chunker::new(4).dispatch(n, &|start, end| {
+            // SAFETY: dispatch hands [start, end) to exactly one task —
+            // the very property this test then asserts on the buffer.
             let chunk = unsafe { ptr.slice(start, end) };
             for (off, x) in chunk.iter_mut().enumerate() {
                 *x = (start + off) as f32;

@@ -96,6 +96,19 @@ pub fn check_seeded<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
     base_seed: u64,
     prop: F,
 ) {
+    // DEAHES_PROPTEST_CASES caps the battery from the environment so slow
+    // interpreters can still run it end to end — the CI Miri job sets it
+    // (forwarded via -Zmiri-env-forward) to keep the unsafe chunk kernels
+    // checkable in minutes instead of hours. Case seeds are a strict
+    // prefix of the full battery's; sizes rescale to the capped count so
+    // the largest inputs are still exercised.
+    let cases = match std::env::var("DEAHES_PROPTEST_CASES") {
+        Ok(v) => match v.parse::<u32>() {
+            Ok(cap) if cap > 0 => cases.min(cap),
+            _ => cases,
+        },
+        Err(_) => cases,
+    };
     for i in 0..cases {
         let mut sm = base_seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         sm = sm.wrapping_mul(0xD134_2543_DE82_EF95).wrapping_add(1);

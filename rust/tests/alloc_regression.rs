@@ -34,7 +34,14 @@ std::thread_local! {
 
 struct CountingAllocator;
 
+// SAFETY: a pure pass-through to `System` — every method forwards its
+// arguments unchanged, so `System`'s GlobalAlloc guarantees (layout
+// fidelity, pointer validity) carry over; the counter bump is side-effect
+// free for the allocator contract (atomic, no allocation, no reentrancy —
+// `try_with` returns an Err instead of touching a dead thread-local).
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: caller upholds GlobalAlloc's layout contract; forwarded to
+    // `System.alloc` verbatim.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         if TRACK.try_with(|t| t.get()).unwrap_or(false) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
@@ -42,10 +49,14 @@ unsafe impl GlobalAlloc for CountingAllocator {
         System.alloc(layout)
     }
 
+    // SAFETY: `ptr` was produced by `alloc`/`realloc` above, which return
+    // `System` pointers — freeing them through `System.dealloc` is sound.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: same pass-through argument as `alloc`/`dealloc`: `System`
+    // both produced `ptr` and performs the resize.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         if TRACK.try_with(|t| t.get()).unwrap_or(false) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);

@@ -1,0 +1,225 @@
+//! `deahes lint` end-to-end coverage: per-rule fixtures (true positive
+//! caught, allowlisted negative passes), `--rule` filtering, CLI exit
+//! codes, and the self-scan pinning the live tree lint-clean — so a
+//! contract violation fails `cargo test` even before the CI gate runs.
+
+use deahes::analysis::{self, allowlist::Allowlist, rules::Finding};
+
+fn lint(files: &[(&str, &str)], allow: &str, rule: Option<&str>) -> (Vec<Finding>, Vec<String>) {
+    let sources: Vec<(String, String)> =
+        files.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect();
+    let mut allowlist =
+        if allow.is_empty() { Allowlist::empty() } else { Allowlist::parse(allow).unwrap() };
+    let report = analysis::lint_sources(&sources, &mut allowlist, rule).unwrap();
+    (report.findings, report.warnings)
+}
+
+// ---------------------------------------------------------------------------
+// Fixtures per rule: positive caught with file:line + rule id, negative clean.
+// ---------------------------------------------------------------------------
+
+const UNDOC_UNSAFE: &str = "pub fn f(p: *mut u8) {\n    unsafe { *p = 0 };\n}\n";
+
+#[test]
+fn undocumented_unsafe_positive_names_file_line_and_rule() {
+    let (hits, _) = lint(&[("src/bad.rs", UNDOC_UNSAFE)], "", None);
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    let h = &hits[0];
+    assert_eq!((h.rule, h.path.as_str(), h.line), ("undocumented-unsafe", "src/bad.rs", 2));
+}
+
+#[test]
+fn undocumented_unsafe_accepts_safety_comment_and_safety_doc() {
+    let above = "pub fn f(p: *mut u8) {\n    // SAFETY: caller passes a valid, exclusive p\n    unsafe { *p = 0 };\n}\n";
+    let doc = "/// # Safety\n/// p must be valid and exclusive.\npub unsafe fn f(p: *mut u8) {\n    *p = 0;\n}\n";
+    let multiline = "fn g(tp: &P) {\n    dispatch(&|start, end| {\n        // SAFETY: ranges are disjoint per task\n        let c = unsafe { tp.slice(start, end) };\n        use_it(c);\n    });\n}\n";
+    let (hits, _) =
+        lint(&[("src/a.rs", above), ("src/b.rs", doc), ("src/c.rs", multiline)], "", None);
+    assert!(hits.is_empty(), "{hits:?}");
+}
+
+#[test]
+fn unsafe_inside_comments_and_strings_is_ignored() {
+    let src = "// this mentions unsafe in prose\nlet s = \"unsafe { }\";\nlet r = r#\"unsafe\"#;\n";
+    let (hits, _) = lint(&[("src/a.rs", src)], "", None);
+    assert!(hits.is_empty(), "{hits:?}");
+}
+
+#[test]
+fn a_blank_line_detaches_the_safety_comment() {
+    let src = "pub fn f(p: *mut u8) {\n    // SAFETY: stale, detached comment\n\n    unsafe { *p = 0 };\n}\n";
+    let (hits, _) = lint(&[("src/a.rs", src)], "", None);
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert_eq!(hits[0].line, 4);
+}
+
+const HASHMAP_USE: &str = "use std::collections::HashMap;\npub fn f() -> HashMap<u32, u32> {\n    HashMap::new()\n}\n";
+
+#[test]
+fn nondeterministic_collections_scoped_to_order_sensitive_modules() {
+    let (hits, _) = lint(
+        &[
+            ("src/schedule/extra.rs", HASHMAP_USE), // fingerprint-adjacent: flagged
+            ("src/metrics/mod.rs", HASHMAP_USE),    // display-only: out of scope
+        ],
+        "",
+        None,
+    );
+    assert!(!hits.is_empty());
+    assert!(hits.iter().all(|h| h.path == "src/schedule/extra.rs"), "{hits:?}");
+    assert!(hits.iter().all(|h| h.rule == "nondeterministic-collections"));
+}
+
+#[test]
+fn nondeterministic_collections_allowlisted_negative_passes() {
+    let allow = "[[allow]]\nrule = \"nondeterministic-collections\"\npath = \"src/schedule/extra.rs\"\nreason = \"order never serialized\"\n";
+    let (hits, warnings) = lint(&[("src/schedule/extra.rs", HASHMAP_USE)], allow, None);
+    assert!(hits.is_empty(), "{hits:?}");
+    assert!(warnings.is_empty(), "entry matched, no stale warning expected: {warnings:?}");
+}
+
+#[test]
+fn stale_allowlist_entries_warn() {
+    let allow = "[[allow]]\nrule = \"wall-clock-in-core\"\npath = \"src/never/was.rs\"\nreason = \"gone\"\n";
+    let (hits, warnings) = lint(&[("src/clean.rs", "pub fn ok() {}\n")], allow, None);
+    assert!(hits.is_empty());
+    assert_eq!(warnings.len(), 1, "{warnings:?}");
+    assert!(warnings[0].contains("stale"), "{warnings:?}");
+}
+
+const WALL_CLOCK: &str = "pub fn t() -> u64 {\n    let t0 = std::time::Instant::now();\n    t0.elapsed().as_secs()\n}\n";
+
+#[test]
+fn wall_clock_forbidden_in_core_exempt_in_supervisor_tier() {
+    let (hits, _) = lint(
+        &[
+            ("src/elastic/policy/extra.rs", WALL_CLOCK), // core: flagged
+            ("src/schedule/proc/extra.rs", WALL_CLOCK),  // supervisor: exempt
+            ("src/util/logging.rs", WALL_CLOCK),         // logging: exempt
+            ("benches/extra.rs", WALL_CLOCK),            // bench target: exempt
+        ],
+        "",
+        None,
+    );
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert_eq!(
+        (hits[0].rule, hits[0].path.as_str(), hits[0].line),
+        ("wall-clock-in-core", "src/elastic/policy/extra.rs", 2)
+    );
+}
+
+#[test]
+fn float_serialization_flags_decimal_routes_not_hex_blobs() {
+    let sci = "pub fn s(x: f64) -> String {\n    format!(\"{:e}\", x)\n}\n";
+    let precision = "pub fn s(x: f64) -> String {\n    format!(\"{:.17}\", x)\n}\n";
+    let parse = "pub fn p(s: &str) -> f32 {\n    s.parse::<f32>().unwrap()\n}\n";
+    let hex = "pub fn s(xs: &[f32]) -> String {\n    crate::util::bits::f32s_hex(xs)\n}\n";
+    let (hits, _) = lint(
+        &[
+            ("src/schedule/checkpoint.rs", sci),
+            ("src/schedule/record.rs", precision),
+            ("src/coordinator/checkpoint.rs", parse),
+            ("src/schedule/sink.rs", hex), // blessed path: clean
+        ],
+        "",
+        None,
+    );
+    assert_eq!(hits.len(), 3, "{hits:?}");
+    assert!(hits.iter().all(|h| h.rule == "float-serialization"));
+    assert!(hits.iter().all(|h| h.line == 2), "{hits:?}");
+}
+
+#[test]
+fn config_field_coverage_positive_and_negative() {
+    // `beta` is serialized + sampled; `gamma` is missing from both paths.
+    let config = "pub struct ExperimentConfig {\n    pub beta: Option<f64>,\n    pub gamma: Option<u32>,\n    pub workers: usize,\n}\nimpl ExperimentConfig {\n    pub fn to_json(&self) {\n        if let Some(b) = self.beta {\n            push((\"beta\", b));\n        }\n    }\n}\n";
+    let sink = "pub fn config_schema_hash() -> String {\n    let mut cfg = ExperimentConfig::default();\n    cfg.beta = Some(0.5);\n    hash(cfg)\n}\n";
+    let (hits, _) = lint(&[("src/config.rs", config), ("src/schedule/sink.rs", sink)], "", None);
+    assert_eq!(hits.len(), 2, "{hits:?}");
+    assert!(hits.iter().all(|h| h.rule == "config-field-coverage"));
+    assert!(hits.iter().all(|h| h.message.contains("gamma")), "{hits:?}");
+    assert!(hits.iter().any(|h| h.message.contains("to_json")), "{hits:?}");
+    assert!(hits.iter().any(|h| h.message.contains("schema_hash")), "{hits:?}");
+}
+
+// ---------------------------------------------------------------------------
+// --rule filtering
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rule_filter_runs_only_the_selected_rule() {
+    // One file violating two rules at once.
+    let src = "use std::collections::HashMap;\npub fn f(p: *mut u8) {\n    unsafe { *p = 0 };\n}\n";
+    let files = [("src/schedule/extra.rs", src)];
+    let (all, _) = lint(&files, "", None);
+    assert!(all.iter().any(|h| h.rule == "undocumented-unsafe"));
+    assert!(all.iter().any(|h| h.rule == "nondeterministic-collections"));
+    let (only, _) = lint(&files, "", Some("undocumented-unsafe"));
+    assert!(!only.is_empty());
+    assert!(only.iter().all(|h| h.rule == "undocumented-unsafe"), "{only:?}");
+}
+
+#[test]
+fn unknown_rule_id_is_an_error_naming_the_catalog() {
+    let sources = vec![("src/a.rs".to_string(), "pub fn ok() {}\n".to_string())];
+    let err = analysis::lint_sources(&sources, &mut Allowlist::empty(), Some("no-such-rule"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no-such-rule"), "{err}");
+    assert!(err.contains("undocumented-unsafe"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Self-scan: the shipped tree is lint-clean and the allowlist is tight.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn self_scan_live_tree_is_clean_with_no_stale_allows() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::lint_tree(root, None).unwrap();
+    assert!(report.findings.is_empty(), "live tree has lint findings:\n{}", report.render(true));
+    assert!(report.warnings.is_empty(), "stale lint.toml entries:\n{}", report.render(false));
+    // the scan actually covered the tree (src + benches + tests)
+    assert!(report.files > 50, "suspiciously few files scanned: {}", report.files);
+}
+
+// ---------------------------------------------------------------------------
+// CLI: exit codes and report shape through the real binary.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cli_exits_nonzero_on_findings_and_zero_on_the_live_tree() {
+    use std::process::Command;
+    // A tiny violating tree under a scratch root.
+    let dir = std::env::temp_dir().join(format!("deahes-lint-fixture-{}", std::process::id()));
+    let src = dir.join("src");
+    std::fs::create_dir_all(&src).unwrap();
+    std::fs::write(src.join("bad.rs"), UNDOC_UNSAFE).unwrap();
+
+    let out = Command::new(env!("CARGO_BIN_EXE_deahes"))
+        .args(["lint", "--fix-hints", "--root"])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(!out.status.success(), "lint must exit nonzero on findings:\n{stdout}");
+    assert!(stdout.contains("src/bad.rs:2: [undocumented-unsafe]"), "{stdout}");
+    assert!(stdout.contains("fix: "), "--fix-hints must print hints:\n{stdout}");
+
+    // --rule filtering through the CLI: a rule the fixture does not violate.
+    let out = Command::new(env!("CARGO_BIN_EXE_deahes"))
+        .args(["lint", "--rule", "wall-clock-in-core", "--root"])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // The shipped tree is clean → exit 0 (same invocation CI gates on).
+    let out = Command::new(env!("CARGO_BIN_EXE_deahes")).arg("lint").output().unwrap();
+    assert!(
+        out.status.success(),
+        "shipped tree must be lint-clean:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+}
