@@ -20,6 +20,14 @@ impl Report {
         self.findings.is_empty()
     }
 
+    /// [`clean`](Report::clean) and warning-free. `deahes lint --strict`
+    /// (what CI runs) fails on this, so stale `lint.toml` entries — files
+    /// deleted or findings fixed with their allowlist line left behind —
+    /// can't quietly accumulate.
+    pub fn strict_clean(&self) -> bool {
+        self.clean() && self.warnings.is_empty()
+    }
+
     /// Human-readable report. With `fix_hints`, each finding carries an
     /// indented `fix:` line from the rule registry.
     pub fn render(&self, fix_hints: bool) -> String {
@@ -78,6 +86,18 @@ mod tests {
         let hinted = report.render(true);
         assert!(hinted.contains("fix: add a `// SAFETY:"), "{hinted}");
         assert!(hinted.contains("1 finding(s)"), "{hinted}");
+    }
+
+    /// Warnings don't fail a plain run but must fail `--strict`.
+    #[test]
+    fn strict_clean_requires_no_warnings() {
+        let mut report =
+            Report { findings: vec![], warnings: vec![], files: 1, rules: rules::rule_ids() };
+        assert!(report.clean());
+        assert!(report.strict_clean());
+        report.warnings.push("lint.toml: stale entry for deleted file".into());
+        assert!(report.clean(), "warnings alone never fail a plain lint run");
+        assert!(!report.strict_clean());
     }
 
     #[test]

@@ -524,13 +524,31 @@ fn run_dsweep(bc: &BenchConfig) -> Result<Vec<DsweepPoint>> {
 // entry point
 // ---------------------------------------------------------------------------
 
+/// One tier's slice of the monotone `VmHWM` trajectory.
+fn rss_tier(before: u64, after: u64) -> Json {
+    Json::obj(vec![
+        ("hwm_before_bytes", Json::num(before as f64)),
+        ("hwm_after_bytes", Json::num(after as f64)),
+        ("delta_bytes", Json::num(after.saturating_sub(before) as f64)),
+    ])
+}
+
 /// Run both tiers and write the JSON artifact to `out`. Returns the
 /// rendered document (already validated by a re-parse of the written file).
 pub fn run(bc: &BenchConfig, out: &Path) -> Result<Json> {
+    // VmHWM is a process-wide monotone high-water mark, so a tier that runs
+    // later inherits every earlier tier's peak. Snapshot it around each
+    // tier and report per-tier deltas: how far THIS tier pushed the peak
+    // beyond everything before it (0 = stayed under the existing mark).
+    let rss_start = peak_rss_bytes();
     let micro_results = run_micro(bc)?;
+    let rss_after_micro = peak_rss_bytes();
     let mac = run_macro(bc)?;
+    let rss_after_macro = peak_rss_bytes();
     let ext = run_macro_ext(bc)?;
+    let rss_after_ext = peak_rss_bytes();
     let dsweep = run_dsweep(bc)?;
+    let rss_after_dsweep = peak_rss_bytes();
 
     let micro_json = Json::Obj(
         micro_results
@@ -617,6 +635,32 @@ pub fn run(bc: &BenchConfig, out: &Path) -> Result<Json> {
                 ("points", dsweep_json),
             ]),
         ),
+        (
+            "rss",
+            Json::obj(vec![
+                (
+                    "note",
+                    Json::str(
+                        "Linux-only VmHWM snapshots; the mark is process-wide and \
+                         monotone, so delta_bytes is how far a tier pushed the peak \
+                         beyond every tier before it (0 = stayed under), not its \
+                         standalone footprint. All zeros where /proc is unavailable.",
+                    ),
+                ),
+                ("start_bytes", Json::num(rss_start as f64)),
+                (
+                    "tiers",
+                    Json::obj(vec![
+                        ("micro", rss_tier(rss_start, rss_after_micro)),
+                        ("macro", rss_tier(rss_after_micro, rss_after_macro)),
+                        ("macro_ext", rss_tier(rss_after_macro, rss_after_ext)),
+                        ("dsweep", rss_tier(rss_after_ext, rss_after_dsweep)),
+                    ]),
+                ),
+            ]),
+        ),
+        // Kept for schema compatibility with earlier trajectory points:
+        // the whole-process peak, which the per-tier deltas refine.
         ("peak_rss_bytes", Json::num(peak_rss_bytes() as f64)),
     ]);
 
@@ -788,6 +832,22 @@ mod tests {
             assert!(p.get("serial_steps_per_sec").as_f64().unwrap() > 0.0);
             assert!(p.get("chunked_steps_per_sec").as_f64().unwrap() > 0.0);
         }
+        // per-tier RSS snapshots: monotone HWM trajectory, consistent deltas
+        let tiers = doc.get("rss").get("tiers");
+        let mut prev = doc.get("rss").get("start_bytes").as_f64().unwrap();
+        for tier in ["micro", "macro", "macro_ext", "dsweep"] {
+            let t = tiers.get(tier);
+            let before = t.get("hwm_before_bytes").as_f64().unwrap();
+            let after = t.get("hwm_after_bytes").as_f64().unwrap();
+            let delta = t.get("delta_bytes").as_f64().unwrap();
+            assert_eq!(before, prev, "{tier}: tiers must chain without gaps");
+            assert!(after >= before, "{tier}: VmHWM is monotone");
+            assert_eq!(delta, after - before, "{tier}: delta is the HWM advance");
+            prev = after;
+        }
+        // the compat field still carries the whole-process peak, which by
+        // construction is at least the last tier's high-water mark
+        assert!(doc.get("peak_rss_bytes").as_f64().unwrap() >= prev);
         assert!(!summary(&doc).is_empty());
         let _ = std::fs::remove_file(&out);
     }

@@ -9,6 +9,7 @@
 //! | —     | sync-policy spec sweep (beyond the paper)                | [`policy_sweep`] |
 //! | —     | fault-scenario × policy tuning battery                   | [`scenario_battery`] |
 //! | —     | run-dir crash resume + figure re-materialization         | [`resume_run_dir`] |
+//! | —     | run-dir views: aggregates, cross-run diff, live status   | [`crate::report`] |
 //!
 //! Every driver averages over `seeds` runs (the paper uses 3) and returns
 //! per-round mean series, so the bench binaries and examples print exactly

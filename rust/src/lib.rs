@@ -32,6 +32,7 @@ pub mod engine;
 pub mod experiments;
 pub mod metrics;
 pub mod optim;
+pub mod report;
 pub mod runtime;
 pub mod schedule;
 pub mod strategies;

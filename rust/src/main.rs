@@ -9,6 +9,9 @@
 //!   record-trace     capture a failure model's realized schedule as a trace file
 //!   resume           finish half-run trials in a run dir + re-materialize figures
 //!   chaos            kill-and-resume + trace-replay smoke vs sequential
+//!   report           derived views: per-cell aggregates, policy ranking, cross-run diff
+//!   watch            live per-trial status from a run dir's sink tail
+//!   compact          move superseded checkpoint blobs out of runs.jsonl (facts intact)
 //!   bench            hot-path micro/macro benchmarks -> BENCH_hotpath.json
 //!   lint             project-invariant static analysis (nonzero exit on findings)
 //!   inspect          validate artifacts/metadata.json and time each artifact
@@ -91,6 +94,9 @@ fn run(argv: Vec<String>) -> Result<()> {
         "record-trace" => cmd_record_trace(rest),
         "resume" => cmd_resume(rest),
         "chaos" => cmd_chaos(rest),
+        "report" => cmd_report(rest),
+        "watch" => cmd_watch(rest),
+        "compact" => cmd_compact(rest),
         // Hidden: the child half of `--backend proc`. Reads one request
         // frame from stdin, streams checkpoint/outcome frames to stdout.
         "trial-worker" => deahes::schedule::proc::worker::run_worker(),
@@ -119,6 +125,9 @@ fn print_usage() {
          \x20 record-trace  capture a failure model's realized schedule as a trace file\n\
          \x20 resume        finish half-run trials in a run dir, re-materialize figures\n\
          \x20 chaos         kill-and-resume + trace-replay smoke\n\
+         \x20 report        derived views over run dirs (aggregates, ranking, cross-run diff)\n\
+         \x20 watch         live per-trial status from a run dir's sink tail\n\
+         \x20 compact       move superseded checkpoint blobs out of runs.jsonl\n\
          \x20 bench         hot-path micro/macro benchmarks (BENCH_hotpath.json)\n\
          \x20 lint          project-invariant static analysis over rust/{{src,benches,tests}}\n\
          \x20 inspect       validate + time the AOT artifacts\n\
@@ -1091,6 +1100,106 @@ fn chaos_result_doc(r: &sim::RunResult) -> String {
     .to_string_compact()
 }
 
+fn cmd_report(argv: Vec<String>) -> Result<()> {
+    let a = Cli::new(
+        "deahes report",
+        "derived views over run-dir facts: per-cell aggregates, policy ranking, and a \
+         cross-run comparison keyed by config fingerprint when several dirs are given",
+    )
+    .opt("out", "", "also write the JSON document here (re-parsed before it lands)")
+    .flag("json", "print the JSON document instead of the text tables")
+    .flag("quiet", "suppress info logging")
+    .parse(&argv)
+    .map_err(anyhow::Error::msg)?;
+    // With --json, stdout must stay a pure JSON document for piping.
+    if a.flag("quiet") || a.flag("json") {
+        logging::init(Level::Warn);
+    }
+    if a.positional.is_empty() {
+        bail!("usage: deahes report <run-dir> [<run-dir>...] [--json] [--out report.json]");
+    }
+    let dirs: Vec<PathBuf> = a.positional.iter().map(PathBuf::from).collect();
+    let report = deahes::report::gather(&dirs)?;
+    // Validity gate, like bench: what we print or write must re-parse and
+    // carry the expected tag.
+    let text = report.to_json().to_string_pretty();
+    let back = deahes::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("report JSON does not re-parse: {e}"))?;
+    if back.get("report").as_str() != Some("runs") {
+        bail!("report JSON lost its 'report' tag");
+    }
+    if let Some(out) = a.opt_nonempty("out") {
+        std::fs::write(out, format!("{text}\n")).with_context(|| format!("writing {out}"))?;
+        eprintln!("wrote {out}");
+    }
+    if a.flag("json") {
+        println!("{text}");
+    } else {
+        print!("{}", report.render_text());
+    }
+    Ok(())
+}
+
+fn cmd_watch(argv: Vec<String>) -> Result<()> {
+    let a = Cli::new(
+        "deahes watch",
+        "poll a run dir's sink tail and print live per-trial status \
+         (committed / checkpointed-at-round / pending)",
+    )
+    .opt("interval", "2", "seconds between polls")
+    .flag("once", "print one status snapshot and exit")
+    .flag("quiet", "suppress info logging")
+    .parse(&argv)
+    .map_err(anyhow::Error::msg)?;
+    if a.flag("quiet") {
+        logging::init(Level::Warn);
+    }
+    let [dir] = a.positional.as_slice() else {
+        bail!("usage: deahes watch <run-dir> [--interval secs] [--once]");
+    };
+    let interval = a.f64("interval");
+    if !(interval.is_finite() && interval > 0.0) {
+        bail!("--interval must be a positive number of seconds");
+    }
+    let mut state = deahes::report::WatchState::new(std::path::Path::new(dir));
+    let mut first = true;
+    loop {
+        let changed = state.poll()?;
+        if changed || first {
+            print!("{}", state.render());
+            first = false;
+        }
+        if a.flag("once") {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+    }
+    Ok(())
+}
+
+fn cmd_compact(argv: Vec<String>) -> Result<()> {
+    let a = Cli::new(
+        "deahes compact",
+        "rewrite a run dir: move superseded mid-trial checkpoint lines out of runs.jsonl \
+         into checkpoints.jsonl (dropping those whose trial already committed), keeping \
+         every committed record byte-identical and resume behavior unchanged",
+    )
+    .flag("dry-run", "plan and verify the rewrite but change nothing")
+    .flag("quiet", "suppress info logging")
+    .parse(&argv)
+    .map_err(anyhow::Error::msg)?;
+    if a.flag("quiet") {
+        logging::init(Level::Warn);
+    }
+    let [dir] = a.positional.as_slice() else {
+        bail!("usage: deahes compact <run-dir> [--dry-run]");
+    };
+    let report =
+        deahes::report::compact_run_dir(std::path::Path::new(dir), a.flag("dry-run"))?;
+    println!("{dir}: {}", report.render());
+    Ok(())
+}
+
 fn cmd_bench(argv: Vec<String>) -> Result<()> {
     let a = Cli::new(
         "deahes bench",
@@ -1158,6 +1267,7 @@ fn cmd_lint(argv: Vec<String>) -> Result<()> {
     .opt("rule", "", "run a single rule id (default: the full catalog)")
     .opt("root", "", "crate root to scan (default: this crate's manifest dir)")
     .flag("fix-hints", "print a fix hint under each finding")
+    .flag("strict", "also fail on warnings (stale lint.toml entries); what CI runs")
     .parse(&argv)
     .map_err(anyhow::Error::msg)?;
     let root = match a.opt_nonempty("root") {
@@ -1168,6 +1278,13 @@ fn cmd_lint(argv: Vec<String>) -> Result<()> {
     print!("{}", report.render(a.flag("fix-hints")));
     if !report.clean() {
         bail!("lint: {} finding(s) — see report above", report.findings.len());
+    }
+    if a.flag("strict") && !report.strict_clean() {
+        bail!(
+            "lint --strict: {} warning(s) — stale lint.toml entries must be pruned, \
+             see report above",
+            report.warnings.len()
+        );
     }
     Ok(())
 }

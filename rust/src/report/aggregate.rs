@@ -1,0 +1,490 @@
+//! `deahes report` — derived views over committed run facts.
+//!
+//! Everything here is computed from `runs.jsonl` via the same loader the
+//! sweeps use ([`JsonlRunSink::load_with_checkpoints`]), so a report can
+//! never disagree with what a resume would see. Three views:
+//!
+//!  * **per-cell aggregates** — mean/deviation of tail accuracy (reusing
+//!    [`experiments::series_from_records`], the exact averaging the
+//!    figures use), sync counts, fault digests, and the proc supervisor's
+//!    `perf` telemetry summed per cell;
+//!  * **policy ranking** — [`experiments::rank_policies`] over the run's
+//!    cells, treating each cell as one scenario of its effective policy
+//!    spec;
+//!  * **cross-run comparison** — given several run dirs, trials are
+//!    joined by config fingerprint (stable across backends and
+//!    machines); rows flag whether the committed records are
+//!    byte-identical, the determinism check `schedule`'s
+//!    backend-invariance promises.
+
+use crate::experiments::{self, ScenarioOutcome};
+use crate::schedule::record::TrialRecord;
+use crate::schedule::sink::{JsonlRunSink, SinkContents};
+use crate::schedule::RUNS_FILE;
+use crate::util::json::Json;
+use anyhow::{ensure, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// Proc-supervisor telemetry summed over a cell's committed records.
+#[derive(Debug, Default)]
+pub struct PerfTotals {
+    /// Records carrying a `perf` object (sequential/thread trials carry
+    /// none, so 0 here means "not a proc run").
+    pub trials: usize,
+    pub attempts: u64,
+    pub kills_absorbed: u64,
+    pub crashes_absorbed: u64,
+    pub retry_wait_secs: f64,
+}
+
+/// One sweep cell's aggregate row.
+#[derive(Debug)]
+pub struct CellReport {
+    pub cell: String,
+    /// The cell's effective sync-policy spec (canonicalized).
+    pub policy: String,
+    pub trials: usize,
+    /// Mean of each trial's tail accuracy (last 10 eval points) — the
+    /// figures' "final" metric.
+    pub tail_acc_mean: f64,
+    pub tail_acc_std: f64,
+    pub final_train_loss: f64,
+    pub syncs_ok: u64,
+    pub syncs_failed: u64,
+    pub virtual_secs: f64,
+    /// Distinct fault digests across the cell's trials (paired schedules
+    /// share one digest; an empty list means a fault-free run).
+    pub fault_digests: Vec<String>,
+    pub perf: PerfTotals,
+}
+
+/// Everything derived from one run directory.
+#[derive(Debug)]
+pub struct RunReport {
+    pub dir: String,
+    pub committed: usize,
+    /// Uncommitted trials with a restorable mid-trial checkpoint.
+    pub checkpointed: usize,
+    /// Uncommitted trials whose checkpoints cannot restore (re-run from
+    /// scratch on resume).
+    pub scratch: usize,
+    pub cells: Vec<CellReport>,
+    /// Policy specs ranked by mean tail accuracy across the run's cells.
+    pub policies: Vec<(String, f64)>,
+}
+
+/// One fingerprint's row in the cross-run join.
+#[derive(Debug)]
+pub struct FingerprintRow {
+    pub fingerprint: String,
+    pub cell: String,
+    pub seed_index: u64,
+    /// Tail accuracy per run, in input order; `None` = absent there.
+    pub tail_acc: Vec<Option<f64>>,
+    /// Committed in at least two runs and byte-identical in every run
+    /// that has it.
+    pub identical: bool,
+}
+
+/// The full `deahes report` result.
+#[derive(Debug)]
+pub struct Report {
+    pub runs: Vec<RunReport>,
+    /// Fingerprint join; populated only when two or more runs were given.
+    pub comparison: Vec<FingerprintRow>,
+}
+
+/// Load each run dir through the sink loader and [`build`] the report.
+pub fn gather(dirs: &[PathBuf]) -> Result<Report> {
+    let mut loaded = Vec::new();
+    for d in dirs {
+        let path = d.join(RUNS_FILE);
+        ensure!(path.exists(), "report: no {RUNS_FILE} in {}", d.display());
+        loaded.push((d.display().to_string(), JsonlRunSink::load_with_checkpoints(&path)?));
+    }
+    Ok(build(&loaded))
+}
+
+/// Pure aggregation over already-loaded sink contents.
+pub fn build(runs: &[(String, SinkContents)]) -> Report {
+    let reports = runs.iter().map(|(dir, c)| build_run(dir, c)).collect();
+    let comparison = if runs.len() >= 2 { compare(runs) } else { Vec::new() };
+    Report { runs: reports, comparison }
+}
+
+fn build_run(dir: &str, contents: &SinkContents) -> RunReport {
+    let records: Vec<TrialRecord> = contents.records.values().cloned().collect();
+    let series = experiments::series_from_records(&records);
+    let mut by_cell: BTreeMap<&str, Vec<&TrialRecord>> = BTreeMap::new();
+    for r in &records {
+        by_cell.entry(r.cell.as_str()).or_default().push(r);
+    }
+    let mut cells = Vec::new();
+    let mut outcomes = Vec::new();
+    for s in &series {
+        // series_from_records labels each averaged series with its cell key
+        let group = &by_cell[s.label.as_str()];
+        let policy = group[0].config.effective_policy_spec();
+        let (mut syncs_ok, mut syncs_failed) = (0u64, 0u64);
+        let mut digests: BTreeSet<&str> = BTreeSet::new();
+        let mut perf = PerfTotals::default();
+        for r in group {
+            for round in &r.log.records {
+                syncs_ok += round.syncs_ok as u64;
+                syncs_failed += round.syncs_failed as u64;
+            }
+            if let Some(d) = &r.fault_digest {
+                digests.insert(d);
+            }
+            if let Some(p) = &r.perf {
+                perf.trials += 1;
+                perf.attempts += p.get("attempts").as_f64().unwrap_or(0.0) as u64;
+                perf.kills_absorbed += p.get("kills_absorbed").as_f64().unwrap_or(0.0) as u64;
+                perf.crashes_absorbed +=
+                    p.get("crashes_absorbed").as_f64().unwrap_or(0.0) as u64;
+                perf.retry_wait_secs += p.get("retry_wait_secs").as_f64().unwrap_or(0.0);
+            }
+        }
+        outcomes.push(ScenarioOutcome {
+            scenario: s.label.clone(),
+            policy: policy.clone(),
+            series: s.clone(),
+        });
+        cells.push(CellReport {
+            cell: s.label.clone(),
+            policy,
+            trials: group.len(),
+            tail_acc_mean: s.final_acc_mean,
+            tail_acc_std: s.final_acc_std,
+            final_train_loss: s.final_train_loss,
+            syncs_ok,
+            syncs_failed,
+            virtual_secs: s.virtual_secs,
+            fault_digests: digests.iter().map(|d| d.to_string()).collect(),
+            perf,
+        });
+    }
+    let policies = experiments::rank_policies(&outcomes);
+    RunReport {
+        dir: dir.to_string(),
+        committed: contents.records.len(),
+        checkpointed: contents.checkpoints.len(),
+        scratch: contents.scratch.len(),
+        cells,
+        policies,
+    }
+}
+
+fn compare(runs: &[(String, SinkContents)]) -> Vec<FingerprintRow> {
+    let mut fps: BTreeSet<&String> = BTreeSet::new();
+    for (_, c) in runs {
+        fps.extend(c.records.keys());
+    }
+    let mut out = Vec::new();
+    for fp in fps {
+        let present: Vec<Option<&TrialRecord>> =
+            runs.iter().map(|(_, c)| c.records.get(fp)).collect();
+        let first = present.iter().find_map(|o| *o).expect("fp came from some run");
+        let bytes: Vec<String> = present
+            .iter()
+            .filter_map(|o| o.map(|r| r.to_json().to_string_compact()))
+            .collect();
+        out.push(FingerprintRow {
+            fingerprint: fp.clone(),
+            cell: first.cell.clone(),
+            seed_index: first.seed_index,
+            tail_acc: present.iter().map(|o| o.map(|r| r.log.tail_acc(10))).collect(),
+            identical: bytes.len() >= 2 && bytes.windows(2).all(|w| w[0] == w[1]),
+        });
+    }
+    out
+}
+
+impl Report {
+    pub fn to_json(&self) -> Json {
+        let runs = Json::Arr(self.runs.iter().map(RunReport::to_json).collect());
+        let mut fields = vec![("report", Json::str("runs")), ("runs", runs)];
+        if !self.comparison.is_empty() {
+            fields.push((
+                "comparison",
+                Json::Arr(
+                    self.comparison
+                        .iter()
+                        .map(|row| {
+                            Json::obj(vec![
+                                ("fingerprint", Json::str(&row.fingerprint)),
+                                ("cell", Json::str(&row.cell)),
+                                ("seed_index", Json::num(row.seed_index as f64)),
+                                (
+                                    "tail_acc",
+                                    Json::Arr(
+                                        row.tail_acc
+                                            .iter()
+                                            .map(|a| a.map_or(Json::Null, Json::num))
+                                            .collect(),
+                                    ),
+                                ),
+                                ("identical", Json::Bool(row.identical)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for run in &self.runs {
+            let _ = writeln!(
+                s,
+                "== {} — {} committed, {} mid-trial checkpoint(s), {} scratch ==",
+                run.dir, run.committed, run.checkpointed, run.scratch
+            );
+            if !run.cells.is_empty() {
+                let _ = writeln!(
+                    s,
+                    "{:<28} {:<6} {:>9} {:>8} {:>9} {:>12} {:>9}  {}",
+                    "cell", "trials", "tail-acc", "±std", "loss", "syncs ok/fail", "virt-s", "policy"
+                );
+            }
+            for c in &run.cells {
+                let _ = writeln!(
+                    s,
+                    "{:<28} {:<6} {:>9.4} {:>8.4} {:>9.4} {:>8}/{:<3} {:>9.1}  {}",
+                    c.cell,
+                    c.trials,
+                    c.tail_acc_mean,
+                    c.tail_acc_std,
+                    c.final_train_loss,
+                    c.syncs_ok,
+                    c.syncs_failed,
+                    c.virtual_secs,
+                    c.policy
+                );
+                if !c.fault_digests.is_empty() {
+                    let _ = writeln!(s, "{:<28} faults: {}", "", c.fault_digests.join(", "));
+                }
+                if c.perf.trials > 0 {
+                    let _ = writeln!(
+                        s,
+                        "{:<28} proc perf: attempts={} kills={} crashes={} retry-wait={:.1}s \
+                         over {} trial(s)",
+                        "",
+                        c.perf.attempts,
+                        c.perf.kills_absorbed,
+                        c.perf.crashes_absorbed,
+                        c.perf.retry_wait_secs,
+                        c.perf.trials
+                    );
+                }
+            }
+            if run.policies.len() > 1 {
+                let _ = writeln!(s, "policy ranking (mean tail accuracy across cells):");
+                for (i, (spec, acc)) in run.policies.iter().enumerate() {
+                    let _ = writeln!(s, "  {}. {spec}  {acc:.4}", i + 1);
+                }
+            }
+        }
+        if !self.comparison.is_empty() {
+            let _ = writeln!(s, "== cross-run comparison (by config fingerprint) ==");
+            let _ = writeln!(
+                s,
+                "{:<18} {:<28} {:<5} {:<10} tail-acc per run",
+                "fingerprint", "cell", "seed", "identical"
+            );
+            for row in &self.comparison {
+                let accs: Vec<String> = row
+                    .tail_acc
+                    .iter()
+                    .map(|a| a.map_or("—".to_string(), |x| format!("{x:.4}")))
+                    .collect();
+                let _ = writeln!(
+                    s,
+                    "{:<18} {:<28} {:<5} {:<10} {}",
+                    row.fingerprint,
+                    row.cell,
+                    row.seed_index,
+                    if row.identical { "yes" } else { "NO" },
+                    accs.join(" | ")
+                );
+            }
+        }
+        s
+    }
+}
+
+impl RunReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dir", Json::str(&self.dir)),
+            ("committed", Json::num(self.committed as f64)),
+            ("checkpointed", Json::num(self.checkpointed as f64)),
+            ("scratch", Json::num(self.scratch as f64)),
+            (
+                "cells",
+                Json::Arr(self.cells.iter().map(CellReport::to_json).collect()),
+            ),
+            (
+                "policies",
+                Json::Arr(
+                    self.policies
+                        .iter()
+                        .map(|(spec, acc)| {
+                            Json::obj(vec![
+                                ("policy", Json::str(spec)),
+                                ("mean_tail_acc", Json::num(*acc)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl CellReport {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("cell", Json::str(&self.cell)),
+            ("policy", Json::str(&self.policy)),
+            ("trials", Json::num(self.trials as f64)),
+            ("tail_acc_mean", Json::num(self.tail_acc_mean)),
+            ("tail_acc_std", Json::num(self.tail_acc_std)),
+            ("final_train_loss", Json::num(self.final_train_loss)),
+            ("syncs_ok", Json::num(self.syncs_ok as f64)),
+            ("syncs_failed", Json::num(self.syncs_failed as f64)),
+            ("virtual_secs", Json::num(self.virtual_secs)),
+            (
+                "fault_digests",
+                Json::Arr(self.fault_digests.iter().map(|d| Json::str(d)).collect()),
+            ),
+        ];
+        if self.perf.trials > 0 {
+            fields.push((
+                "perf",
+                Json::obj(vec![
+                    ("trials", Json::num(self.perf.trials as f64)),
+                    ("attempts", Json::num(self.perf.attempts as f64)),
+                    ("kills_absorbed", Json::num(self.perf.kills_absorbed as f64)),
+                    ("crashes_absorbed", Json::num(self.perf.crashes_absorbed as f64)),
+                    ("retry_wait_secs", Json::num(self.perf.retry_wait_secs)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::simclock::SimClockReport;
+    use crate::metrics::{MetricsLog, RoundRecord};
+
+    fn rec(fp: &str, cell: &str, seed: u64, acc: f64, policy: &str) -> TrialRecord {
+        let mut log = MetricsLog::default();
+        log.push(RoundRecord {
+            round: 0,
+            test_acc: acc,
+            test_loss: 1.0 - acc,
+            train_loss: 0.5,
+            syncs_ok: 3,
+            syncs_failed: 1,
+            mean_h1: 0.0,
+            mean_h2: 0.0,
+            mean_score: 0.0,
+        });
+        TrialRecord {
+            fingerprint: fp.to_string(),
+            cell: cell.to_string(),
+            label: cell.to_string(),
+            seed_index: seed,
+            config: ExperimentConfig {
+                policy: Some(policy.to_string()),
+                ..ExperimentConfig::default()
+            },
+            log,
+            sim: SimClockReport {
+                virtual_secs: 10.0,
+                master_utilization: 0.0,
+                mean_sync_wait: 0.0,
+                p95_style_max_wait: 0.0,
+                rounds: 1,
+            },
+            worker_stats: vec![],
+            fault_digest: Some("cafe1234".into()),
+            perf: Some(Json::obj(vec![
+                ("attempts", Json::num(2.0)),
+                ("kills_absorbed", Json::num(1.0)),
+                ("crashes_absorbed", Json::num(0.0)),
+                ("retry_wait_secs", Json::num(0.5)),
+            ])),
+        }
+    }
+
+    fn contents(records: &[TrialRecord]) -> SinkContents {
+        let mut c = SinkContents::default();
+        for r in records {
+            c.records.insert(r.fingerprint.clone(), r.clone());
+        }
+        c
+    }
+
+    #[test]
+    fn per_cell_aggregates_and_policy_ranking() {
+        let c = contents(&[
+            rec("a0", "cell/a", 0, 0.9, "fixed(alpha=0.5)"),
+            rec("a1", "cell/a", 1, 0.8, "fixed(alpha=0.5)"),
+            rec("b0", "cell/b", 0, 0.5, "fixed(alpha=0.1)"),
+        ]);
+        let report = build(&[("dirA".to_string(), c)]);
+        assert_eq!(report.runs.len(), 1);
+        assert!(report.comparison.is_empty(), "one run has nothing to compare");
+        let run = &report.runs[0];
+        assert_eq!((run.committed, run.checkpointed, run.scratch), (3, 0, 0));
+        assert_eq!(run.cells.len(), 2);
+        let a = &run.cells[0];
+        assert_eq!((a.cell.as_str(), a.trials), ("cell/a", 2));
+        assert!((a.tail_acc_mean - 0.85).abs() < 1e-12);
+        assert_eq!((a.syncs_ok, a.syncs_failed), (6, 2));
+        assert_eq!(a.fault_digests, vec!["cafe1234".to_string()]);
+        assert_eq!((a.perf.trials, a.perf.attempts, a.perf.kills_absorbed), (2, 4, 2));
+        // ranking: the winning policy first, ordered by mean tail accuracy
+        assert_eq!(run.policies[0].0, "fixed(alpha=0.5)");
+        assert!((run.policies[0].1 - 0.85).abs() < 1e-12);
+        assert_eq!(run.policies[1].0, "fixed(alpha=0.1)");
+        let text = report.render_text();
+        assert!(text.contains("cell/a"));
+        assert!(text.contains("policy ranking"));
+    }
+
+    #[test]
+    fn cross_run_comparison_joins_by_fingerprint() {
+        let shared = rec("s0", "cell/s", 0, 0.9, "fixed(alpha=0.5)");
+        let run_a = contents(&[
+            shared.clone(),
+            rec("d0", "cell/d", 0, 0.7, "fixed(alpha=0.5)"),
+            rec("only_a", "cell/o", 0, 0.6, "fixed(alpha=0.5)"),
+        ]);
+        let run_b = contents(&[shared, rec("d0", "cell/d", 0, 0.71, "fixed(alpha=0.5)")]);
+        let report = build(&[("A".to_string(), run_a), ("B".to_string(), run_b)]);
+        let by_fp: BTreeMap<&str, &FingerprintRow> =
+            report.comparison.iter().map(|r| (r.fingerprint.as_str(), r)).collect();
+        assert!(by_fp["s0"].identical, "byte-identical in both runs");
+        assert!(!by_fp["d0"].identical, "diverging accuracy must flag");
+        assert_eq!(by_fp["d0"].tail_acc, vec![Some(0.7), Some(0.71)]);
+        assert!(!by_fp["only_a"].identical, "a single copy is not a confirmation");
+        assert_eq!(by_fp["only_a"].tail_acc, vec![Some(0.6), None]);
+        // the JSON document round-trips through the repo parser
+        let j = report.to_json();
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back.get("report").as_str(), Some("runs"));
+        assert_eq!(back.get("runs").as_arr().map(|a| a.len()), Some(2));
+        assert!(report.render_text().contains("cross-run comparison"));
+    }
+}

@@ -1,0 +1,437 @@
+//! `deahes compact` — the one sanctioned rewriter of a run directory.
+//!
+//! Every *writer* treats `runs.jsonl` as append-only (sweeps, mid-trial
+//! checkpoints, the proc supervisor); compact is the offline exception.
+//! Mid-trial checkpoint lines carry parameter-sized state blobs, and a
+//! long crash-and-resume sequence accumulates superseded ones the loader
+//! will never surface again. Compact moves those out:
+//!
+//!  * checkpoint lines of a trial that has **committed** are dropped —
+//!    the committed record is the durable fact and always supersedes them;
+//!  * checkpoint lines **superseded by a later line of the same trial**
+//!    are appended verbatim to a sidecar `checkpoints.jsonl` (an audit
+//!    trail; nothing reads it back);
+//!  * everything else — the header, every committed record line, the one
+//!    surviving checkpoint per uncommitted trial, malformed tails from
+//!    interrupted appends — is carried **byte-for-byte**.
+//!
+//! The surviving line per uncommitted trial is chosen to be exactly the
+//! line `load_with_checkpoints` would surface: the last restorable
+//! checkpoint winning the loader's `next_round >= best` race, or — when
+//! no line restores under this build — the last line whose *identity*
+//! still decodes (the loader's scratch map is last-wins), or failing even
+//! that the last line outright. Before the swap the rewritten file is
+//! re-loaded and compared against the original's loader view (records,
+//! checkpoints and scratch identities, all byte-compared); any difference
+//! aborts with the original untouched. The swap itself is
+//! sidecar-append-then-atomic-rename, so a crash in between can only
+//! duplicate lines into the sidecar, never lose them.
+
+use crate::log_info;
+use crate::schedule::sink::{scan_lines, JsonlRunSink, SinkContents, SinkLine, SinkLineKind};
+use crate::schedule::{RunDirLock, RUNS_FILE};
+use anyhow::{ensure, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write as _;
+use std::path::Path;
+
+/// Sidecar file superseded checkpoint lines move to, inside the run dir.
+pub const CHECKPOINTS_FILE: &str = "checkpoints.jsonl";
+
+/// What one compaction did (or, under `--dry-run`, would do).
+#[derive(Debug)]
+pub struct CompactReport {
+    /// Committed record lines carried byte-identical.
+    pub records: usize,
+    /// Checkpoint lines still loader-visible, kept in place.
+    pub checkpoints_kept: usize,
+    /// Superseded-but-uncommitted checkpoint lines moved to the sidecar.
+    pub checkpoints_moved: usize,
+    /// Checkpoint lines dropped because their trial committed.
+    pub checkpoints_dropped: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+    pub dry_run: bool,
+}
+
+impl CompactReport {
+    pub fn render(&self) -> String {
+        format!(
+            "{}{} record line(s) byte-identical; checkpoints: {} kept, {} moved to {}, \
+             {} dropped (trial committed); {} -> {} bytes",
+            if self.dry_run { "[dry-run] " } else { "" },
+            self.records,
+            self.checkpoints_kept,
+            self.checkpoints_moved,
+            CHECKPOINTS_FILE,
+            self.checkpoints_dropped,
+            self.bytes_before,
+            self.bytes_after,
+        )
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Disposition {
+    Keep,
+    Sidecar,
+    Drop,
+}
+
+/// Decide per line. Pure function of the scanned lines, so the policy is
+/// unit-testable without touching a filesystem.
+fn plan(lines: &[SinkLine]) -> Vec<Disposition> {
+    let committed: BTreeSet<&str> = lines
+        .iter()
+        .filter_map(|l| match &l.kind {
+            SinkLineKind::Record(r) => Some(r.fingerprint.as_str()),
+            _ => None,
+        })
+        .collect();
+    let mut groups: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (i, l) in lines.iter().enumerate() {
+        // A checkpoint line whose fingerprint cannot even be peeked is left
+        // in place: with no trial to attribute it to, no supersession claim
+        // can be made about it.
+        if let SinkLineKind::Checkpoint { fingerprint: Some(fp), .. } = &l.kind {
+            groups.entry(fp).or_default().push(i);
+        }
+    }
+    let mut out = vec![Disposition::Keep; lines.len()];
+    for (fp, idxs) in groups {
+        if committed.contains(fp) {
+            for &i in &idxs {
+                out[i] = Disposition::Drop;
+            }
+            continue;
+        }
+        // The line the loader surfaces: last restorable line winning the
+        // `next_round >= best` race; else the last identity-decodable line
+        // (scratch is last-wins); else the last line, kept so the loader
+        // still sees (and warns about) the undecodable trial.
+        let mut winner: Option<(usize, u64)> = None;
+        for &i in &idxs {
+            if let SinkLineKind::Checkpoint { next_round: Some(nr), .. } = &lines[i].kind {
+                if winner.map_or(true, |(_, best)| *nr >= best) {
+                    winner = Some((i, *nr));
+                }
+            }
+        }
+        let keep = match winner {
+            Some((i, _)) => i,
+            None => *idxs
+                .iter()
+                .rev()
+                .find(|&&i| {
+                    matches!(&lines[i].kind, SinkLineKind::Checkpoint { slot: Some(_), .. })
+                })
+                .unwrap_or_else(|| idxs.last().expect("group is non-empty")),
+        };
+        for &i in &idxs {
+            if i != keep {
+                out[i] = Disposition::Sidecar;
+            }
+        }
+    }
+    out
+}
+
+/// Compact `dir/runs.jsonl` in place (under the run-dir lock). With
+/// `dry_run` the rewrite is planned and *verified* but nothing in the run
+/// dir changes.
+pub fn compact_run_dir(dir: &Path, dry_run: bool) -> Result<CompactReport> {
+    let _lock = RunDirLock::acquire(dir)?;
+    let path = dir.join(RUNS_FILE);
+    let bytes_before = std::fs::metadata(&path)
+        .with_context(|| format!("compact: no {RUNS_FILE} in {}", dir.display()))?
+        .len();
+    let before = JsonlRunSink::load_with_checkpoints(&path)?;
+    let lines = scan_lines(&path)?;
+    let disp = plan(&lines);
+
+    let mut kept = String::new();
+    let mut moved: Vec<&str> = Vec::new();
+    let mut report = CompactReport {
+        records: 0,
+        checkpoints_kept: 0,
+        checkpoints_moved: 0,
+        checkpoints_dropped: 0,
+        bytes_before,
+        bytes_after: 0,
+        dry_run,
+    };
+    for (line, d) in lines.iter().zip(&disp) {
+        let is_ckpt = matches!(line.kind, SinkLineKind::Checkpoint { .. });
+        match d {
+            Disposition::Keep => {
+                if matches!(line.kind, SinkLineKind::Record(_)) {
+                    report.records += 1;
+                } else if is_ckpt {
+                    report.checkpoints_kept += 1;
+                }
+                kept.push_str(&line.raw);
+                kept.push('\n');
+            }
+            Disposition::Sidecar => {
+                report.checkpoints_moved += 1;
+                moved.push(&line.raw);
+            }
+            Disposition::Drop => {
+                report.checkpoints_dropped += 1;
+            }
+        }
+    }
+    report.bytes_after = kept.len() as u64;
+
+    // Rewrite to a temp file in the same directory (same filesystem, so
+    // the final rename is atomic) and prove the loader sees the identical
+    // world before anything irreversible happens.
+    let tmp = dir.join("runs.jsonl.compact-tmp");
+    std::fs::write(&tmp, &kept)
+        .with_context(|| format!("compact: writing {}", tmp.display()))?;
+    let verdict = JsonlRunSink::load_with_checkpoints(&tmp)
+        .and_then(|after| equivalent(&before, &after));
+    if let Err(e) = verdict {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.context(
+            "compact: rewritten file does not load identically; original left untouched",
+        ));
+    }
+    if dry_run {
+        let _ = std::fs::remove_file(&tmp);
+        return Ok(report);
+    }
+
+    // Sidecar first, fsynced, then the swap: a crash between the two steps
+    // duplicates lines into the sidecar (harmless — nothing reads it back),
+    // never loses them.
+    if !moved.is_empty() {
+        let side = dir.join(CHECKPOINTS_FILE);
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&side)
+            .with_context(|| format!("compact: opening sidecar {}", side.display()))?;
+        for raw in &moved {
+            f.write_all(raw.as_bytes())?;
+            f.write_all(b"\n")?;
+        }
+        f.sync_all()
+            .with_context(|| format!("compact: syncing sidecar {}", side.display()))?;
+    }
+    std::fs::File::open(&tmp)?.sync_all()?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("compact: swapping in {}", path.display()))?;
+    log_info!("compact {}: {}", dir.display(), report.render());
+    Ok(report)
+}
+
+/// Byte-compare the loader's view of two run files: same committed
+/// records, same surviving checkpoints, same scratch identities.
+fn equivalent(before: &SinkContents, after: &SinkContents) -> Result<()> {
+    same_keys("committed record", &before.records, &after.records)?;
+    for (fp, b) in &before.records {
+        ensure!(
+            b.to_json().to_string_compact() == after.records[fp].to_json().to_string_compact(),
+            "committed record {fp} changed"
+        );
+    }
+    same_keys("mid-trial checkpoint", &before.checkpoints, &after.checkpoints)?;
+    for (fp, b) in &before.checkpoints {
+        ensure!(
+            b.to_json().to_string_compact()
+                == after.checkpoints[fp].to_json().to_string_compact(),
+            "surviving checkpoint for {fp} changed"
+        );
+    }
+    same_keys("scratch identity", &before.scratch, &after.scratch)?;
+    for (fp, b) in &before.scratch {
+        ensure!(
+            b.to_json().to_string_compact() == after.scratch[fp].to_json().to_string_compact(),
+            "scratch identity for {fp} changed"
+        );
+    }
+    Ok(())
+}
+
+fn same_keys<V>(
+    what: &str,
+    before: &BTreeMap<String, V>,
+    after: &BTreeMap<String, V>,
+) -> Result<()> {
+    let b: Vec<&String> = before.keys().collect();
+    let a: Vec<&String> = after.keys().collect();
+    ensure!(b == a, "{what} set changed: {b:?} -> {a:?}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::checkpoint::{RunCheckpoint, DRIVER_SEQUENTIAL};
+    use crate::coordinator::simclock::SimClockReport;
+    use crate::metrics::MetricsLog;
+    use crate::schedule::checkpoint::TrialCheckpoint;
+    use crate::schedule::record::TrialRecord;
+    use crate::schedule::sink::RunSink as _;
+    use crate::util::json::Json;
+    use std::path::PathBuf;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("deahes-compact-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn rec(fp: &str) -> TrialRecord {
+        TrialRecord {
+            fingerprint: fp.to_string(),
+            cell: "c".into(),
+            label: "c".into(),
+            seed_index: 0,
+            config: ExperimentConfig::default(),
+            log: MetricsLog::default(),
+            sim: SimClockReport {
+                virtual_secs: 0.0,
+                master_utilization: 0.0,
+                mean_sync_wait: 0.0,
+                p95_style_max_wait: 0.0,
+                rounds: 0,
+            },
+            worker_stats: vec![],
+            fault_digest: None,
+            perf: None,
+        }
+    }
+
+    fn ckpt(fp: &str, next_round: u64) -> TrialCheckpoint {
+        TrialCheckpoint {
+            fingerprint: fp.to_string(),
+            cell: "c".into(),
+            label: "c".into(),
+            seed_index: 0,
+            config: ExperimentConfig::default(),
+            every: 5,
+            every_secs: 0.0,
+            state: RunCheckpoint {
+                driver: DRIVER_SEQUENTIAL.into(),
+                next_round,
+                master: Json::Null,
+                workers: vec![Json::Null],
+                gossip: vec![(0, vec![])],
+                engines: Json::Null,
+                rngs: Json::Null,
+                sync: Json::Null,
+                log: MetricsLog::default(),
+                per_round_syncs: vec![1; next_round as usize],
+            },
+        }
+    }
+
+    /// Append one raw line (plus newline) to an existing run file.
+    fn append_line(dir: &Path, line: &str) {
+        let path = dir.join(RUNS_FILE);
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str(line);
+        text.push('\n');
+        std::fs::write(&path, text).unwrap();
+    }
+
+    #[test]
+    fn drops_committed_moves_superseded_keeps_winner_byte_identical() {
+        let dir = tmp_dir("mixed");
+        {
+            let mut sink = JsonlRunSink::open(&dir.join(RUNS_FILE)).unwrap();
+            let w = sink.checkpoint_writer();
+            w.append(&ckpt("done", 3)).unwrap();
+            sink.append(&rec("done")).unwrap();
+            w.append(&ckpt("live", 2)).unwrap();
+            w.append(&ckpt("live", 5)).unwrap();
+        }
+        let original = std::fs::read_to_string(dir.join(RUNS_FILE)).unwrap();
+        let orig_lines: Vec<&str> = original.lines().collect();
+        let before = JsonlRunSink::load_with_checkpoints(&dir.join(RUNS_FILE)).unwrap();
+
+        let r = compact_run_dir(&dir, false).unwrap();
+        assert_eq!((r.records, r.checkpoints_kept), (1, 1));
+        assert_eq!((r.checkpoints_moved, r.checkpoints_dropped), (1, 1));
+        assert!(r.bytes_after < r.bytes_before);
+
+        let compacted = std::fs::read_to_string(dir.join(RUNS_FILE)).unwrap();
+        // header, the committed record, the winning live checkpoint — each
+        // byte-identical to its original line
+        let kept: Vec<&str> = compacted.lines().collect();
+        assert_eq!(kept, vec![orig_lines[0], orig_lines[2], orig_lines[4]]);
+        // the superseded live checkpoint moved to the sidecar verbatim
+        let side = std::fs::read_to_string(dir.join(CHECKPOINTS_FILE)).unwrap();
+        assert_eq!(side.lines().collect::<Vec<_>>(), vec![orig_lines[3]]);
+
+        let after = JsonlRunSink::load_with_checkpoints(&dir.join(RUNS_FILE)).unwrap();
+        equivalent(&before, &after).unwrap();
+        assert_eq!(after.checkpoints["live"].next_round(), 5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A trial with only unrestorable checkpoint lines keeps the LAST
+    /// identity-decodable one — the loader's scratch map is last-wins — and
+    /// malformed crash tails are carried untouched.
+    #[test]
+    fn scratch_trials_keep_the_last_identity_decodable_line() {
+        let dir = tmp_dir("scratch");
+        {
+            let _sink = JsonlRunSink::open(&dir.join(RUNS_FILE)).unwrap();
+        }
+        let garbled = |nr: u64| {
+            let mut j = ckpt("orphan", nr).to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("state".into(), Json::str("opaque-garbage"));
+            }
+            j.to_string_compact()
+        };
+        append_line(&dir, &garbled(4));
+        append_line(&dir, &garbled(9));
+        // identity also broken: config gone, fingerprint still peekable
+        let mut broken = ckpt("orphan", 11).to_json();
+        if let Json::Obj(m) = &mut broken {
+            m.insert("state".into(), Json::str("opaque-garbage"));
+            m.remove("config");
+        }
+        append_line(&dir, &broken.to_string_compact());
+        append_line(&dir, "{\"fingerprint\":\"half\",\"cel"); // crash tail
+        let before = JsonlRunSink::load_with_checkpoints(&dir.join(RUNS_FILE)).unwrap();
+        assert_eq!(before.scratch.len(), 1);
+
+        let r = compact_run_dir(&dir, false).unwrap();
+        assert_eq!((r.checkpoints_kept, r.checkpoints_moved, r.checkpoints_dropped), (1, 2, 0));
+
+        let compacted = std::fs::read_to_string(dir.join(RUNS_FILE)).unwrap();
+        assert!(compacted.contains(&garbled(9)), "last identity-decodable line survives");
+        assert!(!compacted.contains(&garbled(4)));
+        assert!(compacted.ends_with("{\"fingerprint\":\"half\",\"cel\n"), "crash tail kept");
+        let after = JsonlRunSink::load_with_checkpoints(&dir.join(RUNS_FILE)).unwrap();
+        equivalent(&before, &after).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dry_run_changes_nothing() {
+        let dir = tmp_dir("dry");
+        {
+            let mut sink = JsonlRunSink::open(&dir.join(RUNS_FILE)).unwrap();
+            let w = sink.checkpoint_writer();
+            w.append(&ckpt("done", 3)).unwrap();
+            sink.append(&rec("done")).unwrap();
+        }
+        let original = std::fs::read_to_string(dir.join(RUNS_FILE)).unwrap();
+        let r = compact_run_dir(&dir, true).unwrap();
+        assert!(r.dry_run);
+        assert_eq!(r.checkpoints_dropped, 1);
+        assert_eq!(std::fs::read_to_string(dir.join(RUNS_FILE)).unwrap(), original);
+        assert!(!dir.join(CHECKPOINTS_FILE).exists());
+        assert!(!dir.join("runs.jsonl.compact-tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

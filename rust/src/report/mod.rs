@@ -1,0 +1,28 @@
+//! Derived views over immutable run facts.
+//!
+//! The facts layer is `runs.jsonl` — an append-only JSONL sink of
+//! committed trial records and mid-trial checkpoints, written under the
+//! run-dir lock (see [`crate::schedule::sink`]). This module is the views
+//! layer on top of it:
+//!
+//!  * [`aggregate`] (`deahes report`) — per-cell aggregates, policy
+//!    rankings and cross-run comparisons, all *read-only* and recomputed
+//!    from the facts on every invocation;
+//!  * [`watch`] (`deahes watch`) — an incremental tail poller deriving
+//!    live per-trial status, also read-only;
+//!  * [`compact`] (`deahes compact`) — the single sanctioned rewriter:
+//!    it may relocate checkpoint lines the loader would never surface
+//!    again, must carry every committed record byte-for-byte, and proves
+//!    load-equivalence before swapping the rewrite in.
+//!
+//! Nothing in this module ever invents a fact: every number a view
+//! prints traces to committed record bytes, and deleting every view
+//! artifact (sidecars, report JSON) loses no information a resume needs.
+
+pub mod aggregate;
+pub mod compact;
+pub mod watch;
+
+pub use aggregate::{build, gather, CellReport, FingerprintRow, PerfTotals, Report, RunReport};
+pub use compact::{compact_run_dir, CompactReport, CHECKPOINTS_FILE};
+pub use watch::{TrialState, TrialStatus, WatchState};

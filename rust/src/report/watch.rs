@@ -1,0 +1,356 @@
+//! `deahes watch` — live trial status from the run-sink tail.
+//!
+//! A [`WatchState`] polls `runs.jsonl` incrementally: each [`poll`]
+//! reads only the bytes appended since the last one, consumes whole
+//! lines (a mid-append tail waits for the next poll), and folds them
+//! into a per-trial status map with the loader's own precedence — a
+//! committed record beats every checkpoint, a later checkpoint with
+//! `next_round >=` the current one supersedes it, an unrestorable line
+//! surfaces the trial as pending. The watcher never writes; if the file
+//! shrinks under it (a `deahes compact` swapped in a rewrite), it starts
+//! over from byte zero.
+//!
+//! [`poll`]: WatchState::poll
+
+use crate::schedule::sink::{classify_line, SinkLineKind};
+use crate::schedule::RUNS_FILE;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::{Read as _, Seek as _, SeekFrom};
+use std::path::{Path, PathBuf};
+
+/// Where one trial stands, per the lines seen so far.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TrialState {
+    /// A committed record line landed. `attempts` comes from the proc
+    /// supervisor's `perf` telemetry when present (retries show up here).
+    Committed { attempts: Option<u64> },
+    /// Latest restorable mid-trial checkpoint; `next_round` is the first
+    /// round a resume would execute.
+    Checkpointed { next_round: u64 },
+    /// Checkpoint lines exist but none restores under this build.
+    Pending,
+}
+
+/// One trial's row in the status map.
+#[derive(Clone, Debug)]
+pub struct TrialStatus {
+    pub cell: String,
+    pub label: String,
+    pub seed_index: u64,
+    pub state: TrialState,
+}
+
+/// Incremental tail poller over one run directory's sink.
+#[derive(Debug)]
+pub struct WatchState {
+    path: PathBuf,
+    offset: u64,
+    trials: BTreeMap<String, TrialStatus>,
+    /// Lines neither side of the classifier could decode (crash tails,
+    /// foreign-schema records, checkpoint lines with no peekable
+    /// fingerprint).
+    pub undecodable: usize,
+}
+
+impl WatchState {
+    pub fn new(dir: &Path) -> WatchState {
+        WatchState {
+            path: dir.join(RUNS_FILE),
+            offset: 0,
+            trials: BTreeMap::new(),
+            undecodable: 0,
+        }
+    }
+
+    /// Fingerprint-keyed statuses, as of the last poll.
+    pub fn trials(&self) -> &BTreeMap<String, TrialStatus> {
+        &self.trials
+    }
+
+    /// Ingest whatever landed since the last poll. Returns whether the
+    /// status map changed.
+    pub fn poll(&mut self) -> Result<bool> {
+        let len = match std::fs::metadata(&self.path) {
+            Ok(m) => m.len(),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => 0,
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("watch: stat {}", self.path.display()))
+            }
+        };
+        let mut changed = false;
+        if len < self.offset {
+            // The file shrank under us — a compact swap or a fresh run dir.
+            // Everything already ingested is stale; rescan from the top.
+            changed = !self.trials.is_empty() || self.undecodable > 0;
+            self.offset = 0;
+            self.trials.clear();
+            self.undecodable = 0;
+        }
+        if len == self.offset {
+            return Ok(changed);
+        }
+        let mut f = std::fs::File::open(&self.path)
+            .with_context(|| format!("watch: open {}", self.path.display()))?;
+        f.seek(SeekFrom::Start(self.offset))?;
+        let mut buf = Vec::with_capacity((len - self.offset) as usize);
+        f.take(len - self.offset).read_to_end(&mut buf)?;
+        // Consume only whole lines; an in-flight append's tail stays in the
+        // file for the next poll.
+        let Some(last_nl) = buf.iter().rposition(|&b| b == b'\n') else {
+            return Ok(changed);
+        };
+        self.offset += (last_nl + 1) as u64;
+        let text = String::from_utf8_lossy(&buf[..=last_nl]);
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            changed |= self.ingest(line);
+        }
+        Ok(changed)
+    }
+
+    fn ingest(&mut self, line: &str) -> bool {
+        match classify_line(line) {
+            SinkLineKind::Header => false,
+            SinkLineKind::Record(r) => {
+                let attempts = r
+                    .perf
+                    .as_ref()
+                    .and_then(|p| p.get("attempts").as_f64())
+                    .map(|x| x as u64);
+                self.trials.insert(
+                    r.fingerprint.clone(),
+                    TrialStatus {
+                        cell: r.cell.clone(),
+                        label: r.label.clone(),
+                        seed_index: r.seed_index,
+                        state: TrialState::Committed { attempts },
+                    },
+                );
+                true
+            }
+            SinkLineKind::Checkpoint { fingerprint: Some(fp), next_round, slot } => {
+                if matches!(
+                    self.trials.get(&fp),
+                    Some(TrialStatus { state: TrialState::Committed { .. }, .. })
+                ) {
+                    return false; // a committed record is final
+                }
+                let (cell, label, seed_index) = match (&slot, self.trials.get(&fp)) {
+                    (Some(s), _) => (s.cell.clone(), s.label.clone(), s.seed_index),
+                    (None, Some(t)) => (t.cell.clone(), t.label.clone(), t.seed_index),
+                    (None, None) => (String::new(), String::new(), 0),
+                };
+                let state = match (next_round, self.trials.get(&fp).map(|t| &t.state)) {
+                    // mirror the loader: a later line supersedes on >=
+                    (Some(nr), Some(TrialState::Checkpointed { next_round: old })) => {
+                        if nr >= *old {
+                            TrialState::Checkpointed { next_round: nr }
+                        } else {
+                            return false;
+                        }
+                    }
+                    (Some(nr), _) => TrialState::Checkpointed { next_round: nr },
+                    (None, Some(TrialState::Checkpointed { next_round: old })) => {
+                        TrialState::Checkpointed { next_round: *old }
+                    }
+                    (None, _) => TrialState::Pending,
+                };
+                self.trials
+                    .insert(fp, TrialStatus { cell, label, seed_index, state });
+                true
+            }
+            SinkLineKind::Checkpoint { fingerprint: None, .. } | SinkLineKind::Malformed => {
+                self.undecodable += 1;
+                true
+            }
+        }
+    }
+
+    /// One status block, trials ordered by (cell, seed index).
+    pub fn render(&self) -> String {
+        let (mut committed, mut checkpointed, mut pending) = (0usize, 0usize, 0usize);
+        for t in self.trials.values() {
+            match t.state {
+                TrialState::Committed { .. } => committed += 1,
+                TrialState::Checkpointed { .. } => checkpointed += 1,
+                TrialState::Pending => pending += 1,
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{} — {committed} committed, {checkpointed} mid-trial, {pending} pending, \
+             {} undecodable line(s)",
+            self.path.display(),
+            self.undecodable
+        );
+        let mut rows: Vec<(&String, &TrialStatus)> = self.trials.iter().collect();
+        rows.sort_by(|a, b| {
+            (&a.1.cell, a.1.seed_index, a.0).cmp(&(&b.1.cell, b.1.seed_index, b.0))
+        });
+        for (fp, t) in rows {
+            let state = match &t.state {
+                TrialState::Committed { attempts: Some(n) } => {
+                    format!("committed (attempts={n})")
+                }
+                TrialState::Committed { attempts: None } => "committed".to_string(),
+                TrialState::Checkpointed { next_round } => {
+                    format!("checkpointed @ round {next_round}")
+                }
+                TrialState::Pending => "pending (state unreadable)".to_string(),
+            };
+            let _ = writeln!(s, "  {:<28} seed {:<2} {fp:<18} {state}", t.cell, t.seed_index);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::checkpoint::{RunCheckpoint, DRIVER_SEQUENTIAL};
+    use crate::coordinator::simclock::SimClockReport;
+    use crate::metrics::MetricsLog;
+    use crate::schedule::checkpoint::TrialCheckpoint;
+    use crate::schedule::record::TrialRecord;
+    use crate::schedule::sink::{JsonlRunSink, RunSink as _};
+    use crate::util::json::Json;
+    use std::path::PathBuf;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("deahes-watch-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn rec(fp: &str) -> TrialRecord {
+        TrialRecord {
+            fingerprint: fp.to_string(),
+            cell: "w/cell".into(),
+            label: "w".into(),
+            seed_index: 0,
+            config: ExperimentConfig::default(),
+            log: MetricsLog::default(),
+            sim: SimClockReport {
+                virtual_secs: 0.0,
+                master_utilization: 0.0,
+                mean_sync_wait: 0.0,
+                p95_style_max_wait: 0.0,
+                rounds: 0,
+            },
+            worker_stats: vec![],
+            fault_digest: None,
+            perf: Some(Json::obj(vec![("attempts", Json::num(2.0))])),
+        }
+    }
+
+    fn ckpt(fp: &str, next_round: u64) -> TrialCheckpoint {
+        TrialCheckpoint {
+            fingerprint: fp.to_string(),
+            cell: "w/cell".into(),
+            label: "w".into(),
+            seed_index: 0,
+            config: ExperimentConfig::default(),
+            every: 5,
+            every_secs: 0.0,
+            state: RunCheckpoint {
+                driver: DRIVER_SEQUENTIAL.into(),
+                next_round,
+                master: Json::Null,
+                workers: vec![Json::Null],
+                gossip: vec![(0, vec![])],
+                engines: Json::Null,
+                rngs: Json::Null,
+                sync: Json::Null,
+                log: MetricsLog::default(),
+                per_round_syncs: vec![1; next_round as usize],
+            },
+        }
+    }
+
+    fn append_raw(dir: &Path, text: &str) {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join(RUNS_FILE))
+            .unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn tracks_checkpoint_progress_then_commit() {
+        let dir = tmp_dir("progress");
+        let mut w = WatchState::new(&dir);
+        assert!(!w.poll().unwrap(), "no sink yet");
+        {
+            let mut sink = JsonlRunSink::open(&dir.join(RUNS_FILE)).unwrap();
+            sink.checkpoint_writer().append(&ckpt("t", 3)).unwrap();
+        }
+        assert!(w.poll().unwrap());
+        assert_eq!(
+            w.trials()["t"].state,
+            TrialState::Checkpointed { next_round: 3 }
+        );
+        append_raw(&dir, &format!("{}\n", ckpt("t", 7).to_json().to_string_compact()));
+        assert!(w.poll().unwrap());
+        assert_eq!(
+            w.trials()["t"].state,
+            TrialState::Checkpointed { next_round: 7 }
+        );
+        // a partial append is invisible until its newline lands
+        let rec_line = rec("t").to_json().to_string_compact();
+        let (head, tail) = rec_line.split_at(rec_line.len() / 2);
+        append_raw(&dir, head);
+        assert!(!w.poll().unwrap(), "half a line must not change anything");
+        append_raw(&dir, &format!("{tail}\n"));
+        assert!(w.poll().unwrap());
+        assert_eq!(
+            w.trials()["t"].state,
+            TrialState::Committed { attempts: Some(2) }
+        );
+        // later checkpoints never demote a committed trial
+        append_raw(&dir, &format!("{}\n", ckpt("t", 9).to_json().to_string_compact()));
+        assert!(!w.poll().unwrap());
+        assert!(w.render().contains("committed (attempts=2)"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// An unrestorable checkpoint surfaces the trial as pending; a file
+    /// that shrinks (compact swapped in a rewrite) triggers a full rescan.
+    #[test]
+    fn pending_status_and_shrink_rescan() {
+        let dir = tmp_dir("shrink");
+        {
+            let _sink = JsonlRunSink::open(&dir.join(RUNS_FILE)).unwrap();
+        }
+        let mut j = ckpt("orphan", 4).to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("state".into(), Json::str("opaque-garbage"));
+        }
+        append_raw(&dir, &format!("{}\n", j.to_string_compact()));
+        let mut w = WatchState::new(&dir);
+        assert!(w.poll().unwrap());
+        assert_eq!(w.trials()["orphan"].state, TrialState::Pending);
+        assert_eq!(w.trials()["orphan"].cell, "w/cell");
+
+        // rewrite the file shorter: header only
+        let header = std::fs::read_to_string(dir.join(RUNS_FILE))
+            .unwrap()
+            .lines()
+            .next()
+            .unwrap()
+            .to_string();
+        std::fs::write(dir.join(RUNS_FILE), format!("{header}\n")).unwrap();
+        assert!(w.poll().unwrap(), "shrink must register as a change");
+        assert!(w.trials().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

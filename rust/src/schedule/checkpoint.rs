@@ -92,6 +92,18 @@ impl TrialCheckpoint {
         })
     }
 
+    /// Peek the bare `fingerprint` field of a checkpoint line — no schema
+    /// check, no config or state decoding. Line-provenance scans (`deahes
+    /// compact`) use this to group checkpoint lines by trial even when the
+    /// line cannot restore (or even identify) under this build; it must
+    /// never be used to *restore* anything.
+    pub fn peek_fingerprint(j: &Json) -> Option<String> {
+        if *j.get(CHECKPOINT_KEY) == Json::Null {
+            return None;
+        }
+        j.get("fingerprint").as_str().map(str::to_string)
+    }
+
     /// Decode only the trial *identity* of a checkpoint line — fingerprint,
     /// plan coordinates, config — skipping the (possibly unusable) `state`.
     /// `deahes resume` uses this to rebuild a from-scratch slot for trials
@@ -196,6 +208,28 @@ mod tests {
         assert_eq!(slot.fingerprint, cp.fingerprint);
         assert_eq!(slot.cell, cp.cell);
         assert_eq!(slot.seed_index, 1);
+    }
+
+    /// `peek_fingerprint` works on lines neither decode path accepts —
+    /// foreign schema, missing identity — and refuses non-checkpoint lines.
+    #[test]
+    fn peek_fingerprint_survives_foreign_schemas() {
+        let mut j = sample().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::str("0123456789abcdef"));
+            m.remove("cell");
+        }
+        assert!(TrialCheckpoint::from_json(&j).is_err());
+        assert!(TrialCheckpoint::identity_from_json(&j).is_err());
+        assert_eq!(
+            TrialCheckpoint::peek_fingerprint(&j).as_deref(),
+            Some("feedfacefeedface")
+        );
+        assert!(TrialCheckpoint::peek_fingerprint(&Json::obj(vec![(
+            "fingerprint",
+            Json::str("x")
+        )]))
+        .is_none());
     }
 
     #[test]

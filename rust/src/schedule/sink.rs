@@ -177,6 +177,54 @@ fn first_content_line(path: &Path) -> Result<Option<String>> {
     Ok(None)
 }
 
+/// Does `line` (one JSON object in compact form) carry `key` as a
+/// **top-level** key? An escape-aware depth-tracking scan over the raw
+/// bytes — no parse, no allocation — so checkpoint lines (which carry
+/// parameter-sized hex blobs) can be classified without materializing
+/// them. The marker must sit at object depth 1 and be followed by `:`;
+/// the same text inside a string *value* (or a nested object) never
+/// matches. A line truncated before the key simply reports false.
+fn has_top_level_key(line: &str, key: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut escaped = false;
+    let mut str_start = 0usize;
+    for (i, &b) in bytes.iter().enumerate() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if b == b'\\' {
+                escaped = true;
+            } else if b == b'"' {
+                in_str = false;
+                // A string just closed at depth 1: it is a top-level key iff
+                // the next non-space byte is ':' (compact form has none).
+                if depth == 1 && line[str_start + 1..i] == *key {
+                    let mut j = i + 1;
+                    while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+                        j += 1;
+                    }
+                    if j < bytes.len() && bytes[j] == b':' {
+                        return true;
+                    }
+                }
+            }
+        } else {
+            match b {
+                b'"' => {
+                    in_str = true;
+                    str_start = i;
+                }
+                b'{' | b'[' => depth += 1,
+                b'}' | b']' => depth -= 1,
+                _ => {}
+            }
+        }
+    }
+    false
+}
+
 /// Cheap check whether `path` holds at least one committed record (a
 /// parseable non-header, non-checkpoint content line — a line truncated by
 /// a crash is *not* a record; `load` skips it too). Never errors: IO/schema
@@ -189,12 +237,15 @@ pub fn has_committed_records(path: &Path) -> bool {
         if line.trim().is_empty() {
             continue;
         }
-        // Cheap marker scan before any JSON parse: checkpoint lines carry
-        // parameter-sized hex blobs, and a checkpoint-heavy prefix would
-        // otherwise be parsed in full just to be skipped. (A record whose
-        // string values embed the marker text is skipped too — acceptable
-        // for a warning-only helper.)
-        if line.contains("\"deahes_checkpoint\"") {
+        // Cheap substring scan as a PRE-FILTER only: most lines don't
+        // contain the marker text at all and skip straight to the record
+        // check. When the marker does appear, the escape-aware key scan —
+        // not the substring — decides: a record whose config/string values
+        // embed `"deahes_checkpoint"` must still count as a record.
+        if line.contains("\"deahes_checkpoint\"")
+            && (has_top_level_key(&line, CHECKPOINT_KEY)
+                || has_top_level_key(&line, HEADER_KEY))
+        {
             continue;
         }
         if parse_header(&line).is_some() {
@@ -473,6 +524,122 @@ impl JsonlRunSink {
     }
 }
 
+/// One classified line of a run file, original bytes preserved — the
+/// line-level provenance `deahes compact` and `deahes watch` are built on.
+/// Unlike [`JsonlRunSink::load`], nothing is merged or superseded here:
+/// every line comes back, in file order, exactly as written.
+#[derive(Debug)]
+pub struct SinkLine {
+    /// 1-based line number in the file.
+    pub lineno: usize,
+    /// The line's original bytes, without the trailing newline. Rewriters
+    /// (compact) carry this verbatim; committed records stay byte-identical
+    /// by construction.
+    pub raw: String,
+    pub kind: SinkLineKind,
+}
+
+/// How one run-file line classifies under this build. The decision is the
+/// parsed JSON's top-level keys — never a substring scan (see
+/// [`has_committed_records`] for the pre-filter-only use of the marker
+/// text).
+#[derive(Debug)]
+pub enum SinkLineKind {
+    /// The schema header line.
+    Header,
+    /// A committed trial record.
+    Record(Box<TrialRecord>),
+    /// A mid-trial checkpoint line.
+    Checkpoint {
+        /// Fingerprint peeked from the line; `None` when not even that
+        /// field decodes.
+        fingerprint: Option<String>,
+        /// `Some(first round a resume would execute)` when the full state
+        /// restores under this build — the line `load_with_checkpoints`
+        /// could hand to `deahes resume`.
+        next_round: Option<u64>,
+        /// Decoded slot identity (coordinates + config); `Some` whenever
+        /// the loader could surface this trial, as a resumable checkpoint
+        /// or as "re-run from scratch". Always `Some` when `next_round`
+        /// is.
+        slot: Option<Box<TrialSlot>>,
+    },
+    /// Unparseable or undecodable (an interrupted append, or a record
+    /// another schema wrote). `load` skips these with a warning.
+    Malformed,
+}
+
+/// Classify one non-blank line the way the loader would. Shared by
+/// [`scan_lines`] and the `deahes watch` tail poller.
+pub fn classify_line(line: &str) -> SinkLineKind {
+    let Ok(j) = crate::util::json::Json::parse(line) else {
+        return SinkLineKind::Malformed;
+    };
+    if *j.get(HEADER_KEY) != crate::util::json::Json::Null {
+        return SinkLineKind::Header;
+    }
+    if *j.get(CHECKPOINT_KEY) != crate::util::json::Json::Null {
+        return match TrialCheckpoint::from_json(&j) {
+            Ok(cp) => SinkLineKind::Checkpoint {
+                next_round: Some(cp.next_round()),
+                fingerprint: Some(cp.fingerprint.clone()),
+                slot: Some(Box::new(TrialSlot {
+                    fingerprint: cp.fingerprint,
+                    cell: cp.cell,
+                    label: cp.label,
+                    seed_index: cp.seed_index,
+                    config: cp.config,
+                })),
+            },
+            Err(_) => SinkLineKind::Checkpoint {
+                fingerprint: TrialCheckpoint::peek_fingerprint(&j),
+                next_round: None,
+                slot: TrialCheckpoint::identity_from_json(&j).ok().map(Box::new),
+            },
+        };
+    }
+    match TrialRecord::from_json(&j) {
+        Ok(r) => SinkLineKind::Record(Box::new(r)),
+        Err(_) => SinkLineKind::Malformed,
+    }
+}
+
+/// Read a run file as classified lines with their original bytes, in file
+/// order, skipping blank lines. Headers are verified like `load`: a header
+/// naming a foreign schema is a hard error (a rewriter must never touch a
+/// file it cannot faithfully classify); a headerless legacy file proceeds
+/// with a warning. Missing file means an empty vec.
+pub fn scan_lines(path: &Path) -> Result<Vec<SinkLine>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading run sink {}", path.display()))
+        }
+    };
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let kind = classify_line(line);
+        if out.is_empty() && !matches!(kind, SinkLineKind::Header) {
+            log_warn!(
+                "run sink {}: no schema header (written by an older build); scanning \
+                 without schema verification",
+                path.display()
+            );
+        }
+        if matches!(kind, SinkLineKind::Header) {
+            if let Some(found) = parse_header(line) {
+                check_schema(path, &found)?;
+            }
+        }
+        out.push(SinkLine { lineno: i + 1, raw: line.to_string(), kind });
+    }
+    Ok(out)
+}
+
 /// Cloneable handle appending checkpoint lines to an open run sink. Shares
 /// the sink's file handle and lock: a checkpoint line and a record line
 /// can never interleave bytes, whichever thread writes first.
@@ -529,6 +696,8 @@ mod tests {
                 rounds: 0,
             },
             worker_stats: vec![],
+            fault_digest: None,
+            perf: None,
         }
     }
 
@@ -780,6 +949,115 @@ mod tests {
             contents.scratch.is_empty(),
             "a restorable checkpoint supersedes the identity-only scratch entry"
         );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Regression (sink misclassification): a committed record whose config
+    /// embeds the literal text `"deahes_checkpoint"` in a string field used
+    /// to be classified as a checkpoint line by the substring scan and
+    /// dropped. The marker must be confirmed as a TOP-LEVEL key; embedded
+    /// text never demotes a record.
+    #[test]
+    fn record_embedding_the_checkpoint_marker_text_survives_as_a_record() {
+        use crate::config::EngineKind;
+        let path = tmp("marker-in-string.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let mut r = rec("embedded");
+        // A config string field whose serialized form contains the exact
+        // quoted marker bytes `"deahes_checkpoint"`.
+        r.config.engine =
+            EngineKind::Xla { artifacts_dir: "deahes_checkpoint".into(), native_opt: false };
+        {
+            let mut sink = JsonlRunSink::open(&path).unwrap();
+            sink.append(&r).unwrap();
+        }
+        let line = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            line.contains("\"deahes_checkpoint\""),
+            "fixture must embed the quoted marker text: {line}"
+        );
+        assert!(
+            has_committed_records(&path),
+            "a record embedding the marker text is still a committed record"
+        );
+        let contents = JsonlRunSink::load_with_checkpoints(&path).unwrap();
+        assert_eq!(contents.records.len(), 1);
+        assert!(contents.records.contains_key("embedded"));
+        assert!(contents.checkpoints.is_empty() && contents.scratch.is_empty());
+        // provenance scan agrees with the loader
+        let lines = scan_lines(&path).unwrap();
+        assert!(matches!(lines[0].kind, SinkLineKind::Header));
+        assert!(matches!(&lines[1].kind, SinkLineKind::Record(r) if r.fingerprint == "embedded"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// The decision logic behind the pre-filter: only a top-level key
+    /// counts, values/nested keys/escaped embeddings don't, and a truncated
+    /// line with the key intact still classifies.
+    #[test]
+    fn top_level_key_scan_is_escape_and_depth_aware() {
+        let k = CHECKPOINT_KEY;
+        // genuine checkpoint shapes (any key position)
+        assert!(has_top_level_key(&format!("{{\"{k}\":1,\"cell\":\"c\"}}"), k));
+        assert!(has_top_level_key(&format!("{{\"cell\":\"c\",\"{k}\":1}}"), k));
+        // truncated mid-line, marker intact
+        assert!(has_top_level_key(&format!("{{\"cell\":\"c\",\"{k}\":1,\"state\":{{\"ver"), k));
+        // the marker as a string VALUE
+        assert!(!has_top_level_key(&format!("{{\"artifacts\":\"{k}\"}}"), k));
+        // ...as a nested key
+        assert!(!has_top_level_key(&format!("{{\"config\":{{\"{k}\":1}}}}"), k));
+        // ...inside an array value
+        assert!(!has_top_level_key(&format!("{{\"xs\":[\"{k}\"]}}"), k));
+        // ...embedded with escaped quotes inside a string value
+        assert!(!has_top_level_key(&format!("{{\"note\":\"x \\\"{k}\\\": 1\"}}"), k));
+        // truncated before the marker
+        assert!(!has_top_level_key("{\"cell\":\"c\",\"dea", k));
+    }
+
+    /// `scan_lines` classifies every line in file order with bytes intact:
+    /// header, record, restorable checkpoint, identity-only checkpoint,
+    /// malformed tail.
+    #[test]
+    fn scan_lines_reports_line_level_provenance() {
+        let path = tmp("scan-lines.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut sink = JsonlRunSink::open(&path).unwrap();
+            let w = sink.checkpoint_writer();
+            w.append(&ckpt("pending", 5)).unwrap();
+            sink.append(&rec("done")).unwrap();
+        }
+        // an identity-only checkpoint (state unreadable) and a crash tail
+        let mut cp_json = ckpt("orphan", 7).to_json();
+        if let crate::util::json::Json::Obj(m) = &mut cp_json {
+            m.insert("state".into(), crate::util::json::Json::str("opaque-garbage"));
+        }
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str(&cp_json.to_string_compact());
+        text.push('\n');
+        text.push_str("{\"fingerprint\":\"half\",\"cel");
+        std::fs::write(&path, &text).unwrap();
+
+        let lines = scan_lines(&path).unwrap();
+        assert_eq!(lines.len(), 5);
+        assert!(matches!(lines[0].kind, SinkLineKind::Header));
+        assert!(matches!(
+            &lines[1].kind,
+            SinkLineKind::Checkpoint { fingerprint: Some(fp), next_round: Some(5), slot: Some(s) }
+                if fp == "pending" && s.cell == "c"
+        ));
+        assert!(matches!(&lines[2].kind, SinkLineKind::Record(r) if r.fingerprint == "done"));
+        assert!(matches!(
+            &lines[3].kind,
+            SinkLineKind::Checkpoint { fingerprint: Some(fp), next_round: None, slot: Some(s) }
+                if fp == "orphan" && s.fingerprint == "orphan"
+        ));
+        assert!(matches!(lines[4].kind, SinkLineKind::Malformed));
+        // original bytes survive, in order, with 1-based line numbers
+        let original: Vec<&str> = text.lines().collect();
+        for l in &lines {
+            assert_eq!(original[l.lineno - 1], l.raw);
+        }
         let _ = std::fs::remove_file(&path);
     }
 

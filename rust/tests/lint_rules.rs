@@ -223,3 +223,49 @@ fn cli_exits_nonzero_on_findings_and_zero_on_the_live_tree() {
         String::from_utf8_lossy(&out.stdout)
     );
 }
+
+/// Stale `lint.toml` entries only *warn* on a plain run (exit 0) but fail
+/// under `--strict` — the mode CI uses, so the allowlist can't rot past
+/// deleted files.
+#[test]
+fn cli_strict_fails_on_stale_allowlist_entries_plain_run_does_not() {
+    use std::process::Command;
+    let dir = std::env::temp_dir().join(format!("deahes-lint-strict-{}", std::process::id()));
+    let src = dir.join("src");
+    std::fs::create_dir_all(&src).unwrap();
+    std::fs::write(src.join("clean.rs"), "pub fn ok() {}\n").unwrap();
+    std::fs::write(
+        dir.join("lint.toml"),
+        "[[allow]]\nrule = \"wall-clock-in-core\"\npath = \"src/never/was.rs\"\nreason = \"gone\"\n",
+    )
+    .unwrap();
+
+    let out = Command::new(env!("CARGO_BIN_EXE_deahes"))
+        .args(["lint", "--root"])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "a warning alone must not fail a plain run:\n{stdout}");
+    assert!(stdout.contains("warning:"), "{stdout}");
+
+    let out = Command::new(env!("CARGO_BIN_EXE_deahes"))
+        .args(["lint", "--strict", "--root"])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!out.status.success(), "--strict must fail on the stale entry");
+    assert!(stderr.contains("strict"), "{stderr}");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // The shipped tree passes even under --strict (no stale entries).
+    let out =
+        Command::new(env!("CARGO_BIN_EXE_deahes")).args(["lint", "--strict"]).output().unwrap();
+    assert!(
+        out.status.success(),
+        "shipped tree must be strict-clean:\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}

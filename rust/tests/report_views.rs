@@ -1,0 +1,347 @@
+//! Facts → views: the observability layer end to end.
+//!
+//! `runs.jsonl` is the immutable fact log; `deahes report` / `deahes
+//! watch` are read-only views over it and `deahes compact` is the one
+//! sanctioned rewriter. The contracts pinned here (ISSUE 10 acceptance):
+//!
+//!  1. compacting a mixed run dir — committed records, a superseded and a
+//!     live checkpoint, an identity-only scratch line, a crash-truncated
+//!     tail — carries every committed record line byte-identical and
+//!     leaves `load_with_checkpoints` equivalent before/after;
+//!  2. `deahes resume` of a killed trial commits byte-identical records
+//!     whether it runs from the original or the compacted run dir;
+//!  3. the watch poller and the report aggregator read the same dirs the
+//!     schedule layer writes, with no side effects on them.
+
+use deahes::config::{EngineKind, ExperimentConfig};
+use deahes::coordinator::checkpoint::RunCheckpoint;
+use deahes::coordinator::sim::{self, CheckpointHooks};
+use deahes::experiments;
+use deahes::report::{self, TrialState, WatchState, CHECKPOINTS_FILE};
+use deahes::schedule::sink::{scan_lines, SinkLineKind};
+use deahes::schedule::{
+    self, JsonlRunSink, ScheduleOptions, TrialCheckpoint, TrialPlan, RUNS_FILE,
+};
+use deahes::strategies::Method;
+use deahes::util::json::Json;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("deahes-views-{}-{name}", std::process::id()))
+}
+
+fn quad_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        engine: EngineKind::Quadratic { dim: 24, heterogeneity: 0.3, noise: 0.05 },
+        method: Method::DeahesO,
+        workers: 3,
+        tau: 2,
+        rounds: 30,
+        eval_subset: 16,
+        policy: Some("hysteresis(alpha=0.1,knee=-0.05,detector=paper-sign,hold=2)".into()),
+        ..ExperimentConfig::default()
+    }
+}
+
+fn one_cell_plan(cell: &str) -> TrialPlan {
+    let mut plan = TrialPlan::new();
+    plan.push_cell(cell, "cell", &quad_cfg(), 1);
+    plan
+}
+
+/// Committed records as the sink persists them — the byte-identity unit.
+fn record_lines(dir: &Path) -> Vec<String> {
+    JsonlRunSink::load(&dir.join(RUNS_FILE))
+        .unwrap()
+        .values()
+        .map(|r| r.to_json().to_string_compact())
+        .collect()
+}
+
+/// Raw record *lines* straight off the file, original bytes.
+fn raw_record_lines(dir: &Path) -> Vec<String> {
+    scan_lines(&dir.join(RUNS_FILE))
+        .unwrap()
+        .into_iter()
+        .filter(|l| matches!(l.kind, SinkLineKind::Record(_)))
+        .map(|l| l.raw)
+        .collect()
+}
+
+/// Real mid-trial cuts for the quad config (rounds 8, 16, 24).
+fn captured_states() -> Vec<RunCheckpoint> {
+    let cfg = quad_cfg();
+    let mut cps: Vec<RunCheckpoint> = Vec::new();
+    let mut save = |cp: RunCheckpoint| -> anyhow::Result<()> {
+        cps.push(cp);
+        Ok(())
+    };
+    sim::run_with(&cfg, None, Some(CheckpointHooks { every: 8, every_secs: 0.0, save: &mut save }))
+        .unwrap();
+    cps
+}
+
+fn checkpoint(fp: &str, state: RunCheckpoint) -> TrialCheckpoint {
+    TrialCheckpoint {
+        fingerprint: fp.into(),
+        cell: "views/live".into(),
+        label: "live".into(),
+        seed_index: 0,
+        config: quad_cfg(),
+        every: 8,
+        every_secs: 0.0,
+        state,
+    }
+}
+
+/// The mixed-run-dir pin: committed + superseded checkpoint + live
+/// checkpoint + identity-only scratch + crash-truncated tail, compacted
+/// with committed bytes preserved and the loader's world unchanged.
+#[test]
+fn compact_mixed_run_dir_preserves_committed_bytes_and_loader_equivalence() {
+    let dir = tmp_dir("mixed");
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join(RUNS_FILE);
+
+    // One real committed trial (header + record line).
+    schedule::execute_plan(
+        &one_cell_plan("views/mixed"),
+        &ScheduleOptions { run_dir: Some(dir.clone()), ..ScheduleOptions::default() },
+    )
+    .unwrap();
+    let committed_fp = record_lines(&dir);
+    assert_eq!(committed_fp.len(), 1);
+    let committed_fp = JsonlRunSink::load(&path).unwrap().keys().next().unwrap().clone();
+
+    // Checkpoint lines through the real writer: one for the committed
+    // trial (drop fodder), then a superseded and a live cut for an
+    // uncommitted trial.
+    let states = captured_states();
+    assert_eq!(states.len(), 3, "rounds=30, every=8 -> cuts at 8, 16, 24");
+    {
+        let sink = JsonlRunSink::open(&path).unwrap();
+        let w = sink.checkpoint_writer();
+        w.append(&checkpoint(&committed_fp, states[0].clone())).unwrap();
+        w.append(&checkpoint("live-trial", states[0].clone())).unwrap();
+        w.append(&checkpoint("live-trial", states[1].clone())).unwrap();
+    }
+    // Identity-only scratch: a checkpoint line whose state is garbage but
+    // whose coordinates decode (the "re-run from scratch" shape)...
+    let mut garbled = checkpoint("scratch-trial", states[0].clone()).to_json();
+    if let Json::Obj(m) = &mut garbled {
+        m.insert("state".into(), Json::str("opaque-future-driver-blob"));
+    }
+    // ...and a crash-truncated tail, no trailing newline.
+    {
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        writeln!(f, "{}", garbled.to_string_compact()).unwrap();
+        f.write_all(br#"{"deahes_checkpoint":1,"fingerprint":"half"#).unwrap();
+    }
+
+    let before = JsonlRunSink::load_with_checkpoints(&path).unwrap();
+    let raw_before = raw_record_lines(&dir);
+    let bytes_before = std::fs::read(&path).unwrap();
+    let live_raw = scan_lines(&path)
+        .unwrap()
+        .into_iter()
+        .filter(|l| {
+            matches!(&l.kind,
+                SinkLineKind::Checkpoint { fingerprint: Some(fp), next_round: Some(8), .. }
+                    if fp == "live-trial")
+        })
+        .map(|l| l.raw)
+        .next()
+        .expect("the superseded live-trial cut is scannable");
+
+    // Dry run: plans and verifies, changes nothing.
+    let dry = report::compact_run_dir(&dir, true).unwrap();
+    assert!(dry.dry_run);
+    assert_eq!(std::fs::read(&path).unwrap(), bytes_before, "--dry-run must not touch the file");
+    assert!(!dir.join(CHECKPOINTS_FILE).exists(), "--dry-run must not write the sidecar");
+
+    // The real thing.
+    let done = report::compact_run_dir(&dir, false).unwrap();
+    assert_eq!(done.records, 1);
+    assert_eq!(done.checkpoints_dropped, 1, "the committed trial's checkpoint is dropped");
+    assert_eq!(done.checkpoints_moved, 1, "the superseded live cut moves to the sidecar");
+    assert_eq!(done.checkpoints_kept, 2, "the live cut and the scratch identity stay");
+    assert!(done.bytes_after < done.bytes_before, "{done:?}");
+
+    // Committed record lines byte-identical; loader world equivalent.
+    assert_eq!(raw_record_lines(&dir), raw_before);
+    let after = JsonlRunSink::load_with_checkpoints(&path).unwrap();
+    assert_eq!(
+        before.records.keys().collect::<Vec<_>>(),
+        after.records.keys().collect::<Vec<_>>()
+    );
+    for (fp, r) in &before.records {
+        assert_eq!(
+            r.to_json().to_string_compact(),
+            after.records[fp].to_json().to_string_compact()
+        );
+    }
+    assert_eq!(after.checkpoints.len(), 1);
+    assert_eq!(after.checkpoints["live-trial"].next_round(), 16, "latest cut survives");
+    assert_eq!(after.scratch.len(), 1);
+    assert!(after.scratch.contains_key("scratch-trial"));
+
+    // Sidecar holds the superseded line verbatim; the crash tail is still
+    // in the main file (now newline-terminated, still malformed).
+    let side = std::fs::read_to_string(dir.join(CHECKPOINTS_FILE)).unwrap();
+    assert_eq!(side, format!("{live_raw}\n"));
+    let main = std::fs::read_to_string(&path).unwrap();
+    assert!(main.ends_with("\"fingerprint\":\"half\n"), "crash tail stays in place");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The acceptance pin: kill a trial after its first checkpoint, compact a
+/// copy of the run dir, resume both — committed records byte-identical to
+/// each other and to an uninterrupted run.
+#[test]
+fn compact_then_resume_commits_byte_identical_records() {
+    let clean_dir = tmp_dir("rt-clean");
+    let crash_dir = tmp_dir("rt-crash");
+    let compacted_dir = tmp_dir("rt-compacted");
+    for d in [&clean_dir, &crash_dir, &compacted_dir] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    let plan = one_cell_plan("views/resume");
+
+    schedule::execute_plan(
+        &plan,
+        &ScheduleOptions { run_dir: Some(clean_dir.clone()), ..ScheduleOptions::default() },
+    )
+    .unwrap();
+    let err = schedule::execute_plan(
+        &plan,
+        &ScheduleOptions {
+            run_dir: Some(crash_dir.clone()),
+            checkpoint_every: 8,
+            crash_after_checkpoints: 1,
+            ..ScheduleOptions::default()
+        },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("crash injection"), "{err}");
+    assert!(record_lines(&crash_dir).is_empty(), "the killed trial must not have committed");
+
+    // Compact a copy of the crashed dir. Nothing is superseded yet (one
+    // live checkpoint), so this is the degenerate-but-legal compaction.
+    std::fs::create_dir_all(&compacted_dir).unwrap();
+    std::fs::copy(crash_dir.join(RUNS_FILE), compacted_dir.join(RUNS_FILE)).unwrap();
+    let done = report::compact_run_dir(&compacted_dir, false).unwrap();
+    assert_eq!(
+        (done.records, done.checkpoints_kept, done.checkpoints_moved, done.checkpoints_dropped),
+        (0, 1, 0, 0),
+        "{done:?}"
+    );
+
+    // `deahes resume` engine, original and compacted side by side.
+    let r1 = experiments::resume_run_dir(&crash_dir, 1).unwrap();
+    let r2 = experiments::resume_run_dir(&compacted_dir, 1).unwrap();
+    assert_eq!((r1.committed, r1.finished), (0, 1));
+    assert_eq!((r2.committed, r2.finished), (0, 1));
+    let from_crash = record_lines(&crash_dir);
+    let from_compacted = record_lines(&compacted_dir);
+    assert_eq!(from_crash.len(), 1);
+    assert_eq!(
+        from_compacted, from_crash,
+        "resume from the compacted dir must commit identical bytes"
+    );
+    assert_eq!(
+        from_crash,
+        record_lines(&clean_dir),
+        "and both must match the uninterrupted run"
+    );
+
+    for d in [&clean_dir, &crash_dir, &compacted_dir] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+/// The read-only views over real run dirs: the watch poller tracks a trial
+/// checkpointed → committed across a crash/resume, and the report
+/// aggregator joins the two dirs by fingerprint with `identical = true`
+/// (byte-identical resume is the previous test's guarantee).
+#[test]
+fn watch_and_report_track_a_run_dir_through_crash_and_resume() {
+    let clean_dir = tmp_dir("wr-clean");
+    let crash_dir = tmp_dir("wr-crash");
+    let _ = std::fs::remove_dir_all(&clean_dir);
+    let _ = std::fs::remove_dir_all(&crash_dir);
+    let plan = one_cell_plan("views/wr");
+
+    schedule::execute_plan(
+        &plan,
+        &ScheduleOptions { run_dir: Some(clean_dir.clone()), ..ScheduleOptions::default() },
+    )
+    .unwrap();
+    let mut w = WatchState::new(&clean_dir);
+    assert!(w.poll().unwrap(), "first poll over a committed run changes the map");
+    assert_eq!(w.trials().len(), 1);
+    let t = w.trials().values().next().unwrap();
+    assert_eq!(t.cell, "views/wr");
+    assert_eq!(t.state, TrialState::Committed { attempts: None });
+    assert!(!w.poll().unwrap(), "no new bytes, no change");
+
+    // Crash mid-trial: the poller reports the checkpoint cut...
+    assert!(schedule::execute_plan(
+        &plan,
+        &ScheduleOptions {
+            run_dir: Some(crash_dir.clone()),
+            checkpoint_every: 8,
+            crash_after_checkpoints: 1,
+            ..ScheduleOptions::default()
+        },
+    )
+    .is_err());
+    let mut w = WatchState::new(&crash_dir);
+    assert!(w.poll().unwrap());
+    assert_eq!(
+        w.trials().values().next().unwrap().state,
+        TrialState::Checkpointed { next_round: 8 }
+    );
+    assert!(w.render().contains("checkpointed @ round 8"), "{}", w.render());
+
+    // ...and sees the commit appear when the resume finishes it.
+    experiments::resume_run_dir(&crash_dir, 1).unwrap();
+    assert!(w.poll().unwrap());
+    assert_eq!(
+        w.trials().values().next().unwrap().state,
+        TrialState::Committed { attempts: None }
+    );
+
+    // Cross-run report: same plan fingerprint in both dirs, identical.
+    let rep = report::gather(&[clean_dir.clone(), crash_dir.clone()]).unwrap();
+    assert_eq!(rep.runs.len(), 2);
+    for run in &rep.runs {
+        assert_eq!((run.committed, run.checkpointed, run.scratch), (1, 0, 0));
+        assert_eq!(run.cells.len(), 1);
+        assert_eq!(run.cells[0].cell, "views/wr");
+        assert_eq!(run.cells[0].trials, 1);
+        assert!(run.cells[0].tail_acc_mean.is_finite());
+    }
+    assert_eq!(rep.comparison.len(), 1);
+    let row = &rep.comparison[0];
+    assert_eq!(row.cell, "views/wr");
+    assert!(row.identical, "crash/resume must not diverge from the clean run");
+    assert!(row.tail_acc.iter().all(Option::is_some));
+
+    // The JSON view is valid JSON naming itself (the CLI's validity gate).
+    let back = Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+    assert_eq!(back.get("report").as_str(), Some("runs"));
+    assert_eq!(back.get("runs").as_arr().map(|a| a.len()), Some(2));
+    let text = rep.render_text();
+    assert!(text.contains("views/wr"), "{text}");
+    assert!(text.contains("identical"), "{text}");
+
+    // Views left the facts alone: both dirs still load exactly one record.
+    assert_eq!(record_lines(&clean_dir).len(), 1);
+    assert_eq!(record_lines(&crash_dir).len(), 1);
+
+    let _ = std::fs::remove_dir_all(&clean_dir);
+    let _ = std::fs::remove_dir_all(&crash_dir);
+}
